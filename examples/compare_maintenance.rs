@@ -1,0 +1,60 @@
+//! Compare all budget-maintenance strategies on one dataset:
+//! removal / projection / binary merge / multi-merge cascade / MM-GD.
+//!
+//! Reproduces the qualitative claims of Wang et al. §4 and the paper's
+//! §2.3: removal is erratic, projection is accurate but O(B³)-slow,
+//! merging is the sweet spot, and multi-merge keeps the accuracy while
+//! cutting the maintenance bill.
+//!
+//! Run: `cargo run --release --example compare_maintenance`
+
+use mmbsgd::budget::MaintenanceKind;
+use mmbsgd::config::TrainConfig;
+use mmbsgd::data::synth::{dataset, SynthSpec};
+use mmbsgd::solver::bsgd;
+use mmbsgd::util::table::{num, Table};
+
+fn main() {
+    let spec = SynthSpec::adult_like(0.1);
+    let split = dataset(&spec, 3);
+    println!(
+        "dataset {}: {} train / {} test (ADULT twin @10%)\n",
+        spec.name,
+        split.train.len(),
+        split.test.len()
+    );
+    let base = TrainConfig {
+        lambda: TrainConfig::lambda_from_c(spec.c, split.train.len()),
+        gamma: spec.gamma,
+        budget: 128,
+        epochs: 1,
+        seed: 11,
+        ..TrainConfig::default()
+    };
+
+    let kinds: Vec<(MaintenanceKind, &str)> = vec![
+        (MaintenanceKind::Removal, "removal"),
+        (MaintenanceKind::Projection, "projection (O(B^3))"),
+        (MaintenanceKind::Merge { m: 2 }, "merge M=2 (classic BSGD)"),
+        (MaintenanceKind::Merge { m: 4 }, "multi-merge M=4 (Alg.1)"),
+        (MaintenanceKind::MergeGd { m: 4 }, "multi-merge M=4 (Alg.2 GD)"),
+    ];
+
+    let mut t = Table::new(&[
+        "strategy", "train_sec", "accuracy_pct", "maint_events", "mean_wd", "maint_frac_pct",
+    ]);
+    for (kind, label) in kinds {
+        let mut cfg = base.clone();
+        cfg.maintenance = Some(kind);
+        let out = bsgd::train(&split.train, &cfg);
+        t.row(vec![
+            label.to_string(),
+            num(out.train_seconds, 3),
+            num(100.0 * out.model.accuracy(&split.test), 2),
+            out.maintenance_events.to_string(),
+            format!("{:.2e}", out.mean_weight_degradation),
+            num(100.0 * out.merge_fraction(), 1),
+        ]);
+    }
+    println!("{}", t.render());
+}

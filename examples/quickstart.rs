@@ -1,0 +1,44 @@
+//! Quickstart: train a multi-merge BSGD SVM on a synthetic IJCNN twin
+//! and report accuracy vs the classic BSGD baseline.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use mmbsgd::config::TrainConfig;
+use mmbsgd::data::synth::{dataset, SynthSpec};
+use mmbsgd::solver::bsgd;
+
+fn main() {
+    // 1. Data: a statistical twin of IJCNN (50k × 22 at scale 1.0; we use
+    //    10% here so the example finishes in seconds).
+    let spec = SynthSpec::ijcnn_like(0.1);
+    let split = dataset(&spec, 42);
+    println!("dataset {}: {} train / {} test, d={}",
+        spec.name, split.train.len(), split.test.len(), split.train.dim());
+
+    // 2. Config: the paper's tuned hyperparameters; budget B=64 — small
+    //    enough that maintenance fires constantly (the regime budgets
+    //    are for; the unbudgeted model needs ~4x more SVs here).
+    let cfg = TrainConfig {
+        lambda: TrainConfig::lambda_from_c(spec.c, split.train.len()),
+        gamma: spec.gamma,
+        budget: 64,
+        epochs: 1,
+        seed: 7,
+        ..TrainConfig::default()
+    };
+
+    // 3. Train classic BSGD (M=2) and multi-merge (M=5); same stream.
+    for m in [2usize, 5] {
+        let mut c = cfg.clone();
+        c.mergees = m;
+        let out = bsgd::train(&split.train, &c);
+        println!(
+            "M={m}: {:.2}s  acc {:.2}%  merge-time {:.0}%  maintenance events {}",
+            out.train_seconds,
+            100.0 * out.model.accuracy(&split.test),
+            100.0 * out.merge_fraction(),
+            out.maintenance_events,
+        );
+    }
+    println!("(multi-merge: same accuracy, far fewer maintenance events — the paper's claim)");
+}

@@ -1,0 +1,96 @@
+//! Serving example: train once, then serve classification requests in
+//! batches through the XLA runtime (falling back to native when no
+//! artifacts are present), reporting latency percentiles and
+//! throughput.
+//!
+//! Models trained by `mmbsgd train --save model.txt` can be served the
+//! same way; this example trains its own small model so it runs
+//! self-contained.
+//!
+//! Run: `cargo run --release --example serve_classify [batch_size]`
+
+use mmbsgd::config::TrainConfig;
+use mmbsgd::data::synth::{dataset, SynthSpec};
+use mmbsgd::data::DenseMatrix;
+use mmbsgd::runtime::{ArtifactRegistry, Backend, NativeBackend, XlaBackend};
+use mmbsgd::solver::bsgd;
+use mmbsgd::util::stats::percentile;
+use std::time::Instant;
+
+fn main() {
+    let batch: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let spec = SynthSpec::phishing_like(0.5);
+    let split = dataset(&spec, 5);
+    let cfg = TrainConfig {
+        lambda: TrainConfig::lambda_from_c(spec.c, split.train.len()),
+        gamma: spec.gamma,
+        budget: 256,
+        mergees: 4,
+        seed: 2,
+        ..TrainConfig::default()
+    };
+    let out = bsgd::train(&split.train, &cfg);
+    let model = out.model;
+    println!(
+        "model: {} SVs, trained in {:.2}s, test acc {:.2}%",
+        model.svs.len(),
+        out.train_seconds,
+        100.0 * model.accuracy(&split.test)
+    );
+
+    let mut backend: Box<dyn Backend> =
+        match XlaBackend::new(&ArtifactRegistry::default_dir()) {
+            Ok(b) => {
+                println!("serving through PJRT (AOT artifacts)");
+                Box::new(b)
+            }
+            Err(e) => {
+                println!("no artifacts ({e}); serving natively");
+                Box::new(NativeBackend::new())
+            }
+        };
+
+    // Warmup: the first artifact call pays one-time PJRT compilation;
+    // real deployments compile at startup, so exclude it from latency.
+    {
+        let warm = DenseMatrix::from_rows(vec![vec![0.0f32; split.test.dim()]]);
+        let _ = backend.margins(&model.svs, model.gamma, &warm);
+    }
+
+    // Request stream: test points in `batch`-sized requests.
+    let test = &split.test;
+    let mut latencies_ms = Vec::new();
+    let mut served = 0usize;
+    let mut correct = 0usize;
+    let t0 = Instant::now();
+    let mut i = 0;
+    while i < test.len() {
+        let hi = (i + batch).min(test.len());
+        let rows: Vec<Vec<f32>> = (i..hi).map(|r| test.x.row(r).to_vec()).collect();
+        let q = DenseMatrix::from_rows(rows);
+        let t1 = Instant::now();
+        let margins = backend.margins(&model.svs, model.gamma, &q);
+        latencies_ms.push(t1.elapsed().as_secs_f64() * 1e3);
+        for (k, &f) in margins.iter().enumerate() {
+            let pred = if f + model.bias >= 0.0 { 1.0 } else { -1.0 };
+            if pred == test.y[i + k] {
+                correct += 1;
+            }
+        }
+        served += hi - i;
+        i = hi;
+    }
+    let total_s = t0.elapsed().as_secs_f64();
+    println!(
+        "served {served} points in {} requests of {batch} | accuracy {:.2}%",
+        latencies_ms.len(),
+        100.0 * correct as f64 / served as f64
+    );
+    println!(
+        "latency per request: p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms | throughput {:.0} pts/s",
+        percentile(&latencies_ms, 50.0),
+        percentile(&latencies_ms, 95.0),
+        percentile(&latencies_ms, 99.0),
+        served as f64 / total_s
+    );
+}

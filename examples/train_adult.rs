@@ -1,0 +1,81 @@
+//! End-to-end driver: full-scale ADULT twin (32 561 training points,
+//! the paper's flagship dataset), classic BSGD (M=2) vs multi-merge
+//! (M=5), with a live accuracy curve and merge-time accounting.
+//!
+//! This is the system-level validation run recorded in EXPERIMENTS.md:
+//! it exercises the entire stack — synthetic data pipeline, the BSGD
+//! coordinator, multi-merge maintenance (through the configured
+//! backend), timed phase accounting, batched evaluation — at paper
+//! scale.
+//!
+//! Run:   cargo run --release --example train_adult [scale] [backend]
+//! e.g.:  cargo run --release --example train_adult 1.0 native
+//!        cargo run --release --example train_adult 0.25 hybrid
+
+use mmbsgd::config::{BackendChoice, TrainConfig};
+use mmbsgd::coordinator::build_backend;
+use mmbsgd::data::synth::{dataset, SynthSpec};
+use mmbsgd::solver::bsgd;
+use mmbsgd::solver::NoopObserver;
+
+fn main() {
+    let scale: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(1.0);
+    let backend_name = std::env::args().nth(2).unwrap_or_else(|| "native".into());
+    let backend_choice = BackendChoice::parse(&backend_name).expect("backend: native|xla|hybrid");
+
+    let spec = SynthSpec::adult_like(scale);
+    let split = dataset(&spec, 1);
+    println!(
+        "ADULT twin @scale {scale}: {} train / {} test, d={}, backend={backend_name}",
+        split.train.len(),
+        split.test.len(),
+        split.train.dim()
+    );
+
+    let budget = ((1200.0 * scale) as usize).clamp(32, 4096);
+    let base = TrainConfig {
+        lambda: TrainConfig::lambda_from_c(spec.c, split.train.len()),
+        gamma: spec.gamma,
+        budget,
+        epochs: 1,
+        seed: 1,
+        eval_every: (split.train.len() / 8).max(1),
+        backend: backend_choice,
+        ..TrainConfig::default()
+    };
+
+    for m in [2usize, 5] {
+        let mut cfg = base.clone();
+        cfg.mergees = m;
+        let mut backend = build_backend(cfg.backend).expect("backend");
+        println!("\n--- M = {m} (B = {budget}) ---");
+        let out = bsgd::train_full(
+            &split.train,
+            &cfg,
+            backend.as_mut(),
+            Some(&split.test),
+            &mut NoopObserver,
+        );
+        println!("accuracy curve (step, acc%, #SV, elapsed s):");
+        for p in &out.history {
+            println!(
+                "  {:>7}  {:>6.2}  {:>5}  {:>7.2}",
+                p.step,
+                100.0 * p.accuracy,
+                p.n_svs,
+                p.elapsed_s
+            );
+        }
+        let acc = bsgd::evaluate(&out.model, backend.as_mut(), &split.test);
+        println!(
+            "final: {:.2}s train | {:.2}% test acc | merge fraction {:.1}% | \
+             {} maintenance events | mean wd {:.3e}",
+            out.train_seconds,
+            100.0 * acc,
+            100.0 * out.merge_fraction(),
+            out.maintenance_events,
+            out.mean_weight_degradation,
+        );
+        println!("phase times: {}", out.times.summary());
+    }
+}

@@ -1,0 +1,115 @@
+"""AOT lowering driver: jax entry points -> artifacts/*.hlo.txt + manifest.
+
+Interchange format is **HLO text**, NOT ``lowered.compile().serialize()``:
+jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which the
+``xla`` crate's bundled xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``).  The HLO *text* parser reassigns ids, so text round-trips
+cleanly (see /opt/xla-example/README.md).
+
+One artifact per (entry point, padded-shape variant).  The manifest
+(``artifacts/manifest.json``) records every artifact's argument shapes so
+the rust runtime (``rust/src/runtime``) can pick the smallest fitting
+variant and marshal literals without re-deriving shape logic.
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Padded budget sizes.  Experiments cap B at 4096 (ADULT's largest paper
+# budget is 2500; SKIN fractions are capped — see DESIGN.md §8).
+B_PADS = [128, 256, 512, 1024, 2048, 4096]
+# Feature-dimension buckets covering the paper's datasets:
+#   SKIN d=3, IJCNN d=22 -> 32; PHISHING d=68, ADULT d=123 -> 128; WEB d=300 -> 512.
+D_PADS = [32, 128, 512]
+# Margin batch variants: nb=1 (per-SGD-step) and nb=256 (evaluation chunks).
+NB_PADS = [1, 256]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def variants():
+    """Yield (name, entry_fn, arg_specs, meta) for every artifact."""
+    for d in D_PADS:
+        for b in B_PADS:
+            for nb in NB_PADS:
+                yield (
+                    f"margins_b{b}_d{d}_n{nb}",
+                    model.margins_entry,
+                    [f32(b, d), f32(b), f32(b), f32(nb, d), f32(1)],
+                    {"entry": "margins", "b_pad": b, "d_pad": d, "nb": nb,
+                     "outputs": [[nb]]},
+                )
+            yield (
+                f"merge_scores_b{b}_d{d}",
+                model.merge_scores_entry,
+                [f32(b, d), f32(b), f32(b), f32(d), f32(1), f32(1)],
+                {"entry": "merge_scores", "b_pad": b, "d_pad": d,
+                 "outputs": [[b], [b], [b], [b]]},
+            )
+        yield (
+            f"merge_gd_m{model.M_PAD}_d{d}",
+            model.merge_gd_entry,
+            [f32(model.M_PAD, d), f32(model.M_PAD), f32(model.M_PAD), f32(1)],
+            {"entry": "merge_gd", "m_pad": model.M_PAD, "d_pad": d,
+             "outputs": [[d], [1], [1]]},
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only", default=None,
+        help="comma-separated name prefixes to lower (for quick iteration)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    prefixes = args.only.split(",") if args.only else None
+    manifest = {"artifacts": []}
+    n = 0
+    for name, fn, specs, meta in variants():
+        if prefixes and not any(name.startswith(p) for p in prefixes):
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entry = dict(meta)
+        entry["name"] = name
+        entry["file"] = f"{name}.hlo.txt"
+        entry["args"] = [list(s.shape) for s in specs]
+        manifest["artifacts"].append(entry)
+        n += 1
+        print(f"[{n:3d}] {name}: {len(text)} chars")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {n} artifacts + manifest to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

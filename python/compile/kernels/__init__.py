@@ -1,0 +1,13 @@
+"""L1 kernels for multi-merge BSGD.
+
+* ``gaussian``    — Pallas masked RBF margin / kernel-row kernels.
+* ``merge_score`` — Pallas vectorized golden-section merge scoring (the
+                    paper's Theta(B*K*G) hot spot).
+* ``ref``         — pure-jnp oracles for everything above plus MM-GD.
+
+MM-GD (``ref.merge_gd``) operates on a tiny (M_pad, d) tile; it is kept as
+a plain-jnp L2 function — there is no blocking win at that size — and is
+lowered to its own artifact by ``compile.aot``.
+"""
+
+from . import gaussian, merge_score, ref  # noqa: F401

@@ -1,0 +1,114 @@
+"""L1 Pallas kernel: masked Gaussian-kernel margin evaluation.
+
+Computes ``f(x) = sum_j alpha_j * k(x_j, x)`` for a batch of query points
+against the (padded) support-vector matrix.  This is the per-step
+``O(B*K)`` cost of BSGD (paper sec. 3) and the bulk of evaluation time.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid runs over budget
+blocks of ``BLOCK_B`` support vectors; each step keeps a ``(BLOCK_B, d)``
+SV tile plus the full query tile resident in VMEM, computes the blocked
+cross-term on the MXU (``Xb @ sv_blk.T``) and accumulates the masked
+``exp``-weighted matvec on the VPU.  Padding lanes carry ``mask = 0`` and
+contribute exactly zero.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret mode lowers to plain
+HLO that the rust runtime executes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Budget-dimension tile.  128 matches the TPU lane width.
+BLOCK_B = 128
+
+
+def _margin_kernel(xb_ref, sv_ref, alpha_ref, mask_ref, gamma_ref, o_ref):
+    """One grid step: accumulate the contribution of a BLOCK_B SV tile.
+
+    xb_ref:    (nb, d)       query tile (same for all grid steps)
+    sv_ref:    (BLOCK_B, d)  SV tile for this step
+    alpha_ref: (BLOCK_B,)    coefficients
+    mask_ref:  (BLOCK_B,)    1.0 live / 0.0 padding
+    gamma_ref: (1,)          RBF bandwidth (runtime input, not baked in)
+    o_ref:     (nb,)         accumulated decision values
+    """
+    # Zero the accumulator on the first grid step only.
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xb = xb_ref[...]  # (nb, d)
+    sv = sv_ref[...]  # (BLOCK_B, d)
+    gamma = gamma_ref[0]
+    # ||x - s||^2 via the expanded form: the cross term is the MXU matmul.
+    xb2 = jnp.sum(xb * xb, axis=1, keepdims=True)  # (nb, 1)
+    sv2 = jnp.sum(sv * sv, axis=1)[None, :]  # (1, BLOCK_B)
+    cross = jnp.dot(xb, sv.T)  # (nb, BLOCK_B) — MXU
+    d2 = jnp.maximum(xb2 + sv2 - 2.0 * cross, 0.0)
+    k = jnp.exp(-gamma * d2)  # (nb, BLOCK_B) — VPU
+    w = alpha_ref[...] * mask_ref[...]  # (BLOCK_B,)
+    o_ref[...] += jnp.dot(k, w)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def margins(Xb, X_sv, alpha, mask, gamma, *, interpret: bool = True):
+    """Pallas-blocked decision values; matches ``ref.margins``.
+
+    Xb: (nb, d); X_sv: (B_pad, d) with B_pad % BLOCK_B == 0; alpha, mask:
+    (B_pad,); gamma: (1,) runtime scalar.  Returns (nb,) float32.
+    """
+    nb, d = Xb.shape
+    b_pad = X_sv.shape[0]
+    assert b_pad % BLOCK_B == 0, f"B_pad={b_pad} must be a multiple of {BLOCK_B}"
+    grid = (b_pad // BLOCK_B,)
+    return pl.pallas_call(
+        _margin_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nb, d), lambda i: (0, 0)),  # queries: resident
+            pl.BlockSpec((BLOCK_B, d), lambda i: (i, 0)),  # SV tile walks B
+            pl.BlockSpec((BLOCK_B,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_B,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((nb,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((nb,), jnp.float32),
+        interpret=interpret,
+    )(Xb, X_sv, alpha, mask, gamma)
+
+
+def _kernel_row_kernel(x_ref, sv_ref, gamma_ref, o_ref):
+    """Kernel row tile: k(x, sv_j) for one BLOCK_B tile."""
+    x = x_ref[...]  # (1, d)
+    sv = sv_ref[...]  # (BLOCK_B, d)
+    diff = sv - x
+    d2 = jnp.sum(diff * diff, axis=1)
+    o_ref[...] = jnp.exp(-gamma_ref[0] * d2)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gaussian_row(x, X_sv, gamma, *, interpret: bool = True):
+    """Pallas kernel row k(x, X_sv); matches ``ref.gaussian_row``.
+
+    x: (d,); X_sv: (B_pad, d); gamma: (1,).  Returns (B_pad,).
+    """
+    b_pad, d = X_sv.shape
+    assert b_pad % BLOCK_B == 0
+    return pl.pallas_call(
+        _kernel_row_kernel,
+        grid=(b_pad // BLOCK_B,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((BLOCK_B, d), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b_pad,), jnp.float32),
+        interpret=interpret,
+    )(x.reshape(1, -1), X_sv, gamma)

@@ -1,0 +1,224 @@
+"""Pure-jnp reference oracles for every L1 kernel.
+
+These are the correctness ground truth: each Pallas kernel in this package
+is tested against the function of the same name here via pytest +
+hypothesis (``python/tests/``).  The math follows Wang, Crammer, Vucetic,
+"Breaking the Curse of Kernelization" (JMLR 2012) and Qaadan & Glasmachers,
+"Multi-Merge Budget Maintenance" (2018).
+
+Conventions
+-----------
+* Gaussian (RBF) kernel: ``k(x, x') = exp(-gamma * ||x - x'||^2)``.
+* Support vector matrix ``X_sv`` has shape ``(B_pad, d)``; ``alpha`` has
+  shape ``(B_pad,)``; ``mask`` is 1.0 for live SVs and 0.0 for padding.
+* Merging two SVs ``(x_i, a_i)`` and ``(x_j, a_j)``: the merged point is
+  ``z = h*x_i + (1-h)*x_j``; for any ``z`` the optimal coefficient is the
+  projection ``a_z = a_i k(x_i,z) + a_j k(x_j,z)`` (``||phi(z)|| = 1``),
+  and the weight degradation is
+  ``||Delta||^2 = a_i^2 + a_j^2 + 2 a_i a_j k_ij - a_z^2``.
+  Maximizing ``|a_z|`` over ``h`` therefore minimizes the degradation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Golden ratio constant used by golden-section search.
+INVPHI = 0.6180339887498949  # 1/phi
+GS_ITERS = 30  # fixed iteration count G (paper: "fixed number of G iterations")
+
+# HLO-friendly +inf sentinel for masked weight-degradation lanes.
+WD_INF = 3.4e38
+
+
+def sq_dists(x: jnp.ndarray, X: jnp.ndarray) -> jnp.ndarray:
+    """Squared euclidean distances ||x - X_j||^2, shape (B,)."""
+    diff = X - x[None, :]
+    return jnp.sum(diff * diff, axis=1)
+
+
+def gaussian_row(x: jnp.ndarray, X: jnp.ndarray, gamma: float) -> jnp.ndarray:
+    """Kernel row k(x, X_j) = exp(-gamma ||x - X_j||^2), shape (B,)."""
+    return jnp.exp(-gamma * sq_dists(x, X))
+
+
+def margins(
+    Xb: jnp.ndarray,
+    X_sv: jnp.ndarray,
+    alpha: jnp.ndarray,
+    mask: jnp.ndarray,
+    gamma: float,
+) -> jnp.ndarray:
+    """Decision values f(x) = sum_j alpha_j k(x_j, x) for a batch.
+
+    Xb: (nb, d) query batch; returns (nb,).  Masked lanes contribute 0.
+    """
+    # (nb, B) squared distance matrix via the expanded form.
+    xb2 = jnp.sum(Xb * Xb, axis=1, keepdims=True)  # (nb, 1)
+    sv2 = jnp.sum(X_sv * X_sv, axis=1)[None, :]  # (1, B)
+    cross = Xb @ X_sv.T  # (nb, B)
+    d2 = jnp.maximum(xb2 + sv2 - 2.0 * cross, 0.0)
+    K = jnp.exp(-gamma * d2)
+    return K @ (alpha * mask)
+
+
+def _gz(h, a_i, a_j, c):
+    """a_z as a function of h: a_i k(x_i,z) + a_j k(x_j,z), c = gamma*d2."""
+    return a_i * jnp.exp(-c * (1.0 - h) ** 2) + a_j * jnp.exp(-c * h**2)
+
+
+def _golden_max_absg(lo, hi, a_i, a_j, c, iters: int = GS_ITERS):
+    """Golden-section search maximizing |g(h)| on [lo, hi].
+
+    Vectorized: lo/hi/a_j/c may be arrays of shape (B,).  Returns (h*, |g|*).
+    """
+
+    def obj(h):
+        return jnp.abs(_gz(h, a_i, a_j, c))
+
+    x1 = hi - INVPHI * (hi - lo)
+    x2 = lo + INVPHI * (hi - lo)
+    f1 = obj(x1)
+    f2 = obj(x2)
+
+    def body(_, state):
+        lo, hi, x1, x2, f1, f2 = state
+        # If f1 > f2, the max is in [lo, x2]; else in [x1, hi].
+        left = f1 > f2
+        nlo = jnp.where(left, lo, x1)
+        nhi = jnp.where(left, x2, hi)
+        nx2 = jnp.where(left, x1, nlo + INVPHI * (nhi - nlo))
+        nx1 = jnp.where(left, nhi - INVPHI * (nhi - nlo), x2)
+        nf2 = jnp.where(left, f1, obj(nx2))
+        nf1 = jnp.where(left, obj(nx1), f2)
+        return (nlo, nhi, nx1, nx2, nf1, nf2)
+
+    lo, hi, x1, x2, f1, f2 = jax.lax.fori_loop(
+        0, iters, body, (lo, hi, x1, x2, f1, f2)
+    )
+    h = 0.5 * (lo + hi)
+    return h, obj(h)
+
+
+def merge_pair_objective(h, a_i, a_j, c):
+    """Public alias for g(h) used by tests."""
+    return _gz(h, a_i, a_j, c)
+
+
+def golden_merge(a_i, a_j, c, iters: int = GS_ITERS):
+    """Optimal (h, a_z, |g(h*)|) for merging one pair.
+
+    Vectorized over trailing array args.  Interval depends on coefficient
+    signs (paper sec. 2.3): same sign -> convex combination h in [0,1];
+    opposite signs -> h < 0 or h > 1 (search [-1,0] and [1,2], keep best).
+    """
+    same = a_i * a_j >= 0.0
+    h_in, g_in = _golden_max_absg(
+        jnp.zeros_like(c), jnp.ones_like(c), a_i, a_j, c, iters
+    )
+    h_left, g_left = _golden_max_absg(
+        -jnp.ones_like(c), jnp.zeros_like(c), a_i, a_j, c, iters
+    )
+    h_right, g_right = _golden_max_absg(
+        jnp.ones_like(c), 2.0 * jnp.ones_like(c), a_i, a_j, c, iters
+    )
+    out_h = jnp.where(g_left > g_right, h_left, h_right)
+    out_g = jnp.maximum(g_left, g_right)
+    h = jnp.where(same, h_in, out_h)
+    gabs = jnp.where(same, g_in, out_g)
+    a_z = _gz(h, a_i, a_j, c)
+    return h, a_z, gabs
+
+
+def merge_scores(
+    x_i: jnp.ndarray,
+    a_i: jnp.ndarray,
+    X_sv: jnp.ndarray,
+    alpha: jnp.ndarray,
+    mask: jnp.ndarray,
+    gamma: float,
+    iters: int = GS_ITERS,
+):
+    """Score merging (x_i, a_i) against every budget SV.
+
+    Returns (wd, h, a_z, d2), each (B,):
+      wd  — weight degradation ||Delta||^2 of the optimal binary merge
+      h   — optimal interpolation parameter (z = h x_i + (1-h) x_j)
+      a_z — optimal merged coefficient
+      d2  — squared distance ||x_i - x_j||^2 (reused by callers)
+    Masked lanes get wd = WD_INF (huge finite sentinel, HLO-friendly).
+    """
+    d2 = sq_dists(x_i, X_sv)
+    c = gamma * d2
+    k_ij = jnp.exp(-c)
+    h, a_z, gabs = golden_merge(a_i, alpha, c, iters)
+    norm2 = a_i * a_i + alpha * alpha + 2.0 * a_i * alpha * k_ij
+    wd = norm2 - gabs * gabs
+    wd = jnp.where(mask > 0.5, wd, jnp.float32(WD_INF))
+    return wd, h, a_z, d2
+
+
+def merge_gd(
+    X_m: jnp.ndarray,
+    a_m: jnp.ndarray,
+    mmask: jnp.ndarray,
+    gamma: float,
+    iters: int = 50,
+    lr: float = 0.5,
+):
+    """MM-GD (Alg. 2): merge M points into one via gradient descent on z.
+
+    X_m: (M_pad, d) points to merge, a_m: (M_pad,) coefficients, mmask
+    masks live rows.  Minimizes ||sum_i a_i phi(x_i) - a_z phi(z)||^2,
+    equivalently maximizes g(z)^2 with g(z) = sum_i a_i k(x_i, z); a_z is
+    the closed-form projection g(z).
+
+    Returns (z, a_z, wd).  Uses a backtracking-flavoured fixed-iteration
+    scheme: a step is kept only if it does not decrease |g| (monotone), and
+    the step size is halved otherwise — fixed trip count lowers to a clean
+    HLO while staying robust.
+    """
+    am = a_m * mmask
+    denom = jnp.sum(am)
+    # Weighted centroid seed (paper Alg. 2 init); guard tiny denominators.
+    safe = jnp.where(jnp.abs(denom) > 1e-12, denom, 1.0)
+    z0 = jnp.sum(X_m * am[:, None], axis=0) / safe
+    # Fallback seed for near-cancelling coefficients: |a|-weighted centroid.
+    absw = jnp.abs(am)
+    z0_abs = jnp.sum(X_m * absw[:, None], axis=0) / jnp.maximum(
+        jnp.sum(absw), 1e-12
+    )
+    z0 = jnp.where(jnp.abs(denom) > 1e-12, z0, z0_abs)
+
+    def g(z):
+        return jnp.sum(am * jnp.exp(-gamma * sq_dists(z, X_m)))
+
+    def grad_g(z):
+        k = am * jnp.exp(-gamma * sq_dists(z, X_m))  # (M,)
+        # d/dz exp(-gamma||z - x||^2) = -2 gamma (z - x) * k
+        return -2.0 * gamma * jnp.sum(k[:, None] * (z[None, :] - X_m), axis=0)
+
+    def body(_, state):
+        z, step, best = state
+        gz = g(z)
+        # Ascent direction on |g|: sign(g) * grad g.
+        direction = jnp.sign(gz) * grad_g(z)
+        z_new = z + step * direction
+        g_new = jnp.abs(g(z_new))
+        improved = g_new >= best
+        z = jnp.where(improved, z_new, z)
+        best = jnp.maximum(best, g_new)
+        step = jnp.where(improved, step * 1.1, step * 0.5)
+        return (z, step, best)
+
+    z, _, _ = jax.lax.fori_loop(
+        0, iters, body, (z0, jnp.asarray(lr, dtype=X_m.dtype), jnp.abs(g(z0)))
+    )
+    a_z = g(z)
+    # ||sum a_i phi(x_i)||^2 = a^T K a over the merge set.
+    diff = X_m[:, None, :] - X_m[None, :, :]
+    K = jnp.exp(-gamma * jnp.sum(diff * diff, axis=2))
+    norm2 = am @ K @ am
+    wd = norm2 - a_z * a_z
+    return z, a_z, wd

@@ -1,0 +1,59 @@
+"""L2: the jax compute-graph entry points lowered to AOT artifacts.
+
+Each function here is a pure, fixed-shape jax function that the rust
+coordinator executes through PJRT at training/serving time.  They compose
+the L1 Pallas kernels (``kernels.gaussian``, ``kernels.merge_score``) plus
+the MM-GD merge (``kernels.ref.merge_gd`` — tiny (M,d) tile, plain jnp).
+
+Shape conventions (everything padded to fixed sizes, masked):
+  X_sv  : (B_pad, d_pad) f32   support-vector matrix
+  alpha : (B_pad,)      f32    coefficients; 0 on padding lanes
+  mask  : (B_pad,)      f32    1.0 live / 0.0 padding
+  Xb    : (nb, d_pad)   f32    query batch
+  gamma : (1,)          f32    RBF bandwidth — runtime input so one
+                               artifact serves every hyperparameter setting
+Zero-padded feature columns contribute 0 to every squared distance, so
+d-padding is exact, not approximate.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import gaussian, merge_score, ref
+
+# MM-GD merge-set pad: supports M up to 16 (paper sweeps M in 2..11).
+M_PAD = 16
+# MM-GD fixed iteration/step parameters (see kernels/ref.py merge_gd).
+GD_ITERS = 50
+GD_LR = 0.5
+
+
+def margins_entry(X_sv, alpha, mask, Xb, gamma):
+    """Decision values f(x_b) for a batch — the O(B*K) per-step cost."""
+    return (gaussian.margins(Xb, X_sv, alpha, mask, gamma),)
+
+
+def merge_scores_entry(X_sv, alpha, mask, x_i, a_i, gamma):
+    """Pairwise weight-degradation scores of x_i vs the whole budget.
+
+    The caller zeroes ``mask`` at x_i's own lane.  Returns
+    (wd, h, a_z, d2), each (B_pad,).
+    """
+    return merge_score.merge_scores(x_i, a_i, X_sv, alpha, mask, gamma)
+
+
+def merge_gd_entry(X_m, a_m, mmask, gamma):
+    """MM-GD (Alg. 2): merge up to M_PAD points into one.
+
+    Returns (z, a_z, wd) with z: (d_pad,), a_z/wd: scalar-shaped (1,).
+    """
+    z, a_z, wd = ref.merge_gd(X_m, a_m, mmask, gamma[0], iters=GD_ITERS, lr=GD_LR)
+    return (z, jnp.reshape(a_z, (1,)), jnp.reshape(wd, (1,)))
+
+
+ENTRY_POINTS = {
+    "margins": margins_entry,
+    "merge_scores": merge_scores_entry,
+    "merge_gd": merge_gd_entry,
+}

@@ -1,0 +1,210 @@
+"""Pallas kernels vs pure-jnp oracles — the CORE correctness signal.
+
+Covers `gaussian.margins`, `gaussian.gaussian_row`, and
+`merge_score.merge_scores` against `ref.*` with fixed cases plus
+hypothesis sweeps over shapes, bandwidths and coefficient signs.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import gaussian, merge_score, ref
+
+RNG = np.random.default_rng(0)
+
+
+def mk_budget(b_pad, d, live, scale=1.0, seed=0, mixed_signs=True):
+    rng = np.random.default_rng(seed)
+    X = (rng.standard_normal((b_pad, d)) * scale).astype(np.float32)
+    a = rng.standard_normal(b_pad).astype(np.float32)
+    if not mixed_signs:
+        a = np.abs(a)
+    mask = np.zeros(b_pad, dtype=np.float32)
+    mask[:live] = 1.0
+    X[live:] = 0.0
+    a[live:] = 0.0
+    return X, a, mask
+
+
+# ---------------------------------------------------------------- margins
+
+
+@pytest.mark.parametrize("b_pad,live", [(128, 128), (128, 37), (256, 200)])
+@pytest.mark.parametrize("d", [4, 32])
+@pytest.mark.parametrize("nb", [1, 5])
+def test_margins_matches_ref(b_pad, live, d, nb):
+    X, a, mask = mk_budget(b_pad, d, live)
+    Xb = RNG.standard_normal((nb, d)).astype(np.float32)
+    gamma = 0.25
+    got = gaussian.margins(Xb, X, a, mask, jnp.array([gamma], jnp.float32))
+    want = ref.margins(Xb, X, a, mask, gamma)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_margins_masked_lanes_do_not_contribute():
+    X, a, mask = mk_budget(128, 8, 64)
+    # Poison the padding region: masked lanes must still contribute zero.
+    X[64:] = 100.0
+    a[64:] = 1e6
+    Xb = RNG.standard_normal((3, 8)).astype(np.float32)
+    got = gaussian.margins(Xb, X, a, mask, jnp.array([0.5], jnp.float32))
+    want = ref.margins(Xb, X[:64], a[:64], mask[:64], 0.5)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(1, 48),
+    nb=st.integers(1, 8),
+    live=st.integers(1, 128),
+    gamma=st.floats(1e-3, 8.0),
+    scale=st.floats(0.1, 3.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_margins_hypothesis(d, nb, live, gamma, scale, seed):
+    X, a, mask = mk_budget(128, d, live, scale=scale, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    Xb = (rng.standard_normal((nb, d)) * scale).astype(np.float32)
+    got = gaussian.margins(Xb, X, a, mask, jnp.array([gamma], jnp.float32))
+    want = ref.margins(Xb, X, a, mask, gamma)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+def test_margins_zero_gamma_sums_alphas():
+    # gamma=0 -> k==1 everywhere -> margin = sum of live alphas.
+    X, a, mask = mk_budget(128, 4, 50)
+    Xb = np.zeros((2, 4), dtype=np.float32)
+    got = gaussian.margins(Xb, X, a, mask, jnp.array([0.0], jnp.float32))
+    np.testing.assert_allclose(got, np.full(2, (a * mask).sum()), rtol=1e-5)
+
+
+# ------------------------------------------------------------ kernel row
+
+
+@pytest.mark.parametrize("b_pad", [128, 384])
+def test_gaussian_row_matches_ref(b_pad):
+    X, _, _ = mk_budget(b_pad, 16, b_pad)
+    x = RNG.standard_normal(16).astype(np.float32)
+    got = gaussian.gaussian_row(x, X, jnp.array([1.5], jnp.float32))
+    want = ref.gaussian_row(x, X, 1.5)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+def test_gaussian_row_self_distance_is_one():
+    X, _, _ = mk_budget(128, 8, 128)
+    got = gaussian.gaussian_row(X[7], X, jnp.array([2.0], jnp.float32))
+    assert abs(float(got[7]) - 1.0) < 1e-6
+
+
+# ----------------------------------------------------------- merge score
+
+
+def scores_both(X, a, mask, i, gamma):
+    x_i = X[i]
+    a_i = a[i]
+    m = mask.copy()
+    m[i] = 0.0  # callers exclude the candidate's own lane
+    got = merge_score.merge_scores(
+        x_i, np.array([a_i], np.float32), X, a, m,
+        jnp.array([gamma], jnp.float32),
+    )
+    want = ref.merge_scores(x_i, a_i, X, a, m, gamma)
+    return got, want
+
+
+# Per-output tolerances: the golden-section optimum is *flat* in h, so h
+# and a_z carry inherent slop when two implementations take different
+# float rounding paths; wd (the quantity merges are ranked by) is
+# second-order flat and d2 is plain arithmetic — both stay tight.
+TOLS = {
+    "wd": dict(rtol=2e-3, atol=1e-4),
+    "h": dict(rtol=1.0, atol=2e-2),
+    "a_z": dict(rtol=2e-2, atol=2e-3),
+    "d2": dict(rtol=1e-5, atol=1e-6),
+}
+
+
+@pytest.mark.parametrize("b_pad,live", [(128, 128), (128, 60), (256, 130)])
+@pytest.mark.parametrize("gamma", [0.05, 0.5, 4.0])
+def test_merge_scores_matches_ref(b_pad, live, gamma):
+    X, a, mask = mk_budget(b_pad, 12, live, seed=3)
+    got, want = scores_both(X, a, mask, 0, gamma)
+    for g, w, name in zip(got, want, ["wd", "h", "a_z", "d2"]):
+        np.testing.assert_allclose(g, w, err_msg=name, **TOLS[name])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(1, 32),
+    live=st.integers(2, 128),
+    gamma=st.floats(1e-2, 8.0),
+    seed=st.integers(0, 2**31 - 1),
+    mixed=st.booleans(),
+)
+def test_merge_scores_hypothesis(d, live, gamma, seed, mixed):
+    X, a, mask = mk_budget(128, d, live, seed=seed, mixed_signs=mixed)
+    got, want = scores_both(X, a, mask, 0, gamma)
+    for g, w, name in zip(got, want, ["wd", "h", "a_z", "d2"]):
+        np.testing.assert_allclose(g, w, err_msg=name, **TOLS[name])
+
+
+def test_merge_scores_masked_lanes_are_inf():
+    X, a, mask = mk_budget(128, 6, 40)
+    (wd, _, _, _), _ = scores_both(X, a, mask, 2, 0.7)
+    wd = np.asarray(wd)
+    assert np.all(wd[40:] >= ref.WD_INF * 0.99)
+    assert np.all(wd[:40][np.arange(40) != 2] < ref.WD_INF * 0.99)
+
+
+def test_merge_scores_wd_nonnegative_and_ordered():
+    """WD is a squared norm: >= 0 (up to float eps); closer points with
+    similar alphas should merge more cheaply than distant ones."""
+    d = 8
+    X, a, mask = mk_budget(128, d, 100, seed=11, mixed_signs=False)
+    (wd, h, a_z, d2), _ = scores_both(X, a, mask, 5, 1.0)
+    wd = np.asarray(wd)[:100]
+    assert np.all(wd > -1e-4)
+    # identical point at distance 0 (if any lane happens to coincide): skip;
+    # instead check the global trend: min-wd partner is among the near ones.
+    live_idx = [j for j in range(100) if j != 5]
+    best = min(live_idx, key=lambda j: wd[j])
+    d2v = np.asarray(d2)
+    assert d2v[best] <= np.median(d2v[live_idx]) * 1.5
+
+
+def test_merge_identical_points_zero_degradation():
+    """Merging a point with an exact copy must cost ~nothing (h in [0,1],
+    a_z = a_i + a_j, wd ~ 0)."""
+    d = 8
+    X, a, mask = mk_budget(128, d, 50, seed=4, mixed_signs=False)
+    X[1] = X[0]
+    (wd, h, a_z, _), _ = scores_both(X, a, mask, 0, 2.0)
+    assert float(wd[1]) < 1e-5
+    np.testing.assert_allclose(float(a_z[1]), a[0] + a[1], rtol=1e-5)
+
+
+def test_merge_scores_h_interval_by_sign():
+    X, a, mask = mk_budget(128, 5, 80, seed=9)
+    a = np.abs(a).astype(np.float32)
+    a[10:20] *= -1.0  # opposite-sign block
+    (wd, h, a_z, _), _ = scores_both(X, a, mask, 0, 0.8)
+    h = np.asarray(h)
+    same = np.arange(1, 80)[np.asarray(a[1:80]) * a[0] >= 0]
+    mixed = np.arange(1, 80)[np.asarray(a[1:80]) * a[0] < 0]
+    assert np.all((h[same] >= -1e-6) & (h[same] <= 1 + 1e-6))
+    assert np.all((h[mixed] <= 1e-6) | (h[mixed] >= 1 - 1e-6))
+
+
+def test_golden_section_beats_endpoints():
+    """|g(h*)| must be >= |g| at both interval endpoints (same-sign case:
+    endpoints are 'keep x_j' / 'keep x_i')."""
+    c = np.linspace(0.01, 10.0, 64).astype(np.float32)
+    a_i = np.float32(0.3)
+    a_j = np.linspace(0.1, 2.0, 64).astype(np.float32)
+    h, a_z, gabs = ref.golden_merge(a_i, a_j, c)
+    g0 = np.abs(ref.merge_pair_objective(0.0, a_i, a_j, c))
+    g1 = np.abs(ref.merge_pair_objective(1.0, a_i, a_j, c))
+    assert np.all(np.asarray(gabs) >= np.maximum(g0, g1) - 1e-5)

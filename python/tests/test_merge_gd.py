@@ -1,0 +1,141 @@
+"""MM-GD (Alg. 2) oracle tests: invariants + comparison with cascades.
+
+MM-GD has no separate Pallas implementation (tiny (M,d) tile — see
+kernels/__init__), so these tests pin down its *mathematical* behaviour:
+monotone improvement, degradation bounds, and agreement with the binary
+merge in the M=2 case.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile import model
+
+
+def mk_set(m_live, d, seed=0, spread=0.5, positive=True):
+    rng = np.random.default_rng(seed)
+    center = rng.standard_normal(d).astype(np.float32)
+    X = (center + spread * rng.standard_normal((model.M_PAD, d))).astype(
+        np.float32
+    )
+    a = rng.uniform(0.1, 1.0, model.M_PAD).astype(np.float32)
+    if not positive:
+        a *= rng.choice([-1.0, 1.0], model.M_PAD).astype(np.float32)
+    mm = np.zeros(model.M_PAD, dtype=np.float32)
+    mm[:m_live] = 1.0
+    X[m_live:] = 0.0
+    a[m_live:] = 0.0
+    return X, a, mm
+
+
+def norm2_of_set(X, a, mm, gamma):
+    am = a * mm
+    diff = X[:, None, :] - X[None, :, :]
+    K = np.exp(-gamma * np.sum(diff**2, axis=2))
+    return float(am @ K @ am)
+
+
+@pytest.mark.parametrize("m", [2, 3, 5, 10])
+@pytest.mark.parametrize("gamma", [0.1, 1.0])
+def test_merge_gd_degradation_bounds(m, gamma):
+    X, a, mm = mk_set(m, 6, seed=m)
+    z, a_z, wd = ref.merge_gd(X, a, mm, gamma)
+    n2 = norm2_of_set(X, a, mm, gamma)
+    # 0 <= wd <= ||sum a_i phi(x_i)||^2 (a_z = 0 achieves the upper bound).
+    assert -1e-4 <= float(wd) <= n2 + 1e-4
+
+
+def test_merge_gd_single_point_is_exact():
+    X, a, mm = mk_set(1, 4, seed=7)
+    z, a_z, wd = ref.merge_gd(X, a, mm, 1.0)
+    np.testing.assert_allclose(np.asarray(z), X[0], atol=1e-4)
+    np.testing.assert_allclose(float(a_z), a[0], rtol=1e-4)
+    assert float(wd) < 1e-6
+
+
+def test_merge_gd_identical_points_exact():
+    X, a, mm = mk_set(4, 5, seed=3)
+    X[:4] = X[0]
+    z, a_z, wd = ref.merge_gd(X, a, mm, 2.0)
+    np.testing.assert_allclose(np.asarray(z), X[0], atol=1e-3)
+    np.testing.assert_allclose(float(a_z), a[:4].sum(), rtol=1e-3)
+    assert float(wd) < 1e-5
+
+
+def test_merge_gd_beats_or_matches_centroid_seed():
+    """GD must not end worse than its own initialization."""
+    X, a, mm = mk_set(6, 8, seed=5, spread=1.0)
+    gamma = 0.5
+    z, a_z, wd = ref.merge_gd(X, a, mm, gamma)
+    am = a * mm
+    z0 = (X * am[:, None]).sum(0) / am.sum()
+    g0 = float(np.sum(am * np.exp(-gamma * np.sum((X - z0) ** 2, axis=1))))
+    n2 = norm2_of_set(X, a, mm, gamma)
+    wd0 = n2 - g0 * g0
+    assert float(wd) <= wd0 + 1e-5
+
+
+def test_merge_gd_m2_close_to_golden_section():
+    """For M=2 the GD merge must approximately match the golden-section
+    optimum (paper: 'differences are minor', Table 1)."""
+    rng = np.random.default_rng(12)
+    for trial in range(5):
+        d = 4
+        x0 = rng.standard_normal(d).astype(np.float32)
+        x1 = (x0 + 0.6 * rng.standard_normal(d)).astype(np.float32)
+        a0, a1 = rng.uniform(0.2, 1.0, 2).astype(np.float32)
+        gamma = 1.0
+        X = np.zeros((model.M_PAD, d), np.float32)
+        a = np.zeros(model.M_PAD, np.float32)
+        mm = np.zeros(model.M_PAD, np.float32)
+        X[0], X[1] = x0, x1
+        a[0], a[1] = a0, a1
+        mm[:2] = 1.0
+        _, _, wd_gd = ref.merge_gd(X, a, mm, gamma)
+        c = gamma * float(np.sum((x0 - x1) ** 2))
+        _, _, gabs = ref.golden_merge(a0, a1, np.float32(c))
+        k01 = np.exp(-c)
+        wd_gs = a0**2 + a1**2 + 2 * a0 * a1 * k01 - float(gabs) ** 2
+        assert float(wd_gd) <= wd_gs * 1.05 + 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(2, 11),
+    d=st.integers(1, 16),
+    gamma=st.floats(0.05, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+    positive=st.booleans(),
+)
+def test_merge_gd_hypothesis_invariants(m, d, gamma, seed, positive):
+    X, a, mm = mk_set(m, d, seed=seed, positive=positive)
+    z, a_z, wd = ref.merge_gd(X, a, mm, gamma)
+    assert np.all(np.isfinite(np.asarray(z)))
+    assert np.isfinite(float(a_z)) and np.isfinite(float(wd))
+    n2 = norm2_of_set(X, a, mm, gamma)
+    assert -1e-3 <= float(wd) <= n2 + 1e-3
+
+
+def test_entry_points_shapes():
+    """model.* entry points return the shapes the manifest promises."""
+    import jax.numpy as jnp
+
+    b, d, nb = 128, 32, 4
+    X = np.zeros((b, d), np.float32)
+    al = np.zeros(b, np.float32)
+    mk = np.zeros(b, np.float32)
+    g = jnp.array([1.0], jnp.float32)
+    (mg,) = model.margins_entry(X, al, mk, np.zeros((nb, d), np.float32), g)
+    assert mg.shape == (nb,)
+    wd, h, az, d2 = model.merge_scores_entry(
+        X, al, mk, np.zeros(d, np.float32), jnp.array([0.5], jnp.float32), g
+    )
+    assert wd.shape == h.shape == az.shape == d2.shape == (b,)
+    Xm = np.zeros((model.M_PAD, d), np.float32)
+    z, az1, wd1 = model.merge_gd_entry(
+        Xm, np.zeros(model.M_PAD, np.float32),
+        np.zeros(model.M_PAD, np.float32), g
+    )
+    assert z.shape == (d,) and az1.shape == (1,) and wd1.shape == (1,)

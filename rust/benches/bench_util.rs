@@ -1,0 +1,79 @@
+//! First-party micro-bench harness (criterion is not vendored in this
+//! offline image).  Adaptive iteration count, warmup, median/p10/p90
+//! reporting — enough statistical hygiene for the before/after deltas
+//! recorded in EXPERIMENTS.md §Perf.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchReport {
+    pub name: String,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub iters: usize,
+}
+
+/// Benchmark `f`, auto-scaling iterations to ~`budget_ms` of wall clock.
+pub fn bench<T>(name: &str, budget_ms: u64, mut f: impl FnMut() -> T) -> BenchReport {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let target = Duration::from_millis(budget_ms);
+    let iters = ((target.as_secs_f64() / once.as_secs_f64()) as usize).clamp(5, 10_000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let pick = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+    let rep = BenchReport {
+        name: name.to_string(),
+        median: pick(0.5),
+        p10: pick(0.1),
+        p90: pick(0.9),
+        iters,
+    };
+    println!(
+        "{:48} median {:>12} p10 {:>12} p90 {:>12} (n={})",
+        rep.name,
+        fmt_dur(rep.median),
+        fmt_dur(rep.p10),
+        fmt_dur(rep.p90),
+        rep.iters
+    );
+    rep
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Group header.
+pub fn group(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Filter from CLI args (cargo bench -- <substring>).
+pub fn filter() -> Option<String> {
+    std::env::args().skip(1).find(|a| !a.starts_with('-'))
+}
+
+pub fn enabled(name: &str) -> bool {
+    match filter() {
+        Some(f) => name.contains(&f),
+        None => true,
+    }
+}

@@ -1,0 +1,145 @@
+//! Hot-path micro benches: the Θ(B·K) margin, the Θ(B·K·G) merge-scoring
+//! pass (native vs XLA artifact), merge executors, and the
+//! maintenance-strategy ablation (merge vs projection crossover).
+//!
+//! Run: `cargo bench --bench hot_paths [-- <filter>]`
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::{bench, enabled, group};
+
+use mmbsgd::budget::golden::{self, GS_ITERS};
+use mmbsgd::budget::{MaintenanceKind, Maintainer, MergeExec, MultiMerge, Projection};
+use mmbsgd::data::DenseMatrix;
+use mmbsgd::model::SvStore;
+use mmbsgd::rng::Xoshiro256;
+use mmbsgd::runtime::{ArtifactRegistry, Backend, NativeBackend, XlaBackend};
+
+/// Store with *calibrated* geometry: coordinates scaled so that the
+/// median pairwise γ·d² ≈ 5 — the regime real tuned RBF-SVMs (and our
+/// synthetic twins) live in.  Raw standard-normal points would put every
+/// pair past the far-pair cutoff and make the benches unrealistically
+/// flattering to the exp-skip optimizations.
+fn random_store(b: usize, d: usize, seed: u64) -> SvStore {
+    let gamma = 0.5;
+    let scale = (5.0 / (gamma * 2.0 * d as f64)).sqrt();
+    let mut rng = Xoshiro256::new(seed);
+    let mut s = SvStore::new(d);
+    for _ in 0..b {
+        let x: Vec<f32> = (0..d)
+            .map(|_| (scale * rng.next_gaussian()) as f32)
+            .collect();
+        s.push(&x, 0.1 + rng.next_f64());
+    }
+    s
+}
+
+fn main() {
+    let gamma = 0.5;
+
+    if enabled("margin") {
+        group("margin1 (per-SGD-step cost, native)");
+        for &(b, d) in &[(128usize, 32usize), (512, 128), (2048, 128)] {
+            let svs = random_store(b, d, 1);
+            let q: Vec<f32> = vec![0.1; d];
+            let mut be = NativeBackend::new();
+            bench(&format!("margin1/native/B{b}/d{d}"), 200, || {
+                be.margin1(&svs, gamma, &q)
+            });
+        }
+    }
+
+    if enabled("merge_scores") {
+        group("merge_scores (the paper's Θ(B·K·G) bottleneck)");
+        for &(b, d) in &[(128usize, 32usize), (512, 128), (2048, 128)] {
+            let svs = random_store(b, d, 2);
+            let i = svs.min_abs_alpha().unwrap();
+            let mut nat = NativeBackend::new();
+            bench(&format!("merge_scores/native/B{b}/d{d}"), 300, || {
+                nat.merge_scores(&svs, gamma, i)
+            });
+            if let Ok(mut x) = XlaBackend::new(&ArtifactRegistry::default_dir()) {
+                // compile outside the timed region
+                let _ = x.merge_scores(&svs, gamma, i);
+                bench(&format!("merge_scores/xla/B{b}/d{d}"), 300, || {
+                    x.merge_scores(&svs, gamma, i)
+                });
+            }
+        }
+    }
+
+    if enabled("golden") {
+        group("binary merge (scalar golden section, G=30)");
+        bench("golden/merge_pair_params", 100, || {
+            golden::merge_pair_params(0.3, 0.7, 1.7, GS_ITERS)
+        });
+        let x_i: Vec<f32> = (0..128).map(|i| i as f32 * 0.01).collect();
+        let x_j: Vec<f32> = (0..128).map(|i| i as f32 * 0.011).collect();
+        bench("golden/merge_pair/d128", 100, || {
+            golden::merge_pair(&x_i, 0.3, &x_j, 0.7, gamma, GS_ITERS)
+        });
+    }
+
+    if enabled("merge_gd") {
+        group("MM-GD merge executor");
+        let mut rng = Xoshiro256::new(3);
+        for &m in &[3usize, 5, 10] {
+            let pts_owned: Vec<(Vec<f32>, f64)> = (0..m)
+                .map(|_| {
+                    let p: Vec<f32> = (0..32).map(|_| rng.next_gaussian() as f32).collect();
+                    (p, 0.5)
+                })
+                .collect();
+            let pts: Vec<(&[f32], f64)> =
+                pts_owned.iter().map(|(p, a)| (p.as_slice(), *a)).collect();
+            let mut nat = NativeBackend::new();
+            bench(&format!("merge_gd/native/M{m}/d32"), 200, || {
+                nat.merge_gd(&pts, gamma)
+            });
+            if let Ok(mut x) = XlaBackend::new(&ArtifactRegistry::default_dir()) {
+                let _ = x.merge_gd(&pts, gamma);
+                bench(&format!("merge_gd/xla/M{m}/d32"), 200, || {
+                    x.merge_gd(&pts, gamma)
+                });
+            }
+        }
+    }
+
+    if enabled("maintenance") {
+        group("one maintenance event: multi-merge vs projection (ablation)");
+        for &b in &[64usize, 256, 512] {
+            let mut be = NativeBackend::new();
+            bench(&format!("maintain/merge2/B{b}"), 300, || {
+                let mut svs = random_store(b + 1, 32, 4);
+                MultiMerge::new(2, MergeExec::Cascade).maintain(&mut svs, gamma, b, &mut be)
+            });
+            bench(&format!("maintain/merge5/B{b}"), 300, || {
+                let mut svs = random_store(b + 1, 32, 4);
+                MultiMerge::new(5, MergeExec::Cascade).maintain(&mut svs, gamma, b, &mut be)
+            });
+            bench(&format!("maintain/projection/B{b}"), 300, || {
+                let mut svs = random_store(b + 1, 32, 4);
+                Projection::default().maintain(&mut svs, gamma, b, &mut be)
+            });
+        }
+    }
+
+    if enabled("eval") {
+        group("batched evaluation (native vs xla artifact)");
+        let svs = random_store(512, 128, 5);
+        let mut rng = Xoshiro256::new(6);
+        let rows: Vec<Vec<f32>> = (0..256)
+            .map(|_| (0..128).map(|_| rng.next_gaussian() as f32).collect())
+            .collect();
+        let q = DenseMatrix::from_rows(rows);
+        let mut nat = NativeBackend::new();
+        bench("eval/native/B512/d128/n256", 300, || nat.margins(&svs, gamma, &q));
+        if let Ok(mut x) = XlaBackend::new(&ArtifactRegistry::default_dir()) {
+            let _ = x.margins(&svs, gamma, &q);
+            bench("eval/xla/B512/d128/n256", 300, || x.margins(&svs, gamma, &q));
+        }
+    }
+
+    // Keep MaintenanceKind linked in (ablation completeness).
+    let _ = MaintenanceKind::parse("merge:3");
+}

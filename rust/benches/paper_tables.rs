@@ -1,0 +1,115 @@
+//! End-to-end benches — one group per paper table/figure, at a reduced
+//! scale so `cargo bench` completes in minutes.  The full-resolution
+//! regeneration lives in `mmbsgd experiment --id <table1|fig1|...>`;
+//! these benches track the *cost* of each experiment's characteristic
+//! workload so perf regressions show up in CI.
+//!
+//! Run: `cargo bench --bench paper_tables [-- <filter>]`
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::{bench, enabled, group};
+
+use mmbsgd::budget::MaintenanceKind;
+use mmbsgd::config::TrainConfig;
+use mmbsgd::data::synth::{dataset, SynthSpec};
+use mmbsgd::solver::bsgd;
+use mmbsgd::solver::smo::{self, SmoParams};
+
+const SCALE: f64 = 0.01;
+
+fn cfg_for(spec: &SynthSpec, n_train: usize, budget: usize, m: usize) -> TrainConfig {
+    TrainConfig {
+        lambda: TrainConfig::lambda_from_c(spec.c, n_train),
+        gamma: spec.gamma,
+        budget,
+        mergees: m,
+        epochs: 1,
+        seed: 1,
+        ..TrainConfig::default()
+    }
+}
+
+fn main() {
+    // --- Table 1: cascade vs GD merge executor, ADULT ---
+    if enabled("table1") {
+        group("table1: one epoch ADULT, M=3, cascade vs GD (B=64)");
+        let spec = SynthSpec::adult_like(SCALE);
+        let split = dataset(&spec, 1);
+        for (kind, tag) in [
+            (MaintenanceKind::Merge { m: 3 }, "cascade"),
+            (MaintenanceKind::MergeGd { m: 3 }, "gd"),
+        ] {
+            let mut cfg = cfg_for(&spec, split.train.len(), 64, 3);
+            cfg.maintenance = Some(kind);
+            bench(&format!("table1/epoch/{tag}"), 1500, || {
+                bsgd::train(&split.train, &cfg)
+            });
+        }
+    }
+
+    // --- Table 2: the exact-solver reference ---
+    if enabled("table2") {
+        group("table2: SMO reference solve (PHISHING subsample)");
+        let spec = SynthSpec::phishing_like(SCALE * 4.0);
+        let split = dataset(&spec, 1);
+        let params = SmoParams { c: spec.c, gamma: spec.gamma, ..Default::default() };
+        bench("table2/smo/phishing", 2000, || smo::train(&split.train, &params));
+    }
+
+    // --- Fig 1: merge-time fraction across M ---
+    if enabled("fig1") {
+        group("fig1: one epoch per M (ADULT, B=32): time should fall with M");
+        let spec = SynthSpec::adult_like(SCALE);
+        let split = dataset(&spec, 1);
+        for m in [2usize, 5, 10] {
+            let cfg = cfg_for(&spec, split.train.len(), 32, m);
+            bench(&format!("fig1/epoch/M{m}"), 1500, || bsgd::train(&split.train, &cfg));
+        }
+    }
+
+    // --- Fig 2/3: accuracy/time sweeps — characteristic single runs ---
+    if enabled("fig2") {
+        group("fig2/3: one epoch per dataset family (B=64, M=4)");
+        for spec in [
+            SynthSpec::phishing_like(SCALE),
+            SynthSpec::web_like(SCALE),
+            SynthSpec::ijcnn_like(SCALE),
+            SynthSpec::skin_like(SCALE),
+        ] {
+            let split = dataset(&spec, 1);
+            let cfg = cfg_for(&spec, split.train.len(), 64, 4);
+            bench(&format!("fig2/epoch/{}", spec.name), 1500, || {
+                bsgd::train(&split.train, &cfg)
+            });
+        }
+    }
+
+    // --- Fig 4: the Pareto workload = many (B, M) runs; bench one cell
+    //     at the largest budget (dominates the sweep's cost) ---
+    if enabled("fig4") {
+        group("fig4: largest-budget cell (ADULT, B=256)");
+        let spec = SynthSpec::adult_like(SCALE * 4.0);
+        let split = dataset(&spec, 1);
+        for m in [2usize, 11] {
+            let cfg = cfg_for(&spec, split.train.len(), 256, m);
+            bench(&format!("fig4/cell/M{m}"), 2000, || bsgd::train(&split.train, &cfg));
+        }
+    }
+
+    // --- Fig 5: hyperparameter grid — bench the extreme-γ cells that
+    //     dominate its runtime ---
+    if enabled("fig5") {
+        group("fig5: extreme-gamma cells (PHISHING, B=64, M=3)");
+        let mut spec = SynthSpec::phishing_like(SCALE);
+        let split = dataset(&spec, 1);
+        for gamma in [0.5, 128.0] {
+            spec.gamma = gamma;
+            let mut cfg = cfg_for(&spec, split.train.len(), 64, 3);
+            cfg.gamma = gamma;
+            bench(&format!("fig5/cell/gamma{gamma}"), 1500, || {
+                bsgd::train(&split.train, &cfg)
+            });
+        }
+    }
+}

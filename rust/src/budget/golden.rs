@@ -1,0 +1,211 @@
+//! Scalar golden-section search for the binary-merge objective.
+//!
+//! Merging SVs `(x_i, a_i)` and `(x_j, a_j)` under the Gaussian kernel:
+//! the merged point lies on the connecting line, `z = h x_i + (1-h) x_j`
+//! (paper sec. 2.3).  For fixed `z` the optimal coefficient is the
+//! projection `a_z = g(h) = a_i e^{-c(1-h)²} + a_j e^{-c h²}` with
+//! `c = γ‖x_i-x_j‖²`, and the weight degradation is
+//! `‖Δ‖² = a_i² + a_j² + 2 a_i a_j e^{-c} − g(h)²`, so minimizing `‖Δ‖²`
+//! means maximizing `|g(h)|`.
+//!
+//! This module is the *native* mirror of the L1 Pallas kernel
+//! (`python/compile/kernels/merge_score.py`); the constants (interval
+//! choice, G=30 iterations, 1/φ) are kept in lock-step — the
+//! backend-equivalence test depends on it.
+
+/// 1/φ.
+pub const INVPHI: f64 = 0.618_033_988_749_894_9;
+
+/// Fixed golden-section iteration count G (paper sec. 3).
+pub const GS_ITERS: usize = 30;
+
+/// g(h): the merged coefficient as a function of the line parameter.
+#[inline]
+pub fn merge_objective(h: f64, a_i: f64, a_j: f64, c: f64) -> f64 {
+    a_i * (-c * (1.0 - h) * (1.0 - h)).exp() + a_j * (-c * h * h).exp()
+}
+
+/// Golden-section max of |g| on [lo, hi]; returns (h*, |g(h*)|).
+pub fn golden_max(lo: f64, hi: f64, a_i: f64, a_j: f64, c: f64, iters: usize) -> (f64, f64) {
+    let obj = |h: f64| merge_objective(h, a_i, a_j, c).abs();
+    let (mut lo, mut hi) = (lo, hi);
+    let mut x1 = hi - INVPHI * (hi - lo);
+    let mut x2 = lo + INVPHI * (hi - lo);
+    let mut f1 = obj(x1);
+    let mut f2 = obj(x2);
+    for _ in 0..iters {
+        if f1 > f2 {
+            hi = x2;
+            x2 = x1;
+            f2 = f1;
+            x1 = hi - INVPHI * (hi - lo);
+            f1 = obj(x1);
+        } else {
+            lo = x1;
+            x1 = x2;
+            f1 = f2;
+            x2 = lo + INVPHI * (hi - lo);
+            f2 = obj(x2);
+        }
+    }
+    let h = 0.5 * (lo + hi);
+    (h, obj(h))
+}
+
+/// Result of an optimal binary merge.
+#[derive(Clone, Copy, Debug)]
+pub struct PairMerge {
+    /// Line parameter: z = h x_i + (1-h) x_j.
+    pub h: f64,
+    /// Merged coefficient.
+    pub a_z: f64,
+    /// Weight degradation ‖Δ‖².
+    pub wd: f64,
+}
+
+/// Solve the binary merge for coefficients and `c = γ d²`.
+///
+/// Interval selection per the paper: same-sign coefficients → h∈[0,1]
+/// (convex combination); opposite signs → the optimum lies outside,
+/// search [-1,0] and [1,2] and keep the better.
+pub fn merge_pair_params(a_i: f64, a_j: f64, c: f64, iters: usize) -> PairMerge {
+    // Far-pair shortcut (perf, EXPERIMENTS.md §Perf): for c = γd² above
+    // the cutoff, k_ij = e^-c is below f64 noise and the optimal merge
+    // degenerates to "keep the bigger-|α| point": h at that endpoint,
+    // a_z = its α, wd = min(a_i, a_j)².  Exact to ~e^-80; skips 60+ exp
+    // calls for the (dominant) cross-cluster candidate pairs.
+    if c > crate::kernel::EXP_NEG_CUTOFF {
+        let keep_i = a_i.abs() >= a_j.abs();
+        return PairMerge {
+            h: if keep_i { 1.0 } else { 0.0 },
+            a_z: if keep_i { a_i } else { a_j },
+            wd: a_i.abs().min(a_j.abs()).powi(2),
+        };
+    }
+    let (h, gabs) = if a_i * a_j >= 0.0 {
+        golden_max(0.0, 1.0, a_i, a_j, c, iters)
+    } else {
+        let l = golden_max(-1.0, 0.0, a_i, a_j, c, iters);
+        let r = golden_max(1.0, 2.0, a_i, a_j, c, iters);
+        if l.1 > r.1 {
+            l
+        } else {
+            r
+        }
+    };
+    let a_z = merge_objective(h, a_i, a_j, c);
+    let k_ij = (-c).exp();
+    let wd = a_i * a_i + a_j * a_j + 2.0 * a_i * a_j * k_ij - gabs * gabs;
+    PairMerge { h, a_z, wd }
+}
+
+/// Full binary merge of two points: returns (z, a_z, wd).
+pub fn merge_pair(
+    x_i: &[f32],
+    a_i: f64,
+    x_j: &[f32],
+    a_j: f64,
+    gamma: f64,
+    iters: usize,
+) -> (Vec<f32>, f64, f64) {
+    let d2 = crate::kernel::sq_dist(x_i, x_j);
+    let pm = merge_pair_params(a_i, a_j, gamma * d2, iters);
+    let z: Vec<f32> = x_i
+        .iter()
+        .zip(x_j)
+        .map(|(&xi, &xj)| (pm.h * xi as f64 + (1.0 - pm.h) * xj as f64) as f32)
+        .collect();
+    (z, pm.a_z, pm.wd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_points_merge_exactly() {
+        let x = [1.0f32, -2.0];
+        let (z, a_z, wd) = merge_pair(&x, 0.7, &x, 0.3, 2.0, GS_ITERS);
+        assert_eq!(z, x.to_vec());
+        assert!((a_z - 1.0).abs() < 1e-9);
+        assert!(wd.abs() < 1e-9);
+    }
+
+    #[test]
+    fn symmetric_same_sign_merge_is_midpoint() {
+        // equal coefficients, symmetric problem -> h = 0.5
+        let pm = merge_pair_params(0.5, 0.5, 1.0, GS_ITERS);
+        assert!((pm.h - 0.5).abs() < 1e-6, "h={}", pm.h);
+        assert!(pm.wd >= 0.0);
+    }
+
+    #[test]
+    fn same_sign_h_in_unit_interval() {
+        for &(a, b, c) in &[(0.1, 0.9, 0.3), (1.0, 0.2, 5.0), (0.4, 0.4, 50.0)] {
+            let pm = merge_pair_params(a, b, c, GS_ITERS);
+            assert!((0.0..=1.0).contains(&pm.h), "h={} out of [0,1]", pm.h);
+        }
+    }
+
+    #[test]
+    fn opposite_sign_h_outside_unit_interval() {
+        let pm = merge_pair_params(1.0, -0.3, 0.8, GS_ITERS);
+        assert!(pm.h <= 0.0 || pm.h >= 1.0, "h={}", pm.h);
+    }
+
+    #[test]
+    fn beats_removal() {
+        // Merging must never be worse than removing the smaller-|α| point
+        // (removal = the h=1 endpoint, a_z = a_i + a_j k_ij projection is
+        // at least as good because golden section includes the endpoints'
+        // neighbourhood).  Compare against the exact removal degradation
+        // ‖a_j φ_j − (a_z−a_i)…‖: use wd(removal of j) = a_j²(1−k²) form.
+        for &(a_i, a_j, c) in &[(0.05, 0.8, 0.5), (0.3, 0.4, 2.0), (0.2, -0.7, 1.0)] {
+            let pm = merge_pair_params(a_i, a_j, c, GS_ITERS);
+            // removal of the point with smaller |α| keeps the other; its
+            // degradation (best reachable with h at an endpoint, α_z free)
+            let k = (-c as f64).exp();
+            let small = a_i.abs().min(a_j.abs());
+            let big = a_i.abs().max(a_j.abs());
+            let _ = big;
+            let wd_removal = small * small * (1.0 - k * k);
+            assert!(
+                pm.wd <= wd_removal + 1e-9,
+                "merge wd {} > removal wd {} (a_i={a_i}, a_j={a_j}, c={c})",
+                pm.wd,
+                wd_removal
+            );
+        }
+    }
+
+    #[test]
+    fn degradation_nonnegative() {
+        let mut cases = Vec::new();
+        for i in 0..20 {
+            let a_i = (i as f64 - 10.0) / 7.0 + 0.01;
+            for j in 0..10 {
+                cases.push((a_i, (j as f64 - 5.0) / 3.0 + 0.02, 0.1 * (j + 1) as f64));
+            }
+        }
+        for (a_i, a_j, c) in cases {
+            let pm = merge_pair_params(a_i, a_j, c, GS_ITERS);
+            assert!(pm.wd > -1e-9, "wd={} for ({a_i},{a_j},{c})", pm.wd);
+        }
+    }
+
+    #[test]
+    fn far_points_keep_dominant() {
+        // c -> large: merging ≈ keeping the bigger-|α| point (h near its end)
+        let pm = merge_pair_params(0.1, 0.9, 500.0, GS_ITERS);
+        assert!(pm.h < 0.2, "h={} should approach 0 (keep x_j side)", pm.h);
+        assert!((pm.a_z - 0.9).abs() < 0.05);
+    }
+
+    #[test]
+    fn merge_point_on_connecting_line() {
+        let x_i = [0.0f32, 0.0];
+        let x_j = [2.0f32, 2.0];
+        let (z, _, _) = merge_pair(&x_i, 0.4, &x_j, 0.6, 1.0, GS_ITERS);
+        assert!((z[0] - z[1]).abs() < 1e-6, "z={z:?} not on the diagonal");
+    }
+}

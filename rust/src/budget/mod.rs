@@ -1,0 +1,246 @@
+//! Budget maintenance — the paper's contribution lives here.
+//!
+//! When a BSGD step would push the number of support vectors past the
+//! budget `B`, a maintenance strategy reduces the store back to `B` with
+//! the smallest possible weight degradation `‖Δ‖² = ‖w' − w‖²`:
+//!
+//! * [`Removal`]     — drop the smallest-|α| SV (Wang et al. baseline;
+//!   known to oscillate).
+//! * [`Projection`]  — drop + project onto the survivors (O(B³)).
+//! * [`MultiMerge`]  — the paper: fix the smallest-|α| SV, score all B
+//!   pairs with golden-section search (one Θ(B·K·G) scoring pass — the
+//!   bottleneck this paper amortizes), keep the best `M−1` partners, and
+//!   merge all `M` points.  `M = 2` is exactly classic BSGD merging;
+//!   `M > 2` is multi-merge (Alg. 1 cascade or Alg. 2 gradient descent).
+//!
+//! All strategies implement [`Maintainer`] and are driven by the solver
+//! through [`Budget`].
+
+pub mod golden;
+mod multimerge;
+mod projection;
+mod removal;
+
+pub use multimerge::{MergeExec, MultiMerge};
+pub use projection::Projection;
+pub use removal::Removal;
+
+use crate::model::SvStore;
+use crate::runtime::Backend;
+
+/// Outcome of one maintenance invocation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MaintStats {
+    /// SVs removed from the store (multi-merge removes M−1 per event... plus
+    /// adds the merged point: net reduction M−1).
+    pub removed: usize,
+    /// Exact weight degradation ‖Δ‖² incurred by this event.
+    pub weight_degradation: f64,
+    /// Number of binary merge (or GD merge) operations executed.
+    pub merge_ops: usize,
+}
+
+/// A budget maintenance strategy.
+pub trait Maintainer {
+    /// Reduce `svs` so that `svs.len() <= budget`.  Called by the solver
+    /// immediately after an insertion overflows the budget.
+    fn maintain(
+        &mut self,
+        svs: &mut SvStore,
+        gamma: f64,
+        budget: usize,
+        backend: &mut dyn Backend,
+    ) -> MaintStats;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Which strategy to use (CLI/config surface).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MaintenanceKind {
+    Removal,
+    Projection,
+    /// Multi-merge with `m` mergees via a cascade of binary golden-section
+    /// merges (paper Alg. 1).  `m = 2` is the classic BSGD baseline.
+    Merge { m: usize },
+    /// Multi-merge with `m` mergees via joint gradient descent (Alg. 2).
+    MergeGd { m: usize },
+}
+
+impl MaintenanceKind {
+    pub fn build(self) -> Box<dyn Maintainer> {
+        match self {
+            MaintenanceKind::Removal => Box::new(Removal),
+            MaintenanceKind::Projection => Box::new(Projection::default()),
+            MaintenanceKind::Merge { m } => Box::new(MultiMerge::new(m, MergeExec::Cascade)),
+            MaintenanceKind::MergeGd { m } => {
+                Box::new(MultiMerge::new(m, MergeExec::GradientDescent))
+            }
+        }
+    }
+
+    /// Parse CLI spec: `removal`, `projection`, `merge` (=merge:2),
+    /// `merge:M`, `mergegd:M`.
+    pub fn parse(s: &str) -> Option<Self> {
+        let (head, m) = match s.split_once(':') {
+            Some((h, m)) => (h, m.parse::<usize>().ok()?),
+            None => (s, 2),
+        };
+        if m < 2 || m > 16 {
+            return None;
+        }
+        match head {
+            "removal" => Some(Self::Removal),
+            "projection" => Some(Self::Projection),
+            "merge" => Some(Self::Merge { m }),
+            "mergegd" => Some(Self::MergeGd { m }),
+            _ => None,
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            Self::Removal => "removal".into(),
+            Self::Projection => "projection".into(),
+            Self::Merge { m } => format!("merge:{m}"),
+            Self::MergeGd { m } => format!("mergegd:{m}"),
+        }
+    }
+}
+
+/// Budget policy + accumulated maintenance statistics for a run.
+pub struct Budget {
+    pub size: usize,
+    pub maintainer: Box<dyn Maintainer>,
+    /// Events triggered, total WD, total removed — the numbers behind
+    /// the paper's Fig. 1 and the theory's `E-bar` term.
+    pub events: u64,
+    pub total_wd: f64,
+    pub total_removed: u64,
+    pub total_merge_ops: u64,
+}
+
+impl Budget {
+    pub fn new(size: usize, kind: MaintenanceKind) -> Self {
+        assert!(size >= 2, "budget must be at least 2");
+        Self {
+            size,
+            maintainer: kind.build(),
+            events: 0,
+            total_wd: 0.0,
+            total_removed: 0,
+            total_merge_ops: 0,
+        }
+    }
+
+    /// Enforce the budget if exceeded; records stats. Returns true if a
+    /// maintenance event ran.
+    pub fn enforce(
+        &mut self,
+        svs: &mut SvStore,
+        gamma: f64,
+        backend: &mut dyn Backend,
+    ) -> bool {
+        if svs.len() <= self.size {
+            return false;
+        }
+        let stats = self.maintainer.maintain(svs, gamma, self.size, backend);
+        self.events += 1;
+        self.total_wd += stats.weight_degradation;
+        self.total_removed += stats.removed as u64;
+        self.total_merge_ops += stats.merge_ops as u64;
+        debug_assert!(svs.len() <= self.size, "maintainer failed to enforce budget");
+        true
+    }
+
+    /// Mean weight degradation per event (the `E` of Theorem 1 enters
+    /// through this).
+    pub fn mean_wd(&self) -> f64 {
+        if self.events == 0 {
+            0.0
+        } else {
+            self.total_wd / self.events as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    fn full_store(n: usize) -> SvStore {
+        let mut s = SvStore::new(2);
+        for i in 0..n {
+            let t = i as f32 * 0.37;
+            s.push(&[t.cos(), t.sin()], 0.1 + 0.05 * i as f64);
+        }
+        s
+    }
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!(MaintenanceKind::parse("removal"), Some(MaintenanceKind::Removal));
+        assert_eq!(MaintenanceKind::parse("merge"), Some(MaintenanceKind::Merge { m: 2 }));
+        assert_eq!(MaintenanceKind::parse("merge:5"), Some(MaintenanceKind::Merge { m: 5 }));
+        assert_eq!(
+            MaintenanceKind::parse("mergegd:3"),
+            Some(MaintenanceKind::MergeGd { m: 3 })
+        );
+        assert_eq!(MaintenanceKind::parse("merge:1"), None);
+        assert_eq!(MaintenanceKind::parse("merge:99"), None);
+        assert_eq!(MaintenanceKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn describe_roundtrips_through_parse() {
+        for kind in [
+            MaintenanceKind::Removal,
+            MaintenanceKind::Projection,
+            MaintenanceKind::Merge { m: 4 },
+            MaintenanceKind::MergeGd { m: 7 },
+        ] {
+            assert_eq!(MaintenanceKind::parse(&kind.describe()), Some(kind));
+        }
+    }
+
+    #[test]
+    fn enforce_noop_within_budget() {
+        let mut b = Budget::new(10, MaintenanceKind::Merge { m: 2 });
+        let mut svs = full_store(5);
+        let mut be = NativeBackend::new();
+        assert!(!b.enforce(&mut svs, 1.0, &mut be));
+        assert_eq!(b.events, 0);
+        assert_eq!(svs.len(), 5);
+    }
+
+    #[test]
+    fn enforce_every_kind_reduces_to_budget() {
+        for kind in [
+            MaintenanceKind::Removal,
+            MaintenanceKind::Projection,
+            MaintenanceKind::Merge { m: 2 },
+            MaintenanceKind::Merge { m: 4 },
+            MaintenanceKind::MergeGd { m: 3 },
+        ] {
+            let mut b = Budget::new(8, kind);
+            let mut svs = full_store(9);
+            let mut be = NativeBackend::new();
+            assert!(b.enforce(&mut svs, 0.5, &mut be), "{kind:?}");
+            assert!(svs.len() <= 8, "{kind:?} left {} SVs", svs.len());
+            assert_eq!(b.events, 1);
+            assert!(b.total_wd >= -1e-9, "{kind:?} negative wd {}", b.total_wd);
+        }
+    }
+
+    #[test]
+    fn multimerge_reduces_by_m_minus_one() {
+        // overflow of 1 with M=4: store drops from 12 to 9 (= 12-(M-1)),
+        // still <= budget 11; repeated enforcement not needed.
+        let mut b = Budget::new(11, MaintenanceKind::Merge { m: 4 });
+        let mut svs = full_store(12);
+        let mut be = NativeBackend::new();
+        b.enforce(&mut svs, 0.5, &mut be);
+        assert_eq!(svs.len(), 9);
+    }
+}

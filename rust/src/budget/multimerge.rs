@@ -1,0 +1,293 @@
+//! Multi-merge budget maintenance — the paper's contribution.
+//!
+//! One maintenance event (paper sec. 3):
+//!
+//! 1. Fix the first merge candidate: the SV with the smallest |α|.
+//! 2. Score every other SV as a merge partner — one Θ(B·K·G) pass of
+//!    golden-section searches (the classic bottleneck, executed through
+//!    [`Backend::merge_scores`], i.e. the vectorized Pallas kernel on
+//!    the XLA backend).
+//! 3. Keep the best `M−1` partners by pairwise weight degradation — the
+//!    information BSGD throws away; multi-merge re-uses it.
+//! 4. Merge all `M` points into one, either by
+//!    * [`MergeExec::Cascade`] — `M−1` sequential binary golden-section
+//!      merges, cheapest first (Alg. 1, footnote 1), or
+//!    * [`MergeExec::GradientDescent`] — a joint minimization of the
+//!      total degradation over `z` (Alg. 2).
+//!
+//! With `M = 2` and `Cascade` this is *exactly* the original BSGD
+//! merging of Wang et al. — the baseline of every experiment.
+
+use super::golden::{self, GS_ITERS};
+use super::{MaintStats, Maintainer};
+use crate::model::SvStore;
+use crate::runtime::{exact_multi_wd, Backend};
+
+/// How the selected M points are folded into one.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MergeExec {
+    /// Alg. 1: sequence of M−1 binary golden-section merges.
+    Cascade,
+    /// Alg. 2: joint gradient descent on the merged point.
+    GradientDescent,
+}
+
+pub struct MultiMerge {
+    /// Number of mergees M ≥ 2 (M = 2 ⇒ classic BSGD).
+    pub m: usize,
+    pub exec: MergeExec,
+    /// Reusable partner-index scratch (no allocation per event).
+    order: Vec<usize>,
+}
+
+impl MultiMerge {
+    pub fn new(m: usize, exec: MergeExec) -> Self {
+        assert!((2..=16).contains(&m), "mergees M must be in 2..=16, got {m}");
+        Self { m, exec, order: Vec::new() }
+    }
+
+    /// Select the best `take` partner indices by ascending pairwise wd.
+    /// Returns them *in increasing-wd order* (the cascade merges cheapest
+    /// first, per the paper's footnote 1).
+    fn select_partners(&mut self, wd: &[f64], take: usize) -> Vec<usize> {
+        self.order.clear();
+        self.order.extend((0..wd.len()).filter(|&j| wd[j].is_finite()));
+        let take = take.min(self.order.len());
+        // Partial selection then sort of the head: O(B + take log take).
+        if take < self.order.len() {
+            self.order
+                .select_nth_unstable_by(take, |&a, &b| wd[a].total_cmp(&wd[b]));
+        }
+        self.order.truncate(take);
+        self.order.sort_by(|&a, &b| wd[a].total_cmp(&wd[b]));
+        self.order.clone()
+    }
+}
+
+impl Maintainer for MultiMerge {
+    fn maintain(
+        &mut self,
+        svs: &mut SvStore,
+        gamma: f64,
+        budget: usize,
+        backend: &mut dyn Backend,
+    ) -> MaintStats {
+        let mut stats = MaintStats::default();
+        while svs.len() > budget && svs.len() >= 2 {
+            // (1) first candidate: smallest |α|.
+            let i = svs.min_abs_alpha().expect("nonempty");
+            // (2) the Θ(B·K·G) scoring pass.
+            let scores = backend.merge_scores(svs, gamma, i);
+            // (3) best M−1 partners.
+            let partners = self.select_partners(&scores.wd, self.m - 1);
+            if partners.is_empty() {
+                // Degenerate: nothing mergeable — fall back to removal.
+                let a = svs.alpha(i);
+                stats.weight_degradation += a * a;
+                svs.swap_remove(i);
+                stats.removed += 1;
+                continue;
+            }
+
+            // Snapshot the merge set for the exact-WD audit.
+            let merge_points: Vec<(Vec<f32>, f64)> = std::iter::once(i)
+                .chain(partners.iter().copied())
+                .map(|j| (svs.point(j).to_vec(), svs.alpha(j)))
+                .collect();
+
+            // (4) execute the merge.
+            let (z, a_z) = match self.exec {
+                MergeExec::Cascade => {
+                    // First binary merge reuses the scored (h, a_z) for
+                    // (i, partners[0]) — no extra golden section.
+                    let j0 = partners[0];
+                    let h = scores.h[j0];
+                    let mut z: Vec<f32> = svs
+                        .point(i)
+                        .iter()
+                        .zip(svs.point(j0))
+                        .map(|(&xi, &xj)| (h * xi as f64 + (1.0 - h) * xj as f64) as f32)
+                        .collect();
+                    let mut a_z = scores.a_z[j0];
+                    stats.merge_ops += 1;
+                    for &jk in &partners[1..] {
+                        let (z2, a2, _wd) = golden::merge_pair(
+                            &z,
+                            a_z,
+                            svs.point(jk),
+                            svs.alpha(jk),
+                            gamma,
+                            GS_ITERS,
+                        );
+                        z = z2;
+                        a_z = a2;
+                        stats.merge_ops += 1;
+                    }
+                    (z, a_z)
+                }
+                MergeExec::GradientDescent => {
+                    let pts: Vec<(&[f32], f64)> = merge_points
+                        .iter()
+                        .map(|(x, a)| (x.as_slice(), *a))
+                        .collect();
+                    let (z, a_z, _wd) = backend.merge_gd(&pts, gamma);
+                    stats.merge_ops += 1;
+                    (z, a_z)
+                }
+            };
+
+            // Exact degradation of the whole event (cascade returns only
+            // per-step estimates; the audit value is what Theorem 1 sees).
+            let pts: Vec<(&[f32], f64)> =
+                merge_points.iter().map(|(x, a)| (x.as_slice(), *a)).collect();
+            stats.weight_degradation += exact_multi_wd(&pts, &z, a_z, gamma).max(0.0);
+
+            // Remove merged SVs (descending index keeps indices valid
+            // under swap_remove), then insert the merged point.
+            let mut to_remove: Vec<usize> =
+                std::iter::once(i).chain(partners.iter().copied()).collect();
+            to_remove.sort_unstable_by(|a, b| b.cmp(a));
+            for j in to_remove {
+                svs.swap_remove(j);
+            }
+            svs.push(&z, a_z);
+            stats.removed += merge_points.len() - 1;
+        }
+        stats
+    }
+
+    fn name(&self) -> &'static str {
+        match self.exec {
+            MergeExec::Cascade => "multimerge-cascade",
+            MergeExec::GradientDescent => "multimerge-gd",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    fn clustered_store(n: usize) -> SvStore {
+        // two tight clusters: merges inside a cluster are cheap
+        let mut s = SvStore::new(2);
+        for i in 0..n {
+            let c = if i % 2 == 0 { 0.0f32 } else { 5.0 };
+            let eps = (i as f32) * 0.01;
+            s.push(&[c + eps, c - eps], 0.2 + 0.01 * i as f64);
+        }
+        s
+    }
+
+    #[test]
+    fn m2_reduces_by_one() {
+        let mut mm = MultiMerge::new(2, MergeExec::Cascade);
+        let mut svs = clustered_store(10);
+        let mut be = NativeBackend::new();
+        let stats = mm.maintain(&mut svs, 1.0, 9, &mut be);
+        assert_eq!(svs.len(), 9);
+        assert_eq!(stats.removed, 1);
+        assert_eq!(stats.merge_ops, 1);
+    }
+
+    #[test]
+    fn m5_reduces_by_four() {
+        let mut mm = MultiMerge::new(5, MergeExec::Cascade);
+        let mut svs = clustered_store(12);
+        let mut be = NativeBackend::new();
+        let stats = mm.maintain(&mut svs, 1.0, 11, &mut be);
+        assert_eq!(svs.len(), 8);
+        assert_eq!(stats.removed, 4);
+        assert_eq!(stats.merge_ops, 4);
+    }
+
+    #[test]
+    fn gd_exec_also_enforces() {
+        let mut mm = MultiMerge::new(3, MergeExec::GradientDescent);
+        let mut svs = clustered_store(9);
+        let mut be = NativeBackend::new();
+        let stats = mm.maintain(&mut svs, 1.0, 8, &mut be);
+        assert_eq!(svs.len(), 7);
+        assert_eq!(stats.merge_ops, 1);
+        assert!(stats.weight_degradation >= 0.0);
+    }
+
+    #[test]
+    fn partners_are_nearest_cluster_mates() {
+        // The smallest-|α| SV sits in cluster A; its selected partners
+        // must come from cluster A, not the far cluster.
+        let mut svs = SvStore::new(1);
+        svs.push(&[0.00], 0.01); // smallest |α| — candidate
+        svs.push(&[0.05], 0.5);
+        svs.push(&[0.10], 0.6);
+        svs.push(&[9.00], 0.2);
+        svs.push(&[9.10], 0.3);
+        let mut be = NativeBackend::new();
+        let mut mm = MultiMerge::new(3, MergeExec::Cascade);
+        let stats = mm.maintain(&mut svs, 1.0, 4, &mut be);
+        assert_eq!(svs.len(), 3);
+        // far-cluster SVs must be untouched
+        let mut far: Vec<f64> = (0..svs.len())
+            .filter(|&j| svs.point(j)[0] > 5.0)
+            .map(|j| svs.alpha(j))
+            .collect();
+        far.sort_by(f64::total_cmp);
+        assert_eq!(far, vec![0.2, 0.3]);
+        assert!(stats.weight_degradation < 0.05, "wd={}", stats.weight_degradation);
+    }
+
+    #[test]
+    fn merged_coefficient_mass_roughly_preserved() {
+        // same-sign tight cluster: α_z ≈ Σα (k ≈ 1 between all points)
+        let mut svs = SvStore::new(1);
+        for i in 0..4 {
+            svs.push(&[0.001 * i as f32], 0.25);
+        }
+        svs.push(&[100.0], 5.0); // spectator
+        let mut be = NativeBackend::new();
+        let mut mm = MultiMerge::new(4, MergeExec::Cascade);
+        mm.maintain(&mut svs, 1.0, 4, &mut be);
+        let total: f64 = svs.alphas_vec().iter().sum();
+        assert!((total - 6.0).abs() < 0.01, "mass {total}");
+    }
+
+    #[test]
+    fn select_partners_orders_by_wd() {
+        let mut mm = MultiMerge::new(4, MergeExec::Cascade);
+        let wd = vec![0.5, f64::INFINITY, 0.1, 0.9, 0.2];
+        let picked = mm.select_partners(&wd, 3);
+        assert_eq!(picked, vec![2, 4, 0]);
+    }
+
+    #[test]
+    fn select_partners_handles_fewer_than_take() {
+        let mut mm = MultiMerge::new(4, MergeExec::Cascade);
+        let wd = vec![f64::INFINITY, 0.3];
+        assert_eq!(mm.select_partners(&wd, 3), vec![1]);
+    }
+
+    #[test]
+    fn m2_cascade_matches_plain_golden_merge() {
+        // With M=2 the event must be exactly a single binary merge of the
+        // min-|α| SV with its best partner.
+        let mut svs = SvStore::new(1);
+        svs.push(&[0.0], 0.05);
+        svs.push(&[0.3], 0.7);
+        svs.push(&[2.0], 0.9);
+        let x_i = [0.0f32];
+        let x_j = [0.3f32];
+        let (z_want, a_want, _) = golden::merge_pair(&x_i, 0.05, &x_j, 0.7, 1.0, GS_ITERS);
+        let mut be = NativeBackend::new();
+        let mut mm = MultiMerge::new(2, MergeExec::Cascade);
+        mm.maintain(&mut svs, 1.0, 2, &mut be);
+        // find the merged SV (the one that is neither original survivor)
+        let merged: Vec<usize> = (0..svs.len())
+            .filter(|&j| svs.point(j)[0] != 2.0)
+            .collect();
+        assert_eq!(merged.len(), 1);
+        let j = merged[0];
+        assert!((svs.point(j)[0] - z_want[0]).abs() < 1e-6);
+        assert!((svs.alpha(j) - a_want).abs() < 1e-9);
+    }
+}

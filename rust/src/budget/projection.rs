@@ -1,0 +1,140 @@
+//! Projection baseline (Wang et al. 2012 §4.2): remove the smallest-|α|
+//! SV and project its feature-space term onto the span of the survivors.
+//!
+//! Solve `K δ = α_r k_r` where `K` is the survivors' Gram matrix and
+//! `k_r` the removed point's kernel column; add δ to the survivors'
+//! coefficients.  The weight degradation is
+//! `‖Δ‖² = α_r² (k_rr − k_rᵀ K⁻¹ k_r) = α_r² (1 − k_rᵀ δ/α_r)`.
+//!
+//! O(B³) per event — exactly why the paper dismisses it for large B; the
+//! ablation bench (`rust/benches/hot_paths.rs`) shows the crossover.
+
+use super::{MaintStats, Maintainer};
+use crate::kernel::{Gaussian, Kernel};
+use crate::linalg::Cholesky;
+use crate::model::SvStore;
+use crate::runtime::Backend;
+
+pub struct Projection {
+    /// Diagonal jitter for near-singular Gram matrices.
+    pub jitter: f64,
+}
+
+impl Default for Projection {
+    fn default() -> Self {
+        Self { jitter: 1e-8 }
+    }
+}
+
+impl Maintainer for Projection {
+    fn maintain(
+        &mut self,
+        svs: &mut SvStore,
+        gamma: f64,
+        budget: usize,
+        _backend: &mut dyn Backend,
+    ) -> MaintStats {
+        let kern = Gaussian::new(gamma);
+        let mut stats = MaintStats::default();
+        while svs.len() > budget {
+            let r = svs.min_abs_alpha().expect("nonempty");
+            let a_r = svs.alpha(r);
+            let x_r = svs.point(r).to_vec();
+            svs.swap_remove(r);
+            stats.removed += 1;
+            let b = svs.len();
+            if b == 0 {
+                stats.weight_degradation += a_r * a_r;
+                continue;
+            }
+            // Gram matrix of survivors + rhs.
+            let mut gram = vec![0.0f64; b * b];
+            for i in 0..b {
+                gram[i * b + i] = 1.0;
+                for j in (i + 1)..b {
+                    let k = kern.eval(svs.point(i), svs.point(j));
+                    gram[i * b + j] = k;
+                    gram[j * b + i] = k;
+                }
+            }
+            let k_r: Vec<f64> = (0..b).map(|j| kern.eval(svs.point(j), &x_r)).collect();
+            let rhs: Vec<f64> = k_r.iter().map(|&k| a_r * k).collect();
+            match Cholesky::factor(&gram, b, self.jitter) {
+                Ok(ch) => {
+                    let delta = ch.solve(&rhs);
+                    for (j, &d) in delta.iter().enumerate() {
+                        svs.add_alpha(j, d);
+                    }
+                    // ‖Δ‖² = α_r² − k_rᵀ δ · α_r  (exact for jitter → 0)
+                    let proj: f64 = k_r.iter().zip(&delta).map(|(&k, &d)| k * d).sum();
+                    stats.weight_degradation += (a_r * a_r - a_r * proj).max(0.0);
+                }
+                Err(_) => {
+                    // Degenerate Gram: fall back to plain removal.
+                    stats.weight_degradation += a_r * a_r;
+                }
+            }
+        }
+        stats
+    }
+
+    fn name(&self) -> &'static str {
+        "projection"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn projection_onto_duplicate_is_lossless() {
+        // The removed point coincides with a survivor: projection must
+        // absorb its coefficient exactly (wd ≈ 0).
+        let mut svs = SvStore::new(1);
+        svs.push(&[0.0], 1.0);
+        svs.push(&[5.0], 0.8);
+        svs.push(&[0.0], 0.3); // duplicate of SV 0, smallest |α|... no: 0.3 < 0.8 < 1.0
+        let mut be = NativeBackend::new();
+        let stats = Projection::default().maintain(&mut svs, 1.0, 2, &mut be);
+        assert_eq!(svs.len(), 2);
+        assert!(stats.weight_degradation < 1e-6, "wd={}", stats.weight_degradation);
+        // total coefficient mass at x=0 is preserved
+        let total: f64 = (0..2)
+            .filter(|&j| svs.point(j)[0] == 0.0)
+            .map(|j| svs.alpha(j))
+            .sum();
+        assert!((total - 1.3).abs() < 1e-6);
+    }
+
+    #[test]
+    fn projection_beats_removal_on_wd() {
+        let mut svs_p = SvStore::new(1);
+        let mut svs_r = SvStore::new(1);
+        for (x, a) in [(0.0, 0.9), (0.4, 0.1), (1.0, 0.8)] {
+            svs_p.push(&[x as f32], a);
+            svs_r.push(&[x as f32], a);
+        }
+        let mut be = NativeBackend::new();
+        let wd_p = Projection::default()
+            .maintain(&mut svs_p, 1.0, 2, &mut be)
+            .weight_degradation;
+        let wd_r = super::super::Removal
+            .maintain(&mut svs_r, 1.0, 2, &mut be)
+            .weight_degradation;
+        assert!(wd_p < wd_r, "projection {wd_p} should beat removal {wd_r}");
+    }
+
+    #[test]
+    fn empty_survivor_set_falls_back() {
+        let mut svs = SvStore::new(1);
+        svs.push(&[1.0], 0.5);
+        let mut be = NativeBackend::new();
+        // budget 0 is not allowed by Budget::new, but the maintainer
+        // itself handles it gracefully
+        let stats = Projection::default().maintain(&mut svs, 1.0, 0, &mut be);
+        assert_eq!(svs.len(), 0);
+        assert!((stats.weight_degradation - 0.25).abs() < 1e-12);
+    }
+}

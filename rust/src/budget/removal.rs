@@ -1,0 +1,74 @@
+//! Removal baseline: drop the SV with the smallest |α|.
+//!
+//! Wang et al. found this oscillates (the dropped point tends to be
+//! re-learned immediately, then dropped again); it is implemented as the
+//! baseline the paper contrasts merging against, and for
+//! `examples/compare_maintenance.rs`.
+
+use super::{MaintStats, Maintainer};
+use crate::model::SvStore;
+use crate::runtime::Backend;
+
+pub struct Removal;
+
+impl Maintainer for Removal {
+    fn maintain(
+        &mut self,
+        svs: &mut SvStore,
+        _gamma: f64,
+        budget: usize,
+        _backend: &mut dyn Backend,
+    ) -> MaintStats {
+        let mut stats = MaintStats::default();
+        while svs.len() > budget {
+            let i = svs.min_abs_alpha().expect("nonempty");
+            // Δ = α_i φ(x_i); ‖φ‖=1 for the Gaussian kernel.
+            let a = svs.alpha(i);
+            stats.weight_degradation += a * a;
+            svs.swap_remove(i);
+            stats.removed += 1;
+        }
+        stats
+    }
+
+    fn name(&self) -> &'static str {
+        "removal"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn removes_smallest_alpha() {
+        let mut svs = SvStore::new(1);
+        svs.push(&[0.0], 1.0);
+        svs.push(&[1.0], 0.01);
+        svs.push(&[2.0], -0.5);
+        let mut be = NativeBackend::new();
+        let stats = Removal.maintain(&mut svs, 1.0, 2, &mut be);
+        assert_eq!(svs.len(), 2);
+        assert_eq!(stats.removed, 1);
+        assert!((stats.weight_degradation - 0.01f64 * 0.01).abs() < 1e-12);
+        // remaining alphas are the two big ones
+        let mut alphas = svs.alphas_vec();
+        alphas.sort_by(f64::total_cmp);
+        assert_eq!(alphas, vec![-0.5, 1.0]);
+    }
+
+    #[test]
+    fn removes_multiple_if_needed() {
+        let mut svs = SvStore::new(1);
+        for i in 0..5 {
+            svs.push(&[i as f32], (i + 1) as f64 * 0.1);
+        }
+        let mut be = NativeBackend::new();
+        let stats = Removal.maintain(&mut svs, 1.0, 2, &mut be);
+        assert_eq!(svs.len(), 2);
+        assert_eq!(stats.removed, 3);
+        // wd = 0.1² + 0.2² + 0.3²
+        assert!((stats.weight_degradation - 0.14).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,203 @@
+//! A small TOML-subset parser (offline substrate — the `toml` crate is
+//! not vendored in this image).
+//!
+//! Supported: `[section]` headers, `key = value` with string
+//! (`"..."`), boolean, integer/float, and flat arrays of those.
+//! Comments (`# ...`) and blank lines are skipped.  This covers every
+//! config file this project ships; anything fancier errors loudly.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Section name → ordered (key, value) pairs.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, Vec<(String, TomlValue)>>,
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut current = String::new(); // root section = ""
+        for (n, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| TomlError { line: n + 1, msg: msg.to_string() };
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name.strip_suffix(']').ok_or_else(|| err("unterminated section"))?;
+                current = name.trim().to_string();
+                doc.sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or_else(|| err("expected key = value"))?;
+            let key = key.trim().to_string();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let value = parse_value(val.trim()).map_err(|m| err(&m))?;
+            doc.sections.entry(current.clone()).or_default().push((key, value));
+        }
+        Ok(doc)
+    }
+
+    pub fn section(&self, name: &str) -> Option<&[(String, TomlValue)]> {
+        self.sections.get(name).map(|v| v.as_slice())
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections
+            .get(section)?
+            .iter()
+            .rev() // later assignments win
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v)
+    }
+
+    pub fn section_names(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or("unterminated string")?;
+        if body.contains('"') {
+            return Err("embedded quotes unsupported".into());
+        }
+        return Ok(TomlValue::Str(body.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or("unterminated array")?;
+        let body = body.trim();
+        if body.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items = body
+            .split(',')
+            .map(|item| parse_value(item.trim()))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(TomlValue::Arr(items));
+    }
+    s.parse::<f64>()
+        .map(TomlValue::Num)
+        .map_err(|_| format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            "# top comment\nroot_key = 1\n[a]\nx = 1.5 # trailing\ns = \"hi # not comment\"\n\
+             flag = true\narr = [1, 2, 3]\n[b]\ny = -2\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "root_key").unwrap().as_f64(), Some(1.0));
+        assert_eq!(doc.get("a", "x").unwrap().as_f64(), Some(1.5));
+        assert_eq!(doc.get("a", "s").unwrap().as_str(), Some("hi # not comment"));
+        assert_eq!(doc.get("a", "flag").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("a", "arr").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(doc.get("b", "y").unwrap().as_f64(), Some(-2.0));
+    }
+
+    #[test]
+    fn later_assignment_wins() {
+        let doc = TomlDoc::parse("[s]\nk = 1\nk = 2\n").unwrap();
+        assert_eq!(doc.get("s", "k").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = TomlDoc::parse("[ok]\nbroken line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        assert!(TomlDoc::parse("[unterminated\n").is_err());
+        assert!(TomlDoc::parse("k = \"open\n").is_err());
+        assert!(TomlDoc::parse("k = [1, 2\n").is_err());
+    }
+
+    #[test]
+    fn empty_doc_and_empty_array() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert!(doc.section("x").is_none());
+        let doc = TomlDoc::parse("k = []\n").unwrap();
+        assert_eq!(doc.get("", "k").unwrap().as_arr().unwrap().len(), 0);
+    }
+}

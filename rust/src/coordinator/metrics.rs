@@ -1,0 +1,66 @@
+//! Metric serialization: run results → JSON for dashboards / plotting.
+
+use super::RunResult;
+use crate::util::json::{obj, Json};
+
+pub fn result_to_json(r: &RunResult) -> Json {
+    obj(vec![
+        ("name", Json::Str(r.name.clone())),
+        ("dataset", Json::Str(r.dataset.clone())),
+        ("budget", Json::Num(r.budget as f64)),
+        ("mergees", Json::Num(r.mergees as f64)),
+        ("maintenance", Json::Str(r.maintenance.clone())),
+        ("seed", Json::Num(r.seed as f64)),
+        ("train_seconds", Json::Num(r.train_seconds)),
+        ("merge_fraction", Json::Num(r.merge_fraction)),
+        ("test_accuracy", Json::Num(r.test_accuracy)),
+        ("n_svs", Json::Num(r.n_svs as f64)),
+        ("steps", Json::Num(r.steps as f64)),
+        ("margin_violations", Json::Num(r.margin_violations as f64)),
+        ("maintenance_events", Json::Num(r.maintenance_events as f64)),
+        ("mean_wd", Json::Num(r.mean_wd)),
+    ])
+}
+
+pub fn results_to_json(rs: &[RunResult]) -> Json {
+    Json::Arr(rs.iter().map(result_to_json).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake() -> RunResult {
+        RunResult {
+            name: "t".into(),
+            dataset: "adult".into(),
+            budget: 128,
+            mergees: 3,
+            maintenance: "merge:3".into(),
+            seed: 1,
+            train_seconds: 1.5,
+            merge_fraction: 0.4,
+            test_accuracy: 0.83,
+            n_svs: 128,
+            steps: 1000,
+            margin_violations: 700,
+            maintenance_events: 200,
+            mean_wd: 0.001,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let j = result_to_json(&fake());
+        let text = crate::util::json::to_string(&j);
+        let re = Json::parse(&text).unwrap();
+        assert_eq!(re.get("budget").unwrap().as_usize(), Some(128));
+        assert_eq!(re.get("maintenance").unwrap().as_str(), Some("merge:3"));
+    }
+
+    #[test]
+    fn array_serialization() {
+        let j = results_to_json(&[fake(), fake()]);
+        assert_eq!(j.as_arr().unwrap().len(), 2);
+    }
+}

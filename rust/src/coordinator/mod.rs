@@ -1,0 +1,206 @@
+//! Training coordinator: job specification, backend construction, a
+//! leader/worker pool for experiment grids, progress reporting and
+//! metric aggregation.
+//!
+//! The paper's experiments are *grids* — (dataset × B × M × seed) — of
+//! independent training runs.  The coordinator is the leader: it owns
+//! the job queue, hands jobs to worker threads over a channel, and
+//! aggregates [`RunResult`]s in deterministic job order regardless of
+//! completion order.  Each worker builds its own backend (PJRT clients
+//! and executable caches are per-worker — no shared mutable state on
+//! the hot path).
+
+mod metrics;
+mod progress;
+
+pub use metrics::{result_to_json, results_to_json};
+pub use progress::ProgressObserver;
+
+use crate::config::{BackendChoice, TrainConfig};
+use crate::data::synth::{dataset, SynthSpec};
+use crate::data::Split;
+use crate::runtime::{Backend, HybridBackend, NativeBackend, XlaBackend};
+use crate::solver::bsgd::{self, TrainOutput};
+use crate::solver::NoopObserver;
+use anyhow::Result;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// One training job.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    /// Job label (shows up in tables/CSV).
+    pub name: String,
+    /// Synthetic dataset spec (experiments use synth twins; the CLI can
+    /// also train on LIBSVM files, bypassing the grid path).
+    pub data: SynthSpec,
+    pub data_seed: u64,
+    pub cfg: TrainConfig,
+}
+
+/// Aggregated outcome of one job.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub name: String,
+    pub dataset: String,
+    pub budget: usize,
+    pub mergees: usize,
+    pub maintenance: String,
+    pub seed: u64,
+    pub train_seconds: f64,
+    pub merge_fraction: f64,
+    pub test_accuracy: f64,
+    pub n_svs: usize,
+    pub steps: u64,
+    pub margin_violations: u64,
+    pub maintenance_events: u64,
+    pub mean_wd: f64,
+}
+
+/// Build the backend named by the config.
+pub fn build_backend(choice: BackendChoice) -> Result<Box<dyn Backend>> {
+    Ok(match choice {
+        BackendChoice::Native => Box::new(NativeBackend::new()),
+        BackendChoice::Xla => Box::new(XlaBackend::from_default_dir()?),
+        BackendChoice::Hybrid => Box::new(HybridBackend::from_default_dir()?),
+    })
+}
+
+/// Execute one job end-to-end (generate data, train, evaluate).
+pub fn run_one(spec: &RunSpec) -> Result<RunResult> {
+    let split = dataset(&spec.data, spec.data_seed);
+    run_on_split(spec, &split)
+}
+
+/// Execute one job on pre-generated data (grid drivers reuse splits).
+pub fn run_on_split(spec: &RunSpec, split: &Split) -> Result<RunResult> {
+    let mut cfg = spec.cfg.clone();
+    cfg.resolve_c(split.train.len());
+    cfg.validate()?;
+    let mut backend = build_backend(cfg.backend)?;
+    let out: TrainOutput = bsgd::train_full(
+        &split.train,
+        &cfg,
+        backend.as_mut(),
+        Some(&split.test),
+        &mut NoopObserver,
+    );
+    let test_accuracy = bsgd::evaluate(&out.model, backend.as_mut(), &split.test);
+    Ok(RunResult {
+        name: spec.name.clone(),
+        dataset: spec.data.name.to_string(),
+        budget: cfg.budget,
+        mergees: cfg.mergees,
+        maintenance: cfg.maintenance_kind().describe(),
+        seed: cfg.seed,
+        train_seconds: out.train_seconds,
+        merge_fraction: out.merge_fraction(),
+        test_accuracy,
+        n_svs: out.model.svs.len(),
+        steps: out.steps,
+        margin_violations: out.margin_violations,
+        maintenance_events: out.maintenance_events,
+        mean_wd: out.mean_weight_degradation,
+    })
+}
+
+/// Run a grid of jobs on `threads` workers; results return in job order.
+///
+/// NOTE on timing fidelity: wall-clock comparisons across M (the paper's
+/// tables) must not be polluted by core contention, so experiment
+/// drivers that *time* runs call this with `threads = 1` and reserve
+/// parallelism for accuracy-only sweeps.
+pub fn run_grid(specs: Vec<RunSpec>, threads: usize) -> Vec<Result<RunResult>> {
+    let n = specs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return specs.iter().map(run_one).collect();
+    }
+    let queue = Arc::new(Mutex::new(specs.into_iter().enumerate().collect::<Vec<_>>()));
+    let (tx, rx) = mpsc::channel::<(usize, Result<RunResult>)>();
+    let mut handles = Vec::new();
+    for _ in 0..threads {
+        let queue = Arc::clone(&queue);
+        let tx = tx.clone();
+        handles.push(std::thread::spawn(move || loop {
+            let job = queue.lock().unwrap().pop();
+            match job {
+                Some((idx, spec)) => {
+                    let res = run_one(&spec);
+                    if tx.send((idx, res)).is_err() {
+                        return;
+                    }
+                }
+                None => return,
+            }
+        }));
+    }
+    drop(tx);
+    let mut results: Vec<Option<Result<RunResult>>> = (0..n).map(|_| None).collect();
+    for (idx, res) in rx {
+        results[idx] = Some(res);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    results.into_iter().map(|r| r.expect("worker dropped a job")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec(name: &str, m: usize, seed: u64) -> RunSpec {
+        RunSpec {
+            name: name.into(),
+            data: SynthSpec::ijcnn_like(0.01),
+            data_seed: 1,
+            cfg: TrainConfig {
+                lambda: 1e-3,
+                gamma: 2.0,
+                budget: 24,
+                mergees: m,
+                seed,
+                ..TrainConfig::default()
+            },
+        }
+    }
+
+    #[test]
+    fn run_one_produces_sane_result() {
+        let r = run_one(&tiny_spec("t", 3, 1)).unwrap();
+        assert!(r.test_accuracy > 0.5);
+        assert!(r.n_svs <= 24);
+        assert!(r.train_seconds > 0.0);
+        assert_eq!(r.mergees, 3);
+        assert_eq!(r.maintenance, "merge:3");
+    }
+
+    #[test]
+    fn grid_preserves_job_order() {
+        let specs: Vec<RunSpec> =
+            (0..6).map(|i| tiny_spec(&format!("job{i}"), 2 + (i % 3), i as u64)).collect();
+        let results = run_grid(specs, 3);
+        assert_eq!(results.len(), 6);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.as_ref().unwrap().name, format!("job{i}"));
+        }
+    }
+
+    #[test]
+    fn grid_single_thread_equals_parallel() {
+        let mk = || (0..4).map(|i| tiny_spec(&format!("j{i}"), 2, 42)).collect::<Vec<_>>();
+        let seq = run_grid(mk(), 1);
+        let par = run_grid(mk(), 4);
+        for (a, b) in seq.iter().zip(&par) {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            // deterministic everything except wall-clock
+            assert_eq!(a.test_accuracy, b.test_accuracy);
+            assert_eq!(a.n_svs, b.n_svs);
+            assert_eq!(a.maintenance_events, b.maintenance_events);
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! Live progress reporting for interactive `mmbsgd train` runs.
+
+use crate::solver::Observer;
+use std::io::Write;
+use std::time::Instant;
+
+/// Prints a status line every `every` steps (stderr, overwriting).
+pub struct ProgressObserver {
+    every: u64,
+    started: Instant,
+    last_svs: usize,
+    events: u64,
+    quiet: bool,
+}
+
+impl ProgressObserver {
+    pub fn new(every: u64) -> Self {
+        Self { every: every.max(1), started: Instant::now(), last_svs: 0, events: 0, quiet: false }
+    }
+
+    pub fn quiet() -> Self {
+        let mut p = Self::new(u64::MAX);
+        p.quiet = true;
+        p
+    }
+}
+
+impl Observer for ProgressObserver {
+    fn on_step(&mut self, step: u64, n_svs: usize) {
+        self.last_svs = n_svs;
+        if !self.quiet && step % self.every == 0 {
+            let rate = step as f64 / self.started.elapsed().as_secs_f64().max(1e-9);
+            eprint!(
+                "\r[train] step {step}  svs {n_svs}  maint {}  {:.0} steps/s   ",
+                self.events, rate
+            );
+            let _ = std::io::stderr().flush();
+        }
+    }
+
+    fn on_maintenance(&mut self, event: u64, _total_wd: f64, _n_svs: usize) {
+        self.events = event;
+    }
+
+    fn on_eval(&mut self, step: u64, accuracy: f64) {
+        if !self.quiet {
+            eprintln!("\r[eval ] step {step}  accuracy {:.2}%          ", accuracy * 100.0);
+        }
+    }
+
+    fn on_epoch(&mut self, epoch: usize) {
+        if !self.quiet {
+            eprintln!("\r[epoch] {epoch}                                ");
+        }
+    }
+}

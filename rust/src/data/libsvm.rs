@@ -1,0 +1,160 @@
+//! LIBSVM sparse text format reader/writer.
+//!
+//! Format: one sample per line, `label index:value index:value ...` with
+//! 1-based, strictly increasing indices.  This is the distribution format
+//! of every dataset in the paper (ADULT = a9a, IJCNN = ijcnn1, ...), so
+//! users with the real files can run the experiments on them directly:
+//! `mmbsgd train --data path/to/a9a ...`.
+//!
+//! Labels: any positive number maps to +1, any non-positive to -1
+//! (the LIBSVM repo uses {+1,-1}, {1,0} and {1,2} conventions; {1,2}
+//! files should be converted by the caller — we map 2 to +1 and warn).
+
+use super::{Dataset, DenseMatrix};
+use anyhow::{bail, Context, Result};
+use std::fs;
+use std::path::Path;
+
+/// Parse LIBSVM text into a dense dataset.
+///
+/// `dim_hint`: pass `Some(d)` to force the feature dimension (needed when
+/// the test split contains higher indices than the train split); `None`
+/// infers the maximum index present.
+pub fn parse(text: &str, dim_hint: Option<usize>) -> Result<(Vec<Vec<(usize, f32)>>, Vec<f32>, usize)> {
+    let mut rows: Vec<Vec<(usize, f32)>> = Vec::new();
+    let mut labels: Vec<f32> = Vec::new();
+    let mut max_idx = 0usize;
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let lab: f32 = parts
+            .next()
+            .with_context(|| format!("line {}: missing label", ln + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad label", ln + 1))?;
+        let mut feats = Vec::new();
+        let mut prev = 0usize;
+        for tok in parts {
+            let (i, v) = tok
+                .split_once(':')
+                .with_context(|| format!("line {}: token '{tok}' lacks ':'", ln + 1))?;
+            let idx: usize = i
+                .parse()
+                .with_context(|| format!("line {}: bad index '{i}'", ln + 1))?;
+            if idx == 0 {
+                bail!("line {}: LIBSVM indices are 1-based, got 0", ln + 1);
+            }
+            if idx <= prev {
+                bail!("line {}: indices must be strictly increasing", ln + 1);
+            }
+            prev = idx;
+            let val: f32 = v
+                .parse()
+                .with_context(|| format!("line {}: bad value '{v}'", ln + 1))?;
+            max_idx = max_idx.max(idx);
+            feats.push((idx - 1, val));
+        }
+        rows.push(feats);
+        labels.push(if lab > 0.0 { 1.0 } else { -1.0 });
+    }
+    let dim = match dim_hint {
+        Some(d) => {
+            if max_idx > d {
+                bail!("dim_hint {d} smaller than max feature index {max_idx}");
+            }
+            d
+        }
+        None => max_idx,
+    };
+    Ok((rows, labels, dim))
+}
+
+/// Load a LIBSVM file into a dense [`Dataset`].
+pub fn load(path: &Path, dim_hint: Option<usize>) -> Result<Dataset> {
+    let text = fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let (rows, labels, dim) = parse(&text, dim_hint)?;
+    let mut x = DenseMatrix::zeros(rows.len(), dim);
+    for (r, feats) in rows.iter().enumerate() {
+        let row = x.row_mut(r);
+        for &(i, v) in feats {
+            row[i] = v;
+        }
+    }
+    Ok(Dataset::new(x, labels, path.display().to_string()))
+}
+
+/// Write a dataset in LIBSVM format (zeros omitted).
+pub fn write(ds: &Dataset) -> String {
+    let mut out = String::new();
+    for i in 0..ds.len() {
+        let s = ds.sample(i);
+        out.push_str(if s.y > 0.0 { "+1" } else { "-1" });
+        for (j, &v) in s.x.iter().enumerate() {
+            if v != 0.0 {
+                out.push_str(&format!(" {}:{}", j + 1, v));
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic() {
+        let text = "+1 1:0.5 3:1.5\n-1 2:2.0\n";
+        let (rows, labels, dim) = parse(text, None).unwrap();
+        assert_eq!(dim, 3);
+        assert_eq!(labels, vec![1.0, -1.0]);
+        assert_eq!(rows[0], vec![(0, 0.5), (2, 1.5)]);
+    }
+
+    #[test]
+    fn skips_comments_and_blank_lines() {
+        let text = "# header\n\n+1 1:1\n";
+        let (rows, ..) = parse(text, None).unwrap();
+        assert_eq!(rows.len(), 1);
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        assert!(parse("+1 0:1\n", None).is_err());
+    }
+
+    #[test]
+    fn rejects_decreasing_indices() {
+        assert!(parse("+1 3:1 2:1\n", None).is_err());
+    }
+
+    #[test]
+    fn dim_hint_conflict() {
+        assert!(parse("+1 5:1\n", Some(3)).is_err());
+        assert!(parse("+1 2:1\n", Some(5)).is_ok());
+    }
+
+    #[test]
+    fn roundtrip_via_write() {
+        use crate::data::DenseMatrix;
+        let x = DenseMatrix::from_rows(vec![vec![0.0, 1.5], vec![2.0, 0.0]]);
+        let ds = Dataset::new(x, vec![1.0, -1.0], "t");
+        let text = write(&ds);
+        let (rows, labels, dim) = parse(&text, Some(2)).unwrap();
+        assert_eq!(dim, 2);
+        assert_eq!(labels, vec![1.0, -1.0]);
+        assert_eq!(rows[0], vec![(1, 1.5)]);
+        assert_eq!(rows[1], vec![(0, 2.0)]);
+    }
+
+    #[test]
+    fn nonpositive_labels_map_to_minus_one() {
+        let (_, labels, _) = parse("0 1:1\n-3 1:1\n2 1:1\n", None).unwrap();
+        assert_eq!(labels, vec![-1.0, -1.0, 1.0]);
+    }
+}

@@ -1,0 +1,203 @@
+//! Data pipeline: storage, LIBSVM-format I/O, synthetic dataset
+//! generators matching the paper's benchmark datasets, scaling and
+//! splitting.
+//!
+//! The paper evaluates on PHISHING, WEB, ADULT, IJCNN and SKIN/NON-SKIN
+//! from the LIBSVM repository.  The build image is offline, so
+//! [`synth`] provides statistical twins (same n, d, class balance,
+//! comparable difficulty) — see DESIGN.md §3 for the substitution
+//! argument.  Real LIBSVM files are fully supported through [`libsvm`]
+//! whenever the user has them on disk.
+
+pub mod libsvm;
+pub mod scale;
+pub mod split;
+pub mod synth;
+
+/// Dense row-major matrix of `f32` features.
+///
+/// BSGD's hot loop streams full rows (kernel evaluations touch every
+/// feature), so a dense layout with contiguous rows is the right
+/// structure even for datasets distributed in sparse format; `d` is at
+/// most a few hundred for every workload in the paper.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    data: Vec<f32>,
+    rows: usize,
+    cols: usize,
+}
+
+impl DenseMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { data: vec![0.0; rows * cols], rows, cols }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f32>>) -> Self {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in &rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self { data, rows: r, cols: c }
+    }
+
+    pub fn from_vec(data: Vec<f32>, rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { data, rows, cols }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.cols);
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
+    /// Select a subset of rows into a new matrix.
+    pub fn gather(&self, idx: &[usize]) -> Self {
+        let mut out = Self::zeros(0, self.cols);
+        out.data.reserve(idx.len() * self.cols);
+        for &i in idx {
+            out.data.extend_from_slice(self.row(i));
+            out.rows += 1;
+        }
+        out
+    }
+}
+
+/// A labelled binary-classification sample view.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample<'a> {
+    pub x: &'a [f32],
+    pub y: f32, // -1.0 or +1.0
+}
+
+/// A labelled dataset: dense features + ±1 labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: DenseMatrix,
+    pub y: Vec<f32>,
+    /// Human-readable origin tag ("adult-synth", "path/to/file", ...).
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn new(x: DenseMatrix, y: Vec<f32>, name: impl Into<String>) -> Self {
+        assert_eq!(x.rows(), y.len(), "feature/label count mismatch");
+        for &l in &y {
+            assert!(l == 1.0 || l == -1.0, "labels must be ±1, got {l}");
+        }
+        Self { x, y, name: name.into() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    pub fn sample(&self, i: usize) -> Sample<'_> {
+        Sample { x: self.x.row(i), y: self.y[i] }
+    }
+
+    /// Fraction of positive labels.
+    pub fn positive_fraction(&self) -> f64 {
+        self.y.iter().filter(|&&l| l > 0.0).count() as f64 / self.len().max(1) as f64
+    }
+
+    /// Subset by row indices.
+    pub fn gather(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            x: self.x.gather(idx),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+            name: self.name.clone(),
+        }
+    }
+}
+
+/// A train/test split (paired with the generator/loader that made it).
+#[derive(Clone, Debug)]
+pub struct Split {
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_matrix_row_access() {
+        let m = DenseMatrix::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 2);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn gather_selects_rows() {
+        let m = DenseMatrix::from_rows(vec![vec![1.0], vec![2.0], vec![3.0]]);
+        let g = m.gather(&[2, 0]);
+        assert_eq!(g.row(0), &[3.0]);
+        assert_eq!(g.row(1), &[1.0]);
+    }
+
+    #[test]
+    fn push_row_grows() {
+        let mut m = DenseMatrix::zeros(0, 3);
+        m.push_row(&[1.0, 2.0, 3.0]);
+        assert_eq!(m.rows(), 1);
+        assert_eq!(m.row(0), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn dataset_rejects_bad_labels() {
+        let x = DenseMatrix::zeros(1, 1);
+        Dataset::new(x, vec![0.5], "bad");
+    }
+
+    #[test]
+    fn positive_fraction() {
+        let x = DenseMatrix::zeros(4, 1);
+        let d = Dataset::new(x, vec![1.0, 1.0, -1.0, 1.0], "t");
+        assert!((d.positive_fraction() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_rows_panic() {
+        DenseMatrix::from_rows(vec![vec![1.0], vec![1.0, 2.0]]);
+    }
+}

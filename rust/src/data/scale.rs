@@ -1,0 +1,142 @@
+//! Feature scaling.
+//!
+//! LIBSVM practice (and the paper's datasets as distributed) is features
+//! scaled to [-1, 1] or [0, 1].  The RBF bandwidth γ from Table 2 is only
+//! meaningful on comparable scales, so the synthetic twins and any
+//! user-supplied raw data go through the same scaler.
+
+use super::Dataset;
+
+/// Per-feature affine transform x' = (x - offset) * factor.
+#[derive(Clone, Debug)]
+pub struct Scaler {
+    pub offset: Vec<f32>,
+    pub factor: Vec<f32>,
+}
+
+impl Scaler {
+    /// Fit a [lo, hi] range scaler on the training data.
+    pub fn fit_range(ds: &Dataset, lo: f32, hi: f32) -> Self {
+        let d = ds.dim();
+        let mut min = vec![f32::INFINITY; d];
+        let mut max = vec![f32::NEG_INFINITY; d];
+        for i in 0..ds.len() {
+            for (j, &v) in ds.sample(i).x.iter().enumerate() {
+                min[j] = min[j].min(v);
+                max[j] = max[j].max(v);
+            }
+        }
+        let mut offset = vec![0.0; d];
+        let mut factor = vec![1.0; d];
+        for j in 0..d {
+            let span = max[j] - min[j];
+            if span > 0.0 && span.is_finite() {
+                factor[j] = (hi - lo) / span;
+                offset[j] = min[j] - lo / factor[j];
+            } else {
+                // constant feature: map to lo
+                factor[j] = 0.0;
+                offset[j] = min[j];
+            }
+        }
+        Self { offset, factor }
+    }
+
+    /// Fit standardization (zero mean, unit variance).
+    pub fn fit_standard(ds: &Dataset) -> Self {
+        let d = ds.dim();
+        let n = ds.len().max(1) as f64;
+        let mut mean = vec![0.0f64; d];
+        for i in 0..ds.len() {
+            for (j, &v) in ds.sample(i).x.iter().enumerate() {
+                mean[j] += v as f64;
+            }
+        }
+        for m in &mut mean {
+            *m /= n;
+        }
+        let mut var = vec![0.0f64; d];
+        for i in 0..ds.len() {
+            for (j, &v) in ds.sample(i).x.iter().enumerate() {
+                let c = v as f64 - mean[j];
+                var[j] += c * c;
+            }
+        }
+        let offset = mean.iter().map(|&m| m as f32).collect();
+        let factor = var
+            .iter()
+            .map(|&v| {
+                let s = (v / n).sqrt();
+                if s > 1e-12 {
+                    (1.0 / s) as f32
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        Self { offset, factor }
+    }
+
+    /// Apply in place.
+    pub fn apply(&self, ds: &mut Dataset) {
+        for i in 0..ds.len() {
+            let row = ds.x.row_mut(i);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = (*v - self.offset[j]) * self.factor[j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DenseMatrix;
+
+    fn toy() -> Dataset {
+        let x = DenseMatrix::from_rows(vec![
+            vec![0.0, 10.0, 5.0],
+            vec![2.0, 20.0, 5.0],
+            vec![4.0, 30.0, 5.0],
+        ]);
+        Dataset::new(x, vec![1.0, -1.0, 1.0], "t")
+    }
+
+    #[test]
+    fn range_scaling_hits_bounds() {
+        let mut ds = toy();
+        let sc = Scaler::fit_range(&ds, -1.0, 1.0);
+        sc.apply(&mut ds);
+        for j in 0..2 {
+            let col: Vec<f32> = (0..3).map(|i| ds.sample(i).x[j]).collect();
+            let lo = col.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = col.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            assert!((lo + 1.0).abs() < 1e-6 && (hi - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn constant_feature_maps_to_lo_without_nan() {
+        let mut ds = toy();
+        let sc = Scaler::fit_range(&ds, 0.0, 1.0);
+        sc.apply(&mut ds);
+        for i in 0..3 {
+            assert_eq!(ds.sample(i).x[2], 0.0);
+            assert!(ds.sample(i).x.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut ds = toy();
+        let sc = Scaler::fit_standard(&ds);
+        sc.apply(&mut ds);
+        for j in 0..2 {
+            let col: Vec<f64> = (0..3).map(|i| ds.sample(i).x[j] as f64).collect();
+            let m = col.iter().sum::<f64>() / 3.0;
+            let v = col.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / 3.0;
+            assert!(m.abs() < 1e-6);
+            assert!((v - 1.0).abs() < 1e-5);
+        }
+    }
+}

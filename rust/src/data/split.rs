@@ -1,0 +1,112 @@
+//! Train/test splitting and cross-validation folds.
+
+use super::{Dataset, Split};
+use crate::rng::Xoshiro256;
+
+/// Shuffle indices and carve off `n_test` points for testing.
+pub fn train_test(ds: &Dataset, n_test: usize, seed: u64) -> Split {
+    assert!(n_test < ds.len(), "test size {n_test} >= dataset {}", ds.len());
+    let mut idx: Vec<usize> = (0..ds.len()).collect();
+    let mut rng = Xoshiro256::new(seed);
+    rng.shuffle(&mut idx);
+    let (test_idx, train_idx) = idx.split_at(n_test);
+    Split { train: ds.gather(train_idx), test: ds.gather(test_idx) }
+}
+
+/// K-fold cross-validation index sets: returns `k` (train, valid) pairs.
+pub fn kfold(n: usize, k: usize, seed: u64) -> Vec<(Vec<usize>, Vec<usize>)> {
+    assert!(k >= 2 && k <= n, "bad fold count k={k} for n={n}");
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = Xoshiro256::new(seed);
+    rng.shuffle(&mut idx);
+    let mut folds = Vec::with_capacity(k);
+    for f in 0..k {
+        let lo = f * n / k;
+        let hi = (f + 1) * n / k;
+        let valid: Vec<usize> = idx[lo..hi].to_vec();
+        let train: Vec<usize> =
+            idx[..lo].iter().chain(idx[hi..].iter()).copied().collect();
+        folds.push((train, valid));
+    }
+    folds
+}
+
+/// Stratified subsample preserving the class balance (used to scale the
+/// experiments down while keeping the positive fraction intact).
+pub fn stratified_subsample(ds: &Dataset, n: usize, seed: u64) -> Dataset {
+    if n >= ds.len() {
+        return ds.clone();
+    }
+    let mut pos: Vec<usize> = (0..ds.len()).filter(|&i| ds.y[i] > 0.0).collect();
+    let mut neg: Vec<usize> = (0..ds.len()).filter(|&i| ds.y[i] < 0.0).collect();
+    let mut rng = Xoshiro256::new(seed);
+    rng.shuffle(&mut pos);
+    rng.shuffle(&mut neg);
+    let frac = n as f64 / ds.len() as f64;
+    let n_pos = ((pos.len() as f64) * frac).round() as usize;
+    let n_pos = n_pos.min(n).min(pos.len());
+    let n_neg = (n - n_pos).min(neg.len());
+    let mut keep: Vec<usize> = pos[..n_pos].to_vec();
+    keep.extend_from_slice(&neg[..n_neg]);
+    keep.sort_unstable();
+    ds.gather(&keep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DenseMatrix;
+
+    fn toy(n: usize) -> Dataset {
+        let x = DenseMatrix::from_rows((0..n).map(|i| vec![i as f32]).collect());
+        let y = (0..n).map(|i| if i % 4 == 0 { 1.0 } else { -1.0 }).collect();
+        Dataset::new(x, y, "toy")
+    }
+
+    #[test]
+    fn split_partitions() {
+        let ds = toy(100);
+        let s = train_test(&ds, 25, 1);
+        assert_eq!(s.train.len(), 75);
+        assert_eq!(s.test.len(), 25);
+        // all original feature values present exactly once
+        let mut seen: Vec<i64> = s
+            .train
+            .x
+            .as_slice()
+            .iter()
+            .chain(s.test.x.as_slice())
+            .map(|&v| v as i64)
+            .collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..100).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn kfold_covers_everything() {
+        let folds = kfold(103, 5, 7);
+        assert_eq!(folds.len(), 5);
+        let mut all_valid: Vec<usize> =
+            folds.iter().flat_map(|(_, v)| v.clone()).collect();
+        all_valid.sort_unstable();
+        assert_eq!(all_valid, (0..103).collect::<Vec<usize>>());
+        for (tr, va) in &folds {
+            assert_eq!(tr.len() + va.len(), 103);
+        }
+    }
+
+    #[test]
+    fn stratified_preserves_balance() {
+        let ds = toy(400); // 25% positive
+        let sub = stratified_subsample(&ds, 100, 3);
+        assert_eq!(sub.len(), 100);
+        assert!((sub.positive_fraction() - 0.25).abs() < 0.03);
+    }
+
+    #[test]
+    fn stratified_noop_when_larger() {
+        let ds = toy(10);
+        let sub = stratified_subsample(&ds, 50, 3);
+        assert_eq!(sub.len(), 10);
+    }
+}

@@ -1,0 +1,336 @@
+//! Synthetic statistical twins of the paper's benchmark datasets.
+//!
+//! The image is offline, so the five LIBSVM-repository datasets the paper
+//! evaluates on are substituted with generators matched on the statistics
+//! that drive BSGD's cost structure and merging behaviour (DESIGN.md §3):
+//!
+//! * n (train size), d (feature count), class balance;
+//! * *difficulty*: a Gaussian-mixture class-conditional structure whose
+//!   Bayes error is calibrated so that a full RBF-SVM lands near the
+//!   paper's Table 2 accuracy — this controls the margin-violation rate
+//!   and hence the number of support vectors, which is what budget
+//!   maintenance actually reacts to.
+//!
+//! Each class is a mixture of `clusters` Gaussians placed on a scaled
+//! hypersphere; a fraction `label_noise` of points get flipped labels
+//! (irreducible error ≈ the gap between 100 % and the paper's LIBSVM
+//! accuracy), and `overlap` scales the cluster radius relative to the
+//! inter-cluster distance (reducible-but-hard error).
+
+use super::{Dataset, DenseMatrix, Split};
+use crate::rng::Xoshiro256;
+
+/// Specification of a synthetic binary-classification dataset.
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub name: &'static str,
+    /// Total points; split into train/test with `test_fraction`.
+    pub n: usize,
+    pub dim: usize,
+    pub test_fraction: f64,
+    /// Gaussian clusters per class.
+    pub clusters: usize,
+    /// Cluster std relative to unit placement radius (difficulty knob).
+    pub overlap: f64,
+    /// Fraction of labels flipped after generation (irreducible error).
+    pub label_noise: f64,
+    /// Fraction of positive samples.
+    pub positive_fraction: f64,
+    /// Paper's tuned hyperparameters (Table 2), reused by experiments.
+    pub c: f64,
+    pub gamma: f64,
+    /// Paper's LIBSVM reference accuracy (Table 2), for reporting.
+    pub paper_accuracy: f64,
+}
+
+impl SynthSpec {
+    /// PHISHING twin: 8 315 × 68, LIBSVM 97.55 %, C=8, γ=8.
+    pub fn phishing_like(scale: f64) -> Self {
+        Self {
+            name: "phishing",
+            n: (8_315 as f64 * scale) as usize,
+            dim: 68,
+            test_fraction: 0.25,
+            clusters: 6,
+            overlap: 0.40,
+            label_noise: 0.015,
+            positive_fraction: 0.56,
+            c: 8.0,
+            gamma: 8.0,
+            paper_accuracy: 0.9755,
+        }
+    }
+
+    /// WEB (w8a-like) twin: 17 188 × 300, LIBSVM 98.80 %, C=8, γ=0.03.
+    pub fn web_like(scale: f64) -> Self {
+        Self {
+            name: "web",
+            n: (17_188 as f64 * scale) as usize,
+            dim: 300,
+            test_fraction: 0.25,
+            clusters: 8,
+            overlap: 0.45,
+            label_noise: 0.008,
+            positive_fraction: 0.03,
+            c: 8.0,
+            gamma: 0.03,
+            paper_accuracy: 0.9880,
+        }
+    }
+
+    /// ADULT (a9a) twin: 32 561 × 123, LIBSVM 84.82 %, C=32, γ=0.008.
+    ///
+    /// ADULT is the noisy one — ~15 % irreducible error is what makes its
+    /// full SVM huge (≈ 11 k SVs) and budget maintenance interesting.
+    pub fn adult_like(scale: f64) -> Self {
+        Self {
+            name: "adult",
+            n: (32_561 as f64 * scale) as usize,
+            dim: 123,
+            test_fraction: 0.25,
+            clusters: 10,
+            overlap: 0.85,
+            label_noise: 0.10,
+            positive_fraction: 0.24,
+            c: 32.0,
+            gamma: 0.008,
+            paper_accuracy: 0.8482,
+        }
+    }
+
+    /// IJCNN twin: 49 990 × 22, LIBSVM 98.77 %, C=32, γ=2.
+    pub fn ijcnn_like(scale: f64) -> Self {
+        Self {
+            name: "ijcnn",
+            n: (49_990 as f64 * scale) as usize,
+            dim: 22,
+            test_fraction: 0.25,
+            clusters: 12,
+            overlap: 0.50,
+            label_noise: 0.008,
+            positive_fraction: 0.10,
+            c: 32.0,
+            gamma: 2.0,
+            paper_accuracy: 0.9877,
+        }
+    }
+
+    /// SKIN/NON-SKIN twin: 164 788 × 3, LIBSVM 98.96 %, C=8, γ=0.03.
+    pub fn skin_like(scale: f64) -> Self {
+        Self {
+            name: "skin",
+            n: (164_788 as f64 * scale) as usize,
+            dim: 3,
+            test_fraction: 0.25,
+            clusters: 4,
+            overlap: 0.35,
+            label_noise: 0.008,
+            positive_fraction: 0.21,
+            c: 8.0,
+            gamma: 0.03,
+            paper_accuracy: 0.9896,
+        }
+    }
+
+    /// All five paper datasets in the paper's Table 2 order.
+    pub fn paper_suite(scale: f64) -> Vec<Self> {
+        vec![
+            Self::phishing_like(scale),
+            Self::web_like(scale),
+            Self::adult_like(scale),
+            Self::ijcnn_like(scale),
+            Self::skin_like(scale),
+        ]
+    }
+
+    /// Look up by name (CLI surface).
+    pub fn by_name(name: &str, scale: f64) -> Option<Self> {
+        match name {
+            "phishing" => Some(Self::phishing_like(scale)),
+            "web" => Some(Self::web_like(scale)),
+            "adult" => Some(Self::adult_like(scale)),
+            "ijcnn" => Some(Self::ijcnn_like(scale)),
+            "skin" => Some(Self::skin_like(scale)),
+            _ => None,
+        }
+    }
+}
+
+/// Generate the full dataset and split it. Deterministic in `seed`.
+pub fn dataset(spec: &SynthSpec, seed: u64) -> Split {
+    let mut rng = Xoshiro256::new(seed ^ 0x5e ^ hash_name(spec.name));
+    let n = spec.n.max(8);
+    let d = spec.dim;
+
+    // Place cluster centers for both classes on a unit hypersphere; the
+    // RBF-SVM-relevant geometry is relative (gamma rescales distances).
+    let total_clusters = spec.clusters * 2;
+    let mut centers: Vec<Vec<f64>> = Vec::with_capacity(total_clusters);
+    for _ in 0..total_clusters {
+        let mut c: Vec<f64> = (0..d).map(|_| rng.next_gaussian()).collect();
+        let norm = c.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-12);
+        for v in &mut c {
+            *v /= norm;
+        }
+        centers.push(c);
+    }
+    // Average nearest-center distance sets the overlap scale.
+    let mut nn = f64::INFINITY;
+    for i in 0..total_clusters {
+        for j in (i + 1)..total_clusters {
+            let d2: f64 = centers[i]
+                .iter()
+                .zip(&centers[j])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            nn = nn.min(d2.sqrt());
+        }
+    }
+    // Per-coordinate noise scaled by 1/√d so the cluster *radius*
+    // (σ·√d in expectation) is `overlap · nn/2` in every dimension —
+    // otherwise high-d clusters (WEB d=300) swamp their separation.
+    let sigma = spec.overlap * nn / (2.0 * (d as f64).sqrt());
+
+    let mut x = DenseMatrix::zeros(n, d);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let pos = rng.next_f64() < spec.positive_fraction;
+        let class = if pos { 0 } else { 1 };
+        let k = rng.next_below(spec.clusters);
+        let center = &centers[class * spec.clusters + k];
+        let row = x.row_mut(i);
+        for (j, c) in center.iter().enumerate() {
+            row[j] = (c + sigma * rng.next_gaussian()) as f32;
+        }
+        let mut label = if pos { 1.0 } else { -1.0 };
+        if rng.next_f64() < spec.label_noise {
+            label = -label;
+        }
+        y.push(label);
+    }
+
+    // --- kernel-scale calibration -------------------------------------
+    // The paper's γ values (Table 2) were tuned on the real datasets'
+    // coordinate scales.  Rescale the synthetic coordinates so that
+    // γ · median(‖x−x'‖²) ≈ 5 over random pairs: the tuned γ is then,
+    // by construction, a *sensible* bandwidth for the twin — random
+    // pairs are near-orthogonal in feature space (k ≈ e⁻⁵), while
+    // same-cluster neighbours (d² a few times smaller) stay strongly
+    // correlated.  Neither a constant kernel (γd² ≈ 0) nor a delta
+    // kernel (γd² ≫ 1) — the regime real RBF-SVM tuning lands in.
+    let mut d2s: Vec<f64> = Vec::with_capacity(512);
+    for _ in 0..512 {
+        let i = rng.next_below(n);
+        let j = rng.next_below(n);
+        if i == j {
+            continue;
+        }
+        let (ri, rj) = (x.row(i), x.row(j));
+        d2s.push(
+            ri.iter()
+                .zip(rj)
+                .map(|(&a, &b)| ((a - b) as f64) * ((a - b) as f64))
+                .sum(),
+        );
+    }
+    d2s.sort_by(f64::total_cmp);
+    let median_d2 = d2s[d2s.len() / 2].max(1e-12);
+    let scale_factor = (5.0 / (spec.gamma * median_d2)).sqrt() as f32;
+    for v in 0..n {
+        for c in x.row_mut(v) {
+            *c *= scale_factor;
+        }
+    }
+
+    let ds = Dataset::new(x, y, format!("{}-synth", spec.name));
+    let n_test = ((n as f64) * spec.test_fraction) as usize;
+    super::split::train_test(&ds, n_test, seed ^ 0x7e57)
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a — stable tiny hash so different datasets decorrelate seeds.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let spec = SynthSpec::ijcnn_like(0.01);
+        let a = dataset(&spec, 3);
+        let b = dataset(&spec, 3);
+        assert_eq!(a.train.x, b.train.x);
+        assert_eq!(a.train.y, b.train.y);
+    }
+
+    #[test]
+    fn seeds_change_data() {
+        let spec = SynthSpec::ijcnn_like(0.01);
+        let a = dataset(&spec, 3);
+        let b = dataset(&spec, 4);
+        assert_ne!(a.train.x, b.train.x);
+    }
+
+    #[test]
+    fn sizes_and_dims_match_spec() {
+        let spec = SynthSpec::phishing_like(0.1);
+        let split = dataset(&spec, 1);
+        let total = split.train.len() + split.test.len();
+        assert_eq!(total, spec.n);
+        assert_eq!(split.train.dim(), 68);
+        let frac = split.test.len() as f64 / total as f64;
+        assert!((frac - spec.test_fraction).abs() < 0.01);
+    }
+
+    #[test]
+    fn class_balance_near_spec() {
+        let spec = SynthSpec::adult_like(0.2);
+        let split = dataset(&spec, 5);
+        let pf = split.train.positive_fraction();
+        // label_noise shifts the observed fraction slightly; wide check.
+        assert!((pf - 0.24).abs() < 0.08, "positive fraction {pf}");
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for s in SynthSpec::paper_suite(1.0) {
+            let again = SynthSpec::by_name(s.name, 1.0).unwrap();
+            assert_eq!(again.n, s.n);
+        }
+        assert!(SynthSpec::by_name("nope", 1.0).is_none());
+    }
+
+    #[test]
+    fn data_is_separable_better_than_chance() {
+        // 1-NN on a tiny slice must beat the majority class by a margin —
+        // i.e. the generator produces learnable structure, not noise.
+        let spec = SynthSpec::skin_like(0.005);
+        let split = dataset(&spec, 9);
+        let tr = &split.train;
+        let te = &split.test;
+        let mut correct = 0;
+        for i in 0..te.len().min(200) {
+            let q = te.sample(i);
+            let mut best = (f32::INFINITY, 0.0f32);
+            for j in 0..tr.len() {
+                let s = tr.sample(j);
+                let d2: f32 = q.x.iter().zip(s.x).map(|(a, b)| (a - b) * (a - b)).sum();
+                if d2 < best.0 {
+                    best = (d2, s.y);
+                }
+            }
+            if best.1 == q.y {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / te.len().min(200) as f64;
+        assert!(acc > 0.85, "1-NN accuracy {acc} too low — generator broken?");
+    }
+}

@@ -1,0 +1,147 @@
+//! Shared experiment machinery: options, budget grids, SV-count
+//! reference estimation, and result printing.
+
+use crate::config::{BackendChoice, TrainConfig};
+use crate::coordinator::{run_grid, RunResult, RunSpec};
+use crate::data::synth::SynthSpec;
+use crate::solver::smo::{self, SmoParams};
+use crate::util::table::Table;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Options shared by all experiment drivers (CLI surface).
+#[derive(Clone, Debug)]
+pub struct ExpOptions {
+    /// Dataset size multiplier (1.0 = paper size).  Experiments default
+    /// to CI-scale fractions; the driver prints the scale it used.
+    pub scale: f64,
+    /// Workers for accuracy-only sweeps (timed sweeps always run 1).
+    pub threads: usize,
+    /// Where CSVs land.
+    pub out_dir: PathBuf,
+    /// Backend for the runs.
+    pub backend: BackendChoice,
+    /// Base RNG seed.
+    pub seed: u64,
+    /// Epochs (paper: 1).
+    pub epochs: usize,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        Self {
+            scale: 0.05,
+            threads: default_threads(),
+            out_dir: PathBuf::from("results"),
+            backend: BackendChoice::Native,
+            seed: 1,
+            epochs: 1,
+        }
+    }
+}
+
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Paper budget fractions of the reference SV count (sec. 4.2):
+/// "roughly {1%, 5%, 10%, 15%, 25%, 50%}".
+pub const BUDGET_FRACTIONS: [f64; 6] = [0.01, 0.05, 0.10, 0.15, 0.25, 0.50];
+
+/// Estimate the full-SVM support-vector count for a dataset spec by
+/// solving a stratified subsample with SMO and extrapolating linearly
+/// (Steinwart 2003: #SV grows linearly in n).  Returns (n_sv_estimate,
+/// subsample_accuracy).
+pub fn reference_sv_count(spec: &SynthSpec, _scale: f64, seed: u64) -> Result<(usize, f64)> {
+    let split = crate::data::synth::dataset(spec, seed);
+    let cap = 1500usize.min(split.train.len());
+    let sub = crate::data::split::stratified_subsample(&split.train, cap, seed ^ 0xABCD);
+    let params = SmoParams { c: spec.c, gamma: spec.gamma, ..Default::default() };
+    let (model, stats) = smo::train(&sub, &params);
+    let acc = model.accuracy(&split.test);
+    let frac = stats.n_sv as f64 / sub.len() as f64;
+    let est = (frac * split.train.len() as f64).round() as usize;
+    Ok((est.max(8), acc))
+}
+
+/// Budgets for a dataset: paper fractions of the reference SV count,
+/// clamped to the artifact lattice maximum (4096) and deduplicated.
+pub fn budget_grid(n_sv_reference: usize) -> Vec<usize> {
+    let mut budgets: Vec<usize> = BUDGET_FRACTIONS
+        .iter()
+        .map(|f| ((n_sv_reference as f64 * f).round() as usize).clamp(8, 4096))
+        .collect();
+    budgets.dedup();
+    budgets
+}
+
+/// Build one RunSpec for a (dataset, B, M) grid point.
+pub fn spec_for(
+    data: &SynthSpec,
+    opts: &ExpOptions,
+    budget: usize,
+    mergees: usize,
+    seed: u64,
+) -> RunSpec {
+    RunSpec {
+        name: format!("{}-B{}-M{}", data.name, budget, mergees),
+        data: data.clone(),
+        data_seed: opts.seed,
+        cfg: TrainConfig {
+            lambda: -data.c, // C sentinel; resolved against train size
+            gamma: data.gamma,
+            budget,
+            mergees,
+            epochs: opts.epochs,
+            seed,
+            backend: opts.backend,
+            ..TrainConfig::default()
+        },
+    }
+}
+
+/// Run a grid, unwrap, keep order.  Timed experiments pass threads = 1.
+pub fn run_all(specs: Vec<RunSpec>, threads: usize) -> Result<Vec<RunResult>> {
+    run_grid(specs, threads).into_iter().collect()
+}
+
+/// Print + save a table under the experiment's name.
+pub fn emit(table: &Table, opts: &ExpOptions, name: &str) -> Result<()> {
+    println!("{}", table.render());
+    let path = table.save_csv(&opts.out_dir, name)?;
+    println!("[saved] {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_grid_shapes() {
+        let g = budget_grid(1000);
+        assert_eq!(g, vec![10, 50, 100, 150, 250, 500]);
+        // tiny reference clamps at 8 and dedups
+        let g = budget_grid(20);
+        assert!(g.iter().all(|&b| b >= 8));
+        assert!(g.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn reference_sv_count_runs_on_tiny_data() {
+        let spec = SynthSpec::ijcnn_like(0.01);
+        let (n_sv, acc) = reference_sv_count(&spec, 0.01, 1).unwrap();
+        assert!(n_sv >= 8);
+        assert!(acc > 0.6, "reference accuracy {acc}");
+    }
+
+    #[test]
+    fn spec_for_carries_paper_hparams() {
+        let data = SynthSpec::adult_like(0.01);
+        let opts = ExpOptions::default();
+        let s = spec_for(&data, &opts, 64, 3, 9);
+        assert_eq!(s.cfg.gamma, 0.008);
+        assert_eq!(s.cfg.lambda, -32.0); // C sentinel
+        assert_eq!(s.cfg.budget, 64);
+    }
+}

@@ -1,0 +1,51 @@
+//! Figure 1: fraction of training time spent merging, as a function of
+//! the number of mergees M, for budgets B ∈ {100, 500} on ADULT and
+//! IJCNN.
+//!
+//! Shape to reproduce: at M = 2 merging eats a large fraction (the
+//! paper measures ~45-85 % depending on budget); the fraction falls
+//! roughly like 1/(M−1) because one scoring pass now retires M−1
+//! margin-violating points.
+
+use super::common::{emit, run_all, spec_for, ExpOptions};
+use crate::data::synth::SynthSpec;
+use crate::util::table::{num, Table};
+use anyhow::Result;
+
+pub const PAPER_BUDGETS: [usize; 2] = [100, 500];
+pub const MERGEES: std::ops::RangeInclusive<usize> = 2..=11;
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    println!("== Figure 1: merge-time fraction vs M (scale={}) ==", opts.scale);
+    let datasets = [SynthSpec::adult_like(opts.scale), SynthSpec::ijcnn_like(opts.scale)];
+    let mut t = Table::new(&["dataset", "B", "M", "merge_fraction", "train_sec", "events"]);
+    for data in &datasets {
+        for &b_paper in &PAPER_BUDGETS {
+            let b = ((b_paper as f64 * opts.scale).round() as usize).clamp(8, 4096);
+            let specs: Vec<_> = MERGEES
+                .map(|m| spec_for(data, opts, b, m, opts.seed))
+                .collect();
+            // timed measurement — single worker
+            let results = run_all(specs, 1)?;
+            for r in &results {
+                t.row(vec![
+                    data.name.to_string(),
+                    b.to_string(),
+                    r.mergees.to_string(),
+                    num(r.merge_fraction, 4),
+                    num(r.train_seconds, 3),
+                    r.maintenance_events.to_string(),
+                ]);
+            }
+            let f2 = results[0].merge_fraction;
+            let f11 = results.last().unwrap().merge_fraction;
+            println!(
+                "[shape] {} B={b}: fraction M=2 {:.1}% -> M=11 {:.1}% (paper: falls sharply)",
+                data.name,
+                100.0 * f2,
+                100.0 * f11
+            );
+        }
+    }
+    emit(&t, opts, "fig1")
+}

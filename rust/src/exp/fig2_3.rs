@@ -1,0 +1,77 @@
+//! Figures 2 and 3: test accuracy (left) and training time (right) of
+//! multi-merge for M ∈ {2,3,4,5} across the paper's budget grid.
+//! Fig. 2 covers PHISHING / WEB / ADULT; Fig. 3 covers IJCNN / SKIN.
+//!
+//! Shapes to reproduce: training time falls systematically with M
+//! (log-scale time axis in the paper); accuracy is roughly monotone in
+//! B and shows no systematic degradation for moderate M.
+
+use super::common::{budget_grid, emit, reference_sv_count, run_all, spec_for, ExpOptions};
+use crate::data::synth::SynthSpec;
+use crate::util::table::{num, Table};
+use anyhow::Result;
+
+pub const MERGEES: [usize; 4] = [2, 3, 4, 5];
+
+pub fn run_figure(opts: &ExpOptions, fig: u8) -> Result<()> {
+    let datasets: Vec<SynthSpec> = match fig {
+        2 => vec![
+            SynthSpec::phishing_like(opts.scale),
+            SynthSpec::web_like(opts.scale),
+            SynthSpec::adult_like(opts.scale),
+        ],
+        3 => vec![SynthSpec::ijcnn_like(opts.scale), SynthSpec::skin_like(opts.scale)],
+        _ => anyhow::bail!("figure must be 2 or 3"),
+    };
+    println!("== Figure {fig}: accuracy & time vs B for M in 2..5 (scale={}) ==", opts.scale);
+    let mut t = Table::new(&[
+        "dataset", "B", "M", "accuracy_pct", "train_sec", "merge_fraction", "ref_acc_pct",
+    ]);
+    for data in &datasets {
+        let (n_sv, ref_acc) = reference_sv_count(data, opts.scale, opts.seed)?;
+        let budgets = budget_grid(n_sv);
+        println!(
+            "[{}] reference #SV={} -> budgets {:?} (exact acc {:.2}%)",
+            data.name,
+            n_sv,
+            budgets,
+            100.0 * ref_acc
+        );
+        let mut specs = Vec::new();
+        for &b in &budgets {
+            for &m in &MERGEES {
+                specs.push(spec_for(data, opts, b, m, opts.seed));
+            }
+        }
+        let results = run_all(specs, 1)?; // timed sweep
+        for r in &results {
+            t.row(vec![
+                data.name.to_string(),
+                r.budget.to_string(),
+                r.mergees.to_string(),
+                num(100.0 * r.test_accuracy, 2),
+                num(r.train_seconds, 3),
+                num(r.merge_fraction, 4),
+                num(100.0 * ref_acc, 2),
+            ]);
+        }
+        // Shape check: per budget, time(M=5) < time(M=2).
+        for &b in &budgets {
+            let tm = |m: usize| {
+                results
+                    .iter()
+                    .find(|r| r.budget == b && r.mergees == m)
+                    .map(|r| r.train_seconds)
+                    .unwrap_or(f64::NAN)
+            };
+            println!(
+                "[shape] {} B={b}: sec M=2 {:.3} vs M=5 {:.3} ({}x)",
+                data.name,
+                tm(2),
+                tm(5),
+                num(tm(2) / tm(5).max(1e-9), 2),
+            );
+        }
+    }
+    emit(&t, opts, &format!("fig{fig}"))
+}

@@ -1,0 +1,60 @@
+//! Figure 4: accuracy-vs-training-time trade-off on ADULT for
+//! M ∈ {2..11} across the budget grid, with the Pareto front of
+//! non-dominated (time, accuracy) points.
+//!
+//! Shape to reproduce: the paper's decisive observation — all M = 2
+//! (classic BSGD) runs sit *off* the Pareto front except at the largest
+//! budget; merging more points and re-investing the saved time into a
+//! larger budget dominates the baseline.
+
+use super::common::{budget_grid, emit, reference_sv_count, run_all, spec_for, ExpOptions};
+use crate::data::synth::SynthSpec;
+use crate::util::stats::pareto_front;
+use crate::util::table::{num, Table};
+use anyhow::Result;
+
+pub const MERGEES: std::ops::RangeInclusive<usize> = 2..=11;
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let data = SynthSpec::adult_like(opts.scale);
+    println!("== Figure 4: accuracy/time Pareto, ADULT (scale={}) ==", opts.scale);
+    let (n_sv, _) = reference_sv_count(&data, opts.scale, opts.seed)?;
+    let budgets = budget_grid(n_sv);
+    println!("[adult] reference #SV={} -> budgets {:?}", n_sv, budgets);
+
+    let mut specs = Vec::new();
+    for &b in &budgets {
+        for m in MERGEES {
+            specs.push(spec_for(&data, opts, b, m, opts.seed));
+        }
+    }
+    let results = run_all(specs, 1)?; // timed sweep
+
+    let times: Vec<f64> = results.iter().map(|r| r.train_seconds).collect();
+    let accs: Vec<f64> = results.iter().map(|r| r.test_accuracy).collect();
+    let front = pareto_front(&times, &accs);
+    let on_front = |i: usize| front.contains(&i);
+
+    let mut t = Table::new(&["B", "M", "train_sec", "accuracy_pct", "pareto"]);
+    for (i, r) in results.iter().enumerate() {
+        t.row(vec![
+            r.budget.to_string(),
+            r.mergees.to_string(),
+            num(r.train_seconds, 3),
+            num(100.0 * r.test_accuracy, 2),
+            if on_front(i) { "*".into() } else { "-".into() },
+        ]);
+    }
+    emit(&t, opts, "fig4")?;
+
+    // Shape check: how many Pareto points are baseline (M=2)?
+    let m2_on_front =
+        front.iter().filter(|&&i| results[i].mergees == 2).count();
+    println!(
+        "[shape] Pareto front has {} points, {} of them M=2 \
+         (paper: baseline off the front except at the largest budget)",
+        front.len(),
+        m2_on_front
+    );
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Figure 5: hyperparameter study on PHISHING — a 3×3 grid of (C, γ)
+//! with the tuned configuration (C=8, γ=8) at the center.  For each
+//! cell: the exact-solver accuracy (dashed line in the paper), plain
+//! BSGD (M=2), and multi-merge with M ∈ {3,4,5} across budgets tracking
+//! that cell's reference SV count.
+//!
+//! Shapes to reproduce: γ moves results much more than C; small γ is
+//! noisy for every method; multi-merge tracks plain BSGD across the
+//! whole grid (no systematic hyperparameter sensitivity of the method).
+
+use super::common::{budget_grid, emit, run_all, spec_for, ExpOptions};
+use crate::data::split::stratified_subsample;
+use crate::data::synth::SynthSpec;
+use crate::solver::smo::{self, SmoParams};
+use crate::util::table::{num, Table};
+use anyhow::Result;
+
+pub const C_GRID: [f64; 3] = [2.0, 8.0, 32.0];
+pub const GAMMA_GRID: [f64; 3] = [0.5, 8.0, 128.0];
+pub const MERGEES: [usize; 4] = [2, 3, 4, 5];
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let base = SynthSpec::phishing_like(opts.scale);
+    println!("== Figure 5: (C, gamma) study on PHISHING (scale={}) ==", opts.scale);
+    let split = crate::data::synth::dataset(&base, opts.seed);
+    let mut t = Table::new(&[
+        "C", "gamma", "B", "method", "M", "accuracy_pct", "train_sec", "exact_acc_pct",
+    ]);
+
+    for &gamma in &GAMMA_GRID {
+        for &c in &C_GRID {
+            // Exact reference for this cell (subsampled SMO).
+            let cap = 1200usize.min(split.train.len());
+            let sub = stratified_subsample(&split.train, cap, opts.seed ^ 0x51);
+            let (ref_model, stats) =
+                smo::train(&sub, &SmoParams { c, gamma, ..Default::default() });
+            let exact_acc = ref_model.accuracy(&split.test);
+            let n_sv_est = ((stats.n_sv as f64 / sub.len() as f64)
+                * split.train.len() as f64)
+                .round() as usize;
+            let budgets = budget_grid(n_sv_est.max(8));
+            println!(
+                "[cell C={c} gamma={gamma}] exact acc {:.2}%, est #SV {} -> budgets {:?}",
+                100.0 * exact_acc,
+                n_sv_est,
+                budgets
+            );
+
+            let mut data = base.clone();
+            data.c = c;
+            data.gamma = gamma;
+            let mut specs = Vec::new();
+            for &b in &budgets {
+                for &m in &MERGEES {
+                    specs.push(spec_for(&data, opts, b, m, opts.seed));
+                }
+            }
+            // Accuracy-focused sweep — parallel workers are fine here;
+            // the paper's Fig. 5 y-axis is accuracy only.
+            let results = run_all(specs, opts.threads)?;
+            for r in &results {
+                t.row(vec![
+                    num(c, 0),
+                    format!("{gamma}"),
+                    r.budget.to_string(),
+                    if r.mergees == 2 { "bsgd".into() } else { "mm".into() },
+                    r.mergees.to_string(),
+                    num(100.0 * r.test_accuracy, 2),
+                    num(r.train_seconds, 3),
+                    num(100.0 * exact_acc, 2),
+                ]);
+            }
+        }
+    }
+    emit(&t, opts, "fig5")
+}

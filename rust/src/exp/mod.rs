@@ -1,0 +1,13 @@
+//! Experiment drivers — one per table/figure of the paper.
+//! (Populated module-by-module; see DESIGN.md §4 for the index.)
+
+pub mod ablation;
+pub mod common;
+pub mod fig1;
+pub mod fig2_3;
+pub mod fig4;
+pub mod fig5;
+pub mod table1;
+pub mod table2;
+
+pub use common::ExpOptions;

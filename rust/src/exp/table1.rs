@@ -1,0 +1,87 @@
+//! Table 1: merging M=3 via the cascade (3→2→1, Alg. 1) vs joint
+//! gradient descent (3→1, Alg. 2) on ADULT — training seconds and test
+//! accuracy over budgets B ∈ {120, 600, 1200, 1800, 2500}.
+//!
+//! Paper finding to reproduce: GD is slightly faster, accuracies nearly
+//! equal — the merge *executor* does not matter much.
+
+use super::common::{emit, run_all, spec_for, ExpOptions};
+use crate::budget::MaintenanceKind;
+use crate::data::synth::SynthSpec;
+use crate::util::table::{num, Table};
+use anyhow::Result;
+
+pub const PAPER_BUDGETS: [usize; 5] = [120, 600, 1200, 1800, 2500];
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let data = SynthSpec::adult_like(opts.scale);
+    println!(
+        "== Table 1: 3->2->1 (Alg.1) vs 3->1 (Alg.2), ADULT scale={} ==",
+        opts.scale
+    );
+    // Budgets scale with the dataset so the maintenance pressure matches
+    // the paper's regime.
+    let budgets: Vec<usize> = PAPER_BUDGETS
+        .iter()
+        .map(|&b| ((b as f64 * opts.scale).round() as usize).clamp(8, 4096))
+        .collect();
+
+    let mut specs = Vec::new();
+    for &(kind, label) in &[
+        (MaintenanceKind::Merge { m: 3 }, "cascade"),
+        (MaintenanceKind::MergeGd { m: 3 }, "gd"),
+    ] {
+        for &b in &budgets {
+            let mut s = spec_for(&data, opts, b, 3, opts.seed);
+            s.cfg.maintenance = Some(kind);
+            s.name = format!("{label}-B{b}");
+            specs.push(s);
+        }
+    }
+    // Timed comparison: single-threaded.
+    let results = run_all(specs, 1)?;
+    let (cascade, gd) = results.split_at(budgets.len());
+
+    let mut header = vec!["B".to_string()];
+    header.extend(budgets.iter().map(|b| b.to_string()));
+    let mut t = Table::new(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    let row = |tag: &str, vals: Vec<String>| {
+        let mut r = vec![tag.to_string()];
+        r.extend(vals);
+        r
+    };
+    t.row(row(
+        "Merging (3->2->1) sec",
+        cascade.iter().map(|r| num(r.train_seconds, 3)).collect(),
+    ));
+    t.row(row(
+        "Merging (3->2->1) %",
+        cascade.iter().map(|r| num(100.0 * r.test_accuracy, 2)).collect(),
+    ));
+    t.row(row(
+        "Merging (3->1) sec",
+        gd.iter().map(|r| num(r.train_seconds, 3)).collect(),
+    ));
+    t.row(row(
+        "Merging (3->1) %",
+        gd.iter().map(|r| num(100.0 * r.test_accuracy, 2)).collect(),
+    ));
+    emit(&t, opts, "table1")?;
+
+    // Paper-shape check, printed for EXPERIMENTS.md.
+    let sec_c: f64 = cascade.iter().map(|r| r.train_seconds).sum();
+    let sec_g: f64 = gd.iter().map(|r| r.train_seconds).sum();
+    let max_acc_gap = cascade
+        .iter()
+        .zip(gd)
+        .map(|(a, b)| (a.test_accuracy - b.test_accuracy).abs())
+        .fold(0.0, f64::max);
+    println!(
+        "[shape] total sec cascade={:.3} gd={:.3} (paper: gd slightly faster); \
+         max |acc gap| = {:.2} pp (paper: nearly equal)",
+        sec_c,
+        sec_g,
+        100.0 * max_acc_gap
+    );
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! Table 2: dataset statistics, tuned hyperparameters, and the "exact"
+//! reference solution (our SMO stand-in for LIBSVM) per dataset.
+
+use super::common::{emit, reference_sv_count, ExpOptions};
+use crate::data::synth::SynthSpec;
+use crate::util::table::{num, Table};
+use anyhow::Result;
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    println!("== Table 2: datasets + exact-solver reference (scale={}) ==", opts.scale);
+    let mut t = Table::new(&[
+        "data set",
+        "size",
+        "# features",
+        "C",
+        "gamma",
+        "test acc (ours)",
+        "test acc (paper)",
+        "ref #SV (est)",
+    ]);
+    for spec in SynthSpec::paper_suite(opts.scale) {
+        let (n_sv, acc) = reference_sv_count(&spec, opts.scale, opts.seed)?;
+        t.row(vec![
+            spec.name.to_uppercase(),
+            spec.n.to_string(),
+            spec.dim.to_string(),
+            num(spec.c, 0),
+            format!("{}", spec.gamma),
+            num(100.0 * acc, 2),
+            num(100.0 * spec.paper_accuracy, 2),
+            n_sv.to_string(),
+        ]);
+    }
+    emit(&t, opts, "table2")
+}

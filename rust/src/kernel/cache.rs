@@ -1,0 +1,100 @@
+//! Kernel-row cache for the SMO reference solver.
+//!
+//! SMO repeatedly needs full kernel rows k(x_i, ·) for the pair of active
+//! indices; recomputing them dominates runtime.  This is a fixed-capacity
+//! LRU keyed by row index — the standard LIBSVM design, sized in rows
+//! rather than bytes for simplicity.
+
+use std::collections::HashMap;
+
+pub struct RowCache {
+    capacity: usize,
+    rows: HashMap<usize, (u64, Vec<f64>)>, // index -> (last-use tick, row)
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl RowCache {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        Self { capacity, rows: HashMap::new(), tick: 0, hits: 0, misses: 0 }
+    }
+
+    /// Fetch row `i`, computing it with `make` on a miss.
+    pub fn get(&mut self, i: usize, make: impl FnOnce() -> Vec<f64>) -> &[f64] {
+        self.tick += 1;
+        let tick = self.tick;
+        if self.rows.contains_key(&i) {
+            self.hits += 1;
+            let e = self.rows.get_mut(&i).unwrap();
+            e.0 = tick;
+            return &e.1;
+        }
+        self.misses += 1;
+        if self.rows.len() >= self.capacity {
+            // Evict least-recently-used.
+            let lru = *self
+                .rows
+                .iter()
+                .min_by_key(|(_, (t, _))| *t)
+                .map(|(k, _)| k)
+                .unwrap();
+            self.rows.remove(&lru);
+        }
+        self.rows.insert(i, (tick, make()));
+        &self.rows[&i].1
+    }
+
+    /// Drop every cached row (used after shrinking / alpha resets).
+    pub fn clear(&mut self) {
+        self.rows.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_after_miss() {
+        let mut c = RowCache::new(2);
+        let r = c.get(0, || vec![1.0, 2.0]).to_vec();
+        assert_eq!(r, vec![1.0, 2.0]);
+        let _ = c.get(0, || panic!("must be cached"));
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn evicts_lru() {
+        let mut c = RowCache::new(2);
+        c.get(0, || vec![0.0]);
+        c.get(1, || vec![1.0]);
+        c.get(0, || unreachable!()); // refresh 0
+        c.get(2, || vec![2.0]); // evicts 1
+        assert_eq!(c.len(), 2);
+        let mut recomputed = false;
+        c.get(1, || {
+            recomputed = true;
+            vec![1.0]
+        });
+        assert!(recomputed, "row 1 should have been evicted");
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut c = RowCache::new(4);
+        c.get(7, || vec![7.0]);
+        c.clear();
+        assert!(c.is_empty());
+    }
+}

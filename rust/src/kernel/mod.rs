@@ -1,0 +1,181 @@
+//! Kernel functions.
+//!
+//! The paper (and its merging math) is specific to the Gaussian kernel —
+//! merging relies on the pre-image of a sum of two Gaussians lying on the
+//! connecting line — so [`Gaussian`] is the kernel the solvers use.
+//! [`Linear`] and [`Polynomial`] exist for the SMO reference solver and
+//! for sanity baselines.
+
+mod cache;
+pub use cache::RowCache;
+
+/// A Mercer kernel over dense `f32` vectors.
+pub trait Kernel: Send + Sync {
+    fn eval(&self, a: &[f32], b: &[f32]) -> f64;
+
+    /// k(x, x) — 1.0 for the Gaussian; overridable for others.
+    fn self_eval(&self, a: &[f32]) -> f64 {
+        self.eval(a, a)
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+/// Squared euclidean distance (the single hottest scalar loop in the
+/// native backend; kept free of bounds checks via `chunks_exact`).
+///
+/// Perf note (EXPERIMENTS.md §Perf): 8 independent f32 lanes let LLVM
+/// emit one AVX2 8-wide FMA chain; the earlier 4-lane version pinned the
+/// loop to 128-bit vectors (~1.8× slower at d=128).
+#[inline]
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    const L: usize = 8;
+    let mut acc = [0.0f32; L];
+    let ca = a.chunks_exact(L);
+    let cb = b.chunks_exact(L);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        for l in 0..L {
+            let d = xa[l] - xb[l];
+            // plain mul+add: LLVM fuses to FMA when the target has it;
+            // f32::mul_add would fall back to a libm call when it doesn't
+            acc[l] += d * d;
+        }
+    }
+    let mut s = 0.0f32;
+    for l in 0..L {
+        s += acc[l];
+    }
+    let mut s = s as f64;
+    for (x, y) in ra.iter().zip(rb) {
+        let d = (x - y) as f64;
+        s += d * d;
+    }
+    s
+}
+
+/// Exponent threshold above which `exp(-e)` is treated as exactly zero
+/// on the native hot paths: `e^-40 ≈ 4e-18` is far below f32 resolution
+/// of any accumulated margin, and the guard skips the (dominant) `exp`
+/// call for far pairs — the common case on clustered data.
+pub const EXP_NEG_CUTOFF: f64 = 40.0;
+
+/// Gaussian (RBF) kernel `k(x,x') = exp(-gamma ||x-x'||^2)`.
+#[derive(Clone, Copy, Debug)]
+pub struct Gaussian {
+    pub gamma: f64,
+}
+
+impl Gaussian {
+    pub fn new(gamma: f64) -> Self {
+        assert!(gamma >= 0.0 && gamma.is_finite(), "bad gamma {gamma}");
+        Self { gamma }
+    }
+
+    /// Kernel value from a precomputed squared distance.
+    #[inline]
+    pub fn from_sq_dist(&self, d2: f64) -> f64 {
+        (-self.gamma * d2).exp()
+    }
+}
+
+impl Kernel for Gaussian {
+    #[inline]
+    fn eval(&self, a: &[f32], b: &[f32]) -> f64 {
+        self.from_sq_dist(sq_dist(a, b))
+    }
+
+    #[inline]
+    fn self_eval(&self, _a: &[f32]) -> f64 {
+        1.0
+    }
+
+    fn name(&self) -> &'static str {
+        "gaussian"
+    }
+}
+
+/// Linear kernel `k(x,x') = <x,x'>`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Linear;
+
+impl Kernel for Linear {
+    #[inline]
+    fn eval(&self, a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(&x, &y)| (x as f64) * (y as f64)).sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "linear"
+    }
+}
+
+/// Polynomial kernel `k(x,x') = (scale <x,x'> + offset)^degree`.
+#[derive(Clone, Copy, Debug)]
+pub struct Polynomial {
+    pub degree: u32,
+    pub scale: f64,
+    pub offset: f64,
+}
+
+impl Kernel for Polynomial {
+    fn eval(&self, a: &[f32], b: &[f32]) -> f64 {
+        let dot: f64 = Linear.eval(a, b);
+        (self.scale * dot + self.offset).powi(self.degree as i32)
+    }
+
+    fn name(&self) -> &'static str {
+        "polynomial"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sq_dist_matches_naive() {
+        let a: Vec<f32> = (0..37).map(|i| (i as f32) * 0.1).collect();
+        let b: Vec<f32> = (0..37).map(|i| (i as f32) * -0.05 + 1.0).collect();
+        let naive: f64 = a
+            .iter()
+            .zip(&b)
+            .map(|(&x, &y)| ((x - y) as f64) * ((x - y) as f64))
+            .sum();
+        assert!((sq_dist(&a, &b) - naive).abs() < 1e-6 * naive.max(1.0));
+    }
+
+    #[test]
+    fn gaussian_basics() {
+        let k = Gaussian::new(0.5);
+        let a = [1.0f32, 2.0];
+        let b = [2.0f32, 2.0];
+        assert!((k.eval(&a, &a) - 1.0).abs() < 1e-12);
+        assert!((k.eval(&a, &b) - (-0.5f64).exp()).abs() < 1e-9);
+        // symmetry
+        assert_eq!(k.eval(&a, &b), k.eval(&b, &a));
+    }
+
+    #[test]
+    fn gaussian_decreases_with_distance() {
+        let k = Gaussian::new(1.0);
+        let a = [0.0f32];
+        assert!(k.eval(&a, &[1.0]) > k.eval(&a, &[2.0]));
+    }
+
+    #[test]
+    fn linear_and_poly() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 4.0];
+        assert_eq!(Linear.eval(&a, &b), 11.0);
+        let p = Polynomial { degree: 2, scale: 1.0, offset: 1.0 };
+        assert_eq!(p.eval(&a, &b), 144.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn gaussian_rejects_nan_gamma() {
+        Gaussian::new(f64::NAN);
+    }
+}

@@ -1,0 +1,65 @@
+//! # mmbsgd — Multi-Merge Budget Maintenance for SGD SVM Training
+//!
+//! A production-grade reproduction of Qaadan & Glasmachers, *Multi-Merge
+//! Budget Maintenance for Stochastic Gradient Descent SVM Training*
+//! (cs.LG 2018), built as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the training coordinator: the BSGD solver with
+//!   pluggable budget maintenance (removal / projection / binary merge /
+//!   multi-merge cascade / MM-GD), data pipeline, SMO reference solver,
+//!   experiment harness regenerating every table and figure of the paper.
+//! * **L2 (python/compile/model.py)** — fixed-shape jax entry points
+//!   (margins, merge scoring, MM-GD) lowered once to HLO-text artifacts.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the masked RBF
+//!   margin matvec and the vectorized golden-section merge scorer (the
+//!   paper's Θ(B·K·G) bottleneck).
+//!
+//! Python never runs at training time: the [`runtime`] module loads the
+//! AOT artifacts through PJRT (`xla` crate) and the coordinator calls
+//! them from the hot path; [`runtime::NativeBackend`] is a pure-rust
+//! mirror used for tests, tiny problems, and perf baselines.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use mmbsgd::prelude::*;
+//!
+//! let ds = mmbsgd::data::synth::dataset(&SynthSpec::adult_like(1.0), 1);
+//! let cfg = TrainConfig {
+//!     lambda: 1.0 / (32.0 * ds.train.len() as f64),
+//!     gamma: 0.008,
+//!     budget: 256,
+//!     mergees: 4, // M: merge 4 SVs into 1 per maintenance event
+//!     epochs: 1,
+//!     ..TrainConfig::default()
+//! };
+//! let out = bsgd::train(&ds.train, &cfg);
+//! let acc = out.model.accuracy(&ds.test);
+//! println!("test accuracy {:.2}%", 100.0 * acc);
+//! ```
+
+pub mod budget;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod kernel;
+pub mod linalg;
+pub mod model;
+pub mod rng;
+pub mod runtime;
+pub mod solver;
+pub mod util;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::budget::{Budget, MaintenanceKind};
+    pub use crate::config::TrainConfig;
+    pub use crate::data::synth::SynthSpec;
+    pub use crate::data::{Dataset, DenseMatrix, Split};
+    pub use crate::kernel::Gaussian;
+    pub use crate::model::SvmModel;
+    pub use crate::rng::Xoshiro256;
+    pub use crate::runtime::{Backend, NativeBackend};
+    pub use crate::solver::bsgd;
+}

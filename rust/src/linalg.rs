@@ -1,0 +1,147 @@
+//! Small dense linear algebra for the projection baseline.
+//!
+//! The projection budget-maintenance strategy (Wang et al. 2012 §4.2)
+//! removes an SV and projects its feature-space contribution onto the
+//! remaining ones: solve `K a = k_r` where `K` is the (B×B) kernel Gram
+//! matrix of the survivors and `k_r` the removed point's kernel column.
+//! A Cholesky solve with jitter is exactly what LIBSVM-era codes used.
+
+/// Dense column-major symmetric positive (semi-)definite solver state.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    l: Vec<f64>, // lower-triangular factor, row-major n×n
+    n: usize,
+}
+
+/// Error: the (jittered) Gram matrix was not positive definite.
+#[derive(Debug)]
+pub struct NotPosDef(pub String);
+
+impl std::fmt::Display for NotPosDef {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "matrix not positive definite: {}", self.0)
+    }
+}
+impl std::error::Error for NotPosDef {}
+
+impl Cholesky {
+    /// Factor a symmetric PSD matrix (row-major n×n), adding `jitter` to
+    /// the diagonal (Gram matrices of near-duplicate SVs are rank
+    /// deficient; LIBSVM uses the same trick).
+    pub fn factor(a: &[f64], n: usize, jitter: f64) -> Result<Self, NotPosDef> {
+        assert_eq!(a.len(), n * n);
+        let mut l = vec![0.0f64; n * n];
+        for j in 0..n {
+            let mut diag = a[j * n + j] + jitter;
+            for k in 0..j {
+                diag -= l[j * n + k] * l[j * n + k];
+            }
+            if diag <= 0.0 || !diag.is_finite() {
+                return Err(NotPosDef(format!("pivot {j}: {diag}")));
+            }
+            let dsqrt = diag.sqrt();
+            l[j * n + j] = dsqrt;
+            for i in (j + 1)..n {
+                let mut v = a[i * n + j];
+                for k in 0..j {
+                    v -= l[i * n + k] * l[j * n + k];
+                }
+                l[i * n + j] = v / dsqrt;
+            }
+        }
+        Ok(Self { l, n })
+    }
+
+    /// Solve `A x = b` via forward/back substitution.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        assert_eq!(b.len(), self.n);
+        let n = self.n;
+        let l = &self.l;
+        // L y = b
+        let mut y = vec![0.0f64; n];
+        for i in 0..n {
+            let mut v = b[i];
+            for k in 0..i {
+                v -= l[i * n + k] * y[k];
+            }
+            y[i] = v / l[i * n + i];
+        }
+        // L^T x = y
+        let mut x = vec![0.0f64; n];
+        for i in (0..n).rev() {
+            let mut v = y[i];
+            for k in (i + 1)..n {
+                v -= l[k * n + i] * x[k];
+            }
+            x[i] = v / l[i * n + i];
+        }
+        x
+    }
+}
+
+/// Dense symmetric matvec `y = A x` (row-major n×n).
+pub fn symv(a: &[f64], n: usize, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(x.len(), n);
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let row = &a[i * n..(i + 1) * n];
+        y[i] = row.iter().zip(x).map(|(&aij, &xj)| aij * xj).sum();
+    }
+    y
+}
+
+/// Quadratic form `x^T A x`.
+pub fn quad_form(a: &[f64], n: usize, x: &[f64]) -> f64 {
+    symv(a, n, x).iter().zip(x).map(|(&yi, &xi)| yi * xi).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spd3() -> Vec<f64> {
+        // A = M^T M + I for M random-ish: guaranteed SPD.
+        vec![
+            4.0, 1.0, 2.0, //
+            1.0, 3.0, 0.5, //
+            2.0, 0.5, 5.0,
+        ]
+    }
+
+    #[test]
+    fn solve_recovers_rhs() {
+        let a = spd3();
+        let ch = Cholesky::factor(&a, 3, 0.0).unwrap();
+        let x_true = vec![1.0, -2.0, 0.5];
+        let b = symv(&a, 3, &x_true);
+        let x = ch.solve(&b);
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn jitter_rescues_singular() {
+        // Rank-1 matrix; fails without jitter, factors with it.
+        let a = vec![1.0, 1.0, 1.0, 1.0];
+        assert!(Cholesky::factor(&a, 2, 0.0).is_err());
+        assert!(Cholesky::factor(&a, 2, 1e-6).is_ok());
+    }
+
+    #[test]
+    fn quad_form_matches_manual() {
+        let a = spd3();
+        let x = vec![1.0, 1.0, 1.0];
+        // sum of all entries
+        let expect: f64 = a.iter().sum();
+        assert!((quad_form(&a, 3, &x) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn identity_solve_is_identity() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let ch = Cholesky::factor(&a, 2, 0.0).unwrap();
+        assert_eq!(ch.solve(&[3.0, 4.0]), vec![3.0, 4.0]);
+    }
+}

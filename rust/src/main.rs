@@ -1,0 +1,343 @@
+//! `mmbsgd` — CLI launcher for multi-merge BSGD SVM training.
+//!
+//! Subcommands:
+//!   train       train a model on a synthetic twin or a LIBSVM file
+//!   evaluate    accuracy of a saved model on a dataset
+//!   predict     label a LIBSVM file with a saved model
+//!   experiment  regenerate a paper table/figure (table1, table2,
+//!               fig1, fig2, fig3, fig4, fig5, all)
+//!   artifacts   list the AOT artifact registry
+//!
+//! The argument parser is first-party (offline image: no clap); flags
+//! are `--key value` or `--flag`.
+
+use anyhow::{anyhow, bail, Context, Result};
+use mmbsgd::budget::MaintenanceKind;
+use mmbsgd::config::{BackendChoice, TomlDoc, TrainConfig};
+use mmbsgd::coordinator::{build_backend, ProgressObserver};
+use mmbsgd::data::synth::SynthSpec;
+use mmbsgd::data::{libsvm, split, Split};
+use mmbsgd::exp::{self, ExpOptions};
+use mmbsgd::model::SvmModel;
+use mmbsgd::solver::bsgd;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Minimal `--key value` / `--flag` argument map.
+struct Args {
+    cmd: String,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let cmd = argv.first().cloned().unwrap_or_else(|| "help".into());
+        let mut values = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut it = argv[1.min(argv.len())..].iter().peekable();
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got {a:?}"))?;
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    values.insert(key.to_string(), it.next().unwrap().clone());
+                }
+                _ => flags.push(key.to_string()),
+            }
+        }
+        Ok(Self { cmd, values, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            Some(v) => v.parse::<T>().map_err(|_| anyhow!("bad --{key} value {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+fn load_split(args: &Args) -> Result<Split> {
+    let scale: f64 = args.get_parse("scale", 0.05)?;
+    let seed: u64 = args.get_parse("data-seed", 1)?;
+    let name = args.get("dataset").unwrap_or("adult");
+    if let Some(spec) = SynthSpec::by_name(name, scale) {
+        return Ok(mmbsgd::data::synth::dataset(&spec, seed));
+    }
+    // Otherwise treat as a LIBSVM file path; hold out 25 % for testing
+    // unless a --test file is given.
+    let ds = libsvm::load(Path::new(name), None)
+        .with_context(|| format!("--dataset {name:?} is neither a synth name nor a readable file"))?;
+    if let Some(test_path) = args.get("test") {
+        let test = libsvm::load(Path::new(test_path), Some(ds.dim()))?;
+        Ok(Split { train: ds, test })
+    } else {
+        let n_test = ds.len() / 4;
+        Ok(split::train_test(&ds, n_test, seed))
+    }
+}
+
+fn train_config(args: &Args, split: &Split) -> Result<TrainConfig> {
+    let mut cfg = TrainConfig::default();
+    // Dataset presets (Table 2 hyperparameters) when the name is synth.
+    if let Some(spec) = args
+        .get("dataset")
+        .and_then(|n| SynthSpec::by_name(n, 1.0))
+    {
+        cfg.lambda = TrainConfig::lambda_from_c(spec.c, split.train.len());
+        cfg.gamma = spec.gamma;
+    }
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?;
+        let doc = TomlDoc::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        cfg.apply_toml(&doc)?;
+    }
+    if let Some(c) = args.get("c") {
+        cfg.lambda = TrainConfig::lambda_from_c(c.parse()?, split.train.len());
+    }
+    if let Some(l) = args.get("lambda") {
+        cfg.lambda = l.parse()?;
+    }
+    cfg.gamma = args.get_parse("gamma", cfg.gamma)?;
+    cfg.budget = args.get_parse("budget", cfg.budget)?;
+    cfg.mergees = args.get_parse("mergees", cfg.mergees)?;
+    cfg.epochs = args.get_parse("epochs", cfg.epochs)?;
+    cfg.seed = args.get_parse("seed", cfg.seed)?;
+    cfg.eval_every = args.get_parse("eval-every", cfg.eval_every)?;
+    if let Some(m) = args.get("maintenance") {
+        cfg.maintenance =
+            Some(MaintenanceKind::parse(m).with_context(|| format!("bad --maintenance {m:?}"))?);
+    }
+    if let Some(b) = args.get("backend") {
+        cfg.backend =
+            BackendChoice::parse(b).with_context(|| format!("bad --backend {b:?}"))?;
+    }
+    cfg.resolve_c(split.train.len());
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let split = load_split(args)?;
+    let cfg = train_config(args, &split)?;
+    println!(
+        "[train] {} train={} test={} d={} | B={} M={} maint={} λ={:.3e} γ={} backend={:?}",
+        split.train.name,
+        split.train.len(),
+        split.test.len(),
+        split.train.dim(),
+        cfg.budget,
+        cfg.mergees,
+        cfg.maintenance_kind().describe(),
+        cfg.lambda,
+        cfg.gamma,
+        cfg.backend,
+    );
+    let mut backend = build_backend(cfg.backend)?;
+    let mut obs = if args.has("quiet") {
+        ProgressObserver::quiet()
+    } else {
+        ProgressObserver::new(1000)
+    };
+    let out = bsgd::train_full(&split.train, &cfg, backend.as_mut(), Some(&split.test), &mut obs);
+    let acc = bsgd::evaluate(&out.model, backend.as_mut(), &split.test);
+    println!();
+    println!(
+        "[done ] {:.3}s | steps {} | violations {} | maint events {} | mean wd {:.3e}",
+        out.train_seconds,
+        out.steps,
+        out.margin_violations,
+        out.maintenance_events,
+        out.mean_weight_degradation
+    );
+    println!(
+        "[done ] merge fraction {:.1}% | SVs {} | test accuracy {:.2}%",
+        100.0 * out.merge_fraction(),
+        out.model.svs.len(),
+        100.0 * acc
+    );
+    if let Some(path) = args.get("save") {
+        out.model.save(Path::new(path))?;
+        println!("[saved] {path}");
+    }
+    Ok(())
+}
+
+fn cmd_evaluate(args: &Args) -> Result<()> {
+    let model_path = args.get("model").context("--model required")?;
+    let model = SvmModel::load(Path::new(model_path))?;
+    let split = load_split(args)?;
+    let acc = model.accuracy(&split.test);
+    println!(
+        "[eval ] model {} ({} SVs) on {}: accuracy {:.2}%",
+        model_path,
+        model.svs.len(),
+        split.test.name,
+        100.0 * acc
+    );
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let model_path = args.get("model").context("--model required")?;
+    let input = args.get("input").context("--input required")?;
+    let model = SvmModel::load(Path::new(model_path))?;
+    let ds = libsvm::load(Path::new(input), Some(model.svs.dim()))?;
+    for i in 0..ds.len() {
+        let f = model.decision(ds.sample(i).x);
+        println!("{} {f:.6}", if f >= 0.0 { "+1" } else { "-1" });
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args.get("id").or_else(|| args.get("name")).unwrap_or("all");
+    let opts = ExpOptions {
+        scale: args.get_parse("scale", 0.05)?,
+        threads: args.get_parse("threads", exp::common::default_threads())?,
+        out_dir: PathBuf::from(args.get("out-dir").unwrap_or("results")),
+        backend: BackendChoice::parse(args.get("backend").unwrap_or("native"))
+            .context("bad --backend")?,
+        seed: args.get_parse("seed", 1)?,
+        epochs: args.get_parse("epochs", 1)?,
+    };
+    let run = |id: &str| -> Result<()> {
+        match id {
+            "table1" => exp::table1::run(&opts),
+            "table2" => exp::table2::run(&opts),
+            "fig1" => exp::fig1::run(&opts),
+            "fig2" => exp::fig2_3::run_figure(&opts, 2),
+            "fig3" => exp::fig2_3::run_figure(&opts, 3),
+            "fig4" => exp::fig4::run(&opts),
+            "fig5" => exp::fig5::run(&opts),
+            "ablation" => exp::ablation::run(&opts),
+            other => bail!("unknown experiment {other:?}"),
+        }
+    };
+    if which == "all" {
+        for id in ["table2", "table1", "fig1", "fig2", "fig3", "fig4", "fig5", "ablation"] {
+            run(id)?;
+        }
+        Ok(())
+    } else {
+        run(which)
+    }
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let split = load_split(args)?;
+    let parse_grid = |key: &str, default: Vec<f64>| -> Result<Vec<f64>> {
+        match args.get(key) {
+            Some(s) => s
+                .split(',')
+                .map(|t| t.parse::<f64>().map_err(|_| anyhow!("bad --{key} item {t:?}")))
+                .collect(),
+            None => Ok(default),
+        }
+    };
+    let params = mmbsgd::solver::tune::TuneParams {
+        c_grid: parse_grid("c-grid", vec![1.0, 4.0, 16.0, 64.0])?,
+        gamma_grid: parse_grid("gamma-grid", vec![0.01, 0.1, 1.0, 10.0])?,
+        folds: args.get_parse("folds", 5)?,
+        base: TrainConfig {
+            budget: args.get_parse("budget", 128)?,
+            mergees: args.get_parse("mergees", 4)?,
+            ..TrainConfig::default()
+        },
+        exact: args.has("exact"),
+        seed: args.get_parse("seed", 1)?,
+    };
+    println!(
+        "[tune ] grid {}x{} with {}-fold CV on {} ({} pts)",
+        params.c_grid.len(),
+        params.gamma_grid.len(),
+        params.folds,
+        split.train.name,
+        split.train.len()
+    );
+    let cells = mmbsgd::solver::tune::grid_search(&split.train, &params);
+    for cell in &cells {
+        println!("  C={:<8} gamma={:<8} cv acc {:.2}%", cell.c, cell.gamma, 100.0 * cell.cv_accuracy);
+    }
+    let best = cells[0];
+    println!("[best ] C={} gamma={} ({:.2}%)", best.c, best.gamma, 100.0 * best.cv_accuracy);
+    Ok(())
+}
+
+fn cmd_artifacts(_args: &Args) -> Result<()> {
+    let dir = mmbsgd::runtime::ArtifactRegistry::default_dir();
+    let reg = mmbsgd::runtime::ArtifactRegistry::load(&dir)?;
+    println!("artifact dir: {}", reg.dir.display());
+    for a in &reg.artifacts {
+        println!(
+            "  {:32} entry={:12} b_pad={:5} d_pad={:4} nb={:4} m_pad={}",
+            a.name, a.entry, a.b_pad, a.d_pad, a.nb, a.m_pad
+        );
+    }
+    println!("{} artifacts", reg.artifacts.len());
+    Ok(())
+}
+
+const HELP: &str = "\
+mmbsgd — multi-merge budgeted SGD SVM training (Qaadan & Glasmachers 2018)
+
+USAGE: mmbsgd <command> [--flags]
+
+COMMANDS
+  train        --dataset <synth-name|libsvm-path> [--scale F] [--budget N]
+               [--mergees M] [--maintenance removal|projection|merge[:M]|mergegd[:M]]
+               [--backend native|xla|hybrid] [--c F | --lambda F] [--gamma F]
+               [--epochs N] [--seed N] [--eval-every N] [--config file.toml]
+               [--save model.txt] [--test libsvm-path] [--quiet]
+  evaluate     --model model.txt --dataset <...> [--scale F]
+  predict      --model model.txt --input data.libsvm
+  experiment   --id table1|table2|fig1|fig2|fig3|fig4|fig5|ablation|all
+               [--scale F] [--threads N] [--out-dir DIR] [--backend B] [--seed N]
+  tune         --dataset <...> [--c-grid 1,4,16] [--gamma-grid 0.1,1,10]
+               [--folds N] [--budget N] [--mergees M] [--exact]
+  artifacts    (list the AOT artifact registry)
+
+Synth dataset names: phishing, web, adult, ijcnn, skin (statistical twins
+of the paper's LIBSVM datasets; see DESIGN.md §3).
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    let res = match args.cmd.as_str() {
+        "train" => cmd_train(&args),
+        "evaluate" => cmd_evaluate(&args),
+        "predict" => cmd_predict(&args),
+        "experiment" => cmd_experiment(&args),
+        "tune" => cmd_tune(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = res {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,237 @@
+//! The kernel-SVM model: support vectors, coefficients, bias; prediction,
+//! weight-vector norms, persistence.
+
+mod store;
+pub use store::SvStore;
+
+use crate::data::Dataset;
+use crate::kernel::{Gaussian, Kernel};
+use anyhow::{bail, Context, Result};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A trained (budgeted) kernel SVM: `f(x) = Σ_j α_j k(x_j, x) + b`.
+#[derive(Clone, Debug)]
+pub struct SvmModel {
+    pub svs: SvStore,
+    pub bias: f64,
+    pub gamma: f64,
+    /// Provenance string recorded by the trainer (solver, M, B, seed).
+    pub meta: String,
+}
+
+impl SvmModel {
+    pub fn new(dim: usize, gamma: f64) -> Self {
+        Self { svs: SvStore::new(dim), bias: 0.0, gamma, meta: String::new() }
+    }
+
+    pub fn kernel(&self) -> Gaussian {
+        Gaussian::new(self.gamma)
+    }
+
+    /// Decision value for one point.
+    pub fn decision(&self, x: &[f32]) -> f64 {
+        let k = self.kernel();
+        let mut f = self.bias;
+        for j in 0..self.svs.len() {
+            f += self.svs.alpha(j) * k.eval(self.svs.point(j), x);
+        }
+        f
+    }
+
+    /// Predicted label (±1).
+    pub fn predict(&self, x: &[f32]) -> f32 {
+        if self.decision(x) >= 0.0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Accuracy over a dataset.
+    pub fn accuracy(&self, ds: &Dataset) -> f64 {
+        if ds.is_empty() {
+            return 0.0;
+        }
+        let correct = (0..ds.len())
+            .filter(|&i| {
+                let s = ds.sample(i);
+                self.predict(s.x) == s.y
+            })
+            .count();
+        correct as f64 / ds.len() as f64
+    }
+
+    /// `||w||^2 = α^T K α` — the regularizer value, O(B²) kernel evals.
+    pub fn weight_norm2(&self) -> f64 {
+        let k = self.kernel();
+        let b = self.svs.len();
+        let mut s = 0.0;
+        for i in 0..b {
+            s += self.svs.alpha(i) * self.svs.alpha(i); // k(x_i,x_i)=1
+            for j in (i + 1)..b {
+                s += 2.0
+                    * self.svs.alpha(i)
+                    * self.svs.alpha(j)
+                    * k.eval(self.svs.point(i), self.svs.point(j));
+            }
+        }
+        s
+    }
+
+    /// Primal objective `λ/2 ||w||² + 1/n Σ hinge` on a dataset.
+    pub fn primal_objective(&self, ds: &Dataset, lambda: f64) -> f64 {
+        let mut loss = 0.0;
+        for i in 0..ds.len() {
+            let s = ds.sample(i);
+            loss += (1.0 - (s.y as f64) * self.decision(s.x)).max(0.0);
+        }
+        lambda / 2.0 * self.weight_norm2() + loss / ds.len().max(1) as f64
+    }
+
+    // ------------------------------------------------------ persistence
+
+    /// Serialize to a simple self-describing text format.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "mmbsgd-model v1");
+        let _ = writeln!(out, "gamma {}", self.gamma);
+        let _ = writeln!(out, "bias {}", self.bias);
+        let _ = writeln!(out, "dim {}", self.svs.dim());
+        let _ = writeln!(out, "nsv {}", self.svs.len());
+        let _ = writeln!(out, "meta {}", self.meta.replace('\n', " "));
+        for j in 0..self.svs.len() {
+            let _ = write!(out, "{}", self.svs.alpha(j));
+            for &v in self.svs.point(j) {
+                let _ = write!(out, " {v}");
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn from_text(text: &str) -> Result<Self> {
+        let mut lines = text.lines();
+        let magic = lines.next().context("empty model file")?;
+        if magic.trim() != "mmbsgd-model v1" {
+            bail!("bad magic line: {magic:?}");
+        }
+        let mut gamma = None;
+        let mut bias = None;
+        let mut dim = None;
+        let mut nsv = None;
+        let mut meta = String::new();
+        for _ in 0..5 {
+            let line = lines.next().context("truncated header")?;
+            let (key, val) = line.split_once(' ').unwrap_or((line, ""));
+            match key {
+                "gamma" => gamma = Some(val.parse::<f64>()?),
+                "bias" => bias = Some(val.parse::<f64>()?),
+                "dim" => dim = Some(val.parse::<usize>()?),
+                "nsv" => nsv = Some(val.parse::<usize>()?),
+                "meta" => meta = val.to_string(),
+                k => bail!("unknown header key {k:?}"),
+            }
+        }
+        let dim = dim.context("missing dim")?;
+        let nsv = nsv.context("missing nsv")?;
+        let mut model = SvmModel::new(dim, gamma.context("missing gamma")?);
+        model.bias = bias.context("missing bias")?;
+        model.meta = meta;
+        for _ in 0..nsv {
+            let line = lines.next().context("truncated SV block")?;
+            let mut it = line.split_ascii_whitespace();
+            let alpha: f64 = it.next().context("missing alpha")?.parse()?;
+            let point: Vec<f32> =
+                it.map(|t| t.parse::<f32>()).collect::<Result<_, _>>()?;
+            if point.len() != dim {
+                bail!("SV has {} features, expected {dim}", point.len());
+            }
+            model.svs.push(&point, alpha);
+        }
+        Ok(model)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_text())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_text(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::DenseMatrix;
+
+    fn toy_model() -> SvmModel {
+        let mut m = SvmModel::new(2, 0.5);
+        m.svs.push(&[0.0, 0.0], 1.0);
+        m.svs.push(&[1.0, 0.0], -0.5);
+        m.bias = 0.1;
+        m.meta = "test".into();
+        m
+    }
+
+    #[test]
+    fn decision_matches_manual() {
+        let m = toy_model();
+        let x = [0.0f32, 1.0];
+        let k = Gaussian::new(0.5);
+        let want = 1.0 * k.eval(&[0.0, 0.0], &x) - 0.5 * k.eval(&[1.0, 0.0], &x) + 0.1;
+        assert!((m.decision(&x) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let m = toy_model();
+        let x = DenseMatrix::from_rows(vec![vec![0.0, 0.0], vec![5.0, 5.0]]);
+        // decision(0,0) ≈ 1 - 0.5 e^{-.5} + .1 > 0 -> +1; far point -> bias 0.1 -> +1
+        let ds = Dataset::new(x, vec![1.0, -1.0], "t");
+        assert!((m.accuracy(&ds) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weight_norm_two_points() {
+        let m = toy_model();
+        let k = Gaussian::new(0.5).eval(&[0.0, 0.0], &[1.0, 0.0]);
+        let want = 1.0 + 0.25 + 2.0 * 1.0 * (-0.5) * k;
+        assert!((m.weight_norm2() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let m = toy_model();
+        let re = SvmModel::from_text(&m.to_text()).unwrap();
+        assert_eq!(re.svs.len(), 2);
+        assert_eq!(re.bias, m.bias);
+        assert_eq!(re.gamma, m.gamma);
+        assert_eq!(re.meta, "test");
+        assert_eq!(re.svs.point(1), m.svs.point(1));
+        assert_eq!(re.svs.alpha(0), m.svs.alpha(0));
+    }
+
+    #[test]
+    fn from_text_rejects_garbage() {
+        assert!(SvmModel::from_text("").is_err());
+        assert!(SvmModel::from_text("wrong magic\n").is_err());
+        let truncated = "mmbsgd-model v1\ngamma 1\nbias 0\ndim 2\nnsv 3\nmeta\n1.0 0 0\n";
+        assert!(SvmModel::from_text(truncated).is_err());
+    }
+
+    #[test]
+    fn primal_objective_decreases_with_margin() {
+        let mut m = SvmModel::new(1, 1.0);
+        m.svs.push(&[1.0], 2.0);
+        let x = DenseMatrix::from_rows(vec![vec![1.0]]);
+        let ds = Dataset::new(x, vec![1.0], "t");
+        // margin = 2.0 -> hinge 0; objective = λ/2 * 4
+        let obj = m.primal_objective(&ds, 0.5);
+        assert!((obj - 1.0).abs() < 1e-12);
+    }
+}

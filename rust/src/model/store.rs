@@ -1,0 +1,266 @@
+//! The support-vector store — the budget data structure.
+//!
+//! Contiguous row-major point storage (cache-friendly kernel loops) with
+//! O(1) push / swap-remove / replace, uniform coefficient scaling done
+//! lazily (Pegasos multiplies every α by `1-λη` each step; doing that
+//! eagerly would be O(B) per step, so a global multiplier is kept and
+//! folded in on access — the classic trick, and measurably the single
+//! most important optimization in the native hot path).
+
+/// Budget of support vectors with coefficients.
+#[derive(Clone, Debug)]
+pub struct SvStore {
+    dim: usize,
+    points: Vec<f32>,
+    alphas: Vec<f64>, // stored WITHOUT the global scale factor
+    scale: f64,       // every effective α_j = alphas[j] * scale
+}
+
+/// Folding threshold: when `scale` drops below this, fold it into the
+/// stored coefficients to avoid denormals (Pegasos scales decay fast).
+const SCALE_FOLD: f64 = 1e-100;
+
+impl SvStore {
+    pub fn new(dim: usize) -> Self {
+        Self { dim, points: Vec::new(), alphas: Vec::new(), scale: 1.0 }
+    }
+
+    pub fn with_capacity(dim: usize, cap: usize) -> Self {
+        Self {
+            dim,
+            points: Vec::with_capacity(cap * dim),
+            alphas: Vec::with_capacity(cap),
+            scale: 1.0,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.alphas.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.alphas.is_empty()
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    #[inline]
+    pub fn point(&self, j: usize) -> &[f32] {
+        &self.points[j * self.dim..(j + 1) * self.dim]
+    }
+
+    /// Effective coefficient (global scale folded in).
+    #[inline]
+    pub fn alpha(&self, j: usize) -> f64 {
+        self.alphas[j] * self.scale
+    }
+
+    /// All points as one contiguous slice (runtime marshalling).
+    #[inline]
+    pub fn points_flat(&self) -> &[f32] {
+        &self.points
+    }
+
+    /// Effective coefficients, materialized.
+    pub fn alphas_vec(&self) -> Vec<f64> {
+        self.alphas.iter().map(|a| a * self.scale).collect()
+    }
+
+    pub fn push(&mut self, point: &[f32], alpha: f64) {
+        assert_eq!(point.len(), self.dim, "point dim mismatch");
+        self.points.extend_from_slice(point);
+        // Store pre-divided so the effective value is `alpha`.
+        self.alphas.push(alpha / self.scale);
+    }
+
+    /// O(1) removal; the last SV moves into slot `j`.
+    pub fn swap_remove(&mut self, j: usize) {
+        let last = self.len() - 1;
+        if j != last {
+            let (head, tail) = self.points.split_at_mut(last * self.dim);
+            head[j * self.dim..(j + 1) * self.dim].copy_from_slice(&tail[..self.dim]);
+        }
+        self.points.truncate(last * self.dim);
+        self.alphas.swap_remove(j);
+    }
+
+    /// Overwrite SV `j` with a new point/coefficient (merge result).
+    pub fn replace(&mut self, j: usize, point: &[f32], alpha: f64) {
+        assert_eq!(point.len(), self.dim);
+        self.points[j * self.dim..(j + 1) * self.dim].copy_from_slice(point);
+        self.alphas[j] = alpha / self.scale;
+    }
+
+    /// Add to SV `j`'s effective coefficient (SGD update on an existing SV).
+    pub fn add_alpha(&mut self, j: usize, delta: f64) {
+        self.alphas[j] += delta / self.scale;
+    }
+
+    /// Multiply every effective coefficient by `f` — O(1).
+    ///
+    /// `f = 0` (the first Pegasos step has η₁λ = 1) zeroes the stored
+    /// coefficients eagerly: a zero lazy scale would make later pushes
+    /// divide by zero.
+    pub fn scale_all(&mut self, f: f64) {
+        debug_assert!(f.is_finite());
+        if f == 0.0 {
+            for a in &mut self.alphas {
+                *a = 0.0;
+            }
+            self.scale = 1.0;
+            return;
+        }
+        self.scale *= f;
+        if self.scale.abs() < SCALE_FOLD {
+            self.fold_scale();
+        }
+    }
+
+    /// Fold the lazy scale into storage (needed before handing raw alphas
+    /// to code that bypasses `alpha()`).
+    pub fn fold_scale(&mut self) {
+        if self.scale != 1.0 {
+            for a in &mut self.alphas {
+                *a *= self.scale;
+            }
+            self.scale = 1.0;
+        }
+    }
+
+    /// Index of the SV with the smallest |effective α| — the paper's
+    /// first-merge-candidate heuristic. O(B). The global scale does not
+    /// change the argmin, so the lazy factor is ignored.
+    pub fn min_abs_alpha(&self) -> Option<usize> {
+        if self.is_empty() {
+            return None;
+        }
+        let mut best = 0;
+        let mut best_v = f64::INFINITY;
+        for (j, &a) in self.alphas.iter().enumerate() {
+            let v = a.abs();
+            if v < best_v {
+                best_v = v;
+                best = j;
+            }
+        }
+        Some(best)
+    }
+
+    /// Drop SVs whose effective |α| is below `eps` (post-merge hygiene —
+    /// merged-away points with cancelled coefficients carry no signal but
+    /// cost kernel evaluations forever).
+    pub fn prune(&mut self, eps: f64) -> usize {
+        let mut removed = 0;
+        let mut j = 0;
+        while j < self.len() {
+            if self.alpha(j).abs() < eps {
+                self.swap_remove(j);
+                removed += 1;
+            } else {
+                j += 1;
+            }
+        }
+        removed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_access() {
+        let mut s = SvStore::new(2);
+        s.push(&[1.0, 2.0], 0.5);
+        s.push(&[3.0, 4.0], -0.25);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.point(1), &[3.0, 4.0]);
+        assert_eq!(s.alpha(0), 0.5);
+    }
+
+    #[test]
+    fn lazy_scale_matches_eager() {
+        let mut s = SvStore::new(1);
+        s.push(&[0.0], 2.0);
+        s.push(&[1.0], -1.0);
+        s.scale_all(0.5);
+        s.scale_all(0.8);
+        assert!((s.alpha(0) - 0.8).abs() < 1e-15);
+        assert!((s.alpha(1) + 0.4).abs() < 1e-15);
+        // push after scaling must still read back exactly
+        s.push(&[2.0], 0.7);
+        assert!((s.alpha(2) - 0.7).abs() < 1e-15);
+        s.fold_scale();
+        assert!((s.alpha(0) - 0.8).abs() < 1e-15);
+    }
+
+    #[test]
+    fn swap_remove_moves_last() {
+        let mut s = SvStore::new(1);
+        for i in 0..4 {
+            s.push(&[i as f32], i as f64);
+        }
+        s.swap_remove(1);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.point(1), &[3.0]);
+        assert_eq!(s.alpha(1), 3.0);
+    }
+
+    #[test]
+    fn swap_remove_last_element() {
+        let mut s = SvStore::new(1);
+        s.push(&[1.0], 1.0);
+        s.swap_remove(0);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn replace_and_add_alpha() {
+        let mut s = SvStore::new(2);
+        s.push(&[0.0, 0.0], 1.0);
+        s.scale_all(0.5);
+        s.replace(0, &[9.0, 9.0], 3.0);
+        assert_eq!(s.point(0), &[9.0, 9.0]);
+        assert!((s.alpha(0) - 3.0).abs() < 1e-15);
+        s.add_alpha(0, 0.5);
+        assert!((s.alpha(0) - 3.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn min_abs_alpha_finds_smallest() {
+        let mut s = SvStore::new(1);
+        s.push(&[0.0], -3.0);
+        s.push(&[1.0], 0.1);
+        s.push(&[2.0], 2.0);
+        assert_eq!(s.min_abs_alpha(), Some(1));
+        assert_eq!(SvStore::new(1).min_abs_alpha(), None);
+    }
+
+    #[test]
+    fn scale_fold_avoids_denormals() {
+        let mut s = SvStore::new(1);
+        s.push(&[0.0], 1.0);
+        for _ in 0..2000 {
+            s.scale_all(0.8);
+        }
+        // effective alpha underflows to ~0 but stays finite / non-NaN
+        assert!(s.alpha(0).is_finite());
+    }
+
+    #[test]
+    fn prune_removes_tiny() {
+        let mut s = SvStore::new(1);
+        s.push(&[0.0], 1.0);
+        s.push(&[1.0], 1e-12);
+        s.push(&[2.0], -2.0);
+        let n = s.prune(1e-9);
+        assert_eq!(n, 1);
+        assert_eq!(s.len(), 2);
+        assert!(s.alphas_vec().iter().all(|a| a.abs() > 1e-9));
+    }
+}

@@ -1,0 +1,81 @@
+//! Hybrid backend: profile-driven routing between the AOT artifacts
+//! (PJRT) and the native mirror.
+//!
+//! Measured on this testbed (EXPERIMENTS.md §Perf, `cargo bench --bench
+//! hot_paths`):
+//!
+//! * **batched evaluation** (`margins`, 256-row chunks): XLA wins
+//!   (1.46 ms vs 1.85 ms native at B=512, d=128) — the blocked MXU-style
+//!   matmul in the Pallas margin kernel amortizes the PJRT call.
+//! * **merge scoring** (`merge_scores`): native wins at every size on
+//!   *CPU* (295 µs vs 1.4 ms at B=512) — the interpret-lowered golden
+//!   section runs as a sequential HLO while-loop plus ~1 MB of literal
+//!   marshalling per call.  On a real TPU the same artifact runs the B
+//!   lanes on the VPU in lock-step; the CPU plugin gets no such win
+//!   (DESIGN.md §Hardware-Adaptation).
+//! * **single-point margin** (`margin1`): native (µs-scale PJRT dispatch
+//!   exceeds the entire Θ(B·K) compute).
+//! * **MM-GD** (`merge_gd`): native (tiny tile, same marshalling math).
+//!
+//! Routing below follows those measurements: XLA for batched eval,
+//! native for everything per-event.  `XlaBackend` remains available as
+//! a full-XLA backend (`--backend xla`) to exercise every artifact.
+
+use super::{Backend, MergeScores, NativeBackend, XlaBackend};
+use crate::data::DenseMatrix;
+use crate::model::SvStore;
+use anyhow::Result;
+use std::path::Path;
+
+pub struct HybridBackend {
+    native: NativeBackend,
+    xla: XlaBackend,
+}
+
+impl HybridBackend {
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        Ok(Self { native: NativeBackend::new(), xla: XlaBackend::new(artifact_dir)? })
+    }
+
+    pub fn from_default_dir() -> Result<Self> {
+        Ok(Self { native: NativeBackend::new(), xla: XlaBackend::from_default_dir()? })
+    }
+
+    pub fn xla(&self) -> &XlaBackend {
+        &self.xla
+    }
+}
+
+impl Backend for HybridBackend {
+    fn name(&self) -> &'static str {
+        "hybrid"
+    }
+
+    fn margins(&mut self, svs: &SvStore, gamma: f64, queries: &DenseMatrix) -> Vec<f64> {
+        // Batched: the artifact's blocked matmul wins; tiny batches and
+        // out-of-lattice budgets fall back to native.
+        if queries.rows() >= 64
+            && self
+                .xla
+                .registry()
+                .find_margins(svs.len(), svs.dim(), 256)
+                .is_some()
+        {
+            self.xla.margins(svs, gamma, queries)
+        } else {
+            self.native.margins(svs, gamma, queries)
+        }
+    }
+
+    fn margin1(&mut self, svs: &SvStore, gamma: f64, x: &[f32]) -> f64 {
+        self.native.margin1(svs, gamma, x)
+    }
+
+    fn merge_scores(&mut self, svs: &SvStore, gamma: f64, i: usize) -> MergeScores {
+        self.native.merge_scores(svs, gamma, i)
+    }
+
+    fn merge_gd(&mut self, points: &[(&[f32], f64)], gamma: f64) -> (Vec<f32>, f64, f64) {
+        self.native.merge_gd(points, gamma)
+    }
+}

@@ -1,0 +1,111 @@
+//! Compute backends: the numeric services the coordinator calls from the
+//! training/serving hot path.
+//!
+//! Two interchangeable implementations:
+//!
+//! * [`XlaBackend`] — loads the AOT artifacts (`artifacts/*.hlo.txt`,
+//!   lowered from the L1/L2 jax+Pallas code by `python/compile/aot.py`)
+//!   and executes them on the PJRT CPU client via the `xla` crate.
+//!   Fixed shapes: inputs are padded to the artifact's (B_pad, d_pad)
+//!   and masked.  Python never runs at request time.
+//! * [`NativeBackend`] — a pure-rust mirror of the same math.  Used by
+//!   unit tests (no artifacts needed), for tiny budgets where PJRT call
+//!   overhead dominates, and as the apples-to-apples perf baseline.
+//!
+//! The two must agree numerically; `rust/tests/backend_equivalence.rs`
+//! enforces it on every artifact shape.
+
+mod hybrid;
+mod native;
+mod xla_backend;
+
+pub use hybrid::HybridBackend;
+pub use native::NativeBackend;
+pub use xla_backend::{ArtifactRegistry, XlaBackend};
+
+use crate::data::DenseMatrix;
+use crate::model::SvStore;
+
+/// Pairwise merge-scoring output (one lane per budget SV).
+#[derive(Clone, Debug, Default)]
+pub struct MergeScores {
+    /// Weight degradation ‖Δ‖² of the optimal binary merge with lane j.
+    pub wd: Vec<f64>,
+    /// Optimal line parameter (z = h x_i + (1-h) x_j).
+    pub h: Vec<f64>,
+    /// Optimal merged coefficient.
+    pub a_z: Vec<f64>,
+    /// Squared distance ‖x_i − x_j‖².
+    pub d2: Vec<f64>,
+}
+
+/// Numeric services used by solvers and budget maintenance.
+///
+/// Deliberately NOT `Send`: the PJRT client handle is thread-local, so
+/// each coordinator worker constructs its own backend (see
+/// `coordinator::run_grid`) — no shared mutable state on the hot path.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// Decision values (no bias) for a batch of query rows.
+    fn margins(&mut self, svs: &SvStore, gamma: f64, queries: &DenseMatrix) -> Vec<f64>;
+
+    /// Decision value (no bias) for a single query.
+    fn margin1(&mut self, svs: &SvStore, gamma: f64, x: &[f32]) -> f64;
+
+    /// Score merging SV `i` against every other SV in the store.
+    /// Lane `i` itself gets `wd = +inf`.
+    fn merge_scores(&mut self, svs: &SvStore, gamma: f64, i: usize) -> MergeScores;
+
+    /// MM-GD (paper Alg. 2): merge `points` (with coefficients) into a
+    /// single (z, a_z); returns the exact weight degradation as third.
+    fn merge_gd(&mut self, points: &[(&[f32], f64)], gamma: f64) -> (Vec<f32>, f64, f64);
+}
+
+/// Exact weight degradation of replacing a set of (x, a) terms by a
+/// single (z, a_z): ‖Σ a_i φ(x_i) − a_z φ(z)‖².  O(M²) kernel evals —
+/// used for reporting and by MM-GD; M is small (≤ 16).
+pub fn exact_multi_wd(points: &[(&[f32], f64)], z: &[f32], a_z: f64, gamma: f64) -> f64 {
+    use crate::kernel::Kernel;
+    let kern = crate::kernel::Gaussian::new(gamma);
+    let mut norm2 = 0.0;
+    for (i, (xi, ai)) in points.iter().enumerate() {
+        norm2 += ai * ai;
+        for (xj, aj) in points.iter().skip(i + 1) {
+            norm2 += 2.0 * ai * aj * kern.eval(xi, xj);
+        }
+    }
+    let mut cross = 0.0;
+    for (xi, ai) in points {
+        cross += ai * kern.eval(xi, z);
+    }
+    norm2 + a_z * a_z - 2.0 * a_z * cross
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_wd_zero_for_identity() {
+        let x = [1.0f32, 2.0];
+        let pts: Vec<(&[f32], f64)> = vec![(&x, 0.8)];
+        let wd = exact_multi_wd(&pts, &x, 0.8, 1.0);
+        assert!(wd.abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_wd_matches_pair_formula() {
+        let a = [0.0f32, 0.0];
+        let b = [1.0f32, 0.0];
+        let gamma = 0.7;
+        let (a_i, a_j) = (0.5f64, 0.3f64);
+        let pts: Vec<(&[f32], f64)> = vec![(&a, a_i), (&b, a_j)];
+        // degrade to a_z = 0 at z far away -> wd = ||w_pair||^2
+        let far = [100.0f32, 100.0];
+        let wd = exact_multi_wd(&pts, &far, 0.0, gamma);
+        let k = (-gamma * 1.0f64).exp();
+        let want = a_i * a_i + a_j * a_j + 2.0 * a_i * a_j * k;
+        assert!((wd - want).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,256 @@
+//! Pure-rust compute backend — the native mirror of the AOT artifacts.
+//!
+//! Keeps the exact same math as the L1 kernels (same golden-section
+//! constants, same MM-GD iteration scheme) so the two backends are
+//! numerically interchangeable.  Scratch buffers are owned by the
+//! backend and reused across calls — the hot loop performs no
+//! allocation after warm-up.
+
+use super::{Backend, MergeScores};
+use crate::budget::golden::{self, GS_ITERS};
+use crate::data::DenseMatrix;
+use crate::kernel::{sq_dist, Gaussian, Kernel};
+use crate::model::SvStore;
+
+/// MM-GD fixed iteration count / initial step (mirrors
+/// `python/compile/model.py` GD_ITERS / GD_LR).
+pub const GD_ITERS: usize = 50;
+pub const GD_LR: f64 = 0.5;
+
+/// Pure-rust backend.
+#[derive(Default)]
+pub struct NativeBackend {
+    scratch_k: Vec<f64>,
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn margins(&mut self, svs: &SvStore, gamma: f64, queries: &DenseMatrix) -> Vec<f64> {
+        (0..queries.rows())
+            .map(|r| margin1_native(svs, gamma, queries.row(r)))
+            .collect()
+    }
+
+    #[inline]
+    fn margin1(&mut self, svs: &SvStore, gamma: f64, x: &[f32]) -> f64 {
+        margin1_native(svs, gamma, x)
+    }
+
+    fn merge_scores(&mut self, svs: &SvStore, gamma: f64, i: usize) -> MergeScores {
+        let b = svs.len();
+        let x_i = svs.point(i);
+        let a_i = svs.alpha(i);
+        let mut out = MergeScores {
+            wd: vec![f64::INFINITY; b],
+            h: vec![0.0; b],
+            a_z: vec![0.0; b],
+            d2: vec![0.0; b],
+        };
+        self.scratch_k.clear();
+        for j in 0..b {
+            if j == i {
+                continue;
+            }
+            let d2 = sq_dist(x_i, svs.point(j));
+            let pm = golden::merge_pair_params(a_i, svs.alpha(j), gamma * d2, GS_ITERS);
+            out.wd[j] = pm.wd;
+            out.h[j] = pm.h;
+            out.a_z[j] = pm.a_z;
+            out.d2[j] = d2;
+        }
+        out
+    }
+
+    fn merge_gd(&mut self, points: &[(&[f32], f64)], gamma: f64) -> (Vec<f32>, f64, f64) {
+        merge_gd_native(points, gamma, GD_ITERS, GD_LR)
+    }
+}
+
+/// The Θ(B·K) per-step margin — the single hottest loop in training.
+///
+/// Perf notes (EXPERIMENTS.md §Perf):
+/// * far SVs (γd² > [`EXP_NEG_CUTOFF`]) contribute < e⁻⁴⁰ ≈ 4e-18 and
+///   skip the `exp` call entirely — the dominant cost on clustered data;
+/// * contiguous row iteration over the flat point storage.
+#[inline]
+pub fn margin1_native(svs: &SvStore, gamma: f64, x: &[f32]) -> f64 {
+    use crate::kernel::EXP_NEG_CUTOFF;
+    let mut f = 0.0;
+    for j in 0..svs.len() {
+        let e = gamma * sq_dist(svs.point(j), x);
+        if e < EXP_NEG_CUTOFF {
+            f += svs.alpha(j) * (-e).exp();
+        }
+    }
+    f
+}
+
+/// MM-GD in pure rust (mirrors `kernels/ref.py::merge_gd`): maximize
+/// |g(z)| with g(z) = Σ a_i k(x_i, z) by sign-corrected gradient ascent
+/// with multiplicative step adaptation; fixed trip count.
+pub fn merge_gd_native(
+    points: &[(&[f32], f64)],
+    gamma: f64,
+    iters: usize,
+    lr: f64,
+) -> (Vec<f32>, f64, f64) {
+    assert!(!points.is_empty());
+    let d = points[0].0.len();
+    let kern = Gaussian::new(gamma);
+
+    // Centroid seed: α-weighted; fall back to |α|-weighted when the
+    // coefficients nearly cancel.
+    let denom: f64 = points.iter().map(|(_, a)| a).sum();
+    let mut z = vec![0.0f64; d];
+    if denom.abs() > 1e-12 {
+        for (x, a) in points {
+            for (zi, &xi) in z.iter_mut().zip(*x) {
+                *zi += a * xi as f64;
+            }
+        }
+        for zi in &mut z {
+            *zi /= denom;
+        }
+    } else {
+        let wsum: f64 = points.iter().map(|(_, a)| a.abs()).sum::<f64>().max(1e-12);
+        for (x, a) in points {
+            for (zi, &xi) in z.iter_mut().zip(*x) {
+                *zi += a.abs() * xi as f64;
+            }
+        }
+        for zi in &mut z {
+            *zi /= wsum;
+        }
+    }
+
+    let zf32 = |z: &[f64]| z.iter().map(|&v| v as f32).collect::<Vec<f32>>();
+    let g = |z: &[f64]| -> f64 {
+        let zf = zf32(z);
+        points.iter().map(|(x, a)| a * kern.eval(x, &zf)).sum()
+    };
+
+    let mut step = lr;
+    let mut best = g(&z).abs();
+    let mut grad = vec![0.0f64; d];
+    let mut z_new = vec![0.0f64; d];
+    for _ in 0..iters {
+        let gz = g(&z);
+        // ∇g(z) = Σ a_i k(x_i,z) · (−2γ)(z − x_i); ascent on |g|.
+        grad.iter_mut().for_each(|v| *v = 0.0);
+        let zf = zf32(&z);
+        for (x, a) in points {
+            let k = a * kern.eval(x, &zf);
+            for (gi, (&zi, &xi)) in grad.iter_mut().zip(z.iter().zip(*x)) {
+                *gi += -2.0 * gamma * k * (zi - xi as f64);
+            }
+        }
+        let sign = if gz >= 0.0 { 1.0 } else { -1.0 };
+        for ((zn, &zi), &gi) in z_new.iter_mut().zip(&z).zip(&grad) {
+            *zn = zi + step * sign * gi;
+        }
+        let g_new = g(&z_new).abs();
+        if g_new >= best {
+            z.copy_from_slice(&z_new);
+            best = g_new;
+            step *= 1.1;
+        } else {
+            step *= 0.5;
+        }
+    }
+    let a_z = g(&z);
+    let zf = zf32(&z);
+    let wd = super::exact_multi_wd(points, &zf, a_z, gamma);
+    (zf, a_z, wd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(points: &[(&[f32], f64)], dim: usize) -> SvStore {
+        let mut s = SvStore::new(dim);
+        for (x, a) in points {
+            s.push(x, *a);
+        }
+        s
+    }
+
+    #[test]
+    fn margin1_matches_margins() {
+        let a = [0.0f32, 1.0];
+        let b = [1.0f32, 0.0];
+        let svs = store(&[(&a, 0.5), (&b, -0.3)], 2);
+        let mut be = NativeBackend::new();
+        let q = DenseMatrix::from_rows(vec![vec![0.5, 0.5], vec![2.0, -1.0]]);
+        let batch = be.margins(&svs, 0.8, &q);
+        for r in 0..2 {
+            assert!((batch[r] - be.margin1(&svs, 0.8, q.row(r))).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn merge_scores_masks_self_and_scores_rest() {
+        let a = [0.0f32];
+        let b = [0.5f32];
+        let c = [4.0f32];
+        let svs = store(&[(&a, 0.1), (&b, 0.5), (&c, 0.9)], 1);
+        let mut be = NativeBackend::new();
+        let ms = be.merge_scores(&svs, 1.0, 0);
+        assert!(ms.wd[0].is_infinite());
+        assert!(ms.wd[1].is_finite() && ms.wd[2].is_finite());
+        // near partner cheaper than far partner
+        assert!(ms.wd[1] < ms.wd[2]);
+        assert!((ms.d2[2] - 16.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn merge_gd_two_identical_points() {
+        let x = [1.0f32, -1.0];
+        let pts: Vec<(&[f32], f64)> = vec![(&x, 0.4), (&x, 0.6)];
+        let (z, a_z, wd) = merge_gd_native(&pts, 2.0, GD_ITERS, GD_LR);
+        assert!((z[0] - 1.0).abs() < 1e-4 && (z[1] + 1.0).abs() < 1e-4);
+        assert!((a_z - 1.0).abs() < 1e-4);
+        assert!(wd < 1e-8);
+    }
+
+    #[test]
+    fn merge_gd_not_worse_than_cascade_pairwise() {
+        // 3 -> 1: GD joint merge should be <= sequential binary merges
+        // in weight degradation (paper Table 1 shows them comparable;
+        // GD is the joint optimizer so it should not be much worse).
+        let x0 = [0.0f32, 0.0];
+        let x1 = [0.4f32, 0.1];
+        let x2 = [0.2f32, -0.3];
+        let pts: Vec<(&[f32], f64)> = vec![(&x0, 0.3), (&x1, 0.5), (&x2, 0.4)];
+        let gamma = 1.0;
+        let (_z, _a_z, wd_gd) = merge_gd_native(&pts, gamma, GD_ITERS, GD_LR);
+
+        // cascade: merge (x0,x1) -> z01, then (z01, x2)
+        let (z01, a01, _) = golden::merge_pair(&x0, 0.3, &x1, 0.5, gamma, GS_ITERS);
+        let (z, a_z, _) = golden::merge_pair(&z01, a01, &x2, 0.4, gamma, GS_ITERS);
+        let wd_cascade = super::super::exact_multi_wd(&pts, &z, a_z, gamma);
+        assert!(
+            wd_gd <= wd_cascade * 1.5 + 1e-6,
+            "wd_gd={wd_gd} much worse than cascade={wd_cascade}"
+        );
+    }
+
+    #[test]
+    fn merge_gd_cancelling_coefficients_finite() {
+        let x0 = [0.0f32];
+        let x1 = [1.0f32];
+        let pts: Vec<(&[f32], f64)> = vec![(&x0, 0.5), (&x1, -0.5)];
+        let (z, a_z, wd) = merge_gd_native(&pts, 1.0, GD_ITERS, GD_LR);
+        assert!(z[0].is_finite() && a_z.is_finite() && wd.is_finite());
+        assert!(wd >= -1e-9);
+    }
+}

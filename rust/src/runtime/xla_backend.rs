@@ -1,0 +1,343 @@
+//! PJRT-backed compute: load AOT artifacts, compile once, execute on the
+//! hot path.
+//!
+//! `python/compile/aot.py` lowers each L2 entry point to HLO **text**
+//! (xla_extension 0.5.1 rejects jax≥0.5 serialized protos — 64-bit ids;
+//! the text parser reassigns ids) for a lattice of padded shapes, and
+//! writes `manifest.json`.  [`ArtifactRegistry`] indexes the manifest;
+//! [`XlaBackend`] picks the smallest fitting variant per call, pads and
+//! masks the inputs, and executes through the PJRT CPU client.
+//!
+//! Executables are compiled lazily on first use and cached for the
+//! process lifetime (compilation is seconds; execution is micro- to
+//! milliseconds).  Padded marshalling buffers are reused across calls.
+
+use super::{Backend, MergeScores};
+use crate::data::DenseMatrix;
+use crate::model::SvStore;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One artifact from the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: PathBuf,
+    pub entry: String,
+    pub b_pad: usize,
+    pub d_pad: usize,
+    pub nb: usize,
+    pub m_pad: usize,
+}
+
+/// Index over `artifacts/manifest.json`.
+pub struct ArtifactRegistry {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl ArtifactRegistry {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let json = crate::util::json::Json::parse(&text)
+            .map_err(|e| anyhow!("parsing manifest: {e}"))?;
+        let arr = json
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .context("manifest lacks 'artifacts' array")?;
+        let mut artifacts = Vec::with_capacity(arr.len());
+        for a in arr {
+            let get_usize =
+                |k: &str| a.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+            artifacts.push(ArtifactInfo {
+                name: a
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .context("artifact lacks name")?
+                    .to_string(),
+                file: dir.join(
+                    a.get("file")
+                        .and_then(|v| v.as_str())
+                        .context("artifact lacks file")?,
+                ),
+                entry: a
+                    .get("entry")
+                    .and_then(|v| v.as_str())
+                    .context("artifact lacks entry")?
+                    .to_string(),
+                b_pad: get_usize("b_pad"),
+                d_pad: get_usize("d_pad"),
+                nb: get_usize("nb"),
+                m_pad: get_usize("m_pad"),
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest has no artifacts — run `make artifacts`");
+        }
+        Ok(Self { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Smallest margins variant with b_pad >= b, d_pad >= d, batch nb.
+    pub fn find_margins(&self, b: usize, d: usize, nb: usize) -> Option<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.entry == "margins" && a.b_pad >= b && a.d_pad >= d && a.nb == nb
+            })
+            .min_by_key(|a| (a.b_pad, a.d_pad))
+    }
+
+    /// Smallest merge_scores variant with b_pad >= b, d_pad >= d.
+    pub fn find_merge_scores(&self, b: usize, d: usize) -> Option<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.entry == "merge_scores" && a.b_pad >= b && a.d_pad >= d)
+            .min_by_key(|a| (a.b_pad, a.d_pad))
+    }
+
+    /// Smallest merge_gd variant with d_pad >= d.
+    pub fn find_merge_gd(&self, d: usize) -> Option<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.entry == "merge_gd" && a.d_pad >= d)
+            .min_by_key(|a| a.d_pad)
+    }
+
+    /// Default artifact directory: `$MMBSGD_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("MMBSGD_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+/// PJRT-backed [`Backend`].
+pub struct XlaBackend {
+    client: xla::PjRtClient,
+    registry: ArtifactRegistry,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// (calls, compile) counters for perf reporting.
+    pub exec_calls: u64,
+    pub compiles: u64,
+}
+
+impl XlaBackend {
+    /// Create from an artifact directory (compiles nothing yet).
+    pub fn new(dir: &Path) -> Result<Self> {
+        let registry = ArtifactRegistry::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Self { client, registry, executables: HashMap::new(), exec_calls: 0, compiles: 0 })
+    }
+
+    /// Create from the default artifact directory.
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(&ArtifactRegistry::default_dir())
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    fn executable(&mut self, info: &ArtifactInfo) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(&info.name) {
+            let proto = xla::HloModuleProto::from_text_file(&info.file)
+                .map_err(|e| anyhow!("loading {}: {e:?}", info.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", info.name))?;
+            self.compiles += 1;
+            self.executables.insert(info.name.clone(), exe);
+        }
+        Ok(&self.executables[&info.name])
+    }
+
+    /// Execute an artifact on literal inputs; returns the output tuple.
+    fn run(&mut self, info: &ArtifactInfo, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let name = info.name.clone();
+        let exe = self.executable(info)?;
+        let out = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        self.exec_calls += 1;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        lit.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))
+    }
+
+    /// Pad the SV store into (b_pad × d_pad) points + alpha + mask literals.
+    fn sv_literals(
+        svs: &SvStore,
+        b_pad: usize,
+        d_pad: usize,
+        masked_lane: Option<usize>,
+    ) -> Result<(xla::Literal, xla::Literal, xla::Literal)> {
+        let b = svs.len();
+        let d = svs.dim();
+        assert!(b <= b_pad && d <= d_pad, "store {b}x{d} exceeds pad {b_pad}x{d_pad}");
+        let mut pts = vec![0.0f32; b_pad * d_pad];
+        for j in 0..b {
+            pts[j * d_pad..j * d_pad + d].copy_from_slice(svs.point(j));
+        }
+        let mut alpha = vec![0.0f32; b_pad];
+        let mut mask = vec![0.0f32; b_pad];
+        for j in 0..b {
+            alpha[j] = svs.alpha(j) as f32;
+            mask[j] = 1.0;
+        }
+        if let Some(i) = masked_lane {
+            mask[i] = 0.0;
+        }
+        let pts = xla::Literal::vec1(&pts)
+            .reshape(&[b_pad as i64, d_pad as i64])
+            .map_err(|e| anyhow!("reshape points: {e:?}"))?;
+        Ok((pts, xla::Literal::vec1(&alpha), xla::Literal::vec1(&mask)))
+    }
+
+    fn margins_chunk(
+        &mut self,
+        svs: &SvStore,
+        gamma: f64,
+        rows: &[&[f32]],
+    ) -> Result<Vec<f64>> {
+        let d = svs.dim();
+        let nb_art = if rows.len() == 1 { 1 } else { 256 };
+        let info = self
+            .registry
+            .find_margins(svs.len(), d, nb_art)
+            .with_context(|| {
+                format!("no margins artifact for B={} d={d} nb={nb_art}", svs.len())
+            })?
+            .clone();
+        let (pts, alpha, mask) = Self::sv_literals(svs, info.b_pad, info.d_pad, None)?;
+        let mut q = vec![0.0f32; info.nb * info.d_pad];
+        for (r, row) in rows.iter().enumerate() {
+            q[r * info.d_pad..r * info.d_pad + d].copy_from_slice(row);
+        }
+        let q = xla::Literal::vec1(&q)
+            .reshape(&[info.nb as i64, info.d_pad as i64])
+            .map_err(|e| anyhow!("reshape queries: {e:?}"))?;
+        let g = xla::Literal::vec1(&[gamma as f32]);
+        let outs = self.run(&info, &[pts, alpha, mask, q, g])?;
+        let m: Vec<f32> = outs[0]
+            .to_vec()
+            .map_err(|e| anyhow!("margins to_vec: {e:?}"))?;
+        Ok(m[..rows.len()].iter().map(|&v| v as f64).collect())
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn margins(&mut self, svs: &SvStore, gamma: f64, queries: &DenseMatrix) -> Vec<f64> {
+        let mut out = Vec::with_capacity(queries.rows());
+        let rows: Vec<&[f32]> = (0..queries.rows()).map(|r| queries.row(r)).collect();
+        for chunk in rows.chunks(256) {
+            out.extend(
+                self.margins_chunk(svs, gamma, chunk)
+                    .expect("xla margins failed"),
+            );
+        }
+        out
+    }
+
+    fn margin1(&mut self, svs: &SvStore, gamma: f64, x: &[f32]) -> f64 {
+        self.margins_chunk(svs, gamma, &[x]).expect("xla margin1 failed")[0]
+    }
+
+    fn merge_scores(&mut self, svs: &SvStore, gamma: f64, i: usize) -> MergeScores {
+        self.try_merge_scores(svs, gamma, i).expect("xla merge_scores failed")
+    }
+
+    fn merge_gd(&mut self, points: &[(&[f32], f64)], gamma: f64) -> (Vec<f32>, f64, f64) {
+        self.try_merge_gd(points, gamma).expect("xla merge_gd failed")
+    }
+}
+
+impl XlaBackend {
+    pub fn try_merge_scores(
+        &mut self,
+        svs: &SvStore,
+        gamma: f64,
+        i: usize,
+    ) -> Result<MergeScores> {
+        let d = svs.dim();
+        let info = self
+            .registry
+            .find_merge_scores(svs.len(), d)
+            .with_context(|| format!("no merge_scores artifact for B={} d={d}", svs.len()))?
+            .clone();
+        let (pts, alpha, mask) = Self::sv_literals(svs, info.b_pad, info.d_pad, Some(i))?;
+        let mut xi = vec![0.0f32; info.d_pad];
+        xi[..d].copy_from_slice(svs.point(i));
+        let xi = xla::Literal::vec1(&xi);
+        let ai = xla::Literal::vec1(&[svs.alpha(i) as f32]);
+        let g = xla::Literal::vec1(&[gamma as f32]);
+        let outs = self.run(&info, &[pts, alpha, mask, xi, ai, g])?;
+        let take = |idx: usize| -> Result<Vec<f64>> {
+            let v: Vec<f32> = outs[idx]
+                .to_vec()
+                .map_err(|e| anyhow!("merge_scores output {idx}: {e:?}"))?;
+            Ok(v[..svs.len()].iter().map(|&x| x as f64).collect())
+        };
+        let mut ms = MergeScores { wd: take(0)?, h: take(1)?, a_z: take(2)?, d2: take(3)? };
+        // The kernel uses a huge-finite sentinel; normalize to +inf, and
+        // re-assert lane i (belt and braces).
+        for w in &mut ms.wd {
+            if *w >= 1.0e38 {
+                *w = f64::INFINITY;
+            }
+        }
+        ms.wd[i] = f64::INFINITY;
+        Ok(ms)
+    }
+
+    pub fn try_merge_gd(
+        &mut self,
+        points: &[(&[f32], f64)],
+        gamma: f64,
+    ) -> Result<(Vec<f32>, f64, f64)> {
+        let d = points[0].0.len();
+        let info = self
+            .registry
+            .find_merge_gd(d)
+            .with_context(|| format!("no merge_gd artifact for d={d}"))?
+            .clone();
+        let m_pad = info.m_pad;
+        if points.len() > m_pad {
+            bail!("merge_gd supports at most {m_pad} points, got {}", points.len());
+        }
+        let mut xm = vec![0.0f32; m_pad * info.d_pad];
+        let mut am = vec![0.0f32; m_pad];
+        let mut mm = vec![0.0f32; m_pad];
+        for (r, (x, a)) in points.iter().enumerate() {
+            xm[r * info.d_pad..r * info.d_pad + d].copy_from_slice(x);
+            am[r] = *a as f32;
+            mm[r] = 1.0;
+        }
+        let xm = xla::Literal::vec1(&xm)
+            .reshape(&[m_pad as i64, info.d_pad as i64])
+            .map_err(|e| anyhow!("reshape merge set: {e:?}"))?;
+        let g = xla::Literal::vec1(&[gamma as f32]);
+        let outs = self.run(
+            &info,
+            &[xm, xla::Literal::vec1(&am), xla::Literal::vec1(&mm), g],
+        )?;
+        let z: Vec<f32> = outs[0].to_vec().map_err(|e| anyhow!("merge_gd z: {e:?}"))?;
+        let a_z: Vec<f32> = outs[1].to_vec().map_err(|e| anyhow!("merge_gd a_z: {e:?}"))?;
+        let z = z[..d].to_vec();
+        // Recompute wd exactly in f64 (artifact returns f32 wd; the exact
+        // value is cheap and the solvers log it).
+        let wd = super::exact_multi_wd(points, &z, a_z[0] as f64, gamma);
+        Ok((z, a_z[0] as f64, wd))
+    }
+}

@@ -1,0 +1,27 @@
+//! Solvers.
+//!
+//! * [`bsgd`]    — Budgeted SGD (Pegasos + budget maintenance): the
+//!   algorithm the paper modifies; every experiment runs through it.
+//! * [`pegasos`] — unbudgeted Pegasos SGD (the B → ∞ limit, sanity
+//!   baseline).
+//! * [`smo`]     — dual SMO solver with second-order working-set
+//!   selection: the "exact" LIBSVM reference of Table 2 / Fig. 5.
+
+pub mod bsgd;
+pub mod pegasos;
+pub mod smo;
+pub mod tune;
+
+/// Progress hooks; implemented by the coordinator for live reporting.
+/// All methods default to no-ops.
+pub trait Observer {
+    fn on_step(&mut self, _step: u64, _n_svs: usize) {}
+    fn on_maintenance(&mut self, _event: u64, _wd: f64, _n_svs: usize) {}
+    fn on_eval(&mut self, _step: u64, _accuracy: f64) {}
+    fn on_epoch(&mut self, _epoch: usize) {}
+}
+
+/// The do-nothing observer.
+pub struct NoopObserver;
+
+impl Observer for NoopObserver {}

@@ -1,0 +1,64 @@
+//! Unbudgeted Pegasos SGD — the B → ∞ limit of BSGD.
+//!
+//! Kept as an explicit entry point (rather than "BSGD with huge B") so
+//! examples and ablations can state their baseline precisely, and so the
+//! model metadata records the solver honestly.
+
+use super::bsgd::{self, TrainOutput};
+use super::Observer;
+use crate::config::TrainConfig;
+use crate::data::Dataset;
+use crate::runtime::Backend;
+
+/// Train unbudgeted Pegasos: identical SGD dynamics, no maintenance.
+pub fn train_full(
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    backend: &mut dyn Backend,
+    eval: Option<&Dataset>,
+    obs: &mut dyn Observer,
+) -> TrainOutput {
+    let mut cfg = cfg.clone();
+    // A budget no stream of len*epochs steps can exceed.
+    cfg.budget = ds.len() * cfg.epochs.max(1) + 2;
+    let mut out = bsgd::train_full(ds, &cfg, backend, eval, obs);
+    out.model.meta = format!("pegasos seed={} backend={}", cfg.seed, backend.name());
+    debug_assert_eq!(out.maintenance_events, 0);
+    out
+}
+
+/// Convenience wrapper with the native backend.
+pub fn train(ds: &Dataset, cfg: &TrainConfig) -> TrainOutput {
+    let mut backend = crate::runtime::NativeBackend::new();
+    train_full(ds, cfg, &mut backend, None, &mut super::NoopObserver)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{dataset, SynthSpec};
+
+    #[test]
+    fn never_maintains_and_beats_budgeted_small_b() {
+        let split = dataset(&SynthSpec::ijcnn_like(0.02), 3);
+        let cfg = TrainConfig {
+            lambda: 1e-3,
+            gamma: 2.0,
+            epochs: 1,
+            seed: 5,
+            ..TrainConfig::default()
+        };
+        let unb = train(&split.train, &cfg);
+        assert_eq!(unb.maintenance_events, 0);
+        let acc_unb = unb.model.accuracy(&split.test);
+
+        let mut cfg_b = cfg.clone();
+        cfg_b.budget = 8; // brutally small budget
+        let bud = bsgd::train(&split.train, &cfg_b);
+        let acc_bud = bud.model.accuracy(&split.test);
+        assert!(
+            acc_unb >= acc_bud - 0.02,
+            "unbudgeted {acc_unb} should not lose to B=8 {acc_bud}"
+        );
+    }
+}

@@ -1,0 +1,18 @@
+//! First-party utility substrates.
+//!
+//! The build image is offline and only the `xla` crate's dependency
+//! closure is vendored, so the small infrastructure pieces that a
+//! networked project would pull from crates.io are implemented here:
+//!
+//! * [`json`]  — minimal JSON parser/serializer (artifact manifest,
+//!   experiment result dumps).
+//! * [`table`] — aligned console tables + CSV writing for the experiment
+//!   drivers (each paper table/figure prints both).
+//! * [`timer`] — scoped wall-clock accounting used for the paper's
+//!   merge-time-fraction measurements (Fig. 1).
+//! * [`stats`] — mean/std/percentile helpers for benches and reports.
+
+pub mod json;
+pub mod stats;
+pub mod table;
+pub mod timer;

@@ -1,0 +1,107 @@
+//! Small statistics helpers shared by benches, metrics and experiments.
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample standard deviation; 0.0 for n < 2.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64;
+    var.sqrt()
+}
+
+/// Percentile via linear interpolation on the sorted copy (p in [0,100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        let w = rank - lo as f64;
+        s[lo] * (1.0 - w) + s[hi] * w
+    }
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Extract the Pareto front of (cost, quality) points: a point survives if
+/// no other point is both cheaper and at least as good (strictly better in
+/// one dimension).  Used by the Figure 4 driver.  Returns indices sorted
+/// by cost.
+pub fn pareto_front(cost: &[f64], quality: &[f64]) -> Vec<usize> {
+    assert_eq!(cost.len(), quality.len());
+    let mut idx: Vec<usize> = (0..cost.len()).collect();
+    idx.sort_by(|&a, &b| cost[a].partial_cmp(&cost[b]).unwrap());
+    let mut front = Vec::new();
+    let mut best_q = f64::NEG_INFINITY;
+    for &i in &idx {
+        if quality[i] > best_q {
+            front.push(i);
+            best_q = quality[i];
+        }
+    }
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.13809).abs() < 1e-4);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn pareto() {
+        // (cost, quality): points b and d dominate; a dominated by b.
+        let cost = [2.0, 1.0, 3.0, 2.5];
+        let qual = [0.8, 0.9, 0.7, 0.95];
+        let front = pareto_front(&cost, &qual);
+        assert_eq!(front, vec![1, 3]);
+    }
+
+    #[test]
+    fn pareto_single_and_ties() {
+        assert_eq!(pareto_front(&[1.0], &[1.0]), vec![0]);
+        // Equal quality at higher cost is dominated.
+        assert_eq!(pareto_front(&[1.0, 2.0], &[0.5, 0.5]), vec![0]);
+    }
+}

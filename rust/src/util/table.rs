@@ -1,0 +1,151 @@
+//! Aligned console tables + CSV output for the experiment drivers.
+//!
+//! Every experiment driver (`exp/*`) prints its result twice: a
+//! human-readable aligned table mirroring the paper's layout, and a CSV
+//! file under `results/` for plotting.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// A simple column-aligned table builder.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with per-column alignment (numbers right, text left).
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        let all = std::iter::once(&self.header).chain(self.rows.iter());
+        for row in all {
+            for (i, cell) in row.iter().enumerate() {
+                width[i] = width[i].max(cell.chars().count());
+            }
+        }
+        let numeric: Vec<bool> = (0..ncol)
+            .map(|i| {
+                !self.rows.is_empty()
+                    && self.rows.iter().all(|r| r[i].parse::<f64>().is_ok() || r[i] == "-")
+            })
+            .collect();
+        let mut out = String::new();
+        let fmt_row = |row: &[String], out: &mut String| {
+            for (i, cell) in row.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                let pad = width[i] - cell.chars().count();
+                if numeric[i] {
+                    let _ = write!(out, "{}{}", " ".repeat(pad), cell);
+                } else {
+                    let _ = write!(out, "{}{}", cell, " ".repeat(pad));
+                }
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.header, &mut out);
+        let total: usize = width.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(row, &mut out);
+        }
+        out
+    }
+
+    /// CSV rendering (minimal quoting: fields containing commas/quotes).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        let line = |row: &[String]| row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",");
+        out.push_str(&line(&self.header));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the CSV under `dir/name.csv`, creating `dir` if needed.
+    pub fn save_csv(&self, dir: &Path, name: &str) -> io::Result<std::path::PathBuf> {
+        fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+}
+
+/// Format a float with fixed decimals, trimming "-0.000" to "0.000".
+pub fn num(x: f64, decimals: usize) -> String {
+    let s = format!("{:.*}", decimals, x);
+    if s.starts_with("-0.") && s[1..].parse::<f64>() == Ok(0.0) {
+        s[1..].to_string()
+    } else {
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["name", "val"]);
+        t.row(vec!["abc".into(), "1.25".into()]);
+        t.row(vec!["d".into(), "10.5".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // numeric column right-aligned
+        assert!(lines[2].ends_with("1.25"));
+        assert!(lines[3].ends_with("10.5"));
+    }
+
+    #[test]
+    fn csv_quotes() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x,y".into(), "q\"q".into()]);
+        assert_eq!(t.to_csv(), "a,b\n\"x,y\",\"q\"\"q\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        Table::new(&["a"]).row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn num_formats() {
+        assert_eq!(num(1.23456, 2), "1.23");
+        assert_eq!(num(-1e-12, 3), "0.000");
+    }
+}

@@ -1,0 +1,151 @@
+//! Scoped wall-clock accounting.
+//!
+//! The paper's Figure 1 reports the *fraction of training time spent on
+//! merging*; Table 1 and Figures 2-4 report absolute training times.
+//! [`TimeBook`] accumulates named durations with negligible overhead
+//! (one `Instant::now()` pair per scope) so the trainer can attribute
+//! every hot-path nanosecond to a phase: `step`, `margin`, `select`,
+//! `merge`, `maintenance`.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Accumulates named wall-clock buckets.
+#[derive(Default, Debug, Clone)]
+pub struct TimeBook {
+    buckets: BTreeMap<&'static str, Duration>,
+    counts: BTreeMap<&'static str, u64>,
+}
+
+impl TimeBook {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure into `name`.
+    #[inline]
+    pub fn scope<T>(&mut self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(name, t0.elapsed());
+        out
+    }
+
+    #[inline]
+    pub fn add(&mut self, name: &'static str, d: Duration) {
+        *self.buckets.entry(name).or_default() += d;
+        *self.counts.entry(name).or_default() += 1;
+    }
+
+    pub fn get(&self, name: &str) -> Duration {
+        self.buckets.get(name).copied().unwrap_or_default()
+    }
+
+    pub fn count(&self, name: &str) -> u64 {
+        self.counts.get(name).copied().unwrap_or_default()
+    }
+
+    /// Total across all buckets.
+    pub fn total(&self) -> Duration {
+        self.buckets.values().sum()
+    }
+
+    /// `buckets[name] / reference` as a fraction in [0, 1]; 0 if empty.
+    pub fn fraction_of(&self, name: &str, reference: Duration) -> f64 {
+        if reference.is_zero() {
+            return 0.0;
+        }
+        self.get(name).as_secs_f64() / reference.as_secs_f64()
+    }
+
+    /// Merge another book into this one (used when joining worker threads).
+    pub fn absorb(&mut self, other: &TimeBook) {
+        for (k, v) in &other.buckets {
+            *self.buckets.entry(k).or_default() += *v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(k).or_default() += *v;
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&'static str, Duration, u64)> + '_ {
+        self.buckets
+            .iter()
+            .map(|(k, v)| (*k, *v, self.count(k)))
+    }
+
+    /// Render a compact one-line summary, e.g. for progress logs.
+    pub fn summary(&self) -> String {
+        let mut parts: Vec<String> = self
+            .iter()
+            .map(|(k, d, n)| format!("{k}={:.3}s/{n}", d.as_secs_f64()))
+            .collect();
+        parts.sort();
+        parts.join(" ")
+    }
+}
+
+/// RAII guard alternative for call-sites where a closure is awkward.
+pub struct ScopeGuard<'a> {
+    book: &'a mut TimeBook,
+    name: &'static str,
+    start: Instant,
+}
+
+impl<'a> ScopeGuard<'a> {
+    pub fn new(book: &'a mut TimeBook, name: &'static str) -> Self {
+        Self { book, name, start: Instant::now() }
+    }
+}
+
+impl Drop for ScopeGuard<'_> {
+    fn drop(&mut self) {
+        self.book.add(self.name, self.start.elapsed());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_counts() {
+        let mut tb = TimeBook::new();
+        for _ in 0..3 {
+            tb.scope("a", || std::thread::sleep(Duration::from_millis(2)));
+        }
+        assert_eq!(tb.count("a"), 3);
+        assert!(tb.get("a") >= Duration::from_millis(6));
+    }
+
+    #[test]
+    fn fraction_and_total() {
+        let mut tb = TimeBook::new();
+        tb.add("merge", Duration::from_millis(30));
+        tb.add("step", Duration::from_millis(70));
+        let f = tb.fraction_of("merge", tb.total());
+        assert!((f - 0.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn absorb_merges_buckets() {
+        let mut a = TimeBook::new();
+        a.add("x", Duration::from_millis(5));
+        let mut b = TimeBook::new();
+        b.add("x", Duration::from_millis(7));
+        b.add("y", Duration::from_millis(1));
+        a.absorb(&b);
+        assert_eq!(a.get("x"), Duration::from_millis(12));
+        assert_eq!(a.count("x"), 2);
+        assert_eq!(a.get("y"), Duration::from_millis(1));
+    }
+
+    #[test]
+    fn guard_records_on_drop() {
+        let mut tb = TimeBook::new();
+        {
+            let _g = ScopeGuard::new(&mut tb, "g");
+        }
+        assert_eq!(tb.count("g"), 1);
+    }
+}

@@ -1,0 +1,191 @@
+//! XLA (AOT artifacts through PJRT) vs native backend equivalence.
+//!
+//! The native backend mirrors the L1 kernel math exactly (same golden
+//! constants, same GD scheme); these tests pin the two together across
+//! artifact shapes.  They require `artifacts/` to exist (`make
+//! artifacts`) and are skipped with a loud message otherwise —
+//! `make test` always builds artifacts first.
+
+use mmbsgd::data::DenseMatrix;
+use mmbsgd::model::SvStore;
+use mmbsgd::rng::Xoshiro256;
+use mmbsgd::runtime::{ArtifactRegistry, Backend, NativeBackend, XlaBackend};
+
+fn artifacts_available() -> bool {
+    let dir = ArtifactRegistry::default_dir();
+    if ArtifactRegistry::load(&dir).is_ok() {
+        true
+    } else {
+        eprintln!(
+            "SKIP: no artifacts at {} — run `make artifacts`",
+            dir.display()
+        );
+        false
+    }
+}
+
+fn xla() -> XlaBackend {
+    XlaBackend::new(&ArtifactRegistry::default_dir()).expect("XlaBackend")
+}
+
+fn random_store(b: usize, d: usize, seed: u64) -> SvStore {
+    let mut rng = Xoshiro256::new(seed);
+    let mut s = SvStore::new(d);
+    for _ in 0..b {
+        let x: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        s.push(&x, rng.next_gaussian() * 0.5);
+    }
+    s
+}
+
+#[test]
+fn registry_has_expected_lattice() {
+    if !artifacts_available() {
+        return;
+    }
+    let reg = ArtifactRegistry::load(&ArtifactRegistry::default_dir()).unwrap();
+    // every entry point present
+    for entry in ["margins", "merge_scores", "merge_gd"] {
+        assert!(
+            reg.artifacts.iter().any(|a| a.entry == entry),
+            "missing {entry} artifacts"
+        );
+    }
+    // variant selection picks smallest fitting pads
+    let m = reg.find_margins(100, 20, 1).expect("margins variant");
+    assert_eq!((m.b_pad, m.d_pad), (128, 32));
+    let m = reg.find_margins(129, 20, 256).expect("margins variant");
+    assert_eq!((m.b_pad, m.d_pad), (256, 32));
+    let s = reg.find_merge_scores(1000, 123).expect("merge_scores variant");
+    assert_eq!((s.b_pad, s.d_pad), (1024, 128));
+    assert!(reg.find_merge_scores(5000, 20).is_none(), "beyond lattice must be None");
+    let g = reg.find_merge_gd(300).expect("merge_gd variant");
+    assert_eq!(g.d_pad, 512);
+}
+
+#[test]
+fn margins_match_native() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut x = xla();
+    let mut n = NativeBackend::new();
+    for &(b, d, seed) in &[(10usize, 5usize, 1u64), (100, 22, 2), (300, 68, 3)] {
+        let svs = random_store(b, d, seed);
+        let mut rng = Xoshiro256::new(seed ^ 77);
+        let rows: Vec<Vec<f32>> = (0..7)
+            .map(|_| (0..d).map(|_| rng.next_gaussian() as f32).collect())
+            .collect();
+        let q = DenseMatrix::from_rows(rows);
+        let gamma = 0.7;
+        let mx = x.margins(&svs, gamma, &q);
+        let mn = n.margins(&svs, gamma, &q);
+        for (a, b_) in mx.iter().zip(&mn) {
+            assert!(
+                (a - b_).abs() < 1e-3 * (1.0 + b_.abs()),
+                "margin mismatch {a} vs {b_} (B={b}, d={d})"
+            );
+        }
+        // single-point margin agrees with batch
+        let m1 = x.margin1(&svs, gamma, q.row(0));
+        assert!((m1 - mn[0]).abs() < 1e-3 * (1.0 + mn[0].abs()));
+    }
+}
+
+#[test]
+fn merge_scores_match_native() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut x = xla();
+    let mut n = NativeBackend::new();
+    for &(b, d, seed) in &[(12usize, 3usize, 4u64), (60, 22, 5), (200, 68, 6)] {
+        let svs = random_store(b, d, seed);
+        let gamma = 1.3;
+        let i = svs.min_abs_alpha().unwrap();
+        let sx = x.merge_scores(&svs, gamma, i);
+        let sn = n.merge_scores(&svs, gamma, i);
+        assert!(sx.wd[i].is_infinite() && sn.wd[i].is_infinite());
+        let mut rank_x: Vec<usize> = (0..b).filter(|&j| j != i).collect();
+        let mut rank_n = rank_x.clone();
+        rank_x.sort_by(|&a, &c| sx.wd[a].total_cmp(&sx.wd[c]));
+        rank_n.sort_by(|&a, &c| sn.wd[a].total_cmp(&sn.wd[c]));
+        // XLA's chosen partner must be ε-optimal under the native scores
+        // (exact argmin can flip between f32 and f64 on near-ties).
+        let (jx, jn) = (rank_x[0], rank_n[0]);
+        assert!(
+            sn.wd[jx] <= sn.wd[jn] + 5e-3 * (1.0 + sn.wd[jn].abs()),
+            "xla best partner {jx} (native wd {}) not ε-optimal vs {jn} ({}) (B={b}, d={d})",
+            sn.wd[jx],
+            sn.wd[jn]
+        );
+        for j in 0..b {
+            if j == i {
+                continue;
+            }
+            let (a, c) = (sx.wd[j], sn.wd[j]);
+            assert!(
+                (a - c).abs() < 5e-3 * (1.0 + c.abs()),
+                "wd[{j}] {a} vs {c} (B={b}, d={d})"
+            );
+            assert!(
+                (sx.d2[j] - sn.d2[j]).abs() < 1e-3 * (1.0 + sn.d2[j]),
+                "d2[{j}] mismatch"
+            );
+        }
+    }
+}
+
+#[test]
+fn merge_gd_matches_native() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut x = xla();
+    let mut n = NativeBackend::new();
+    let mut rng = Xoshiro256::new(9);
+    for &m in &[2usize, 3, 5, 10] {
+        let d = 8;
+        let center: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        let pts_owned: Vec<(Vec<f32>, f64)> = (0..m)
+            .map(|_| {
+                let p: Vec<f32> = center
+                    .iter()
+                    .map(|&c| c + 0.3 * rng.next_gaussian() as f32)
+                    .collect();
+                (p, 0.1 + rng.next_f64() * 0.5)
+            })
+            .collect();
+        let pts: Vec<(&[f32], f64)> =
+            pts_owned.iter().map(|(p, a)| (p.as_slice(), *a)).collect();
+        let gamma = 0.8;
+        let (zx, ax, wx) = x.merge_gd(&pts, gamma);
+        let (zn, an, wn) = n.merge_gd(&pts, gamma);
+        // Both must find (numerically) equally good merges; the exact z
+        // may differ (flat optima), so compare achieved degradation.
+        assert!(
+            (wx - wn).abs() < 5e-3 * (1.0 + wn.abs()) + 1e-4,
+            "M={m}: wd {wx} vs {wn}"
+        );
+        assert!((ax - an).abs() < 0.05 * (1.0 + an.abs()), "M={m}: a_z {ax} vs {an}");
+        assert_eq!(zx.len(), zn.len());
+    }
+}
+
+#[test]
+fn hybrid_backend_routes_consistently() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut h = mmbsgd::runtime::HybridBackend::from_default_dir().unwrap();
+    let mut n = NativeBackend::new();
+    let svs = random_store(50, 10, 11);
+    let q = DenseMatrix::from_rows(vec![vec![0.1f32; 10], vec![-0.2f32; 10]]);
+    let gamma = 0.9;
+    let hm = h.margins(&svs, gamma, &q);
+    let nm = n.margins(&svs, gamma, &q);
+    for (a, b) in hm.iter().zip(&nm) {
+        assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()));
+    }
+    assert!((h.margin1(&svs, gamma, q.row(0)) - nm[0]).abs() < 1e-9); // native path: exact
+}

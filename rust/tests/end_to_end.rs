@@ -1,0 +1,91 @@
+//! End-to-end system test: the full three-layer stack on a real small
+//! workload, including the XLA hot path when artifacts are present.
+//! A scaled-down version of `examples/train_adult.rs` suitable for CI.
+
+use mmbsgd::config::{BackendChoice, TrainConfig};
+use mmbsgd::coordinator::build_backend;
+use mmbsgd::data::synth::{dataset, SynthSpec};
+use mmbsgd::runtime::ArtifactRegistry;
+use mmbsgd::solver::{bsgd, NoopObserver};
+
+fn artifacts_available() -> bool {
+    ArtifactRegistry::load(&ArtifactRegistry::default_dir()).is_ok()
+}
+
+fn adult_cfg(n: usize, backend: BackendChoice) -> TrainConfig {
+    let spec = SynthSpec::adult_like(1.0);
+    TrainConfig {
+        lambda: TrainConfig::lambda_from_c(spec.c, n),
+        gamma: spec.gamma,
+        budget: 48,
+        mergees: 4,
+        epochs: 1,
+        seed: 1,
+        eval_every: 0,
+        backend,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn native_end_to_end_adult_twin() {
+    let split = dataset(&SynthSpec::adult_like(0.03), 1);
+    let cfg = adult_cfg(split.train.len(), BackendChoice::Native);
+    let mut backend = build_backend(cfg.backend).unwrap();
+    let out = bsgd::train_full(&split.train, &cfg, backend.as_mut(), Some(&split.test), &mut NoopObserver);
+    let acc = bsgd::evaluate(&out.model, backend.as_mut(), &split.test);
+    // ADULT twin: majority class ~76%; a working model must beat it.
+    assert!(acc > 0.78, "accuracy {acc}");
+    assert!(out.maintenance_events > 0);
+    assert!(out.model.svs.len() <= 48);
+}
+
+#[test]
+fn hybrid_end_to_end_matches_native_accuracy() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        return;
+    }
+    let split = dataset(&SynthSpec::adult_like(0.01), 2);
+    let cfg_n = adult_cfg(split.train.len(), BackendChoice::Native);
+    let mut be_n = build_backend(cfg_n.backend).unwrap();
+    let out_n = bsgd::train_full(&split.train, &cfg_n, be_n.as_mut(), None, &mut NoopObserver);
+    let acc_n = bsgd::evaluate(&out_n.model, be_n.as_mut(), &split.test);
+
+    let cfg_h = adult_cfg(split.train.len(), BackendChoice::Hybrid);
+    let mut be_h = build_backend(cfg_h.backend).unwrap();
+    let out_h = bsgd::train_full(&split.train, &cfg_h, be_h.as_mut(), None, &mut NoopObserver);
+    let acc_h = bsgd::evaluate(&out_h.model, be_h.as_mut(), &split.test);
+
+    // Same stream, same algorithm, different arithmetic precision in the
+    // merge scoring: model trajectories can diverge on near-ties, but the
+    // resulting accuracy must be comparable.
+    assert!(
+        (acc_n - acc_h).abs() < 0.06,
+        "native {acc_n} vs hybrid {acc_h} diverged"
+    );
+    assert!(out_h.model.svs.len() <= 48);
+    assert_eq!(out_n.steps, out_h.steps);
+}
+
+#[test]
+fn full_xla_end_to_end_small() {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        return;
+    }
+    // Tiny run with EVERYTHING through PJRT (margin1 included): proves
+    // the rust binary can train with python fully out of the loop and
+    // all numerics coming from the AOT artifacts.
+    let split = dataset(&SynthSpec::skin_like(0.0008), 3);
+    let mut cfg = adult_cfg(split.train.len(), BackendChoice::Xla);
+    let spec = SynthSpec::skin_like(1.0);
+    cfg.gamma = spec.gamma;
+    cfg.lambda = TrainConfig::lambda_from_c(spec.c, split.train.len());
+    cfg.budget = 16;
+    let mut backend = build_backend(cfg.backend).unwrap();
+    let out = bsgd::train_full(&split.train, &cfg, backend.as_mut(), None, &mut NoopObserver);
+    let acc = bsgd::evaluate(&out.model, backend.as_mut(), &split.test);
+    assert!(acc > 0.7, "xla-backend accuracy {acc}");
+    assert!(out.model.svs.len() <= 16);
+}

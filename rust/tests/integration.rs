@@ -1,0 +1,201 @@
+//! Cross-module integration tests: data pipeline → solver → model
+//! persistence → coordinator grid, plus the theory-facing invariants
+//! that span modules.
+
+use mmbsgd::budget::{Budget, MaintenanceKind};
+use mmbsgd::config::TrainConfig;
+use mmbsgd::coordinator::{run_grid, RunSpec};
+use mmbsgd::data::synth::{dataset, SynthSpec};
+use mmbsgd::data::{libsvm, split};
+use mmbsgd::model::{SvStore, SvmModel};
+use mmbsgd::rng::Xoshiro256;
+use mmbsgd::runtime::NativeBackend;
+use mmbsgd::solver::{bsgd, pegasos, smo};
+
+fn tiny_cfg(spec: &SynthSpec, n: usize, budget: usize, m: usize) -> TrainConfig {
+    TrainConfig {
+        lambda: TrainConfig::lambda_from_c(spec.c, n),
+        gamma: spec.gamma,
+        budget,
+        mergees: m,
+        epochs: 1,
+        seed: 3,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn libsvm_roundtrip_preserves_training_behaviour() {
+    // synth → write LIBSVM text → parse → identical training outcome
+    let split_ = dataset(&SynthSpec::ijcnn_like(0.01), 1);
+    let text = libsvm::write(&split_.train);
+    let dir = std::env::temp_dir().join("mmbsgd_test_libsvm.txt");
+    std::fs::write(&dir, &text).unwrap();
+    let reparsed = libsvm::load(&dir, Some(split_.train.dim())).unwrap();
+    assert_eq!(reparsed.len(), split_.train.len());
+    let spec = SynthSpec::ijcnn_like(0.01);
+    let cfg = tiny_cfg(&spec, split_.train.len(), 32, 3);
+    let a = bsgd::train(&split_.train, &cfg);
+    let b = bsgd::train(&reparsed, &cfg);
+    assert_eq!(a.margin_violations, b.margin_violations);
+    assert_eq!(a.model.svs.len(), b.model.svs.len());
+    std::fs::remove_file(&dir).ok();
+}
+
+#[test]
+fn model_survives_save_load_with_identical_predictions() {
+    let split_ = dataset(&SynthSpec::phishing_like(0.02), 2);
+    let spec = SynthSpec::phishing_like(0.02);
+    let cfg = tiny_cfg(&spec, split_.train.len(), 48, 4);
+    let out = bsgd::train(&split_.train, &cfg);
+    let path = std::env::temp_dir().join("mmbsgd_test_model.txt");
+    out.model.save(&path).unwrap();
+    let loaded = SvmModel::load(&path).unwrap();
+    for i in 0..split_.test.len().min(50) {
+        let x = split_.test.sample(i).x;
+        let (a, b) = (out.model.decision(x), loaded.decision(x));
+        assert!(
+            (a - b).abs() < 1e-5 * (1.0 + a.abs()),
+            "prediction drift after save/load: {a} vs {b}"
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn theorem1_gradient_error_shrinks_with_budget() {
+    // Theorem 1: the regret bound degrades with the mean weight
+    // degradation. Larger budgets must yield smaller mean wd per event.
+    let split_ = dataset(&SynthSpec::adult_like(0.02), 4);
+    let spec = SynthSpec::adult_like(0.02);
+    let mut wds = Vec::new();
+    for budget in [16usize, 64, 160] {
+        let cfg = tiny_cfg(&spec, split_.train.len(), budget, 3);
+        let out = bsgd::train(&split_.train, &cfg);
+        if out.maintenance_events > 0 {
+            wds.push(out.mean_weight_degradation);
+        }
+    }
+    assert!(wds.len() >= 2, "need at least two budgets that trigger maintenance");
+    assert!(
+        wds.windows(2).all(|w| w[1] <= w[0] * 1.5),
+        "mean wd should not grow with budget: {wds:?}"
+    );
+    assert!(
+        wds.last().unwrap() < &(wds[0] * 0.9),
+        "largest budget should merge more cheaply: {wds:?}"
+    );
+}
+
+#[test]
+fn multimerge_speedup_and_event_reduction() {
+    // The core paper claim, end to end: multi-merge reduces maintenance
+    // events by ~(M-1)x and does not destroy accuracy.
+    let split_ = dataset(&SynthSpec::ijcnn_like(0.04), 5);
+    let spec = SynthSpec::ijcnn_like(0.04);
+    let cfg2 = tiny_cfg(&spec, split_.train.len(), 20, 2);
+    let cfg5 = tiny_cfg(&spec, split_.train.len(), 20, 5);
+    let out2 = bsgd::train(&split_.train, &cfg2);
+    let out5 = bsgd::train(&split_.train, &cfg5);
+    let acc2 = out2.model.accuracy(&split_.test);
+    let acc5 = out5.model.accuracy(&split_.test);
+    // Ideal reduction is (M-1)x = 4x; the trajectory change (merged SVs
+    // absorb future violators differently) erodes it — require > 2x.
+    assert!(
+        out5.maintenance_events * 2 < out2.maintenance_events,
+        "events: M=5 {} vs M=2 {}",
+        out5.maintenance_events,
+        out2.maintenance_events
+    );
+    assert!(
+        acc5 > acc2 - 0.05,
+        "M=5 accuracy {acc5} collapsed vs M=2 {acc2}"
+    );
+}
+
+#[test]
+fn smo_and_bsgd_agree_on_easy_data() {
+    let split_ = dataset(&SynthSpec::skin_like(0.002), 6);
+    let spec = SynthSpec::skin_like(0.002);
+    let (smo_model, stats) = smo::train(
+        &split_.train,
+        &smo::SmoParams { c: spec.c, gamma: spec.gamma, ..Default::default() },
+    );
+    assert!(stats.converged);
+    let smo_acc = smo_model.accuracy(&split_.test);
+    let cfg = tiny_cfg(&spec, split_.train.len(), 64, 3);
+    let out = bsgd::train(&split_.train, &cfg);
+    let bsgd_acc = out.model.accuracy(&split_.test);
+    assert!(smo_acc > 0.9, "smo {smo_acc}");
+    assert!(bsgd_acc > smo_acc - 0.1, "bsgd {bsgd_acc} too far below smo {smo_acc}");
+}
+
+#[test]
+fn pegasos_is_bsgd_upper_envelope() {
+    // ADULT twin: noisy, so the unbudgeted model accumulates many SVs.
+    let split_ = dataset(&SynthSpec::adult_like(0.02), 7);
+    let spec = SynthSpec::adult_like(0.02);
+    let cfg = tiny_cfg(&spec, split_.train.len(), 32, 2);
+    let unb = pegasos::train(&split_.train, &cfg);
+    assert_eq!(unb.maintenance_events, 0);
+    assert!(unb.model.svs.len() >= 32, "unbudgeted model should exceed the budget");
+}
+
+#[test]
+fn coordinator_grid_runs_mixed_strategies() {
+    let spec = SynthSpec::ijcnn_like(0.01);
+    let mut specs = Vec::new();
+    for (i, kind) in [
+        MaintenanceKind::Removal,
+        MaintenanceKind::Merge { m: 2 },
+        MaintenanceKind::Merge { m: 5 },
+        MaintenanceKind::MergeGd { m: 3 },
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let mut cfg = tiny_cfg(&spec, 1, 24, 3);
+        cfg.lambda = -spec.c; // C sentinel resolved by the coordinator
+        cfg.maintenance = Some(kind);
+        specs.push(RunSpec {
+            name: format!("grid{i}"),
+            data: spec.clone(),
+            data_seed: 1,
+            cfg,
+        });
+    }
+    let results = run_grid(specs, 2);
+    for r in results {
+        let r = r.unwrap();
+        assert!(r.test_accuracy > 0.5, "{}: acc {}", r.name, r.test_accuracy);
+        assert!(r.n_svs <= 24);
+    }
+}
+
+#[test]
+fn budget_struct_accumulates_across_events() {
+    let mut svs = SvStore::new(2);
+    let mut rng = Xoshiro256::new(8);
+    let mut budget = Budget::new(8, MaintenanceKind::Merge { m: 3 });
+    let mut be = NativeBackend::new();
+    for _ in 0..30 {
+        let x = [rng.next_gaussian() as f32, rng.next_gaussian() as f32];
+        svs.push(&x, 0.1 + rng.next_f64());
+        budget.enforce(&mut svs, 1.0, &mut be);
+        assert!(svs.len() <= 8);
+    }
+    assert!(budget.events >= 10);
+    assert!(budget.total_wd > 0.0);
+    assert!(budget.mean_wd() > 0.0);
+    assert_eq!(budget.total_removed, budget.events * 2); // M-1 = 2 per event
+}
+
+#[test]
+fn stratified_subsample_feeds_smo_reference() {
+    let split_ = dataset(&SynthSpec::adult_like(0.05), 9);
+    let sub = split::stratified_subsample(&split_.train, 300, 1);
+    assert_eq!(sub.len(), 300);
+    let frac_full = split_.train.positive_fraction();
+    let frac_sub = sub.positive_fraction();
+    assert!((frac_full - frac_sub).abs() < 0.05);
+}

@@ -1,0 +1,200 @@
+//! Property-based tests (first-party harness — proptest is not vendored
+//! in this offline image): randomized sweeps over budget-maintenance and
+//! solver invariants with seed reporting on failure.
+
+use mmbsgd::budget::golden::{self, GS_ITERS};
+use mmbsgd::budget::{Budget, MaintenanceKind};
+use mmbsgd::config::TrainConfig;
+use mmbsgd::data::synth::{dataset, SynthSpec};
+use mmbsgd::kernel::{sq_dist, Gaussian, Kernel};
+use mmbsgd::model::SvStore;
+use mmbsgd::rng::Xoshiro256;
+use mmbsgd::runtime::{exact_multi_wd, Backend, NativeBackend};
+use mmbsgd::solver::bsgd;
+
+/// Tiny property harness: run `f` for `cases` random seeds; on failure
+/// report the seed so the case replays deterministically.
+fn forall(name: &str, cases: u64, f: impl Fn(&mut Xoshiro256)) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case * 0x9E37_79B9);
+        let mut rng = Xoshiro256::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {e:?}");
+        }
+    }
+}
+
+fn random_store(rng: &mut Xoshiro256, b: usize, d: usize, mixed: bool) -> SvStore {
+    let mut s = SvStore::new(d);
+    for _ in 0..b {
+        let x: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        let mut a = 0.05 + rng.next_f64();
+        if mixed && rng.next_f64() < 0.5 {
+            a = -a;
+        }
+        s.push(&x, a);
+    }
+    s
+}
+
+#[test]
+fn prop_binary_merge_degradation_bounds() {
+    // 0 <= wd <= ||a_i φ_i + a_j φ_j||², and wd <= min(a_i², a_j²)(1−k²)
+    // (merging is at least as good as remove+project of either point).
+    forall("binary merge wd bounds", 300, |rng| {
+        let a_i = (rng.next_f64() - 0.3) * 2.0;
+        let a_j = (rng.next_f64() - 0.3) * 2.0;
+        if a_i == 0.0 || a_j == 0.0 {
+            return;
+        }
+        let c = rng.next_f64() * 20.0 + 1e-6;
+        let pm = golden::merge_pair_params(a_i, a_j, c, GS_ITERS);
+        let k = (-c).exp();
+        let norm2 = a_i * a_i + a_j * a_j + 2.0 * a_i * a_j * k;
+        assert!(pm.wd >= -1e-9, "negative wd {}", pm.wd);
+        assert!(pm.wd <= norm2 + 1e-9, "wd {} above total norm {norm2}", pm.wd);
+        let endpoint = a_i.abs().min(a_j.abs()).powi(2) * (1.0 - k * k);
+        assert!(
+            pm.wd <= endpoint + 1e-7,
+            "wd {} worse than endpoint bound {endpoint} (a_i={a_i}, a_j={a_j}, c={c})",
+            pm.wd
+        );
+    });
+}
+
+#[test]
+fn prop_merge_pair_consistency() {
+    // merge_pair's returned (z, a_z) must achieve the wd it reports
+    // when audited with the exact formula.
+    forall("merge pair exactness", 200, |rng| {
+        let d = 1 + rng.next_below(16);
+        let x_i: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        let x_j: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        let a_i = 0.1 + rng.next_f64();
+        let a_j = 0.1 + rng.next_f64();
+        let gamma = 0.05 + rng.next_f64() * 3.0;
+        let (z, a_z, wd) = golden::merge_pair(&x_i, a_i, &x_j, a_j, gamma, GS_ITERS);
+        let pts: Vec<(&[f32], f64)> = vec![(&x_i, a_i), (&x_j, a_j)];
+        let audit = exact_multi_wd(&pts, &z, a_z, gamma);
+        assert!(
+            (audit - wd).abs() < 1e-6 * (1.0 + wd.abs()),
+            "reported wd {wd} vs audited {audit}"
+        );
+    });
+}
+
+#[test]
+fn prop_maintenance_always_enforces_budget_and_nonnegative_wd() {
+    forall("maintenance enforces budget", 60, |rng| {
+        let d = 1 + rng.next_below(8);
+        let b = 4 + rng.next_below(40);
+        let overflow = 1 + rng.next_below(6);
+        let kinds = [
+            MaintenanceKind::Removal,
+            MaintenanceKind::Projection,
+            MaintenanceKind::Merge { m: 2 + rng.next_below(6) },
+            MaintenanceKind::MergeGd { m: 2 + rng.next_below(6) },
+        ];
+        let kind = kinds[rng.next_below(4)];
+        let mut svs = random_store(rng, b + overflow, d, true);
+        let mut budget = Budget::new(b, kind);
+        let mut be = NativeBackend::new();
+        let gamma = 0.1 + rng.next_f64() * 2.0;
+        budget.enforce(&mut svs, gamma, &mut be);
+        assert!(svs.len() <= b, "{kind:?} left {} > {b}", svs.len());
+        assert!(budget.total_wd >= -1e-6, "{kind:?} negative wd {}", budget.total_wd);
+        for j in 0..svs.len() {
+            assert!(svs.alpha(j).is_finite());
+            assert!(svs.point(j).iter().all(|v| v.is_finite()));
+        }
+    });
+}
+
+#[test]
+fn prop_margin_linearity_in_alpha() {
+    // margins are linear in the coefficient vector: scaling every α by c
+    // scales every margin by c.
+    forall("margin linearity", 100, |rng| {
+        let d = 1 + rng.next_below(12);
+        let b = 3 + rng.next_below(30);
+        let mut svs = random_store(rng, b, d, true);
+        let x: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        let gamma = 0.1 + rng.next_f64();
+        let mut be = NativeBackend::new();
+        let f1 = be.margin1(&svs, gamma, &x);
+        let c = 0.25 + rng.next_f64();
+        svs.scale_all(c);
+        let f2 = be.margin1(&svs, gamma, &x);
+        assert!(
+            (f2 - c * f1).abs() < 1e-9 * (1.0 + f1.abs()),
+            "margin not linear: {f2} vs {}",
+            c * f1
+        );
+    });
+}
+
+#[test]
+fn prop_gaussian_kernel_psd_on_small_sets() {
+    // 3-point Gram matrices must be PSD (Mercer): check via eigen-free
+    // criteria (diagonal 1, symmetric, det of all leading minors >= 0).
+    forall("gaussian psd", 200, |rng| {
+        let d = 1 + rng.next_below(6);
+        let gamma = 0.1 + rng.next_f64() * 4.0;
+        let kern = Gaussian::new(gamma);
+        let pts: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..d).map(|_| rng.next_gaussian() as f32).collect())
+            .collect();
+        let k = |i: usize, j: usize| kern.eval(&pts[i], &pts[j]);
+        let (a, b, c) = (k(0, 1), k(0, 2), k(1, 2));
+        // leading minors of [[1,a,b],[a,1,c],[b,c,1]]
+        let m2 = 1.0 - a * a;
+        let m3 = 1.0 + 2.0 * a * b * c - a * a - b * b - c * c;
+        assert!(m2 >= -1e-12, "2x2 minor {m2}");
+        assert!(m3 >= -1e-9, "3x3 minor {m3}");
+    });
+}
+
+#[test]
+fn prop_sq_dist_metric_axioms() {
+    forall("sq_dist axioms", 200, |rng| {
+        let d = 1 + rng.next_below(64);
+        let x: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        let y: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        let z: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+        assert!(sq_dist(&x, &x) < 1e-12);
+        assert!((sq_dist(&x, &y) - sq_dist(&y, &x)).abs() < 1e-9);
+        // triangle inequality on the *root* distances
+        let (dxy, dyz, dxz) = (
+            sq_dist(&x, &y).sqrt(),
+            sq_dist(&y, &z).sqrt(),
+            sq_dist(&x, &z).sqrt(),
+        );
+        assert!(dxz <= dxy + dyz + 1e-6);
+    });
+}
+
+#[test]
+fn prop_training_is_seed_deterministic_and_budget_safe() {
+    forall("training determinism", 6, |rng| {
+        let scale = 0.005 + rng.next_f64() * 0.01;
+        let spec = SynthSpec::ijcnn_like(scale);
+        let split = dataset(&spec, rng.next_u64());
+        let cfg = TrainConfig {
+            lambda: TrainConfig::lambda_from_c(spec.c, split.train.len()),
+            gamma: spec.gamma,
+            budget: 8 + rng.next_below(40),
+            mergees: 2 + rng.next_below(8),
+            epochs: 1,
+            seed: rng.next_u64(),
+            ..TrainConfig::default()
+        };
+        let a = bsgd::train(&split.train, &cfg);
+        let b = bsgd::train(&split.train, &cfg);
+        assert!(a.model.svs.len() <= cfg.budget);
+        assert_eq!(a.margin_violations, b.margin_violations);
+        assert_eq!(a.model.svs.points_flat(), b.model.svs.points_flat());
+        let acc = a.model.accuracy(&split.test);
+        assert!((0.0..=1.0).contains(&acc));
+    });
+}
