@@ -1,16 +1,68 @@
 //! First-party micro-bench harness (criterion is not vendored in this
 //! offline image).  Adaptive iteration count, warmup, median/p10/p90
 //! reporting — enough statistical hygiene for the before/after deltas
-//! recorded in EXPERIMENTS.md §Perf.
+//! recorded in EXPERIMENTS.md §Perf.  Every report is also recorded so
+//! drivers can dump a machine-readable summary via [`emit_json`].
 
+// Included via `#[path]` by several bench drivers; not every driver
+// uses every helper.
+#![allow(dead_code)]
+
+use std::cell::RefCell;
 use std::time::{Duration, Instant};
 
+#[derive(Clone)]
 pub struct BenchReport {
     pub name: String,
     pub median: Duration,
     pub p10: Duration,
     pub p90: Duration,
     pub iters: usize,
+}
+
+thread_local! {
+    static RECORDS: RefCell<Vec<BenchReport>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Median of a recorded bench by exact name (None if it never ran).
+pub fn recorded_median(name: &str) -> Option<Duration> {
+    RECORDS.with(|r| {
+        r.borrow().iter().find(|b| b.name == name).map(|b| b.median)
+    })
+}
+
+/// Write every recorded report (plus caller-computed derived ratios) as
+/// a JSON document — the perf evidence file checked by CI and quoted in
+/// EXPERIMENTS.md §Perf.
+pub fn emit_json(path: &str, derived: &[(&str, f64)]) {
+    use mmbsgd::util::json::{obj, to_string, Json};
+    let runs: Vec<Json> = RECORDS.with(|r| {
+        r.borrow()
+            .iter()
+            .map(|b| {
+                obj(vec![
+                    ("name", Json::Str(b.name.clone())),
+                    ("median_ns", Json::Num(b.median.as_nanos() as f64)),
+                    ("p10_ns", Json::Num(b.p10.as_nanos() as f64)),
+                    ("p90_ns", Json::Num(b.p90.as_nanos() as f64)),
+                    ("iters", Json::Num(b.iters as f64)),
+                ])
+            })
+            .collect()
+    });
+    let derived: Vec<Json> = derived
+        .iter()
+        .map(|(k, v)| obj(vec![("name", Json::Str(k.to_string())), ("value", Json::Num(*v))]))
+        .collect();
+    let doc = obj(vec![
+        ("schema", Json::Str("mmbsgd-bench-v1".into())),
+        ("runs", Json::Arr(runs)),
+        ("derived", Json::Arr(derived)),
+    ]);
+    match std::fs::write(path, to_string(&doc)) {
+        Ok(()) => println!("\n[bench] wrote {path}"),
+        Err(e) => eprintln!("\n[bench] FAILED writing {path}: {e}"),
+    }
 }
 
 /// Benchmark `f`, auto-scaling iterations to ~`budget_ms` of wall clock.
@@ -45,6 +97,7 @@ pub fn bench<T>(name: &str, budget_ms: u64, mut f: impl FnMut() -> T) -> BenchRe
         fmt_dur(rep.p90),
         rep.iters
     );
+    RECORDS.with(|r| r.borrow_mut().push(rep.clone()));
     rep
 }
 

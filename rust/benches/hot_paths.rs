@@ -1,16 +1,21 @@
-//! Hot-path micro benches: the Θ(B·K) margin, the Θ(B·K·G) merge-scoring
-//! pass (native vs XLA artifact), merge executors, and the
+//! Hot-path micro benches: the Θ(B·K) margin (norm-cached vs the seed's
+//! difference-form loop), the merge-scoring pass (LUT vs exact golden
+//! section vs XLA artifact), merge executors, and the
 //! maintenance-strategy ablation (merge vs projection crossover).
 //!
 //! Run: `cargo bench --bench hot_paths [-- <filter>]`
+//!
+//! Always writes `BENCH_hotpaths.json` (all runs + derived speedups) —
+//! the machine-readable evidence for EXPERIMENTS.md §Perf.
 
 #[path = "bench_util.rs"]
 mod bench_util;
-use bench_util::{bench, enabled, group};
+use bench_util::{bench, emit_json, enabled, group, recorded_median};
 
 use mmbsgd::budget::golden::{self, GS_ITERS};
-use mmbsgd::budget::{MaintenanceKind, Maintainer, MergeExec, MultiMerge, Projection};
+use mmbsgd::budget::{MaintenanceKind, Maintainer, MergeExec, MergeLut, MultiMerge, Projection};
 use mmbsgd::data::DenseMatrix;
+use mmbsgd::kernel::{sq_dist, EXP_NEG_CUTOFF};
 use mmbsgd::model::SvStore;
 use mmbsgd::rng::Xoshiro256;
 use mmbsgd::runtime::{ArtifactRegistry, Backend, NativeBackend, XlaBackend};
@@ -34,11 +39,24 @@ fn random_store(b: usize, d: usize, seed: u64) -> SvStore {
     s
 }
 
+/// The seed's margin loop: difference-form squared distance per SV (no
+/// norm cache) — kept verbatim as the before/after baseline.
+fn margin1_seed_loop(svs: &SvStore, gamma: f64, x: &[f32]) -> f64 {
+    let mut f = 0.0;
+    for j in 0..svs.len() {
+        let e = gamma * sq_dist(svs.point(j), x);
+        if e < EXP_NEG_CUTOFF {
+            f += svs.alpha(j) * (-e).exp();
+        }
+    }
+    f
+}
+
 fn main() {
     let gamma = 0.5;
 
     if enabled("margin") {
-        group("margin1 (per-SGD-step cost, native)");
+        group("margin1 (per-SGD-step cost): norm-cached vs seed loop");
         for &(b, d) in &[(128usize, 32usize), (512, 128), (2048, 128)] {
             let svs = random_store(b, d, 1);
             let q: Vec<f32> = vec![0.1; d];
@@ -46,17 +64,26 @@ fn main() {
             bench(&format!("margin1/native/B{b}/d{d}"), 200, || {
                 be.margin1(&svs, gamma, &q)
             });
+            bench(&format!("margin1/seed-loop/B{b}/d{d}"), 200, || {
+                margin1_seed_loop(&svs, gamma, &q)
+            });
         }
     }
 
     if enabled("merge_scores") {
-        group("merge_scores (the paper's Θ(B·K·G) bottleneck)");
+        group("merge_scores (the paper's Θ(B·K·G) bottleneck): lut vs exact");
+        // Build the table outside every timed region.
+        let _ = MergeLut::global();
         for &(b, d) in &[(128usize, 32usize), (512, 128), (2048, 128)] {
             let svs = random_store(b, d, 2);
             let i = svs.min_abs_alpha().unwrap();
-            let mut nat = NativeBackend::new();
-            bench(&format!("merge_scores/native/B{b}/d{d}"), 300, || {
-                nat.merge_scores(&svs, gamma, i)
+            let mut exact = NativeBackend::exact();
+            bench(&format!("merge_scores/native-exact/B{b}/d{d}"), 300, || {
+                exact.merge_scores(&svs, gamma, i)
+            });
+            let mut lut = NativeBackend::new();
+            bench(&format!("merge_scores/native-lut/B{b}/d{d}"), 300, || {
+                lut.merge_scores(&svs, gamma, i)
             });
             if let Ok(mut x) = XlaBackend::new(&ArtifactRegistry::default_dir()) {
                 // compile outside the timed region
@@ -69,9 +96,13 @@ fn main() {
     }
 
     if enabled("golden") {
-        group("binary merge (scalar golden section, G=30)");
+        group("binary merge scoring: scalar golden section (G=30) vs LUT");
         bench("golden/merge_pair_params", 100, || {
             golden::merge_pair_params(0.3, 0.7, 1.7, GS_ITERS)
+        });
+        let lut = MergeLut::global();
+        bench("golden/merge_pair_params_lut", 100, || {
+            lut.merge_pair_params(0.3, 0.7, 1.7)
         });
         let x_i: Vec<f32> = (0..128).map(|i| i as f32 * 0.01).collect();
         let x_j: Vec<f32> = (0..128).map(|i| i as f32 * 0.011).collect();
@@ -139,6 +170,30 @@ fn main() {
             bench("eval/xla/B512/d128/n256", 300, || x.margins(&svs, gamma, &q));
         }
     }
+
+    // Derived acceptance ratios (only for combinations that ran).
+    let ratio = |num: &str, den: &str| -> Option<f64> {
+        let n = recorded_median(num)?.as_secs_f64();
+        let d = recorded_median(den)?.as_secs_f64();
+        if d > 0.0 {
+            Some(n / d)
+        } else {
+            None
+        }
+    };
+    let mut derived: Vec<(&str, f64)> = Vec::new();
+    if let Some(s) = ratio(
+        "merge_scores/native-exact/B512/d128",
+        "merge_scores/native-lut/B512/d128",
+    ) {
+        println!("\nmerge_scores LUT speedup at B=512,d=128: {s:.2}x");
+        derived.push(("speedup/merge_scores_lut_vs_exact/B512/d128", s));
+    }
+    if let Some(s) = ratio("margin1/seed-loop/B512/d128", "margin1/native/B512/d128") {
+        println!("margin1 norm-cache speedup at B=512,d=128: {s:.2}x");
+        derived.push(("speedup/margin1_normcache_vs_seed/B512/d128", s));
+    }
+    emit_json("BENCH_hotpaths.json", &derived);
 
     // Keep MaintenanceKind linked in (ablation completeness).
     let _ = MaintenanceKind::parse("merge:3");

@@ -63,24 +63,31 @@ pub struct PairMerge {
     pub wd: f64,
 }
 
+/// Far-pair closed form (perf, EXPERIMENTS.md §Perf): for c = γd² above
+/// [`crate::kernel::EXP_NEG_CUTOFF`], k_ij = e^-c is below f64 noise and
+/// the optimal merge degenerates to "keep the bigger-|α| point": h at
+/// that endpoint, a_z = its α, wd = min(a_i, a_j)².  Exact to ~e^-80;
+/// skips 60+ exp calls for the (dominant) cross-cluster candidate pairs.
+/// Shared by the exact scorer below and the LUT scorer
+/// ([`crate::budget::MergeLut`]).
+#[inline]
+pub fn far_pair_merge(a_i: f64, a_j: f64) -> PairMerge {
+    let keep_i = a_i.abs() >= a_j.abs();
+    PairMerge {
+        h: if keep_i { 1.0 } else { 0.0 },
+        a_z: if keep_i { a_i } else { a_j },
+        wd: a_i.abs().min(a_j.abs()).powi(2),
+    }
+}
+
 /// Solve the binary merge for coefficients and `c = γ d²`.
 ///
 /// Interval selection per the paper: same-sign coefficients → h∈[0,1]
 /// (convex combination); opposite signs → the optimum lies outside,
 /// search [-1,0] and [1,2] and keep the better.
 pub fn merge_pair_params(a_i: f64, a_j: f64, c: f64, iters: usize) -> PairMerge {
-    // Far-pair shortcut (perf, EXPERIMENTS.md §Perf): for c = γd² above
-    // the cutoff, k_ij = e^-c is below f64 noise and the optimal merge
-    // degenerates to "keep the bigger-|α| point": h at that endpoint,
-    // a_z = its α, wd = min(a_i, a_j)².  Exact to ~e^-80; skips 60+ exp
-    // calls for the (dominant) cross-cluster candidate pairs.
     if c > crate::kernel::EXP_NEG_CUTOFF {
-        let keep_i = a_i.abs() >= a_j.abs();
-        return PairMerge {
-            h: if keep_i { 1.0 } else { 0.0 },
-            a_z: if keep_i { a_i } else { a_j },
-            wd: a_i.abs().min(a_j.abs()).powi(2),
-        };
+        return far_pair_merge(a_i, a_j);
     }
     let (h, gabs) = if a_i * a_j >= 0.0 {
         golden_max(0.0, 1.0, a_i, a_j, c, iters)

@@ -1,0 +1,302 @@
+//! Precomputed golden-section lookup table for binary merge scoring.
+//!
+//! The companion paper (*Speeding Up Budgeted Stochastic Gradient
+//! Descent SVM Training with Precomputed Golden Section Search*, arXiv
+//! 1806.10180) observes that the per-pair golden-section search inside
+//! merge scoring solves a **two-parameter** family of problems: dividing
+//! the objective `g(h) = a_i e^{-c(1-h)²} + a_j e^{-c h²}` by `a_i`
+//! shows that the maximizer `h*` depends only on
+//!
+//! * `c = γ‖x_i − x_j‖²` — the scaled squared distance, and
+//! * `r = a_j / a_i`     — the coefficient ratio,
+//!
+//! so `h*(c, r)` can be tabulated once and merely *interpolated* per
+//! candidate pair, collapsing the Θ(B·K·G) scoring pass of
+//! [`crate::runtime::NativeBackend::merge_scores`] to Θ(B·K + B): the
+//! G = 30 golden-section iterations (≈ 120 `exp` calls per pair) become
+//! one bilinear lookup plus three `exp` calls.
+//!
+//! **Canonical domain.** Swapping the pair maps `h → 1−h` and
+//! `r → 1/r`, and flipping both coefficient signs leaves `h` unchanged,
+//! so every pair reduces to `|a_i| ≥ |a_j|`, i.e. `r ∈ [−1, 1]`.  On
+//! that domain the optimum always lies on the dominant point's branch
+//! (`h ∈ [0.5, 1]` for same-sign pairs, `h ∈ [1, 2]` for opposite
+//! signs) — searching only that branch at build time keeps the stored
+//! surface single-valued and continuous, which plain golden section on
+//! the full interval is *not*: past the pitchfork bifurcation at
+//! `c = 2, r = 1` the objective is bimodal and golden section lands on
+//! either peak, and interpolating across a branch flip would park `h`
+//! in the valley between them.
+//!
+//! **Grid.** The `c`-axis is spaced uniformly in `√c` (the optimum
+//! moves fastest near `c = 0`, where the `c → 0` limit
+//! `h* = clamp(1/(1+r))` is attached analytically — at `c = 0` exactly
+//! the objective is constant in `h` and a numerical search returns
+//! noise).  Beyond `c =` [`EXP_NEG_CUTOFF`] the far-pair regime is
+//! handled in closed form, so the table never extrapolates; malformed
+//! inputs (NaN/∞) fall back to the exact search.
+//!
+//! Because the objective is flat to first order at its maximum, an
+//! `O(Δ²)` interpolation error in `h` costs only `O(Δ⁴)` in `|g|`: at
+//! the default 512×256 grid the measured weight-degradation error
+//! against the exact search is below `3·10⁻⁷ · (a_i² + a_j²)`
+//! (EXPERIMENTS.md §Perf).
+
+use super::golden::{self, PairMerge, GS_ITERS};
+use crate::kernel::EXP_NEG_CUTOFF;
+use std::sync::OnceLock;
+
+/// Which scorer [`crate::runtime::NativeBackend::merge_scores`] runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MergeScoreMode {
+    /// Per-pair golden-section search (G = 30) — the golden reference.
+    Exact,
+    /// Precomputed `h*(c, r)` table with bilinear interpolation.
+    #[default]
+    Lut,
+}
+
+impl MergeScoreMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "exact" => Some(Self::Exact),
+            "lut" => Some(Self::Lut),
+            _ => None,
+        }
+    }
+
+    pub fn describe(&self) -> &'static str {
+        match self {
+            Self::Exact => "exact",
+            Self::Lut => "lut",
+        }
+    }
+}
+
+/// Default `c`-axis resolution (cells, not nodes).
+pub const DEFAULT_C_STEPS: usize = 512;
+/// Default `r`-axis resolution (cells, not nodes).
+pub const DEFAULT_R_STEPS: usize = 256;
+/// Golden-section iterations used to compute table nodes (more than the
+/// runtime G: node cost is paid once, interpolation error dominates).
+pub const BUILD_ITERS: usize = 48;
+
+/// The precomputed `h*(c, r)` surface.
+pub struct MergeLut {
+    c_steps: usize,
+    r_steps: usize,
+    /// √c of the last column (= √[`EXP_NEG_CUTOFF`]).
+    s_max: f64,
+    /// Row-major `(c_steps+1) × (r_steps+1)` node values of `h*`.
+    h: Vec<f64>,
+}
+
+static GLOBAL_LUT: OnceLock<MergeLut> = OnceLock::new();
+
+impl MergeLut {
+    /// Build a table with the given resolution.  One-time cost of
+    /// `(c_steps+1)·(r_steps+1)` golden-section searches (~tens of ms at
+    /// the default resolution in release builds).
+    pub fn new(c_steps: usize, r_steps: usize) -> Self {
+        assert!(c_steps >= 2 && r_steps >= 2, "degenerate LUT grid");
+        let s_max = EXP_NEG_CUTOFF.sqrt();
+        let mut h = Vec::with_capacity((c_steps + 1) * (r_steps + 1));
+        for ic in 0..=c_steps {
+            let s = s_max * ic as f64 / c_steps as f64;
+            let c = s * s;
+            for ir in 0..=r_steps {
+                let r = -1.0 + 2.0 * ir as f64 / r_steps as f64;
+                h.push(Self::node(c, r));
+            }
+        }
+        Self { c_steps, r_steps, s_max, h }
+    }
+
+    /// The process-wide table at default resolution, built on first use.
+    pub fn global() -> &'static MergeLut {
+        GLOBAL_LUT.get_or_init(|| MergeLut::new(DEFAULT_C_STEPS, DEFAULT_R_STEPS))
+    }
+
+    /// Canonical-domain node value: `argmax_h |e^{-c(1-h)²} + r e^{-ch²}|`
+    /// restricted to the dominant branch.
+    fn node(c: f64, r: f64) -> f64 {
+        if c <= 0.0 {
+            // Analytic c → 0 limit: maximize (1+r) − c[(1−h)² + r h²] ⇒
+            // h = 1/(1+r), clamped to the search interval (r → −1 sends
+            // it to +∞; the branch endpoint 2 is the restricted optimum).
+            return if 1.0 + r <= 0.5 { 2.0 } else { (1.0 / (1.0 + r)).min(2.0) };
+        }
+        if r >= 0.0 {
+            golden::golden_max(0.5, 1.0, 1.0, r, c, BUILD_ITERS).0
+        } else {
+            golden::golden_max(1.0, 2.0, 1.0, r, c, BUILD_ITERS).0
+        }
+    }
+
+    /// Bilinearly interpolated `h*` on the canonical domain
+    /// (`c ∈ [0, EXP_NEG_CUTOFF]`, `r ∈ [−1, 1]`; arguments are clamped).
+    #[inline]
+    pub fn lookup_h(&self, c: f64, r: f64) -> f64 {
+        let stride = self.r_steps + 1;
+        let s = c.max(0.0).sqrt();
+        let fc = (s / self.s_max * self.c_steps as f64)
+            .clamp(0.0, self.c_steps as f64 - 1e-9);
+        let fr = ((r + 1.0) * 0.5 * self.r_steps as f64)
+            .clamp(0.0, self.r_steps as f64 - 1e-9);
+        let (ic, ir) = (fc as usize, fr as usize);
+        let (tc, tr) = (fc - ic as f64, fr - ir as f64);
+        let base = ic * stride + ir;
+        let h00 = self.h[base];
+        let h01 = self.h[base + 1];
+        let h10 = self.h[base + stride];
+        let h11 = self.h[base + stride + 1];
+        (1.0 - tc) * ((1.0 - tr) * h00 + tr * h01) + tc * ((1.0 - tr) * h10 + tr * h11)
+    }
+
+    /// LUT-accelerated drop-in for [`golden::merge_pair_params`]:
+    /// table-interpolated `h`, then the merged coefficient and weight
+    /// degradation evaluated exactly at that `h` (3 `exp` calls total).
+    pub fn merge_pair_params(&self, a_i: f64, a_j: f64, c: f64) -> PairMerge {
+        if !(c >= 0.0 && c.is_finite() && a_i.is_finite() && a_j.is_finite()) {
+            // Outside the table's domain — exact-search fallback.
+            return golden::merge_pair_params(a_i, a_j, c, GS_ITERS);
+        }
+        if c > EXP_NEG_CUTOFF {
+            return golden::far_pair_merge(a_i, a_j);
+        }
+        let swap = a_j.abs() > a_i.abs();
+        let (dom, sub) = if swap { (a_j, a_i) } else { (a_i, a_j) };
+        if dom == 0.0 {
+            // Both coefficients are exactly zero: any merge is free.
+            return PairMerge { h: 0.5, a_z: 0.0, wd: 0.0 };
+        }
+        let hc = self.lookup_h(c, sub / dom);
+        let h = if swap { 1.0 - hc } else { hc };
+        let a_z = golden::merge_objective(h, a_i, a_j, c);
+        let k_ij = (-c).exp();
+        let wd = (a_i * a_i + a_j * a_j + 2.0 * a_i * a_j * k_ij - a_z * a_z).max(0.0);
+        PairMerge { h, a_z, wd }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn lut() -> &'static MergeLut {
+        MergeLut::global()
+    }
+
+    #[test]
+    fn far_pair_matches_exact() {
+        let a = lut().merge_pair_params(0.2, -0.9, 500.0);
+        let b = golden::merge_pair_params(0.2, -0.9, 500.0, GS_ITERS);
+        assert_eq!(a.h, b.h);
+        assert_eq!(a.a_z, b.a_z);
+        assert_eq!(a.wd, b.wd);
+    }
+
+    #[test]
+    fn nan_c_falls_back_to_exact() {
+        let a = lut().merge_pair_params(0.5, 0.5, f64::NAN);
+        let b = golden::merge_pair_params(0.5, 0.5, f64::NAN, GS_ITERS);
+        assert_eq!(a.h.to_bits(), b.h.to_bits());
+    }
+
+    #[test]
+    fn zero_pair_is_free() {
+        let pm = lut().merge_pair_params(0.0, 0.0, 1.0);
+        assert_eq!(pm.wd, 0.0);
+        assert_eq!(pm.a_z, 0.0);
+    }
+
+    #[test]
+    fn swap_symmetry() {
+        for &(a, b, c) in &[(0.9, 0.2, 1.5), (0.3, -0.8, 4.0), (-1.1, 0.4, 0.2)] {
+            let ij = lut().merge_pair_params(a, b, c);
+            let ji = lut().merge_pair_params(b, a, c);
+            assert!((ij.h - (1.0 - ji.h)).abs() < 1e-12, "h {} vs {}", ij.h, ji.h);
+            assert!((ij.wd - ji.wd).abs() < 1e-12);
+            assert!((ij.a_z - ji.a_z).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn identical_points_merge_exactly() {
+        // c = 0: same-sign coefficients add, wd = 0.
+        let pm = lut().merge_pair_params(0.7, 0.3, 0.0);
+        assert!((pm.a_z - 1.0).abs() < 1e-9);
+        assert!(pm.wd.abs() < 1e-9);
+    }
+
+    #[test]
+    fn sweep_matches_exact_search() {
+        // The tentpole invariant: LUT scoring reproduces the exact
+        // golden-section scorer within interpolation tolerance across
+        // the whole (a_i, a_j, c) domain.
+        let mut rng = Xoshiro256::new(0xA11CE);
+        for _ in 0..4000 {
+            let a_i = (rng.next_f64() - 0.5) * 3.0;
+            let a_j = (rng.next_f64() - 0.5) * 3.0;
+            if a_i.abs() < 1e-6 || a_j.abs() < 1e-6 {
+                continue;
+            }
+            let c = rng.next_f64() * (EXP_NEG_CUTOFF - 1e-6) + 1e-6;
+            let ex = golden::merge_pair_params(a_i, a_j, c, GS_ITERS);
+            let lu = lut().merge_pair_params(a_i, a_j, c);
+            let norm2 = a_i * a_i + a_j * a_j;
+            assert!(
+                (lu.wd - ex.wd).abs() <= 1e-4 * norm2 + 1e-9,
+                "wd {} vs exact {} at (a_i={a_i}, a_j={a_j}, c={c})",
+                lu.wd,
+                ex.wd
+            );
+            assert!(
+                (lu.a_z.abs() - ex.a_z.abs()).abs() <= 1e-4 * norm2.sqrt() + 1e-9,
+                "a_z {} vs exact {} at (a_i={a_i}, a_j={a_j}, c={c})",
+                lu.a_z,
+                ex.a_z
+            );
+            assert!(
+                (lu.h - ex.h).abs() <= 0.05,
+                "h {} vs exact {} at (a_i={a_i}, a_j={a_j}, c={c})",
+                lu.h,
+                ex.h
+            );
+        }
+    }
+
+    #[test]
+    fn lut_never_materially_worse_than_exact() {
+        // wd is one-sided: a suboptimal h can only increase it, and the
+        // interpolation bound keeps the increase negligible.
+        let mut rng = Xoshiro256::new(0xBEEF);
+        for _ in 0..2000 {
+            let a_i = (rng.next_f64() - 0.5) * 2.0;
+            let a_j = (rng.next_f64() - 0.5) * 2.0;
+            if a_i.abs() < 1e-6 || a_j.abs() < 1e-6 {
+                continue;
+            }
+            let c = rng.next_f64() * 39.0 + 0.01;
+            let ex = golden::merge_pair_params(a_i, a_j, c, GS_ITERS);
+            let lu = lut().merge_pair_params(a_i, a_j, c);
+            assert!(
+                lu.wd <= ex.wd + 1e-4 * (a_i * a_i + a_j * a_j) + 1e-9,
+                "lut wd {} way above exact {}",
+                lu.wd,
+                ex.wd
+            );
+        }
+    }
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        assert_eq!(MergeScoreMode::parse("lut"), Some(MergeScoreMode::Lut));
+        assert_eq!(MergeScoreMode::parse("exact"), Some(MergeScoreMode::Exact));
+        assert_eq!(MergeScoreMode::parse("bogus"), None);
+        for m in [MergeScoreMode::Exact, MergeScoreMode::Lut] {
+            assert_eq!(MergeScoreMode::parse(m.describe()), Some(m));
+        }
+    }
+}

@@ -17,10 +17,12 @@
 //! through [`Budget`].
 
 pub mod golden;
+pub mod lut;
 mod multimerge;
 mod projection;
 mod removal;
 
+pub use lut::{MergeLut, MergeScoreMode};
 pub use multimerge::{MergeExec, MultiMerge};
 pub use projection::Projection;
 pub use removal::Removal;

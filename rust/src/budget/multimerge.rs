@@ -270,7 +270,9 @@ mod tests {
     #[test]
     fn m2_cascade_matches_plain_golden_merge() {
         // With M=2 the event must be exactly a single binary merge of the
-        // min-|α| SV with its best partner.
+        // min-|α| SV with its best partner.  Exact scoring mode: the
+        // assertion pins bit-level reuse of the scored (h, a_z), which
+        // only the golden-section scorer reproduces.
         let mut svs = SvStore::new(1);
         svs.push(&[0.0], 0.05);
         svs.push(&[0.3], 0.7);
@@ -278,7 +280,7 @@ mod tests {
         let x_i = [0.0f32];
         let x_j = [0.3f32];
         let (z_want, a_want, _) = golden::merge_pair(&x_i, 0.05, &x_j, 0.7, 1.0, GS_ITERS);
-        let mut be = NativeBackend::new();
+        let mut be = NativeBackend::exact();
         let mut mm = MultiMerge::new(2, MergeExec::Cascade);
         mm.maintain(&mut svs, 1.0, 2, &mut be);
         // find the merged SV (the one that is neither original survivor)

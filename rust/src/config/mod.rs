@@ -8,7 +8,7 @@
 mod toml;
 pub use toml::{TomlDoc, TomlError, TomlValue};
 
-use crate::budget::MaintenanceKind;
+use crate::budget::{MaintenanceKind, MergeScoreMode};
 use anyhow::{bail, Context, Result};
 
 /// Which compute backend executes the numeric hot paths.
@@ -64,6 +64,10 @@ pub struct TrainConfig {
     pub eval_every: usize,
     /// Compute backend.
     pub backend: BackendChoice,
+    /// Merge scorer: `lut` (precomputed golden-section table, the
+    /// default) or `exact` (per-pair golden-section search — the golden
+    /// reference the table is validated against).
+    pub merge_score_mode: MergeScoreMode,
     /// Drop SVs with |α| below this after maintenance (0 = off).
     pub prune_eps: f64,
 }
@@ -82,6 +86,7 @@ impl Default for TrainConfig {
             seed: 1,
             eval_every: 0,
             backend: BackendChoice::Native,
+            merge_score_mode: MergeScoreMode::Lut,
             prune_eps: 0.0,
         }
     }
@@ -153,6 +158,11 @@ impl TrainConfig {
                     self.backend = BackendChoice::parse(s)
                         .with_context(|| format!("bad backend {s:?}"))?;
                 }
+                "merge_score_mode" => {
+                    let s = val.as_str().context("merge_score_mode")?;
+                    self.merge_score_mode = MergeScoreMode::parse(s)
+                        .with_context(|| format!("bad merge_score_mode {s:?}"))?;
+                }
                 "prune_eps" => self.prune_eps = val.as_f64().context("prune_eps")?,
                 other => bail!("unknown [train] key {other:?}"),
             }
@@ -199,7 +209,8 @@ mod tests {
     fn toml_overlay() {
         let doc = TomlDoc::parse(
             "[train]\nlambda = 0.5\ngamma = 2.0\nbudget = 128\nmergees = 4\n\
-             maintenance = \"mergegd:4\"\nbackend = \"hybrid\"\nuse_bias = false\n",
+             maintenance = \"mergegd:4\"\nbackend = \"hybrid\"\nuse_bias = false\n\
+             merge_score_mode = \"exact\"\n",
         )
         .unwrap();
         let mut cfg = TrainConfig::default();
@@ -208,7 +219,15 @@ mod tests {
         assert_eq!(cfg.budget, 128);
         assert_eq!(cfg.maintenance, Some(MaintenanceKind::MergeGd { m: 4 }));
         assert_eq!(cfg.backend, BackendChoice::Hybrid);
+        assert_eq!(cfg.merge_score_mode, MergeScoreMode::Exact);
         assert!(!cfg.use_bias);
+    }
+
+    #[test]
+    fn merge_score_mode_defaults_to_lut() {
+        assert_eq!(TrainConfig::default().merge_score_mode, MergeScoreMode::Lut);
+        let doc = TomlDoc::parse("[train]\nmerge_score_mode = \"bogus\"\n").unwrap();
+        assert!(TrainConfig::default().apply_toml(&doc).is_err());
     }
 
     #[test]

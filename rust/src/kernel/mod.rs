@@ -55,6 +55,69 @@ pub fn sq_dist(a: &[f32], b: &[f32]) -> f64 {
     s
 }
 
+/// Dot product ⟨a,b⟩ with the same 8-lane accumulator layout as
+/// [`sq_dist`] (one AVX2 FMA chain per iteration).  The norm-cached hot
+/// paths prefer this over the difference form: one FMA per lane instead
+/// of a subtract plus an FMA.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    const L: usize = 8;
+    let mut acc = [0.0f32; L];
+    let ca = a.chunks_exact(L);
+    let cb = b.chunks_exact(L);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        for l in 0..L {
+            acc[l] += xa[l] * xb[l];
+        }
+    }
+    let mut s = 0.0f32;
+    for l in 0..L {
+        s += acc[l];
+    }
+    let mut s = s as f64;
+    for (x, y) in ra.iter().zip(rb) {
+        s += (*x as f64) * (*y as f64);
+    }
+    s
+}
+
+/// Squared euclidean norm ‖a‖² (cached per SV by
+/// [`crate::model::SvStore`]).
+#[inline]
+pub fn sq_norm(a: &[f32]) -> f64 {
+    dot(a, a)
+}
+
+/// Relative threshold below which the norm expansion is considered
+/// cancellation-dominated and [`sq_dist_cached`] recomputes with the
+/// difference form.  The f32 lane accumulators carry ~1e-7 relative
+/// error, so an expansion result under 1e-4 of the operand magnitude
+/// may hold only noise; the guard costs one compare per pair and fires
+/// only for near-coincident points (which are exactly the pairs whose
+/// d² the merge scorer must rank correctly).
+const SQ_DIST_CANCEL_REL: f64 = 1e-4;
+
+/// Norm-cached squared distance: `d² = ‖a‖² + ‖b‖² − 2⟨a,b⟩` with the
+/// norms supplied from a cache, so the inner loop is a pure dot product.
+///
+/// Near-coincident points make the expansion cancellation-dominated
+/// (the three ~‖x‖²-magnitude terms annihilate), so results below
+/// [`SQ_DIST_CANCEL_REL`] of the operand magnitude — including the
+/// epsilon-negative ones — are recomputed with the exact difference
+/// form, which subtracts componentwise *before* squaring and loses
+/// nothing to cancellation.
+#[inline]
+pub fn sq_dist_cached(a: &[f32], norm2_a: f64, b: &[f32], norm2_b: f64) -> f64 {
+    let d2 = norm2_a + norm2_b - 2.0 * dot(a, b);
+    if d2 < SQ_DIST_CANCEL_REL * (norm2_a + norm2_b) {
+        sq_dist(a, b)
+    } else {
+        d2
+    }
+}
+
 /// Exponent threshold above which `exp(-e)` is treated as exactly zero
 /// on the native hot paths: `e^-40 ≈ 4e-18` is far below f32 resolution
 /// of any accumulated margin, and the guard skips the (dominant) `exp`
@@ -144,6 +207,50 @@ mod tests {
             .map(|(&x, &y)| ((x - y) as f64) * ((x - y) as f64))
             .sum();
         assert!((sq_dist(&a, &b) - naive).abs() < 1e-6 * naive.max(1.0));
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..37).map(|i| (i as f32) * 0.1).collect();
+        let b: Vec<f32> = (0..37).map(|i| (i as f32) * -0.05 + 1.0).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(&x, &y)| (x as f64) * (y as f64)).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-5 * naive.abs().max(1.0));
+    }
+
+    #[test]
+    fn sq_dist_cached_matches_sq_dist() {
+        for d in [1usize, 7, 8, 33, 128] {
+            let a: Vec<f32> = (0..d).map(|i| (i as f32 * 0.37).sin()).collect();
+            let b: Vec<f32> = (0..d).map(|i| (i as f32 * 0.91).cos()).collect();
+            let direct = sq_dist(&a, &b);
+            let cached = sq_dist_cached(&a, sq_norm(&a), &b, sq_norm(&b));
+            assert!(
+                (direct - cached).abs() < 1e-4 * (1.0 + direct),
+                "d={d}: {direct} vs {cached}"
+            );
+        }
+        // coincident points: the fallback guarantees exact zero
+        let x = [0.25f32, -3.5, 1.0];
+        assert_eq!(sq_dist_cached(&x, sq_norm(&x), &x, sq_norm(&x)), 0.0);
+    }
+
+    #[test]
+    fn sq_dist_cached_survives_cancellation() {
+        // Near-duplicate points with huge norms (unscaled LIBSVM-style
+        // features): the naive norm expansion cancels ~1e6-magnitude
+        // f32-accumulated terms and returns noise; the guard must route
+        // these through the exact difference form.
+        let a: Vec<f32> = (0..128).map(|i| 200.0 + (i as f32 * 0.7).sin()).collect();
+        let mut b = a.clone();
+        for (i, v) in b.iter_mut().enumerate() {
+            *v += 5e-3 * ((i as f32) * 1.3).cos();
+        }
+        let exact = sq_dist(&a, &b); // ~1e-3, no cancellation by construction
+        let cached = sq_dist_cached(&a, sq_norm(&a), &b, sq_norm(&b));
+        assert!(
+            (cached - exact).abs() <= 1e-3 * exact,
+            "cancellation not handled: cached {cached} vs exact {exact}"
+        );
     }
 
     #[test]

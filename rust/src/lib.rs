@@ -53,7 +53,7 @@ pub mod util;
 
 /// Convenience re-exports for downstream users and the examples.
 pub mod prelude {
-    pub use crate::budget::{Budget, MaintenanceKind};
+    pub use crate::budget::{Budget, MaintenanceKind, MergeScoreMode};
     pub use crate::config::TrainConfig;
     pub use crate::data::synth::SynthSpec;
     pub use crate::data::{Dataset, DenseMatrix, Split};

@@ -12,7 +12,7 @@
 //! are `--key value` or `--flag`.
 
 use anyhow::{anyhow, bail, Context, Result};
-use mmbsgd::budget::MaintenanceKind;
+use mmbsgd::budget::{MaintenanceKind, MergeScoreMode};
 use mmbsgd::config::{BackendChoice, TomlDoc, TrainConfig};
 use mmbsgd::coordinator::{build_backend, ProgressObserver};
 use mmbsgd::data::synth::SynthSpec;
@@ -122,6 +122,10 @@ fn train_config(args: &Args, split: &Split) -> Result<TrainConfig> {
         cfg.backend =
             BackendChoice::parse(b).with_context(|| format!("bad --backend {b:?}"))?;
     }
+    if let Some(m) = args.get("merge-score-mode") {
+        cfg.merge_score_mode = MergeScoreMode::parse(m)
+            .with_context(|| format!("bad --merge-score-mode {m:?} (exact|lut)"))?;
+    }
     cfg.resolve_c(split.train.len());
     cfg.validate()?;
     Ok(cfg)
@@ -131,7 +135,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let split = load_split(args)?;
     let cfg = train_config(args, &split)?;
     println!(
-        "[train] {} train={} test={} d={} | B={} M={} maint={} λ={:.3e} γ={} backend={:?}",
+        "[train] {} train={} test={} d={} | B={} M={} maint={} score={} λ={:.3e} γ={} backend={:?}",
         split.train.name,
         split.train.len(),
         split.test.len(),
@@ -139,6 +143,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.budget,
         cfg.mergees,
         cfg.maintenance_kind().describe(),
+        cfg.merge_score_mode.describe(),
         cfg.lambda,
         cfg.gamma,
         cfg.backend,
@@ -296,7 +301,8 @@ USAGE: mmbsgd <command> [--flags]
 COMMANDS
   train        --dataset <synth-name|libsvm-path> [--scale F] [--budget N]
                [--mergees M] [--maintenance removal|projection|merge[:M]|mergegd[:M]]
-               [--backend native|xla|hybrid] [--c F | --lambda F] [--gamma F]
+               [--backend native|xla|hybrid] [--merge-score-mode lut|exact]
+               [--c F | --lambda F] [--gamma F]
                [--epochs N] [--seed N] [--eval-every N] [--config file.toml]
                [--save model.txt] [--test libsvm-path] [--quiet]
   evaluate     --model model.txt --dataset <...> [--scale F]

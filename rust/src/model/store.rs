@@ -6,6 +6,13 @@
 //! eagerly would be O(B) per step, so a global multiplier is kept and
 //! folded in on access — the classic trick, and measurably the single
 //! most important optimization in the native hot path).
+//!
+//! The store also caches each SV's squared norm `‖x_j‖²` (maintained on
+//! every mutation), so the kernel hot loops can use the expansion
+//! `d² = ‖x‖² + ‖q‖² − 2⟨x,q⟩` with a pure dot-product inner loop and
+//! the query norm hoisted out of the B-loop (EXPERIMENTS.md §Perf).
+
+use crate::kernel::sq_norm;
 
 /// Budget of support vectors with coefficients.
 #[derive(Clone, Debug)]
@@ -13,6 +20,7 @@ pub struct SvStore {
     dim: usize,
     points: Vec<f32>,
     alphas: Vec<f64>, // stored WITHOUT the global scale factor
+    norms2: Vec<f64>, // cached ‖x_j‖² per SV
     scale: f64,       // every effective α_j = alphas[j] * scale
 }
 
@@ -22,7 +30,7 @@ const SCALE_FOLD: f64 = 1e-100;
 
 impl SvStore {
     pub fn new(dim: usize) -> Self {
-        Self { dim, points: Vec::new(), alphas: Vec::new(), scale: 1.0 }
+        Self { dim, points: Vec::new(), alphas: Vec::new(), norms2: Vec::new(), scale: 1.0 }
     }
 
     pub fn with_capacity(dim: usize, cap: usize) -> Self {
@@ -30,6 +38,7 @@ impl SvStore {
             dim,
             points: Vec::with_capacity(cap * dim),
             alphas: Vec::with_capacity(cap),
+            norms2: Vec::with_capacity(cap),
             scale: 1.0,
         }
     }
@@ -60,6 +69,18 @@ impl SvStore {
         self.alphas[j] * self.scale
     }
 
+    /// Cached squared norm ‖x_j‖² of SV `j`.
+    #[inline]
+    pub fn norm2(&self, j: usize) -> f64 {
+        self.norms2[j]
+    }
+
+    /// All cached squared norms (one per SV).
+    #[inline]
+    pub fn norms2(&self) -> &[f64] {
+        &self.norms2
+    }
+
     /// All points as one contiguous slice (runtime marshalling).
     #[inline]
     pub fn points_flat(&self) -> &[f32] {
@@ -74,6 +95,7 @@ impl SvStore {
     pub fn push(&mut self, point: &[f32], alpha: f64) {
         assert_eq!(point.len(), self.dim, "point dim mismatch");
         self.points.extend_from_slice(point);
+        self.norms2.push(sq_norm(point));
         // Store pre-divided so the effective value is `alpha`.
         self.alphas.push(alpha / self.scale);
     }
@@ -87,12 +109,14 @@ impl SvStore {
         }
         self.points.truncate(last * self.dim);
         self.alphas.swap_remove(j);
+        self.norms2.swap_remove(j);
     }
 
     /// Overwrite SV `j` with a new point/coefficient (merge result).
     pub fn replace(&mut self, j: usize, point: &[f32], alpha: f64) {
         assert_eq!(point.len(), self.dim);
         self.points[j * self.dim..(j + 1) * self.dim].copy_from_slice(point);
+        self.norms2[j] = sq_norm(point);
         self.alphas[j] = alpha / self.scale;
     }
 
@@ -250,6 +274,25 @@ mod tests {
         }
         // effective alpha underflows to ~0 but stays finite / non-NaN
         assert!(s.alpha(0).is_finite());
+    }
+
+    #[test]
+    fn norm_cache_tracks_every_mutation() {
+        let mut s = SvStore::new(2);
+        s.push(&[3.0, 4.0], 1.0);
+        s.push(&[1.0, 0.0], 2.0);
+        s.push(&[0.0, 2.0], 3.0);
+        assert_eq!(s.norm2(0), 25.0);
+        assert_eq!(s.norms2(), &[25.0, 1.0, 4.0]);
+        s.swap_remove(0); // last SV moves into slot 0
+        assert_eq!(s.norm2(0), 4.0);
+        assert_eq!(s.len(), 2);
+        s.replace(1, &[0.5, 0.5], 1.0);
+        assert!((s.norm2(1) - 0.5).abs() < 1e-12);
+        // cache always mirrors a fresh computation
+        for j in 0..s.len() {
+            assert_eq!(s.norm2(j), crate::kernel::sq_norm(s.point(j)));
+        }
     }
 
     #[test]

@@ -22,6 +22,7 @@
 //! a full-XLA backend (`--backend xla`) to exercise every artifact.
 
 use super::{Backend, MergeScores, NativeBackend, XlaBackend};
+use crate::budget::lut::MergeScoreMode;
 use crate::data::DenseMatrix;
 use crate::model::SvStore;
 use anyhow::Result;
@@ -29,20 +30,30 @@ use std::path::Path;
 
 pub struct HybridBackend {
     native: NativeBackend,
-    xla: XlaBackend,
+    /// `None` when the AOT artifacts (or the `xla` feature) are absent —
+    /// the deployment default must run with no external native deps, so
+    /// construction degrades to all-native routing instead of failing.
+    xla: Option<XlaBackend>,
 }
 
 impl HybridBackend {
     pub fn new(artifact_dir: &Path) -> Result<Self> {
-        Ok(Self { native: NativeBackend::new(), xla: XlaBackend::new(artifact_dir)? })
+        let xla = match XlaBackend::new(artifact_dir) {
+            Ok(x) => Some(x),
+            Err(e) => {
+                eprintln!("[hybrid] PJRT unavailable ({e}); routing everything native");
+                None
+            }
+        };
+        Ok(Self { native: NativeBackend::new(), xla })
     }
 
     pub fn from_default_dir() -> Result<Self> {
-        Ok(Self { native: NativeBackend::new(), xla: XlaBackend::from_default_dir()? })
+        Self::new(&super::ArtifactRegistry::default_dir())
     }
 
-    pub fn xla(&self) -> &XlaBackend {
-        &self.xla
+    pub fn xla(&self) -> Option<&XlaBackend> {
+        self.xla.as_ref()
     }
 }
 
@@ -51,20 +62,22 @@ impl Backend for HybridBackend {
         "hybrid"
     }
 
+    fn set_merge_score_mode(&mut self, mode: MergeScoreMode) -> MergeScoreMode {
+        // merge scoring always routes native (see module docs).
+        self.native.set_merge_score_mode(mode)
+    }
+
     fn margins(&mut self, svs: &SvStore, gamma: f64, queries: &DenseMatrix) -> Vec<f64> {
         // Batched: the artifact's blocked matmul wins; tiny batches and
         // out-of-lattice budgets fall back to native.
-        if queries.rows() >= 64
-            && self
-                .xla
-                .registry()
-                .find_margins(svs.len(), svs.dim(), 256)
-                .is_some()
-        {
-            self.xla.margins(svs, gamma, queries)
-        } else {
-            self.native.margins(svs, gamma, queries)
+        if let Some(xla) = &mut self.xla {
+            if queries.rows() >= 64
+                && xla.registry().find_margins(svs.len(), svs.dim(), 256).is_some()
+            {
+                return xla.margins(svs, gamma, queries);
+            }
         }
+        self.native.margins(svs, gamma, queries)
     }
 
     fn margin1(&mut self, svs: &SvStore, gamma: f64, x: &[f32]) -> f64 {

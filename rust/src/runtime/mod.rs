@@ -7,7 +7,10 @@
 //!   lowered from the L1/L2 jax+Pallas code by `python/compile/aot.py`)
 //!   and executes them on the PJRT CPU client via the `xla` crate.
 //!   Fixed shapes: inputs are padded to the artifact's (B_pad, d_pad)
-//!   and masked.  Python never runs at request time.
+//!   and masked.  Python never runs at request time.  Gated behind the
+//!   off-by-default `xla` cargo feature so the default build carries no
+//!   external native deps; without it a stub that fails construction
+//!   keeps the API surface intact.
 //! * [`NativeBackend`] — a pure-rust mirror of the same math.  Used by
 //!   unit tests (no artifacts needed), for tiny budgets where PJRT call
 //!   overhead dominates, and as the apples-to-apples perf baseline.
@@ -15,14 +18,23 @@
 //! The two must agree numerically; `rust/tests/backend_equivalence.rs`
 //! enforces it on every artifact shape.
 
+mod artifacts;
 mod hybrid;
 mod native;
+#[cfg(feature = "xla")]
 mod xla_backend;
+#[cfg(not(feature = "xla"))]
+mod xla_stub;
 
+pub use artifacts::{ArtifactInfo, ArtifactRegistry};
 pub use hybrid::HybridBackend;
 pub use native::NativeBackend;
-pub use xla_backend::{ArtifactRegistry, XlaBackend};
+#[cfg(feature = "xla")]
+pub use xla_backend::XlaBackend;
+#[cfg(not(feature = "xla"))]
+pub use xla_stub::XlaBackend;
 
+use crate::budget::lut::MergeScoreMode;
 use crate::data::DenseMatrix;
 use crate::model::SvStore;
 
@@ -46,6 +58,16 @@ pub struct MergeScores {
 /// `coordinator::run_grid`) — no shared mutable state on the hot path.
 pub trait Backend {
     fn name(&self) -> &'static str;
+
+    /// Select the merge scorer ([`MergeScoreMode::Lut`] table lookup vs
+    /// [`MergeScoreMode::Exact`] per-pair golden section) and return the
+    /// mode actually in effect.  Backends whose scorer is fixed ignore
+    /// the request — the AOT artifact kernel always runs the exact
+    /// search, hence the default — and callers must record the returned
+    /// mode, not the requested one, in run provenance.
+    fn set_merge_score_mode(&mut self, _mode: MergeScoreMode) -> MergeScoreMode {
+        MergeScoreMode::Exact
+    }
 
     /// Decision values (no bias) for a batch of query rows.
     fn margins(&mut self, svs: &SvStore, gamma: f64, queries: &DenseMatrix) -> Vec<f64>;

@@ -2,14 +2,22 @@
 //!
 //! Keeps the exact same math as the L1 kernels (same golden-section
 //! constants, same MM-GD iteration scheme) so the two backends are
-//! numerically interchangeable.  Scratch buffers are owned by the
-//! backend and reused across calls — the hot loop performs no
-//! allocation after warm-up.
+//! numerically interchangeable in `exact` scoring mode.  In the default
+//! `lut` mode the merge scorer consults the precomputed golden-section
+//! table ([`MergeLut`]) instead of iterating — Θ(B·K + B) instead of
+//! Θ(B·K·G) per scoring pass.
+//!
+//! All distance computations go through the store's norm cache:
+//! `d² = ‖x‖² + ‖q‖² − 2⟨x,q⟩` with the query norm hoisted out of the
+//! B-loop, so the inner loop is a pure dot product that LLVM
+//! autovectorizes into one FMA chain (EXPERIMENTS.md §Perf).  The hot
+//! loop performs no allocation after warm-up.
 
 use super::{Backend, MergeScores};
 use crate::budget::golden::{self, GS_ITERS};
+use crate::budget::lut::{MergeLut, MergeScoreMode};
 use crate::data::DenseMatrix;
-use crate::kernel::{sq_dist, Gaussian, Kernel};
+use crate::kernel::{sq_dist_cached, sq_norm, Gaussian, Kernel, EXP_NEG_CUTOFF};
 use crate::model::SvStore;
 
 /// MM-GD fixed iteration count / initial step (mirrors
@@ -18,20 +26,45 @@ pub const GD_ITERS: usize = 50;
 pub const GD_LR: f64 = 0.5;
 
 /// Pure-rust backend.
-#[derive(Default)]
 pub struct NativeBackend {
-    scratch_k: Vec<f64>,
+    mode: MergeScoreMode,
 }
 
 impl NativeBackend {
+    /// Deployment default: LUT-accelerated merge scoring.
     pub fn new() -> Self {
-        Self::default()
+        Self::with_mode(MergeScoreMode::Lut)
+    }
+
+    /// Exact golden-section scoring — the reference the LUT (and the
+    /// XLA artifact kernel) are validated against.
+    pub fn exact() -> Self {
+        Self::with_mode(MergeScoreMode::Exact)
+    }
+
+    pub fn with_mode(mode: MergeScoreMode) -> Self {
+        Self { mode }
+    }
+
+    pub fn mode(&self) -> MergeScoreMode {
+        self.mode
+    }
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
 impl Backend for NativeBackend {
     fn name(&self) -> &'static str {
         "native"
+    }
+
+    fn set_merge_score_mode(&mut self, mode: MergeScoreMode) -> MergeScoreMode {
+        self.mode = mode;
+        mode
     }
 
     fn margins(&mut self, svs: &SvStore, gamma: f64, queries: &DenseMatrix) -> Vec<f64> {
@@ -49,19 +82,27 @@ impl Backend for NativeBackend {
         let b = svs.len();
         let x_i = svs.point(i);
         let a_i = svs.alpha(i);
+        let n_i = svs.norm2(i); // query norm hoisted out of the B-loop
         let mut out = MergeScores {
             wd: vec![f64::INFINITY; b],
             h: vec![0.0; b],
             a_z: vec![0.0; b],
             d2: vec![0.0; b],
         };
-        self.scratch_k.clear();
+        let lut = match self.mode {
+            MergeScoreMode::Lut => Some(MergeLut::global()),
+            MergeScoreMode::Exact => None,
+        };
         for j in 0..b {
             if j == i {
                 continue;
             }
-            let d2 = sq_dist(x_i, svs.point(j));
-            let pm = golden::merge_pair_params(a_i, svs.alpha(j), gamma * d2, GS_ITERS);
+            let d2 = sq_dist_cached(x_i, n_i, svs.point(j), svs.norm2(j));
+            let a_j = svs.alpha(j);
+            let pm = match lut {
+                Some(lut) => lut.merge_pair_params(a_i, a_j, gamma * d2),
+                None => golden::merge_pair_params(a_i, a_j, gamma * d2, GS_ITERS),
+            };
             out.wd[j] = pm.wd;
             out.h[j] = pm.h;
             out.a_z[j] = pm.a_z;
@@ -78,15 +119,20 @@ impl Backend for NativeBackend {
 /// The Θ(B·K) per-step margin — the single hottest loop in training.
 ///
 /// Perf notes (EXPERIMENTS.md §Perf):
+/// * norm-cached distances: `‖q‖²` computed once per query, `‖x_j‖²`
+///   read from the store cache, so the inner loop is a pure dot product
+///   (one 8-lane FMA chain — the seed's difference form needed a
+///   subtract per lane on top);
 /// * far SVs (γd² > [`EXP_NEG_CUTOFF`]) contribute < e⁻⁴⁰ ≈ 4e-18 and
 ///   skip the `exp` call entirely — the dominant cost on clustered data;
 /// * contiguous row iteration over the flat point storage.
 #[inline]
 pub fn margin1_native(svs: &SvStore, gamma: f64, x: &[f32]) -> f64 {
-    use crate::kernel::EXP_NEG_CUTOFF;
+    let n_q = sq_norm(x);
     let mut f = 0.0;
     for j in 0..svs.len() {
-        let e = gamma * sq_dist(svs.point(j), x);
+        let d2 = sq_dist_cached(svs.point(j), svs.norm2(j), x, n_q);
+        let e = gamma * d2;
         if e < EXP_NEG_CUTOFF {
             f += svs.alpha(j) * (-e).exp();
         }
@@ -198,18 +244,71 @@ mod tests {
     }
 
     #[test]
+    fn margin1_matches_naive_kernel_sum() {
+        // the norm-cached loop must agree with a direct Σ α_j k(x_j, q)
+        let a = [0.3f32, -1.2, 0.8];
+        let b = [2.0f32, 0.1, -0.5];
+        let svs = store(&[(&a, 0.7), (&b, -0.4)], 3);
+        let q = [0.9f32, 0.9, 0.9];
+        let kern = Gaussian::new(1.3);
+        let naive = 0.7 * kern.eval(&a, &q) - 0.4 * kern.eval(&b, &q);
+        let f = margin1_native(&svs, 1.3, &q);
+        assert!((f - naive).abs() < 1e-9, "{f} vs {naive}");
+    }
+
+    #[test]
     fn merge_scores_masks_self_and_scores_rest() {
         let a = [0.0f32];
         let b = [0.5f32];
         let c = [4.0f32];
         let svs = store(&[(&a, 0.1), (&b, 0.5), (&c, 0.9)], 1);
+        for mut be in [NativeBackend::exact(), NativeBackend::new()] {
+            let ms = be.merge_scores(&svs, 1.0, 0);
+            assert!(ms.wd[0].is_infinite());
+            assert!(ms.wd[1].is_finite() && ms.wd[2].is_finite());
+            // near partner cheaper than far partner
+            assert!(ms.wd[1] < ms.wd[2]);
+            assert!((ms.d2[2] - 16.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn lut_scores_match_exact_scores() {
+        let mut svs = SvStore::new(4);
+        let mut rng = crate::rng::Xoshiro256::new(42);
+        for _ in 0..24 {
+            let x: Vec<f32> = (0..4).map(|_| rng.next_gaussian() as f32 * 0.8).collect();
+            let mut a = 0.05 + rng.next_f64();
+            if rng.next_f64() < 0.4 {
+                a = -a;
+            }
+            svs.push(&x, a);
+        }
+        let i = svs.min_abs_alpha().unwrap();
+        let exact = NativeBackend::exact().merge_scores(&svs, 0.7, i);
+        let lut = NativeBackend::new().merge_scores(&svs, 0.7, i);
+        for j in 0..svs.len() {
+            if j == i {
+                continue;
+            }
+            let norm2 = svs.alpha(i).powi(2) + svs.alpha(j).powi(2);
+            assert!(
+                (exact.wd[j] - lut.wd[j]).abs() <= 1e-4 * norm2 + 1e-9,
+                "lane {j}: wd {} vs {}",
+                lut.wd[j],
+                exact.wd[j]
+            );
+            assert!((exact.d2[j] - lut.d2[j]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn set_merge_score_mode_switches_scorer() {
         let mut be = NativeBackend::new();
-        let ms = be.merge_scores(&svs, 1.0, 0);
-        assert!(ms.wd[0].is_infinite());
-        assert!(ms.wd[1].is_finite() && ms.wd[2].is_finite());
-        // near partner cheaper than far partner
-        assert!(ms.wd[1] < ms.wd[2]);
-        assert!((ms.d2[2] - 16.0).abs() < 1e-6);
+        assert_eq!(be.mode(), MergeScoreMode::Lut);
+        let effective = be.set_merge_score_mode(MergeScoreMode::Exact);
+        assert_eq!(effective, MergeScoreMode::Exact);
+        assert_eq!(be.mode(), MergeScoreMode::Exact);
     }
 
     #[test]

@@ -12,107 +12,13 @@
 //! process lifetime (compilation is seconds; execution is micro- to
 //! milliseconds).  Padded marshalling buffers are reused across calls.
 
+use super::artifacts::{ArtifactInfo, ArtifactRegistry};
 use super::{Backend, MergeScores};
 use crate::data::DenseMatrix;
 use crate::model::SvStore;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-
-/// One artifact from the manifest.
-#[derive(Clone, Debug)]
-pub struct ArtifactInfo {
-    pub name: String,
-    pub file: PathBuf,
-    pub entry: String,
-    pub b_pad: usize,
-    pub d_pad: usize,
-    pub nb: usize,
-    pub m_pad: usize,
-}
-
-/// Index over `artifacts/manifest.json`.
-pub struct ArtifactRegistry {
-    pub dir: PathBuf,
-    pub artifacts: Vec<ArtifactInfo>,
-}
-
-impl ArtifactRegistry {
-    pub fn load(dir: &Path) -> Result<Self> {
-        let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {}", manifest_path.display()))?;
-        let json = crate::util::json::Json::parse(&text)
-            .map_err(|e| anyhow!("parsing manifest: {e}"))?;
-        let arr = json
-            .get("artifacts")
-            .and_then(|a| a.as_arr())
-            .context("manifest lacks 'artifacts' array")?;
-        let mut artifacts = Vec::with_capacity(arr.len());
-        for a in arr {
-            let get_usize =
-                |k: &str| a.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
-            artifacts.push(ArtifactInfo {
-                name: a
-                    .get("name")
-                    .and_then(|v| v.as_str())
-                    .context("artifact lacks name")?
-                    .to_string(),
-                file: dir.join(
-                    a.get("file")
-                        .and_then(|v| v.as_str())
-                        .context("artifact lacks file")?,
-                ),
-                entry: a
-                    .get("entry")
-                    .and_then(|v| v.as_str())
-                    .context("artifact lacks entry")?
-                    .to_string(),
-                b_pad: get_usize("b_pad"),
-                d_pad: get_usize("d_pad"),
-                nb: get_usize("nb"),
-                m_pad: get_usize("m_pad"),
-            });
-        }
-        if artifacts.is_empty() {
-            bail!("manifest has no artifacts — run `make artifacts`");
-        }
-        Ok(Self { dir: dir.to_path_buf(), artifacts })
-    }
-
-    /// Smallest margins variant with b_pad >= b, d_pad >= d, batch nb.
-    pub fn find_margins(&self, b: usize, d: usize, nb: usize) -> Option<&ArtifactInfo> {
-        self.artifacts
-            .iter()
-            .filter(|a| {
-                a.entry == "margins" && a.b_pad >= b && a.d_pad >= d && a.nb == nb
-            })
-            .min_by_key(|a| (a.b_pad, a.d_pad))
-    }
-
-    /// Smallest merge_scores variant with b_pad >= b, d_pad >= d.
-    pub fn find_merge_scores(&self, b: usize, d: usize) -> Option<&ArtifactInfo> {
-        self.artifacts
-            .iter()
-            .filter(|a| a.entry == "merge_scores" && a.b_pad >= b && a.d_pad >= d)
-            .min_by_key(|a| (a.b_pad, a.d_pad))
-    }
-
-    /// Smallest merge_gd variant with d_pad >= d.
-    pub fn find_merge_gd(&self, d: usize) -> Option<&ArtifactInfo> {
-        self.artifacts
-            .iter()
-            .filter(|a| a.entry == "merge_gd" && a.d_pad >= d)
-            .min_by_key(|a| a.d_pad)
-    }
-
-    /// Default artifact directory: `$MMBSGD_ARTIFACTS` or `./artifacts`.
-    pub fn default_dir() -> PathBuf {
-        std::env::var_os("MMBSGD_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|| PathBuf::from("artifacts"))
-    }
-}
+use std::path::Path;
 
 /// PJRT-backed [`Backend`].
 pub struct XlaBackend {

@@ -1,0 +1,75 @@
+//! Stub [`XlaBackend`] for builds without the `xla` cargo feature.
+//!
+//! The default build has no external native deps (satellite of the
+//! hot-path PR: the PJRT path needs the `xla` crate, which is optional),
+//! so this type keeps the API surface — benches, tests, and
+//! `build_backend` compile unchanged — while every constructor returns
+//! an error.  Code that probes with `XlaBackend::new(..).ok()` degrades
+//! exactly as if the AOT artifacts were missing.
+
+use super::{Backend, MergeScores};
+use crate::data::DenseMatrix;
+use crate::model::SvStore;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Unconstructible placeholder for the PJRT backend.
+pub struct XlaBackend {
+    _never: std::convert::Infallible,
+}
+
+impl XlaBackend {
+    pub fn new(_dir: &Path) -> Result<Self> {
+        bail!(
+            "mmbsgd was built without the `xla` cargo feature; \
+             rebuild with `--features xla` to enable the PJRT backend"
+        )
+    }
+
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(Path::new("artifacts"))
+    }
+
+    pub fn registry(&self) -> &super::artifacts::ArtifactRegistry {
+        match self._never {}
+    }
+
+    pub fn try_merge_scores(
+        &mut self,
+        _svs: &SvStore,
+        _gamma: f64,
+        _i: usize,
+    ) -> Result<MergeScores> {
+        match self._never {}
+    }
+
+    pub fn try_merge_gd(
+        &mut self,
+        _points: &[(&[f32], f64)],
+        _gamma: f64,
+    ) -> Result<(Vec<f32>, f64, f64)> {
+        match self._never {}
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn margins(&mut self, _svs: &SvStore, _gamma: f64, _queries: &DenseMatrix) -> Vec<f64> {
+        match self._never {}
+    }
+
+    fn margin1(&mut self, _svs: &SvStore, _gamma: f64, _x: &[f32]) -> f64 {
+        match self._never {}
+    }
+
+    fn merge_scores(&mut self, _svs: &SvStore, _gamma: f64, _i: usize) -> MergeScores {
+        match self._never {}
+    }
+
+    fn merge_gd(&mut self, _points: &[(&[f32], f64)], _gamma: f64) -> (Vec<f32>, f64, f64) {
+        match self._never {}
+    }
+}

@@ -69,14 +69,19 @@ pub fn train_full(
 ) -> TrainOutput {
     cfg.validate().expect("invalid TrainConfig");
     assert!(!ds.is_empty(), "empty training set");
+    // Record the scorer actually in effect, not the requested one: a
+    // backend with a fixed scorer (e.g. the AOT artifact kernel) ignores
+    // the request, and provenance must not claim otherwise.
+    let score_mode = backend.set_merge_score_mode(cfg.merge_score_mode);
 
     let mut model = SvmModel::new(ds.dim(), cfg.gamma);
     model.meta = format!(
-        "bsgd maintenance={} B={} seed={} backend={}",
+        "bsgd maintenance={} B={} seed={} backend={} score={}",
         cfg.maintenance_kind().describe(),
         cfg.budget,
         cfg.seed,
-        backend.name()
+        backend.name(),
+        score_mode.describe()
     );
     let mut budget = Budget::new(cfg.budget, cfg.maintenance_kind());
     let mut rng = Xoshiro256::new(cfg.seed);

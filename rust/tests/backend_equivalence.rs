@@ -1,9 +1,10 @@
 //! XLA (AOT artifacts through PJRT) vs native backend equivalence.
 //!
-//! The native backend mirrors the L1 kernel math exactly (same golden
-//! constants, same GD scheme); these tests pin the two together across
-//! artifact shapes.  They require `artifacts/` to exist (`make
-//! artifacts`) and are skipped with a loud message otherwise —
+//! The native backend in **exact** scoring mode mirrors the L1 kernel
+//! math (same golden constants, same GD scheme); these tests pin the
+//! two together across artifact shapes.  They require `artifacts/` to
+//! exist (`make artifacts`) *and* the `xla` cargo feature with real
+//! PJRT bindings, and are skipped with a loud message otherwise —
 //! `make test` always builds artifacts first.
 
 use mmbsgd::data::DenseMatrix;
@@ -12,6 +13,10 @@ use mmbsgd::rng::Xoshiro256;
 use mmbsgd::runtime::{ArtifactRegistry, Backend, NativeBackend, XlaBackend};
 
 fn artifacts_available() -> bool {
+    if !cfg!(feature = "xla") {
+        eprintln!("SKIP: built without the `xla` feature — no PJRT backend");
+        return false;
+    }
     let dir = ArtifactRegistry::default_dir();
     if ArtifactRegistry::load(&dir).is_ok() {
         true
@@ -69,7 +74,7 @@ fn margins_match_native() {
         return;
     }
     let mut x = xla();
-    let mut n = NativeBackend::new();
+    let mut n = NativeBackend::exact();
     for &(b, d, seed) in &[(10usize, 5usize, 1u64), (100, 22, 2), (300, 68, 3)] {
         let svs = random_store(b, d, seed);
         let mut rng = Xoshiro256::new(seed ^ 77);
@@ -98,7 +103,7 @@ fn merge_scores_match_native() {
         return;
     }
     let mut x = xla();
-    let mut n = NativeBackend::new();
+    let mut n = NativeBackend::exact();
     for &(b, d, seed) in &[(12usize, 3usize, 4u64), (60, 22, 5), (200, 68, 6)] {
         let svs = random_store(b, d, seed);
         let gamma = 1.3;
@@ -142,7 +147,7 @@ fn merge_gd_matches_native() {
         return;
     }
     let mut x = xla();
-    let mut n = NativeBackend::new();
+    let mut n = NativeBackend::exact();
     let mut rng = Xoshiro256::new(9);
     for &m in &[2usize, 3, 5, 10] {
         let d = 8;
@@ -178,7 +183,7 @@ fn hybrid_backend_routes_consistently() {
         return;
     }
     let mut h = mmbsgd::runtime::HybridBackend::from_default_dir().unwrap();
-    let mut n = NativeBackend::new();
+    let mut n = NativeBackend::exact();
     let svs = random_store(50, 10, 11);
     let q = DenseMatrix::from_rows(vec![vec![0.1f32; 10], vec![-0.2f32; 10]]);
     let gamma = 0.9;

@@ -9,7 +9,7 @@ use mmbsgd::runtime::ArtifactRegistry;
 use mmbsgd::solver::{bsgd, NoopObserver};
 
 fn artifacts_available() -> bool {
-    ArtifactRegistry::load(&ArtifactRegistry::default_dir()).is_ok()
+    cfg!(feature = "xla") && ArtifactRegistry::load(&ArtifactRegistry::default_dir()).is_ok()
 }
 
 fn adult_cfg(n: usize, backend: BackendChoice) -> TrainConfig {

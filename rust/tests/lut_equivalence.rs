@@ -1,0 +1,156 @@
+//! LUT merge scorer vs the exact golden-section reference.
+//!
+//! Three layers of evidence that the precomputed table (arXiv
+//! 1806.10180) loses nothing:
+//! 1. a property sweep over random `(a_i, a_j, c)` pinning the
+//!    LUT-scored `(wd, h, a_z)` to `merge_pair_params` within
+//!    interpolation tolerance,
+//! 2. per-lane parity of full `merge_scores` passes, and
+//! 3. end-to-end training on the synthetic ijcnn-like split: `lut` and
+//!    `exact` modes must land within 0.5% test accuracy of each other.
+
+use mmbsgd::budget::golden::{self, GS_ITERS};
+use mmbsgd::budget::{MergeLut, MergeScoreMode};
+use mmbsgd::config::TrainConfig;
+use mmbsgd::data::synth::{dataset, SynthSpec};
+use mmbsgd::kernel::EXP_NEG_CUTOFF;
+use mmbsgd::rng::Xoshiro256;
+use mmbsgd::runtime::{Backend, NativeBackend};
+use mmbsgd::solver::bsgd;
+
+#[test]
+fn prop_lut_matches_exact_pair_params() {
+    let lut = MergeLut::global();
+    let mut rng = Xoshiro256::new(0x1806_1018);
+    let mut checked = 0u32;
+    for case in 0..8000 {
+        let a_i = (rng.next_f64() - 0.5) * 4.0;
+        let a_j = (rng.next_f64() - 0.5) * 4.0;
+        if a_i.abs() < 1e-6 || a_j.abs() < 1e-6 {
+            continue;
+        }
+        // cover the whole table domain plus the far-pair regime
+        let c = rng.next_f64() * (EXP_NEG_CUTOFF * 1.5);
+        let ex = golden::merge_pair_params(a_i, a_j, c, GS_ITERS);
+        let lu = lut.merge_pair_params(a_i, a_j, c);
+        let norm2 = a_i * a_i + a_j * a_j;
+        assert!(
+            (lu.wd - ex.wd).abs() <= 1e-4 * norm2 + 1e-9,
+            "case {case}: wd {} vs exact {} (a_i={a_i}, a_j={a_j}, c={c})",
+            lu.wd,
+            ex.wd
+        );
+        assert!(
+            (lu.a_z.abs() - ex.a_z.abs()).abs() <= 1e-4 * norm2.sqrt() + 1e-9,
+            "case {case}: a_z {} vs exact {} (a_i={a_i}, a_j={a_j}, c={c})",
+            lu.a_z,
+            ex.a_z
+        );
+        assert!(
+            (lu.h - ex.h).abs() <= 0.05,
+            "case {case}: h {} vs exact {} (a_i={a_i}, a_j={a_j}, c={c})",
+            lu.h,
+            ex.h
+        );
+        checked += 1;
+    }
+    assert!(checked > 6000, "sweep degenerated: only {checked} cases");
+}
+
+#[test]
+fn merge_scores_lane_parity() {
+    let mut rng = Xoshiro256::new(99);
+    for &(b, d, gamma) in &[(32usize, 3usize, 1.2f64), (96, 16, 0.4)] {
+        let mut svs = mmbsgd::model::SvStore::new(d);
+        for _ in 0..b {
+            let x: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+            let mut a = 0.05 + rng.next_f64();
+            if rng.next_f64() < 0.5 {
+                a = -a;
+            }
+            svs.push(&x, a);
+        }
+        let i = svs.min_abs_alpha().unwrap();
+        let exact = NativeBackend::exact().merge_scores(&svs, gamma, i);
+        let lut = NativeBackend::new().merge_scores(&svs, gamma, i);
+        assert!(exact.wd[i].is_infinite() && lut.wd[i].is_infinite());
+        for j in 0..b {
+            if j == i {
+                continue;
+            }
+            let norm2 = svs.alpha(i).powi(2) + svs.alpha(j).powi(2);
+            assert!(
+                (exact.wd[j] - lut.wd[j]).abs() <= 1e-4 * norm2 + 1e-9,
+                "B={b} lane {j}: wd {} vs {}",
+                lut.wd[j],
+                exact.wd[j]
+            );
+            assert_eq!(exact.d2[j], lut.d2[j], "d2 must be identical (same cache)");
+        }
+    }
+}
+
+#[test]
+fn lut_and_exact_training_accuracy_within_half_percent() {
+    // The acceptance gate: same stream, same hyperparameters, only the
+    // merge scorer differs.  Near-tie partner selections can diverge the
+    // trajectories, so accuracy (not the SV set) is the contract.
+    let split = dataset(&SynthSpec::ijcnn_like(0.02), 11);
+    let spec = SynthSpec::ijcnn_like(0.02);
+    let mk = |mode: MergeScoreMode| TrainConfig {
+        lambda: TrainConfig::lambda_from_c(spec.c, split.train.len()),
+        gamma: spec.gamma,
+        budget: 48,
+        mergees: 4,
+        epochs: 1,
+        seed: 7,
+        merge_score_mode: mode,
+        ..TrainConfig::default()
+    };
+    let out_exact = bsgd::train(&split.train, &mk(MergeScoreMode::Exact));
+    let out_lut = bsgd::train(&split.train, &mk(MergeScoreMode::Lut));
+    assert!(out_exact.maintenance_events > 0, "budget never hit — test is vacuous");
+    let acc_exact = out_exact.model.accuracy(&split.test);
+    let acc_lut = out_lut.model.accuracy(&split.test);
+    assert!(
+        (acc_exact - acc_lut).abs() < 0.005,
+        "lut accuracy {acc_lut} vs exact {acc_exact} diverged >0.5%"
+    );
+    // mode is recorded in the model provenance string
+    assert!(out_lut.model.meta.contains("score=lut"), "meta: {}", out_lut.model.meta);
+    assert!(out_exact.model.meta.contains("score=exact"));
+}
+
+#[test]
+fn config_mode_reaches_backend_through_train_full() {
+    let split = dataset(&SynthSpec::ijcnn_like(0.01), 3);
+    let spec = SynthSpec::ijcnn_like(0.01);
+    let mut cfg = TrainConfig {
+        lambda: TrainConfig::lambda_from_c(spec.c, split.train.len()),
+        gamma: spec.gamma,
+        budget: 16,
+        mergees: 2,
+        seed: 1,
+        merge_score_mode: MergeScoreMode::Exact,
+        ..TrainConfig::default()
+    };
+    // backend constructed in Lut mode; train_full must switch it.
+    let mut be = NativeBackend::new();
+    let _ = bsgd::train_full(
+        &split.train,
+        &cfg,
+        &mut be,
+        None,
+        &mut mmbsgd::solver::NoopObserver,
+    );
+    assert_eq!(be.mode(), MergeScoreMode::Exact);
+    cfg.merge_score_mode = MergeScoreMode::Lut;
+    let _ = bsgd::train_full(
+        &split.train,
+        &cfg,
+        &mut be,
+        None,
+        &mut mmbsgd::solver::NoopObserver,
+    );
+    assert_eq!(be.mode(), MergeScoreMode::Lut);
+}

@@ -1,0 +1,191 @@
+//! Minimal, dependency-free drop-in for the subset of the `anyhow` API
+//! this workspace uses: [`Error`], [`Result`], the [`Context`] trait
+//! (`.context(..)` / `.with_context(..)` on `Result` and `Option`), and
+//! the [`anyhow!`] / [`bail!`] macros.  Vendored so the workspace builds
+//! fully offline (the container image carries no crates.io cache).
+//!
+//! Semantics mirror the real crate where it matters here:
+//! * `{e}` displays the outermost message, `{e:#}` the whole context
+//!   chain joined by `": "`, `{e:?}` a multi-line report with causes;
+//! * `?` converts any `std::error::Error + Send + Sync + 'static` via
+//!   the blanket `From` impl (which is also why [`Error`] itself must
+//!   not implement `std::error::Error` — the reflexive `From` would
+//!   conflict, exactly as in the real crate).
+
+use std::fmt::{self, Debug, Display};
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-carrying error: a stack of human-readable frames, the
+/// outermost context first and the root cause last.
+pub struct Error {
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message (what `anyhow!` expands to).
+    pub fn msg<M: Display>(message: M) -> Self {
+        Error { frames: vec![message.to_string()] }
+    }
+
+    /// Push an outer context frame.
+    pub fn context<C: Display>(mut self, context: C) -> Self {
+        self.frames.insert(0, context.to_string());
+        self
+    }
+
+    /// The root-cause message (innermost frame).
+    pub fn root_cause(&self) -> &str {
+        self.frames.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.frames.join(": "))
+        } else {
+            write!(f, "{}", self.frames.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.frames.first().map(String::as_str).unwrap_or(""))?;
+        if self.frames.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for frame in &self.frames[1..] {
+                write!(f, "\n    {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Self {
+        let mut frames = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(cause) = source {
+            frames.push(cause.to_string());
+            source = cause.source();
+        }
+        Error { frames }
+    }
+}
+
+mod private {
+    /// Seals [`super::Context`] to the impls below.
+    pub trait Sealed {}
+    impl<T, E> Sealed for std::result::Result<T, E> {}
+    impl<T> Sealed for Option<T> {}
+}
+
+/// Attach context to a fallible value, converting the error to [`Error`].
+pub trait Context<T>: private::Sealed {
+    fn context<C: Display>(self, context: C) -> Result<T>;
+    fn with_context<C: Display, F: FnOnce() -> C>(self, context: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, context: F) -> Result<T> {
+        self.map_err(|e| e.into().context(context()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, context: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any printable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<f64> {
+            let v: f64 = "not-a-number".parse()?;
+            Ok(v)
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let e: Error = Error::from(io_err()).context("reading config");
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: no such file");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.root_cause(), "no such file");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("inner {}", 7));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner 7");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert!(f(1).is_ok());
+        assert_eq!(format!("{}", f(-2).unwrap_err()), "negative: -2");
+    }
+}
