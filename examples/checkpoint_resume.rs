@@ -1,0 +1,86 @@
+//! Checkpoint/resume example: interrupt a training run mid-epoch,
+//! serialize the complete session state, resume it in a *fresh process
+//! state* (new session, new backend), and verify the final model is
+//! bit-identical to an uninterrupted run — the contract long-running
+//! and preemptible training jobs rely on.
+//!
+//! Run: `cargo run --release --example checkpoint_resume`
+
+use mmbsgd::config::TrainConfig;
+use mmbsgd::data::synth::{dataset, SynthSpec};
+use mmbsgd::runtime::NativeBackend;
+use mmbsgd::solver::{NoopObserver, TrainSession};
+
+fn main() {
+    let spec = SynthSpec::adult_like(0.05);
+    let split = dataset(&spec, 1);
+    let cfg = TrainConfig {
+        lambda: TrainConfig::lambda_from_c(spec.c, split.train.len()),
+        gamma: spec.gamma,
+        budget: 96,
+        mergees: 4,
+        epochs: 2,
+        seed: 13,
+        ..TrainConfig::default()
+    };
+    println!(
+        "ADULT twin @5%: {} train, B={} M={} epochs={}",
+        split.train.len(),
+        cfg.budget,
+        cfg.mergees,
+        cfg.epochs
+    );
+
+    // Reference: uninterrupted run.
+    let mut be_ref = NativeBackend::new();
+    let mut reference = TrainSession::new(cfg.clone(), &mut be_ref).expect("valid config");
+    while reference.epochs_done() < cfg.epochs as u64 {
+        reference.partial_fit(&split.train).expect("train");
+    }
+    let reference = reference.finish();
+
+    // Interrupted run: stop mid-epoch-one, checkpoint, throw the
+    // session away, resume from the blob, and train to completion.
+    let interrupt_at = split.train.len() as u64 + split.train.len() as u64 / 3;
+    let mut be_a = NativeBackend::new();
+    let mut first = TrainSession::new(cfg.clone(), &mut be_a).expect("valid config");
+    let mut remaining = interrupt_at;
+    while remaining > 0 {
+        let before = first.steps();
+        first.run_epoch(&split.train, None, &mut NoopObserver, remaining).expect("train");
+        remaining -= first.steps() - before;
+    }
+    let blob = first.checkpoint();
+    println!(
+        "interrupted at step {} (mid-epoch, {} samples left); checkpoint = {} bytes",
+        first.steps(),
+        first.remaining_in_epoch(),
+        blob.len()
+    );
+    drop(first);
+
+    let mut be_b = NativeBackend::new();
+    let mut resumed = TrainSession::resume(&blob, &mut be_b).expect("valid checkpoint");
+    while resumed.epochs_done() < cfg.epochs as u64 {
+        resumed.partial_fit(&split.train).expect("train");
+    }
+    let resumed = resumed.finish();
+
+    assert_eq!(resumed.steps, reference.steps);
+    assert_eq!(resumed.margin_violations, reference.margin_violations);
+    assert_eq!(resumed.maintenance_events, reference.maintenance_events);
+    assert_eq!(resumed.model.svs.points_flat(), reference.model.svs.points_flat());
+    assert_eq!(resumed.model.svs.alphas_vec(), reference.model.svs.alphas_vec());
+    assert_eq!(resumed.model.bias.to_bits(), reference.model.bias.to_bits());
+    println!(
+        "resumed run: {} steps, {} SVs, {} maintenance events — bit-identical to uninterrupted",
+        resumed.steps,
+        resumed.model.svs.len(),
+        resumed.maintenance_events
+    );
+    println!(
+        "test accuracy: resumed {:.2}% vs uninterrupted {:.2}%",
+        100.0 * resumed.model.accuracy(&split.test),
+        100.0 * reference.model.accuracy(&split.test)
+    );
+}

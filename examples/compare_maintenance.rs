@@ -46,7 +46,7 @@ fn main() {
     for (kind, label) in kinds {
         let mut cfg = base.clone();
         cfg.maintenance = Some(kind);
-        let out = bsgd::train(&split.train, &cfg);
+        let out = bsgd::train(&split.train, &cfg).expect("valid config");
         t.row(vec![
             label.to_string(),
             num(out.train_seconds, 3),

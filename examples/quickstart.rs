@@ -31,7 +31,7 @@ fn main() {
     for m in [2usize, 5] {
         let mut c = cfg.clone();
         c.mergees = m;
-        let out = bsgd::train(&split.train, &c);
+        let out = bsgd::train(&split.train, &c).expect("valid config");
         println!(
             "M={m}: {:.2}s  acc {:.2}%  merge-time {:.0}%  maintenance events {}",
             out.train_seconds,

@@ -1,11 +1,11 @@
-//! Serving example: train once, then serve classification requests in
-//! batches through the XLA runtime (falling back to native when no
-//! artifacts are present), reporting latency percentiles and
-//! throughput.
+//! Serving example: train once, wrap the model in a [`Predictor`]
+//! serving handle (XLA runtime when artifacts are present, native
+//! fallback otherwise), and serve classification requests in batches,
+//! reporting latency percentiles and throughput.
 //!
 //! Models trained by `mmbsgd train --save model.txt` can be served the
-//! same way; this example trains its own small model so it runs
-//! self-contained.
+//! same way (`SvmModel::load` + `Predictor::new`); this example trains
+//! its own small model so it runs self-contained.
 //!
 //! Run: `cargo run --release --example serve_classify [batch_size]`
 
@@ -13,6 +13,7 @@ use mmbsgd::config::TrainConfig;
 use mmbsgd::data::synth::{dataset, SynthSpec};
 use mmbsgd::data::DenseMatrix;
 use mmbsgd::runtime::{ArtifactRegistry, Backend, NativeBackend, XlaBackend};
+use mmbsgd::serve::Predictor;
 use mmbsgd::solver::bsgd;
 use mmbsgd::util::stats::percentile;
 use std::time::Instant;
@@ -29,32 +30,33 @@ fn main() {
         seed: 2,
         ..TrainConfig::default()
     };
-    let out = bsgd::train(&split.train, &cfg);
-    let model = out.model;
+    let out = bsgd::train(&split.train, &cfg).expect("valid config");
     println!(
         "model: {} SVs, trained in {:.2}s, test acc {:.2}%",
-        model.svs.len(),
+        out.model.svs.len(),
         out.train_seconds,
-        100.0 * model.accuracy(&split.test)
+        100.0 * out.model.accuracy(&split.test)
     );
 
-    let mut backend: Box<dyn Backend> =
-        match XlaBackend::new(&ArtifactRegistry::default_dir()) {
-            Ok(b) => {
-                println!("serving through PJRT (AOT artifacts)");
-                Box::new(b)
-            }
-            Err(e) => {
-                println!("no artifacts ({e}); serving natively");
-                Box::new(NativeBackend::new())
-            }
-        };
+    let backend: Box<dyn Backend> = match XlaBackend::new(&ArtifactRegistry::default_dir()) {
+        Ok(b) => {
+            println!("serving through PJRT (AOT artifacts)");
+            Box::new(b)
+        }
+        Err(e) => {
+            println!("no artifacts ({e}); serving natively");
+            Box::new(NativeBackend::new())
+        }
+    };
+    // The Predictor owns model + backend, folds the coefficient scale
+    // once, and serves every request through the batched margins path.
+    let mut served_model = Predictor::new(out.model, backend).expect("valid model");
 
     // Warmup: the first artifact call pays one-time PJRT compilation;
     // real deployments compile at startup, so exclude it from latency.
     {
         let warm = DenseMatrix::from_rows(vec![vec![0.0f32; split.test.dim()]]);
-        let _ = backend.margins(&model.svs, model.gamma, &warm);
+        let _ = served_model.decision_batch(&warm).expect("dim matches");
     }
 
     // Request stream: test points in `batch`-sized requests.
@@ -69,10 +71,9 @@ fn main() {
         let rows: Vec<Vec<f32>> = (i..hi).map(|r| test.x.row(r).to_vec()).collect();
         let q = DenseMatrix::from_rows(rows);
         let t1 = Instant::now();
-        let margins = backend.margins(&model.svs, model.gamma, &q);
+        let labels = served_model.predict_batch(&q).expect("dim matches");
         latencies_ms.push(t1.elapsed().as_secs_f64() * 1e3);
-        for (k, &f) in margins.iter().enumerate() {
-            let pred = if f + model.bias >= 0.0 { 1.0 } else { -1.0 };
+        for (k, &pred) in labels.iter().enumerate() {
             if pred == test.y[i + k] {
                 correct += 1;
             }

@@ -55,7 +55,8 @@ fn main() {
             backend.as_mut(),
             Some(&split.test),
             &mut NoopObserver,
-        );
+        )
+        .expect("valid config");
         println!("accuracy curve (step, acc%, #SV, elapsed s):");
         for p in &out.history {
             println!(

@@ -43,7 +43,7 @@ fn main() {
             let mut cfg = cfg_for(&spec, split.train.len(), 64, 3);
             cfg.maintenance = Some(kind);
             bench(&format!("table1/epoch/{tag}"), 1500, || {
-                bsgd::train(&split.train, &cfg)
+                bsgd::train(&split.train, &cfg).unwrap()
             });
         }
     }
@@ -64,7 +64,7 @@ fn main() {
         let split = dataset(&spec, 1);
         for m in [2usize, 5, 10] {
             let cfg = cfg_for(&spec, split.train.len(), 32, m);
-            bench(&format!("fig1/epoch/M{m}"), 1500, || bsgd::train(&split.train, &cfg));
+            bench(&format!("fig1/epoch/M{m}"), 1500, || bsgd::train(&split.train, &cfg).unwrap());
         }
     }
 
@@ -80,7 +80,7 @@ fn main() {
             let split = dataset(&spec, 1);
             let cfg = cfg_for(&spec, split.train.len(), 64, 4);
             bench(&format!("fig2/epoch/{}", spec.name), 1500, || {
-                bsgd::train(&split.train, &cfg)
+                bsgd::train(&split.train, &cfg).unwrap()
             });
         }
     }
@@ -93,7 +93,7 @@ fn main() {
         let split = dataset(&spec, 1);
         for m in [2usize, 11] {
             let cfg = cfg_for(&spec, split.train.len(), 256, m);
-            bench(&format!("fig4/cell/M{m}"), 2000, || bsgd::train(&split.train, &cfg));
+            bench(&format!("fig4/cell/M{m}"), 2000, || bsgd::train(&split.train, &cfg).unwrap());
         }
     }
 
@@ -108,7 +108,7 @@ fn main() {
             let mut cfg = cfg_for(&spec, split.train.len(), 64, 3);
             cfg.gamma = gamma;
             bench(&format!("fig5/cell/gamma{gamma}"), 1500, || {
-                bsgd::train(&split.train, &cfg)
+                bsgd::train(&split.train, &cfg).unwrap()
             });
         }
     }

@@ -9,6 +9,7 @@ mod toml;
 pub use toml::{TomlDoc, TomlError, TomlValue};
 
 use crate::budget::{MaintenanceKind, MergeScoreMode};
+use crate::error::TrainError;
 use anyhow::{bail, Context, Result};
 
 /// Which compute backend executes the numeric hot paths.
@@ -31,6 +32,14 @@ impl BackendChoice {
             "xla" => Some(Self::Xla),
             "hybrid" => Some(Self::Hybrid),
             _ => None,
+        }
+    }
+
+    pub fn describe(&self) -> &'static str {
+        match self {
+            Self::Native => "native",
+            Self::Xla => "xla",
+            Self::Hybrid => "hybrid",
         }
     }
 }
@@ -70,6 +79,14 @@ pub struct TrainConfig {
     pub merge_score_mode: MergeScoreMode,
     /// Drop SVs with |α| below this after maintenance (0 = off).
     pub prune_eps: f64,
+    /// Pending cost parameter C (paper Table 2 convention λ = 1/(n·C)),
+    /// set by the TOML `c = ...` key or experiment specs.  Explicitly
+    /// represented — no sentinel encoding in `lambda` — so a config
+    /// that was never resolved fails [`TrainConfig::validate`] with a
+    /// dedicated [`TrainError::UnresolvedCost`] instead of a baffling
+    /// "lambda must be positive" message.  Cleared by
+    /// [`TrainConfig::resolve_c`] once the training-set size is known.
+    pub cost_c: Option<f64>,
 }
 
 impl Default for TrainConfig {
@@ -88,6 +105,7 @@ impl Default for TrainConfig {
             backend: BackendChoice::Native,
             merge_score_mode: MergeScoreMode::Lut,
             prune_eps: 0.0,
+            cost_c: None,
         }
     }
 }
@@ -104,22 +122,35 @@ impl TrainConfig {
             .unwrap_or(MaintenanceKind::Merge { m: self.mergees })
     }
 
-    /// Validate invariants; call before training.
-    pub fn validate(&self) -> Result<()> {
+    /// Validate invariants; call before training.  Every branch maps to
+    /// a typed [`TrainError`] so entry paths never panic on bad input.
+    pub fn validate(&self) -> Result<(), TrainError> {
+        let bad = |field: &'static str, message: String| {
+            Err(TrainError::InvalidConfig { field, message })
+        };
+        if let Some(c) = self.cost_c {
+            return Err(TrainError::UnresolvedCost { c });
+        }
         if !(self.lambda > 0.0 && self.lambda.is_finite()) {
-            bail!("lambda must be positive, got {}", self.lambda);
+            return bad("lambda", format!("must be positive, got {}", self.lambda));
         }
         if !(self.gamma > 0.0 && self.gamma.is_finite()) {
-            bail!("gamma must be positive, got {}", self.gamma);
+            return bad("gamma", format!("must be positive, got {}", self.gamma));
         }
         if self.budget < 2 {
-            bail!("budget must be >= 2, got {}", self.budget);
+            return bad("budget", format!("must be >= 2, got {}", self.budget));
         }
         if !(2..=16).contains(&self.mergees) {
-            bail!("mergees must be in 2..=16, got {}", self.mergees);
+            return bad("mergees", format!("must be in 2..=16, got {}", self.mergees));
         }
         if self.epochs == 0 {
-            bail!("epochs must be >= 1");
+            return bad("epochs", "must be >= 1".into());
+        }
+        if !(self.eta0 > 0.0 && self.eta0.is_finite()) {
+            return bad("eta0", format!("must be positive, got {}", self.eta0));
+        }
+        if !(self.prune_eps >= 0.0 && self.prune_eps.is_finite()) {
+            return bad("prune_eps", format!("must be >= 0, got {}", self.prune_eps));
         }
         Ok(())
     }
@@ -132,12 +163,20 @@ impl TrainConfig {
         };
         for (key, val) in sect {
             match key.as_str() {
-                "lambda" => self.lambda = val.as_f64().context("lambda")?,
+                "lambda" => {
+                    self.lambda = val.as_f64().context("lambda")?;
+                    // an explicit lambda cancels any earlier `c =` key
+                    // (last key wins, as TOML readers expect)
+                    self.cost_c = None;
+                }
                 "c" => {
-                    // convenience: store C here; the caller converts via
-                    // lambda_from_c once n is known — flagged as negative λ
+                    // convenience: keep C pending; the caller converts
+                    // via resolve_c() once the training-set size is known
                     let c = val.as_f64().context("c")?;
-                    self.lambda = -c; // sentinel, resolved by resolve_c()
+                    if !(c > 0.0 && c.is_finite()) {
+                        bail!("c must be positive, got {c}");
+                    }
+                    self.cost_c = Some(c);
                 }
                 "gamma" => self.gamma = val.as_f64().context("gamma")?,
                 "budget" => self.budget = val.as_f64().context("budget")? as usize,
@@ -170,10 +209,11 @@ impl TrainConfig {
         Ok(())
     }
 
-    /// Resolve a `c = ...` sentinel once the training-set size is known.
+    /// Resolve a pending `c = ...` cost parameter once the training-set
+    /// size is known; a no-op when no C is pending.
     pub fn resolve_c(&mut self, n: usize) {
-        if self.lambda < 0.0 {
-            self.lambda = Self::lambda_from_c(-self.lambda, n);
+        if let Some(c) = self.cost_c.take() {
+            self.lambda = Self::lambda_from_c(c, n);
         }
     }
 }
@@ -198,6 +238,44 @@ mod tests {
         let mut c = TrainConfig::default();
         c.gamma = f64::NAN;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validation_errors_are_typed_per_field() {
+        use crate::error::TrainError;
+        let cases: Vec<(Box<dyn Fn(&mut TrainConfig)>, &str)> = vec![
+            (Box::new(|c| c.lambda = -1.0), "lambda"),
+            (Box::new(|c| c.lambda = f64::INFINITY), "lambda"),
+            (Box::new(|c| c.gamma = 0.0), "gamma"),
+            (Box::new(|c| c.budget = 0), "budget"),
+            (Box::new(|c| c.mergees = 17), "mergees"),
+            (Box::new(|c| c.epochs = 0), "epochs"),
+            (Box::new(|c| c.eta0 = 0.0), "eta0"),
+            (Box::new(|c| c.prune_eps = -1.0), "prune_eps"),
+        ];
+        for (mutate, want_field) in cases {
+            let mut cfg = TrainConfig::default();
+            mutate(&mut cfg);
+            match cfg.validate() {
+                Err(TrainError::InvalidConfig { field, .. }) => {
+                    assert_eq!(field, want_field);
+                }
+                other => panic!("{want_field}: expected InvalidConfig, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn unresolved_cost_is_a_dedicated_error() {
+        use crate::error::TrainError;
+        let mut cfg = TrainConfig::default();
+        cfg.cost_c = Some(8.0);
+        assert_eq!(cfg.validate(), Err(TrainError::UnresolvedCost { c: 8.0 }));
+        // the message tells the caller exactly what to do
+        let msg = cfg.validate().unwrap_err().to_string();
+        assert!(msg.contains("resolve_c"), "{msg}");
+        cfg.resolve_c(100);
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]
@@ -231,10 +309,34 @@ mod tests {
     }
 
     #[test]
-    fn toml_c_sentinel_resolves() {
+    fn toml_c_pends_then_resolves() {
         let doc = TomlDoc::parse("[train]\nc = 8\n").unwrap();
         let mut cfg = TrainConfig::default();
         cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.cost_c, Some(8.0));
+        cfg.resolve_c(100);
+        assert_eq!(cfg.cost_c, None);
+        assert!((cfg.lambda - 1.0 / 800.0).abs() < 1e-15);
+        // nonpositive C rejected at parse time, not at resolve time
+        let doc = TomlDoc::parse("[train]\nc = -8\n").unwrap();
+        assert!(TrainConfig::default().apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn toml_last_cost_key_wins() {
+        // `c` then `lambda`: the explicit lambda cancels the pending C
+        let doc = TomlDoc::parse("[train]\nc = 8\nlambda = 0.25\n").unwrap();
+        let mut cfg = TrainConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.cost_c, None);
+        assert_eq!(cfg.lambda, 0.25);
+        cfg.resolve_c(100); // no-op: nothing pending
+        assert_eq!(cfg.lambda, 0.25);
+        // `lambda` then `c`: C pends and wins at resolve time
+        let doc = TomlDoc::parse("[train]\nlambda = 0.25\nc = 8\n").unwrap();
+        let mut cfg = TrainConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.cost_c, Some(8.0));
         cfg.resolve_c(100);
         assert!((cfg.lambda - 1.0 / 800.0).abs() < 1e-15);
     }

@@ -84,7 +84,7 @@ pub fn run_on_split(spec: &RunSpec, split: &Split) -> Result<RunResult> {
         backend.as_mut(),
         Some(&split.test),
         &mut NoopObserver,
-    );
+    )?;
     let test_accuracy = bsgd::evaluate(&out.model, backend.as_mut(), &split.test);
     Ok(RunResult {
         name: spec.name.clone(),

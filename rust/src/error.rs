@@ -1,0 +1,92 @@
+//! Typed errors for the training / serving entry paths.
+//!
+//! The library's public surface (session construction, stepping,
+//! checkpoint parsing, batched prediction) must never panic on
+//! user-supplied input: every invalid configuration, malformed
+//! checkpoint, or shape mismatch maps to a [`TrainError`] variant the
+//! caller can match on.  The variants carry enough structure for
+//! programmatic handling (which config field, which dimensions) while
+//! `Display` renders an actionable message; `std::error::Error` is
+//! implemented so `?` converts into `anyhow::Error` at the CLI layer.
+
+use std::fmt;
+
+/// Everything that can go wrong constructing or driving a training
+/// session or a serving [`crate::serve::Predictor`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum TrainError {
+    /// A [`crate::config::TrainConfig`] invariant is violated.
+    InvalidConfig {
+        /// The offending field (`"lambda"`, `"gamma"`, `"budget"`,
+        /// `"mergees"`, `"epochs"`, `"folds"`, ...).
+        field: &'static str,
+        message: String,
+    },
+    /// A `c = ...` cost parameter was set (TOML/CLI convenience) but
+    /// never resolved against the training-set size.  λ = 1/(n·C)
+    /// needs n; call [`crate::config::TrainConfig::resolve_c`] first.
+    UnresolvedCost { c: f64 },
+    /// The training (or evaluation) dataset holds no samples.
+    EmptyDataset,
+    /// A sample or query row has the wrong feature count.
+    DimMismatch { expected: usize, got: usize },
+    /// A checkpoint (or model) blob failed to parse.
+    Checkpoint(String),
+}
+
+impl fmt::Display for TrainError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TrainError::InvalidConfig { field, message } => {
+                write!(f, "invalid config: {field}: {message}")
+            }
+            TrainError::UnresolvedCost { c } => write!(
+                f,
+                "cost parameter C = {c} is unresolved; λ = 1/(n·C) needs the \
+                 training-set size — call TrainConfig::resolve_c(n) before training"
+            ),
+            TrainError::EmptyDataset => write!(f, "empty dataset"),
+            TrainError::DimMismatch { expected, got } => {
+                write!(f, "feature-dimension mismatch: expected {expected}, got {got}")
+            }
+            TrainError::Checkpoint(msg) => write!(f, "bad checkpoint: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for TrainError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_field() {
+        let e = TrainError::InvalidConfig { field: "gamma", message: "must be positive".into() };
+        let s = e.to_string();
+        assert!(s.contains("gamma") && s.contains("positive"), "{s}");
+    }
+
+    #[test]
+    fn unresolved_cost_tells_the_fix() {
+        let s = TrainError::UnresolvedCost { c: 8.0 }.to_string();
+        assert!(s.contains("resolve_c"), "{s}");
+        assert!(s.contains('8'), "{s}");
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        fn inner() -> anyhow::Result<()> {
+            Err(TrainError::EmptyDataset)?
+        }
+        let err = inner().unwrap_err();
+        assert!(format!("{err}").contains("empty dataset"));
+    }
+
+    #[test]
+    fn dim_mismatch_carries_both_sides() {
+        let e = TrainError::DimMismatch { expected: 22, got: 7 };
+        assert_eq!(e, TrainError::DimMismatch { expected: 22, got: 7 });
+        assert!(e.to_string().contains("22"));
+    }
+}

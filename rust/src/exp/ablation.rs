@@ -172,7 +172,7 @@ pub fn run(opts: &ExpOptions) -> Result<()> {
         let mut svs_seed = SvStore::new(split.train.dim());
         // Build a realistic overflowing store from the first 2B margin
         // violators of a vanilla run.
-        let probe = bsgd::train(&split.train, &TrainConfig { budget: 10 * budget, ..cfg.clone() });
+        let probe = bsgd::train(&split.train, &TrainConfig { budget: 10 * budget, ..cfg.clone() })?;
         for j in 0..probe.model.svs.len().min(budget + 40) {
             svs_seed.push(probe.model.svs.point(j), probe.model.svs.alpha(j));
         }

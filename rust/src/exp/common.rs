@@ -88,7 +88,7 @@ pub fn spec_for(
         data: data.clone(),
         data_seed: opts.seed,
         cfg: TrainConfig {
-            lambda: -data.c, // C sentinel; resolved against train size
+            cost_c: Some(data.c), // resolved against train size by the coordinator
             gamma: data.gamma,
             budget,
             mergees,
@@ -141,7 +141,12 @@ mod tests {
         let opts = ExpOptions::default();
         let s = spec_for(&data, &opts, 64, 3, 9);
         assert_eq!(s.cfg.gamma, 0.008);
-        assert_eq!(s.cfg.lambda, -32.0); // C sentinel
+        assert_eq!(s.cfg.cost_c, Some(32.0)); // pending C, resolved by run_on_split
         assert_eq!(s.cfg.budget, 64);
+        // unresolved C must be a dedicated, actionable error
+        assert!(matches!(
+            s.cfg.validate(),
+            Err(crate::error::TrainError::UnresolvedCost { .. })
+        ));
     }
 }

@@ -33,21 +33,28 @@
 //!     epochs: 1,
 //!     ..TrainConfig::default()
 //! };
-//! let out = bsgd::train(&ds.train, &cfg);
+//! let out = bsgd::train(&ds.train, &cfg).expect("valid config + data");
 //! let acc = out.model.accuracy(&ds.test);
 //! println!("test accuracy {:.2}%", 100.0 * acc);
 //! ```
+//!
+//! For streaming ingestion, checkpoint/resume, and long-running jobs,
+//! use [`solver::session::TrainSession`]; for deployment-side batched
+//! inference, [`serve::Predictor`].  Both return typed
+//! [`error::TrainError`]s instead of panicking on user input.
 
 pub mod budget;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod exp;
 pub mod kernel;
 pub mod linalg;
 pub mod model;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod solver;
 pub mod util;
 
@@ -57,9 +64,12 @@ pub mod prelude {
     pub use crate::config::TrainConfig;
     pub use crate::data::synth::SynthSpec;
     pub use crate::data::{Dataset, DenseMatrix, Split};
+    pub use crate::error::TrainError;
     pub use crate::kernel::Gaussian;
     pub use crate::model::SvmModel;
     pub use crate::rng::Xoshiro256;
     pub use crate::runtime::{Backend, NativeBackend};
+    pub use crate::serve::Predictor;
     pub use crate::solver::bsgd;
+    pub use crate::solver::{Checkpoint, TrainSession};
 }

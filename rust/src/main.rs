@@ -19,7 +19,10 @@ use mmbsgd::data::synth::SynthSpec;
 use mmbsgd::data::{libsvm, split, Split};
 use mmbsgd::exp::{self, ExpOptions};
 use mmbsgd::model::SvmModel;
-use mmbsgd::solver::bsgd;
+use mmbsgd::runtime::Backend;
+use mmbsgd::serve::Predictor;
+use mmbsgd::solver::bsgd::{self, TrainOutput};
+use mmbsgd::solver::{Checkpoint, TrainSession};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -77,6 +80,9 @@ fn load_split(args: &Args) -> Result<Split> {
     // unless a --test file is given.
     let ds = libsvm::load(Path::new(name), None)
         .with_context(|| format!("--dataset {name:?} is neither a synth name nor a readable file"))?;
+    if ds.is_empty() {
+        bail!("--dataset {name:?} holds no samples");
+    }
     if let Some(test_path) = args.get("test") {
         let test = libsvm::load(Path::new(test_path), Some(ds.dim()))?;
         Ok(Split { train: ds, test })
@@ -102,11 +108,15 @@ fn train_config(args: &Args, split: &Split) -> Result<TrainConfig> {
         let doc = TomlDoc::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
         cfg.apply_toml(&doc)?;
     }
+    // CLI cost flags override a TOML `c = ...` key: clear the pending C
+    // so resolve_c() cannot overwrite the explicit value below.
     if let Some(c) = args.get("c") {
         cfg.lambda = TrainConfig::lambda_from_c(c.parse()?, split.train.len());
+        cfg.cost_c = None;
     }
     if let Some(l) = args.get("lambda") {
         cfg.lambda = l.parse()?;
+        cfg.cost_c = None;
     }
     cfg.gamma = args.get_parse("gamma", cfg.gamma)?;
     cfg.budget = args.get_parse("budget", cfg.budget)?;
@@ -131,30 +141,77 @@ fn train_config(args: &Args, split: &Split) -> Result<TrainConfig> {
     Ok(cfg)
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
-    let split = load_split(args)?;
-    let cfg = train_config(args, &split)?;
-    println!(
-        "[train] {} train={} test={} d={} | B={} M={} maint={} score={} λ={:.3e} γ={} backend={:?}",
-        split.train.name,
-        split.train.len(),
-        split.test.len(),
-        split.train.dim(),
-        cfg.budget,
-        cfg.mergees,
-        cfg.maintenance_kind().describe(),
-        cfg.merge_score_mode.describe(),
-        cfg.lambda,
-        cfg.gamma,
-        cfg.backend,
-    );
-    let mut backend = build_backend(cfg.backend)?;
+/// Drive a session over its remaining epochs, writing checkpoints to
+/// `--checkpoint <path>` at the `--checkpoint-every <steps>` cadence
+/// (0 = at epoch boundaries only, when a path is given).
+fn run_session(
+    mut sess: TrainSession<'_>,
+    split: &Split,
+    args: &Args,
+) -> Result<TrainOutput> {
+    let ckpt_path = args.get("checkpoint").map(PathBuf::from);
+    let ckpt_every: u64 = args.get_parse("checkpoint-every", 0u64)?;
+    if ckpt_every > 0 && ckpt_path.is_none() {
+        bail!("--checkpoint-every requires --checkpoint <path>");
+    }
     let mut obs = if args.has("quiet") {
         ProgressObserver::quiet()
     } else {
         ProgressObserver::new(1000)
     };
-    let out = bsgd::train_full(&split.train, &cfg, backend.as_mut(), Some(&split.test), &mut obs);
+    let total_epochs = sess.config().epochs as u64;
+    while sess.epochs_done() < total_epochs {
+        let chunk = if ckpt_path.is_some() { ckpt_every } else { 0 };
+        sess.run_epoch(&split.train, Some(&split.test), &mut obs, chunk)?;
+        if let Some(p) = &ckpt_path {
+            std::fs::write(p, sess.checkpoint())
+                .with_context(|| format!("writing checkpoint {}", p.display()))?;
+        }
+    }
+    Ok(sess.finish())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let split = load_split(args)?;
+    let mut backend: Box<dyn Backend>;
+    let sess = if let Some(rp) = args.get("resume") {
+        let text = std::fs::read_to_string(rp)
+            .with_context(|| format!("reading checkpoint {rp}"))?;
+        let mut ck = Checkpoint::parse(&text)?;
+        // allow extending the run: `--epochs` on resume overrides
+        let epochs = args.get_parse("epochs", ck.config().epochs)?;
+        ck.config_mut().epochs = epochs;
+        backend = build_backend(ck.config().backend)?;
+        println!(
+            "[resume] {rp}: step {} | epoch {}/{} | B={} M={} maint={}",
+            ck.step(),
+            ck.epochs_done(),
+            ck.config().epochs,
+            ck.config().budget,
+            ck.config().mergees,
+            ck.config().maintenance_kind().describe(),
+        );
+        ck.into_session(backend.as_mut())?
+    } else {
+        let cfg = train_config(args, &split)?;
+        println!(
+            "[train] {} train={} test={} d={} | B={} M={} maint={} score={} λ={:.3e} γ={} backend={:?}",
+            split.train.name,
+            split.train.len(),
+            split.test.len(),
+            split.train.dim(),
+            cfg.budget,
+            cfg.mergees,
+            cfg.maintenance_kind().describe(),
+            cfg.merge_score_mode.describe(),
+            cfg.lambda,
+            cfg.gamma,
+            cfg.backend,
+        );
+        backend = build_backend(cfg.backend)?;
+        TrainSession::new(cfg, backend.as_mut())?
+    };
+    let out = run_session(sess, &split, args)?;
     let acc = bsgd::evaluate(&out.model, backend.as_mut(), &split.test);
     println!();
     println!(
@@ -178,15 +235,26 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_evaluate(args: &Args) -> Result<()> {
+/// Build the serving handle: saved model + the requested backend
+/// (`--backend`, default native).
+fn load_predictor(args: &Args) -> Result<Predictor> {
     let model_path = args.get("model").context("--model required")?;
     let model = SvmModel::load(Path::new(model_path))?;
+    let choice = match args.get("backend") {
+        Some(b) => BackendChoice::parse(b).with_context(|| format!("bad --backend {b:?}"))?,
+        None => BackendChoice::Native,
+    };
+    Ok(Predictor::new(model, build_backend(choice)?)?)
+}
+
+fn cmd_evaluate(args: &Args) -> Result<()> {
+    let mut served = load_predictor(args)?;
     let split = load_split(args)?;
-    let acc = model.accuracy(&split.test);
+    let acc = served.accuracy(&split.test)?;
     println!(
         "[eval ] model {} ({} SVs) on {}: accuracy {:.2}%",
-        model_path,
-        model.svs.len(),
+        args.get("model").unwrap_or("?"),
+        served.n_svs(),
         split.test.name,
         100.0 * acc
     );
@@ -194,12 +262,12 @@ fn cmd_evaluate(args: &Args) -> Result<()> {
 }
 
 fn cmd_predict(args: &Args) -> Result<()> {
-    let model_path = args.get("model").context("--model required")?;
     let input = args.get("input").context("--input required")?;
-    let model = SvmModel::load(Path::new(model_path))?;
-    let ds = libsvm::load(Path::new(input), Some(model.svs.dim()))?;
-    for i in 0..ds.len() {
-        let f = model.decision(ds.sample(i).x);
+    let mut served = load_predictor(args)?;
+    let ds = libsvm::load(Path::new(input), Some(served.dim()))?;
+    // one batched margins call — the serving hot path — not n single-row scans
+    let decisions = served.decision_batch(&ds.x)?;
+    for f in decisions {
         println!("{} {f:.6}", if f >= 0.0 { "+1" } else { "-1" });
     }
     Ok(())
@@ -270,11 +338,11 @@ fn cmd_tune(args: &Args) -> Result<()> {
         split.train.name,
         split.train.len()
     );
-    let cells = mmbsgd::solver::tune::grid_search(&split.train, &params);
+    let cells = mmbsgd::solver::tune::grid_search(&split.train, &params)?;
     for cell in &cells {
         println!("  C={:<8} gamma={:<8} cv acc {:.2}%", cell.c, cell.gamma, 100.0 * cell.cv_accuracy);
     }
-    let best = cells[0];
+    let best = cells.first().context("empty tuning grid")?;
     println!("[best ] C={} gamma={} ({:.2}%)", best.c, best.gamma, 100.0 * best.cv_accuracy);
     Ok(())
 }
@@ -305,8 +373,15 @@ COMMANDS
                [--c F | --lambda F] [--gamma F]
                [--epochs N] [--seed N] [--eval-every N] [--config file.toml]
                [--save model.txt] [--test libsvm-path] [--quiet]
-  evaluate     --model model.txt --dataset <...> [--scale F]
-  predict      --model model.txt --input data.libsvm
+               [--checkpoint ckpt.txt] [--checkpoint-every STEPS]
+               [--resume ckpt.txt]
+               checkpoints capture ALL state (RNG, budget counters, the
+               in-flight epoch): a resumed run is bit-identical to an
+               uninterrupted one.  --resume reads config + backend from
+               the checkpoint (same --dataset flags required; --epochs
+               may be raised to extend the run).
+  evaluate     --model model.txt --dataset <...> [--scale F] [--backend B]
+  predict      --model model.txt --input data.libsvm [--backend B]
   experiment   --id table1|table2|fig1|fig2|fig3|fig4|fig5|ablation|all
                [--scale F] [--threads N] [--out-dir DIR] [--backend B] [--seed N]
   tune         --dataset <...> [--c-grid 1,4,16] [--gamma-grid 0.1,1,10]

@@ -5,7 +5,7 @@ mod store;
 pub use store::SvStore;
 
 use crate::data::Dataset;
-use crate::kernel::{Gaussian, Kernel};
+use crate::kernel::{sq_dist_cached, Gaussian, EXP_NEG_CUTOFF};
 use anyhow::{bail, Context, Result};
 use std::fmt::Write as _;
 use std::path::Path;
@@ -29,14 +29,12 @@ impl SvmModel {
         Gaussian::new(self.gamma)
     }
 
-    /// Decision value for one point.
+    /// Decision value for one point — routed through the norm-cached
+    /// native margin loop (`d² = ‖x‖² + ‖q‖² − 2⟨x,q⟩` with the SV
+    /// norms read from the [`SvStore`] cache), the same hot path the
+    /// trainer uses.
     pub fn decision(&self, x: &[f32]) -> f64 {
-        let k = self.kernel();
-        let mut f = self.bias;
-        for j in 0..self.svs.len() {
-            f += self.svs.alpha(j) * k.eval(self.svs.point(j), x);
-        }
-        f
+        self.bias + crate::runtime::margin1_native(&self.svs, self.gamma, x)
     }
 
     /// Predicted label (±1).
@@ -63,17 +61,25 @@ impl SvmModel {
     }
 
     /// `||w||^2 = α^T K α` — the regularizer value, O(B²) kernel evals.
+    ///
+    /// Distances use the dot-product identity with the [`SvStore`] norm
+    /// cache (row norm hoisted out of the inner loop), and far pairs
+    /// (`γd²` > [`EXP_NEG_CUTOFF`], contribution < 4e-18) skip the
+    /// `exp` — the same treatment as the training hot paths.
     pub fn weight_norm2(&self) -> f64 {
-        let k = self.kernel();
         let b = self.svs.len();
         let mut s = 0.0;
         for i in 0..b {
-            s += self.svs.alpha(i) * self.svs.alpha(i); // k(x_i,x_i)=1
+            let a_i = self.svs.alpha(i);
+            let x_i = self.svs.point(i);
+            let n_i = self.svs.norm2(i);
+            s += a_i * a_i; // k(x_i,x_i)=1
             for j in (i + 1)..b {
-                s += 2.0
-                    * self.svs.alpha(i)
-                    * self.svs.alpha(j)
-                    * k.eval(self.svs.point(i), self.svs.point(j));
+                let d2 = sq_dist_cached(x_i, n_i, self.svs.point(j), self.svs.norm2(j));
+                let e = self.gamma * d2;
+                if e < EXP_NEG_CUTOFF {
+                    s += 2.0 * a_i * self.svs.alpha(j) * (-e).exp();
+                }
             }
         }
         s
@@ -168,6 +174,7 @@ impl SvmModel {
 mod tests {
     use super::*;
     use crate::data::DenseMatrix;
+    use crate::kernel::Kernel;
 
     fn toy_model() -> SvmModel {
         let mut m = SvmModel::new(2, 0.5);

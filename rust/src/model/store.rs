@@ -92,6 +92,37 @@ impl SvStore {
         self.alphas.iter().map(|a| a * self.scale).collect()
     }
 
+    /// Raw stored coefficients WITHOUT the lazy scale folded in
+    /// (checkpointing: serializing `(raw, scale)` instead of the folded
+    /// product keeps a resumed run bit-identical — folding would
+    /// re-associate the multiplication chain and drift in the last ulp).
+    #[inline]
+    pub fn raw_alphas(&self) -> &[f64] {
+        &self.alphas
+    }
+
+    /// The lazy global scale factor (see [`SvStore::raw_alphas`]).
+    #[inline]
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    /// Rebuild a store from checkpoint parts: flat row-major points,
+    /// raw (unscaled) coefficients, and the lazy scale.  Norm caches
+    /// are recomputed (deterministically) from the points.
+    ///
+    /// Callers must pre-validate `points.len() == alphas.len() * dim`;
+    /// the checkpoint parser does.
+    pub fn from_raw(dim: usize, points: Vec<f32>, alphas: Vec<f64>, scale: f64) -> Self {
+        assert_eq!(points.len(), alphas.len() * dim, "points/alphas shape mismatch");
+        let norms2 = if dim == 0 {
+            vec![0.0; alphas.len()]
+        } else {
+            points.chunks_exact(dim).map(sq_norm).collect()
+        };
+        Self { dim, points, alphas, norms2, scale }
+    }
+
     pub fn push(&mut self, point: &[f32], alpha: f64) {
         assert_eq!(point.len(), self.dim, "point dim mismatch");
         self.points.extend_from_slice(point);
@@ -292,6 +323,29 @@ mod tests {
         // cache always mirrors a fresh computation
         for j in 0..s.len() {
             assert_eq!(s.norm2(j), crate::kernel::sq_norm(s.point(j)));
+        }
+    }
+
+    #[test]
+    fn from_raw_roundtrips_lazy_scale_exactly() {
+        let mut s = SvStore::new(2);
+        s.push(&[1.0, 2.0], 0.7);
+        s.push(&[-3.0, 0.5], -1.3);
+        s.scale_all(0.999_877);
+        s.scale_all(0.875);
+        let re = SvStore::from_raw(
+            s.dim(),
+            s.points_flat().to_vec(),
+            s.raw_alphas().to_vec(),
+            s.scale(),
+        );
+        assert_eq!(re.len(), 2);
+        assert_eq!(re.scale(), s.scale());
+        assert_eq!(re.raw_alphas(), s.raw_alphas());
+        // bit-identical effective coefficients and rebuilt norm cache
+        for j in 0..2 {
+            assert_eq!(re.alpha(j).to_bits(), s.alpha(j).to_bits());
+            assert_eq!(re.norm2(j), s.norm2(j));
         }
     }
 

@@ -28,7 +28,7 @@ mod xla_stub;
 
 pub use artifacts::{ArtifactInfo, ArtifactRegistry};
 pub use hybrid::HybridBackend;
-pub use native::NativeBackend;
+pub use native::{margin1_native, NativeBackend};
 #[cfg(feature = "xla")]
 pub use xla_backend::XlaBackend;
 #[cfg(not(feature = "xla"))]

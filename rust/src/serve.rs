@@ -1,0 +1,207 @@
+//! Serving: a batched prediction handle over a trained (or loaded)
+//! model.
+//!
+//! [`Predictor`] is the deployment-side counterpart of
+//! [`crate::solver::session::TrainSession`]: it takes ownership of an
+//! [`SvmModel`], folds the lazy coefficient scale once, keeps the
+//! per-SV `‖x‖²` norm cache warm (rebuilt on load, maintained by the
+//! store), and routes every request through [`Backend::margins`] — the
+//! same batched hot path the XLA artifacts accelerate.  All entry
+//! points return typed [`TrainError`]s; nothing in the serving path
+//! panics on user-supplied models or queries.
+//!
+//! ```
+//! use mmbsgd::prelude::*;
+//! use mmbsgd::serve::Predictor;
+//!
+//! let split = mmbsgd::data::synth::dataset(&SynthSpec::ijcnn_like(0.01), 1);
+//! let cfg = TrainConfig { lambda: 1e-3, gamma: 2.0, budget: 32, ..TrainConfig::default() };
+//! let out = bsgd::train(&split.train, &cfg).unwrap();
+//!
+//! let mut served = Predictor::native(out.model).unwrap();
+//! let labels = served.predict_batch(&split.test.x).unwrap();
+//! assert_eq!(labels.len(), split.test.len());
+//! assert!(labels.iter().all(|&y| y == 1.0 || y == -1.0));
+//! ```
+
+use crate::data::{Dataset, DenseMatrix};
+use crate::error::TrainError;
+use crate::model::SvmModel;
+use crate::runtime::{Backend, NativeBackend};
+
+/// A serving handle: model + backend, shape-checked batched inference.
+pub struct Predictor {
+    model: SvmModel,
+    backend: Box<dyn Backend>,
+}
+
+impl Predictor {
+    /// Build a predictor over an explicit backend (native, XLA, or
+    /// hybrid — see [`crate::coordinator::build_backend`]).
+    ///
+    /// Validates the model (γ must be positive and finite — a loaded
+    /// model file is user input) and folds the lazy coefficient scale
+    /// so request-time margins touch plain stored coefficients.
+    pub fn new(mut model: SvmModel, backend: Box<dyn Backend>) -> Result<Self, TrainError> {
+        if !(model.gamma > 0.0 && model.gamma.is_finite()) {
+            return Err(TrainError::InvalidConfig {
+                field: "gamma",
+                message: format!("model gamma must be positive, got {}", model.gamma),
+            });
+        }
+        model.svs.fold_scale();
+        Ok(Self { model, backend })
+    }
+
+    /// Convenience: serve through the pure-rust backend.
+    pub fn native(model: SvmModel) -> Result<Self, TrainError> {
+        Self::new(model, Box::new(NativeBackend::new()))
+    }
+
+    /// The wrapped model (read-only; provenance, SV count, ...).
+    pub fn model(&self) -> &SvmModel {
+        &self.model
+    }
+
+    /// Support-vector count.
+    pub fn n_svs(&self) -> usize {
+        self.model.svs.len()
+    }
+
+    /// Feature dimension requests must match.
+    pub fn dim(&self) -> usize {
+        self.model.svs.dim()
+    }
+
+    fn check_dim(&self, got: usize) -> Result<(), TrainError> {
+        if got != self.model.svs.dim() {
+            return Err(TrainError::DimMismatch { expected: self.model.svs.dim(), got });
+        }
+        Ok(())
+    }
+
+    /// Decision values `f(x) = Σ α_j k(x_j, x) + b` for a batch of
+    /// query rows, through the backend's batched margins.
+    pub fn decision_batch(&mut self, queries: &DenseMatrix) -> Result<Vec<f64>, TrainError> {
+        self.check_dim(queries.cols())?;
+        let mut out = self.backend.margins(&self.model.svs, self.model.gamma, queries);
+        for f in &mut out {
+            *f += self.model.bias;
+        }
+        Ok(out)
+    }
+
+    /// Predicted ±1 labels for a batch of query rows.
+    pub fn predict_batch(&mut self, queries: &DenseMatrix) -> Result<Vec<f32>, TrainError> {
+        Ok(self
+            .decision_batch(queries)?
+            .into_iter()
+            .map(|f| if f >= 0.0 { 1.0 } else { -1.0 })
+            .collect())
+    }
+
+    /// Decision value for a single query.
+    pub fn decision1(&mut self, x: &[f32]) -> Result<f64, TrainError> {
+        self.check_dim(x.len())?;
+        Ok(self.backend.margin1(&self.model.svs, self.model.gamma, x) + self.model.bias)
+    }
+
+    /// Predicted ±1 label for a single query.
+    pub fn predict1(&mut self, x: &[f32]) -> Result<f32, TrainError> {
+        Ok(if self.decision1(x)? >= 0.0 { 1.0 } else { -1.0 })
+    }
+
+    /// Accuracy on a labelled dataset through the batched path.
+    pub fn accuracy(&mut self, ds: &Dataset) -> Result<f64, TrainError> {
+        if ds.is_empty() {
+            return Err(TrainError::EmptyDataset);
+        }
+        let preds = self.predict_batch(&ds.x)?;
+        let correct = preds.iter().zip(&ds.y).filter(|(p, y)| p == y).count();
+        Ok(correct as f64 / ds.len() as f64)
+    }
+
+    /// Tear down into the owned model (e.g. to save it).
+    pub fn into_model(self) -> SvmModel {
+        self.model
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+    use crate::data::synth::{dataset, SynthSpec};
+    use crate::solver::bsgd;
+
+    fn trained() -> (SvmModel, crate::data::Split) {
+        let split = dataset(&SynthSpec::ijcnn_like(0.01), 2);
+        let cfg = TrainConfig {
+            lambda: 1e-3,
+            gamma: 2.0,
+            budget: 24,
+            mergees: 3,
+            seed: 5,
+            ..TrainConfig::default()
+        };
+        (bsgd::train(&split.train, &cfg).unwrap().model, split)
+    }
+
+    #[test]
+    fn batch_matches_model_decision() {
+        let (model, split) = trained();
+        let reference: Vec<f64> =
+            (0..split.test.len()).map(|i| model.decision(split.test.sample(i).x)).collect();
+        let mut p = Predictor::native(model).unwrap();
+        let served = p.decision_batch(&split.test.x).unwrap();
+        for (a, b) in served.iter().zip(&reference) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn accuracy_matches_model_accuracy() {
+        let (model, split) = trained();
+        let want = model.accuracy(&split.test);
+        let mut p = Predictor::native(model).unwrap();
+        let got = p.accuracy(&split.test).unwrap();
+        assert!((want - got).abs() < 1e-12, "{want} vs {got}");
+    }
+
+    #[test]
+    fn dim_mismatch_is_typed() {
+        let (model, _) = trained();
+        let d = model.svs.dim();
+        let mut p = Predictor::native(model).unwrap();
+        let wrong = DenseMatrix::zeros(3, d + 1);
+        assert_eq!(
+            p.decision_batch(&wrong).unwrap_err(),
+            TrainError::DimMismatch { expected: d, got: d + 1 }
+        );
+        assert!(p.predict1(&vec![0.0; d + 2]).is_err());
+    }
+
+    #[test]
+    fn bad_gamma_rejected_not_panicking() {
+        let (mut model, _) = trained();
+        model.gamma = f64::NAN;
+        match Predictor::native(model) {
+            Err(TrainError::InvalidConfig { field, .. }) => assert_eq!(field, "gamma"),
+            _ => panic!("NaN gamma must be rejected"),
+        }
+    }
+
+    #[test]
+    fn roundtrips_through_model_text() {
+        let (model, split) = trained();
+        let text = model.to_text();
+        let loaded = SvmModel::from_text(&text).unwrap();
+        let mut a = Predictor::native(model).unwrap();
+        let mut b = Predictor::native(loaded).unwrap();
+        let fa = a.decision_batch(&split.test.x).unwrap();
+        let fb = b.decision_batch(&split.test.x).unwrap();
+        for (x, y) in fa.iter().zip(&fb) {
+            assert!((x - y).abs() < 1e-6 * (1.0 + x.abs()));
+        }
+    }
+}

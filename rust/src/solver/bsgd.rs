@@ -13,15 +13,14 @@
 //! (`margin` / `merge` / other), which is exactly the measurement behind
 //! the paper's Figure 1 (fraction of training time spent merging).
 
+use super::session::TrainSession;
 use super::Observer;
-use crate::budget::Budget;
 use crate::config::TrainConfig;
 use crate::data::Dataset;
+use crate::error::TrainError;
 use crate::model::SvmModel;
-use crate::rng::Xoshiro256;
 use crate::runtime::{Backend, NativeBackend};
 use crate::util::timer::TimeBook;
-use std::time::Instant;
 
 /// One point of the evaluation curve.
 #[derive(Clone, Copy, Debug)]
@@ -60,105 +59,22 @@ impl TrainOutput {
 }
 
 /// Train with an explicit backend, optional eval set, and observer.
+///
+/// A thin epoch loop over [`TrainSession`] — the step logic lives
+/// there, and callers needing streaming ingestion, mid-run
+/// checkpointing, or resume use the session directly.
 pub fn train_full(
     ds: &Dataset,
     cfg: &TrainConfig,
     backend: &mut dyn Backend,
     eval: Option<&Dataset>,
     obs: &mut dyn Observer,
-) -> TrainOutput {
-    cfg.validate().expect("invalid TrainConfig");
-    assert!(!ds.is_empty(), "empty training set");
-    // Record the scorer actually in effect, not the requested one: a
-    // backend with a fixed scorer (e.g. the AOT artifact kernel) ignores
-    // the request, and provenance must not claim otherwise.
-    let score_mode = backend.set_merge_score_mode(cfg.merge_score_mode);
-
-    let mut model = SvmModel::new(ds.dim(), cfg.gamma);
-    model.meta = format!(
-        "bsgd maintenance={} B={} seed={} backend={} score={}",
-        cfg.maintenance_kind().describe(),
-        cfg.budget,
-        cfg.seed,
-        backend.name(),
-        score_mode.describe()
-    );
-    let mut budget = Budget::new(cfg.budget, cfg.maintenance_kind());
-    let mut rng = Xoshiro256::new(cfg.seed);
-    let mut order: Vec<usize> = (0..ds.len()).collect();
-    let mut times = TimeBook::new();
-    let mut history = Vec::new();
-    let mut violations = 0u64;
-    let mut t = 0u64;
-    let started = Instant::now();
-
-    for epoch in 0..cfg.epochs {
-        obs.on_epoch(epoch);
-        rng.shuffle(&mut order);
-        for &idx in &order {
-            t += 1;
-            let s = ds.sample(idx);
-            let eta = cfg.eta0 / (cfg.lambda * t as f64);
-
-            // (1) margin of the candidate point — the Θ(B·K) step cost.
-            let t0 = Instant::now();
-            let f = backend.margin1(&model.svs, cfg.gamma, s.x) + model.bias;
-            times.add("margin", t0.elapsed());
-
-            // (2) regularizer shrink — O(1) via the lazy scale.
-            model.svs.scale_all(1.0 - eta * cfg.lambda);
-
-            // (3) margin violation ⇒ new SV.
-            if (s.y as f64) * f < 1.0 {
-                violations += 1;
-                let t1 = Instant::now();
-                model.svs.push(s.x, eta * s.y as f64);
-                if cfg.use_bias {
-                    model.bias += eta * s.y as f64;
-                }
-                times.add("update", t1.elapsed());
-
-                // (4) budget maintenance — the paper's Θ(B·K·G) event.
-                if model.svs.len() > budget.size {
-                    let t2 = Instant::now();
-                    budget.enforce(&mut model.svs, cfg.gamma, backend);
-                    if cfg.prune_eps > 0.0 {
-                        model.svs.prune(cfg.prune_eps);
-                    }
-                    times.add("merge", t2.elapsed());
-                    obs.on_maintenance(budget.events, budget.total_wd, model.svs.len());
-                }
-            }
-            obs.on_step(t, model.svs.len());
-
-            if cfg.eval_every > 0 && t % cfg.eval_every as u64 == 0 {
-                if let Some(ev) = eval {
-                    let acc = evaluate(&model, backend, ev);
-                    history.push(EvalPoint {
-                        step: t,
-                        accuracy: acc,
-                        n_svs: model.svs.len(),
-                        elapsed_s: started.elapsed().as_secs_f64(),
-                    });
-                    obs.on_eval(t, acc);
-                }
-            }
-        }
+) -> Result<TrainOutput, TrainError> {
+    let mut sess = TrainSession::new(cfg.clone(), backend)?;
+    while sess.epochs_done() < cfg.epochs as u64 {
+        sess.run_epoch(ds, eval, obs, 0)?;
     }
-    let train_seconds = started.elapsed().as_secs_f64();
-    model.svs.fold_scale();
-
-    TrainOutput {
-        model,
-        times,
-        train_seconds,
-        steps: t,
-        margin_violations: violations,
-        maintenance_events: budget.events,
-        total_weight_degradation: budget.total_wd,
-        mean_weight_degradation: budget.mean_wd(),
-        history,
-    }
+    Ok(sess.finish())
 }
 
 /// Accuracy of `model` on `ds` using the backend's batched margins.
@@ -179,7 +95,7 @@ pub fn evaluate(model: &SvmModel, backend: &mut dyn Backend, ds: &Dataset) -> f6
 }
 
 /// Convenience: train with the native backend and no observer.
-pub fn train(ds: &Dataset, cfg: &TrainConfig) -> TrainOutput {
+pub fn train(ds: &Dataset, cfg: &TrainConfig) -> Result<TrainOutput, TrainError> {
     let mut backend = NativeBackend::new();
     train_full(ds, cfg, &mut backend, None, &mut super::NoopObserver)
 }
@@ -209,7 +125,7 @@ mod tests {
     #[test]
     fn learns_better_than_chance() {
         let split = tiny_split();
-        let out = train(&split.train, &tiny_cfg(64, 2));
+        let out = train(&split.train, &tiny_cfg(64, 2)).unwrap();
         let acc = out.model.accuracy(&split.test);
         // majority class is ~90%; require beating coin flip at minimum
         // and the run to actually use its budget
@@ -222,7 +138,7 @@ mod tests {
     fn budget_is_never_exceeded() {
         let split = tiny_split();
         for m in [2, 5] {
-            let out = train(&split.train, &tiny_cfg(32, m));
+            let out = train(&split.train, &tiny_cfg(32, m)).unwrap();
             assert!(out.model.svs.len() <= 32, "M={m}: {} SVs", out.model.svs.len());
             assert!(out.maintenance_events > 0, "M={m}: budget never hit?");
         }
@@ -231,13 +147,34 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let split = tiny_split();
-        let a = train(&split.train, &tiny_cfg(32, 3));
-        let b = train(&split.train, &tiny_cfg(32, 3));
+        let a = train(&split.train, &tiny_cfg(32, 3)).unwrap();
+        let b = train(&split.train, &tiny_cfg(32, 3)).unwrap();
         assert_eq!(a.steps, b.steps);
         assert_eq!(a.margin_violations, b.margin_violations);
         assert_eq!(a.model.svs.len(), b.model.svs.len());
         assert!((a.model.bias - b.model.bias).abs() < 1e-15);
         assert_eq!(a.model.svs.points_flat(), b.model.svs.points_flat());
+
+        // A run interrupted mid-epoch (checkpoint → resume in a fresh
+        // session and backend) must be bit-identical to the
+        // uninterrupted ones; tests/session.rs covers this in depth.
+        let mut be = NativeBackend::new();
+        let mut sess = TrainSession::new(tiny_cfg(32, 3), &mut be).unwrap();
+        let done = sess
+            .run_epoch(&split.train, None, &mut crate::solver::NoopObserver, 313)
+            .unwrap();
+        assert!(!done, "interrupt point past the epoch — shrink max_steps");
+        let blob = sess.checkpoint();
+        let mut be2 = NativeBackend::new();
+        let mut resumed = TrainSession::resume(&blob, &mut be2).unwrap();
+        resumed.partial_fit(&split.train).unwrap();
+        let c = resumed.finish();
+        assert_eq!(c.steps, a.steps);
+        assert_eq!(c.margin_violations, a.margin_violations);
+        assert_eq!(c.maintenance_events, a.maintenance_events);
+        assert_eq!(c.model.svs.points_flat(), a.model.svs.points_flat());
+        assert_eq!(c.model.svs.alphas_vec(), a.model.svs.alphas_vec());
+        assert_eq!(c.model.bias.to_bits(), a.model.bias.to_bits());
     }
 
     #[test]
@@ -245,8 +182,8 @@ mod tests {
         // The paper's core accounting: merging M points per event means
         // ~(M-1)x fewer events for the same stream.
         let split = tiny_split();
-        let out2 = train(&split.train, &tiny_cfg(32, 2));
-        let out5 = train(&split.train, &tiny_cfg(32, 5));
+        let out2 = train(&split.train, &tiny_cfg(32, 2)).unwrap();
+        let out5 = train(&split.train, &tiny_cfg(32, 5)).unwrap();
         assert!(
             (out5.maintenance_events as f64) < (out2.maintenance_events as f64) * 0.45,
             "events M=5 {} vs M=2 {}",
@@ -267,7 +204,8 @@ mod tests {
             &mut be,
             Some(&split.test),
             &mut crate::solver::NoopObserver,
-        );
+        )
+        .unwrap();
         assert!(!out.history.is_empty());
         assert!(out.history.iter().all(|p| p.accuracy >= 0.0 && p.accuracy <= 1.0));
         // curve steps strictly increasing
@@ -279,7 +217,7 @@ mod tests {
         let split = tiny_split();
         let mut cfg = tiny_cfg(24, 2);
         cfg.maintenance = Some(MaintenanceKind::Removal);
-        let out = train(&split.train, &cfg);
+        let out = train(&split.train, &cfg).unwrap();
         assert!(out.model.svs.len() <= 24);
         assert!(out.maintenance_events > 0);
     }
@@ -288,7 +226,7 @@ mod tests {
     fn merge_fraction_is_sane() {
         let split = tiny_split();
         // B small enough that maintenance definitely triggers
-        let out = train(&split.train, &tiny_cfg(8, 2));
+        let out = train(&split.train, &tiny_cfg(8, 2)).unwrap();
         let frac = out.merge_fraction();
         assert!((0.0..=1.0).contains(&frac), "merge fraction {frac}");
         assert!(frac > 0.0, "maintenance ran, fraction must be positive");
@@ -298,7 +236,7 @@ mod tests {
     fn unbudgeted_limit_matches_pegasos_contract() {
         // huge budget => no maintenance events
         let split = tiny_split();
-        let out = train(&split.train, &tiny_cfg(100_000, 2));
+        let out = train(&split.train, &tiny_cfg(100_000, 2)).unwrap();
         assert_eq!(out.maintenance_events, 0);
         assert_eq!(out.model.svs.len() as u64, out.margin_violations);
     }

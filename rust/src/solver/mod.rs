@@ -1,5 +1,8 @@
 //! Solvers.
 //!
+//! * [`session`] — the incremental training surface: [`session::TrainSession`]
+//!   (streaming `step`/`partial_fit`, checkpoint/resume) that the batch
+//!   entry points wrap.
 //! * [`bsgd`]    — Budgeted SGD (Pegasos + budget maintenance): the
 //!   algorithm the paper modifies; every experiment runs through it.
 //! * [`pegasos`] — unbudgeted Pegasos SGD (the B → ∞ limit, sanity
@@ -9,8 +12,11 @@
 
 pub mod bsgd;
 pub mod pegasos;
+pub mod session;
 pub mod smo;
 pub mod tune;
+
+pub use session::{Checkpoint, StepOutcome, TrainSession};
 
 /// Progress hooks; implemented by the coordinator for live reporting.
 /// All methods default to no-ops.

@@ -8,6 +8,7 @@ use super::bsgd::{self, TrainOutput};
 use super::Observer;
 use crate::config::TrainConfig;
 use crate::data::Dataset;
+use crate::error::TrainError;
 use crate::runtime::Backend;
 
 /// Train unbudgeted Pegasos: identical SGD dynamics, no maintenance.
@@ -17,18 +18,18 @@ pub fn train_full(
     backend: &mut dyn Backend,
     eval: Option<&Dataset>,
     obs: &mut dyn Observer,
-) -> TrainOutput {
+) -> Result<TrainOutput, TrainError> {
     let mut cfg = cfg.clone();
     // A budget no stream of len*epochs steps can exceed.
     cfg.budget = ds.len() * cfg.epochs.max(1) + 2;
-    let mut out = bsgd::train_full(ds, &cfg, backend, eval, obs);
+    let mut out = bsgd::train_full(ds, &cfg, backend, eval, obs)?;
     out.model.meta = format!("pegasos seed={} backend={}", cfg.seed, backend.name());
     debug_assert_eq!(out.maintenance_events, 0);
-    out
+    Ok(out)
 }
 
 /// Convenience wrapper with the native backend.
-pub fn train(ds: &Dataset, cfg: &TrainConfig) -> TrainOutput {
+pub fn train(ds: &Dataset, cfg: &TrainConfig) -> Result<TrainOutput, TrainError> {
     let mut backend = crate::runtime::NativeBackend::new();
     train_full(ds, cfg, &mut backend, None, &mut super::NoopObserver)
 }
@@ -48,13 +49,13 @@ mod tests {
             seed: 5,
             ..TrainConfig::default()
         };
-        let unb = train(&split.train, &cfg);
+        let unb = train(&split.train, &cfg).unwrap();
         assert_eq!(unb.maintenance_events, 0);
         let acc_unb = unb.model.accuracy(&split.test);
 
         let mut cfg_b = cfg.clone();
         cfg_b.budget = 8; // brutally small budget
-        let bud = bsgd::train(&split.train, &cfg_b);
+        let bud = bsgd::train(&split.train, &cfg_b).unwrap();
         let acc_bud = bud.model.accuracy(&split.test);
         assert!(
             acc_unb >= acc_bud - 0.02,

@@ -1,0 +1,819 @@
+//! Incremental training sessions — the first-class surface behind
+//! [`super::bsgd::train_full`].
+//!
+//! BSGD is an inherently online algorithm: the paper's budget
+//! maintenance fires incrementally, one overflow at a time, and nothing
+//! in the update rule needs the whole dataset up front.  A
+//! [`TrainSession`] owns the complete training state (model, budget
+//! counters, RNG, phase timers, step counter, eval history) and exposes
+//! it one step at a time:
+//!
+//! * [`TrainSession::step`] ingests a single labelled sample — the
+//!   streaming primitive;
+//! * [`TrainSession::partial_fit`] / [`TrainSession::run_epoch`] drive
+//!   one (possibly resumed, possibly step-capped) shuffled pass over a
+//!   dataset;
+//! * [`TrainSession::checkpoint`] serializes *all* state — including
+//!   the RNG stream, the lazy coefficient scale, and the unconsumed
+//!   remainder of the current epoch — so a run interrupted at any step
+//!   and resumed via [`TrainSession::resume`] produces bit-identical
+//!   support vectors, bias, and maintenance statistics to an
+//!   uninterrupted run (`rust/tests/session.rs` enforces this);
+//! * [`TrainSession::finish`] folds the model and returns the familiar
+//!   [`TrainOutput`].
+//!
+//! Construction never panics on user input: invalid configs, malformed
+//! checkpoints, and shape mismatches surface as [`TrainError`].
+//!
+//! ```
+//! use mmbsgd::prelude::*;
+//! use mmbsgd::solver::session::TrainSession;
+//!
+//! let split = mmbsgd::data::synth::dataset(&SynthSpec::ijcnn_like(0.01), 1);
+//! let cfg = TrainConfig { lambda: 1e-3, gamma: 2.0, budget: 32, ..TrainConfig::default() };
+//!
+//! // Stream one epoch, checkpoint mid-run, resume, finish.
+//! let mut backend = NativeBackend::new();
+//! let mut sess = TrainSession::new(cfg, &mut backend).unwrap();
+//! sess.run_epoch(&split.train, None, &mut mmbsgd::solver::NoopObserver, 100).unwrap();
+//! let blob = sess.checkpoint();
+//!
+//! let mut backend2 = NativeBackend::new();
+//! let mut resumed = TrainSession::resume(&blob, &mut backend2).unwrap();
+//! resumed.partial_fit(&split.train).unwrap();
+//! let out = resumed.finish();
+//! assert!(out.steps as usize >= split.train.len());
+//! assert!(out.model.svs.len() <= 32);
+//! ```
+
+use super::bsgd::{evaluate, EvalPoint, TrainOutput};
+use super::{NoopObserver, Observer};
+use crate::budget::{Budget, MaintenanceKind, MergeScoreMode};
+use crate::config::{BackendChoice, TrainConfig};
+use crate::data::{Dataset, Sample};
+use crate::error::TrainError;
+use crate::model::{SvStore, SvmModel};
+use crate::rng::Xoshiro256;
+use crate::runtime::Backend;
+use crate::util::timer::TimeBook;
+use std::fmt::Write as _;
+use std::time::{Duration, Instant};
+
+/// What one [`TrainSession::step`] did.
+#[derive(Clone, Copy, Debug)]
+pub struct StepOutcome {
+    /// Decision value f(x) (bias included) before the update.
+    pub margin: f64,
+    /// y·f(x) < 1 — the sample violated the margin and became an SV.
+    pub violation: bool,
+    /// Budget maintenance ran on this step.
+    pub maintained: bool,
+}
+
+/// Time-bucket names the checkpoint format round-trips (`&'static`
+/// keys force an allowlist; unknown names in a checkpoint are dropped).
+const TIME_BUCKETS: [&str; 3] = ["margin", "update", "merge"];
+
+/// A resumable BSGD training session; see the [module docs](self).
+pub struct TrainSession<'b> {
+    cfg: TrainConfig,
+    backend: &'b mut dyn Backend,
+    model: SvmModel,
+    budget: Budget,
+    rng: Xoshiro256,
+    times: TimeBook,
+    history: Vec<EvalPoint>,
+    violations: u64,
+    t: u64,
+    epochs_done: u64,
+    /// Shuffled sample indices of the in-flight epoch; `pos` marks the
+    /// next one to consume.  Serialized so a mid-epoch checkpoint
+    /// resumes on exactly the same remaining stream.
+    pending: Vec<usize>,
+    pos: usize,
+    /// Accumulated wall-clock over all (possibly interrupted) segments.
+    elapsed_s: f64,
+}
+
+impl<'b> TrainSession<'b> {
+    /// Start a fresh session.  Validates the config (typed errors, no
+    /// panics) and records provenance; the feature dimension binds
+    /// lazily on the first sample.
+    pub fn new(cfg: TrainConfig, backend: &'b mut dyn Backend) -> Result<Self, TrainError> {
+        cfg.validate()?;
+        let score_mode = backend.set_merge_score_mode(cfg.merge_score_mode);
+        let mut model = SvmModel::new(0, cfg.gamma);
+        model.meta = format!(
+            "bsgd maintenance={} B={} seed={} backend={} score={}",
+            cfg.maintenance_kind().describe(),
+            cfg.budget,
+            cfg.seed,
+            backend.name(),
+            score_mode.describe()
+        );
+        let budget = Budget::new(cfg.budget, cfg.maintenance_kind());
+        let rng = Xoshiro256::new(cfg.seed);
+        Ok(Self {
+            cfg,
+            backend,
+            model,
+            budget,
+            rng,
+            times: TimeBook::new(),
+            history: Vec::new(),
+            violations: 0,
+            t: 0,
+            epochs_done: 0,
+            pending: Vec::new(),
+            pos: 0,
+            elapsed_s: 0.0,
+        })
+    }
+
+    /// Rebuild a session from a [`TrainSession::checkpoint`] blob.
+    pub fn resume(text: &str, backend: &'b mut dyn Backend) -> Result<Self, TrainError> {
+        Checkpoint::parse(text)?.into_session(backend)
+    }
+
+    // ------------------------------------------------------- streaming
+
+    /// Ingest one labelled sample: margin, Pegasos shrink, conditional
+    /// SV insertion, budget maintenance.  The feature dimension is
+    /// bound by the first sample; later mismatches are typed errors.
+    pub fn step(&mut self, s: &Sample<'_>) -> Result<StepOutcome, TrainError> {
+        let dim = self.model.svs.dim();
+        if dim != s.x.len() {
+            if dim == 0 && self.model.svs.is_empty() {
+                // capacity is a hint; clamp so an absurd budget cannot
+                // overflow the `cap * dim` reservation
+                let cap = self.cfg.budget.saturating_add(1).min(1 << 16);
+                self.model.svs = SvStore::with_capacity(s.x.len(), cap);
+            } else {
+                return Err(TrainError::DimMismatch { expected: dim, got: s.x.len() });
+            }
+        }
+        self.t += 1;
+        let eta = self.cfg.eta0 / (self.cfg.lambda * self.t as f64);
+
+        // (1) margin of the candidate point — the Θ(B·K) step cost.
+        let t0 = Instant::now();
+        let f = self.backend.margin1(&self.model.svs, self.cfg.gamma, s.x) + self.model.bias;
+        self.times.add("margin", t0.elapsed());
+
+        // (2) regularizer shrink — O(1) via the lazy scale.
+        self.model.svs.scale_all(1.0 - eta * self.cfg.lambda);
+
+        // (3) margin violation ⇒ new SV.
+        let violation = (s.y as f64) * f < 1.0;
+        let mut maintained = false;
+        if violation {
+            self.violations += 1;
+            let t1 = Instant::now();
+            self.model.svs.push(s.x, eta * s.y as f64);
+            if self.cfg.use_bias {
+                self.model.bias += eta * s.y as f64;
+            }
+            self.times.add("update", t1.elapsed());
+
+            // (4) budget maintenance — the paper's Θ(B·K·G) event.
+            if self.model.svs.len() > self.budget.size {
+                let t2 = Instant::now();
+                self.budget.enforce(&mut self.model.svs, self.cfg.gamma, &mut *self.backend);
+                if self.cfg.prune_eps > 0.0 {
+                    self.model.svs.prune(self.cfg.prune_eps);
+                }
+                self.times.add("merge", t2.elapsed());
+                maintained = true;
+            }
+        }
+        Ok(StepOutcome { margin: f, violation, maintained })
+    }
+
+    /// Drive the in-flight epoch over `ds` (starting a fresh shuffled
+    /// pass if none is pending), stopping after at most `max_steps`
+    /// steps (`0` = run to the epoch boundary).  Evaluates on `eval`
+    /// every `cfg.eval_every` steps.  Returns `true` when the epoch
+    /// completed.
+    pub fn run_epoch(
+        &mut self,
+        ds: &Dataset,
+        eval: Option<&Dataset>,
+        obs: &mut dyn Observer,
+        max_steps: u64,
+    ) -> Result<bool, TrainError> {
+        if ds.is_empty() {
+            return Err(TrainError::EmptyDataset);
+        }
+        let started = Instant::now();
+        let res = self.run_epoch_inner(ds, eval, obs, max_steps, started);
+        self.elapsed_s += started.elapsed().as_secs_f64();
+        res
+    }
+
+    fn run_epoch_inner(
+        &mut self,
+        ds: &Dataset,
+        eval: Option<&Dataset>,
+        obs: &mut dyn Observer,
+        max_steps: u64,
+        started: Instant,
+    ) -> Result<bool, TrainError> {
+        if self.pos >= self.pending.len() {
+            obs.on_epoch(self.epochs_done as usize);
+            // Each epoch is a fresh Fisher–Yates shuffle of the identity
+            // permutation.  (The pre-session batch loop shuffled the
+            // previous epoch's order in place, i.e. composed the
+            // permutations; composing would force checkpoints to carry
+            // the full O(n) order to stay bit-identical across resumes.
+            // Multi-epoch streams therefore differ from the pre-PR-2
+            // loop — see EXPERIMENTS.md §Deviations.)
+            self.pending = (0..ds.len()).collect();
+            self.rng.shuffle(&mut self.pending);
+            self.pos = 0;
+        }
+        let mut taken = 0u64;
+        while self.pos < self.pending.len() {
+            if max_steps > 0 && taken >= max_steps {
+                return Ok(false);
+            }
+            let idx = self.pending[self.pos];
+            if idx >= ds.len() {
+                return Err(TrainError::Checkpoint(format!(
+                    "pending sample index {idx} out of range for a dataset of {} rows — \
+                     resumed against a different dataset?",
+                    ds.len()
+                )));
+            }
+            self.pos += 1;
+            let out = self.step(&ds.sample(idx))?;
+            taken += 1;
+            if out.maintained {
+                obs.on_maintenance(self.budget.events, self.budget.total_wd, self.model.svs.len());
+            }
+            obs.on_step(self.t, self.model.svs.len());
+
+            if self.cfg.eval_every > 0 && self.t % self.cfg.eval_every as u64 == 0 {
+                if let Some(ev) = eval {
+                    let acc = evaluate(&self.model, &mut *self.backend, ev);
+                    self.history.push(EvalPoint {
+                        step: self.t,
+                        accuracy: acc,
+                        n_svs: self.model.svs.len(),
+                        elapsed_s: self.elapsed_s + started.elapsed().as_secs_f64(),
+                    });
+                    obs.on_eval(self.t, acc);
+                }
+            }
+        }
+        self.pending.clear();
+        self.pos = 0;
+        self.epochs_done += 1;
+        Ok(true)
+    }
+
+    /// One full shuffled pass over `ds` (scikit-learn-style streaming
+    /// ingestion); completes the in-flight epoch if one is pending.
+    pub fn partial_fit(&mut self, ds: &Dataset) -> Result<(), TrainError> {
+        self.run_epoch(ds, None, &mut NoopObserver, 0).map(|_| ())
+    }
+
+    /// Accuracy of the current model on `ds` through the session's
+    /// backend (batched margins).
+    pub fn evaluate(&mut self, ds: &Dataset) -> f64 {
+        evaluate(&self.model, &mut *self.backend, ds)
+    }
+
+    /// Consume the session into a [`TrainOutput`] (folds the lazy
+    /// coefficient scale).
+    pub fn finish(mut self) -> TrainOutput {
+        self.model.svs.fold_scale();
+        TrainOutput {
+            model: self.model,
+            times: self.times,
+            train_seconds: self.elapsed_s,
+            steps: self.t,
+            margin_violations: self.violations,
+            maintenance_events: self.budget.events,
+            total_weight_degradation: self.budget.total_wd,
+            mean_weight_degradation: self.budget.mean_wd(),
+            history: self.history,
+        }
+    }
+
+    // ------------------------------------------------------- accessors
+
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    pub fn model(&self) -> &SvmModel {
+        &self.model
+    }
+
+    /// Steps taken so far (across all epochs and resumes).
+    pub fn steps(&self) -> u64 {
+        self.t
+    }
+
+    pub fn epochs_done(&self) -> u64 {
+        self.epochs_done
+    }
+
+    pub fn margin_violations(&self) -> u64 {
+        self.violations
+    }
+
+    pub fn maintenance_events(&self) -> u64 {
+        self.budget.events
+    }
+
+    pub fn n_svs(&self) -> usize {
+        self.model.svs.len()
+    }
+
+    pub fn history(&self) -> &[EvalPoint] {
+        &self.history
+    }
+
+    pub fn times(&self) -> &TimeBook {
+        &self.times
+    }
+
+    /// Samples left in the in-flight epoch (0 at an epoch boundary).
+    pub fn remaining_in_epoch(&self) -> usize {
+        self.pending.len() - self.pos
+    }
+
+    // ---------------------------------------------------- persistence
+
+    /// Serialize the complete session state to a self-describing text
+    /// blob.  Everything bit-identity depends on is captured: config,
+    /// RNG state, raw (unfolded) SV coefficients plus the lazy scale,
+    /// budget counters, and the unconsumed remainder of the current
+    /// epoch.  Wall-clock buckets are carried as aggregates.
+    pub fn checkpoint(&self) -> String {
+        let cfg = &self.cfg;
+        let mut out = String::new();
+        let _ = writeln!(out, "mmbsgd-checkpoint v1");
+        let _ = writeln!(out, "lambda {}", cfg.lambda);
+        let _ = writeln!(out, "gamma {}", cfg.gamma);
+        let _ = writeln!(out, "budget {}", cfg.budget);
+        let _ = writeln!(out, "mergees {}", cfg.mergees);
+        let maint = match cfg.maintenance {
+            None => "auto".to_string(),
+            Some(k) => k.describe(),
+        };
+        let _ = writeln!(out, "maintenance {maint}");
+        let _ = writeln!(out, "epochs {}", cfg.epochs);
+        let _ = writeln!(out, "eta0 {}", cfg.eta0);
+        let _ = writeln!(out, "use_bias {}", cfg.use_bias);
+        let _ = writeln!(out, "seed {}", cfg.seed);
+        let _ = writeln!(out, "eval_every {}", cfg.eval_every);
+        let _ = writeln!(out, "backend {}", cfg.backend.describe());
+        let _ = writeln!(out, "merge_score_mode {}", cfg.merge_score_mode.describe());
+        let _ = writeln!(out, "prune_eps {}", cfg.prune_eps);
+        let s = self.rng.state();
+        let _ = writeln!(out, "rng {} {} {} {}", s[0], s[1], s[2], s[3]);
+        let _ = writeln!(out, "step {}", self.t);
+        let _ = writeln!(out, "violations {}", self.violations);
+        let _ = writeln!(out, "epochs_done {}", self.epochs_done);
+        let _ = writeln!(out, "elapsed_s {}", self.elapsed_s);
+        let _ = writeln!(out, "events {}", self.budget.events);
+        let _ = writeln!(out, "total_wd {}", self.budget.total_wd);
+        let _ = writeln!(out, "total_removed {}", self.budget.total_removed);
+        let _ = writeln!(out, "total_merge_ops {}", self.budget.total_merge_ops);
+        let _ = writeln!(out, "bias {}", self.model.bias);
+        let _ = writeln!(out, "scale {}", self.model.svs.scale());
+        let _ = writeln!(out, "meta {}", self.model.meta.replace('\n', " "));
+        let _ = writeln!(out, "dim {}", self.model.svs.dim());
+        let _ = writeln!(out, "nsv {}", self.model.svs.len());
+        for j in 0..self.model.svs.len() {
+            let _ = write!(out, "{}", self.model.svs.raw_alphas()[j]);
+            for &v in self.model.svs.point(j) {
+                let _ = write!(out, " {v}");
+            }
+            out.push('\n');
+        }
+        let rest = &self.pending[self.pos..];
+        let _ = writeln!(out, "pending {}", rest.len());
+        for (i, idx) in rest.iter().enumerate() {
+            let _ = write!(out, "{}{}", if i > 0 { " " } else { "" }, idx);
+        }
+        out.push('\n');
+        let _ = writeln!(out, "history {}", self.history.len());
+        for p in &self.history {
+            let _ = writeln!(out, "{} {} {} {}", p.step, p.accuracy, p.n_svs, p.elapsed_s);
+        }
+        let buckets: Vec<(&'static str, Duration, u64)> = self.times.iter().collect();
+        let _ = writeln!(out, "times {}", buckets.len());
+        for (name, d, n) in buckets {
+            let _ = writeln!(out, "{name} {} {n}", d.as_secs_f64());
+        }
+        let _ = writeln!(out, "end");
+        out
+    }
+}
+
+/// A parsed-but-not-yet-attached checkpoint: inspect the embedded
+/// config (e.g. to build the right backend) before turning it into a
+/// live [`TrainSession`] with [`Checkpoint::into_session`].
+pub struct Checkpoint {
+    cfg: TrainConfig,
+    rng_state: [u64; 4],
+    t: u64,
+    violations: u64,
+    epochs_done: u64,
+    elapsed_s: f64,
+    events: u64,
+    total_wd: f64,
+    total_removed: u64,
+    total_merge_ops: u64,
+    bias: f64,
+    meta: String,
+    dim: usize,
+    scale: f64,
+    points: Vec<f32>,
+    raw_alphas: Vec<f64>,
+    pending: Vec<usize>,
+    history: Vec<EvalPoint>,
+    times: Vec<(&'static str, f64, u64)>,
+}
+
+impl Checkpoint {
+    /// Parse a [`TrainSession::checkpoint`] blob.  Every malformation
+    /// is a typed [`TrainError::Checkpoint`] naming the offending line.
+    pub fn parse(text: &str) -> Result<Self, TrainError> {
+        let mut rd = Reader { lines: text.lines().enumerate() };
+        let magic = rd.line("magic")?;
+        if magic.1.trim() != "mmbsgd-checkpoint v1" {
+            return Err(bad(magic.0, format!("bad magic line {:?}", magic.1)));
+        }
+        let mut cfg = TrainConfig {
+            lambda: rd.kv_parse("lambda")?,
+            gamma: rd.kv_parse("gamma")?,
+            budget: rd.kv_parse("budget")?,
+            mergees: rd.kv_parse("mergees")?,
+            ..TrainConfig::default()
+        };
+        let (ln, maint) = rd.kv("maintenance")?;
+        cfg.maintenance = match maint.as_str() {
+            "auto" => None,
+            other => Some(
+                MaintenanceKind::parse(other)
+                    .ok_or_else(|| bad(ln, format!("bad maintenance {other:?}")))?,
+            ),
+        };
+        cfg.epochs = rd.kv_parse("epochs")?;
+        cfg.eta0 = rd.kv_parse("eta0")?;
+        cfg.use_bias = rd.kv_parse("use_bias")?;
+        cfg.seed = rd.kv_parse("seed")?;
+        cfg.eval_every = rd.kv_parse("eval_every")?;
+        let (ln, be) = rd.kv("backend")?;
+        cfg.backend = BackendChoice::parse(&be)
+            .ok_or_else(|| bad(ln, format!("bad backend {be:?}")))?;
+        let (ln, mode) = rd.kv("merge_score_mode")?;
+        cfg.merge_score_mode = MergeScoreMode::parse(&mode)
+            .ok_or_else(|| bad(ln, format!("bad merge_score_mode {mode:?}")))?;
+        cfg.prune_eps = rd.kv_parse("prune_eps")?;
+        cfg.validate().map_err(|e| TrainError::Checkpoint(format!("embedded config: {e}")))?;
+
+        let (ln, rng_line) = rd.kv("rng")?;
+        let words: Vec<&str> = rng_line.split_ascii_whitespace().collect();
+        if words.len() != 4 {
+            return Err(bad(ln, format!("rng wants 4 words, got {}", words.len())));
+        }
+        let mut rng_state = [0u64; 4];
+        for (slot, w) in rng_state.iter_mut().zip(&words) {
+            *slot = w
+                .parse::<u64>()
+                .map_err(|_| bad(ln, format!("bad rng word {w:?}")))?;
+        }
+
+        let t = rd.kv_parse("step")?;
+        let violations = rd.kv_parse("violations")?;
+        let epochs_done = rd.kv_parse("epochs_done")?;
+        let elapsed_s = rd.kv_parse("elapsed_s")?;
+        let events = rd.kv_parse("events")?;
+        let total_wd = rd.kv_parse("total_wd")?;
+        let total_removed = rd.kv_parse("total_removed")?;
+        let total_merge_ops = rd.kv_parse("total_merge_ops")?;
+        let bias = rd.kv_parse("bias")?;
+        let scale: f64 = rd.kv_parse("scale")?;
+        if !(scale.is_finite() && scale != 0.0) {
+            return Err(TrainError::Checkpoint(format!(
+                "scale must be finite nonzero, got {scale}"
+            )));
+        }
+        let meta = rd.kv("meta")?.1;
+        let dim: usize = rd.kv_parse("dim")?;
+        let nsv: usize = rd.kv_parse("nsv")?;
+
+        // Capacity from the (untrusted) header is a hint only, clamped
+        // so a forged count cannot force a huge up-front allocation;
+        // the per-line reads below bound the real growth.
+        let mut points = Vec::with_capacity(nsv.saturating_mul(dim).min(1 << 22));
+        let mut raw_alphas = Vec::with_capacity(nsv.min(1 << 16));
+        for _ in 0..nsv {
+            let (ln, line) = rd.line("SV block")?;
+            let mut it = line.split_ascii_whitespace();
+            let a = it
+                .next()
+                .ok_or_else(|| bad(ln, "missing alpha".into()))?
+                .parse::<f64>()
+                .map_err(|_| bad(ln, "bad alpha".into()))?;
+            let row: Vec<f32> = it
+                .map(|w| w.parse::<f32>())
+                .collect::<Result<_, _>>()
+                .map_err(|_| bad(ln, "bad SV coordinate".into()))?;
+            if row.len() != dim {
+                return Err(bad(ln, format!("SV has {} features, expected {dim}", row.len())));
+            }
+            raw_alphas.push(a);
+            points.extend_from_slice(&row);
+        }
+
+        let n_pending: usize = rd.kv_parse("pending")?;
+        let (ln, pend_line) = rd.line("pending indices")?;
+        let pending: Vec<usize> = pend_line
+            .split_ascii_whitespace()
+            .map(|w| w.parse::<usize>())
+            .collect::<Result<_, _>>()
+            .map_err(|_| bad(ln, "bad pending index".into()))?;
+        if pending.len() != n_pending {
+            return Err(bad(
+                ln,
+                format!("want {n_pending} pending indices, got {}", pending.len()),
+            ));
+        }
+
+        let n_hist: usize = rd.kv_parse("history")?;
+        let mut history = Vec::with_capacity(n_hist.min(1 << 16));
+        for _ in 0..n_hist {
+            let (ln, line) = rd.line("history point")?;
+            let w: Vec<&str> = line.split_ascii_whitespace().collect();
+            if w.len() != 4 {
+                return Err(bad(ln, format!("history point wants 4 fields, got {}", w.len())));
+            }
+            history.push(EvalPoint {
+                step: w[0].parse().map_err(|_| bad(ln, "bad history step".into()))?,
+                accuracy: w[1].parse().map_err(|_| bad(ln, "bad history accuracy".into()))?,
+                n_svs: w[2].parse().map_err(|_| bad(ln, "bad history n_svs".into()))?,
+                elapsed_s: w[3].parse().map_err(|_| bad(ln, "bad history elapsed".into()))?,
+            });
+        }
+
+        let n_times: usize = rd.kv_parse("times")?;
+        let mut times = Vec::new();
+        for _ in 0..n_times {
+            let (ln, line) = rd.line("time bucket")?;
+            let w: Vec<&str> = line.split_ascii_whitespace().collect();
+            if w.len() != 3 {
+                return Err(bad(ln, format!("time bucket wants 3 fields, got {}", w.len())));
+            }
+            let secs: f64 = w[1].parse().map_err(|_| bad(ln, "bad bucket seconds".into()))?;
+            let count: u64 = w[2].parse().map_err(|_| bad(ln, "bad bucket count".into()))?;
+            if !(secs >= 0.0 && secs.is_finite()) {
+                return Err(bad(ln, format!("bucket seconds must be finite >= 0, got {secs}")));
+            }
+            // map onto the static allowlist; unknown buckets are dropped
+            if let Some(&name) = TIME_BUCKETS.iter().find(|&&n| n == w[0]) {
+                times.push((name, secs, count));
+            }
+        }
+        let (ln, endline) = rd.line("end marker")?;
+        if endline != "end" {
+            return Err(bad(ln, format!("expected end marker, got {endline:?}")));
+        }
+
+        Ok(Self {
+            cfg,
+            rng_state,
+            t,
+            violations,
+            epochs_done,
+            elapsed_s,
+            events,
+            total_wd,
+            total_removed,
+            total_merge_ops,
+            bias,
+            meta,
+            dim,
+            scale,
+            points,
+            raw_alphas,
+            pending,
+            history,
+            times,
+        })
+    }
+
+    /// The training config embedded in the checkpoint (e.g. to build
+    /// the matching backend before [`Checkpoint::into_session`]).
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    /// Mutable access, e.g. to extend `epochs` before resuming.
+    pub fn config_mut(&mut self) -> &mut TrainConfig {
+        &mut self.cfg
+    }
+
+    /// Steps already taken when the checkpoint was written.
+    pub fn step(&self) -> u64 {
+        self.t
+    }
+
+    pub fn epochs_done(&self) -> u64 {
+        self.epochs_done
+    }
+
+    /// Attach the checkpoint to a backend, yielding a live session that
+    /// continues the original run bit-identically.
+    pub fn into_session<'b>(
+        self,
+        backend: &'b mut dyn Backend,
+    ) -> Result<TrainSession<'b>, TrainError> {
+        self.cfg.validate()?;
+        // Provenance (`meta`) already records the original effective
+        // scorer; just put the backend in the configured mode.
+        backend.set_merge_score_mode(self.cfg.merge_score_mode);
+        let mut budget = Budget::new(self.cfg.budget, self.cfg.maintenance_kind());
+        budget.events = self.events;
+        budget.total_wd = self.total_wd;
+        budget.total_removed = self.total_removed;
+        budget.total_merge_ops = self.total_merge_ops;
+        let mut model = SvmModel::new(0, self.cfg.gamma);
+        model.svs = SvStore::from_raw(self.dim, self.points, self.raw_alphas, self.scale);
+        model.bias = self.bias;
+        model.meta = self.meta;
+        let mut times = TimeBook::new();
+        for (name, secs, count) in self.times {
+            times.add_many(name, Duration::from_secs_f64(secs), count);
+        }
+        Ok(TrainSession {
+            cfg: self.cfg,
+            backend,
+            model,
+            budget,
+            rng: Xoshiro256::from_state(self.rng_state),
+            times,
+            history: self.history,
+            violations: self.violations,
+            t: self.t,
+            epochs_done: self.epochs_done,
+            pending: self.pending,
+            pos: 0,
+            elapsed_s: self.elapsed_s,
+        })
+    }
+}
+
+fn bad(line_no: usize, msg: String) -> TrainError {
+    TrainError::Checkpoint(format!("line {}: {msg}", line_no + 1))
+}
+
+/// Line-oriented sequential reader with positioned errors.
+struct Reader<'a> {
+    lines: std::iter::Enumerate<std::str::Lines<'a>>,
+}
+
+impl<'a> Reader<'a> {
+    fn line(&mut self, what: &str) -> Result<(usize, &'a str), TrainError> {
+        self.lines
+            .next()
+            .ok_or_else(|| TrainError::Checkpoint(format!("truncated: missing {what}")))
+    }
+
+    /// Read `key <value>`; returns (line_no, value).
+    fn kv(&mut self, key: &str) -> Result<(usize, String), TrainError> {
+        let (n, line) = self.line(key)?;
+        let (k, v) = line.split_once(' ').unwrap_or((line, ""));
+        if k != key {
+            return Err(bad(n, format!("expected key {key:?}, got {k:?}")));
+        }
+        Ok((n, v.to_string()))
+    }
+
+    fn kv_parse<T: std::str::FromStr>(&mut self, key: &str) -> Result<T, TrainError> {
+        let (n, v) = self.kv(key)?;
+        v.parse::<T>().map_err(|_| bad(n, format!("bad {key} value {v:?}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{dataset, SynthSpec};
+    use crate::runtime::NativeBackend;
+
+    fn tiny_cfg() -> TrainConfig {
+        TrainConfig {
+            lambda: 1e-3,
+            gamma: 2.0,
+            budget: 24,
+            mergees: 3,
+            seed: 9,
+            ..TrainConfig::default()
+        }
+    }
+
+    #[test]
+    fn new_rejects_invalid_config() {
+        let mut be = NativeBackend::new();
+        let mut cfg = tiny_cfg();
+        cfg.budget = 0;
+        match TrainSession::new(cfg, &mut be) {
+            Err(TrainError::InvalidConfig { field, .. }) => assert_eq!(field, "budget"),
+            other => panic!("expected InvalidConfig, got {:?}", other.map(|_| ())),
+        }
+    }
+
+    #[test]
+    fn step_binds_dim_then_rejects_mismatch() {
+        let mut be = NativeBackend::new();
+        let mut sess = TrainSession::new(tiny_cfg(), &mut be).unwrap();
+        let x3 = [0.1f32, 0.2, 0.3];
+        sess.step(&Sample { x: &x3, y: 1.0 }).unwrap();
+        let x2 = [0.1f32, 0.2];
+        assert_eq!(
+            sess.step(&Sample { x: &x2, y: 1.0 }).unwrap_err(),
+            TrainError::DimMismatch { expected: 3, got: 2 }
+        );
+        assert_eq!(sess.steps(), 1);
+    }
+
+    #[test]
+    fn run_epoch_empty_dataset_is_typed() {
+        let mut be = NativeBackend::new();
+        let mut sess = TrainSession::new(tiny_cfg(), &mut be).unwrap();
+        let empty = Dataset::new(crate::data::DenseMatrix::zeros(0, 2), vec![], "e");
+        assert_eq!(
+            sess.run_epoch(&empty, None, &mut NoopObserver, 0).unwrap_err(),
+            TrainError::EmptyDataset
+        );
+    }
+
+    #[test]
+    fn checkpoint_text_roundtrips_through_parse() {
+        let split = dataset(&SynthSpec::ijcnn_like(0.01), 4);
+        let mut be = NativeBackend::new();
+        let mut sess = TrainSession::new(tiny_cfg(), &mut be).unwrap();
+        // stop mid-epoch so pending indices are non-trivial
+        let done = sess.run_epoch(&split.train, None, &mut NoopObserver, 57).unwrap();
+        assert!(!done);
+        let blob = sess.checkpoint();
+        let ck = Checkpoint::parse(&blob).unwrap();
+        assert_eq!(ck.step(), 57);
+        assert_eq!(ck.config().budget, 24);
+        assert_eq!(ck.pending.len(), split.train.len() - 57);
+        // a resumed session re-serializes to the identical blob
+        let mut be2 = NativeBackend::new();
+        let resumed = ck.into_session(&mut be2).unwrap();
+        assert_eq!(resumed.checkpoint(), blob);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(matches!(Checkpoint::parse(""), Err(TrainError::Checkpoint(_))));
+        assert!(matches!(
+            Checkpoint::parse("wrong magic\n"),
+            Err(TrainError::Checkpoint(_))
+        ));
+        // valid prefix, truncated body
+        let mut be = NativeBackend::new();
+        let sess = TrainSession::new(tiny_cfg(), &mut be).unwrap();
+        let blob = sess.checkpoint();
+        let cut = &blob[..blob.len() / 2];
+        assert!(matches!(Checkpoint::parse(cut), Err(TrainError::Checkpoint(_))));
+        // flipped field order
+        let swapped = blob.replacen("lambda", "gamma", 1);
+        assert!(matches!(Checkpoint::parse(&swapped), Err(TrainError::Checkpoint(_))));
+    }
+
+    #[test]
+    fn parse_rejects_invalid_embedded_config() {
+        let mut be = NativeBackend::new();
+        let sess = TrainSession::new(tiny_cfg(), &mut be).unwrap();
+        let blob = sess.checkpoint().replace("budget 24", "budget 1");
+        match Checkpoint::parse(&blob) {
+            Err(TrainError::Checkpoint(msg)) => assert!(msg.contains("budget"), "{msg}"),
+            other => panic!("expected Checkpoint error, got {:?}", other.map(|_| ()).err()),
+        }
+    }
+
+    #[test]
+    fn resume_against_wrong_dataset_is_detected() {
+        let split = dataset(&SynthSpec::ijcnn_like(0.01), 4);
+        let mut be = NativeBackend::new();
+        let mut sess = TrainSession::new(tiny_cfg(), &mut be).unwrap();
+        sess.run_epoch(&split.train, None, &mut NoopObserver, 10).unwrap();
+        let blob = sess.checkpoint();
+        let mut be2 = NativeBackend::new();
+        let mut resumed = TrainSession::resume(&blob, &mut be2).unwrap();
+        // a much smaller dataset invalidates the pending indices
+        let small = split.train.gather(&[0, 1, 2]);
+        let err = resumed.run_epoch(&small, None, &mut NoopObserver, 0).unwrap_err();
+        assert!(matches!(err, TrainError::Checkpoint(_)), "{err}");
+    }
+}

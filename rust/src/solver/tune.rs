@@ -9,6 +9,7 @@
 use super::{bsgd, smo};
 use crate::config::TrainConfig;
 use crate::data::{split, Dataset};
+use crate::error::TrainError;
 
 #[derive(Clone, Debug)]
 pub struct TuneParams {
@@ -45,8 +46,27 @@ pub struct CellResult {
 
 /// Full grid search; returns every cell (sorted best-first) so callers
 /// can inspect the response surface, not just the argmax.
-pub fn grid_search(ds: &Dataset, params: &TuneParams) -> Vec<CellResult> {
-    assert!(params.folds >= 2, "need at least 2 folds");
+pub fn grid_search(ds: &Dataset, params: &TuneParams) -> Result<Vec<CellResult>, TrainError> {
+    if ds.is_empty() {
+        return Err(TrainError::EmptyDataset);
+    }
+    if params.folds < 2 || params.folds > ds.len() {
+        return Err(TrainError::InvalidConfig {
+            field: "folds",
+            message: format!(
+                "need 2..={} folds for {} samples, got {}",
+                ds.len(),
+                ds.len(),
+                params.folds
+            ),
+        });
+    }
+    if params.c_grid.is_empty() || params.gamma_grid.is_empty() {
+        return Err(TrainError::InvalidConfig {
+            field: "grid",
+            message: "c_grid and gamma_grid must be non-empty".into(),
+        });
+    }
     let folds = split::kfold(ds.len(), params.folds, params.seed);
     let mut out = Vec::new();
     for &c in &params.c_grid {
@@ -62,8 +82,9 @@ pub fn grid_search(ds: &Dataset, params: &TuneParams) -> Vec<CellResult> {
                 } else {
                     let mut cfg = params.base.clone();
                     cfg.lambda = TrainConfig::lambda_from_c(c, train.len());
+                    cfg.cost_c = None; // grid C overrides any pending base C
                     cfg.gamma = gamma;
-                    let outp = bsgd::train(&train, &cfg);
+                    let outp = bsgd::train(&train, &cfg)?;
                     outp.model.accuracy(&valid)
                 };
                 acc_sum += acc;
@@ -71,13 +92,13 @@ pub fn grid_search(ds: &Dataset, params: &TuneParams) -> Vec<CellResult> {
             out.push(CellResult { c, gamma, cv_accuracy: acc_sum / folds.len() as f64 });
         }
     }
-    out.sort_by(|a, b| b.cv_accuracy.partial_cmp(&a.cv_accuracy).unwrap());
-    out
+    out.sort_by(|a, b| b.cv_accuracy.total_cmp(&a.cv_accuracy));
+    Ok(out)
 }
 
 /// Convenience: best (C, γ) from the grid.
-pub fn best(ds: &Dataset, params: &TuneParams) -> CellResult {
-    grid_search(ds, params)[0]
+pub fn best(ds: &Dataset, params: &TuneParams) -> Result<CellResult, TrainError> {
+    Ok(grid_search(ds, params)?[0])
 }
 
 #[cfg(test)]
@@ -99,7 +120,7 @@ mod tests {
             seed: 7,
             ..Default::default()
         };
-        let cells = grid_search(&ds, &params);
+        let cells = grid_search(&ds, &params).unwrap();
         assert_eq!(cells.len(), 4);
         assert!(cells.windows(2).all(|w| w[0].cv_accuracy >= w[1].cv_accuracy));
         for cell in &cells {
@@ -118,8 +139,22 @@ mod tests {
             seed: 7,
             ..Default::default()
         };
-        let best = best(&ds, &params);
+        let best = best(&ds, &params).unwrap();
         assert_eq!(best.gamma, 2.0, "picked gamma {}", best.gamma);
+    }
+
+    #[test]
+    fn bad_params_are_typed_errors() {
+        use crate::error::TrainError;
+        let ds = tiny();
+        let mut params = TuneParams { folds: 1, ..Default::default() };
+        match grid_search(&ds, &params) {
+            Err(TrainError::InvalidConfig { field, .. }) => assert_eq!(field, "folds"),
+            other => panic!("expected folds error, got {:?}", other.map(|v| v.len())),
+        }
+        params.folds = 2;
+        params.c_grid.clear();
+        assert!(grid_search(&ds, &params).is_err());
     }
 
     #[test]
@@ -133,7 +168,7 @@ mod tests {
             seed: 5,
             ..Default::default()
         };
-        let cells = grid_search(&ds, &params);
+        let cells = grid_search(&ds, &params).unwrap();
         assert_eq!(cells.len(), 1);
         assert!(cells[0].cv_accuracy > 0.5);
     }

@@ -37,6 +37,13 @@ impl TimeBook {
         *self.counts.entry(name).or_default() += 1;
     }
 
+    /// Merge a pre-aggregated bucket (`n` scopes totalling `d`) —
+    /// checkpoint restore, where per-scope durations no longer exist.
+    pub fn add_many(&mut self, name: &'static str, d: Duration, n: u64) {
+        *self.buckets.entry(name).or_default() += d;
+        *self.counts.entry(name).or_default() += n;
+    }
+
     pub fn get(&self, name: &str) -> Duration {
         self.buckets.get(name).copied().unwrap_or_default()
     }

@@ -32,7 +32,8 @@ fn native_end_to_end_adult_twin() {
     let split = dataset(&SynthSpec::adult_like(0.03), 1);
     let cfg = adult_cfg(split.train.len(), BackendChoice::Native);
     let mut backend = build_backend(cfg.backend).unwrap();
-    let out = bsgd::train_full(&split.train, &cfg, backend.as_mut(), Some(&split.test), &mut NoopObserver);
+    let out = bsgd::train_full(&split.train, &cfg, backend.as_mut(), Some(&split.test), &mut NoopObserver)
+        .unwrap();
     let acc = bsgd::evaluate(&out.model, backend.as_mut(), &split.test);
     // ADULT twin: majority class ~76%; a working model must beat it.
     assert!(acc > 0.78, "accuracy {acc}");
@@ -49,12 +50,12 @@ fn hybrid_end_to_end_matches_native_accuracy() {
     let split = dataset(&SynthSpec::adult_like(0.01), 2);
     let cfg_n = adult_cfg(split.train.len(), BackendChoice::Native);
     let mut be_n = build_backend(cfg_n.backend).unwrap();
-    let out_n = bsgd::train_full(&split.train, &cfg_n, be_n.as_mut(), None, &mut NoopObserver);
+    let out_n = bsgd::train_full(&split.train, &cfg_n, be_n.as_mut(), None, &mut NoopObserver).unwrap();
     let acc_n = bsgd::evaluate(&out_n.model, be_n.as_mut(), &split.test);
 
     let cfg_h = adult_cfg(split.train.len(), BackendChoice::Hybrid);
     let mut be_h = build_backend(cfg_h.backend).unwrap();
-    let out_h = bsgd::train_full(&split.train, &cfg_h, be_h.as_mut(), None, &mut NoopObserver);
+    let out_h = bsgd::train_full(&split.train, &cfg_h, be_h.as_mut(), None, &mut NoopObserver).unwrap();
     let acc_h = bsgd::evaluate(&out_h.model, be_h.as_mut(), &split.test);
 
     // Same stream, same algorithm, different arithmetic precision in the
@@ -84,7 +85,7 @@ fn full_xla_end_to_end_small() {
     cfg.lambda = TrainConfig::lambda_from_c(spec.c, split.train.len());
     cfg.budget = 16;
     let mut backend = build_backend(cfg.backend).unwrap();
-    let out = bsgd::train_full(&split.train, &cfg, backend.as_mut(), None, &mut NoopObserver);
+    let out = bsgd::train_full(&split.train, &cfg, backend.as_mut(), None, &mut NoopObserver).unwrap();
     let acc = bsgd::evaluate(&out.model, backend.as_mut(), &split.test);
     assert!(acc > 0.7, "xla-backend accuracy {acc}");
     assert!(out.model.svs.len() <= 16);

@@ -35,8 +35,8 @@ fn libsvm_roundtrip_preserves_training_behaviour() {
     assert_eq!(reparsed.len(), split_.train.len());
     let spec = SynthSpec::ijcnn_like(0.01);
     let cfg = tiny_cfg(&spec, split_.train.len(), 32, 3);
-    let a = bsgd::train(&split_.train, &cfg);
-    let b = bsgd::train(&reparsed, &cfg);
+    let a = bsgd::train(&split_.train, &cfg).unwrap();
+    let b = bsgd::train(&reparsed, &cfg).unwrap();
     assert_eq!(a.margin_violations, b.margin_violations);
     assert_eq!(a.model.svs.len(), b.model.svs.len());
     std::fs::remove_file(&dir).ok();
@@ -47,7 +47,7 @@ fn model_survives_save_load_with_identical_predictions() {
     let split_ = dataset(&SynthSpec::phishing_like(0.02), 2);
     let spec = SynthSpec::phishing_like(0.02);
     let cfg = tiny_cfg(&spec, split_.train.len(), 48, 4);
-    let out = bsgd::train(&split_.train, &cfg);
+    let out = bsgd::train(&split_.train, &cfg).unwrap();
     let path = std::env::temp_dir().join("mmbsgd_test_model.txt");
     out.model.save(&path).unwrap();
     let loaded = SvmModel::load(&path).unwrap();
@@ -71,7 +71,7 @@ fn theorem1_gradient_error_shrinks_with_budget() {
     let mut wds = Vec::new();
     for budget in [16usize, 64, 160] {
         let cfg = tiny_cfg(&spec, split_.train.len(), budget, 3);
-        let out = bsgd::train(&split_.train, &cfg);
+        let out = bsgd::train(&split_.train, &cfg).unwrap();
         if out.maintenance_events > 0 {
             wds.push(out.mean_weight_degradation);
         }
@@ -95,8 +95,8 @@ fn multimerge_speedup_and_event_reduction() {
     let spec = SynthSpec::ijcnn_like(0.04);
     let cfg2 = tiny_cfg(&spec, split_.train.len(), 20, 2);
     let cfg5 = tiny_cfg(&spec, split_.train.len(), 20, 5);
-    let out2 = bsgd::train(&split_.train, &cfg2);
-    let out5 = bsgd::train(&split_.train, &cfg5);
+    let out2 = bsgd::train(&split_.train, &cfg2).unwrap();
+    let out5 = bsgd::train(&split_.train, &cfg5).unwrap();
     let acc2 = out2.model.accuracy(&split_.test);
     let acc5 = out5.model.accuracy(&split_.test);
     // Ideal reduction is (M-1)x = 4x; the trajectory change (merged SVs
@@ -124,7 +124,7 @@ fn smo_and_bsgd_agree_on_easy_data() {
     assert!(stats.converged);
     let smo_acc = smo_model.accuracy(&split_.test);
     let cfg = tiny_cfg(&spec, split_.train.len(), 64, 3);
-    let out = bsgd::train(&split_.train, &cfg);
+    let out = bsgd::train(&split_.train, &cfg).unwrap();
     let bsgd_acc = out.model.accuracy(&split_.test);
     assert!(smo_acc > 0.9, "smo {smo_acc}");
     assert!(bsgd_acc > smo_acc - 0.1, "bsgd {bsgd_acc} too far below smo {smo_acc}");
@@ -136,7 +136,7 @@ fn pegasos_is_bsgd_upper_envelope() {
     let split_ = dataset(&SynthSpec::adult_like(0.02), 7);
     let spec = SynthSpec::adult_like(0.02);
     let cfg = tiny_cfg(&spec, split_.train.len(), 32, 2);
-    let unb = pegasos::train(&split_.train, &cfg);
+    let unb = pegasos::train(&split_.train, &cfg).unwrap();
     assert_eq!(unb.maintenance_events, 0);
     assert!(unb.model.svs.len() >= 32, "unbudgeted model should exceed the budget");
 }
@@ -155,7 +155,7 @@ fn coordinator_grid_runs_mixed_strategies() {
     .enumerate()
     {
         let mut cfg = tiny_cfg(&spec, 1, 24, 3);
-        cfg.lambda = -spec.c; // C sentinel resolved by the coordinator
+        cfg.cost_c = Some(spec.c); // pending C, resolved by the coordinator
         cfg.maintenance = Some(kind);
         specs.push(RunSpec {
             name: format!("grid{i}"),

@@ -107,8 +107,8 @@ fn lut_and_exact_training_accuracy_within_half_percent() {
         merge_score_mode: mode,
         ..TrainConfig::default()
     };
-    let out_exact = bsgd::train(&split.train, &mk(MergeScoreMode::Exact));
-    let out_lut = bsgd::train(&split.train, &mk(MergeScoreMode::Lut));
+    let out_exact = bsgd::train(&split.train, &mk(MergeScoreMode::Exact)).unwrap();
+    let out_lut = bsgd::train(&split.train, &mk(MergeScoreMode::Lut)).unwrap();
     assert!(out_exact.maintenance_events > 0, "budget never hit — test is vacuous");
     let acc_exact = out_exact.model.accuracy(&split.test);
     let acc_lut = out_lut.model.accuracy(&split.test);

@@ -189,8 +189,8 @@ fn prop_training_is_seed_deterministic_and_budget_safe() {
             seed: rng.next_u64(),
             ..TrainConfig::default()
         };
-        let a = bsgd::train(&split.train, &cfg);
-        let b = bsgd::train(&split.train, &cfg);
+        let a = bsgd::train(&split.train, &cfg).unwrap();
+        let b = bsgd::train(&split.train, &cfg).unwrap();
         assert!(a.model.svs.len() <= cfg.budget);
         assert_eq!(a.margin_violations, b.margin_violations);
         assert_eq!(a.model.svs.points_flat(), b.model.svs.points_flat());
