@@ -34,7 +34,7 @@ pub fn recorded_median(name: &str) -> Option<Duration> {
 /// Write every recorded report (plus caller-computed derived ratios) as
 /// a JSON document — the perf evidence file checked by CI and quoted in
 /// EXPERIMENTS.md §Perf.
-pub fn emit_json(path: &str, derived: &[(&str, f64)]) {
+pub fn emit_json(path: &str, derived: &[(String, f64)]) {
     use mmbsgd::util::json::{obj, to_string, Json};
     let runs: Vec<Json> = RECORDS.with(|r| {
         r.borrow()
@@ -52,7 +52,7 @@ pub fn emit_json(path: &str, derived: &[(&str, f64)]) {
     });
     let derived: Vec<Json> = derived
         .iter()
-        .map(|(k, v)| obj(vec![("name", Json::Str(k.to_string())), ("value", Json::Num(*v))]))
+        .map(|(k, v)| obj(vec![("name", Json::Str(k.clone())), ("value", Json::Num(*v))]))
         .collect();
     let doc = obj(vec![
         ("schema", Json::Str("mmbsgd-bench-v1".into())),

@@ -1,7 +1,9 @@
 //! Hot-path micro benches: the Θ(B·K) margin (norm-cached vs the seed's
-//! difference-form loop), the merge-scoring pass (LUT vs exact golden
-//! section vs XLA artifact), merge executors, and the
-//! maintenance-strategy ablation (merge vs projection crossover).
+//! difference-form loop), the blocked kernel-tile engine (scalar rows
+//! vs tiled vs threaded batch margins, per-candidate vs batch merge
+//! scoring), the merge-scoring pass (LUT vs exact golden section vs XLA
+//! artifact), merge executors, and the maintenance-strategy ablation
+//! (merge vs projection crossover).
 //!
 //! Run: `cargo bench --bench hot_paths [-- <filter>]`
 //!
@@ -18,7 +20,20 @@ use mmbsgd::data::DenseMatrix;
 use mmbsgd::kernel::{sq_dist, EXP_NEG_CUTOFF};
 use mmbsgd::model::SvStore;
 use mmbsgd::rng::Xoshiro256;
-use mmbsgd::runtime::{ArtifactRegistry, Backend, NativeBackend, XlaBackend};
+use mmbsgd::runtime::{margin1_native, ArtifactRegistry, Backend, NativeBackend, XlaBackend};
+
+/// Worker count for the threaded tile-engine cases ("N" in the
+/// 1-vs-N-thread acceptance ratios).  CI runs the bench smoke with
+/// `MMBSGD_BENCH_THREADS=2` to exercise the pool under the workflow.
+/// Clamped to >= 2: the 1-thread case already runs as `tiled-t1`, and
+/// reusing that name would record a duplicate bench and a self-ratio.
+fn bench_threads() -> usize {
+    std::env::var("MMBSGD_BENCH_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4)
+        .max(2)
+}
 
 /// Store with *calibrated* geometry: coordinates scaled so that the
 /// median pairwise γ·d² ≈ 5 — the regime real tuned RBF-SVMs (and our
@@ -66,6 +81,57 @@ fn main() {
             });
             bench(&format!("margin1/seed-loop/B{b}/d{d}"), 200, || {
                 margin1_seed_loop(&svs, gamma, &q)
+            });
+        }
+    }
+
+    if enabled("tiles") {
+        let nt = bench_threads();
+        group("blocked margins (tile engine): scalar rows vs tiled vs threaded");
+        for &(b, d, n) in &[(128usize, 32usize, 64usize), (512, 128, 256), (2048, 128, 256)] {
+            let svs = random_store(b, d, 7);
+            let mut rng = Xoshiro256::new(8);
+            let scale = (5.0 / (0.5 * 2.0 * d as f64)).sqrt();
+            let rows: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..d).map(|_| (scale * rng.next_gaussian()) as f32).collect())
+                .collect();
+            let q = DenseMatrix::from_rows(rows);
+            // the pre-tile path: one scalar margin loop per query row
+            bench(&format!("margins/scalar-rows/B{b}/d{d}/n{n}"), 300, || {
+                (0..q.rows())
+                    .map(|r| margin1_native(&svs, gamma, q.row(r)))
+                    .collect::<Vec<f64>>()
+            });
+            let mut t1 = NativeBackend::new();
+            bench(&format!("margins/tiled-t1/B{b}/d{d}/n{n}"), 300, || {
+                t1.margins(&svs, gamma, &q)
+            });
+            let mut tn = NativeBackend::new();
+            tn.set_threads(nt);
+            bench(&format!("margins/tiled-t{nt}/B{b}/d{d}/n{n}"), 300, || {
+                tn.margins(&svs, gamma, &q)
+            });
+        }
+
+        group("merge_scores_batch: k per-event rescans vs one tiled pass");
+        for &(b, d, k) in &[(128usize, 32usize, 8usize), (512, 128, 8), (2048, 128, 8)] {
+            let svs = random_store(b, d, 9);
+            let cands: Vec<usize> = (0..k).map(|c| c * (b / k)).collect();
+            let mut be = NativeBackend::new();
+            bench(&format!("merge_batch/per-event/B{b}/d{d}/k{k}"), 300, || {
+                cands
+                    .iter()
+                    .map(|&i| be.merge_scores(&svs, gamma, i))
+                    .collect::<Vec<_>>()
+            });
+            let mut b1 = NativeBackend::new();
+            bench(&format!("merge_batch/tiled-t1/B{b}/d{d}/k{k}"), 300, || {
+                b1.merge_scores_batch(&svs, gamma, &cands)
+            });
+            let mut bn = NativeBackend::new();
+            bn.set_threads(nt);
+            bench(&format!("merge_batch/tiled-t{nt}/B{b}/d{d}/k{k}"), 300, || {
+                bn.merge_scores_batch(&svs, gamma, &cands)
             });
         }
     }
@@ -181,17 +247,53 @@ fn main() {
             None
         }
     };
-    let mut derived: Vec<(&str, f64)> = Vec::new();
+    let mut derived: Vec<(String, f64)> = Vec::new();
     if let Some(s) = ratio(
         "merge_scores/native-exact/B512/d128",
         "merge_scores/native-lut/B512/d128",
     ) {
         println!("\nmerge_scores LUT speedup at B=512,d=128: {s:.2}x");
-        derived.push(("speedup/merge_scores_lut_vs_exact/B512/d128", s));
+        derived.push(("speedup/merge_scores_lut_vs_exact/B512/d128".into(), s));
     }
     if let Some(s) = ratio("margin1/seed-loop/B512/d128", "margin1/native/B512/d128") {
         println!("margin1 norm-cache speedup at B=512,d=128: {s:.2}x");
-        derived.push(("speedup/margin1_normcache_vs_seed/B512/d128", s));
+        derived.push(("speedup/margin1_normcache_vs_seed/B512/d128".into(), s));
+    }
+    // Tile-engine acceptance ratios: scalar-vs-tiled and 1-vs-N-thread
+    // for every (B, d, batch) shape that ran (ISSUE 3 gate: >= 3 shapes).
+    let nt = bench_threads();
+    for &(b, d, n) in &[(128usize, 32usize, 64usize), (512, 128, 256), (2048, 128, 256)] {
+        let shape = format!("B{b}/d{d}/n{n}");
+        if let Some(s) = ratio(
+            &format!("margins/scalar-rows/{shape}"),
+            &format!("margins/tiled-t1/{shape}"),
+        ) {
+            println!("margins tiled-vs-scalar speedup at {shape}: {s:.2}x");
+            derived.push((format!("speedup/margins_tiled_vs_scalar/{shape}"), s));
+        }
+        if let Some(s) = ratio(
+            &format!("margins/tiled-t1/{shape}"),
+            &format!("margins/tiled-t{nt}/{shape}"),
+        ) {
+            println!("margins {nt}-thread speedup at {shape}: {s:.2}x");
+            derived.push((format!("speedup/margins_threads{nt}_vs_1/{shape}"), s));
+        }
+    }
+    for &(b, d, k) in &[(128usize, 32usize, 8usize), (512, 128, 8), (2048, 128, 8)] {
+        let shape = format!("B{b}/d{d}/k{k}");
+        if let Some(s) = ratio(
+            &format!("merge_batch/per-event/{shape}"),
+            &format!("merge_batch/tiled-t1/{shape}"),
+        ) {
+            println!("merge_scores_batch amortization at {shape}: {s:.2}x");
+            derived.push((format!("speedup/merge_batch_vs_per_event/{shape}"), s));
+        }
+        if let Some(s) = ratio(
+            &format!("merge_batch/tiled-t1/{shape}"),
+            &format!("merge_batch/tiled-t{nt}/{shape}"),
+        ) {
+            derived.push((format!("speedup/merge_batch_threads{nt}_vs_1/{shape}"), s));
+        }
     }
     emit_json("BENCH_hotpaths.json", &derived);
 

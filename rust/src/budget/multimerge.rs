@@ -3,10 +3,10 @@
 //! One maintenance event (paper sec. 3):
 //!
 //! 1. Fix the first merge candidate: the SV with the smallest |α|.
-//! 2. Score every other SV as a merge partner — one Θ(B·K·G) pass of
-//!    golden-section searches (the classic bottleneck, executed through
-//!    [`Backend::merge_scores`], i.e. the vectorized Pallas kernel on
-//!    the XLA backend).
+//! 2. Score every other SV as a merge partner — one Θ(B·K) pass of the
+//!    configured scorer (LUT or golden section) through
+//!    [`Backend::merge_scores_into`], i.e. the blocked tile engine on
+//!    the native backend.
 //! 3. Keep the best `M−1` partners by pairwise weight degradation — the
 //!    information BSGD throws away; multi-merge re-uses it.
 //! 4. Merge all `M` points into one, either by
@@ -17,11 +17,37 @@
 //!
 //! With `M = 2` and `Cascade` this is *exactly* the original BSGD
 //! merging of Wang et al. — the baseline of every experiment.
+//!
+//! **Steady state allocates nothing**: scoring output, partner order,
+//! the merge-set snapshot, and the merged point all live in reusable
+//! buffers held on the maintainer.
+//!
+//! **Amortized multi-event maintenance.**  When one `maintain` call
+//! must run several events (a budget shrink, a multi-point overflow),
+//! the per-event Θ(B·K) rescans dominate.  The maintainer instead
+//! pre-scores the `k` smallest-|α| candidates in one tiled
+//! [`Backend::merge_scores_batch`] pass and *remaps* a cached row at
+//! each event: pair scores depend only on the two SVs' (point, α),
+//! which merging never touches for survivors, so a cached lane is
+//! bit-identical to a fresh rescan — surviving lanes are relabelled
+//! through the swap-remove permutation, lanes of merged-away SVs drop
+//! out, and the one freshly merged point per event gets a single
+//! O(K) [`Backend::merge_score_pair`] patch.  If the running stream
+//! ever picks a candidate outside the prefetched set, the event simply
+//! falls back to a fresh scoring pass — the result is identical either
+//! way (`cached_multi_event_maintain_matches_fresh_rescan` pins it).
 
 use super::golden::{self, GS_ITERS};
 use super::{MaintStats, Maintainer};
 use crate::model::SvStore;
-use crate::runtime::{exact_multi_wd, Backend};
+use crate::runtime::{exact_multi_wd, Backend, MergeScores};
+
+/// Cap on candidates pre-scored per `maintain` call: bounds cache
+/// memory at `32 × B` lanes while covering any realistic shrink burst.
+const MAX_PREFETCH: usize = 32;
+
+/// Sentinel id for SVs created after the prefetch pass (no cached row).
+const FRESH_ID: usize = usize::MAX;
 
 /// How the selected M points are folded into one.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -38,30 +64,59 @@ pub struct MultiMerge {
     pub exec: MergeExec,
     /// Reusable partner-index scratch (no allocation per event).
     order: Vec<usize>,
+    /// Reusable per-event scoring output.
+    scores: MergeScores,
+    /// Flat merge-set snapshot (≤ M rows × dim) for the exact-WD audit.
+    pts: Vec<f32>,
+    alpha_buf: Vec<f64>,
+    /// Reusable merged-point buffer.
+    z: Vec<f32>,
+    /// Slot → prefetch-id map while a batch cache is live.
+    ids: Vec<usize>,
+    /// Cached scoring rows by prefetch id (consumed once per event).
+    cache: Vec<Option<MergeScores>>,
 }
 
 impl MultiMerge {
     pub fn new(m: usize, exec: MergeExec) -> Self {
         assert!((2..=16).contains(&m), "mergees M must be in 2..=16, got {m}");
-        Self { m, exec, order: Vec::new() }
+        Self {
+            m,
+            exec,
+            order: Vec::new(),
+            scores: MergeScores::default(),
+            pts: Vec::new(),
+            alpha_buf: Vec::new(),
+            z: Vec::new(),
+            ids: Vec::new(),
+            cache: Vec::new(),
+        }
     }
 
-    /// Select the best `take` partner indices by ascending pairwise wd.
-    /// Returns them *in increasing-wd order* (the cascade merges cheapest
-    /// first, per the paper's footnote 1).
-    fn select_partners(&mut self, wd: &[f64], take: usize) -> Vec<usize> {
-        self.order.clear();
-        self.order.extend((0..wd.len()).filter(|&j| wd[j].is_finite()));
-        let take = take.min(self.order.len());
-        // Partial selection then sort of the head: O(B + take log take).
-        if take < self.order.len() {
-            self.order
-                .select_nth_unstable_by(take, |&a, &b| wd[a].total_cmp(&wd[b]));
-        }
-        self.order.truncate(take);
-        self.order.sort_by(|&a, &b| wd[a].total_cmp(&wd[b]));
-        self.order.clone()
+    /// Select the best `take` partner indices by ascending pairwise wd,
+    /// returned *in increasing-wd order* (the cascade merges cheapest
+    /// first, per the paper's footnote 1) as a view into the
+    /// maintainer's scratch — no per-event allocation.
+    pub fn select_partners(&mut self, wd: &[f64], take: usize) -> &[usize] {
+        let n = select_partners_into(&mut self.order, wd, take);
+        &self.order[..n]
     }
+}
+
+/// [`MultiMerge::select_partners`] on an explicit buffer; returns the
+/// selected count (the head of `order`).  `select_nth_unstable_by`
+/// partitions the `take` smallest to the head, then only that head is
+/// (stably) ordered: O(B + take log take).
+fn select_partners_into(order: &mut Vec<usize>, wd: &[f64], take: usize) -> usize {
+    order.clear();
+    order.extend((0..wd.len()).filter(|&j| wd[j].is_finite()));
+    let take = take.min(order.len());
+    if take > 0 && take < order.len() {
+        order.select_nth_unstable_by(take, |&a, &b| wd[a].total_cmp(&wd[b]));
+    }
+    order.truncate(take);
+    order.sort_by(|&a, &b| wd[a].total_cmp(&wd[b]));
+    take
 }
 
 impl Maintainer for MultiMerge {
@@ -73,86 +128,175 @@ impl Maintainer for MultiMerge {
         backend: &mut dyn Backend,
     ) -> MaintStats {
         let mut stats = MaintStats::default();
+        let m = self.m;
+        let dim = svs.dim();
+
+        // Amortized prefetch: only when this call must run > 1 event
+        // (one event reduces the store by at most M−1).
+        self.cache.clear();
+        self.ids.clear();
+        let overflow = svs.len().saturating_sub(budget);
+        let prefetched = svs.len() >= 2 && overflow > m - 1;
+        if prefetched {
+            let k = ((overflow + m - 2) / (m - 1)).min(MAX_PREFETCH).min(svs.len());
+            self.order.clear();
+            self.order.extend(0..svs.len());
+            let raw = svs.raw_alphas(); // uniform scale: argmin-safe
+            if k < self.order.len() {
+                self.order
+                    .select_nth_unstable_by(k - 1, |&a, &b| raw[a].abs().total_cmp(&raw[b].abs()));
+            }
+            self.order.truncate(k);
+            let batch = backend.merge_scores_batch(svs, gamma, &self.order);
+            self.cache.resize_with(svs.len(), || None);
+            for (&c, row) in self.order.iter().zip(batch) {
+                self.cache[c] = Some(row);
+            }
+            self.ids.extend(0..svs.len());
+        }
+        let b0 = self.cache.len();
+
         while svs.len() > budget && svs.len() >= 2 {
             // (1) first candidate: smallest |α|.
             let i = svs.min_abs_alpha().expect("nonempty");
-            // (2) the Θ(B·K·G) scoring pass.
-            let scores = backend.merge_scores(svs, gamma, i);
-            // (3) best M−1 partners.
-            let partners = self.select_partners(&scores.wd, self.m - 1);
-            if partners.is_empty() {
+
+            // (2) the Θ(B·K) scoring pass — or its cached stand-in.
+            let cached_row = if prefetched && self.ids[i] < b0 {
+                self.cache[self.ids[i]].take()
+            } else {
+                None
+            };
+            match cached_row {
+                Some(row) => {
+                    self.scores.reset(svs.len());
+                    for j in 0..svs.len() {
+                        if j == i {
+                            continue; // self lane keeps wd = +inf
+                        }
+                        let idj = self.ids[j];
+                        if idj < b0 {
+                            self.scores.wd[j] = row.wd[idj];
+                            self.scores.h[j] = row.h[idj];
+                            self.scores.a_z[j] = row.a_z[idj];
+                            self.scores.d2[j] = row.d2[idj];
+                        } else {
+                            // merged point born after the prefetch pass
+                            let p = backend.merge_score_pair(svs, gamma, i, j);
+                            self.scores.wd[j] = p.wd;
+                            self.scores.h[j] = p.h;
+                            self.scores.a_z[j] = p.a_z;
+                            self.scores.d2[j] = p.d2;
+                        }
+                    }
+                }
+                None => backend.merge_scores_into(svs, gamma, i, &mut self.scores),
+            }
+
+            // (3) best M−1 partners (into the scratch order buffer).
+            let n_sel = select_partners_into(&mut self.order, &self.scores.wd, m - 1);
+            if n_sel == 0 {
                 // Degenerate: nothing mergeable — fall back to removal.
                 let a = svs.alpha(i);
                 stats.weight_degradation += a * a;
                 svs.swap_remove(i);
+                if prefetched {
+                    self.ids.swap_remove(i);
+                }
                 stats.removed += 1;
                 continue;
             }
+            let mut partners_buf = [0usize; 16];
+            partners_buf[..n_sel].copy_from_slice(&self.order[..n_sel]);
+            let partners = &partners_buf[..n_sel];
 
-            // Snapshot the merge set for the exact-WD audit.
-            let merge_points: Vec<(Vec<f32>, f64)> = std::iter::once(i)
-                .chain(partners.iter().copied())
-                .map(|j| (svs.point(j).to_vec(), svs.alpha(j)))
-                .collect();
+            // Snapshot the merge set for the exact-WD audit (flat
+            // reusable buffers — the old per-event Vec-of-Vecs clone is
+            // gone).
+            self.pts.clear();
+            self.alpha_buf.clear();
+            for &j in std::iter::once(&i).chain(partners) {
+                self.pts.extend_from_slice(svs.point(j));
+                self.alpha_buf.push(svs.alpha(j));
+            }
+            let n_pts = self.alpha_buf.len();
 
-            // (4) execute the merge.
-            let (z, a_z) = match self.exec {
+            // (4) execute the merge into the reusable z buffer.
+            self.z.clear();
+            let a_z = match self.exec {
                 MergeExec::Cascade => {
                     // First binary merge reuses the scored (h, a_z) for
                     // (i, partners[0]) — no extra golden section.
                     let j0 = partners[0];
-                    let h = scores.h[j0];
-                    let mut z: Vec<f32> = svs
-                        .point(i)
-                        .iter()
-                        .zip(svs.point(j0))
-                        .map(|(&xi, &xj)| (h * xi as f64 + (1.0 - h) * xj as f64) as f32)
-                        .collect();
-                    let mut a_z = scores.a_z[j0];
+                    let h = self.scores.h[j0];
+                    self.z.extend(
+                        svs.point(i)
+                            .iter()
+                            .zip(svs.point(j0))
+                            .map(|(&xi, &xj)| (h * xi as f64 + (1.0 - h) * xj as f64) as f32),
+                    );
+                    let mut a_z = self.scores.a_z[j0];
                     stats.merge_ops += 1;
                     for &jk in &partners[1..] {
-                        let (z2, a2, _wd) = golden::merge_pair(
-                            &z,
-                            a_z,
-                            svs.point(jk),
-                            svs.alpha(jk),
-                            gamma,
-                            GS_ITERS,
-                        );
-                        z = z2;
-                        a_z = a2;
+                        // golden::merge_pair, unrolled to update z in
+                        // place (same math, no allocation).
+                        let d2 = crate::kernel::sq_dist(&self.z, svs.point(jk));
+                        let pm =
+                            golden::merge_pair_params(a_z, svs.alpha(jk), gamma * d2, GS_ITERS);
+                        for (zt, &xt) in self.z.iter_mut().zip(svs.point(jk)) {
+                            *zt = (pm.h * *zt as f64 + (1.0 - pm.h) * xt as f64) as f32;
+                        }
+                        a_z = pm.a_z;
                         stats.merge_ops += 1;
                     }
-                    (z, a_z)
+                    a_z
                 }
                 MergeExec::GradientDescent => {
-                    let pts: Vec<(&[f32], f64)> = merge_points
-                        .iter()
-                        .map(|(x, a)| (x.as_slice(), *a))
-                        .collect();
-                    let (z, a_z, _wd) = backend.merge_gd(&pts, gamma);
+                    let mut view: [(&[f32], f64); 16] = [(&[][..], 0.0); 16];
+                    for (t, slot) in view[..n_pts].iter_mut().enumerate() {
+                        *slot = (&self.pts[t * dim..(t + 1) * dim], self.alpha_buf[t]);
+                    }
+                    let (z, a_z, _wd) = backend.merge_gd(&view[..n_pts], gamma);
+                    self.z.extend_from_slice(&z);
                     stats.merge_ops += 1;
-                    (z, a_z)
+                    a_z
                 }
             };
 
             // Exact degradation of the whole event (cascade returns only
             // per-step estimates; the audit value is what Theorem 1 sees).
-            let pts: Vec<(&[f32], f64)> =
-                merge_points.iter().map(|(x, a)| (x.as_slice(), *a)).collect();
-            stats.weight_degradation += exact_multi_wd(&pts, &z, a_z, gamma).max(0.0);
+            {
+                let mut view: [(&[f32], f64); 16] = [(&[][..], 0.0); 16];
+                for (t, slot) in view[..n_pts].iter_mut().enumerate() {
+                    *slot = (&self.pts[t * dim..(t + 1) * dim], self.alpha_buf[t]);
+                }
+                stats.weight_degradation +=
+                    exact_multi_wd(&view[..n_pts], &self.z, a_z, gamma).max(0.0);
+            }
 
             // Remove merged SVs (descending index keeps indices valid
             // under swap_remove), then insert the merged point.
-            let mut to_remove: Vec<usize> =
-                std::iter::once(i).chain(partners.iter().copied()).collect();
+            let mut to_remove = [0usize; 16];
+            to_remove[0] = i;
+            to_remove[1..=n_sel].copy_from_slice(partners);
+            let to_remove = &mut to_remove[..n_sel + 1];
             to_remove.sort_unstable_by(|a, b| b.cmp(a));
-            for j in to_remove {
+            for &j in to_remove.iter() {
                 svs.swap_remove(j);
+                if prefetched {
+                    self.ids.swap_remove(j);
+                }
             }
-            svs.push(&z, a_z);
-            stats.removed += merge_points.len() - 1;
+            svs.push(&self.z, a_z);
+            if prefetched {
+                self.ids.push(FRESH_ID);
+            }
+            stats.removed += n_pts - 1;
         }
+
+        // Cached rows are only valid within this call: the solver
+        // rescales every α between maintenance events.
+        self.cache.clear();
+        self.ids.clear();
         stats
     }
 
@@ -291,5 +435,128 @@ mod tests {
         let j = merged[0];
         assert!((svs.point(j)[0] - z_want[0]).abs() < 1e-6);
         assert!((svs.alpha(j) - a_want).abs() < 1e-9);
+    }
+
+    /// Reference multi-event maintain: the pre-amortization algorithm —
+    /// a fresh `merge_scores` pass per event, no caching.  The cached
+    /// path must reproduce it bit-for-bit.
+    fn maintain_fresh_rescan(
+        m: usize,
+        svs: &mut SvStore,
+        gamma: f64,
+        budget: usize,
+        be: &mut NativeBackend,
+    ) -> MaintStats {
+        let mut stats = MaintStats::default();
+        while svs.len() > budget && svs.len() >= 2 {
+            let i = svs.min_abs_alpha().unwrap();
+            let scores = be.merge_scores(svs, gamma, i);
+            let mut order = Vec::new();
+            let n_sel = select_partners_into(&mut order, &scores.wd, m - 1);
+            if n_sel == 0 {
+                let a = svs.alpha(i);
+                stats.weight_degradation += a * a;
+                svs.swap_remove(i);
+                stats.removed += 1;
+                continue;
+            }
+            let partners = &order[..n_sel];
+            let merge_points: Vec<(Vec<f32>, f64)> = std::iter::once(i)
+                .chain(partners.iter().copied())
+                .map(|j| (svs.point(j).to_vec(), svs.alpha(j)))
+                .collect();
+            let j0 = partners[0];
+            let h = scores.h[j0];
+            let mut z: Vec<f32> = svs
+                .point(i)
+                .iter()
+                .zip(svs.point(j0))
+                .map(|(&xi, &xj)| (h * xi as f64 + (1.0 - h) * xj as f64) as f32)
+                .collect();
+            let mut a_z = scores.a_z[j0];
+            stats.merge_ops += 1;
+            for &jk in &partners[1..] {
+                let (z2, a2, _) =
+                    golden::merge_pair(&z, a_z, svs.point(jk), svs.alpha(jk), gamma, GS_ITERS);
+                z = z2;
+                a_z = a2;
+                stats.merge_ops += 1;
+            }
+            let pts: Vec<(&[f32], f64)> =
+                merge_points.iter().map(|(x, a)| (x.as_slice(), *a)).collect();
+            stats.weight_degradation += exact_multi_wd(&pts, &z, a_z, gamma).max(0.0);
+            let mut to_remove: Vec<usize> =
+                std::iter::once(i).chain(partners.iter().copied()).collect();
+            to_remove.sort_unstable_by(|a, b| b.cmp(a));
+            for j in to_remove {
+                svs.swap_remove(j);
+            }
+            svs.push(&z, a_z);
+            stats.removed += merge_points.len() - 1;
+        }
+        stats
+    }
+
+    #[test]
+    fn cached_multi_event_maintain_matches_fresh_rescan() {
+        // A deep budget shrink forces many consecutive events, so the
+        // amortized path exercises prefetch, lane remapping through the
+        // swap-remove permutation, merged-point patching, AND the
+        // fresh-scoring fallback.  Final store and stats must be
+        // bit-identical to the per-event rescan reference.
+        let mut rng = crate::rng::Xoshiro256::new(77);
+        for (m, budget) in [(2usize, 20usize), (3, 9), (5, 6)] {
+            let mut base = SvStore::new(3);
+            for _ in 0..40 {
+                let x: Vec<f32> =
+                    (0..3).map(|_| rng.next_gaussian() as f32 * 0.6).collect();
+                let mut a = 0.05 + rng.next_f64();
+                if rng.next_f64() < 0.4 {
+                    a = -a;
+                }
+                base.push(&x, a);
+            }
+            for mode_exact in [false, true] {
+                let mk = || {
+                    if mode_exact {
+                        NativeBackend::exact()
+                    } else {
+                        NativeBackend::new()
+                    }
+                };
+                let mut a_svs = base.clone();
+                let mut b_svs = base.clone();
+                let s_a = MultiMerge::new(m, MergeExec::Cascade)
+                    .maintain(&mut a_svs, 0.9, budget, &mut mk());
+                let s_b = maintain_fresh_rescan(m, &mut b_svs, 0.9, budget, &mut mk());
+                assert_eq!(a_svs.len(), b_svs.len(), "M={m} B={budget}");
+                assert_eq!(a_svs.points_flat(), b_svs.points_flat(), "M={m} B={budget}");
+                assert_eq!(a_svs.alphas_vec(), b_svs.alphas_vec(), "M={m} B={budget}");
+                assert_eq!(s_a.removed, s_b.removed);
+                assert_eq!(s_a.merge_ops, s_b.merge_ops);
+                assert_eq!(
+                    s_a.weight_degradation.to_bits(),
+                    s_b.weight_degradation.to_bits(),
+                    "M={m} B={budget} exact={mode_exact}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn maintainer_reuse_across_calls_is_clean() {
+        // The same maintainer instance drives many events across many
+        // calls (that is how the solver uses it); cached state must not
+        // leak between calls.
+        let mut mm = MultiMerge::new(3, MergeExec::Cascade);
+        let mut be = NativeBackend::new();
+        let mut svs = clustered_store(30);
+        mm.maintain(&mut svs, 1.0, 8, &mut be); // deep shrink: cache used
+        assert!(svs.len() <= 8);
+        let n = svs.len();
+        svs.push(&[1.0, 1.0], 0.01);
+        let stats = mm.maintain(&mut svs, 1.0, n, &mut be); // single event
+        assert!(svs.len() <= n);
+        assert!(stats.removed >= 1);
     }
 }

@@ -79,6 +79,14 @@ pub struct TrainConfig {
     pub merge_score_mode: MergeScoreMode,
     /// Drop SVs with |α| below this after maintenance (0 = off).
     pub prune_eps: f64,
+    /// Worker threads for the tiled batch paths (batched margins,
+    /// batch merge scoring).  Results are bit-identical for every
+    /// value — the pool shards work with a fixed partition — so this
+    /// is purely a wall-clock knob (TOML `threads`, CLI `--threads`).
+    /// Deliberately NOT serialized into checkpoints: it is an
+    /// execution detail of the machine, not training state, and a run
+    /// resumed with a different thread count stays bit-identical.
+    pub threads: usize,
     /// Pending cost parameter C (paper Table 2 convention λ = 1/(n·C)),
     /// set by the TOML `c = ...` key or experiment specs.  Explicitly
     /// represented — no sentinel encoding in `lambda` — so a config
@@ -105,6 +113,7 @@ impl Default for TrainConfig {
             backend: BackendChoice::Native,
             merge_score_mode: MergeScoreMode::Lut,
             prune_eps: 0.0,
+            threads: 1,
             cost_c: None,
         }
     }
@@ -151,6 +160,9 @@ impl TrainConfig {
         }
         if !(self.prune_eps >= 0.0 && self.prune_eps.is_finite()) {
             return bad("prune_eps", format!("must be >= 0, got {}", self.prune_eps));
+        }
+        if self.threads == 0 {
+            return bad("threads", "must be >= 1".into());
         }
         Ok(())
     }
@@ -203,6 +215,7 @@ impl TrainConfig {
                         .with_context(|| format!("bad merge_score_mode {s:?}"))?;
                 }
                 "prune_eps" => self.prune_eps = val.as_f64().context("prune_eps")?,
+                "threads" => self.threads = val.as_f64().context("threads")? as usize,
                 other => bail!("unknown [train] key {other:?}"),
             }
         }
@@ -252,6 +265,7 @@ mod tests {
             (Box::new(|c| c.epochs = 0), "epochs"),
             (Box::new(|c| c.eta0 = 0.0), "eta0"),
             (Box::new(|c| c.prune_eps = -1.0), "prune_eps"),
+            (Box::new(|c| c.threads = 0), "threads"),
         ];
         for (mutate, want_field) in cases {
             let mut cfg = TrainConfig::default();
@@ -288,7 +302,7 @@ mod tests {
         let doc = TomlDoc::parse(
             "[train]\nlambda = 0.5\ngamma = 2.0\nbudget = 128\nmergees = 4\n\
              maintenance = \"mergegd:4\"\nbackend = \"hybrid\"\nuse_bias = false\n\
-             merge_score_mode = \"exact\"\n",
+             merge_score_mode = \"exact\"\nthreads = 4\n",
         )
         .unwrap();
         let mut cfg = TrainConfig::default();
@@ -298,6 +312,7 @@ mod tests {
         assert_eq!(cfg.maintenance, Some(MaintenanceKind::MergeGd { m: 4 }));
         assert_eq!(cfg.backend, BackendChoice::Hybrid);
         assert_eq!(cfg.merge_score_mode, MergeScoreMode::Exact);
+        assert_eq!(cfg.threads, 4);
         assert!(!cfg.use_bias);
     }
 

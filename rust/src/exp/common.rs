@@ -58,6 +58,10 @@ pub fn reference_sv_count(spec: &SynthSpec, _scale: f64, seed: u64) -> Result<(u
     let sub = crate::data::split::stratified_subsample(&split.train, cap, seed ^ 0xABCD);
     let params = SmoParams { c: spec.c, gamma: spec.gamma, ..Default::default() };
     let (model, stats) = smo::train(&sub, &params);
+    // Batched through the blocked kernel-tile engine
+    // (`SvmModel::accuracy` → `runtime::tile::margins`), not a
+    // per-query margin loop — reference evaluation on the full test
+    // split is itself a hot path at experiment scale.
     let acc = model.accuracy(&split.test);
     let frac = stats.n_sv as f64 / sub.len() as f64;
     let est = (frac * split.train.len() as f64).round() as usize;

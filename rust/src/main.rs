@@ -136,9 +136,25 @@ fn train_config(args: &Args, split: &Split) -> Result<TrainConfig> {
         cfg.merge_score_mode = MergeScoreMode::parse(m)
             .with_context(|| format!("bad --merge-score-mode {m:?} (exact|lut)"))?;
     }
+    cfg.threads = args.get_parse("threads", cfg.threads)?;
     cfg.resolve_c(split.train.len());
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// Report the worker-thread count actually in effect (the perf report
+/// attribution line) and warn when the request oversubscribes the
+/// machine — results are bit-identical either way, but wall-clock
+/// numbers taken that way are not comparable.
+fn report_threads(requested: usize, effective: usize) {
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("[perf ] effective threads: {effective} (requested {requested}, available {avail})");
+    if requested > avail {
+        eprintln!(
+            "[warn ] --threads {requested} exceeds available parallelism ({avail}); \
+             workers will timeshare cores and wall-clock numbers are not attributable"
+        );
+    }
 }
 
 /// Drive a session over its remaining epochs, writing checkpoints to
@@ -181,7 +197,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         // allow extending the run: `--epochs` on resume overrides
         let epochs = args.get_parse("epochs", ck.config().epochs)?;
         ck.config_mut().epochs = epochs;
+        // threads are an execution detail, not checkpointed state —
+        // resumed results are bit-identical for any worker count
+        let threads = args.get_parse("threads", ck.config().threads)?;
+        ck.config_mut().threads = threads;
         backend = build_backend(ck.config().backend)?;
+        report_threads(threads, backend.set_threads(threads));
         println!(
             "[resume] {rp}: step {} | epoch {}/{} | B={} M={} maint={}",
             ck.step(),
@@ -209,6 +230,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             cfg.backend,
         );
         backend = build_backend(cfg.backend)?;
+        report_threads(cfg.threads, backend.set_threads(cfg.threads));
         TrainSession::new(cfg, backend.as_mut())?
     };
     let out = run_session(sess, &split, args)?;
@@ -236,19 +258,26 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 /// Build the serving handle: saved model + the requested backend
-/// (`--backend`, default native).
-fn load_predictor(args: &Args) -> Result<Predictor> {
+/// (`--backend`, default native), with `--threads` applied.  Returns
+/// (predictor, requested threads, effective threads); `evaluate`
+/// reports them, `predict` stays silent (its stdout is the
+/// prediction stream).
+fn load_predictor(args: &Args) -> Result<(Predictor, usize, usize)> {
     let model_path = args.get("model").context("--model required")?;
     let model = SvmModel::load(Path::new(model_path))?;
     let choice = match args.get("backend") {
         Some(b) => BackendChoice::parse(b).with_context(|| format!("bad --backend {b:?}"))?,
         None => BackendChoice::Native,
     };
-    Ok(Predictor::new(model, build_backend(choice)?)?)
+    let mut served = Predictor::new(model, build_backend(choice)?)?;
+    let requested: usize = args.get_parse("threads", 1)?;
+    let effective = served.set_threads(requested);
+    Ok((served, requested, effective))
 }
 
 fn cmd_evaluate(args: &Args) -> Result<()> {
-    let mut served = load_predictor(args)?;
+    let (mut served, requested, effective) = load_predictor(args)?;
+    report_threads(requested, effective);
     let split = load_split(args)?;
     let acc = served.accuracy(&split.test)?;
     println!(
@@ -263,7 +292,7 @@ fn cmd_evaluate(args: &Args) -> Result<()> {
 
 fn cmd_predict(args: &Args) -> Result<()> {
     let input = args.get("input").context("--input required")?;
-    let mut served = load_predictor(args)?;
+    let (mut served, _requested, _effective) = load_predictor(args)?;
     let ds = libsvm::load(Path::new(input), Some(served.dim()))?;
     // one batched margins call — the serving hot path — not n single-row scans
     let decisions = served.decision_batch(&ds.x)?;
@@ -370,7 +399,7 @@ COMMANDS
   train        --dataset <synth-name|libsvm-path> [--scale F] [--budget N]
                [--mergees M] [--maintenance removal|projection|merge[:M]|mergegd[:M]]
                [--backend native|xla|hybrid] [--merge-score-mode lut|exact]
-               [--c F | --lambda F] [--gamma F]
+               [--c F | --lambda F] [--gamma F] [--threads N]
                [--epochs N] [--seed N] [--eval-every N] [--config file.toml]
                [--save model.txt] [--test libsvm-path] [--quiet]
                [--checkpoint ckpt.txt] [--checkpoint-every STEPS]
@@ -381,7 +410,8 @@ COMMANDS
                the checkpoint (same --dataset flags required; --epochs
                may be raised to extend the run).
   evaluate     --model model.txt --dataset <...> [--scale F] [--backend B]
-  predict      --model model.txt --input data.libsvm [--backend B]
+               [--threads N]
+  predict      --model model.txt --input data.libsvm [--backend B] [--threads N]
   experiment   --id table1|table2|fig1|fig2|fig3|fig4|fig5|ablation|all
                [--scale F] [--threads N] [--out-dir DIR] [--backend B] [--seed N]
   tune         --dataset <...> [--c-grid 1,4,16] [--gamma-grid 0.1,1,10]

@@ -4,7 +4,7 @@
 mod store;
 pub use store::SvStore;
 
-use crate::data::Dataset;
+use crate::data::{Dataset, DenseMatrix};
 use crate::kernel::{sq_dist_cached, Gaussian, EXP_NEG_CUTOFF};
 use anyhow::{bail, Context, Result};
 use std::fmt::Write as _;
@@ -46,16 +46,30 @@ impl SvmModel {
         }
     }
 
-    /// Accuracy over a dataset.
+    /// Decision values for a batch of query rows through the blocked
+    /// kernel-tile engine (single worker, local scratch) — bit-identical
+    /// to calling [`SvmModel::decision`] per row, without re-streaming
+    /// the SV store once per query.  Backend-holding callers
+    /// ([`crate::serve::Predictor`], `bsgd::evaluate`) should prefer
+    /// `Backend::margins`, which adds thread sharding on top.
+    pub fn decision_batch(&self, queries: &DenseMatrix) -> Vec<f64> {
+        let mut out = crate::runtime::tile::margins(&self.svs, self.gamma, queries);
+        for f in &mut out {
+            *f += self.bias;
+        }
+        out
+    }
+
+    /// Accuracy over a dataset (batched through the tile engine).
     pub fn accuracy(&self, ds: &Dataset) -> f64 {
         if ds.is_empty() {
             return 0.0;
         }
-        let correct = (0..ds.len())
-            .filter(|&i| {
-                let s = ds.sample(i);
-                self.predict(s.x) == s.y
-            })
+        let decisions = self.decision_batch(&ds.x);
+        let correct = decisions
+            .iter()
+            .zip(&ds.y)
+            .filter(|(&f, &y)| (if f >= 0.0 { 1.0 } else { -1.0 }) == y)
             .count();
         correct as f64 / ds.len() as f64
     }
@@ -85,12 +99,12 @@ impl SvmModel {
         s
     }
 
-    /// Primal objective `λ/2 ||w||² + 1/n Σ hinge` on a dataset.
+    /// Primal objective `λ/2 ||w||² + 1/n Σ hinge` on a dataset
+    /// (hinge terms batched through the tile engine).
     pub fn primal_objective(&self, ds: &Dataset, lambda: f64) -> f64 {
         let mut loss = 0.0;
-        for i in 0..ds.len() {
-            let s = ds.sample(i);
-            loss += (1.0 - (s.y as f64) * self.decision(s.x)).max(0.0);
+        for (f, &y) in self.decision_batch(&ds.x).into_iter().zip(&ds.y) {
+            loss += (1.0 - (y as f64) * f).max(0.0);
         }
         lambda / 2.0 * self.weight_norm2() + loss / ds.len().max(1) as f64
     }

@@ -21,7 +21,7 @@
 //! native for everything per-event.  `XlaBackend` remains available as
 //! a full-XLA backend (`--backend xla`) to exercise every artifact.
 
-use super::{Backend, MergeScores, NativeBackend, XlaBackend};
+use super::{Backend, MergeScores, NativeBackend, ScoredPair, XlaBackend};
 use crate::budget::lut::MergeScoreMode;
 use crate::data::DenseMatrix;
 use crate::model::SvStore;
@@ -67,6 +67,12 @@ impl Backend for HybridBackend {
         self.native.set_merge_score_mode(mode)
     }
 
+    fn set_threads(&mut self, threads: usize) -> usize {
+        // The worker pool shards the native tile engine; the artifact
+        // path runs PJRT's own parallelism and ignores the knob.
+        self.native.set_threads(threads)
+    }
+
     fn margins(&mut self, svs: &SvStore, gamma: f64, queries: &DenseMatrix) -> Vec<f64> {
         // Batched: the artifact's blocked matmul wins; tiny batches and
         // out-of-lattice budgets fall back to native.
@@ -86,6 +92,23 @@ impl Backend for HybridBackend {
 
     fn merge_scores(&mut self, svs: &SvStore, gamma: f64, i: usize) -> MergeScores {
         self.native.merge_scores(svs, gamma, i)
+    }
+
+    fn merge_scores_into(&mut self, svs: &SvStore, gamma: f64, i: usize, out: &mut MergeScores) {
+        self.native.merge_scores_into(svs, gamma, i, out)
+    }
+
+    fn merge_scores_batch(
+        &mut self,
+        svs: &SvStore,
+        gamma: f64,
+        cands: &[usize],
+    ) -> Vec<MergeScores> {
+        self.native.merge_scores_batch(svs, gamma, cands)
+    }
+
+    fn merge_score_pair(&mut self, svs: &SvStore, gamma: f64, i: usize, j: usize) -> ScoredPair {
+        self.native.merge_score_pair(svs, gamma, i, j)
     }
 
     fn merge_gd(&mut self, points: &[(&[f32], f64)], gamma: f64) -> (Vec<f32>, f64, f64) {

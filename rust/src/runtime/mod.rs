@@ -21,6 +21,8 @@
 mod artifacts;
 mod hybrid;
 mod native;
+pub mod pool;
+pub mod tile;
 #[cfg(feature = "xla")]
 mod xla_backend;
 #[cfg(not(feature = "xla"))]
@@ -29,6 +31,8 @@ mod xla_stub;
 pub use artifacts::{ArtifactInfo, ArtifactRegistry};
 pub use hybrid::HybridBackend;
 pub use native::{margin1_native, NativeBackend};
+pub use pool::WorkerPool;
+pub use tile::TileScratch;
 #[cfg(feature = "xla")]
 pub use xla_backend::XlaBackend;
 #[cfg(not(feature = "xla"))]
@@ -51,6 +55,33 @@ pub struct MergeScores {
     pub d2: Vec<f64>,
 }
 
+impl MergeScores {
+    /// Reset to `b` default lanes (`wd = +inf`, rest `0`) without
+    /// releasing capacity — the maintenance loop reuses one buffer per
+    /// event, so steady-state scoring allocates nothing.
+    pub fn reset(&mut self, b: usize) {
+        self.wd.clear();
+        self.wd.resize(b, f64::INFINITY);
+        self.h.clear();
+        self.h.resize(b, 0.0);
+        self.a_z.clear();
+        self.a_z.resize(b, 0.0);
+        self.d2.clear();
+        self.d2.resize(b, 0.0);
+    }
+}
+
+/// One (candidate, lane) merge score — the unit `MultiMerge` uses to
+/// patch a cached scoring row when a freshly merged SV appears between
+/// consecutive maintenance events.
+#[derive(Clone, Copy, Debug)]
+pub struct ScoredPair {
+    pub wd: f64,
+    pub h: f64,
+    pub a_z: f64,
+    pub d2: f64,
+}
+
 /// Numeric services used by solvers and budget maintenance.
 ///
 /// Deliberately NOT `Send`: the PJRT client handle is thread-local, so
@@ -69,6 +100,16 @@ pub trait Backend {
         MergeScoreMode::Exact
     }
 
+    /// Worker threads for the tiled batch paths (margins, batch merge
+    /// scoring).  Returns the count actually in effect — backends with
+    /// no pool (the AOT artifacts run their own parallelism) ignore the
+    /// request, and callers must report the returned value, not the
+    /// requested one.  Results are bit-identical for every thread count
+    /// (see [`pool`]).
+    fn set_threads(&mut self, _threads: usize) -> usize {
+        1
+    }
+
     /// Decision values (no bias) for a batch of query rows.
     fn margins(&mut self, svs: &SvStore, gamma: f64, queries: &DenseMatrix) -> Vec<f64>;
 
@@ -78,6 +119,41 @@ pub trait Backend {
     /// Score merging SV `i` against every other SV in the store.
     /// Lane `i` itself gets `wd = +inf`.
     fn merge_scores(&mut self, svs: &SvStore, gamma: f64, i: usize) -> MergeScores;
+
+    /// [`Backend::merge_scores`] into a caller-owned buffer, so a
+    /// maintainer holding one scratch [`MergeScores`] runs its
+    /// steady-state event loop allocation-free.
+    fn merge_scores_into(&mut self, svs: &SvStore, gamma: f64, i: usize, out: &mut MergeScores) {
+        *out = self.merge_scores(svs, gamma, i);
+    }
+
+    /// Score several merge candidates against the whole store in one
+    /// pass (the tile engine streams each SV tile across all candidates
+    /// while it is cache-hot).  Row `c` must equal
+    /// `merge_scores(svs, gamma, cands[c])` exactly — `MultiMerge`
+    /// substitutes cached rows for per-event rescans and the training
+    /// stream must not notice.
+    fn merge_scores_batch(
+        &mut self,
+        svs: &SvStore,
+        gamma: f64,
+        cands: &[usize],
+    ) -> Vec<MergeScores> {
+        cands.iter().map(|&i| self.merge_scores(svs, gamma, i)).collect()
+    }
+
+    /// Score one (candidate `i`, partner `j`) pair with this backend's
+    /// scorer — the patch primitive for cached scoring rows.  Must
+    /// agree with lane `j` of [`Backend::merge_scores`] *exactly*
+    /// (`MultiMerge` splices the result into a cached row that stands
+    /// in for a fresh rescan), so the default extracts the lane from a
+    /// full scoring pass — correct for every backend by construction.
+    /// Backends with a per-pair fast path override it (native: one
+    /// norm-cached distance + one LUT/golden solve, O(K)).
+    fn merge_score_pair(&mut self, svs: &SvStore, gamma: f64, i: usize, j: usize) -> ScoredPair {
+        let row = self.merge_scores(svs, gamma, i);
+        ScoredPair { wd: row.wd[j], h: row.h[j], a_z: row.a_z[j], d2: row.d2[j] }
+    }
 
     /// MM-GD (paper Alg. 2): merge `points` (with coefficients) into a
     /// single (z, a_z); returns the exact weight degradation as third.

@@ -4,18 +4,24 @@
 //! constants, same MM-GD iteration scheme) so the two backends are
 //! numerically interchangeable in `exact` scoring mode.  In the default
 //! `lut` mode the merge scorer consults the precomputed golden-section
-//! table ([`MergeLut`]) instead of iterating — Θ(B·K + B) instead of
-//! Θ(B·K·G) per scoring pass.
+//! table ([`crate::budget::MergeLut`]) instead of iterating —
+//! Θ(B·K + B) instead of Θ(B·K·G) per scoring pass.
 //!
 //! All distance computations go through the store's norm cache:
 //! `d² = ‖x‖² + ‖q‖² − 2⟨x,q⟩` with the query norm hoisted out of the
 //! B-loop, so the inner loop is a pure dot product that LLVM
-//! autovectorizes into one FMA chain (EXPERIMENTS.md §Perf).  The hot
-//! loop performs no allocation after warm-up.
+//! autovectorizes into one FMA chain (EXPERIMENTS.md §Perf).  The
+//! batch paths (margins, merge scoring) run through the cache-blocked
+//! [`tile`] engine with backend-owned scratch — no allocation after
+//! warm-up — and shard across a deterministic [`WorkerPool`]; the
+//! per-step [`margin1_native`] loop stays scalar (a single query has no
+//! blocking to exploit, and threading a Θ(B·K) scan would cost more in
+//! spawn latency than it saves).
 
-use super::{Backend, MergeScores};
-use crate::budget::golden::{self, GS_ITERS};
-use crate::budget::lut::{MergeLut, MergeScoreMode};
+use super::pool::WorkerPool;
+use super::tile::{self, TileScratch};
+use super::{Backend, MergeScores, ScoredPair};
+use crate::budget::lut::MergeScoreMode;
 use crate::data::DenseMatrix;
 use crate::kernel::{sq_dist_cached, sq_norm, Gaussian, Kernel, EXP_NEG_CUTOFF};
 use crate::model::SvStore;
@@ -25,13 +31,18 @@ use crate::model::SvStore;
 pub const GD_ITERS: usize = 50;
 pub const GD_LR: f64 = 0.5;
 
-/// Pure-rust backend.
+/// Pure-rust backend.  All batch paths (margins, merge scoring) run
+/// through the blocked [`tile`] engine with scratch owned here, sharded
+/// across a deterministic [`WorkerPool`] (1 worker unless
+/// [`Backend::set_threads`] raises it).
 pub struct NativeBackend {
     mode: MergeScoreMode,
+    pool: WorkerPool,
+    scratch: TileScratch,
 }
 
 impl NativeBackend {
-    /// Deployment default: LUT-accelerated merge scoring.
+    /// Deployment default: LUT-accelerated merge scoring, single worker.
     pub fn new() -> Self {
         Self::with_mode(MergeScoreMode::Lut)
     }
@@ -43,11 +54,16 @@ impl NativeBackend {
     }
 
     pub fn with_mode(mode: MergeScoreMode) -> Self {
-        Self { mode }
+        Self { mode, pool: WorkerPool::single(), scratch: TileScratch::new() }
     }
 
     pub fn mode(&self) -> MergeScoreMode {
         self.mode
+    }
+
+    /// Worker threads currently sharding the batch paths.
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
     }
 }
 
@@ -67,10 +83,15 @@ impl Backend for NativeBackend {
         mode
     }
 
+    fn set_threads(&mut self, threads: usize) -> usize {
+        self.pool = WorkerPool::new(threads);
+        self.pool.threads()
+    }
+
     fn margins(&mut self, svs: &SvStore, gamma: f64, queries: &DenseMatrix) -> Vec<f64> {
-        (0..queries.rows())
-            .map(|r| margin1_native(svs, gamma, queries.row(r)))
-            .collect()
+        let mut out = vec![0.0; queries.rows()];
+        tile::margins_into(svs, gamma, queries, &mut self.scratch, &self.pool, &mut out);
+        out
     }
 
     #[inline]
@@ -79,36 +100,27 @@ impl Backend for NativeBackend {
     }
 
     fn merge_scores(&mut self, svs: &SvStore, gamma: f64, i: usize) -> MergeScores {
-        let b = svs.len();
-        let x_i = svs.point(i);
-        let a_i = svs.alpha(i);
-        let n_i = svs.norm2(i); // query norm hoisted out of the B-loop
-        let mut out = MergeScores {
-            wd: vec![f64::INFINITY; b],
-            h: vec![0.0; b],
-            a_z: vec![0.0; b],
-            d2: vec![0.0; b],
-        };
-        let lut = match self.mode {
-            MergeScoreMode::Lut => Some(MergeLut::global()),
-            MergeScoreMode::Exact => None,
-        };
-        for j in 0..b {
-            if j == i {
-                continue;
-            }
-            let d2 = sq_dist_cached(x_i, n_i, svs.point(j), svs.norm2(j));
-            let a_j = svs.alpha(j);
-            let pm = match lut {
-                Some(lut) => lut.merge_pair_params(a_i, a_j, gamma * d2),
-                None => golden::merge_pair_params(a_i, a_j, gamma * d2, GS_ITERS),
-            };
-            out.wd[j] = pm.wd;
-            out.h[j] = pm.h;
-            out.a_z[j] = pm.a_z;
-            out.d2[j] = d2;
-        }
+        let mut out = MergeScores::default();
+        self.merge_scores_into(svs, gamma, i, &mut out);
         out
+    }
+
+    fn merge_scores_into(&mut self, svs: &SvStore, gamma: f64, i: usize, out: &mut MergeScores) {
+        tile::merge_scores_into(svs, gamma, i, self.mode, &self.pool, out);
+    }
+
+    fn merge_scores_batch(
+        &mut self,
+        svs: &SvStore,
+        gamma: f64,
+        cands: &[usize],
+    ) -> Vec<MergeScores> {
+        tile::merge_scores_batch(svs, gamma, cands, self.mode, &self.pool)
+    }
+
+    fn merge_score_pair(&mut self, svs: &SvStore, gamma: f64, i: usize, j: usize) -> ScoredPair {
+        let (pm, d2) = tile::score_pair(svs, gamma, self.mode, i, j);
+        ScoredPair { wd: pm.wd, h: pm.h, a_z: pm.a_z, d2 }
     }
 
     fn merge_gd(&mut self, points: &[(&[f32], f64)], gamma: f64) -> (Vec<f32>, f64, f64) {
@@ -221,6 +233,7 @@ pub fn merge_gd_native(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::budget::golden::{self, GS_ITERS};
 
     fn store(points: &[(&[f32], f64)], dim: usize) -> SvStore {
         let mut s = SvStore::new(dim);

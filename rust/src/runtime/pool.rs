@@ -1,0 +1,201 @@
+//! Deterministic scoped worker pool for the tiled batch hot paths.
+//!
+//! Design constraints (EXPERIMENTS.md §Perf):
+//!
+//! * **No new dependencies.**  Workers are `std::thread::scope` threads
+//!   spawned per call; for the batch shapes the tile engine handles
+//!   (hundreds of queries × hundreds of SVs) the ~10 µs spawn cost is
+//!   noise next to the sharded compute, and scoped threads let jobs
+//!   borrow the store and output buffers directly — no channels, no
+//!   `Arc`, no shared mutable state.
+//! * **Bit-determinism for every thread count.**  Work is split by
+//!   [`partition`] into contiguous chunks whose boundaries depend only
+//!   on `(len, threads, min_chunk)` — never on timing — and every
+//!   output element is written by exactly one worker using the same
+//!   sequential accumulation order the single-threaded path uses.
+//!   Reductions are therefore fixed-order by construction: results are
+//!   bit-identical for `threads = 1, 2, 4, ...` (enforced by
+//!   `rust/tests/tile_engine.rs`).
+//!
+//! The pool is deliberately dumb: no work stealing (it would make the
+//! chunk→worker mapping timing-dependent — harmless for disjoint
+//! writes, but a persistent-pool future could cache per-worker scratch,
+//! and fixed chunks keep that deterministic too).
+
+use std::ops::Range;
+
+/// A fixed-width scoped worker pool; see the [module docs](self).
+#[derive(Clone, Debug)]
+pub struct WorkerPool {
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// A pool of `threads` workers (0 is clamped to 1).  `threads = 1`
+    /// never spawns: all work runs inline on the caller's thread.
+    pub fn new(threads: usize) -> Self {
+        Self { threads: threads.max(1) }
+    }
+
+    /// The single-threaded (inline) pool.
+    pub fn single() -> Self {
+        Self::new(1)
+    }
+
+    /// Worker count in effect.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run one closure call per job, each on its own scoped worker
+    /// (inline when the pool is single-threaded or there is at most one
+    /// job).  Jobs own their output slices, so workers never share
+    /// mutable state; job construction order is the deterministic
+    /// chunk order of [`partition`].
+    pub fn run_jobs<J, F>(&self, jobs: Vec<J>, f: F)
+    where
+        J: Send,
+        F: Fn(J) + Sync,
+    {
+        if self.threads == 1 || jobs.len() <= 1 {
+            for job in jobs {
+                f(job);
+            }
+            return;
+        }
+        let f = &f;
+        std::thread::scope(|s| {
+            for job in jobs {
+                s.spawn(move || f(job));
+            }
+        });
+    }
+
+    /// Shard `data` into at most `threads` contiguous chunks of at
+    /// least `min_chunk` items and run `f(start_index, chunk)` on each.
+    /// The partition depends only on `(data.len(), threads, min_chunk)`,
+    /// so the element→worker mapping is identical on every run.
+    pub fn run_chunks<T, F>(&self, data: &mut [T], min_chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        if data.is_empty() {
+            return;
+        }
+        let ranges = partition(data.len(), self.threads, min_chunk);
+        if ranges.len() <= 1 {
+            f(0, data);
+            return;
+        }
+        let mut jobs = Vec::with_capacity(ranges.len());
+        let mut rest = data;
+        for r in ranges {
+            let (head, tail) = rest.split_at_mut(r.end - r.start);
+            jobs.push((r.start, head));
+            rest = tail;
+        }
+        self.run_jobs(jobs, |(start, chunk)| f(start, chunk));
+    }
+}
+
+impl Default for WorkerPool {
+    fn default() -> Self {
+        Self::single()
+    }
+}
+
+/// Split `0..n` into at most `max_parts` contiguous ranges of at least
+/// `min_chunk` items (the last may be shorter only because `n` ran
+/// out).  Earlier ranges take the remainder, so sizes differ by at most
+/// one item.  Pure function of its arguments — the determinism anchor
+/// of the whole pool.
+pub fn partition(n: usize, max_parts: usize, min_chunk: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let min_chunk = min_chunk.max(1);
+    let parts = max_parts.max(1).min((n + min_chunk - 1) / min_chunk);
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_exactly_once() {
+        let cases = [
+            (0usize, 4usize, 8usize),
+            (1, 4, 8),
+            (7, 3, 1),
+            (100, 7, 1),
+            (513, 4, 32),
+            (64, 64, 32),
+        ];
+        for (n, parts, min_chunk) in cases {
+            let ranges = partition(n, parts, min_chunk);
+            let mut next = 0;
+            for r in &ranges {
+                assert_eq!(r.start, next, "gap/overlap in {ranges:?}");
+                assert!(r.end > r.start, "empty range in {ranges:?}");
+                next = r.end;
+            }
+            assert_eq!(next, n, "partition of {n} into {ranges:?} incomplete");
+            assert!(ranges.len() <= parts.max(1));
+        }
+    }
+
+    #[test]
+    fn partition_respects_min_chunk() {
+        let ranges = partition(100, 16, 32);
+        // 100 items / 32-minimum => at most 3 chunks
+        assert!(ranges.len() <= 3, "{ranges:?}");
+        assert!(ranges.iter().all(|r| r.end - r.start >= 32), "{ranges:?}");
+    }
+
+    #[test]
+    fn partition_is_deterministic() {
+        assert_eq!(partition(513, 4, 32), partition(513, 4, 32));
+    }
+
+    #[test]
+    fn run_chunks_writes_every_slot_once() {
+        for threads in [1usize, 2, 4, 7] {
+            let pool = WorkerPool::new(threads);
+            let mut out = vec![0u32; 257];
+            pool.run_chunks(&mut out, 8, |start, chunk| {
+                for (k, v) in chunk.iter_mut().enumerate() {
+                    *v += (start + k) as u32 + 1;
+                }
+            });
+            for (k, &v) in out.iter().enumerate() {
+                assert_eq!(v, k as u32 + 1, "slot {k} written {v} times/wrong");
+            }
+        }
+    }
+
+    #[test]
+    fn run_jobs_inline_when_single() {
+        // threads = 1 must not spawn: a !Send-unfriendly sequential
+        // side effect (order-sensitive accumulation) stays in order.
+        let pool = WorkerPool::single();
+        let order = std::sync::Mutex::new(Vec::new());
+        pool.run_jobs(vec![1, 2, 3], |j| order.lock().unwrap().push(j));
+        assert_eq!(*order.lock().unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn zero_threads_clamps_to_one() {
+        assert_eq!(WorkerPool::new(0).threads(), 1);
+    }
+}

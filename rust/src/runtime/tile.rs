@@ -1,0 +1,492 @@
+//! Cache-blocked kernel-tile engine — the batch mirror of
+//! [`super::margin1_native`], and the scoring core behind
+//! `Backend::{merge_scores, merge_scores_batch}`.
+//!
+//! The batch hot paths (evaluation margins, serving, merge-partner
+//! scoring) all reduce to the same primitive: a queries × SVs Gaussian
+//! kernel block over the flat [`SvStore`] storage.  This module
+//! computes that block in L1-sized tiles:
+//!
+//! * **SV tiles** of [`sv_tile_len`] rows (sized so one tile of point
+//!   data fits the L1 budget) stream in ascending-index order; a tile
+//!   is re-used across a whole block of [`TILE_Q`] queries before the
+//!   next tile is touched, so SV data crosses the cache hierarchy once
+//!   per query *block* instead of once per query.
+//! * **Norm-cached distances**: `d² = ‖x‖² + ‖q‖² − 2⟨x,q⟩` with the
+//!   SV norms read from the store cache and the query norms hoisted
+//!   once per block — the inner loop is the same pure-dot-product FMA
+//!   chain as the scalar path (`kernel::sq_dist_cached`).
+//! * **Fused γd² cutoff, per pair and per tile**: each pair keeps the
+//!   scalar path's exact far-pair `exp` skip, and a whole (query, tile)
+//!   pair is skipped up front when the norm bound
+//!   `d ≥ |‖q‖ − ‖x_j‖|` proves every lane is past the cutoff.  The
+//!   tile test is conservative by `FAR_TILE_SLACK`, so it only skips
+//!   terms the scalar path would have skipped too — blocked results
+//!   stay **bit-identical** to [`super::margin1_native`].
+//! * **No per-call allocation**: scratch ([`TileScratch`]) is owned by
+//!   the backend; per-block state lives in fixed stack arrays.
+//!
+//! **Determinism.**  Each query's accumulator consumes SV terms in
+//! ascending `j` exactly like the scalar loop, and the worker pool
+//! shards whole query rows (or score lanes) with a fixed partition, so
+//! results are bit-identical for every thread count
+//! (`rust/tests/tile_engine.rs` pins both properties).
+
+use super::pool::{partition, WorkerPool};
+use super::MergeScores;
+use crate::budget::golden::{self, PairMerge, GS_ITERS};
+use crate::budget::lut::{MergeLut, MergeScoreMode};
+use crate::data::DenseMatrix;
+use crate::kernel::{sq_dist_cached, sq_norm, EXP_NEG_CUTOFF};
+use crate::model::SvStore;
+
+/// Queries per row block.  32 query rows of accumulator + norm state
+/// live in stack arrays; at d = 128 a block of query data is 16 KB —
+/// it shares L1 with one SV tile.
+pub const TILE_Q: usize = 32;
+
+/// Cache budget for one SV tile of point data (half a typical 64 KB
+/// L1d — the other half belongs to the query block streaming over it).
+const TILE_BYTES: usize = 32 * 1024;
+
+/// Safety slack on the per-tile far-skip: the tile bound must beat the
+/// cutoff by 0.1% before a tile is skipped.  The norm bound
+/// `d² ≥ (‖q‖ − ‖x‖)²` holds exactly in real arithmetic but the
+/// f32-lane dot products carry ~1e-7 relative error, so a pair whose
+/// *computed* γd² lands epsilon-under the cutoff (and which the scalar
+/// path would therefore include) must never be tile-skipped; 1e-3
+/// slack dwarfs the achievable rounding gap.
+const FAR_TILE_SLACK: f64 = 1.001;
+
+/// Minimum score lanes per worker job (below this, sharding overhead
+/// beats the win).
+const MIN_LANES: usize = 128;
+
+/// SVs per tile for feature dimension `dim`: as many rows as fit the
+/// `TILE_BYTES` L1 budget, clamped to `[16, 512]` so tiny dimensions
+/// don't degenerate into per-row bookkeeping and huge ones still
+/// amortize the tile-bound test.
+pub fn sv_tile_len(dim: usize) -> usize {
+    if dim == 0 {
+        return 512;
+    }
+    (TILE_BYTES / (4 * dim)).clamp(16, 512)
+}
+
+/// Reusable per-call scratch, owned by the backend so the steady-state
+/// batch paths allocate nothing.
+#[derive(Clone, Debug, Default)]
+pub struct TileScratch {
+    /// (min ‖x_j‖, max ‖x_j‖) per SV tile — the per-tile far-skip bound.
+    tile_bounds: Vec<(f64, f64)>,
+}
+
+impl TileScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Batch margins through the tile engine: `out[r] = Σ_j α_j k(x_j, q_r)`
+/// (no bias), bit-identical to [`super::margin1_native`] per row.
+/// Query rows are sharded across the pool's workers.
+pub fn margins_into(
+    svs: &SvStore,
+    gamma: f64,
+    queries: &DenseMatrix,
+    scratch: &mut TileScratch,
+    pool: &WorkerPool,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(out.len(), queries.rows());
+    if out.is_empty() {
+        return;
+    }
+    if svs.is_empty() {
+        out.fill(0.0);
+        return;
+    }
+    let ts = sv_tile_len(svs.dim());
+    scratch.tile_bounds.clear();
+    for tile in svs.norms2().chunks(ts) {
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0f64;
+        for &n2 in tile {
+            let s = n2.sqrt();
+            lo = lo.min(s);
+            hi = hi.max(s);
+        }
+        scratch.tile_bounds.push((lo, hi));
+    }
+    let bounds = &scratch.tile_bounds[..];
+    pool.run_chunks(out, TILE_Q, |row0, chunk| {
+        margins_rows(svs, gamma, queries, bounds, ts, row0, chunk);
+    });
+}
+
+/// Convenience wrapper: single-threaded tiled margins with local
+/// scratch (model-side evaluation, tests).
+pub fn margins(svs: &SvStore, gamma: f64, queries: &DenseMatrix) -> Vec<f64> {
+    let mut out = vec![0.0; queries.rows()];
+    margins_into(svs, gamma, queries, &mut TileScratch::new(), &WorkerPool::single(), &mut out);
+    out
+}
+
+/// One worker's share of query rows: blocks of [`TILE_Q`] queries, SV
+/// tiles streamed in ascending order within each block.
+fn margins_rows(
+    svs: &SvStore,
+    gamma: f64,
+    queries: &DenseMatrix,
+    bounds: &[(f64, f64)],
+    ts: usize,
+    row0: usize,
+    out: &mut [f64],
+) {
+    let b = svs.len();
+    for (blk, out_blk) in out.chunks_mut(TILE_Q).enumerate() {
+        let r0 = row0 + blk * TILE_Q;
+        // Hoist query norms (and their roots, for the tile bound) once
+        // per block — the scalar path computes ‖q‖² once per query too.
+        let mut nq = [0.0f64; TILE_Q];
+        let mut snq = [0.0f64; TILE_Q];
+        for (k, f) in out_blk.iter_mut().enumerate() {
+            let n = sq_norm(queries.row(r0 + k));
+            nq[k] = n;
+            snq[k] = n.sqrt();
+            *f = 0.0;
+        }
+        let mut t = 0;
+        let mut j0 = 0;
+        while j0 < b {
+            let j1 = (j0 + ts).min(b);
+            let (lo, hi) = bounds[t];
+            for (k, acc) in out_blk.iter_mut().enumerate() {
+                // Per-tile fused cutoff: every lane in the tile has
+                // d ≥ gap, so γ·gap² conservatively past the cutoff
+                // means the scalar path would skip every term anyway.
+                let s = snq[k];
+                let gap = if s < lo {
+                    lo - s
+                } else if s > hi {
+                    s - hi
+                } else {
+                    0.0
+                };
+                if gamma * gap * gap > EXP_NEG_CUTOFF * FAR_TILE_SLACK {
+                    continue;
+                }
+                let q = queries.row(r0 + k);
+                let n_q = nq[k];
+                let mut f = *acc;
+                for j in j0..j1 {
+                    let d2 = sq_dist_cached(svs.point(j), svs.norm2(j), q, n_q);
+                    let e = gamma * d2;
+                    if e < EXP_NEG_CUTOFF {
+                        f += svs.alpha(j) * (-e).exp();
+                    }
+                }
+                *acc = f;
+            }
+            j0 = j1;
+            t += 1;
+        }
+    }
+}
+
+/// Score one (candidate, lane) pair with the requested scorer — the
+/// single-pair unit every scoring path below is built from (and the
+/// cache-patch primitive `MultiMerge` uses for freshly merged points).
+#[inline]
+pub fn score_pair(
+    svs: &SvStore,
+    gamma: f64,
+    mode: MergeScoreMode,
+    i: usize,
+    j: usize,
+) -> (PairMerge, f64) {
+    let d2 = sq_dist_cached(svs.point(i), svs.norm2(i), svs.point(j), svs.norm2(j));
+    (pair_params(mode, svs.alpha(i), svs.alpha(j), gamma * d2), d2)
+}
+
+#[inline]
+fn pair_params(mode: MergeScoreMode, a_i: f64, a_j: f64, c: f64) -> PairMerge {
+    match mode {
+        MergeScoreMode::Lut => MergeLut::global().merge_pair_params(a_i, a_j, c),
+        MergeScoreMode::Exact => golden::merge_pair_params(a_i, a_j, c, GS_ITERS),
+    }
+}
+
+/// One worker's slice of a candidate's score lanes.
+struct LaneJob<'a> {
+    start: usize,
+    wd: &'a mut [f64],
+    h: &'a mut [f64],
+    a_z: &'a mut [f64],
+    d2: &'a mut [f64],
+}
+
+/// Split a [`MergeScores`]' four lane arrays along `ranges` (the
+/// borrow is consumed progressively, so the chunks are disjoint).
+fn split_lanes<'a>(
+    s: &'a mut MergeScores,
+    ranges: &[std::ops::Range<usize>],
+) -> Vec<LaneJob<'a>> {
+    let mut jobs = Vec::with_capacity(ranges.len());
+    let (mut wd, mut h, mut a_z, mut d2) =
+        (s.wd.as_mut_slice(), s.h.as_mut_slice(), s.a_z.as_mut_slice(), s.d2.as_mut_slice());
+    for r in ranges {
+        let take = r.end - r.start;
+        let (wd0, wd1) = wd.split_at_mut(take);
+        let (h0, h1) = h.split_at_mut(take);
+        let (az0, az1) = a_z.split_at_mut(take);
+        let (d20, d21) = d2.split_at_mut(take);
+        jobs.push(LaneJob { start: r.start, wd: wd0, h: h0, a_z: az0, d2: d20 });
+        wd = wd1;
+        h = h1;
+        a_z = az1;
+        d2 = d21;
+    }
+    jobs
+}
+
+/// Score merging SV `i` against every other SV, writing into a
+/// caller-owned buffer (lane `i` keeps `wd = +inf`).  Lanes are sharded
+/// across the pool; each lane is written by exactly one worker with the
+/// same per-pair math as the scalar scorer, so the result is
+/// bit-identical for every thread count.
+pub fn merge_scores_into(
+    svs: &SvStore,
+    gamma: f64,
+    i: usize,
+    mode: MergeScoreMode,
+    pool: &WorkerPool,
+    out: &mut MergeScores,
+) {
+    let b = svs.len();
+    out.reset(b);
+    if b == 0 {
+        return;
+    }
+    let ranges = partition(b, pool.threads(), MIN_LANES);
+    let jobs = split_lanes(out, &ranges);
+    pool.run_jobs(jobs, |mut job| score_lanes(svs, gamma, mode, i, &mut job));
+}
+
+fn score_lanes(svs: &SvStore, gamma: f64, mode: MergeScoreMode, i: usize, job: &mut LaneJob) {
+    let x_i = svs.point(i);
+    let a_i = svs.alpha(i);
+    let n_i = svs.norm2(i); // candidate norm hoisted out of the lane loop
+    for k in 0..job.wd.len() {
+        let j = job.start + k;
+        if j == i {
+            continue;
+        }
+        let d2 = sq_dist_cached(x_i, n_i, svs.point(j), svs.norm2(j));
+        let pm = pair_params(mode, a_i, svs.alpha(j), gamma * d2);
+        job.wd[k] = pm.wd;
+        job.h[k] = pm.h;
+        job.a_z[k] = pm.a_z;
+        job.d2[k] = d2;
+    }
+}
+
+/// One worker's lane range across *all* candidates of a batch.
+struct BatchJob<'a> {
+    start: usize,
+    len: usize,
+    rows: Vec<(usize, LaneJob<'a>)>,
+}
+
+/// Score the `cands` merge candidates against every SV in one tiled
+/// pass: SV tiles stream in the outer loop and all candidates consume a
+/// tile while it is hot, so the store crosses the cache hierarchy once
+/// per batch instead of once per candidate (this is how
+/// `MultiMerge::maintain` amortizes partner search across consecutive
+/// maintenance events).  Every lane carries exactly the per-pair values
+/// [`merge_scores_into`] would produce — the cached rows can stand in
+/// for a fresh per-event rescan bit-for-bit.
+pub fn merge_scores_batch(
+    svs: &SvStore,
+    gamma: f64,
+    cands: &[usize],
+    mode: MergeScoreMode,
+    pool: &WorkerPool,
+) -> Vec<MergeScores> {
+    let b = svs.len();
+    let mut out: Vec<MergeScores> = cands
+        .iter()
+        .map(|_| {
+            let mut s = MergeScores::default();
+            s.reset(b);
+            s
+        })
+        .collect();
+    if b == 0 || cands.is_empty() {
+        return out;
+    }
+    let ranges = partition(b, pool.threads(), MIN_LANES);
+    let mut jobs: Vec<BatchJob> = ranges
+        .iter()
+        .map(|r| BatchJob {
+            start: r.start,
+            len: r.end - r.start,
+            rows: Vec::with_capacity(cands.len()),
+        })
+        .collect();
+    for (ci, s) in out.iter_mut().enumerate() {
+        for (job, lanes) in jobs.iter_mut().zip(split_lanes(s, &ranges)) {
+            job.rows.push((cands[ci], lanes));
+        }
+    }
+    let ts = sv_tile_len(svs.dim());
+    pool.run_jobs(jobs, |mut job| {
+        let end = job.start + job.len;
+        let mut j0 = job.start;
+        while j0 < end {
+            let j1 = (j0 + ts).min(end);
+            for (i, lanes) in job.rows.iter_mut() {
+                let i = *i;
+                let x_i = svs.point(i);
+                let a_i = svs.alpha(i);
+                let n_i = svs.norm2(i);
+                for j in j0..j1 {
+                    if j == i {
+                        continue;
+                    }
+                    let k = j - job.start;
+                    let d2 = sq_dist_cached(x_i, n_i, svs.point(j), svs.norm2(j));
+                    let pm = pair_params(mode, a_i, svs.alpha(j), gamma * d2);
+                    lanes.wd[k] = pm.wd;
+                    lanes.h[k] = pm.h;
+                    lanes.a_z[k] = pm.a_z;
+                    lanes.d2[k] = d2;
+                }
+            }
+            j0 = j1;
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+    use crate::runtime::margin1_native;
+
+    fn random_store(b: usize, d: usize, seed: u64) -> SvStore {
+        let mut rng = Xoshiro256::new(seed);
+        let mut s = SvStore::new(d);
+        for _ in 0..b {
+            let x: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+            let mut a = 0.05 + rng.next_f64();
+            if rng.next_f64() < 0.5 {
+                a = -a;
+            }
+            s.push(&x, a);
+        }
+        s
+    }
+
+    fn random_queries(n: usize, d: usize, seed: u64) -> DenseMatrix {
+        let mut rng = Xoshiro256::new(seed);
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.next_gaussian() as f32 * 1.5).collect())
+            .collect();
+        DenseMatrix::from_rows(rows)
+    }
+
+    #[test]
+    fn tiled_margins_bit_match_scalar_rows() {
+        for &(b, d) in &[(1usize, 3usize), (7, 8), (65, 17), (513, 3)] {
+            let svs = random_store(b, d, b as u64 + 1);
+            let q = random_queries(37, d, 99);
+            let got = margins(&svs, 0.7, &q);
+            for r in 0..q.rows() {
+                let want = margin1_native(&svs, 0.7, q.row(r));
+                assert_eq!(got[r].to_bits(), want.to_bits(), "row {r} of B={b} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_store_and_empty_batch() {
+        let svs = SvStore::new(4);
+        let q = random_queries(5, 4, 1);
+        assert_eq!(margins(&svs, 1.0, &q), vec![0.0; 5]);
+        let svs = random_store(8, 4, 2);
+        let empty = DenseMatrix::zeros(0, 4);
+        assert!(margins(&svs, 1.0, &empty).is_empty());
+    }
+
+    #[test]
+    fn tile_skip_only_drops_sub_cutoff_terms() {
+        // Two far clusters: queries near cluster A must still see every
+        // A term while the B tile is (correctly) skippable, and the
+        // result must equal the scalar path bit-for-bit.
+        let d = 8;
+        let mut svs = SvStore::new(d);
+        let mut rng = Xoshiro256::new(5);
+        for j in 0..600 {
+            let base = if j % 2 == 0 { 0.0f32 } else { 400.0 };
+            let x: Vec<f32> =
+                (0..d).map(|_| base + rng.next_gaussian() as f32 * 0.3).collect();
+            svs.push(&x, 0.2 + rng.next_f64());
+        }
+        let q = random_queries(19, d, 6);
+        let got = margins(&svs, 0.5, &q);
+        for r in 0..q.rows() {
+            assert_eq!(got[r].to_bits(), margin1_native(&svs, 0.5, q.row(r)).to_bits());
+        }
+    }
+
+    #[test]
+    fn merge_scores_into_matches_lane_loop() {
+        let svs = random_store(97, 6, 3);
+        let i = svs.min_abs_alpha().unwrap();
+        for mode in [MergeScoreMode::Exact, MergeScoreMode::Lut] {
+            let mut out = MergeScores::default();
+            merge_scores_into(&svs, 0.8, i, mode, &WorkerPool::single(), &mut out);
+            assert!(out.wd[i].is_infinite());
+            for j in 0..svs.len() {
+                if j == i {
+                    continue;
+                }
+                let (pm, d2) = score_pair(&svs, 0.8, mode, i, j);
+                assert_eq!(out.wd[j].to_bits(), pm.wd.to_bits(), "lane {j}");
+                assert_eq!(out.d2[j].to_bits(), d2.to_bits(), "lane {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_rows_match_single_candidate_scoring() {
+        let svs = random_store(140, 5, 4);
+        let cands = [0usize, 3, 77, 139];
+        for threads in [1usize, 3] {
+            let pool = WorkerPool::new(threads);
+            let batch = merge_scores_batch(&svs, 1.1, &cands, MergeScoreMode::Lut, &pool);
+            for (c, &i) in cands.iter().enumerate() {
+                let mut single = MergeScores::default();
+                merge_scores_into(&svs, 1.1, i, MergeScoreMode::Lut, &pool, &mut single);
+                assert_eq!(batch[c].wd, single.wd, "candidate {i} (threads {threads})");
+                assert_eq!(batch[c].h, single.h);
+                assert_eq!(batch[c].a_z, single.a_z);
+                assert_eq!(batch[c].d2, single.d2);
+            }
+        }
+    }
+
+    #[test]
+    fn sv_tile_len_tracks_dimension() {
+        assert_eq!(sv_tile_len(1), 512);
+        assert_eq!(sv_tile_len(128), 64);
+        assert_eq!(sv_tile_len(4096), 16);
+        // tiles must cover the L1 budget, never exceed the clamp
+        for d in [1usize, 3, 300, 10_000] {
+            let ts = sv_tile_len(d);
+            assert!((16..=512).contains(&ts));
+        }
+    }
+}

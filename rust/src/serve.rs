@@ -6,9 +6,11 @@
 //! [`SvmModel`], folds the lazy coefficient scale once, keeps the
 //! per-SV `‖x‖²` norm cache warm (rebuilt on load, maintained by the
 //! store), and routes every request through [`Backend::margins`] — the
-//! same batched hot path the XLA artifacts accelerate.  All entry
-//! points return typed [`TrainError`]s; nothing in the serving path
-//! panics on user-supplied models or queries.
+//! blocked kernel-tile engine on the native/hybrid backends (see
+//! [`crate::runtime::tile`]), optionally sharded across
+//! [`Predictor::set_threads`] workers with bit-identical results.  All
+//! entry points return typed [`TrainError`]s; nothing in the serving
+//! path panics on user-supplied models or queries.
 //!
 //! ```
 //! use mmbsgd::prelude::*;
@@ -56,6 +58,14 @@ impl Predictor {
     /// Convenience: serve through the pure-rust backend.
     pub fn native(model: SvmModel) -> Result<Self, TrainError> {
         Self::new(model, Box::new(NativeBackend::new()))
+    }
+
+    /// Worker threads for the batched request paths (the tile engine
+    /// shards query rows; results are bit-identical for every thread
+    /// count).  Returns the count in effect — backends without a pool
+    /// report 1.
+    pub fn set_threads(&mut self, threads: usize) -> usize {
+        self.backend.set_threads(threads)
     }
 
     /// The wrapped model (read-only; provenance, SV count, ...).

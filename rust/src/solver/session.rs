@@ -102,14 +102,16 @@ impl<'b> TrainSession<'b> {
     pub fn new(cfg: TrainConfig, backend: &'b mut dyn Backend) -> Result<Self, TrainError> {
         cfg.validate()?;
         let score_mode = backend.set_merge_score_mode(cfg.merge_score_mode);
+        let threads = backend.set_threads(cfg.threads);
         let mut model = SvmModel::new(0, cfg.gamma);
         model.meta = format!(
-            "bsgd maintenance={} B={} seed={} backend={} score={}",
+            "bsgd maintenance={} B={} seed={} backend={} score={} threads={}",
             cfg.maintenance_kind().describe(),
             cfg.budget,
             cfg.seed,
             backend.name(),
-            score_mode.describe()
+            score_mode.describe(),
+            threads
         );
         let budget = Budget::new(cfg.budget, cfg.maintenance_kind());
         let rng = Xoshiro256::new(cfg.seed);
@@ -636,8 +638,12 @@ impl Checkpoint {
     ) -> Result<TrainSession<'b>, TrainError> {
         self.cfg.validate()?;
         // Provenance (`meta`) already records the original effective
-        // scorer; just put the backend in the configured mode.
+        // scorer; just put the backend in the configured mode.  The
+        // thread count is an execution detail (results are
+        // thread-invariant), so it is not checkpointed: resume runs
+        // with whatever the caller configured.
         backend.set_merge_score_mode(self.cfg.merge_score_mode);
+        backend.set_threads(self.cfg.threads);
         let mut budget = Budget::new(self.cfg.budget, self.cfg.maintenance_kind());
         budget.events = self.events;
         budget.total_wd = self.total_wd;
