@@ -36,6 +36,10 @@
 //! ever picks a candidate outside the prefetched set, the event simply
 //! falls back to a fresh scoring pass — the result is identical either
 //! way (`cached_multi_event_maintain_matches_fresh_rescan` pins it).
+//! The prefetch only engages on backends with a cheap per-pair patch
+//! primitive ([`Backend::has_cheap_pair_scoring`] — native and hybrid);
+//! for the rest (XLA: every scoring call is a full artifact dispatch)
+//! the per-event rescan is already the cheaper schedule and is kept.
 
 use super::golden::{self, GS_ITERS};
 use super::{MaintStats, Maintainer};
@@ -96,8 +100,11 @@ impl MultiMerge {
     /// Select the best `take` partner indices by ascending pairwise wd,
     /// returned *in increasing-wd order* (the cascade merges cheapest
     /// first, per the paper's footnote 1) as a view into the
-    /// maintainer's scratch — no per-event allocation.
-    pub fn select_partners(&mut self, wd: &[f64], take: usize) -> &[usize] {
+    /// maintainer's scratch — no per-event allocation.  Test-facing
+    /// wrapper over [`select_partners_into`]; deliberately not public
+    /// API — it exposes a view into internal scratch.
+    #[cfg(test)]
+    fn select_partners(&mut self, wd: &[f64], take: usize) -> &[usize] {
         let n = select_partners_into(&mut self.order, wd, take);
         &self.order[..n]
     }
@@ -132,11 +139,15 @@ impl Maintainer for MultiMerge {
         let dim = svs.dim();
 
         // Amortized prefetch: only when this call must run > 1 event
-        // (one event reduces the store by at most M−1).
+        // (one event reduces the store by at most M−1) AND the backend
+        // can patch cached rows cheaply — on a backend whose
+        // merge_score_pair is the full-pass trait default, replaying
+        // cached rows would cost a Θ(B·K) pass per fresh lane, i.e.
+        // asymptotically more than the per-event rescans it replaces.
         self.cache.clear();
         self.ids.clear();
         let overflow = svs.len().saturating_sub(budget);
-        let prefetched = svs.len() >= 2 && overflow > m - 1;
+        let prefetched = svs.len() >= 2 && overflow > m - 1 && backend.has_cheap_pair_scoring();
         if prefetched {
             let k = ((overflow + m - 2) / (m - 1)).min(MAX_PREFETCH).min(svs.len());
             self.order.clear();
@@ -541,6 +552,58 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Backend stuck with the trait-default `merge_score_pair` /
+    /// `merge_scores_batch` (full pass per call, like the XLA artifact
+    /// backend): counts full scoring passes so the test can pin that
+    /// the prefetch never engages for it.
+    struct SlowPairBackend {
+        inner: NativeBackend,
+        scoring_passes: usize,
+    }
+
+    impl Backend for SlowPairBackend {
+        fn name(&self) -> &'static str {
+            "slow-pair-test"
+        }
+
+        fn margins(
+            &mut self,
+            svs: &SvStore,
+            gamma: f64,
+            q: &crate::data::DenseMatrix,
+        ) -> Vec<f64> {
+            self.inner.margins(svs, gamma, q)
+        }
+
+        fn margin1(&mut self, svs: &SvStore, gamma: f64, x: &[f32]) -> f64 {
+            self.inner.margin1(svs, gamma, x)
+        }
+
+        fn merge_scores(&mut self, svs: &SvStore, gamma: f64, i: usize) -> MergeScores {
+            self.scoring_passes += 1;
+            self.inner.merge_scores(svs, gamma, i)
+        }
+
+        fn merge_gd(&mut self, points: &[(&[f32], f64)], gamma: f64) -> (Vec<f32>, f64, f64) {
+            self.inner.merge_gd(points, gamma)
+        }
+    }
+
+    #[test]
+    fn prefetch_gated_off_without_cheap_pair_scoring() {
+        // A deep shrink on a backend whose per-pair patch would be a
+        // full Θ(B·K) pass must keep the per-event rescan schedule:
+        // exactly one scoring pass per merge event — no batch prefetch,
+        // no per-lane patch passes.
+        let mut be = SlowPairBackend { inner: NativeBackend::new(), scoring_passes: 0 };
+        let mut svs = clustered_store(30);
+        let mut mm = MultiMerge::new(3, MergeExec::Cascade);
+        mm.maintain(&mut svs, 1.0, 8, &mut be);
+        assert_eq!(svs.len(), 8);
+        // 30 → 8 at M−1 = 2 removals per event: 11 events, 11 passes
+        assert_eq!(be.scoring_passes, 11);
     }
 
     #[test]

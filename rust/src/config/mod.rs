@@ -168,6 +168,10 @@ impl TrainConfig {
     }
 
     /// Overlay values from a parsed TOML `[train]` section.
+    ///
+    /// Count-typed keys (`budget`, `threads`, ...) are parsed strictly:
+    /// a fractional or negative number fails loudly here instead of
+    /// silently truncating (`threads = 2.9` must not train with 2).
     pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<()> {
         let sect = match doc.section("train") {
             Some(s) => s,
@@ -191,8 +195,8 @@ impl TrainConfig {
                     self.cost_c = Some(c);
                 }
                 "gamma" => self.gamma = val.as_f64().context("gamma")?,
-                "budget" => self.budget = val.as_f64().context("budget")? as usize,
-                "mergees" => self.mergees = val.as_f64().context("mergees")? as usize,
+                "budget" => self.budget = toml_count_usize(val, "budget")?,
+                "mergees" => self.mergees = toml_count_usize(val, "mergees")?,
                 "maintenance" => {
                     let s = val.as_str().context("maintenance")?;
                     self.maintenance = Some(
@@ -200,10 +204,10 @@ impl TrainConfig {
                             .with_context(|| format!("bad maintenance {s:?}"))?,
                     );
                 }
-                "epochs" => self.epochs = val.as_f64().context("epochs")? as usize,
+                "epochs" => self.epochs = toml_count_usize(val, "epochs")?,
                 "use_bias" => self.use_bias = val.as_bool().context("use_bias")?,
-                "seed" => self.seed = val.as_f64().context("seed")? as u64,
-                "eval_every" => self.eval_every = val.as_f64().context("eval_every")? as usize,
+                "seed" => self.seed = toml_count(val, "seed")?,
+                "eval_every" => self.eval_every = toml_count_usize(val, "eval_every")?,
                 "backend" => {
                     let s = val.as_str().context("backend")?;
                     self.backend = BackendChoice::parse(s)
@@ -215,7 +219,7 @@ impl TrainConfig {
                         .with_context(|| format!("bad merge_score_mode {s:?}"))?;
                 }
                 "prune_eps" => self.prune_eps = val.as_f64().context("prune_eps")?,
-                "threads" => self.threads = val.as_f64().context("threads")? as usize,
+                "threads" => self.threads = toml_count_usize(val, "threads")?,
                 other => bail!("unknown [train] key {other:?}"),
             }
         }
@@ -229,6 +233,34 @@ impl TrainConfig {
             self.lambda = Self::lambda_from_c(c, n);
         }
     }
+}
+
+/// Parse a TOML number as a non-negative integer count.  The
+/// TOML-subset parser stores every number as `f64`, so without this
+/// guard `threads = 2.9` would silently truncate to 2 and `threads =
+/// -4` would saturate to 0 before `validate()` rejected it with an
+/// unrelated message — both must fail at parse time instead.
+fn toml_count(val: &TomlValue, key: &'static str) -> Result<u64> {
+    let v = val.as_f64().context(key)?;
+    if !v.is_finite() || v.fract() != 0.0 {
+        bail!("{key} must be an integer, got {v}");
+    }
+    if v < 0.0 {
+        bail!("{key} must be >= 0, got {v}");
+    }
+    if v >= u64::MAX as f64 {
+        bail!("{key} {v} is out of range");
+    }
+    Ok(v as u64)
+}
+
+/// [`toml_count`] narrowed to `usize` with a checked conversion, so a
+/// count beyond the platform's pointer width fails loudly instead of
+/// wrapping (a 5e9 budget must not silently become ~7e8 on a 32-bit
+/// target).
+fn toml_count_usize(val: &TomlValue, key: &'static str) -> Result<usize> {
+    let v = toml_count(val, key)?;
+    usize::try_from(v).with_context(|| format!("{key} {v} overflows usize on this platform"))
 }
 
 #[cfg(test)]
@@ -354,6 +386,32 @@ mod tests {
         assert_eq!(cfg.cost_c, Some(8.0));
         cfg.resolve_c(100);
         assert!((cfg.lambda - 1.0 / 800.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn toml_count_keys_reject_fractional_and_negative() {
+        // fractional counts must fail at parse time, not truncate
+        for bad in ["threads = 2.9", "budget = 128.5", "epochs = 1.5", "seed = 0.5"] {
+            let doc = TomlDoc::parse(&format!("[train]\n{bad}\n")).unwrap();
+            let err = TrainConfig::default().apply_toml(&doc).unwrap_err();
+            assert!(err.to_string().contains("integer"), "{bad}: {err}");
+        }
+        // negative counts must fail loudly, not saturate to 0
+        for bad in ["threads = -4", "eval_every = -1", "mergees = -2"] {
+            let doc = TomlDoc::parse(&format!("[train]\n{bad}\n")).unwrap();
+            assert!(TrainConfig::default().apply_toml(&doc).is_err(), "{bad}");
+        }
+        // out-of-range counts must fail loudly, not wrap or saturate
+        for bad in ["seed = 1e300", "budget = 1e300"] {
+            let doc = TomlDoc::parse(&format!("[train]\n{bad}\n")).unwrap();
+            assert!(TrainConfig::default().apply_toml(&doc).is_err(), "{bad}");
+        }
+        // whole-valued numbers still parse
+        let doc = TomlDoc::parse("[train]\nthreads = 8\nbudget = 64\n").unwrap();
+        let mut cfg = TrainConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.threads, 8);
+        assert_eq!(cfg.budget, 64);
     }
 
     #[test]

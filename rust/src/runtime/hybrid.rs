@@ -111,6 +111,10 @@ impl Backend for HybridBackend {
         self.native.merge_score_pair(svs, gamma, i, j)
     }
 
+    fn has_cheap_pair_scoring(&self) -> bool {
+        self.native.has_cheap_pair_scoring()
+    }
+
     fn merge_gd(&mut self, points: &[(&[f32], f64)], gamma: f64) -> (Vec<f32>, f64, f64) {
         self.native.merge_gd(points, gamma)
     }

@@ -155,6 +155,20 @@ pub trait Backend {
         ScoredPair { wd: row.wd[j], h: row.h[j], a_z: row.a_z[j], d2: row.d2[j] }
     }
 
+    /// Whether [`Backend::merge_score_pair`] is genuinely O(K) (one
+    /// distance + one scorer solve) rather than the trait-default
+    /// extract-a-lane-from-a-full-pass.  `MultiMerge` gates its
+    /// multi-event prefetch on this: replaying a cached row patches one
+    /// lane per freshly merged SV via `merge_score_pair`, which without
+    /// the fast path is a full Θ(B·K) scoring pass per lane — making
+    /// the "amortized" path asymptotically *slower* than the per-event
+    /// rescans it replaces.  Backends that override
+    /// `merge_score_pair` with a cheap primitive override this to
+    /// `true`.
+    fn has_cheap_pair_scoring(&self) -> bool {
+        false
+    }
+
     /// MM-GD (paper Alg. 2): merge `points` (with coefficients) into a
     /// single (z, a_z); returns the exact weight degradation as third.
     fn merge_gd(&mut self, points: &[(&[f32], f64)], gamma: f64) -> (Vec<f32>, f64, f64);

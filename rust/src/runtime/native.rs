@@ -123,6 +123,10 @@ impl Backend for NativeBackend {
         ScoredPair { wd: pm.wd, h: pm.h, a_z: pm.a_z, d2 }
     }
 
+    fn has_cheap_pair_scoring(&self) -> bool {
+        true
+    }
+
     fn merge_gd(&mut self, points: &[(&[f32], f64)], gamma: f64) -> (Vec<f32>, f64, f64) {
         merge_gd_native(points, gamma, GD_ITERS, GD_LR)
     }

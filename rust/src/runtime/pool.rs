@@ -3,11 +3,12 @@
 //! Design constraints (EXPERIMENTS.md §Perf):
 //!
 //! * **No new dependencies.**  Workers are `std::thread::scope` threads
-//!   spawned per call; for the batch shapes the tile engine handles
-//!   (hundreds of queries × hundreds of SVs) the ~10 µs spawn cost is
-//!   noise next to the sharded compute, and scoped threads let jobs
-//!   borrow the store and output buffers directly — no channels, no
-//!   `Arc`, no shared mutable state.
+//!   spawned per call, with the caller running the first chunk itself
+//!   (N-way parallelism costs N−1 spawns); for the batch shapes the
+//!   tile engine handles (hundreds of queries × hundreds of SVs) the
+//!   ~10 µs spawn cost is noise next to the sharded compute, and scoped
+//!   threads let jobs borrow the store and output buffers directly — no
+//!   channels, no `Arc`, no shared mutable state.
 //! * **Bit-determinism for every thread count.**  Work is split by
 //!   [`partition`] into contiguous chunks whose boundaries depend only
 //!   on `(len, threads, min_chunk)` — never on timing — and every
@@ -47,11 +48,13 @@ impl WorkerPool {
         self.threads
     }
 
-    /// Run one closure call per job, each on its own scoped worker
-    /// (inline when the pool is single-threaded or there is at most one
-    /// job).  Jobs own their output slices, so workers never share
-    /// mutable state; job construction order is the deterministic
-    /// chunk order of [`partition`].
+    /// Run one closure call per job — the first on the calling thread
+    /// (which would otherwise idle inside the scope), the rest each on
+    /// their own scoped worker; all inline when the pool is
+    /// single-threaded or there is at most one job.  Jobs own their
+    /// output slices, so workers never share mutable state; job
+    /// construction order is the deterministic chunk order of
+    /// [`partition`].
     pub fn run_jobs<J, F>(&self, jobs: Vec<J>, f: F)
     where
         J: Send,
@@ -65,8 +68,16 @@ impl WorkerPool {
         }
         let f = &f;
         std::thread::scope(|s| {
+            let mut jobs = jobs.into_iter();
+            let mine = jobs.next();
             for job in jobs {
                 s.spawn(move || f(job));
+            }
+            // The caller works its own chunk concurrently with the
+            // workers: one fewer spawn per batch call, same total
+            // parallelism (outputs are disjoint, so order is moot).
+            if let Some(job) = mine {
+                f(job);
             }
         });
     }
@@ -106,16 +117,21 @@ impl Default for WorkerPool {
 }
 
 /// Split `0..n` into at most `max_parts` contiguous ranges of at least
-/// `min_chunk` items (the last may be shorter only because `n` ran
-/// out).  Earlier ranges take the remainder, so sizes differ by at most
-/// one item.  Pure function of its arguments — the determinism anchor
-/// of the whole pool.
+/// `min_chunk` items (a chunk can be shorter than `min_chunk` only
+/// when `n` itself is, in which case there is exactly one chunk).
+/// Earlier ranges take the remainder, so sizes differ by at most one
+/// item.  Pure function of its arguments — the determinism anchor of
+/// the whole pool.
 pub fn partition(n: usize, max_parts: usize, min_chunk: usize) -> Vec<Range<usize>> {
     if n == 0 {
         return Vec::new();
     }
     let min_chunk = min_chunk.max(1);
-    let parts = max_parts.max(1).min((n + min_chunk - 1) / min_chunk);
+    // Floor division: only as many parts as can each hold a full
+    // `min_chunk` — ceiling division here would hand out sub-minimum
+    // chunks (n=100, min=32 must give 3 chunks of 34/33/33, not 4×25)
+    // and defeat the oversharding guard.
+    let parts = max_parts.max(1).min((n / min_chunk).max(1));
     let base = n / parts;
     let rem = n % parts;
     let mut out = Vec::with_capacity(parts);
@@ -161,6 +177,17 @@ mod tests {
         // 100 items / 32-minimum => at most 3 chunks
         assert!(ranges.len() <= 3, "{ranges:?}");
         assert!(ranges.iter().all(|r| r.end - r.start >= 32), "{ranges:?}");
+        // below a single min_chunk everything collapses to one part
+        let ranges = partition(7, 16, 32);
+        assert_eq!(ranges, vec![0..7]);
+        // every chunk >= min_chunk across a spread of shapes
+        for (n, parts, min_chunk) in [(127usize, 16usize, 32usize), (513, 8, 64), (96, 3, 32)] {
+            let ranges = partition(n, parts, min_chunk);
+            assert!(
+                ranges.iter().all(|r| r.end - r.start >= min_chunk),
+                "partition({n}, {parts}, {min_chunk}) = {ranges:?}"
+            );
+        }
     }
 
     #[test]

@@ -20,9 +20,11 @@
 //!   scalar path's exact far-pair `exp` skip, and a whole (query, tile)
 //!   pair is skipped up front when the norm bound
 //!   `d ≥ |‖q‖ − ‖x_j‖|` proves every lane is past the cutoff.  The
-//!   tile test is conservative by `FAR_TILE_SLACK`, so it only skips
-//!   terms the scalar path would have skipped too — blocked results
-//!   stay **bit-identical** to [`super::margin1_native`].
+//!   tile test is conservative by `FAR_TILE_SLACK` plus a norm- and
+//!   dimension-scaled `DOT_ABS_EPS` rounding allowance, so it only
+//!   skips terms the scalar path would have skipped too — even on
+//!   unnormalized large-magnitude data — and blocked results stay
+//!   **bit-identical** to [`super::margin1_native`].
 //! * **No per-call allocation**: scratch ([`TileScratch`]) is owned by
 //!   the backend; per-block state lives in fixed stack arrays.
 //!
@@ -49,14 +51,30 @@ pub const TILE_Q: usize = 32;
 /// L1d — the other half belongs to the query block streaming over it).
 const TILE_BYTES: usize = 32 * 1024;
 
-/// Safety slack on the per-tile far-skip: the tile bound must beat the
-/// cutoff by 0.1% before a tile is skipped.  The norm bound
+/// Relative safety slack on the per-tile far-skip: the tile bound must
+/// beat the cutoff by 0.1% before a tile is skipped.  The norm bound
 /// `d² ≥ (‖q‖ − ‖x‖)²` holds exactly in real arithmetic but the
-/// f32-lane dot products carry ~1e-7 relative error, so a pair whose
+/// f32-lane dot products carry rounding error, so a pair whose
 /// *computed* γd² lands epsilon-under the cutoff (and which the scalar
-/// path would therefore include) must never be tile-skipped; 1e-3
-/// slack dwarfs the achievable rounding gap.
+/// path would therefore include) must never be tile-skipped.  The
+/// relative slack alone is not enough on large-magnitude data: the
+/// f32-accumulated dot's *absolute* error scales with the operand
+/// norms (and with dimension), so the skip test also charges the
+/// [`DOT_ABS_EPS`] allowance (see [`margins_rows`]).
 const FAR_TILE_SLACK: f64 = 1.001;
+
+/// Absolute-error model for the f32-lane dot product behind
+/// [`crate::kernel::sq_dist_cached`]: each of the 8 accumulator lanes
+/// in [`crate::kernel::dot`] sums `d/8` products of magnitude up to
+/// `(nq + nx)/2` for vectors of squared norms `nq`, `nx`, so the
+/// worst-case absolute error grows like `(d/8)·ε_f32·(nq + nx)`.  The
+/// tile far-skip therefore widens its margin by
+/// `DOT_ABS_EPS · (1 + d/8) · (nq + max‖x‖²)` — with ε_f32 ≈ 1.2e-7,
+/// `1e-6` leaves ≳8× headroom at every dimension — so no pair whose
+/// computed γd² rounds under [`EXP_NEG_CUTOFF`] is ever tile-skipped,
+/// even for unnormalized high-dimensional data with huge norms,
+/// keeping blocked results bit-identical to the scalar path.
+const DOT_ABS_EPS: f64 = 1e-6;
 
 /// Minimum score lanes per worker job (below this, sharding overhead
 /// beats the win).
@@ -144,6 +162,9 @@ fn margins_rows(
     out: &mut [f64],
 ) {
     let b = svs.len();
+    // Rounding allowance of the computed γd² (see DOT_ABS_EPS): the
+    // f32 dot's absolute error grows with both dimension and norms.
+    let dim_eps = DOT_ABS_EPS * (1.0 + svs.dim() as f64 / 8.0);
     for (blk, out_blk) in out.chunks_mut(TILE_Q).enumerate() {
         let r0 = row0 + blk * TILE_Q;
         // Hoist query norms (and their roots, for the tile bound) once
@@ -165,6 +186,13 @@ fn margins_rows(
                 // Per-tile fused cutoff: every lane in the tile has
                 // d ≥ gap, so γ·gap² conservatively past the cutoff
                 // means the scalar path would skip every term anyway.
+                // The margin is both relative (FAR_TILE_SLACK) and
+                // absolute in the operand norms and dimension
+                // (dim_eps): the scalar path tests the *computed* γd²,
+                // whose absolute error grows with ‖q‖² + ‖x‖² and with
+                // d, so a tile may only be skipped when its bound
+                // clears the cutoff by more than that worst-case
+                // rounding gap.
                 let s = snq[k];
                 let gap = if s < lo {
                     lo - s
@@ -173,7 +201,9 @@ fn margins_rows(
                 } else {
                     0.0
                 };
-                if gamma * gap * gap > EXP_NEG_CUTOFF * FAR_TILE_SLACK {
+                if gamma * gap * gap
+                    > EXP_NEG_CUTOFF * FAR_TILE_SLACK + gamma * dim_eps * (nq[k] + hi * hi)
+                {
                     continue;
                 }
                 let q = queries.row(r0 + k);
@@ -206,14 +236,34 @@ pub fn score_pair(
     j: usize,
 ) -> (PairMerge, f64) {
     let d2 = sq_dist_cached(svs.point(i), svs.norm2(i), svs.point(j), svs.norm2(j));
-    (pair_params(mode, svs.alpha(i), svs.alpha(j), gamma * d2), d2)
+    (PairScorer::new(mode).params(svs.alpha(i), svs.alpha(j), gamma * d2), d2)
 }
 
-#[inline]
-fn pair_params(mode: MergeScoreMode, a_i: f64, a_j: f64, c: f64) -> PairMerge {
-    match mode {
-        MergeScoreMode::Lut => MergeLut::global().merge_pair_params(a_i, a_j, c),
-        MergeScoreMode::Exact => golden::merge_pair_params(a_i, a_j, c, GS_ITERS),
+/// Merge scorer resolved once per scoring pass: the LUT lives behind a
+/// `OnceLock`, so resolving it (an atomic load) and re-matching the
+/// mode per (candidate, lane) pair would put avoidable work in the
+/// hottest loops — the lane loops below hoist this instead, like the
+/// pre-tile scalar scorer did.
+#[derive(Clone, Copy)]
+enum PairScorer {
+    Lut(&'static MergeLut),
+    Exact,
+}
+
+impl PairScorer {
+    fn new(mode: MergeScoreMode) -> Self {
+        match mode {
+            MergeScoreMode::Lut => Self::Lut(MergeLut::global()),
+            MergeScoreMode::Exact => Self::Exact,
+        }
+    }
+
+    #[inline]
+    fn params(self, a_i: f64, a_j: f64, c: f64) -> PairMerge {
+        match self {
+            Self::Lut(lut) => lut.merge_pair_params(a_i, a_j, c),
+            Self::Exact => golden::merge_pair_params(a_i, a_j, c, GS_ITERS),
+        }
     }
 }
 
@@ -270,10 +320,11 @@ pub fn merge_scores_into(
     }
     let ranges = partition(b, pool.threads(), MIN_LANES);
     let jobs = split_lanes(out, &ranges);
-    pool.run_jobs(jobs, |mut job| score_lanes(svs, gamma, mode, i, &mut job));
+    let scorer = PairScorer::new(mode);
+    pool.run_jobs(jobs, |mut job| score_lanes(svs, gamma, scorer, i, &mut job));
 }
 
-fn score_lanes(svs: &SvStore, gamma: f64, mode: MergeScoreMode, i: usize, job: &mut LaneJob) {
+fn score_lanes(svs: &SvStore, gamma: f64, scorer: PairScorer, i: usize, job: &mut LaneJob) {
     let x_i = svs.point(i);
     let a_i = svs.alpha(i);
     let n_i = svs.norm2(i); // candidate norm hoisted out of the lane loop
@@ -283,7 +334,7 @@ fn score_lanes(svs: &SvStore, gamma: f64, mode: MergeScoreMode, i: usize, job: &
             continue;
         }
         let d2 = sq_dist_cached(x_i, n_i, svs.point(j), svs.norm2(j));
-        let pm = pair_params(mode, a_i, svs.alpha(j), gamma * d2);
+        let pm = scorer.params(a_i, svs.alpha(j), gamma * d2);
         job.wd[k] = pm.wd;
         job.h[k] = pm.h;
         job.a_z[k] = pm.a_z;
@@ -340,6 +391,7 @@ pub fn merge_scores_batch(
         }
     }
     let ts = sv_tile_len(svs.dim());
+    let scorer = PairScorer::new(mode);
     pool.run_jobs(jobs, |mut job| {
         let end = job.start + job.len;
         let mut j0 = job.start;
@@ -356,7 +408,7 @@ pub fn merge_scores_batch(
                     }
                     let k = j - job.start;
                     let d2 = sq_dist_cached(x_i, n_i, svs.point(j), svs.norm2(j));
-                    let pm = pair_params(mode, a_i, svs.alpha(j), gamma * d2);
+                    let pm = scorer.params(a_i, svs.alpha(j), gamma * d2);
                     lanes.wd[k] = pm.wd;
                     lanes.h[k] = pm.h;
                     lanes.a_z[k] = pm.a_z;
@@ -438,6 +490,44 @@ mod tests {
         let got = margins(&svs, 0.5, &q);
         for r in 0..q.rows() {
             assert_eq!(got[r].to_bits(), margin1_native(&svs, 0.5, q.row(r)).to_bits());
+        }
+    }
+
+    #[test]
+    fn tile_skip_safe_on_large_magnitude_data() {
+        // Unnormalized data with huge norms: the f32 dot's *absolute*
+        // error is large here — and grows with dimension — so the
+        // norm- and dim-aware slack must keep every near-cutoff pair
+        // unskipped.  The per-dim query offsets sweep γ·gap² across
+        // the EXP_NEG_CUTOFF boundary band (γ·d·off² ∈ [~25, ~57]) —
+        // the regime where a bare relative slack could tile-skip a
+        // pair the scalar path includes.
+        for &(d, gamma, off0, step) in
+            &[(8usize, 0.05f64, 8.0f32, 0.1f32), (128, 3e-4, 26.0, 0.3)]
+        {
+            let mut svs = SvStore::new(d);
+            let mut rng = Xoshiro256::new(11);
+            for _ in 0..600 {
+                let x: Vec<f32> =
+                    (0..d).map(|_| 2000.0 + rng.next_gaussian() as f32 * 0.5).collect();
+                svs.push(&x, 0.2 + rng.next_f64());
+            }
+            let mut qrows = Vec::new();
+            for k in 0..40 {
+                let off = off0 + step * k as f32;
+                qrows.push(
+                    (0..d).map(|_| 2000.0 + off + rng.next_gaussian() as f32 * 0.2).collect(),
+                );
+            }
+            let q = DenseMatrix::from_rows(qrows);
+            let got = margins(&svs, gamma, &q);
+            for r in 0..q.rows() {
+                assert_eq!(
+                    got[r].to_bits(),
+                    margin1_native(&svs, gamma, q.row(r)).to_bits(),
+                    "d={d} row {r}"
+                );
+            }
         }
     }
 

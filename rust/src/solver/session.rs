@@ -102,16 +102,20 @@ impl<'b> TrainSession<'b> {
     pub fn new(cfg: TrainConfig, backend: &'b mut dyn Backend) -> Result<Self, TrainError> {
         cfg.validate()?;
         let score_mode = backend.set_merge_score_mode(cfg.merge_score_mode);
-        let threads = backend.set_threads(cfg.threads);
+        // Threads are applied but deliberately NOT recorded in model
+        // provenance: they are an execution detail with bit-identical
+        // results for every count, and embedding them would make saved
+        // models / checkpoints byte-differ across `--threads` (the CLI
+        // prints the effective count per run instead).
+        backend.set_threads(cfg.threads);
         let mut model = SvmModel::new(0, cfg.gamma);
         model.meta = format!(
-            "bsgd maintenance={} B={} seed={} backend={} score={} threads={}",
+            "bsgd maintenance={} B={} seed={} backend={} score={}",
             cfg.maintenance_kind().describe(),
             cfg.budget,
             cfg.seed,
             backend.name(),
             score_mode.describe(),
-            threads
         );
         let budget = Budget::new(cfg.budget, cfg.maintenance_kind());
         let rng = Xoshiro256::new(cfg.seed);
