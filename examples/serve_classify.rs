@@ -1,25 +1,26 @@
-//! Serving example: train once, wrap the model in a [`Predictor`]
-//! serving handle (XLA runtime when artifacts are present, native
-//! fallback otherwise), and serve classification requests in batches,
-//! reporting latency percentiles and throughput.
+//! Serving example: train once, load the model into a [`ModelRegistry`]
+//! behind a [`BatchEngine`] micro-batcher, and serve classification
+//! requests one query at a time — the engine coalesces whatever is
+//! pending into single tiled margins passes — reporting latency
+//! percentiles, throughput, and the achieved micro-batch size.
 //!
-//! Models trained by `mmbsgd train --save model.txt` can be served the
-//! same way (`SvmModel::load` + `Predictor::new`); this example trains
-//! its own small model so it runs self-contained.
+//! Models trained by `mmbsgd train --save model.txt` serve the same way
+//! (`SvmModel::load` + `ModelRegistry::insert`), and `mmbsgd serve`
+//! wraps exactly this pipeline in a TCP line protocol; this example
+//! trains its own small model so it runs self-contained.  For weighted
+//! two-model A/B serving see `examples/serve_ab.rs`.
 //!
-//! Run: `cargo run --release --example serve_classify [batch_size]`
+//! Run: `cargo run --release --example serve_classify [burst_size]`
 
 use mmbsgd::config::TrainConfig;
 use mmbsgd::data::synth::{dataset, SynthSpec};
-use mmbsgd::data::DenseMatrix;
-use mmbsgd::runtime::{ArtifactRegistry, Backend, NativeBackend, XlaBackend};
-use mmbsgd::serve::Predictor;
+use mmbsgd::serve::{BatchEngine, ModelRegistry, RouteSpec, ShedPolicy};
 use mmbsgd::solver::bsgd;
 use mmbsgd::util::stats::percentile;
 use std::time::Instant;
 
 fn main() {
-    let batch: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let burst: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(64);
     let spec = SynthSpec::phishing_like(0.5);
     let split = dataset(&spec, 5);
     let cfg = TrainConfig {
@@ -38,28 +39,23 @@ fn main() {
         100.0 * out.model.accuracy(&split.test)
     );
 
-    let backend: Box<dyn Backend> = match XlaBackend::new(&ArtifactRegistry::default_dir()) {
-        Ok(b) => {
-            println!("serving through PJRT (AOT artifacts)");
-            Box::new(b)
-        }
-        Err(e) => {
-            println!("no artifacts ({e}); serving natively");
-            Box::new(NativeBackend::new())
-        }
-    };
-    // The Predictor owns model + backend, folds the coefficient scale
-    // once, and serves every request through the batched margins path.
-    let mut served_model = Predictor::new(out.model, backend).expect("valid model");
+    // The registry owns model + backend (one backend no matter how many
+    // models), folds the coefficient scale once, and prebuilds the
+    // tile far-skip bounds; the engine batches requests through it.
+    let mut registry = ModelRegistry::new(
+        mmbsgd::coordinator::build_backend(mmbsgd::config::BackendChoice::Native)
+            .expect("native backend"),
+        1,
+    );
+    let version = registry.insert("classifier", out.model).expect("valid model");
+    registry.set_route(RouteSpec::single("classifier")).expect("model is loaded");
+    println!("serving classifier@v{version} through the micro-batch engine");
 
-    // Warmup: the first artifact call pays one-time PJRT compilation;
-    // real deployments compile at startup, so exclude it from latency.
-    {
-        let warm = DenseMatrix::from_rows(vec![vec![0.0f32; split.test.dim()]]);
-        let _ = served_model.decision_batch(&warm).expect("dim matches");
-    }
+    let mut engine = BatchEngine::new(burst, 4 * burst, ShedPolicy::Reject);
 
-    // Request stream: test points in `batch`-sized requests.
+    // Request stream: test points arrive in bursts of `burst` single
+    // queries (what a loaded server sees between two margins passes);
+    // each flush answers the whole burst in one tiled pass.
     let test = &split.test;
     let mut latencies_ms = Vec::new();
     let mut served = 0usize;
@@ -67,14 +63,22 @@ fn main() {
     let t0 = Instant::now();
     let mut i = 0;
     while i < test.len() {
-        let hi = (i + batch).min(test.len());
-        let rows: Vec<Vec<f32>> = (i..hi).map(|r| test.x.row(r).to_vec()).collect();
-        let q = DenseMatrix::from_rows(rows);
+        let hi = (i + burst).min(test.len());
         let t1 = Instant::now();
-        let labels = served_model.predict_batch(&q).expect("dim matches");
+        let ids: Vec<u64> = (i..hi)
+            .map(|r| {
+                engine
+                    .submit(&registry, Some(&format!("req-{r}")), test.x.row(r).to_vec())
+                    .expect("queue sized for the burst")
+            })
+            .collect();
+        let answers = engine.flush(&mut registry);
         latencies_ms.push(t1.elapsed().as_secs_f64() * 1e3);
-        for (k, &pred) in labels.iter().enumerate() {
-            if pred == test.y[i + k] {
+        assert_eq!(answers.len(), ids.len());
+        for ((_, res), r) in answers.into_iter().zip(i..hi) {
+            let decision = res.expect("in-dimension request").value;
+            let label = if decision >= 0.0 { 1.0 } else { -1.0 };
+            if label == test.y[r] {
                 correct += 1;
             }
         }
@@ -82,13 +86,20 @@ fn main() {
         i = hi;
     }
     let total_s = t0.elapsed().as_secs_f64();
+    let stats = engine.stats();
     println!(
-        "served {served} points in {} requests of {batch} | accuracy {:.2}%",
+        "served {served} points in {} bursts of {burst} | accuracy {:.2}%",
         latencies_ms.len(),
         100.0 * correct as f64 / served as f64
     );
     println!(
-        "latency per request: p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms | throughput {:.0} pts/s",
+        "micro-batches: {} passes, mean {:.1} rows/pass | shed {}",
+        stats.batches,
+        stats.rows as f64 / stats.batches.max(1) as f64,
+        stats.shed
+    );
+    println!(
+        "latency per burst: p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms | throughput {:.0} pts/s",
         percentile(&latencies_ms, 50.0),
         percentile(&latencies_ms, 95.0),
         percentile(&latencies_ms, 99.0),

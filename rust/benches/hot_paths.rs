@@ -18,9 +18,10 @@ use mmbsgd::budget::golden::{self, GS_ITERS};
 use mmbsgd::budget::{MaintenanceKind, Maintainer, MergeExec, MergeLut, MultiMerge, Projection};
 use mmbsgd::data::DenseMatrix;
 use mmbsgd::kernel::{sq_dist, EXP_NEG_CUTOFF};
-use mmbsgd::model::SvStore;
+use mmbsgd::model::{SvStore, SvmModel};
 use mmbsgd::rng::Xoshiro256;
 use mmbsgd::runtime::{margin1_native, ArtifactRegistry, Backend, NativeBackend, XlaBackend};
+use mmbsgd::serve::{BatchEngine, ModelRegistry, Predictor, ShedPolicy};
 
 /// Worker count for the threaded tile-engine cases ("N" in the
 /// 1-vs-N-thread acceptance ratios).  CI runs the bench smoke with
@@ -202,6 +203,39 @@ fn main() {
         }
     }
 
+    if enabled("serve") {
+        group("serving: sequential decision1 vs micro-batched registry pass");
+        for &(b, d, n) in &[(128usize, 32usize, 64usize), (512, 128, 256), (2048, 128, 256)] {
+            let mut model = SvmModel::new(d, gamma);
+            model.svs = random_store(b, d, 13);
+            model.bias = 0.1;
+            let mut rng = Xoshiro256::new(14);
+            let scale = (5.0 / (gamma * 2.0 * d as f64)).sqrt();
+            let rows: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..d).map(|_| (scale * rng.next_gaussian()) as f32).collect())
+                .collect();
+            let q = DenseMatrix::from_rows(rows);
+            // one request at a time through the single-query path
+            let mut single = Predictor::native(model.clone()).unwrap();
+            bench(&format!("serve/single/B{b}/d{d}/n{n}"), 300, || {
+                (0..q.rows())
+                    .map(|r| single.decision1(q.row(r)).unwrap())
+                    .collect::<Vec<f64>>()
+            });
+            // the same n requests coalesced by the micro-batcher
+            // (including its per-request routing + queueing overhead)
+            let mut reg = ModelRegistry::new(Box::new(NativeBackend::new()), 1);
+            reg.insert("m", model).unwrap();
+            let mut eng = BatchEngine::new(n.max(1), 4 * n.max(1), ShedPolicy::Reject);
+            bench(&format!("serve/batched/B{b}/d{d}/n{n}"), 300, || {
+                for r in 0..q.rows() {
+                    eng.submit(&reg, None, q.row(r).to_vec()).unwrap();
+                }
+                eng.flush(&mut reg)
+            });
+        }
+    }
+
     if enabled("maintenance") {
         group("one maintenance event: multi-merge vs projection (ablation)");
         for &b in &[64usize, 256, 512] {
@@ -293,6 +327,17 @@ fn main() {
             &format!("merge_batch/tiled-t{nt}/{shape}"),
         ) {
             derived.push((format!("speedup/merge_batch_threads{nt}_vs_1/{shape}"), s));
+        }
+    }
+    // Serving acceptance ratio: micro-batched registry pass vs n
+    // sequential single-query decisions (ISSUE 4 gate).
+    for &(b, d, n) in &[(128usize, 32usize, 64usize), (512, 128, 256), (2048, 128, 256)] {
+        let shape = format!("B{b}/d{d}/n{n}");
+        if let Some(s) =
+            ratio(&format!("serve/single/{shape}"), &format!("serve/batched/{shape}"))
+        {
+            println!("serve micro-batch speedup at {shape}: {s:.2}x");
+            derived.push((format!("speedup/serve_batched_vs_single/{shape}"), s));
         }
     }
     emit_json("BENCH_hotpaths.json", &derived);

@@ -10,6 +10,7 @@ pub use toml::{TomlDoc, TomlError, TomlValue};
 
 use crate::budget::{MaintenanceKind, MergeScoreMode};
 use crate::error::TrainError;
+use crate::serve::ShedPolicy;
 use anyhow::{bail, Context, Result};
 
 /// Which compute backend executes the numeric hot paths.
@@ -235,6 +236,98 @@ impl TrainConfig {
     }
 }
 
+/// Configuration of a `mmbsgd serve` deployment: the `[serve]` TOML
+/// section, with CLI flags overriding file values (same layering as
+/// [`TrainConfig`]).  `--model` specs are deliberately CLI/protocol
+/// only — model files are runtime artifacts (hot-swappable via
+/// `swap-model`), not configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Listen address (`host:port`; port 0 picks a free port).
+    pub addr: String,
+    /// Max query rows per tiled margins pass.
+    pub batch_max: usize,
+    /// Max admitted-but-unanswered requests before shedding.
+    pub queue_max: usize,
+    /// Who loses at a full queue: `reject` (refuse the new request) or
+    /// `oldest` (drop the oldest waiter).
+    pub shed: ShedPolicy,
+    /// Label-feedback accuracy window of the drift monitor.
+    pub monitor_window: usize,
+    /// Worker threads for the shared backend's batch paths.
+    pub threads: usize,
+    /// Routing-hash seed: replicas that must agree on A/B assignment
+    /// share a seed.
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7878".into(),
+            batch_max: 64,
+            queue_max: 256,
+            shed: ShedPolicy::Reject,
+            monitor_window: 256,
+            threads: 1,
+            seed: 1,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Validate invariants; call before binding.
+    pub fn validate(&self) -> Result<(), TrainError> {
+        let bad = |field: &'static str, message: String| {
+            Err(TrainError::InvalidConfig { field, message })
+        };
+        if self.addr.is_empty() {
+            return bad("addr", "must be host:port".into());
+        }
+        if self.batch_max == 0 {
+            return bad("batch_max", "must be >= 1".into());
+        }
+        if self.queue_max == 0 {
+            return bad("queue_max", "must be >= 1".into());
+        }
+        if self.monitor_window == 0 {
+            return bad("monitor_window", "must be >= 1".into());
+        }
+        if self.threads == 0 {
+            return bad("threads", "must be >= 1".into());
+        }
+        Ok(())
+    }
+
+    /// Overlay values from a parsed TOML `[serve]` section (same strict
+    /// count parsing as the `[train]` overlay).
+    pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<()> {
+        let sect = match doc.section("serve") {
+            Some(s) => s,
+            None => return Ok(()),
+        };
+        for (key, val) in sect {
+            match key.as_str() {
+                "addr" => self.addr = val.as_str().context("addr")?.to_string(),
+                "batch_max" => self.batch_max = toml_count_usize(val, "batch_max")?,
+                "queue_max" => self.queue_max = toml_count_usize(val, "queue_max")?,
+                "shed" => {
+                    let s = val.as_str().context("shed")?;
+                    self.shed = ShedPolicy::parse(s)
+                        .with_context(|| format!("bad shed {s:?} (reject|oldest)"))?;
+                }
+                "monitor_window" => {
+                    self.monitor_window = toml_count_usize(val, "monitor_window")?
+                }
+                "threads" => self.threads = toml_count_usize(val, "threads")?,
+                "seed" => self.seed = toml_count(val, "seed")?,
+                other => bail!("unknown [serve] key {other:?}"),
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Parse a TOML number as a non-negative integer count.  The
 /// TOML-subset parser stores every number as `f64`, so without this
 /// guard `threads = 2.9` would silently truncate to 2 and `threads =
@@ -418,6 +511,50 @@ mod tests {
     fn unknown_key_rejected() {
         let doc = TomlDoc::parse("[train]\nbogus = 1\n").unwrap();
         assert!(TrainConfig::default().apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn serve_toml_overlay_and_validation() {
+        let doc = TomlDoc::parse(
+            "[serve]\naddr = \"0.0.0.0:9090\"\nbatch_max = 128\nqueue_max = 512\n\
+             shed = \"oldest\"\nmonitor_window = 64\nthreads = 4\nseed = 9\n",
+        )
+        .unwrap();
+        let mut cfg = ServeConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.addr, "0.0.0.0:9090");
+        assert_eq!(cfg.batch_max, 128);
+        assert_eq!(cfg.queue_max, 512);
+        assert_eq!(cfg.shed, ShedPolicy::Oldest);
+        assert_eq!(cfg.monitor_window, 64);
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.seed, 9);
+        cfg.validate().unwrap();
+        // a [train]-only doc leaves serve defaults alone
+        let doc = TomlDoc::parse("[train]\nbudget = 64\n").unwrap();
+        let mut cfg = ServeConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg, ServeConfig::default());
+    }
+
+    #[test]
+    fn serve_toml_rejects_bad_keys_and_counts() {
+        for bad in [
+            "[serve]\nbogus = 1\n",
+            "[serve]\nbatch_max = 2.5\n",
+            "[serve]\nqueue_max = -4\n",
+            "[serve]\nshed = \"newest\"\n",
+        ] {
+            let doc = TomlDoc::parse(bad).unwrap();
+            assert!(ServeConfig::default().apply_toml(&doc).is_err(), "{bad}");
+        }
+        use crate::error::TrainError;
+        let mut cfg = ServeConfig::default();
+        cfg.batch_max = 0;
+        match cfg.validate() {
+            Err(TrainError::InvalidConfig { field, .. }) => assert_eq!(field, "batch_max"),
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
     }
 
     #[test]

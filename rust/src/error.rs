@@ -56,6 +56,71 @@ impl fmt::Display for TrainError {
 
 impl std::error::Error for TrainError {}
 
+/// Everything that can go wrong serving a request through the
+/// [`crate::serve`] subsystem.  Serving is per-request fallible: a
+/// malformed line, an over-quota queue, or a mismatched query dimension
+/// fails *that request* with a variant the server renders as an `err`
+/// reply — the process, the connection, and every other queued request
+/// keep going.  Nothing in the serving path panics on user input.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeError {
+    /// A request (or route arm, or `swap-model`) named a model the
+    /// registry does not hold.
+    UnknownModel(String),
+    /// The pending queue is at capacity and the engine runs
+    /// [`crate::serve::ShedPolicy::Reject`]: the *new* request is
+    /// refused up front.
+    QueueFull { limit: usize },
+    /// The pending queue was at capacity under
+    /// [`crate::serve::ShedPolicy::Oldest`] and this (oldest) request
+    /// was dropped to admit a newer one.
+    Shed,
+    /// A protocol line failed to parse (unknown command, bad float,
+    /// missing argument).  Carries the reason verbatim for the `err`
+    /// reply.
+    BadRequest(String),
+    /// A route table was rejected (empty, zero total weight, or an arm
+    /// naming an absent model).
+    BadRoute(String),
+    /// Model validation / query shape errors, forwarded from the
+    /// training-side typed errors (e.g. [`TrainError::DimMismatch`]).
+    Model(TrainError),
+    /// Socket-level failure (bind, accept, read, write).  String-typed:
+    /// `std::io::Error` is neither `Clone` nor `PartialEq`, and serving
+    /// only ever reports these, never matches on the kind.
+    Io(String),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::UnknownModel(name) => write!(f, "unknown model {name:?}"),
+            ServeError::QueueFull { limit } => {
+                write!(f, "queue full ({limit} pending); request rejected")
+            }
+            ServeError::Shed => write!(f, "request shed: queue overflowed while waiting"),
+            ServeError::BadRequest(msg) => write!(f, "bad request: {msg}"),
+            ServeError::BadRoute(msg) => write!(f, "bad route: {msg}"),
+            ServeError::Model(e) => write!(f, "model: {e}"),
+            ServeError::Io(msg) => write!(f, "io: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<TrainError> for ServeError {
+    fn from(e: TrainError) -> Self {
+        ServeError::Model(e)
+    }
+}
+
+impl From<std::io::Error> for ServeError {
+    fn from(e: std::io::Error) -> Self {
+        ServeError::Io(e.to_string())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,5 +153,16 @@ mod tests {
         let e = TrainError::DimMismatch { expected: 22, got: 7 };
         assert_eq!(e, TrainError::DimMismatch { expected: 22, got: 7 });
         assert!(e.to_string().contains("22"));
+    }
+
+    #[test]
+    fn serve_errors_render_actionably() {
+        let e = ServeError::QueueFull { limit: 64 };
+        assert!(e.to_string().contains("64"), "{e}");
+        let e = ServeError::UnknownModel("champion".into());
+        assert!(e.to_string().contains("champion"), "{e}");
+        let e: ServeError = TrainError::DimMismatch { expected: 3, got: 5 }.into();
+        assert_eq!(e, ServeError::Model(TrainError::DimMismatch { expected: 3, got: 5 }));
+        assert!(e.to_string().contains("mismatch"), "{e}");
     }
 }

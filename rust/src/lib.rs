@@ -42,6 +42,14 @@
 //! use [`solver::session::TrainSession`]; for deployment-side batched
 //! inference, [`serve::Predictor`].  Both return typed
 //! [`error::TrainError`]s instead of panicking on user input.
+//!
+//! For live traffic, the [`serve`] subsystem scales the same model up
+//! to a long-lived server: [`serve::ModelRegistry`] holds many named,
+//! versioned models over one shared backend with deterministic
+//! weighted A/B routing, [`serve::BatchEngine`] coalesces single-query
+//! requests into tiled margins passes with explicit load shedding, and
+//! `mmbsgd serve` speaks a newline-delimited TCP protocol over both
+//! (every request-path failure is a typed [`error::ServeError`]).
 
 pub mod budget;
 pub mod config;
@@ -64,12 +72,12 @@ pub mod prelude {
     pub use crate::config::TrainConfig;
     pub use crate::data::synth::SynthSpec;
     pub use crate::data::{Dataset, DenseMatrix, Split};
-    pub use crate::error::TrainError;
+    pub use crate::error::{ServeError, TrainError};
     pub use crate::kernel::Gaussian;
     pub use crate::model::SvmModel;
     pub use crate::rng::Xoshiro256;
     pub use crate::runtime::{Backend, NativeBackend};
-    pub use crate::serve::Predictor;
+    pub use crate::serve::{BatchEngine, ModelRegistry, Predictor, RouteSpec, ShedPolicy};
     pub use crate::solver::bsgd;
     pub use crate::solver::{Checkpoint, TrainSession};
 }

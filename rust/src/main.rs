@@ -13,30 +13,33 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 use mmbsgd::budget::{MaintenanceKind, MergeScoreMode};
-use mmbsgd::config::{BackendChoice, TomlDoc, TrainConfig};
+use mmbsgd::config::{BackendChoice, ServeConfig, TomlDoc, TrainConfig};
 use mmbsgd::coordinator::{build_backend, ProgressObserver};
 use mmbsgd::data::synth::SynthSpec;
 use mmbsgd::data::{libsvm, split, Split};
 use mmbsgd::exp::{self, ExpOptions};
 use mmbsgd::model::SvmModel;
 use mmbsgd::runtime::Backend;
-use mmbsgd::serve::Predictor;
+use mmbsgd::serve::{self, ModelRegistry, Predictor, RouteSpec, ServeOptions, ShedPolicy};
 use mmbsgd::solver::bsgd::{self, TrainOutput};
 use mmbsgd::solver::{Checkpoint, TrainSession};
-use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::time::Instant;
 
-/// Minimal `--key value` / `--flag` argument map.
+/// Minimal `--key value` / `--flag` argument map.  Values keep their
+/// command-line order and repeats: `get` returns the last occurrence
+/// (later flags override earlier ones), `get_all` every occurrence
+/// (`serve` takes one `--model` per loaded model).
 struct Args {
     cmd: String,
-    values: BTreeMap<String, String>,
+    values: Vec<(String, String)>,
     flags: Vec<String>,
 }
 
 impl Args {
     fn parse(argv: &[String]) -> Result<Self> {
         let cmd = argv.first().cloned().unwrap_or_else(|| "help".into());
-        let mut values = BTreeMap::new();
+        let mut values = Vec::new();
         let mut flags = Vec::new();
         let mut it = argv[1.min(argv.len())..].iter().peekable();
         while let Some(a) = it.next() {
@@ -45,7 +48,7 @@ impl Args {
                 .ok_or_else(|| anyhow!("expected --flag, got {a:?}"))?;
             match it.peek() {
                 Some(v) if !v.starts_with("--") => {
-                    values.insert(key.to_string(), it.next().unwrap().clone());
+                    values.push((key.to_string(), it.next().unwrap().clone()));
                 }
                 _ => flags.push(key.to_string()),
             }
@@ -54,7 +57,11 @@ impl Args {
     }
 
     fn get(&self, key: &str) -> Option<&str> {
-        self.values.get(key).map(|s| s.as_str())
+        self.values.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    fn get_all(&self, key: &str) -> Vec<&str> {
+        self.values.iter().filter(|(k, _)| k == key).map(|(_, v)| v.as_str()).collect()
     }
 
     fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
@@ -157,9 +164,21 @@ fn report_threads(requested: usize, effective: usize) {
     }
 }
 
+/// Steps between wall-clock checks when only `--checkpoint-secs` sets
+/// the cadence: small enough that a due checkpoint is at most a few
+/// hundred Θ(B·K) steps late, large enough that `Instant::now` noise
+/// never shows.
+const CKPT_SECS_PROBE_STEPS: u64 = 512;
+
 /// Drive a session over its remaining epochs, writing checkpoints to
-/// `--checkpoint <path>` at the `--checkpoint-every <steps>` cadence
-/// (0 = at epoch boundaries only, when a path is given).
+/// `--checkpoint <path>` on two independent cadences: every
+/// `--checkpoint-every <steps>` steps and/or every `--checkpoint-secs
+/// <secs>` of wall clock, whichever fires first (plus every epoch
+/// boundary).  With neither cadence flag, a given path writes at epoch
+/// boundaries only.  The wall clock is only consulted at step-chunk
+/// boundaries, so a secs-cadence write can be late by up to
+/// `min(checkpoint-every, CKPT_SECS_PROBE_STEPS)` steps — cadences are
+/// best-effort lower bounds, never mid-step interrupts.
 fn run_session(
     mut sess: TrainSession<'_>,
     split: &Split,
@@ -167,21 +186,38 @@ fn run_session(
 ) -> Result<TrainOutput> {
     let ckpt_path = args.get("checkpoint").map(PathBuf::from);
     let ckpt_every: u64 = args.get_parse("checkpoint-every", 0u64)?;
-    if ckpt_every > 0 && ckpt_path.is_none() {
-        bail!("--checkpoint-every requires --checkpoint <path>");
+    let ckpt_secs: u64 = args.get_parse("checkpoint-secs", 0u64)?;
+    if (ckpt_every > 0 || ckpt_secs > 0) && ckpt_path.is_none() {
+        bail!("--checkpoint-every/--checkpoint-secs require --checkpoint <path>");
     }
     let mut obs = if args.has("quiet") {
         ProgressObserver::quiet()
     } else {
         ProgressObserver::new(1000)
     };
+    // Epoch-chunk length: the step cadence when it is the only one;
+    // capped by the wall-clock probe when --checkpoint-secs needs the
+    // clock checked more often than --checkpoint-every steps.
+    let chunk = match (ckpt_every, ckpt_secs) {
+        (0, 0) => 0,
+        (e, 0) => e,
+        (0, _) => CKPT_SECS_PROBE_STEPS,
+        (e, _) => e.min(CKPT_SECS_PROBE_STEPS),
+    };
     let total_epochs = sess.config().epochs as u64;
+    let mut last_write = Instant::now();
+    let mut last_write_step = sess.steps();
     while sess.epochs_done() < total_epochs {
-        let chunk = if ckpt_path.is_some() { ckpt_every } else { 0 };
-        sess.run_epoch(&split.train, Some(&split.test), &mut obs, chunk)?;
+        let epoch_done = sess.run_epoch(&split.train, Some(&split.test), &mut obs, chunk)?;
         if let Some(p) = &ckpt_path {
-            std::fs::write(p, sess.checkpoint())
-                .with_context(|| format!("writing checkpoint {}", p.display()))?;
+            let due_steps = ckpt_every > 0 && sess.steps() - last_write_step >= ckpt_every;
+            let due_secs = ckpt_secs > 0 && last_write.elapsed().as_secs() >= ckpt_secs;
+            if epoch_done || due_steps || due_secs {
+                std::fs::write(p, sess.checkpoint())
+                    .with_context(|| format!("writing checkpoint {}", p.display()))?;
+                last_write = Instant::now();
+                last_write_step = sess.steps();
+            }
         }
     }
     Ok(sess.finish())
@@ -302,6 +338,125 @@ fn cmd_predict(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse one `--model name=path[:weight]` spec.  The weight suffix is
+/// recognized only when the text after the last `:` parses as a u32,
+/// so paths containing colons still load (with weight 1).
+fn parse_model_spec(spec: &str) -> Result<(String, String, u32)> {
+    let (name, rest) = spec
+        .split_once('=')
+        .with_context(|| format!("--model wants name=path[:weight], got {spec:?}"))?;
+    if name.is_empty() {
+        bail!("--model {spec:?}: empty model name");
+    }
+    let (path, weight) = match rest.rsplit_once(':') {
+        Some((p, w)) if !p.is_empty() && w.parse::<u32>().is_ok() => {
+            (p, w.parse::<u32>().expect("checked"))
+        }
+        _ => (rest, 1),
+    };
+    if weight == 0 {
+        bail!("--model {spec:?}: weight must be >= 1");
+    }
+    Ok((name.to_string(), path.to_string(), weight))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut scfg = ServeConfig::default();
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?;
+        let doc = TomlDoc::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        scfg.apply_toml(&doc)?;
+    }
+    if let Some(a) = args.get("addr") {
+        scfg.addr = a.to_string();
+    }
+    scfg.batch_max = args.get_parse("batch-max", scfg.batch_max)?;
+    scfg.queue_max = args.get_parse("queue-max", scfg.queue_max)?;
+    if let Some(s) = args.get("shed") {
+        scfg.shed =
+            ShedPolicy::parse(s).with_context(|| format!("bad --shed {s:?} (reject|oldest)"))?;
+    }
+    scfg.monitor_window = args.get_parse("monitor-window", scfg.monitor_window)?;
+    scfg.threads = args.get_parse("threads", scfg.threads)?;
+    scfg.seed = args.get_parse("seed", scfg.seed)?;
+    scfg.validate()?;
+
+    let specs = args.get_all("model");
+    if specs.is_empty() {
+        bail!("serve needs at least one --model name=path[:weight]");
+    }
+    let choice = match args.get("backend") {
+        Some(b) => BackendChoice::parse(b).with_context(|| format!("bad --backend {b:?}"))?,
+        None => BackendChoice::Native,
+    };
+    if choice != BackendChoice::Native {
+        eprintln!(
+            "[warn ] --backend {choice:?}: backends that route big batches to AOT artifacts \
+             answer with artifact arithmetic, so replies are no longer bit-identical across \
+             batch sizes (native keeps that guarantee)"
+        );
+    }
+    let mut registry = ModelRegistry::new(build_backend(choice)?, scfg.seed);
+    let mut arms = Vec::new();
+    for spec in specs {
+        let (name, path, weight) = parse_model_spec(spec)?;
+        let model = SvmModel::load(Path::new(&path))?;
+        let version = registry.insert(&name, model)?;
+        println!(
+            "[serve] loaded {name}@v{version} from {path} (weight {weight}, {} SVs)",
+            registry.n_svs_of(&name)?
+        );
+        arms.push((name, weight));
+    }
+    registry.set_route(RouteSpec::new(arms)?)?;
+    let effective = registry.set_threads(scfg.threads);
+    report_threads(scfg.threads, effective);
+
+    let listener = std::net::TcpListener::bind(&scfg.addr)
+        .with_context(|| format!("binding {}", scfg.addr))?;
+    println!(
+        "[serve] listening on {} | batch_max={} queue_max={} shed={} window={} seed={} \
+         (send 'shutdown' to stop)",
+        listener.local_addr()?,
+        scfg.batch_max,
+        scfg.queue_max,
+        scfg.shed.describe(),
+        scfg.monitor_window,
+        scfg.seed,
+    );
+    let opts = ServeOptions {
+        batch_max: scfg.batch_max,
+        queue_max: scfg.queue_max,
+        shed: scfg.shed,
+        monitor_window: scfg.monitor_window,
+    };
+    let report = serve::serve(listener, registry, &opts)?;
+    let mean_batch = if report.engine.batches > 0 {
+        report.engine.rows as f64 / report.engine.batches as f64
+    } else {
+        0.0
+    };
+    println!(
+        "[serve] done: {} connections | served {} | shed {} | {} batches (mean {:.2} rows) | \
+         low-margin {:.1}%",
+        report.connections,
+        report.engine.served,
+        report.engine.shed,
+        report.engine.batches,
+        mean_batch,
+        100.0 * report.drift.low_margin_fraction,
+    );
+    if let Some(acc) = report.drift.window_accuracy {
+        println!(
+            "[serve] feedback window: {:.2}% over {} labelled requests",
+            100.0 * acc,
+            report.drift.feedback_seen
+        );
+    }
+    Ok(())
+}
+
 fn cmd_experiment(args: &Args) -> Result<()> {
     let which = args.get("id").or_else(|| args.get("name")).unwrap_or("all");
     let opts = ExpOptions {
@@ -403,15 +558,28 @@ COMMANDS
                [--epochs N] [--seed N] [--eval-every N] [--config file.toml]
                [--save model.txt] [--test libsvm-path] [--quiet]
                [--checkpoint ckpt.txt] [--checkpoint-every STEPS]
-               [--resume ckpt.txt]
+               [--checkpoint-secs SECS] [--resume ckpt.txt]
                checkpoints capture ALL state (RNG, budget counters, the
                in-flight epoch): a resumed run is bit-identical to an
                uninterrupted one.  --resume reads config + backend from
                the checkpoint (same --dataset flags required; --epochs
-               may be raised to extend the run).
+               may be raised to extend the run).  --checkpoint-every
+               (steps) and --checkpoint-secs (wall clock) are
+               independent cadences: whichever fires first writes; the
+               clock is checked at step-chunk boundaries.
   evaluate     --model model.txt --dataset <...> [--scale F] [--backend B]
                [--threads N]
   predict      --model model.txt --input data.libsvm [--backend B] [--threads N]
+  serve        --model name=model.txt[:weight] [--model b=other.txt:1 ...]
+               [--addr host:port] [--batch-max N] [--queue-max N]
+               [--shed reject|oldest] [--monitor-window N] [--threads N]
+               [--seed N] [--backend B] [--config file.toml]
+               long-lived TCP line-protocol server: micro-batched
+               predict/decision, weighted deterministic A/B routing
+               across the named models (same key => same model),
+               swap-model hot reload, stats drift report; newline
+               commands, 'shutdown' stops the server.  TOML keys live
+               in a [serve] section; flags override the file.
   experiment   --id table1|table2|fig1|fig2|fig3|fig4|fig5|ablation|all
                [--scale F] [--threads N] [--out-dir DIR] [--backend B] [--seed N]
   tune         --dataset <...> [--c-grid 1,4,16] [--gamma-grid 0.1,1,10]
@@ -435,6 +603,7 @@ fn main() {
         "train" => cmd_train(&args),
         "evaluate" => cmd_evaluate(&args),
         "predict" => cmd_predict(&args),
+        "serve" => cmd_serve(&args),
         "experiment" => cmd_experiment(&args),
         "tune" => cmd_tune(&args),
         "artifacts" => cmd_artifacts(&args),

@@ -55,6 +55,26 @@ impl HybridBackend {
     pub fn xla(&self) -> Option<&XlaBackend> {
         self.xla.as_ref()
     }
+
+    /// The artifact batch path, when it applies: batches of ≥ 64 rows
+    /// with a matching AOT margins artifact.  The single routing
+    /// predicate behind `margins` / `margins_into` /
+    /// `margins_bounded_into` — one place to keep the threshold and
+    /// the artifact lookup in sync.
+    fn artifact_margins(
+        &mut self,
+        svs: &SvStore,
+        gamma: f64,
+        queries: &DenseMatrix,
+    ) -> Option<Vec<f64>> {
+        let xla = self.xla.as_mut()?;
+        if queries.rows() >= 64 && xla.registry().find_margins(svs.len(), svs.dim(), 256).is_some()
+        {
+            Some(xla.margins(svs, gamma, queries))
+        } else {
+            None
+        }
+    }
 }
 
 impl Backend for HybridBackend {
@@ -76,14 +96,41 @@ impl Backend for HybridBackend {
     fn margins(&mut self, svs: &SvStore, gamma: f64, queries: &DenseMatrix) -> Vec<f64> {
         // Batched: the artifact's blocked matmul wins; tiny batches and
         // out-of-lattice budgets fall back to native.
-        if let Some(xla) = &mut self.xla {
-            if queries.rows() >= 64
-                && xla.registry().find_margins(svs.len(), svs.dim(), 256).is_some()
-            {
-                return xla.margins(svs, gamma, queries);
-            }
+        if let Some(v) = self.artifact_margins(svs, gamma, queries) {
+            return v;
         }
         self.native.margins(svs, gamma, queries)
+    }
+
+    fn margins_into(&mut self, svs: &SvStore, gamma: f64, queries: &DenseMatrix, out: &mut [f64]) {
+        // Same routing as `margins`; the artifact path still returns an
+        // owned vector (PJRT owns the output literal), so only the
+        // native branch gets the zero-copy write.
+        if let Some(v) = self.artifact_margins(svs, gamma, queries) {
+            out.copy_from_slice(&v);
+            return;
+        }
+        self.native.margins_into(svs, gamma, queries, out)
+    }
+
+    fn margins_bounded_into(
+        &mut self,
+        svs: &SvStore,
+        gamma: f64,
+        queries: &DenseMatrix,
+        bounds: &crate::runtime::TileBounds,
+        out: &mut [f64],
+    ) {
+        // Same routing again; only the native branch can consume the
+        // prebuilt bounds.  NOTE: because big batches may take the
+        // artifact path, serving through hybrid trades the native
+        // path's load-invariant bit-parity for artifact speed (see
+        // serve module docs); `mmbsgd serve` defaults to native.
+        if let Some(v) = self.artifact_margins(svs, gamma, queries) {
+            out.copy_from_slice(&v);
+            return;
+        }
+        self.native.margins_bounded_into(svs, gamma, queries, bounds, out)
     }
 
     fn margin1(&mut self, svs: &SvStore, gamma: f64, x: &[f32]) -> f64 {

@@ -32,7 +32,7 @@ pub use artifacts::{ArtifactInfo, ArtifactRegistry};
 pub use hybrid::HybridBackend;
 pub use native::{margin1_native, NativeBackend};
 pub use pool::WorkerPool;
-pub use tile::TileScratch;
+pub use tile::{margin1_bounded, TileBounds, TileScratch};
 #[cfg(feature = "xla")]
 pub use xla_backend::XlaBackend;
 #[cfg(not(feature = "xla"))]
@@ -112,6 +112,36 @@ pub trait Backend {
 
     /// Decision values (no bias) for a batch of query rows.
     fn margins(&mut self, svs: &SvStore, gamma: f64, queries: &DenseMatrix) -> Vec<f64>;
+
+    /// [`Backend::margins`] into a caller-owned buffer (`out.len()`
+    /// must equal `queries.rows()`), so a long-lived server can reuse
+    /// one answer buffer instead of taking a fresh `Vec` per margins
+    /// pass (request packing still allocates on the caller's side).
+    /// The default copies through `margins` (source-compatible for
+    /// external backends); the native backend overrides it to write
+    /// tile-engine results straight into `out`.
+    fn margins_into(&mut self, svs: &SvStore, gamma: f64, queries: &DenseMatrix, out: &mut [f64]) {
+        out.copy_from_slice(&self.margins(svs, gamma, queries));
+    }
+
+    /// [`Backend::margins_into`] with caller-prebuilt [`TileBounds`] —
+    /// the serving batch path, where the store is frozen and the
+    /// far-skip bounds were computed once at model-load time.  The
+    /// contract on `bounds` is the tile engine's: built from exactly
+    /// this store state.  The default ignores the bounds and forwards
+    /// (backends whose kernels don't consume them stay correct); the
+    /// native backend overrides it to skip the per-call Θ(B) bound
+    /// rebuild.
+    fn margins_bounded_into(
+        &mut self,
+        svs: &SvStore,
+        gamma: f64,
+        queries: &DenseMatrix,
+        _bounds: &TileBounds,
+        out: &mut [f64],
+    ) {
+        self.margins_into(svs, gamma, queries, out);
+    }
 
     /// Decision value (no bias) for a single query.
     fn margin1(&mut self, svs: &SvStore, gamma: f64, x: &[f32]) -> f64;

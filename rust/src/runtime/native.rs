@@ -94,6 +94,21 @@ impl Backend for NativeBackend {
         out
     }
 
+    fn margins_into(&mut self, svs: &SvStore, gamma: f64, queries: &DenseMatrix, out: &mut [f64]) {
+        tile::margins_into(svs, gamma, queries, &mut self.scratch, &self.pool, out);
+    }
+
+    fn margins_bounded_into(
+        &mut self,
+        svs: &SvStore,
+        gamma: f64,
+        queries: &DenseMatrix,
+        bounds: &tile::TileBounds,
+        out: &mut [f64],
+    ) {
+        tile::margins_bounded_into(svs, gamma, queries, bounds, &self.pool, out);
+    }
+
     #[inline]
     fn margin1(&mut self, svs: &SvStore, gamma: f64, x: &[f32]) -> f64 {
         margin1_native(svs, gamma, x)

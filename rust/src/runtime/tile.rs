@@ -91,12 +91,61 @@ pub fn sv_tile_len(dim: usize) -> usize {
     (TILE_BYTES / (4 * dim)).clamp(16, 512)
 }
 
+/// Per-tile (min ‖x_j‖, max ‖x_j‖) norm bounds over an [`SvStore`] —
+/// the precondition data of the tile far-skip test.  The training batch
+/// paths rebuild them into backend scratch on every call (the store
+/// mutates between maintenance events); serving paths, whose store is
+/// frozen inside a predictor, build them **once** at load time and
+/// reuse them for every request, so even a single-query `decision1`
+/// gets the per-tile far-skip without paying the Θ(B) bound scan.
+///
+/// The bounds are valid only for the exact store state they were built
+/// from (they depend on the SV count and the norm cache); rebuild after
+/// any mutation.
+#[derive(Clone, Debug, Default)]
+pub struct TileBounds {
+    /// SV rows per tile ([`sv_tile_len`] of the store's dimension).
+    ts: usize,
+    lo_hi: Vec<(f64, f64)>,
+}
+
+impl TileBounds {
+    /// Bounds for the current state of `svs`.
+    pub fn of(svs: &SvStore) -> Self {
+        let mut b = Self::default();
+        b.rebuild(svs);
+        b
+    }
+
+    /// Recompute in place (keeps capacity — the backend scratch path).
+    pub fn rebuild(&mut self, svs: &SvStore) {
+        self.ts = sv_tile_len(svs.dim());
+        self.lo_hi.clear();
+        for tile in svs.norms2().chunks(self.ts) {
+            let mut lo = f64::INFINITY;
+            let mut hi = 0.0f64;
+            for &n2 in tile {
+                let s = n2.sqrt();
+                lo = lo.min(s);
+                hi = hi.max(s);
+            }
+            self.lo_hi.push((lo, hi));
+        }
+    }
+
+    /// Do these bounds describe a store of `n` SVs?  (Necessary, not
+    /// sufficient — the caller owns the no-mutation contract.)
+    fn covers(&self, n: usize) -> bool {
+        self.lo_hi.len() == if n == 0 { 0 } else { (n - 1) / self.ts.max(1) + 1 }
+    }
+}
+
 /// Reusable per-call scratch, owned by the backend so the steady-state
 /// batch paths allocate nothing.
 #[derive(Clone, Debug, Default)]
 pub struct TileScratch {
-    /// (min ‖x_j‖, max ‖x_j‖) per SV tile — the per-tile far-skip bound.
-    tile_bounds: Vec<(f64, f64)>,
+    /// Per-tile far-skip bounds, rebuilt for the store of each call.
+    bounds: TileBounds,
 }
 
 impl TileScratch {
@@ -124,22 +173,80 @@ pub fn margins_into(
         out.fill(0.0);
         return;
     }
-    let ts = sv_tile_len(svs.dim());
-    scratch.tile_bounds.clear();
-    for tile in svs.norms2().chunks(ts) {
-        let mut lo = f64::INFINITY;
-        let mut hi = 0.0f64;
-        for &n2 in tile {
-            let s = n2.sqrt();
-            lo = lo.min(s);
-            hi = hi.max(s);
-        }
-        scratch.tile_bounds.push((lo, hi));
-    }
-    let bounds = &scratch.tile_bounds[..];
+    scratch.bounds.rebuild(svs);
+    let bounds = &scratch.bounds;
     pool.run_chunks(out, TILE_Q, |row0, chunk| {
-        margins_rows(svs, gamma, queries, bounds, ts, row0, chunk);
+        margins_rows(svs, gamma, queries, bounds, row0, chunk);
     });
+}
+
+/// [`margins_into`] with caller-prebuilt [`TileBounds`] — the serving
+/// path, where the store is frozen and the bounds are computed once at
+/// model-load time instead of per request batch.
+pub fn margins_bounded_into(
+    svs: &SvStore,
+    gamma: f64,
+    queries: &DenseMatrix,
+    bounds: &TileBounds,
+    pool: &WorkerPool,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(out.len(), queries.rows());
+    debug_assert!(bounds.covers(svs.len()), "stale TileBounds for this store");
+    if out.is_empty() {
+        return;
+    }
+    if svs.is_empty() {
+        out.fill(0.0);
+        return;
+    }
+    pool.run_chunks(out, TILE_Q, |row0, chunk| {
+        margins_rows(svs, gamma, queries, bounds, row0, chunk);
+    });
+}
+
+/// Single-query margin with the per-tile far-skip: bit-identical to
+/// [`super::margin1_native`] (ascending-`j` accumulation; a tile is
+/// only skipped when its norm bound proves every lane past the scalar
+/// path's own cutoff — the same `margins_rows` test, slack and all),
+/// but whole far tiles cost one bound test instead of a norm-cached
+/// distance per SV.  This is
+/// the single-query serving path (`Predictor::decision1`): the bounds
+/// are prebuilt once for the frozen store, so a size-1 request enjoys
+/// the same far-skip treatment as a batch row.
+pub fn margin1_bounded(svs: &SvStore, gamma: f64, x: &[f32], bounds: &TileBounds) -> f64 {
+    let b = svs.len();
+    if b == 0 {
+        return 0.0;
+    }
+    debug_assert!(bounds.covers(b), "stale TileBounds for this store");
+    let n_q = sq_norm(x);
+    let s_q = n_q.sqrt();
+    let dim_eps = DOT_ABS_EPS * (1.0 + svs.dim() as f64 / 8.0);
+    let ts = bounds.ts;
+    let mut f = 0.0;
+    for (t, &(lo, hi)) in bounds.lo_hi.iter().enumerate() {
+        let j0 = t * ts;
+        let j1 = (j0 + ts).min(b);
+        let gap = if s_q < lo {
+            lo - s_q
+        } else if s_q > hi {
+            s_q - hi
+        } else {
+            0.0
+        };
+        if gamma * gap * gap > EXP_NEG_CUTOFF * FAR_TILE_SLACK + gamma * dim_eps * (n_q + hi * hi) {
+            continue;
+        }
+        for j in j0..j1 {
+            let d2 = sq_dist_cached(svs.point(j), svs.norm2(j), x, n_q);
+            let e = gamma * d2;
+            if e < EXP_NEG_CUTOFF {
+                f += svs.alpha(j) * (-e).exp();
+            }
+        }
+    }
+    f
 }
 
 /// Convenience wrapper: single-threaded tiled margins with local
@@ -156,12 +263,12 @@ fn margins_rows(
     svs: &SvStore,
     gamma: f64,
     queries: &DenseMatrix,
-    bounds: &[(f64, f64)],
-    ts: usize,
+    bounds: &TileBounds,
     row0: usize,
     out: &mut [f64],
 ) {
     let b = svs.len();
+    let ts = bounds.ts;
     // Rounding allowance of the computed γd² (see DOT_ABS_EPS): the
     // f32 dot's absolute error grows with both dimension and norms.
     let dim_eps = DOT_ABS_EPS * (1.0 + svs.dim() as f64 / 8.0);
@@ -181,7 +288,7 @@ fn margins_rows(
         let mut j0 = 0;
         while j0 < b {
             let j1 = (j0 + ts).min(b);
-            let (lo, hi) = bounds[t];
+            let (lo, hi) = bounds.lo_hi[t];
             for (k, acc) in out_blk.iter_mut().enumerate() {
                 // Per-tile fused cutoff: every lane in the tile has
                 // d ≥ gap, so γ·gap² conservatively past the cutoff
@@ -564,6 +671,48 @@ mod tests {
                 assert_eq!(batch[c].h, single.h);
                 assert_eq!(batch[c].a_z, single.a_z);
                 assert_eq!(batch[c].d2, single.d2);
+            }
+        }
+    }
+
+    #[test]
+    fn margin1_bounded_bit_matches_scalar() {
+        // Including the two-far-clusters shape where whole tiles are
+        // skippable — the skip must only drop sub-cutoff terms.
+        for &(b, d, spread) in &[(1usize, 3usize, 1.0f32), (65, 17, 1.0), (600, 8, 400.0)] {
+            let mut svs = SvStore::new(d);
+            let mut rng = Xoshiro256::new(b as u64 + 3);
+            for j in 0..b {
+                let base = if j % 2 == 0 { 0.0 } else { spread };
+                let x: Vec<f32> =
+                    (0..d).map(|_| base + rng.next_gaussian() as f32 * 0.3).collect();
+                svs.push(&x, 0.2 + rng.next_f64());
+            }
+            let bounds = TileBounds::of(&svs);
+            let q = random_queries(23, d, 77);
+            for r in 0..q.rows() {
+                let got = margin1_bounded(&svs, 0.5, q.row(r), &bounds);
+                let want = margin1_native(&svs, 0.5, q.row(r));
+                assert_eq!(got.to_bits(), want.to_bits(), "B={b} d={d} row {r}");
+            }
+        }
+        // empty store
+        let svs = SvStore::new(4);
+        let bounds = TileBounds::of(&svs);
+        assert_eq!(margin1_bounded(&svs, 1.0, &[0.0; 4], &bounds), 0.0);
+    }
+
+    #[test]
+    fn margins_bounded_into_matches_margins() {
+        let svs = random_store(130, 7, 21);
+        let q = random_queries(41, 7, 22);
+        let bounds = TileBounds::of(&svs);
+        let want = margins(&svs, 0.9, &q);
+        let mut got = vec![0.0; q.rows()];
+        for threads in [1usize, 3] {
+            margins_bounded_into(&svs, 0.9, &q, &bounds, &WorkerPool::new(threads), &mut got);
+            for (a, b) in got.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "threads {threads}");
             }
         }
     }

@@ -1,0 +1,433 @@
+//! Micro-batching: coalesce pending single-query requests into one
+//! tiled margins pass per routed model.
+//!
+//! The tile engine made batched [`crate::runtime::Backend::margins`]
+//! the fastest path in the codebase (EXPERIMENTS.md §Perf) — but live
+//! traffic arrives one query at a time.  [`BatchEngine`] closes the
+//! gap: requests are routed and admitted into a **bounded** queue as
+//! they arrive ([`BatchEngine::submit`]), and a
+//! [`BatchEngine::flush`] groups everything pending by routed model,
+//! packs each group into one [`DenseMatrix`], and answers it with a
+//! single [`crate::serve::ModelRegistry::decision_batch_into`] pass of
+//! at most `batch_max` rows.
+//!
+//! **Overload is explicit, not emergent.**  When the queue holds
+//! `queue_max` requests, [`ShedPolicy`] decides who loses:
+//! [`ShedPolicy::Reject`] refuses the *new* request up front
+//! ([`ServeError::QueueFull`] — tail drop: oldest waiters keep their
+//! slot), while [`ShedPolicy::Oldest`] drops the *oldest* waiter with
+//! [`ServeError::Shed`] (head drop: freshest traffic wins, the right
+//! policy when stale answers are worthless).  Either way the failure is
+//! a typed per-request error delivered through the normal reply path —
+//! nothing panics, nothing blocks unboundedly.
+//!
+//! **Bit-parity.**  A batched answer is bit-identical to the
+//! one-at-a-time [`crate::serve::Predictor::decision1`] for the same
+//! model: both reduce to the tile engine's ascending-SV accumulation
+//! plus the same final bias add (`rust/tests/serve_engine.rs` pins
+//! B ∈ {1, 7, 64}).
+
+use super::registry::ModelRegistry;
+use crate::data::DenseMatrix;
+use crate::error::ServeError;
+use std::collections::VecDeque;
+
+/// What to do with a request that finds the queue full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Refuse the new request ([`ServeError::QueueFull`]); queued
+    /// requests keep their slots (tail drop).
+    Reject,
+    /// Drop the oldest queued request ([`ServeError::Shed`]) and admit
+    /// the new one (head drop).
+    Oldest,
+}
+
+impl ShedPolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "reject" => Some(Self::Reject),
+            "oldest" => Some(Self::Oldest),
+            _ => None,
+        }
+    }
+
+    pub fn describe(&self) -> &'static str {
+        match self {
+            Self::Reject => "reject",
+            Self::Oldest => "oldest",
+        }
+    }
+}
+
+/// One answered request: the decision value and which model (at which
+/// version) produced it — the provenance half of every reply.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Decision {
+    pub value: f64,
+    pub model: String,
+    pub version: u64,
+}
+
+/// A queued request, already routed at admission time (routing is a
+/// pure hash; doing it in `submit` lets `flush` group by model without
+/// re-touching the registry's route table mid-batch).
+struct Pending {
+    id: u64,
+    model: String,
+    x: Vec<f32>,
+}
+
+/// Engine counters (reported by the `stats` protocol verb).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    /// Requests admitted into the queue.
+    pub submitted: u64,
+    /// Requests answered with a decision value.
+    pub served: u64,
+    /// Requests dropped by [`ShedPolicy::Oldest`] or refused by
+    /// [`ShedPolicy::Reject`].
+    pub shed: u64,
+    /// Margins passes run.
+    pub batches: u64,
+    /// Total rows across all passes (`rows / batches` = mean
+    /// micro-batch size, the number that says whether coalescing is
+    /// actually happening).
+    pub rows: u64,
+    /// High-water mark of the pending queue.
+    pub queue_peak: usize,
+}
+
+/// The micro-batcher; see the [module docs](self).
+pub struct BatchEngine {
+    batch_max: usize,
+    queue_max: usize,
+    shed: ShedPolicy,
+    queue: VecDeque<Pending>,
+    /// Requests resolved outside a flush (shed victims, parked submit
+    /// failures), kept here so the next [`BatchEngine::flush`] delivers
+    /// them through the same ordered reply path as computed answers.
+    done: Vec<(u64, Result<Decision, ServeError>)>,
+    /// Answer-buffer scratch, reused across flushes (the margins pass
+    /// writes into it; per-request packing still owns its rows).
+    ans: Vec<f64>,
+    next_id: u64,
+    stats: EngineStats,
+}
+
+impl BatchEngine {
+    /// `batch_max` caps rows per margins pass (≥ 1); `queue_max` bounds
+    /// admitted-but-unanswered requests (≥ 1).
+    pub fn new(batch_max: usize, queue_max: usize, shed: ShedPolicy) -> Self {
+        Self {
+            batch_max: batch_max.max(1),
+            queue_max: queue_max.max(1),
+            shed,
+            queue: VecDeque::new(),
+            done: Vec::new(),
+            ans: Vec::new(),
+            next_id: 0,
+            stats: EngineStats::default(),
+        }
+    }
+
+    /// Route and admit one query.  `key` drives the registry's
+    /// deterministic A/B routing; unkeyed requests route on their
+    /// request id (stable within a run).  Shape errors and
+    /// [`ShedPolicy::Reject`] overflow fail *this* call; under
+    /// [`ShedPolicy::Oldest`] overflow the displaced request's
+    /// [`ServeError::Shed`] is delivered by the next flush.  Returns
+    /// the request id whose answer the next flush will carry.
+    pub fn submit(
+        &mut self,
+        registry: &ModelRegistry,
+        key: Option<&str>,
+        x: Vec<f32>,
+    ) -> Result<u64, ServeError> {
+        let id = self.next_id;
+        let model = match key {
+            Some(k) => registry.route_for(k.as_bytes())?,
+            None => registry.route_for(&id.to_le_bytes())?,
+        };
+        let dim = registry.dim_of(&model)?;
+        if x.len() != dim {
+            return Err(crate::error::TrainError::DimMismatch { expected: dim, got: x.len() }
+                .into());
+        }
+        if self.queue.len() >= self.queue_max {
+            match self.shed {
+                ShedPolicy::Reject => {
+                    self.stats.shed += 1;
+                    return Err(ServeError::QueueFull { limit: self.queue_max });
+                }
+                ShedPolicy::Oldest => {
+                    // pop cannot fail: queue_max >= 1 and the queue is full
+                    if let Some(old) = self.queue.pop_front() {
+                        self.stats.shed += 1;
+                        self.done.push((old.id, Err(ServeError::Shed)));
+                    }
+                }
+            }
+        }
+        self.next_id += 1;
+        self.queue.push_back(Pending { id, model, x });
+        self.stats.submitted += 1;
+        self.stats.queue_peak = self.stats.queue_peak.max(self.queue.len());
+        Ok(id)
+    }
+
+    /// Park a request-level failure as a completed result with its own
+    /// request id, delivered by the next flush in submission order.
+    /// The TCP server uses this for failed submits: replying out of
+    /// band would reorder a pipelining client's replies relative to
+    /// requests still waiting in the queue.
+    pub fn park_error(&mut self, e: ServeError) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.done.push((id, Err(e)));
+        id
+    }
+
+    /// Requests currently pending.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats
+    }
+
+    /// Answer everything pending: group the queue by routed model
+    /// (first-appearance order), run one margins pass of at most
+    /// `batch_max` rows per group chunk, and return every resolved
+    /// request — computed answers and parked shed errors — sorted by
+    /// request id, i.e. in submission order (what keeps per-connection
+    /// replies FIFO).
+    pub fn flush(
+        &mut self,
+        registry: &mut ModelRegistry,
+    ) -> Vec<(u64, Result<Decision, ServeError>)> {
+        let mut out = std::mem::take(&mut self.done);
+        // One linear drain groups the queue by routed model in
+        // first-appearance order (arrival order within each group);
+        // the model count is small, so the inner find is cheap — and
+        // nothing here is O(queue²) even when A/B traffic interleaves.
+        let mut groups: Vec<(String, Vec<Pending>)> = Vec::new();
+        for p in self.queue.drain(..) {
+            match groups.iter_mut().find(|(m, _)| *m == p.model) {
+                Some((_, g)) => g.push(p),
+                None => {
+                    let model = p.model.clone();
+                    groups.push((model, vec![p]));
+                }
+            }
+        }
+        for (model, group) in groups {
+            let (version, dim) = match (registry.version_of(&model), registry.dim_of(&model)) {
+                (Ok(v), Ok(d)) => (v, d),
+                (Err(e), _) | (_, Err(e)) => {
+                    // model evicted between submit and flush: fail the
+                    // group's requests, not the engine
+                    for p in group {
+                        out.push((p.id, Err(e.clone())));
+                    }
+                    continue;
+                }
+            };
+            // A swap may have changed the model's dimension since a
+            // request was admitted: rows that no longer fit fail with
+            // a typed error instead of poisoning (or panicking) the
+            // packed matrix.
+            let mut fitting: Vec<Pending> = Vec::with_capacity(group.len());
+            for p in group {
+                if p.x.len() == dim {
+                    fitting.push(p);
+                } else {
+                    let e = crate::error::TrainError::DimMismatch { expected: dim, got: p.x.len() };
+                    out.push((p.id, Err(e.into())));
+                }
+            }
+            for chunk in fitting.chunks(self.batch_max) {
+                let mut flat: Vec<f32> = Vec::with_capacity(chunk.len() * dim);
+                for p in chunk {
+                    flat.extend_from_slice(&p.x);
+                }
+                let queries = DenseMatrix::from_vec(flat, chunk.len(), dim);
+                self.ans.clear();
+                self.ans.resize(chunk.len(), 0.0);
+                match registry.decision_batch_into(&model, &queries, &mut self.ans) {
+                    Ok(()) => {
+                        self.stats.batches += 1;
+                        self.stats.rows += chunk.len() as u64;
+                        self.stats.served += chunk.len() as u64;
+                        for (p, &value) in chunk.iter().zip(self.ans.iter()) {
+                            let d = Decision { value, model: model.clone(), version };
+                            out.push((p.id, Ok(d)));
+                        }
+                    }
+                    Err(e) => {
+                        for p in chunk {
+                            out.push((p.id, Err(e.clone())));
+                        }
+                    }
+                }
+            }
+        }
+        out.sort_by_key(|(id, _)| *id);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SvmModel;
+    use crate::runtime::NativeBackend;
+    use crate::serve::RouteSpec;
+
+    fn registry(names: &[&str]) -> ModelRegistry {
+        let mut reg = ModelRegistry::new(Box::new(NativeBackend::new()), 3);
+        for (i, name) in names.iter().enumerate() {
+            let mut rng = crate::rng::Xoshiro256::new(i as u64 + 11);
+            let mut m = SvmModel::new(3, 1.1);
+            for _ in 0..12 {
+                let x: Vec<f32> = (0..3).map(|_| rng.next_gaussian() as f32).collect();
+                m.svs.push(&x, rng.next_f64() - 0.5);
+            }
+            m.bias = 0.02;
+            reg.insert(name, m).unwrap();
+        }
+        reg
+    }
+
+    fn q(v: f32) -> Vec<f32> {
+        vec![v, -v, 0.5 * v]
+    }
+
+    #[test]
+    fn flush_answers_in_submission_order() {
+        let mut reg = registry(&["a", "b"]);
+        let mut eng = BatchEngine::new(8, 64, ShedPolicy::Reject);
+        let ids: Vec<u64> = (0..10)
+            .map(|k| eng.submit(&reg, Some(&format!("key-{k}")), q(k as f32 * 0.1)).unwrap())
+            .collect();
+        let res = eng.flush(&mut reg);
+        assert_eq!(res.len(), 10);
+        let got: Vec<u64> = res.iter().map(|(id, _)| *id).collect();
+        assert_eq!(got, ids);
+        for (_, r) in &res {
+            let d = r.as_ref().unwrap();
+            assert!(d.value.is_finite());
+            assert!(d.model == "a" || d.model == "b");
+            assert_eq!(d.version, 1);
+        }
+        assert_eq!(eng.queued(), 0);
+        let s = eng.stats();
+        assert_eq!(s.served, 10);
+        assert_eq!(s.rows, 10);
+        assert!(s.batches >= 2, "two models => at least two passes, got {}", s.batches);
+    }
+
+    #[test]
+    fn batch_max_splits_oversized_groups() {
+        let mut reg = registry(&["solo"]);
+        reg.set_route(RouteSpec::single("solo")).unwrap();
+        let mut eng = BatchEngine::new(4, 64, ShedPolicy::Reject);
+        for k in 0..10 {
+            eng.submit(&reg, None, q(k as f32)).unwrap();
+        }
+        let res = eng.flush(&mut reg);
+        assert_eq!(res.len(), 10);
+        // 10 rows at batch_max=4 => 3 passes (4+4+2)
+        assert_eq!(eng.stats().batches, 3);
+        assert_eq!(eng.stats().rows, 10);
+    }
+
+    #[test]
+    fn reject_policy_refuses_new_requests() {
+        let mut reg = registry(&["solo"]);
+        let mut eng = BatchEngine::new(8, 3, ShedPolicy::Reject);
+        for k in 0..3 {
+            eng.submit(&reg, None, q(k as f32)).unwrap();
+        }
+        assert_eq!(
+            eng.submit(&reg, None, q(9.0)).unwrap_err(),
+            ServeError::QueueFull { limit: 3 }
+        );
+        assert_eq!(eng.stats().shed, 1);
+        // earlier requests kept their slots and all get answers
+        let res = eng.flush(&mut reg);
+        assert_eq!(res.len(), 3);
+        assert!(res.iter().all(|(_, r)| r.is_ok()));
+    }
+
+    #[test]
+    fn oldest_policy_sheds_the_head() {
+        let mut reg = registry(&["solo"]);
+        let mut eng = BatchEngine::new(8, 3, ShedPolicy::Oldest);
+        let first = eng.submit(&reg, None, q(0.0)).unwrap();
+        for k in 1..3 {
+            eng.submit(&reg, None, q(k as f32)).unwrap();
+        }
+        let newest = eng.submit(&reg, None, q(3.0)).unwrap();
+        assert_eq!(eng.queued(), 3);
+        let res = eng.flush(&mut reg);
+        assert_eq!(res.len(), 4);
+        // submission order preserved, oldest carries the shed error
+        assert_eq!(res[0].0, first);
+        assert_eq!(res[0].1, Err(ServeError::Shed));
+        assert!(res.iter().skip(1).all(|(_, r)| r.is_ok()));
+        assert_eq!(res[3].0, newest);
+        assert_eq!(eng.stats().shed, 1);
+        assert_eq!(eng.stats().served, 3);
+    }
+
+    #[test]
+    fn dim_change_via_swap_fails_typed_not_panicking() {
+        let mut reg = registry(&["solo"]);
+        let mut eng = BatchEngine::new(8, 8, ShedPolicy::Reject);
+        eng.submit(&reg, None, q(1.0)).unwrap(); // validated against dim 3
+        // hot-swap to a 5-dimensional model while the request is queued
+        let mut m5 = SvmModel::new(5, 1.1);
+        m5.svs.push(&[0.1, 0.2, 0.3, 0.4, 0.5], 0.4);
+        reg.swap("solo", m5).unwrap();
+        let res = eng.flush(&mut reg);
+        assert_eq!(res.len(), 1);
+        assert!(matches!(
+            res[0].1,
+            Err(ServeError::Model(crate::error::TrainError::DimMismatch {
+                expected: 5,
+                got: 3
+            }))
+        ));
+    }
+
+    #[test]
+    fn park_error_keeps_submission_order() {
+        let mut reg = registry(&["solo"]);
+        let mut eng = BatchEngine::new(8, 8, ShedPolicy::Reject);
+        let a = eng.submit(&reg, None, q(1.0)).unwrap();
+        let b = eng.park_error(ServeError::BadRequest("nope".into()));
+        let c = eng.submit(&reg, None, q(2.0)).unwrap();
+        let res = eng.flush(&mut reg);
+        let ids: Vec<u64> = res.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![a, b, c]);
+        assert!(res[0].1.is_ok());
+        assert!(matches!(res[1].1, Err(ServeError::BadRequest(_))));
+        assert!(res[2].1.is_ok());
+    }
+
+    #[test]
+    fn dim_mismatch_fails_only_that_request() {
+        let mut reg = registry(&["solo"]);
+        let mut eng = BatchEngine::new(8, 8, ShedPolicy::Reject);
+        eng.submit(&reg, None, q(1.0)).unwrap();
+        assert!(matches!(
+            eng.submit(&reg, None, vec![0.0; 7]).unwrap_err(),
+            ServeError::Model(crate::error::TrainError::DimMismatch { expected: 3, got: 7 })
+        ));
+        let res = eng.flush(&mut reg);
+        assert_eq!(res.len(), 1);
+        assert!(res[0].1.is_ok());
+    }
+}

@@ -1,16 +1,37 @@
-//! Serving: a batched prediction handle over a trained (or loaded)
-//! model.
+//! Serving subsystem: from a trained model to live traffic.
 //!
-//! [`Predictor`] is the deployment-side counterpart of
-//! [`crate::solver::session::TrainSession`]: it takes ownership of an
-//! [`SvmModel`], folds the lazy coefficient scale once, keeps the
-//! per-SV `‖x‖²` norm cache warm (rebuilt on load, maintained by the
-//! store), and routes every request through [`Backend::margins`] — the
-//! blocked kernel-tile engine on the native/hybrid backends (see
-//! [`crate::runtime::tile`]), optionally sharded across
-//! [`Predictor::set_threads`] workers with bit-identical results.  All
-//! entry points return typed [`TrainError`]s; nothing in the serving
-//! path panics on user-supplied models or queries.
+//! Four layers, each usable on its own:
+//!
+//! * [`Predictor`] — a single-model serving handle (model + backend,
+//!   scale folded once, batched margins).  The deployment-side
+//!   counterpart of [`crate::solver::session::TrainSession`].
+//! * [`ModelRegistry`] — many named, versioned models over **one**
+//!   shared backend + worker pool, with deterministic weighted A/B
+//!   routing ([`RouteSpec`]: seeded hash on the request key, no `rand`,
+//!   same key ⇒ same model on every run and every thread).
+//! * [`BatchEngine`] — a micro-batcher: pending single-query requests
+//!   coalesce into one [`crate::data::DenseMatrix`] per routed model and
+//!   are answered by a single tiled [`crate::runtime::Backend::margins`]
+//!   pass, with a bounded queue and an explicit load-shedding policy
+//!   ([`ShedPolicy`]).  On the native backend (the serving default)
+//!   batched answers are **bit-identical** to one-at-a-time
+//!   [`Predictor::decision1`] calls — same ascending-SV accumulation as
+//!   the tile engine (`rust/tests/serve_engine.rs`); backends that
+//!   route big batches to AOT artifacts (hybrid/XLA) trade that
+//!   load-invariant parity for artifact speed.
+//! * [`proto`] — a std-only newline-delimited TCP protocol
+//!   (`predict` / `decision` / `feedback` / `stats` / `swap-model` /
+//!   `shutdown`) over `std::net::TcpListener` and scoped threads,
+//!   driving the engine; `mmbsgd serve` is a thin CLI wrapper.
+//!
+//! [`Monitor`] watches served traffic for drift: a rolling
+//! decision-margin histogram plus a label-feedback accuracy window that
+//! feeds the same [`crate::solver::bsgd::EvalPoint`] history the
+//! training loop records.
+//!
+//! Every request-path failure is a typed [`ServeError`] scoped to that
+//! request — a malformed line or a mismatched dimension never takes
+//! down the queue, the connection, or the process.
 //!
 //! ```
 //! use mmbsgd::prelude::*;
@@ -26,15 +47,43 @@
 //! assert!(labels.iter().all(|&y| y == 1.0 || y == -1.0));
 //! ```
 
+mod batch;
+mod monitor;
+pub mod proto;
+mod registry;
+
+pub use batch::{BatchEngine, Decision, EngineStats, ShedPolicy};
+pub use monitor::{DriftReport, Monitor, MARGIN_BINS};
+pub use proto::{serve, Command, ServeOptions, ServeReport};
+pub use registry::{ModelRegistry, ModelStatus, RouteArm, RouteSpec};
+
+pub use crate::error::ServeError;
+
 use crate::data::{Dataset, DenseMatrix};
 use crate::error::TrainError;
 use crate::model::SvmModel;
-use crate::runtime::{Backend, NativeBackend};
+use crate::runtime::{margin1_bounded, Backend, NativeBackend, TileBounds};
+
+/// Validate a model for serving (a loaded model file is user input) —
+/// shared by [`Predictor`] and [`ModelRegistry`].
+fn validate_model(model: &SvmModel) -> Result<(), TrainError> {
+    if !(model.gamma > 0.0 && model.gamma.is_finite()) {
+        return Err(TrainError::InvalidConfig {
+            field: "gamma",
+            message: format!("model gamma must be positive, got {}", model.gamma),
+        });
+    }
+    Ok(())
+}
 
 /// A serving handle: model + backend, shape-checked batched inference.
 pub struct Predictor {
     model: SvmModel,
     backend: Box<dyn Backend>,
+    /// Per-tile far-skip bounds, built once — the store is frozen for
+    /// the lifetime of the handle, so even single-query requests get
+    /// the tile engine's far-skip without a per-call Θ(B) bound scan.
+    bounds: TileBounds,
 }
 
 impl Predictor {
@@ -45,14 +94,10 @@ impl Predictor {
     /// model file is user input) and folds the lazy coefficient scale
     /// so request-time margins touch plain stored coefficients.
     pub fn new(mut model: SvmModel, backend: Box<dyn Backend>) -> Result<Self, TrainError> {
-        if !(model.gamma > 0.0 && model.gamma.is_finite()) {
-            return Err(TrainError::InvalidConfig {
-                field: "gamma",
-                message: format!("model gamma must be positive, got {}", model.gamma),
-            });
-        }
+        validate_model(&model)?;
         model.svs.fold_scale();
-        Ok(Self { model, backend })
+        let bounds = TileBounds::of(&model.svs);
+        Ok(Self { model, backend, bounds })
     }
 
     /// Convenience: serve through the pure-rust backend.
@@ -91,10 +136,14 @@ impl Predictor {
     }
 
     /// Decision values `f(x) = Σ α_j k(x_j, x) + b` for a batch of
-    /// query rows, through the backend's batched margins.
+    /// query rows, through the backend's batched margins over the
+    /// bounds prebuilt at load time (the store is frozen, so no
+    /// per-call bound rebuild).
     pub fn decision_batch(&mut self, queries: &DenseMatrix) -> Result<Vec<f64>, TrainError> {
         self.check_dim(queries.cols())?;
-        let mut out = self.backend.margins(&self.model.svs, self.model.gamma, queries);
+        let mut out = vec![0.0; queries.rows()];
+        let (svs, gamma) = (&self.model.svs, self.model.gamma);
+        self.backend.margins_bounded_into(svs, gamma, queries, &self.bounds, &mut out);
         for f in &mut out {
             *f += self.model.bias;
         }
@@ -110,10 +159,14 @@ impl Predictor {
             .collect())
     }
 
-    /// Decision value for a single query.
+    /// Decision value for a single query — the tiled single-row path
+    /// ([`margin1_bounded`] over the prebuilt bounds): bit-identical to
+    /// a batch row, with the same per-tile far-skip, so single-query
+    /// serving does not regress vs [`Predictor::decision_batch`] of
+    /// size 1.
     pub fn decision1(&mut self, x: &[f32]) -> Result<f64, TrainError> {
         self.check_dim(x.len())?;
-        Ok(self.backend.margin1(&self.model.svs, self.model.gamma, x) + self.model.bias)
+        Ok(margin1_bounded(&self.model.svs, self.model.gamma, x, &self.bounds) + self.model.bias)
     }
 
     /// Predicted ±1 label for a single query.
@@ -166,6 +219,21 @@ mod tests {
         let served = p.decision_batch(&split.test.x).unwrap();
         for (a, b) in served.iter().zip(&reference) {
             assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn decision1_bit_matches_batch_row() {
+        // The tiled single-query path must agree with a batch of size 1
+        // (and with the model's scalar decision) bit-for-bit.
+        let (model, split) = trained();
+        let mut p = Predictor::native(model).unwrap();
+        for i in 0..split.test.len().min(32) {
+            let x = split.test.sample(i).x;
+            let single = p.decision1(x).unwrap();
+            let row = DenseMatrix::from_rows(vec![x.to_vec()]);
+            let batched = p.decision_batch(&row).unwrap()[0];
+            assert_eq!(single.to_bits(), batched.to_bits(), "row {i}");
         }
     }
 

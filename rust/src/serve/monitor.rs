@@ -1,0 +1,219 @@
+//! Drift monitoring for served traffic.
+//!
+//! A deployed budget SVM degrades silently: the input distribution
+//! shifts, the frozen support vectors stop covering it, and decision
+//! margins collapse toward the boundary long before anyone re-labels
+//! data.  [`Monitor`] watches both signals on the live request stream:
+//!
+//! * a **rolling decision-margin histogram** — every served decision
+//!   `f(x)` lands in one of [`MARGIN_BINS`] fixed `|f|` bins (width
+//!   0.25, last bin open-ended).  A healthy tuned model concentrates
+//!   mass well away from bin 0; growing
+//!   [`Monitor::low_margin_fraction`] is the earliest drift tell,
+//!   available with **zero** labels.
+//! * a **label-feedback accuracy window** — when callers later learn
+//!   ground truth (the `feedback` protocol verb), the hit/miss stream
+//!   feeds a bounded window, and every `window/2` feedbacks the monitor
+//!   appends an [`EvalPoint`] to the same history format the training
+//!   loop's eval machinery records (`TrainOutput::history`), so
+//!   training curves and serving curves plot on one axis.
+//!
+//! The monitor is passive arithmetic on served values — it never
+//! touches the model or the request path.
+
+use crate::solver::bsgd::EvalPoint;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Number of `|decision|` histogram bins (width 0.25; the last bin
+/// collects everything ≥ 3.75).
+pub const MARGIN_BINS: usize = 16;
+const BIN_WIDTH: f64 = 0.25;
+
+/// A point-in-time drift summary (the `stats` protocol verb's payload).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DriftReport {
+    /// Decisions recorded.
+    pub served: u64,
+    /// Fraction of served decisions with `|f| <` one bin width — mass
+    /// piling up against the boundary.
+    pub low_margin_fraction: f64,
+    /// Mean `|f|` over everything served.
+    pub mean_abs_margin: f64,
+    /// Accuracy over the current feedback window (`None` until the
+    /// first feedback arrives).
+    pub window_accuracy: Option<f64>,
+    /// Labelled feedbacks seen.
+    pub feedback_seen: u64,
+}
+
+/// Rolling margin histogram + label-feedback accuracy window; see the
+/// [module docs](self).
+pub struct Monitor {
+    bins: [u64; MARGIN_BINS],
+    served: u64,
+    abs_sum: f64,
+    window: VecDeque<bool>,
+    window_cap: usize,
+    feedback_seen: u64,
+    history: Vec<EvalPoint>,
+    started: Instant,
+}
+
+impl Monitor {
+    /// `window` bounds the feedback accuracy window (0 is clamped to 1).
+    pub fn new(window: usize) -> Self {
+        Self {
+            bins: [0; MARGIN_BINS],
+            served: 0,
+            abs_sum: 0.0,
+            window: VecDeque::new(),
+            window_cap: window.max(1),
+            feedback_seen: 0,
+            history: Vec::new(),
+            started: Instant::now(),
+        }
+    }
+
+    /// Record one served decision value (histogram + counters).
+    pub fn record(&mut self, decision: f64) {
+        let b = if decision.is_finite() {
+            ((decision.abs() / BIN_WIDTH) as usize).min(MARGIN_BINS - 1)
+        } else {
+            MARGIN_BINS - 1
+        };
+        self.bins[b] += 1;
+        self.served += 1;
+        if decision.is_finite() {
+            self.abs_sum += decision.abs();
+        }
+    }
+
+    /// Record one labelled feedback: was the served `decision` correct
+    /// for ground-truth label `y` (±1)?  Returns the hit/miss verdict.
+    /// Every `window/2` feedbacks the rolling accuracy is snapshotted
+    /// into the eval history (`n_svs` is the serving model's SV count,
+    /// so the point is plottable next to training-time curves).
+    pub fn feedback(&mut self, decision: f64, y: f32, n_svs: usize) -> bool {
+        let predicted = if decision >= 0.0 { 1.0 } else { -1.0 };
+        let hit = predicted == y;
+        if self.window.len() == self.window_cap {
+            self.window.pop_front();
+        }
+        self.window.push_back(hit);
+        self.feedback_seen += 1;
+        let cadence = (self.window_cap / 2).max(1) as u64;
+        if self.feedback_seen % cadence == 0 {
+            let acc = self.window_accuracy().unwrap_or(0.0);
+            self.history.push(EvalPoint {
+                step: self.feedback_seen,
+                accuracy: acc,
+                n_svs,
+                elapsed_s: self.started.elapsed().as_secs_f64(),
+            });
+        }
+        hit
+    }
+
+    /// Accuracy over the current window (`None` before any feedback).
+    pub fn window_accuracy(&self) -> Option<f64> {
+        if self.window.is_empty() {
+            return None;
+        }
+        let hits = self.window.iter().filter(|&&h| h).count();
+        Some(hits as f64 / self.window.len() as f64)
+    }
+
+    /// Fraction of served decisions in the lowest `|f|` bin.
+    pub fn low_margin_fraction(&self) -> f64 {
+        if self.served == 0 {
+            return 0.0;
+        }
+        self.bins[0] as f64 / self.served as f64
+    }
+
+    /// The raw histogram (bin `i` counts `|f| ∈ [0.25·i, 0.25·(i+1))`,
+    /// last bin open-ended).
+    pub fn histogram(&self) -> &[u64; MARGIN_BINS] {
+        &self.bins
+    }
+
+    /// Accuracy snapshots in training-eval format ([`EvalPoint`]),
+    /// appended every `window/2` feedbacks.
+    pub fn history(&self) -> &[EvalPoint] {
+        &self.history
+    }
+
+    /// Current drift summary.
+    pub fn report(&self) -> DriftReport {
+        DriftReport {
+            served: self.served,
+            low_margin_fraction: self.low_margin_fraction(),
+            mean_abs_margin: if self.served == 0 { 0.0 } else { self.abs_sum / self.served as f64 },
+            window_accuracy: self.window_accuracy(),
+            feedback_seen: self.feedback_seen,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_bins_by_abs_margin() {
+        let mut m = Monitor::new(8);
+        m.record(0.1); // bin 0
+        m.record(-0.1); // bin 0
+        m.record(0.6); // bin 2
+        m.record(100.0); // last bin
+        m.record(f64::NAN); // last bin, excluded from the mean
+        assert_eq!(m.histogram()[0], 2);
+        assert_eq!(m.histogram()[2], 1);
+        assert_eq!(m.histogram()[MARGIN_BINS - 1], 2);
+        let r = m.report();
+        assert_eq!(r.served, 5);
+        assert!((r.low_margin_fraction - 0.4).abs() < 1e-12);
+        assert!((r.mean_abs_margin - (0.1 + 0.1 + 0.6 + 100.0) / 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn feedback_window_rolls() {
+        let mut m = Monitor::new(4);
+        assert_eq!(m.window_accuracy(), None);
+        // 4 hits, then 4 misses: window of 4 forgets the hits
+        for _ in 0..4 {
+            assert!(m.feedback(1.0, 1.0, 10));
+        }
+        assert_eq!(m.window_accuracy(), Some(1.0));
+        for _ in 0..4 {
+            assert!(!m.feedback(1.0, -1.0, 10));
+        }
+        assert_eq!(m.window_accuracy(), Some(0.0));
+        let r = m.report();
+        assert_eq!(r.feedback_seen, 8);
+        assert_eq!(r.window_accuracy, Some(0.0));
+    }
+
+    #[test]
+    fn history_snapshots_at_half_window_cadence() {
+        let mut m = Monitor::new(4);
+        for k in 0..7 {
+            m.feedback(1.0, if k % 2 == 0 { 1.0 } else { -1.0 }, 33);
+        }
+        // cadence = 2 => snapshots at feedback 2, 4, 6
+        assert_eq!(m.history().len(), 3);
+        assert_eq!(m.history()[0].step, 2);
+        assert_eq!(m.history()[2].step, 6);
+        assert!(m.history().iter().all(|p| p.n_svs == 33));
+        assert!(m.history().iter().all(|p| (0.0..=1.0).contains(&p.accuracy)));
+    }
+
+    #[test]
+    fn boundary_decision_counts_as_positive() {
+        // f = 0.0 predicts +1 — must match Predictor::predict1 exactly
+        let mut m = Monitor::new(2);
+        assert!(m.feedback(0.0, 1.0, 1));
+        assert!(!m.feedback(0.0, -1.0, 1));
+    }
+}

@@ -1,0 +1,590 @@
+//! `mmbsgd serve` line protocol: a std-only TCP server over the
+//! micro-batching engine.
+//!
+//! ## Protocol
+//!
+//! Newline-delimited UTF-8 commands; one reply line per command, in
+//! request order per connection.  Fields are space-separated; decision
+//! values print with Rust's shortest round-trip `f64` formatting, so a
+//! client parsing the reply recovers the served bits exactly.
+//!
+//! ```text
+//! predict [key=K] v1 .. vd     ->  ok <+1|-1> <decision> <model>@v<N>
+//! decision [key=K] v1 .. vd    ->  ok <decision> <model>@v<N>
+//! feedback [key=K] <±1> v1..vd ->  ok <hit|miss> <decision> <model>@v<N>
+//! stats                        ->  ok served=.. shed=.. queued=.. batches=..
+//!                                  mean_batch=.. low_margin=.. mean_margin=..
+//!                                  window_acc=.. feedback=.. models=..
+//! swap-model <name> <path>     ->  ok <name>@v<N>
+//! shutdown                     ->  ok bye          (then the server exits)
+//! <anything malformed>         ->  err <reason>    (connection stays up)
+//! ```
+//!
+//! `key=K` drives [`super::ModelRegistry`]'s deterministic A/B routing
+//! (same key ⇒ same model); unkeyed requests route on their request id.
+//! `swap-model` hot-swaps a model file under an *existing* registry
+//! name and bumps its version — in-flight requests drain against the
+//! old model first, so no request is answered by a half-installed
+//! model.
+//!
+//! ## Threading
+//!
+//! The same no-dependency scoped-thread idiom as
+//! [`crate::runtime::pool`]: backends are deliberately not `Send`, so
+//! the engine — sole owner of the registry — runs on [`serve`]'s
+//! calling thread, while `std::thread::scope` owns the accept loop and
+//! a reader/writer pair per connection, all borrowing the stop flag —
+//! no `Arc`, no detached threads, everything joined before [`serve`]
+//! returns.  Readers parse lines into [`Command`]s and send them over
+//! an mpsc channel without waiting for answers; the engine drains the
+//! channel in arrival order, coalescing consecutive query commands
+//! into [`super::BatchEngine`] micro-batches (the batch is "whatever
+//! arrived while the last margins pass ran"), and routes replies back
+//! through per-connection channels.  The kernel compute itself is
+//! sharded by the registry backend's [`crate::runtime::WorkerPool`]
+//! (`--threads`).  Replies are emitted in request-id order, so
+//! per-connection pipelining is FIFO even though batches group by
+//! model.
+
+use super::batch::{BatchEngine, EngineStats};
+use super::monitor::{DriftReport, Monitor};
+use super::registry::ModelRegistry;
+use super::ShedPolicy;
+use crate::error::ServeError;
+use crate::model::SvmModel;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// How long a blocked connection read waits before re-checking the
+/// stop flag (also the accept-poll interval).
+const POLL: Duration = Duration::from_millis(50);
+
+/// Per-connection bound on answered-but-unwritten reply lines.  The
+/// request side is bounded by the engine queue (`queue_max` + shed
+/// policy); this bounds the *reply* side against a client that
+/// pipelines requests but never reads its socket.  Replies beyond the
+/// backlog are dropped (the connection is already desynced — such a
+/// client has violated the one-reply-per-line contract by orders of
+/// magnitude), keeping server memory bounded per connection.
+const REPLY_BACKLOG: usize = 1024;
+
+/// A parsed protocol command.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Command {
+    Predict { key: Option<String>, x: Vec<f32> },
+    Decision { key: Option<String>, x: Vec<f32> },
+    Feedback { key: Option<String>, y: f32, x: Vec<f32> },
+    Stats,
+    SwapModel { name: String, path: String },
+    Shutdown,
+}
+
+/// Parse one protocol line.  Pure function — every malformation is a
+/// [`ServeError::BadRequest`] carrying the reason for the `err` reply.
+pub fn parse_line(line: &str) -> Result<Command, ServeError> {
+    let mut it = line.split_ascii_whitespace();
+    let cmd = it.next().ok_or_else(|| ServeError::BadRequest("empty command".into()))?;
+    match cmd {
+        "predict" | "decision" | "feedback" => {
+            let mut rest: Vec<&str> = it.collect();
+            let key = rest.first().and_then(|t| t.strip_prefix("key=")).map(str::to_string);
+            if key.is_some() {
+                rest.remove(0);
+            }
+            let y = if cmd == "feedback" {
+                if rest.is_empty() {
+                    return Err(ServeError::BadRequest("feedback needs a ±1 label".into()));
+                }
+                let tok = rest.remove(0);
+                match tok {
+                    "+1" | "1" => 1.0f32,
+                    "-1" => -1.0,
+                    other => {
+                        return Err(ServeError::BadRequest(format!(
+                            "feedback label must be +1 or -1, got {other:?}"
+                        )))
+                    }
+                }
+            } else {
+                0.0
+            };
+            if rest.is_empty() {
+                return Err(ServeError::BadRequest(format!("{cmd} needs feature values")));
+            }
+            let mut x = Vec::with_capacity(rest.len());
+            for tok in rest {
+                let v: f32 = tok.parse().map_err(|_| {
+                    ServeError::BadRequest(format!("bad feature value {tok:?}"))
+                })?;
+                if !v.is_finite() {
+                    return Err(ServeError::BadRequest(format!(
+                        "feature value {tok:?} is not finite"
+                    )));
+                }
+                x.push(v);
+            }
+            Ok(match cmd {
+                "predict" => Command::Predict { key, x },
+                "decision" => Command::Decision { key, x },
+                _ => Command::Feedback { key, y, x },
+            })
+        }
+        "stats" => match it.next() {
+            None => Ok(Command::Stats),
+            Some(extra) => {
+                Err(ServeError::BadRequest(format!("stats takes no arguments, got {extra:?}")))
+            }
+        },
+        "swap-model" => {
+            let name = it
+                .next()
+                .ok_or_else(|| ServeError::BadRequest("swap-model needs <name> <path>".into()))?;
+            let path = it
+                .next()
+                .ok_or_else(|| ServeError::BadRequest("swap-model needs <name> <path>".into()))?;
+            if it.next().is_some() {
+                return Err(ServeError::BadRequest(
+                    "swap-model takes exactly <name> <path> (paths with spaces unsupported)"
+                        .into(),
+                ));
+            }
+            Ok(Command::SwapModel { name: name.into(), path: path.into() })
+        }
+        "shutdown" => Ok(Command::Shutdown),
+        other => Err(ServeError::BadRequest(format!("unknown command {other:?}"))),
+    }
+}
+
+/// Server knobs (`[serve]` TOML section / CLI flags).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeOptions {
+    /// Max rows per margins pass.
+    pub batch_max: usize,
+    /// Max admitted-but-unanswered requests.
+    pub queue_max: usize,
+    /// Who loses when the queue is full.
+    pub shed: ShedPolicy,
+    /// Label-feedback accuracy window length.
+    pub monitor_window: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self { batch_max: 64, queue_max: 256, shed: ShedPolicy::Reject, monitor_window: 256 }
+    }
+}
+
+/// What a completed [`serve`] run did.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServeReport {
+    pub connections: u64,
+    pub engine: EngineStats,
+    pub drift: DriftReport,
+}
+
+/// One line in flight from a connection reader to the engine.  Parse
+/// failures travel the same path as commands: the engine answers them
+/// in arrival order, so a pipelining client's replies stay aligned
+/// with its requests even around malformed lines.  The reply sender is
+/// bounded ([`REPLY_BACKLOG`]) and the engine only ever `try_send`s —
+/// a stalled client can cost at most a fixed backlog, never engine
+/// stalls or unbounded memory.
+struct Incoming {
+    cmd: Result<Command, ServeError>,
+    reply: mpsc::SyncSender<String>,
+}
+
+/// What kind of reply a queued batch request expects.
+enum ReplyKind {
+    Decision,
+    Predict,
+    Feedback { y: f32 },
+}
+
+struct WaitingReply {
+    reply: mpsc::SyncSender<String>,
+    kind: ReplyKind,
+}
+
+/// Run the server on an already-bound listener until a `shutdown`
+/// command (binding is the caller's job so tests and the CLI can both
+/// pick their own address, including port 0).  Returns the lifetime
+/// counters.
+///
+/// Thread topology: [`Backend`](crate::runtime::Backend)s are
+/// deliberately not `Send` (PJRT handles are thread-local), so the
+/// engine — the only holder of the registry — runs **on the calling
+/// thread**; the accept loop and the per-connection reader/writer
+/// pairs are the scoped threads, shipping parsed [`Command`]s in over
+/// an mpsc channel and reply lines back out.  The registry never
+/// crosses a thread boundary.
+pub fn serve(
+    listener: TcpListener,
+    registry: ModelRegistry,
+    opts: &ServeOptions,
+) -> Result<ServeReport, ServeError> {
+    listener.set_nonblocking(true)?;
+    let stop = AtomicBool::new(false);
+    let (tx, rx) = mpsc::channel::<Incoming>();
+    let opts = opts.clone();
+    std::thread::scope(|s| {
+        let stop = &stop;
+        let acceptor = s.spawn(move || accept_loop(listener, tx, stop, s));
+        // The engine owns the (non-Send) registry and runs here; it
+        // returns once every channel sender is gone — i.e. after the
+        // accept loop and every connection reader have exited.
+        let (engine, drift) = engine_loop(registry, opts, rx);
+        match acceptor.join() {
+            Ok((connections, None)) => Ok(ServeReport { connections, engine, drift }),
+            Ok((_, Some(e))) => Err(e),
+            Err(_) => Err(ServeError::Io("accept thread panicked".into())),
+        }
+    })
+}
+
+/// Accept until the stop flag rises (polling — the listener is
+/// nonblocking so a `shutdown` arriving on one connection stops the
+/// whole server within one [`POLL`]).  Returns the connection count
+/// and the fatal accept error, if any.
+fn accept_loop<'scope, 'env>(
+    listener: TcpListener,
+    tx: mpsc::Sender<Incoming>,
+    stop: &'scope AtomicBool,
+    s: &'scope std::thread::Scope<'scope, 'env>,
+) -> (u64, Option<ServeError>) {
+    let mut connections = 0u64;
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return (connections, None);
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                connections += 1;
+                let tx = tx.clone();
+                s.spawn(move || connection_loop(stream, tx, stop));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(POLL);
+            }
+            Err(e) => {
+                stop.store(true, Ordering::Relaxed);
+                return (connections, Some(ServeError::from(e)));
+            }
+        }
+    }
+}
+
+/// Per-connection reader (this thread) + writer (scoped): the reader
+/// parses lines and forwards commands without waiting for answers, so
+/// a pipelining client's requests coalesce into engine micro-batches;
+/// the writer drains the reply channel in engine-emitted (= request)
+/// order.
+fn connection_loop(stream: TcpStream, tx: mpsc::Sender<Incoming>, stop: &AtomicBool) {
+    // Accepted sockets inherit the listener's nonblocking flag on some
+    // platforms (Windows); the reader wants blocking reads with a
+    // timeout, not a busy-spin.
+    if stream.set_nonblocking(false).is_err() || stream.set_read_timeout(Some(POLL)).is_err() {
+        return;
+    }
+    let write_half = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let (reply_tx, reply_rx) = mpsc::sync_channel::<String>(REPLY_BACKLOG);
+    std::thread::scope(|s| {
+        s.spawn(move || {
+            let mut w = BufWriter::new(write_half);
+            while let Ok(line) = reply_rx.recv() {
+                if w.write_all(line.as_bytes())
+                    .and_then(|()| w.write_all(b"\n"))
+                    .and_then(|()| w.flush())
+                    .is_err()
+                {
+                    break;
+                }
+            }
+        });
+        // Raw-byte line reader (`read_until`, not `read_line`): bytes
+        // already read always stay appended across read timeouts —
+        // `read_line`'s UTF-8 guard would *discard* a valid prefix
+        // that a timeout split mid multibyte character — and UTF-8 is
+        // validated per complete line, so a non-UTF-8 line answers
+        // `err` in order and the connection survives.
+        let mut rd = BufReader::new(&stream);
+        let mut buf: Vec<u8> = Vec::new();
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            match rd.read_until(b'\n', &mut buf) {
+                Ok(0) => break, // client closed
+                Ok(_) => {
+                    let cmd = match std::str::from_utf8(&buf) {
+                        Ok(text) => {
+                            let line = text.trim();
+                            if line.is_empty() {
+                                buf.clear();
+                                continue;
+                            }
+                            parse_line(line)
+                        }
+                        Err(_) => {
+                            Err(ServeError::BadRequest("line is not valid UTF-8".into()))
+                        }
+                    };
+                    let is_shutdown = matches!(cmd, Ok(Command::Shutdown));
+                    if tx.send(Incoming { cmd, reply: reply_tx.clone() }).is_err() {
+                        break;
+                    }
+                    if is_shutdown {
+                        stop.store(true, Ordering::Relaxed);
+                        break;
+                    }
+                    buf.clear();
+                }
+                // timeout: re-check the stop flag; the partial line
+                // stays in `buf` and completes next round
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut
+                        || e.kind() == std::io::ErrorKind::Interrupted =>
+                {
+                    continue;
+                }
+                Err(_) => break,
+            }
+        }
+        // Dropping our reply sender (and the engine finishing any
+        // in-flight replies) closes the writer's channel.
+        drop(reply_tx);
+        drop(tx);
+    });
+}
+
+/// The single engine thread: drains command bursts in arrival order,
+/// micro-batching query commands and flushing before any control
+/// command replies (per-connection FIFO by construction).
+fn engine_loop(
+    mut registry: ModelRegistry,
+    opts: ServeOptions,
+    rx: mpsc::Receiver<Incoming>,
+) -> (EngineStats, DriftReport) {
+    let mut engine = BatchEngine::new(opts.batch_max, opts.queue_max, opts.shed);
+    let mut monitor = Monitor::new(opts.monitor_window);
+    let mut waiting: BTreeMap<u64, WaitingReply> = BTreeMap::new();
+    while let Ok(first) = rx.recv() {
+        // Coalesce everything that arrived while we were busy: this is
+        // the micro-batch.  An idle server answers batches of 1; a
+        // loaded one grows batches up to queue_max and sheds beyond.
+        let mut burst = vec![first];
+        while let Ok(more) = rx.try_recv() {
+            burst.push(more);
+        }
+        for inc in burst {
+            let cmd = match inc.cmd {
+                Ok(cmd) => cmd,
+                Err(e) => {
+                    // A malformed line still consumes a reply slot in
+                    // arrival order: flush what precedes it, then err.
+                    drain(&mut engine, &mut registry, &mut waiting, &mut monitor);
+                    let _ = inc.reply.try_send(format!("err {e}"));
+                    continue;
+                }
+            };
+            match cmd {
+                Command::Decision { key, x } => {
+                    let kind = ReplyKind::Decision;
+                    enqueue(&mut engine, &registry, &mut waiting, inc.reply, key, x, kind);
+                }
+                Command::Predict { key, x } => {
+                    let kind = ReplyKind::Predict;
+                    enqueue(&mut engine, &registry, &mut waiting, inc.reply, key, x, kind);
+                }
+                Command::Feedback { key, y, x } => {
+                    let kind = ReplyKind::Feedback { y };
+                    enqueue(&mut engine, &registry, &mut waiting, inc.reply, key, x, kind);
+                }
+                Command::Stats => {
+                    drain(&mut engine, &mut registry, &mut waiting, &mut monitor);
+                    let _ = inc.reply.try_send(stats_line(&engine, &registry, &monitor));
+                }
+                Command::SwapModel { name, path } => {
+                    // Drain first: in-flight requests were routed (and
+                    // version-stamped) against the old model.
+                    drain(&mut engine, &mut registry, &mut waiting, &mut monitor);
+                    let msg = match SvmModel::load(Path::new(&path)) {
+                        Ok(m) => match registry.swap(&name, m) {
+                            Ok(v) => format!("ok {name}@v{v}"),
+                            Err(e) => format!("err {e}"),
+                        },
+                        Err(e) => format!("err swap-model: {e:#}"),
+                    };
+                    let _ = inc.reply.try_send(msg);
+                }
+                Command::Shutdown => {
+                    drain(&mut engine, &mut registry, &mut waiting, &mut monitor);
+                    let _ = inc.reply.try_send("ok bye".into());
+                }
+            }
+        }
+        drain(&mut engine, &mut registry, &mut waiting, &mut monitor);
+    }
+    (engine.stats(), monitor.report())
+}
+
+fn enqueue(
+    engine: &mut BatchEngine,
+    registry: &ModelRegistry,
+    waiting: &mut BTreeMap<u64, WaitingReply>,
+    reply: mpsc::SyncSender<String>,
+    key: Option<String>,
+    x: Vec<f32>,
+    kind: ReplyKind,
+) {
+    let id = match engine.submit(registry, key.as_deref(), x) {
+        Ok(id) => id,
+        // failed submits keep their reply slot: park the error under a
+        // fresh request id so flush delivers it in submission order
+        Err(e) => engine.park_error(e),
+    };
+    waiting.insert(id, WaitingReply { reply, kind });
+}
+
+/// Flush the engine and deliver every resolved request's reply (in
+/// request-id order — [`BatchEngine::flush`] sorts).
+fn drain(
+    engine: &mut BatchEngine,
+    registry: &mut ModelRegistry,
+    waiting: &mut BTreeMap<u64, WaitingReply>,
+    monitor: &mut Monitor,
+) {
+    for (id, res) in engine.flush(registry) {
+        let Some(w) = waiting.remove(&id) else { continue };
+        let line = match res {
+            Ok(d) => {
+                monitor.record(d.value);
+                match w.kind {
+                    ReplyKind::Decision => format!("ok {} {}@v{}", d.value, d.model, d.version),
+                    ReplyKind::Predict => {
+                        let label = if d.value >= 0.0 { "+1" } else { "-1" };
+                        format!("ok {label} {} {}@v{}", d.value, d.model, d.version)
+                    }
+                    ReplyKind::Feedback { y } => {
+                        let n_svs = registry.n_svs_of(&d.model).unwrap_or(0);
+                        let hit = monitor.feedback(d.value, y, n_svs);
+                        format!(
+                            "ok {} {} {}@v{}",
+                            if hit { "hit" } else { "miss" },
+                            d.value,
+                            d.model,
+                            d.version
+                        )
+                    }
+                }
+            }
+            Err(e) => format!("err {e}"),
+        };
+        let _ = w.reply.try_send(line);
+    }
+}
+
+fn stats_line(engine: &BatchEngine, registry: &ModelRegistry, monitor: &Monitor) -> String {
+    let s = engine.stats();
+    let r = monitor.report();
+    let mean_batch = if s.batches > 0 { s.rows as f64 / s.batches as f64 } else { 0.0 };
+    let acc = match r.window_accuracy {
+        Some(a) => format!("{a:.4}"),
+        None => "na".into(),
+    };
+    let models: Vec<String> = registry
+        .status()
+        .iter()
+        .map(|m| format!("{}@v{}:{}sv", m.name, m.version, m.n_svs))
+        .collect();
+    format!(
+        "ok served={} shed={} queued={} batches={} mean_batch={mean_batch:.2} \
+         low_margin={:.4} mean_margin={:.4} window_acc={acc} feedback={} models={}",
+        s.served,
+        s.shed,
+        engine.queued(),
+        s.batches,
+        r.low_margin_fraction,
+        r.mean_abs_margin,
+        r.feedback_seen,
+        models.join(",")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_covers_the_grammar() {
+        assert_eq!(
+            parse_line("predict 0.5 -1.25 3").unwrap(),
+            Command::Predict { key: None, x: vec![0.5, -1.25, 3.0] }
+        );
+        assert_eq!(
+            parse_line("decision key=user-7 1 2").unwrap(),
+            Command::Decision { key: Some("user-7".into()), x: vec![1.0, 2.0] }
+        );
+        assert_eq!(
+            parse_line("feedback key=u -1 0.25 0.5").unwrap(),
+            Command::Feedback { key: Some("u".into()), y: -1.0, x: vec![0.25, 0.5] }
+        );
+        assert_eq!(
+            parse_line("feedback +1 2").unwrap(),
+            Command::Feedback { key: None, y: 1.0, x: vec![2.0] }
+        );
+        assert_eq!(parse_line("stats").unwrap(), Command::Stats);
+        assert_eq!(
+            parse_line("swap-model champ /tmp/m.txt").unwrap(),
+            Command::SwapModel { name: "champ".into(), path: "/tmp/m.txt".into() }
+        );
+        assert_eq!(parse_line("shutdown").unwrap(), Command::Shutdown);
+        // surrounding whitespace is the reader's problem; tokens split
+        assert_eq!(
+            parse_line("  predict   1.0  ").unwrap(),
+            Command::Predict { key: None, x: vec![1.0] }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed_lines_typed() {
+        for bad in [
+            "",
+            "bogus 1 2",
+            "predict",
+            "predict key=u",
+            "predict 1 nan-ish",
+            "predict inf",
+            "feedback 0 1 2",
+            "feedback",
+            "stats now",
+            "swap-model onlyname",
+            "swap-model a b c",
+        ] {
+            match parse_line(bad) {
+                Err(ServeError::BadRequest(_)) => {}
+                other => panic!("{bad:?}: expected BadRequest, got {other:?}"),
+            }
+        }
+        // "1" doubles as the +1 label shorthand: one feature follows
+        assert_eq!(
+            parse_line("feedback 1 2").unwrap(),
+            Command::Feedback { key: None, y: 1.0, x: vec![2.0] }
+        );
+    }
+
+    #[test]
+    fn non_finite_features_rejected() {
+        assert!(matches!(parse_line("predict inf 1"), Err(ServeError::BadRequest(_))));
+        assert!(matches!(parse_line("predict NaN"), Err(ServeError::BadRequest(_))));
+    }
+}

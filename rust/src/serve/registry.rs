@@ -1,0 +1,436 @@
+//! Multi-model serving: named, versioned models over one shared
+//! backend, with deterministic weighted A/B routing.
+//!
+//! A [`ModelRegistry`] is the serving-side answer to "one backend, many
+//! models": every loaded [`SvmModel`] shares the registry's single
+//! [`Backend`] (and therefore its worker pool and tile scratch), so
+//! serving M variants costs one pool, not M.  Each model carries a
+//! monotonically increasing **version** (bumped on every
+//! [`ModelRegistry::swap`]) and prebuilt [`TileBounds`], so both the
+//! batched and the single-query request paths get the tile engine's
+//! far-skip treatment.
+//!
+//! Routing is deterministic by construction: a [`RouteSpec`] assigns
+//! integer weights to model names, and a request key is hashed with a
+//! seeded FNV-1a/SplitMix64 combination ([`route_hash`]) — no `rand`,
+//! no per-thread state — so the same key maps to the same model on
+//! every run, every thread, and every replica started with the same
+//! seed.  This is what makes A/B assignments reproducible and
+//! debuggable ("which model answered this user?" has one answer).
+
+use super::validate_model;
+use crate::data::DenseMatrix;
+use crate::error::{ServeError, TrainError};
+use crate::model::SvmModel;
+use crate::runtime::{margin1_bounded, Backend, TileBounds};
+use std::collections::BTreeMap;
+
+/// One weighted arm of a [`RouteSpec`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RouteArm {
+    pub name: String,
+    pub weight: u32,
+}
+
+/// A weighted routing table over model names.  Weights are integers
+/// (e.g. `champion:9, challenger:1` for a 90/10 split); a key routes to
+/// the arm whose cumulative-weight interval contains
+/// `route_hash(seed, key) % total_weight`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RouteSpec {
+    arms: Vec<RouteArm>,
+    /// Σ weights; ≥ 1 by construction ([`RouteSpec::new`] rejects empty
+    /// specs and zero weights), so the routing modulus never divides by
+    /// zero.
+    total: u64,
+}
+
+impl RouteSpec {
+    /// Build a spec from `(name, weight)` pairs.  Rejects empty specs,
+    /// zero weights, and duplicate names (each would make routing
+    /// ambiguous or degenerate).
+    pub fn new(arms: Vec<(String, u32)>) -> Result<Self, ServeError> {
+        if arms.is_empty() {
+            return Err(ServeError::BadRoute("route needs at least one arm".into()));
+        }
+        let mut total = 0u64;
+        let mut out = Vec::with_capacity(arms.len());
+        for (name, weight) in arms {
+            if weight == 0 {
+                return Err(ServeError::BadRoute(format!("arm {name:?} has zero weight")));
+            }
+            if out.iter().any(|a: &RouteArm| a.name == name) {
+                return Err(ServeError::BadRoute(format!("duplicate arm {name:?}")));
+            }
+            total += u64::from(weight);
+            out.push(RouteArm { name, weight });
+        }
+        Ok(Self { arms: out, total })
+    }
+
+    /// A single-arm spec (all traffic to one model).
+    pub fn single(name: &str) -> Self {
+        Self { arms: vec![RouteArm { name: name.into(), weight: 1 }], total: 1 }
+    }
+
+    pub fn arms(&self) -> &[RouteArm] {
+        &self.arms
+    }
+
+    /// The arm a hash ticket lands on.
+    fn pick(&self, hash: u64) -> &str {
+        debug_assert!(self.total > 0);
+        let mut ticket = hash % self.total;
+        for arm in &self.arms {
+            let w = u64::from(arm.weight);
+            if ticket < w {
+                return &arm.name;
+            }
+            ticket -= w;
+        }
+        // unreachable by construction (ticket < total = Σ weights)
+        &self.arms[self.arms.len() - 1].name
+    }
+}
+
+/// Seeded deterministic key hash for routing: FNV-1a 64 over the key
+/// bytes (with the seed folded into the offset basis) followed by a
+/// SplitMix64 finalizer — FNV alone mixes the high bits poorly, and the
+/// routing modulus needs all 64 of them.  Pure function of `(seed,
+/// key)`: no process, thread, or time dependence.
+pub fn route_hash(seed: u64, key: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ seed.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    for &b in key {
+        h = (h ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    let mut z = h.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// One loaded model: scale folded, far-skip bounds prebuilt, versioned.
+struct ModelEntry {
+    model: SvmModel,
+    bounds: TileBounds,
+    version: u64,
+    served: u64,
+}
+
+/// A read-only snapshot of one registry entry (for `stats` replies and
+/// operator tooling).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelStatus {
+    pub name: String,
+    pub version: u64,
+    pub n_svs: usize,
+    pub dim: usize,
+    pub served: u64,
+}
+
+/// Named, versioned models over one shared backend; see the
+/// [module docs](self).
+pub struct ModelRegistry {
+    backend: Box<dyn Backend>,
+    models: BTreeMap<String, ModelEntry>,
+    route: Option<RouteSpec>,
+    seed: u64,
+}
+
+impl ModelRegistry {
+    /// An empty registry over `backend`; `seed` fixes the routing hash
+    /// (replicas that should agree on A/B assignment share a seed).
+    pub fn new(backend: Box<dyn Backend>, seed: u64) -> Self {
+        Self { backend, models: BTreeMap::new(), route: None, seed }
+    }
+
+    /// Worker threads for the shared backend's batch paths; returns the
+    /// count in effect.
+    pub fn set_threads(&mut self, threads: usize) -> usize {
+        self.backend.set_threads(threads)
+    }
+
+    /// Load `model` under `name`: validates, folds the coefficient
+    /// scale, prebuilds tile bounds.  A fresh name starts at version 1;
+    /// re-inserting an existing name replaces the model and bumps its
+    /// version.  Returns the version now serving.
+    pub fn insert(&mut self, name: &str, mut model: SvmModel) -> Result<u64, ServeError> {
+        validate_model(&model)?;
+        model.svs.fold_scale();
+        let bounds = TileBounds::of(&model.svs);
+        let version = self.models.get(name).map_or(1, |e| e.version + 1);
+        self.models
+            .insert(name.to_string(), ModelEntry { model, bounds, version, served: 0 });
+        Ok(version)
+    }
+
+    /// Replace an **existing** model (the `swap-model` protocol verb):
+    /// like [`ModelRegistry::insert`] but a typo'd name is an error
+    /// instead of a silently created, never-routed entry.
+    pub fn swap(&mut self, name: &str, model: SvmModel) -> Result<u64, ServeError> {
+        if !self.models.contains_key(name) {
+            return Err(ServeError::UnknownModel(name.into()));
+        }
+        self.insert(name, model)
+    }
+
+    /// Remove a model.  Refuses while an explicit route still names it
+    /// — evicting a live arm would turn a slice of traffic into
+    /// per-request errors.
+    pub fn evict(&mut self, name: &str) -> Result<(), ServeError> {
+        if !self.models.contains_key(name) {
+            return Err(ServeError::UnknownModel(name.into()));
+        }
+        if let Some(route) = &self.route {
+            if route.arms().iter().any(|a| a.name == name) {
+                return Err(ServeError::BadRoute(format!(
+                    "model {name:?} is a live route arm; set a new route first"
+                )));
+            }
+        }
+        self.models.remove(name);
+        Ok(())
+    }
+
+    /// Install an explicit routing table.  Every arm must name a loaded
+    /// model.
+    pub fn set_route(&mut self, spec: RouteSpec) -> Result<(), ServeError> {
+        for arm in spec.arms() {
+            if !self.models.contains_key(&arm.name) {
+                return Err(ServeError::UnknownModel(arm.name.clone()));
+            }
+        }
+        self.route = Some(spec);
+        Ok(())
+    }
+
+    /// The model name `key` routes to.  Deterministic: same key (and
+    /// seed, and route) ⇒ same model, across runs and threads.  With no
+    /// explicit route the pick is uniform over every loaded model (name
+    /// order — equally deterministic).
+    pub fn route_for(&self, key: &[u8]) -> Result<String, ServeError> {
+        let ticket = route_hash(self.seed, key);
+        if let Some(r) = &self.route {
+            return Ok(r.pick(ticket).to_string());
+        }
+        if self.models.is_empty() {
+            return Err(ServeError::BadRoute("no models loaded".into()));
+        }
+        let arm = ticket as usize % self.models.len();
+        Ok(self.models.keys().nth(arm).expect("index < len").clone())
+    }
+
+    /// Number of loaded models.
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// Snapshot of every entry, in name order.
+    pub fn status(&self) -> Vec<ModelStatus> {
+        self.models
+            .iter()
+            .map(|(name, e)| ModelStatus {
+                name: name.clone(),
+                version: e.version,
+                n_svs: e.model.svs.len(),
+                dim: e.model.svs.dim(),
+                served: e.served,
+            })
+            .collect()
+    }
+
+    /// Feature dimension of a named model (request shape pre-check).
+    pub fn dim_of(&self, name: &str) -> Result<usize, ServeError> {
+        Ok(self.entry(name)?.model.svs.dim())
+    }
+
+    /// Version of a named model.
+    pub fn version_of(&self, name: &str) -> Result<u64, ServeError> {
+        Ok(self.entry(name)?.version)
+    }
+
+    /// SV count of a named model.
+    pub fn n_svs_of(&self, name: &str) -> Result<usize, ServeError> {
+        Ok(self.entry(name)?.model.svs.len())
+    }
+
+    fn entry(&self, name: &str) -> Result<&ModelEntry, ServeError> {
+        self.models.get(name).ok_or_else(|| ServeError::UnknownModel(name.into()))
+    }
+
+    /// Decision value for a single query through `name` — the tiled
+    /// single-row path over the entry's prebuilt bounds, bit-identical
+    /// to a batch row.
+    pub fn decision1(&mut self, name: &str, x: &[f32]) -> Result<f64, ServeError> {
+        let e = self
+            .models
+            .get_mut(name)
+            .ok_or_else(|| ServeError::UnknownModel(name.into()))?;
+        if x.len() != e.model.svs.dim() {
+            return Err(TrainError::DimMismatch { expected: e.model.svs.dim(), got: x.len() }
+                .into());
+        }
+        e.served += 1;
+        Ok(margin1_bounded(&e.model.svs, e.model.gamma, x, &e.bounds) + e.model.bias)
+    }
+
+    /// Decision values for a batch of query rows through `name`, via
+    /// **one** tiled [`Backend::margins_bounded_into`] pass over the
+    /// entry's prebuilt bounds into the caller's answer buffer
+    /// (`out.len() == queries.rows()`) — the micro-batcher's hot path,
+    /// with no per-batch Θ(B) bound rebuild.  On the native backend
+    /// (the serve default) this is bit-identical per row to
+    /// [`ModelRegistry::decision1`] regardless of batch size; backends
+    /// that route big batches to AOT artifacts (hybrid/XLA) trade that
+    /// load-invariant parity for artifact speed.
+    pub fn decision_batch_into(
+        &mut self,
+        name: &str,
+        queries: &DenseMatrix,
+        out: &mut [f64],
+    ) -> Result<(), ServeError> {
+        debug_assert_eq!(out.len(), queries.rows());
+        let e = self
+            .models
+            .get_mut(name)
+            .ok_or_else(|| ServeError::UnknownModel(name.into()))?;
+        if queries.cols() != e.model.svs.dim() {
+            return Err(TrainError::DimMismatch {
+                expected: e.model.svs.dim(),
+                got: queries.cols(),
+            }
+            .into());
+        }
+        self.backend.margins_bounded_into(&e.model.svs, e.model.gamma, queries, &e.bounds, out);
+        for f in out.iter_mut() {
+            *f += e.model.bias;
+        }
+        e.served += queries.rows() as u64;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    fn toy_model(seed: u64, n: usize, d: usize) -> SvmModel {
+        let mut rng = crate::rng::Xoshiro256::new(seed);
+        let mut m = SvmModel::new(d, 0.8);
+        for _ in 0..n {
+            let x: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+            m.svs.push(&x, rng.next_f64() - 0.5);
+        }
+        m.bias = 0.05;
+        m
+    }
+
+    fn registry_with(names: &[&str]) -> ModelRegistry {
+        let mut reg = ModelRegistry::new(Box::new(NativeBackend::new()), 7);
+        for (i, name) in names.iter().enumerate() {
+            reg.insert(name, toy_model(i as u64 + 1, 20, 4)).unwrap();
+        }
+        reg
+    }
+
+    #[test]
+    fn insert_versions_and_swap() {
+        let mut reg = registry_with(&["a"]);
+        assert_eq!(reg.version_of("a").unwrap(), 1);
+        assert_eq!(reg.insert("a", toy_model(9, 10, 4)).unwrap(), 2);
+        assert_eq!(reg.swap("a", toy_model(10, 10, 4)).unwrap(), 3);
+        assert_eq!(
+            reg.swap("typo", toy_model(11, 10, 4)).unwrap_err(),
+            ServeError::UnknownModel("typo".into())
+        );
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn evict_guards_live_route_arms() {
+        let mut reg = registry_with(&["a", "b"]);
+        reg.set_route(RouteSpec::new(vec![("a".into(), 1), ("b".into(), 1)]).unwrap()).unwrap();
+        assert!(matches!(reg.evict("a"), Err(ServeError::BadRoute(_))));
+        reg.set_route(RouteSpec::single("b")).unwrap();
+        reg.evict("a").unwrap();
+        assert_eq!(reg.evict("a").unwrap_err(), ServeError::UnknownModel("a".into()));
+    }
+
+    #[test]
+    fn route_spec_rejects_degenerate_tables() {
+        assert!(matches!(RouteSpec::new(vec![]), Err(ServeError::BadRoute(_))));
+        assert!(matches!(
+            RouteSpec::new(vec![("a".into(), 0)]),
+            Err(ServeError::BadRoute(_))
+        ));
+        assert!(matches!(
+            RouteSpec::new(vec![("a".into(), 1), ("a".into(), 2)]),
+            Err(ServeError::BadRoute(_))
+        ));
+        let mut reg = registry_with(&["a"]);
+        assert_eq!(
+            reg.set_route(RouteSpec::single("ghost")).unwrap_err(),
+            ServeError::UnknownModel("ghost".into())
+        );
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_weighted() {
+        let mut reg = registry_with(&["a", "b"]);
+        let mut reg2 = registry_with(&["a", "b"]);
+        let spec = RouteSpec::new(vec![("a".into(), 3), ("b".into(), 1)]).unwrap();
+        reg.set_route(spec.clone()).unwrap();
+        reg2.set_route(spec).unwrap();
+        let mut to_a = 0usize;
+        for k in 0..2000u32 {
+            let key = format!("user-{k}");
+            let m1 = reg.route_for(key.as_bytes()).unwrap();
+            // identically-seeded registries agree key by key
+            assert_eq!(m1, reg2.route_for(key.as_bytes()).unwrap());
+            // and repeated lookups are stable
+            assert_eq!(m1, reg.route_for(key.as_bytes()).unwrap());
+            if m1 == "a" {
+                to_a += 1;
+            }
+        }
+        // 3:1 weighting: expect ~1500 of 2000 on arm a (loose bounds)
+        assert!((1350..=1650).contains(&to_a), "a got {to_a} of 2000");
+        let _ = reg.decision1("a", &[0.0; 4]).unwrap();
+    }
+
+    #[test]
+    fn batch_bit_matches_single_queries() {
+        let mut reg = registry_with(&["m"]);
+        let mut rng = crate::rng::Xoshiro256::new(42);
+        let rows: Vec<Vec<f32>> = (0..9)
+            .map(|_| (0..4).map(|_| rng.next_gaussian() as f32).collect())
+            .collect();
+        let q = DenseMatrix::from_rows(rows.clone());
+        let mut out = vec![0.0; q.rows()];
+        reg.decision_batch_into("m", &q, &mut out).unwrap();
+        for (r, row) in rows.iter().enumerate() {
+            let single = reg.decision1("m", row).unwrap();
+            assert_eq!(out[r].to_bits(), single.to_bits(), "row {r}");
+        }
+    }
+
+    #[test]
+    fn request_errors_are_typed_per_request() {
+        let mut reg = registry_with(&["m"]);
+        assert_eq!(
+            reg.decision1("ghost", &[0.0; 4]).unwrap_err(),
+            ServeError::UnknownModel("ghost".into())
+        );
+        assert!(matches!(
+            reg.decision1("m", &[0.0; 5]).unwrap_err(),
+            ServeError::Model(TrainError::DimMismatch { expected: 4, got: 5 })
+        ));
+        let empty = ModelRegistry::new(Box::new(NativeBackend::new()), 1);
+        assert!(matches!(empty.route_for(b"k"), Err(ServeError::BadRoute(_))));
+    }
+}

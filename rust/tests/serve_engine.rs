@@ -1,0 +1,278 @@
+//! Serving-subsystem acceptance tests (ISSUE 4):
+//!
+//! * micro-batcher bit-parity: batched decisions are bit-identical to
+//!   sequential `Predictor::decision1` for B ∈ {1, 7, 64};
+//! * shed-policy behaviour at a full queue (`reject` vs `oldest`);
+//! * deterministic weighted A/B routing: same key ⇒ same model, across
+//!   independently built registries and across threads;
+//! * a loopback TCP round-trip of the line protocol, including
+//!   malformed-input errors, `stats`, `swap-model`, and `shutdown`.
+
+use mmbsgd::config::TrainConfig;
+use mmbsgd::data::synth::{dataset, SynthSpec};
+use mmbsgd::data::Split;
+use mmbsgd::error::ServeError;
+use mmbsgd::model::SvmModel;
+use mmbsgd::runtime::NativeBackend;
+use mmbsgd::serve::{
+    serve, BatchEngine, ModelRegistry, Predictor, RouteSpec, ServeOptions, ShedPolicy,
+};
+use mmbsgd::solver::bsgd;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+fn trained(seed: u64, budget: usize) -> (SvmModel, Split) {
+    let split = dataset(&SynthSpec::ijcnn_like(0.01), 2);
+    let cfg = TrainConfig {
+        lambda: 1e-3,
+        gamma: 2.0,
+        budget,
+        mergees: 3,
+        seed,
+        ..TrainConfig::default()
+    };
+    (bsgd::train(&split.train, &cfg).unwrap().model, split)
+}
+
+fn registry_of(models: Vec<(&str, SvmModel)>, seed: u64) -> ModelRegistry {
+    let mut reg = ModelRegistry::new(Box::new(NativeBackend::new()), seed);
+    for (name, m) in models {
+        reg.insert(name, m).unwrap();
+    }
+    reg
+}
+
+#[test]
+fn batched_decisions_bit_match_sequential_decision1() {
+    let (model, split) = trained(5, 24);
+    let mut reference = Predictor::native(model.clone()).unwrap();
+    for batch in [1usize, 7, 64] {
+        let mut reg = registry_of(vec![("m", model.clone())], 1);
+        let mut eng = BatchEngine::new(batch, 1024, ShedPolicy::Reject);
+        let n = batch.min(split.test.len());
+        let ids: Vec<u64> = (0..n)
+            .map(|i| eng.submit(&reg, None, split.test.x.row(i).to_vec()).unwrap())
+            .collect();
+        let res = eng.flush(&mut reg);
+        assert_eq!(res.len(), n, "batch {batch}");
+        for ((id, r), i) in res.into_iter().zip(0..n) {
+            assert_eq!(id, ids[i]);
+            let d = r.unwrap();
+            let want = reference.decision1(split.test.x.row(i)).unwrap();
+            assert_eq!(
+                d.value.to_bits(),
+                want.to_bits(),
+                "batch {batch} row {i}: {} vs {want}",
+                d.value
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_decisions_bit_match_under_threads() {
+    // Thread count is a wall-clock knob, never a numerics knob — the
+    // same guarantee the tile engine gives training.
+    let (model, split) = trained(7, 32);
+    let n = 40.min(split.test.len());
+    let mut want = Vec::new();
+    {
+        let mut reg = registry_of(vec![("m", model.clone())], 1);
+        let mut eng = BatchEngine::new(64, 1024, ShedPolicy::Reject);
+        for i in 0..n {
+            eng.submit(&reg, None, split.test.x.row(i).to_vec()).unwrap();
+        }
+        for (_, r) in eng.flush(&mut reg) {
+            want.push(r.unwrap().value);
+        }
+    }
+    for threads in [2usize, 4] {
+        let mut reg = registry_of(vec![("m", model.clone())], 1);
+        reg.set_threads(threads);
+        let mut eng = BatchEngine::new(64, 1024, ShedPolicy::Reject);
+        for i in 0..n {
+            eng.submit(&reg, None, split.test.x.row(i).to_vec()).unwrap();
+        }
+        for ((_, r), w) in eng.flush(&mut reg).into_iter().zip(&want) {
+            assert_eq!(r.unwrap().value.to_bits(), w.to_bits(), "threads {threads}");
+        }
+    }
+}
+
+#[test]
+fn shed_policies_at_full_queue() {
+    let (model, split) = trained(9, 16);
+    let q = |i: usize| split.test.x.row(i).to_vec();
+
+    // reject: the new request is refused, every admitted one answers
+    let mut reg = registry_of(vec![("m", model.clone())], 1);
+    let mut eng = BatchEngine::new(8, 4, ShedPolicy::Reject);
+    for i in 0..4 {
+        eng.submit(&reg, None, q(i)).unwrap();
+    }
+    assert_eq!(
+        eng.submit(&reg, None, q(4)).unwrap_err(),
+        ServeError::QueueFull { limit: 4 }
+    );
+    let res = eng.flush(&mut reg);
+    assert_eq!(res.len(), 4);
+    assert!(res.iter().all(|(_, r)| r.is_ok()));
+
+    // oldest: the head of the queue is displaced with a typed error
+    let mut reg = registry_of(vec![("m", model)], 1);
+    let mut eng = BatchEngine::new(8, 4, ShedPolicy::Oldest);
+    let first = eng.submit(&reg, None, q(0)).unwrap();
+    for i in 1..5 {
+        eng.submit(&reg, None, q(i)).unwrap();
+    }
+    assert_eq!(eng.queued(), 4);
+    let res = eng.flush(&mut reg);
+    assert_eq!(res.len(), 5);
+    assert_eq!(res[0].0, first);
+    assert_eq!(res[0].1, Err(ServeError::Shed));
+    assert!(res.iter().skip(1).all(|(_, r)| r.is_ok()));
+    assert_eq!(eng.stats().shed, 1);
+}
+
+#[test]
+fn ab_routing_is_deterministic_across_registries_and_threads() {
+    let (a, _) = trained(11, 16);
+    let (b, _) = trained(12, 16);
+    let spec = RouteSpec::new(vec![("a".into(), 2), ("b".into(), 1)]).unwrap();
+    let build = || {
+        let mut reg = registry_of(vec![("a", a.clone()), ("b", b.clone())], 77);
+        reg.set_route(spec.clone()).unwrap();
+        reg
+    };
+    let keys: Vec<String> = (0..500).map(|k| format!("req-{k}")).collect();
+    let reference: Vec<String> = {
+        let reg = build();
+        keys.iter().map(|k| reg.route_for(k.as_bytes()).unwrap()).collect()
+    };
+    // a fresh registry agrees key-for-key
+    let again = build();
+    for (k, want) in keys.iter().zip(&reference) {
+        assert_eq!(&again.route_for(k.as_bytes()).unwrap(), want);
+    }
+    // and so does every thread over its own registry
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let keys = &keys;
+            let reference = &reference;
+            let a = &a;
+            let b = &b;
+            let spec = &spec;
+            s.spawn(move || {
+                let mut reg = registry_of(vec![("a", a.clone()), ("b", b.clone())], 77);
+                reg.set_route(spec.clone()).unwrap();
+                for (k, want) in keys.iter().zip(reference) {
+                    assert_eq!(&reg.route_for(k.as_bytes()).unwrap(), want);
+                }
+            });
+        }
+    });
+    // the 2:1 weighting actually splits traffic (loose bounds)
+    let to_a = reference.iter().filter(|m| m.as_str() == "a").count();
+    assert!((250..=420).contains(&to_a), "arm a got {to_a} of 500");
+}
+
+/// Drive the full TCP server over a loopback socket: pipelined
+/// predict/decision, a malformed line mid-stream, stats, swap-model,
+/// shutdown — and check the answers against a local Predictor.
+#[test]
+fn loopback_tcp_round_trip() {
+    let (model, split) = trained(5, 24);
+    let dir = std::env::temp_dir().join(format!("mmbsgd_serve_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let swap_path = dir.join("swap.txt");
+    let (swap_model, _) = trained(6, 16);
+    swap_model.save(&swap_path).unwrap();
+
+    let mut reference = Predictor::native(model.clone()).unwrap();
+    let x0: Vec<f32> = split.test.x.row(0).to_vec();
+    let x1: Vec<f32> = split.test.x.row(1).to_vec();
+    let want0 = reference.decision1(&x0).unwrap();
+    let want1 = reference.decision1(&x1).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let fmt = |x: &[f32]| {
+        x.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(" ")
+    };
+    let lines = vec![
+        format!("decision key=alpha {}", fmt(&x0)),
+        format!("predict key=alpha {}", fmt(&x1)),
+        "predict 1 2 trailing-garbage".to_string(),
+        "no-such-command".to_string(),
+        format!("feedback key=alpha +1 {}", fmt(&x0)),
+        "stats".to_string(),
+        format!("swap-model m {}", swap_path.display()),
+        "swap-model ghost /nonexistent".to_string(),
+        "stats".to_string(),
+        "shutdown".to_string(),
+    ];
+    let n_lines = lines.len();
+
+    let client = std::thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        // pipeline everything in one write: replies must still come
+        // back one per line, in order
+        let payload: String =
+            lines.iter().map(|l| format!("{l}\n")).collect::<Vec<_>>().concat();
+        w.write_all(payload.as_bytes()).unwrap();
+        w.flush().unwrap();
+        let mut rd = BufReader::new(stream);
+        let mut replies = Vec::new();
+        for _ in 0..n_lines {
+            let mut line = String::new();
+            rd.read_line(&mut line).unwrap();
+            replies.push(line.trim().to_string());
+        }
+        replies
+    });
+
+    let reg = registry_of(vec![("m", model)], 1);
+    let opts = ServeOptions { batch_max: 8, queue_max: 64, ..ServeOptions::default() };
+    let report = serve(listener, reg, &opts).unwrap();
+    let replies = client.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+
+    assert_eq!(replies.len(), n_lines);
+    // decision: exact round-trip of the served bits
+    let d0: f64 = replies[0]
+        .strip_prefix("ok ")
+        .unwrap()
+        .split_whitespace()
+        .next()
+        .unwrap()
+        .parse()
+        .unwrap();
+    assert_eq!(d0.to_bits(), want0.to_bits(), "{} vs {want0}", replies[0]);
+    assert!(replies[0].ends_with("m@v1"), "{}", replies[0]);
+    // predict: label + decision
+    let mut it = replies[1].strip_prefix("ok ").unwrap().split_whitespace();
+    let label = it.next().unwrap();
+    let d1: f64 = it.next().unwrap().parse().unwrap();
+    assert_eq!(label, if want1 >= 0.0 { "+1" } else { "-1" });
+    assert_eq!(d1.to_bits(), want1.to_bits());
+    // malformed lines answer err without killing the connection
+    assert!(replies[2].starts_with("err "), "{}", replies[2]);
+    assert!(replies[3].starts_with("err "), "{}", replies[3]);
+    // feedback verdict against the known decision sign
+    let verdict = if want0 >= 0.0 { "ok hit" } else { "ok miss" };
+    assert!(replies[4].starts_with(verdict), "{} (f={want0})", replies[4]);
+    // stats carries the counters and the model list
+    assert!(replies[5].starts_with("ok served=3"), "{}", replies[5]);
+    assert!(replies[5].contains("m@v1:"), "{}", replies[5]);
+    assert!(replies[5].contains("feedback=1"), "{}", replies[5]);
+    // swap bumps the version; a bad swap is a per-request error
+    assert_eq!(replies[6], "ok m@v2");
+    assert!(replies[7].starts_with("err "), "{}", replies[7]);
+    assert!(replies[8].contains("m@v2:"), "{}", replies[8]);
+    assert_eq!(replies[9], "ok bye");
+    assert_eq!(report.connections, 1);
+    assert_eq!(report.engine.served, 3);
+}
