@@ -17,10 +17,14 @@ use bench_util::{bench, emit_json, enabled, group, recorded_median};
 use mmbsgd::budget::golden::{self, GS_ITERS};
 use mmbsgd::budget::{MaintenanceKind, Maintainer, MergeExec, MergeLut, MultiMerge, Projection};
 use mmbsgd::data::DenseMatrix;
-use mmbsgd::kernel::{sq_dist, EXP_NEG_CUTOFF};
+use mmbsgd::kernel::{simd, sq_dist, sq_dist_cached, sq_norm, EXP_NEG_CUTOFF};
 use mmbsgd::model::{SvStore, SvmModel};
 use mmbsgd::rng::Xoshiro256;
-use mmbsgd::runtime::{margin1_native, ArtifactRegistry, Backend, NativeBackend, XlaBackend};
+use mmbsgd::runtime::pool::partition;
+use mmbsgd::runtime::{
+    margin1_native, tile, ArtifactRegistry, Backend, NativeBackend, TileBounds, WorkerPool,
+    XlaBackend,
+};
 use mmbsgd::serve::{BatchEngine, ModelRegistry, Predictor, ShedPolicy};
 
 /// Worker count for the threaded tile-engine cases ("N" in the
@@ -61,6 +65,23 @@ fn margin1_seed_loop(svs: &SvStore, gamma: f64, x: &[f32]) -> f64 {
     let mut f = 0.0;
     for j in 0..svs.len() {
         let e = gamma * sq_dist(svs.point(j), x);
+        if e < EXP_NEG_CUTOFF {
+            f += svs.alpha(j) * (-e).exp();
+        }
+    }
+    f
+}
+
+/// The PR-3 margin inner loop: norm-cached per-pair distance with the
+/// `exp` call inlined behind the skip branch — the before side of the
+/// `speedup/exp_batched_vs_inline` ratio (the after side is today's
+/// `margin1_native`: block-kernel dots + one stripped exp pass).
+fn margin1_inline_exp(svs: &SvStore, gamma: f64, x: &[f32]) -> f64 {
+    let n_q = sq_norm(x);
+    let mut f = 0.0;
+    for j in 0..svs.len() {
+        let d2 = sq_dist_cached(svs.point(j), svs.norm2(j), x, n_q);
+        let e = gamma * d2;
         if e < EXP_NEG_CUTOFF {
             f += svs.alpha(j) * (-e).exp();
         }
@@ -133,6 +154,112 @@ fn main() {
             bn.set_threads(nt);
             bench(&format!("merge_batch/tiled-t{nt}/B{b}/d{d}/k{k}"), 300, || {
                 bn.merge_scores_batch(&svs, gamma, &cands)
+            });
+        }
+    }
+
+    if enabled("simd") {
+        group("SIMD substrate: runtime-dispatched dot vs forced-scalar reference");
+        for &d in &[32usize, 128, 300] {
+            let mut rng = Xoshiro256::new(41);
+            let q: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32).collect();
+            // 256 rows keep the working set L2-resident at every d, so
+            // the ratio measures arithmetic, not DRAM.
+            let n_rows = 256usize;
+            let rows: Vec<f32> = (0..n_rows * d)
+                .map(|_| rng.next_gaussian() as f32)
+                .collect();
+            bench(&format!("simd/dot-dispatch/d{d}"), 200, || {
+                let mut s = 0.0;
+                for r in 0..n_rows {
+                    s += simd::dot(&q, &rows[r * d..(r + 1) * d]);
+                }
+                s
+            });
+            bench(&format!("simd/dot-block/d{d}"), 200, || {
+                let mut out = vec![0.0f64; n_rows];
+                simd::dot_block(&q, &rows, d, &mut out);
+                out[0]
+            });
+            bench(&format!("simd/dot-scalar/d{d}"), 200, || {
+                let mut s = 0.0;
+                for r in 0..n_rows {
+                    s += simd::dot_scalar(&q, &rows[r * d..(r + 1) * d]);
+                }
+                s
+            });
+        }
+    }
+
+    if enabled("pool") {
+        let nt = bench_threads();
+        group("pool dispatch: persistent parked workers vs per-call scoped spawn");
+        for &(b, d, n) in &[(512usize, 64usize, 64usize), (512, 64, 128), (2048, 128, 256)] {
+            let svs = random_store(b, d, 17);
+            let bounds = TileBounds::of(&svs);
+            let mut rng = Xoshiro256::new(18);
+            let scale = (5.0 / (gamma * 2.0 * d as f64)).sqrt();
+            let rows: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..d).map(|_| (scale * rng.next_gaussian()) as f32).collect())
+                .collect();
+            let q = DenseMatrix::from_rows(rows.clone());
+            let pool = WorkerPool::new(nt);
+            let mut out = vec![0.0f64; n];
+            bench(&format!("pool/persistent-t{nt}/B{b}/d{d}/n{n}"), 300, || {
+                tile::margins_bounded_into(&svs, gamma, &q, &bounds, &pool, &mut out);
+                out[0]
+            });
+            // The scoped baseline replays the PR-3 design faithfully:
+            // the same fixed partition (TILE_Q row chunks), one fresh
+            // scoped thread per non-first chunk per pass, join on scope
+            // exit.  Chunk matrices are prebuilt so both sides time
+            // dispatch + compute, not packing.
+            let ranges = partition(n, nt, 32);
+            let chunk_qs: Vec<DenseMatrix> = ranges
+                .iter()
+                .map(|r| DenseMatrix::from_rows(rows[r.start..r.end].to_vec()))
+                .collect();
+            let single = WorkerPool::single();
+            let mut out2 = vec![0.0f64; n];
+            bench(&format!("pool/scoped-t{nt}/B{b}/d{d}/n{n}"), 300, || {
+                let mut parts: Vec<&mut [f64]> = Vec::with_capacity(ranges.len());
+                let mut rest = out2.as_mut_slice();
+                for r in &ranges {
+                    let (head, tail) = rest.split_at_mut(r.end - r.start);
+                    parts.push(head);
+                    rest = tail;
+                }
+                let (svs, bounds, single) = (&svs, &bounds, &single);
+                std::thread::scope(|s| {
+                    let mut work = chunk_qs.iter().zip(parts);
+                    let mine = work.next();
+                    for (qc, oc) in work {
+                        s.spawn(move || {
+                            tile::margins_bounded_into(svs, gamma, qc, bounds, single, oc)
+                        });
+                    }
+                    if let Some((qc, oc)) = mine {
+                        tile::margins_bounded_into(svs, gamma, qc, bounds, single, oc);
+                    }
+                });
+            });
+        }
+    }
+
+    if enabled("exp_batch") {
+        group("inner-loop restructuring: block dots + batched exp vs per-pair inline");
+        for &(b, d) in &[(512usize, 32usize), (2048, 64), (4096, 128)] {
+            let svs = random_store(b, d, 23);
+            let mut rng = Xoshiro256::new(24);
+            let scale = (5.0 / (gamma * 2.0 * d as f64)).sqrt();
+            let q: Vec<f32> = (0..d)
+                .map(|_| (scale * rng.next_gaussian()) as f32)
+                .collect();
+            bench(&format!("exp_batch/batched/B{b}/d{d}"), 200, || {
+                margin1_native(&svs, gamma, &q)
+            });
+            bench(&format!("exp_batch/inline/B{b}/d{d}"), 200, || {
+                margin1_inline_exp(&svs, gamma, &q)
             });
         }
     }
@@ -338,6 +465,36 @@ fn main() {
         {
             println!("serve micro-batch speedup at {shape}: {s:.2}x");
             derived.push((format!("speedup/serve_batched_vs_single/{shape}"), s));
+        }
+    }
+    // SIMD-substrate acceptance ratios (ISSUE 5 gate: 3 shapes each):
+    // dispatched vs forced-scalar dots, persistent vs scoped pool
+    // dispatch, batched-exp vs inline inner loop.
+    for &d in &[32usize, 128, 300] {
+        if let Some(s) =
+            ratio(&format!("simd/dot-scalar/d{d}"), &format!("simd/dot-dispatch/d{d}"))
+        {
+            println!("dot dispatch speedup at d={d}: {s:.2}x");
+            derived.push((format!("speedup/dot_simd_vs_scalar/d{d}"), s));
+        }
+    }
+    for &(b, d, n) in &[(512usize, 64usize, 64usize), (512, 64, 128), (2048, 128, 256)] {
+        let shape = format!("B{b}/d{d}/n{n}");
+        if let Some(s) = ratio(
+            &format!("pool/scoped-t{nt}/{shape}"),
+            &format!("pool/persistent-t{nt}/{shape}"),
+        ) {
+            println!("persistent-pool speedup at {shape}: {s:.2}x");
+            derived.push((format!("speedup/margins_persistent_vs_scoped/{shape}"), s));
+        }
+    }
+    for &(b, d) in &[(512usize, 32usize), (2048, 64), (4096, 128)] {
+        let shape = format!("B{b}/d{d}");
+        if let Some(s) =
+            ratio(&format!("exp_batch/inline/{shape}"), &format!("exp_batch/batched/{shape}"))
+        {
+            println!("batched-exp speedup at {shape}: {s:.2}x");
+            derived.push((format!("speedup/exp_batched_vs_inline/{shape}"), s));
         }
     }
     emit_json("BENCH_hotpaths.json", &derived);

@@ -10,6 +10,7 @@ pub use toml::{TomlDoc, TomlError, TomlValue};
 
 use crate::budget::{MaintenanceKind, MergeScoreMode};
 use crate::error::TrainError;
+use crate::kernel::SimdMode;
 use crate::serve::ShedPolicy;
 use anyhow::{bail, Context, Result};
 
@@ -88,6 +89,14 @@ pub struct TrainConfig {
     /// execution detail of the machine, not training state, and a run
     /// resumed with a different thread count stays bit-identical.
     pub threads: usize,
+    /// SIMD dispatch for the kernel inner loops: `auto` (runtime-detect
+    /// AVX2/SSE2/NEON — the default) or `scalar` (force the reference
+    /// path).  Like `threads`, a pure wall-clock knob — every dispatch
+    /// target is bit-identical (`rust/tests/simd_parity.rs`) — and
+    /// therefore also NOT serialized into checkpoints.  TOML
+    /// `simd_mode`, CLI `--simd-mode`; the `MMBSGD_FORCE_SCALAR`
+    /// environment variable overrides both.
+    pub simd_mode: SimdMode,
     /// Pending cost parameter C (paper Table 2 convention λ = 1/(n·C)),
     /// set by the TOML `c = ...` key or experiment specs.  Explicitly
     /// represented — no sentinel encoding in `lambda` — so a config
@@ -115,6 +124,7 @@ impl Default for TrainConfig {
             merge_score_mode: MergeScoreMode::Lut,
             prune_eps: 0.0,
             threads: 1,
+            simd_mode: SimdMode::Auto,
             cost_c: None,
         }
     }
@@ -221,6 +231,11 @@ impl TrainConfig {
                 }
                 "prune_eps" => self.prune_eps = val.as_f64().context("prune_eps")?,
                 "threads" => self.threads = toml_count_usize(val, "threads")?,
+                "simd_mode" => {
+                    let s = val.as_str().context("simd_mode")?;
+                    self.simd_mode = SimdMode::parse(s)
+                        .with_context(|| format!("bad simd_mode {s:?} (auto|scalar)"))?;
+                }
                 other => bail!("unknown [train] key {other:?}"),
             }
         }
@@ -256,6 +271,10 @@ pub struct ServeConfig {
     pub monitor_window: usize,
     /// Worker threads for the shared backend's batch paths.
     pub threads: usize,
+    /// SIMD dispatch for the margins inner loops (`auto` | `scalar`;
+    /// same semantics and strict parsing as the `[train]` key — a pure
+    /// wall-clock knob, replies are bit-identical either way).
+    pub simd_mode: SimdMode,
     /// Routing-hash seed: replicas that must agree on A/B assignment
     /// share a seed.
     pub seed: u64,
@@ -270,6 +289,7 @@ impl Default for ServeConfig {
             shed: ShedPolicy::Reject,
             monitor_window: 256,
             threads: 1,
+            simd_mode: SimdMode::Auto,
             seed: 1,
         }
     }
@@ -320,6 +340,11 @@ impl ServeConfig {
                     self.monitor_window = toml_count_usize(val, "monitor_window")?
                 }
                 "threads" => self.threads = toml_count_usize(val, "threads")?,
+                "simd_mode" => {
+                    let s = val.as_str().context("simd_mode")?;
+                    self.simd_mode = SimdMode::parse(s)
+                        .with_context(|| format!("bad simd_mode {s:?} (auto|scalar)"))?;
+                }
                 "seed" => self.seed = toml_count(val, "seed")?,
                 other => bail!("unknown [serve] key {other:?}"),
             }
@@ -427,7 +452,7 @@ mod tests {
         let doc = TomlDoc::parse(
             "[train]\nlambda = 0.5\ngamma = 2.0\nbudget = 128\nmergees = 4\n\
              maintenance = \"mergegd:4\"\nbackend = \"hybrid\"\nuse_bias = false\n\
-             merge_score_mode = \"exact\"\nthreads = 4\n",
+             merge_score_mode = \"exact\"\nthreads = 4\nsimd_mode = \"scalar\"\n",
         )
         .unwrap();
         let mut cfg = TrainConfig::default();
@@ -438,7 +463,25 @@ mod tests {
         assert_eq!(cfg.backend, BackendChoice::Hybrid);
         assert_eq!(cfg.merge_score_mode, MergeScoreMode::Exact);
         assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.simd_mode, SimdMode::Scalar);
         assert!(!cfg.use_bias);
+    }
+
+    #[test]
+    fn simd_mode_defaults_to_auto_and_parses_strictly() {
+        assert_eq!(TrainConfig::default().simd_mode, SimdMode::Auto);
+        assert_eq!(ServeConfig::default().simd_mode, SimdMode::Auto);
+        // unknown values fail at parse time in both sections
+        for doc in ["[train]\nsimd_mode = \"avx2\"\n", "[serve]\nsimd_mode = \"fast\"\n"] {
+            let doc = TomlDoc::parse(doc).unwrap();
+            let train_err = TrainConfig::default().apply_toml(&doc).is_err();
+            let serve_err = ServeConfig::default().apply_toml(&doc).is_err();
+            assert!(train_err || serve_err, "bogus simd_mode must be rejected");
+        }
+        let doc = TomlDoc::parse("[serve]\nsimd_mode = \"scalar\"\n").unwrap();
+        let mut scfg = ServeConfig::default();
+        scfg.apply_toml(&doc).unwrap();
+        assert_eq!(scfg.simd_mode, SimdMode::Scalar);
     }
 
     #[test]

@@ -7,7 +7,9 @@
 //! for sanity baselines.
 
 mod cache;
+pub mod simd;
 pub use cache::RowCache;
+pub use simd::{dot_block, Isa, SimdMode};
 
 /// A Mercer kernel over dense `f32` vectors.
 pub trait Kernel: Send + Sync {
@@ -21,66 +23,22 @@ pub trait Kernel: Send + Sync {
     fn name(&self) -> &'static str;
 }
 
-/// Squared euclidean distance (the single hottest scalar loop in the
-/// native backend; kept free of bounds checks via `chunks_exact`).
-///
-/// Perf note (EXPERIMENTS.md §Perf): 8 independent f32 lanes let LLVM
-/// emit one AVX2 8-wide FMA chain; the earlier 4-lane version pinned the
-/// loop to 128-bit vectors (~1.8× slower at d=128).
+/// Squared euclidean distance ‖a−b‖², runtime-dispatched to the best
+/// available ISA ([`simd::sq_dist`]: AVX2 / SSE2 / NEON / scalar, all
+/// bit-identical — the fixed 8-lane accumulator layout is the
+/// determinism contract, see the [`simd`] module docs).
 #[inline]
 pub fn sq_dist(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    const L: usize = 8;
-    let mut acc = [0.0f32; L];
-    let ca = a.chunks_exact(L);
-    let cb = b.chunks_exact(L);
-    let (ra, rb) = (ca.remainder(), cb.remainder());
-    for (xa, xb) in ca.zip(cb) {
-        for l in 0..L {
-            let d = xa[l] - xb[l];
-            // plain mul+add: LLVM fuses to FMA when the target has it;
-            // f32::mul_add would fall back to a libm call when it doesn't
-            acc[l] += d * d;
-        }
-    }
-    let mut s = 0.0f32;
-    for l in 0..L {
-        s += acc[l];
-    }
-    let mut s = s as f64;
-    for (x, y) in ra.iter().zip(rb) {
-        let d = (x - y) as f64;
-        s += d * d;
-    }
-    s
+    simd::sq_dist(a, b)
 }
 
-/// Dot product ⟨a,b⟩ with the same 8-lane accumulator layout as
-/// [`sq_dist`] (one AVX2 FMA chain per iteration).  The norm-cached hot
-/// paths prefer this over the difference form: one FMA per lane instead
-/// of a subtract plus an FMA.
+/// Dot product ⟨a,b⟩ with the same fixed 8-lane accumulator layout as
+/// [`sq_dist`], runtime-dispatched ([`simd::dot`]).  The norm-cached
+/// hot paths prefer this over the difference form: one multiply per
+/// lane instead of a subtract plus a multiply.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    const L: usize = 8;
-    let mut acc = [0.0f32; L];
-    let ca = a.chunks_exact(L);
-    let cb = b.chunks_exact(L);
-    let (ra, rb) = (ca.remainder(), cb.remainder());
-    for (xa, xb) in ca.zip(cb) {
-        for l in 0..L {
-            acc[l] += xa[l] * xb[l];
-        }
-    }
-    let mut s = 0.0f32;
-    for l in 0..L {
-        s += acc[l];
-    }
-    let mut s = s as f64;
-    for (x, y) in ra.iter().zip(rb) {
-        s += (*x as f64) * (*y as f64);
-    }
-    s
+    simd::dot(a, b)
 }
 
 /// Squared euclidean norm ‖a‖² (cached per SV by
@@ -110,7 +68,25 @@ const SQ_DIST_CANCEL_REL: f64 = 1e-4;
 /// nothing to cancellation.
 #[inline]
 pub fn sq_dist_cached(a: &[f32], norm2_a: f64, b: &[f32], norm2_b: f64) -> f64 {
-    let d2 = norm2_a + norm2_b - 2.0 * dot(a, b);
+    sq_dist_cached_with_dot(a, norm2_a, b, norm2_b, dot(a, b))
+}
+
+/// [`sq_dist_cached`] with the dot product supplied by the caller — the
+/// tile engine computes a whole block of dots through the
+/// [`simd::dot_block`] micro-kernel and feeds each one here, so the
+/// expansion *and the cancellation guard* stay byte-for-byte the same
+/// decision the per-pair path makes (`dot_block` values are
+/// bit-identical to [`dot`], and IEEE addition/multiplication are
+/// bitwise commutative, so argument order cannot change the result).
+#[inline]
+pub fn sq_dist_cached_with_dot(
+    a: &[f32],
+    norm2_a: f64,
+    b: &[f32],
+    norm2_b: f64,
+    dot_ab: f64,
+) -> f64 {
+    let d2 = norm2_a + norm2_b - 2.0 * dot_ab;
     if d2 < SQ_DIST_CANCEL_REL * (norm2_a + norm2_b) {
         sq_dist(a, b)
     } else {

@@ -1,0 +1,652 @@
+//! Explicit SIMD substrate for the kernel inner loops.
+//!
+//! PR 3's tile engine blocked the batch hot paths for cache locality
+//! but left the innermost `dot` / `sq_dist` loops to LLVM
+//! autovectorization — which, at the x86-64 *baseline* target every
+//! release binary is compiled for, means 128-bit SSE2 even on machines
+//! with 256-bit AVX2 units.  This module ends that roulette: the three
+//! kernel primitives are implemented per ISA with `core::arch`
+//! intrinsics and dispatched **at runtime**
+//! (`is_x86_feature_detected!`), so one binary runs 8-wide on AVX2
+//! hardware, 4-wide on bare SSE2/NEON, and scalar everywhere else.
+//!
+//! # The fixed-lane determinism contract
+//!
+//! Every path — scalar fallback included — computes the *identical*
+//! arithmetic:
+//!
+//! * products accumulate into the same **fixed [`LANES`] = 8 f32
+//!   accumulator lanes**, lane `l` owning elements `i ≡ l (mod 8)`;
+//! * each lane update is a separately rounded IEEE-754 multiply then
+//!   add.  The AVX2 path deliberately uses `mul_ps` + `add_ps`, **not**
+//!   `fmadd_ps`: FMA skips the intermediate rounding and would produce
+//!   different bits than the scalar lanes (the FMA capability is still
+//!   part of the [`Isa::Avx2Fma`] dispatch gate — it identifies the
+//!   µarch generation — it is just not allowed to change the math);
+//! * the horizontal reduction sums the 8 lanes **sequentially in lane
+//!   order** through one shared `finish_dot`/`finish_sq` helper, then
+//!   folds the `len % 8` remainder in f64, exactly like the pre-SIMD
+//!   scalar code.
+//!
+//! IEEE-754 single ops are exactly specified, so lane-parallel
+//! `mul`/`add`/`sub` produce the same bits as their scalar
+//! counterparts — results are **bit-identical across every dispatch
+//! target** (`rust/tests/simd_parity.rs` pins it, and CI re-runs the
+//! tile-engine suite under `MMBSGD_FORCE_SCALAR=1`).  That is what
+//! keeps the repo's pinned invariants (tile-engine parity, checkpoint
+//! resume, serve batched-vs-`decision1`) true on heterogeneous fleets:
+//! the ISA, like the thread count, is a pure wall-clock knob.
+//!
+//! # Escape hatch
+//!
+//! Two ways to force the scalar reference path, both safe to flip at
+//! any time *because* of the parity contract:
+//!
+//! * `MMBSGD_FORCE_SCALAR=1` in the environment (read once, wins over
+//!   everything — the CI dispatch-matrix smoke uses it);
+//! * [`set_mode`]`(SimdMode::Scalar)` — the `TrainConfig::simd_mode` /
+//!   `--simd-mode` plumbing.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+/// Accumulator lanes of every kernel primitive (see module docs).
+pub const LANES: usize = 8;
+
+/// SV rows per block-micro-kernel step: the query chunk is loaded once
+/// and reused across this many rows (4 accumulator vectors + the query
+/// and one row register stay comfortably within every ISA's register
+/// file).
+pub const BLOCK: usize = 4;
+
+/// Requested dispatch policy (`TrainConfig::simd_mode`, TOML
+/// `simd_mode`, `--simd-mode`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Runtime-detect the best ISA (the default).
+    Auto,
+    /// Force the scalar reference path (results are bit-identical
+    /// either way; this is a debugging / attribution knob).
+    Scalar,
+}
+
+impl SimdMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "auto" => Some(Self::Auto),
+            "scalar" => Some(Self::Scalar),
+            _ => None,
+        }
+    }
+
+    pub fn describe(&self) -> &'static str {
+        match self {
+            Self::Auto => "auto",
+            Self::Scalar => "scalar",
+        }
+    }
+}
+
+/// The instruction set actually executing the kernel primitives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar reference (also the forced-scalar escape hatch).
+    Scalar,
+    /// x86-64 baseline: two 128-bit vectors per 8-lane chunk.
+    Sse2,
+    /// 256-bit AVX2 with the FMA generation gate (one 8-lane vector per
+    /// chunk; FMA itself is unused — see the module docs).
+    Avx2Fma,
+    /// aarch64 NEON: two 128-bit vectors per 8-lane chunk.
+    Neon,
+}
+
+impl Isa {
+    pub fn describe(&self) -> &'static str {
+        match self {
+            Self::Scalar => "scalar",
+            Self::Sse2 => "sse2",
+            Self::Avx2Fma => "avx2+fma",
+            Self::Neon => "neon",
+        }
+    }
+}
+
+/// Process-wide forced-scalar flag ([`set_mode`]).  Relaxed ordering is
+/// enough: the flag only selects between bit-identical implementations,
+/// so a racing reader picking the stale path is still correct.
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Hardware detection result, cached after the first query (feature
+/// detection is a CPUID dance; the hot loops must not repeat it).
+static DETECTED: OnceLock<Isa> = OnceLock::new();
+
+fn env_forced_scalar() -> bool {
+    match std::env::var("MMBSGD_FORCE_SCALAR") {
+        Ok(v) => !(v.is_empty() || v == "0"),
+        Err(_) => false,
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn native_isa() -> Isa {
+    if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma") {
+        Isa::Avx2Fma
+    } else {
+        // SSE2 is part of the x86-64 baseline: always present.
+        Isa::Sse2
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn native_isa() -> Isa {
+    // NEON is mandatory on aarch64.
+    Isa::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn native_isa() -> Isa {
+    Isa::Scalar
+}
+
+fn detected() -> Isa {
+    *DETECTED.get_or_init(|| {
+        if env_forced_scalar() {
+            Isa::Scalar
+        } else {
+            native_isa()
+        }
+    })
+}
+
+/// Apply a requested [`SimdMode`].  `MMBSGD_FORCE_SCALAR` wins over
+/// `Auto` (the env var is the outermost escape hatch).  Safe to call at
+/// any point: every path is bit-identical, so in-flight computations
+/// cannot change value.
+pub fn set_mode(mode: SimdMode) {
+    FORCE_SCALAR.store(mode == SimdMode::Scalar, Ordering::Relaxed);
+}
+
+/// The mode currently requested through [`set_mode`].
+pub fn mode() -> SimdMode {
+    if FORCE_SCALAR.load(Ordering::Relaxed) {
+        SimdMode::Scalar
+    } else {
+        SimdMode::Auto
+    }
+}
+
+/// The ISA the kernel primitives dispatch to right now (mode and env
+/// overrides applied) — the value `mmbsgd train/evaluate/serve` print
+/// next to the effective-threads line.
+pub fn active_isa() -> Isa {
+    if FORCE_SCALAR.load(Ordering::Relaxed) {
+        Isa::Scalar
+    } else {
+        detected()
+    }
+}
+
+// ------------------------------------------------------------------
+// shared reduction tails (one implementation => provably same bits)
+// ------------------------------------------------------------------
+
+/// Sequential lane-order reduction + f64 remainder fold for a dot
+/// product.  Every ISA path funnels through this, so the reduction
+/// order is fixed by construction.
+#[inline]
+fn finish_dot(acc: [f32; LANES], ra: &[f32], rb: &[f32]) -> f64 {
+    let mut s = 0.0f32;
+    for v in acc {
+        s += v;
+    }
+    let mut s = s as f64;
+    for (x, y) in ra.iter().zip(rb) {
+        s += (*x as f64) * (*y as f64);
+    }
+    s
+}
+
+/// [`finish_dot`]'s squared-distance twin (f64 difference form on the
+/// remainder, as the pre-SIMD scalar loop did).
+#[inline]
+fn finish_sq(acc: [f32; LANES], ra: &[f32], rb: &[f32]) -> f64 {
+    let mut s = 0.0f32;
+    for v in acc {
+        s += v;
+    }
+    let mut s = s as f64;
+    for (x, y) in ra.iter().zip(rb) {
+        let d = (x - y) as f64;
+        s += d * d;
+    }
+    s
+}
+
+// ------------------------------------------------------------------
+// scalar reference path
+// ------------------------------------------------------------------
+
+/// Scalar reference dot product — the 8-lane loop every vector path
+/// must match bit-for-bit.  Public for the parity suite and the
+/// `speedup/dot_simd_vs_scalar` bench; production code calls the
+/// dispatched [`dot`].
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; LANES];
+    let ca = a.chunks_exact(LANES);
+    let cb = b.chunks_exact(LANES);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        for (l, v) in acc.iter_mut().enumerate() {
+            // plain mul + add: each op separately rounded — the
+            // contract every ISA path reproduces
+            *v += xa[l] * xb[l];
+        }
+    }
+    finish_dot(acc, ra, rb)
+}
+
+/// Scalar reference squared distance (same lane layout as
+/// [`dot_scalar`]).
+pub fn sq_dist_scalar(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; LANES];
+    let ca = a.chunks_exact(LANES);
+    let cb = b.chunks_exact(LANES);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        for (l, v) in acc.iter_mut().enumerate() {
+            let d = xa[l] - xb[l];
+            *v += d * d;
+        }
+    }
+    finish_sq(acc, ra, rb)
+}
+
+/// Scalar reference multi-row kernel: `out[r] = dot(q, rows[r])`.
+/// Definitionally row-wise, so vector block kernels that interleave
+/// rows must still equal it per row (they do: lanes are independent).
+pub fn dot_block_scalar(q: &[f32], rows: &[f32], dim: usize, out: &mut [f64]) {
+    debug_assert_eq!(rows.len(), out.len() * dim);
+    for (k, o) in out.iter_mut().enumerate() {
+        *o = dot_scalar(q, &rows[k * dim..(k + 1) * dim]);
+    }
+}
+
+// ------------------------------------------------------------------
+// dispatched entry points
+// ------------------------------------------------------------------
+
+#[inline]
+fn dot_isa(isa: Isa, a: &[f32], b: &[f32]) -> f64 {
+    match isa {
+        // SAFETY: `Isa::Avx2Fma` is only ever produced by `native_isa`
+        // after a positive runtime `is_x86_feature_detected!("avx2")`.
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma => unsafe { x86::dot_avx2(a, b) },
+        // SAFETY: SSE2 is unconditionally part of the x86-64 baseline.
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => unsafe { x86::dot_sse2(a, b) },
+        // SAFETY: NEON is unconditionally available on aarch64.
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { arm::dot_neon(a, b) },
+        _ => dot_scalar(a, b),
+    }
+}
+
+#[inline]
+fn sq_dist_isa(isa: Isa, a: &[f32], b: &[f32]) -> f64 {
+    match isa {
+        // SAFETY: see `dot_isa` — same detection guarantees.
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma => unsafe { x86::sq_dist_avx2(a, b) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => unsafe { x86::sq_dist_sse2(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { arm::sq_dist_neon(a, b) },
+        _ => sq_dist_scalar(a, b),
+    }
+}
+
+/// Runtime-dispatched dot product ⟨a,b⟩ — bit-identical to
+/// [`dot_scalar`] on every ISA.  Mismatched lengths are a caller bug
+/// (debug-asserted); release builds truncate to the shorter slice on
+/// every path — the scalar `chunks_exact` + `zip` semantics — and
+/// never read out of bounds.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    dot_isa(active_isa(), a, b)
+}
+
+/// Runtime-dispatched squared distance ‖a−b‖² — bit-identical to
+/// [`sq_dist_scalar`] on every ISA.  Same length contract as [`dot`]:
+/// mismatches truncate, never read out of bounds.
+#[inline]
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    sq_dist_isa(active_isa(), a, b)
+}
+
+/// Multi-row micro-kernel: `out[r] = ⟨q, rows[r·dim .. (r+1)·dim]⟩` for
+/// every row of a contiguous row-major block (the flat `SvStore`
+/// layout).  Rows are processed [`BLOCK`] at a time with the query
+/// chunk loaded **once** per step and reused across the block — the
+/// query stops round-tripping through the load units once per row,
+/// which is where a queries×SVs kernel block spends most of its
+/// bandwidth.  Per row the result is bit-identical to [`dot`] (lane
+/// accumulators are per-row; interleaving changes nothing).
+pub fn dot_block(q: &[f32], rows: &[f32], dim: usize, out: &mut [f64]) {
+    // Real asserts, not debug: the block micro-kernels do raw loads
+    // sized by these shapes, so a caller bug must fail loudly here
+    // rather than read out of bounds in release (one branch per
+    // dot_block call — amortized over up to `out.len() · dim` lanes).
+    assert_eq!(q.len(), dim, "dot_block: query/dim mismatch");
+    assert_eq!(rows.len(), out.len() * dim, "dot_block: rows/out shape mismatch");
+    let isa = active_isa();
+    let mut r = 0;
+    while r + BLOCK <= out.len() {
+        let rs = &rows[r * dim..(r + BLOCK) * dim];
+        let os = &mut out[r..r + BLOCK];
+        match isa {
+            // SAFETY: see `dot_isa` — same detection guarantees.
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2Fma => unsafe { x86::dot_block4_avx2(q, rs, dim, os) },
+            #[cfg(target_arch = "x86_64")]
+            Isa::Sse2 => unsafe { x86::dot_block4_sse2(q, rs, dim, os) },
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => unsafe { arm::dot_block4_neon(q, rs, dim, os) },
+            _ => dot_block_scalar(q, rs, dim, os),
+        }
+        r += BLOCK;
+    }
+    // tail rows (< BLOCK): plain per-row dots on the same ISA
+    for (k, o) in out.iter_mut().enumerate().skip(r) {
+        *o = dot_isa(isa, q, &rows[k * dim..(k + 1) * dim]);
+    }
+}
+
+// ------------------------------------------------------------------
+// x86-64 paths
+// ------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{finish_dot, finish_sq, BLOCK, LANES};
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.  (Bounds:
+    /// the trip count is derived from the *shorter* slice — mismatched
+    /// lengths truncate like the scalar `chunks_exact` + `zip` loop,
+    /// never read past either allocation.)
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f64 {
+        let len = a.len().min(b.len());
+        let n = len - len % LANES;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < n {
+            let va = _mm256_loadu_ps(pa.add(i));
+            let vb = _mm256_loadu_ps(pb.add(i));
+            // mul + add, NOT fmadd: see the module determinism contract
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(va, vb));
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        finish_dot(lanes, &a[n..], &b[n..])
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.  Bounds: see
+    /// [`dot_avx2`] — min-length trip count, no out-of-bounds reads.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn sq_dist_avx2(a: &[f32], b: &[f32]) -> f64 {
+        let len = a.len().min(b.len());
+        let n = len - len % LANES;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < n {
+            let d = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(d, d));
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        finish_sq(lanes, &a[n..], &b[n..])
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime; `out.len()`
+    /// must be [`BLOCK`] and `rows.len()` must be `BLOCK * dim`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot_block4_avx2(q: &[f32], rows: &[f32], dim: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), BLOCK);
+        debug_assert_eq!(rows.len(), BLOCK * dim);
+        let n = dim - dim % LANES;
+        let (qp, rp) = (q.as_ptr(), rows.as_ptr());
+        let mut acc = [_mm256_setzero_ps(); BLOCK];
+        let mut i = 0;
+        while i < n {
+            let vq = _mm256_loadu_ps(qp.add(i));
+            for (r, a) in acc.iter_mut().enumerate() {
+                let vr = _mm256_loadu_ps(rp.add(r * dim + i));
+                *a = _mm256_add_ps(*a, _mm256_mul_ps(vq, vr));
+            }
+            i += LANES;
+        }
+        for (r, (o, a)) in out.iter_mut().zip(acc).enumerate() {
+            let mut lanes = [0.0f32; LANES];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), a);
+            *o = finish_dot(lanes, &q[n..], &rows[r * dim + n..(r + 1) * dim]);
+        }
+    }
+
+    /// # Safety
+    /// SSE2 is part of the x86-64 baseline; always safe there.
+    /// Bounds: see [`dot_avx2`] — min-length trip count.
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn dot_sse2(a: &[f32], b: &[f32]) -> f64 {
+        let len = a.len().min(b.len());
+        let n = len - len % LANES;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut lo = _mm_setzero_ps();
+        let mut hi = _mm_setzero_ps();
+        let mut i = 0;
+        while i < n {
+            lo = _mm_add_ps(lo, _mm_mul_ps(_mm_loadu_ps(pa.add(i)), _mm_loadu_ps(pb.add(i))));
+            hi = _mm_add_ps(
+                hi,
+                _mm_mul_ps(_mm_loadu_ps(pa.add(i + 4)), _mm_loadu_ps(pb.add(i + 4))),
+            );
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm_storeu_ps(lanes.as_mut_ptr(), lo);
+        _mm_storeu_ps(lanes.as_mut_ptr().add(4), hi);
+        finish_dot(lanes, &a[n..], &b[n..])
+    }
+
+    /// # Safety
+    /// SSE2 is part of the x86-64 baseline; always safe there.
+    /// Bounds: see [`dot_avx2`] — min-length trip count.
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn sq_dist_sse2(a: &[f32], b: &[f32]) -> f64 {
+        let len = a.len().min(b.len());
+        let n = len - len % LANES;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut lo = _mm_setzero_ps();
+        let mut hi = _mm_setzero_ps();
+        let mut i = 0;
+        while i < n {
+            let dl = _mm_sub_ps(_mm_loadu_ps(pa.add(i)), _mm_loadu_ps(pb.add(i)));
+            let dh = _mm_sub_ps(_mm_loadu_ps(pa.add(i + 4)), _mm_loadu_ps(pb.add(i + 4)));
+            lo = _mm_add_ps(lo, _mm_mul_ps(dl, dl));
+            hi = _mm_add_ps(hi, _mm_mul_ps(dh, dh));
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm_storeu_ps(lanes.as_mut_ptr(), lo);
+        _mm_storeu_ps(lanes.as_mut_ptr().add(4), hi);
+        finish_sq(lanes, &a[n..], &b[n..])
+    }
+
+    /// # Safety
+    /// SSE2 baseline; `out.len() == BLOCK`, `rows.len() == BLOCK * dim`.
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn dot_block4_sse2(q: &[f32], rows: &[f32], dim: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), BLOCK);
+        debug_assert_eq!(rows.len(), BLOCK * dim);
+        let n = dim - dim % LANES;
+        let (qp, rp) = (q.as_ptr(), rows.as_ptr());
+        let mut lo = [_mm_setzero_ps(); BLOCK];
+        let mut hi = [_mm_setzero_ps(); BLOCK];
+        let mut i = 0;
+        while i < n {
+            let ql = _mm_loadu_ps(qp.add(i));
+            let qh = _mm_loadu_ps(qp.add(i + 4));
+            for (r, (l, h)) in lo.iter_mut().zip(hi.iter_mut()).enumerate() {
+                let base = r * dim + i;
+                *l = _mm_add_ps(*l, _mm_mul_ps(ql, _mm_loadu_ps(rp.add(base))));
+                *h = _mm_add_ps(*h, _mm_mul_ps(qh, _mm_loadu_ps(rp.add(base + 4))));
+            }
+            i += LANES;
+        }
+        for (r, o) in out.iter_mut().enumerate() {
+            let mut lanes = [0.0f32; LANES];
+            _mm_storeu_ps(lanes.as_mut_ptr(), lo[r]);
+            _mm_storeu_ps(lanes.as_mut_ptr().add(4), hi[r]);
+            *o = finish_dot(lanes, &q[n..], &rows[r * dim + n..(r + 1) * dim]);
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// aarch64 NEON paths
+// ------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::{finish_dot, finish_sq, BLOCK, LANES};
+    use std::arch::aarch64::*;
+
+    /// # Safety
+    /// NEON is mandatory on aarch64; always safe there.  Bounds: trip
+    /// count from the shorter slice — no out-of-bounds reads.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f64 {
+        let len = a.len().min(b.len());
+        let n = len - len % LANES;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut lo = vdupq_n_f32(0.0);
+        let mut hi = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i < n {
+            // vmul + vadd, not vfma: the determinism contract again
+            lo = vaddq_f32(lo, vmulq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i))));
+            hi = vaddq_f32(hi, vmulq_f32(vld1q_f32(pa.add(i + 4)), vld1q_f32(pb.add(i + 4))));
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        vst1q_f32(lanes.as_mut_ptr(), lo);
+        vst1q_f32(lanes.as_mut_ptr().add(4), hi);
+        finish_dot(lanes, &a[n..], &b[n..])
+    }
+
+    /// # Safety
+    /// NEON is mandatory on aarch64; always safe there.  Bounds: trip
+    /// count from the shorter slice — no out-of-bounds reads.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn sq_dist_neon(a: &[f32], b: &[f32]) -> f64 {
+        let len = a.len().min(b.len());
+        let n = len - len % LANES;
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut lo = vdupq_n_f32(0.0);
+        let mut hi = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i < n {
+            let dl = vsubq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+            let dh = vsubq_f32(vld1q_f32(pa.add(i + 4)), vld1q_f32(pb.add(i + 4)));
+            lo = vaddq_f32(lo, vmulq_f32(dl, dl));
+            hi = vaddq_f32(hi, vmulq_f32(dh, dh));
+            i += LANES;
+        }
+        let mut lanes = [0.0f32; LANES];
+        vst1q_f32(lanes.as_mut_ptr(), lo);
+        vst1q_f32(lanes.as_mut_ptr().add(4), hi);
+        finish_sq(lanes, &a[n..], &b[n..])
+    }
+
+    /// # Safety
+    /// NEON mandatory; `out.len() == BLOCK`, `rows.len() == BLOCK * dim`.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dot_block4_neon(q: &[f32], rows: &[f32], dim: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), BLOCK);
+        debug_assert_eq!(rows.len(), BLOCK * dim);
+        let n = dim - dim % LANES;
+        let (qp, rp) = (q.as_ptr(), rows.as_ptr());
+        let mut lo = [vdupq_n_f32(0.0); BLOCK];
+        let mut hi = [vdupq_n_f32(0.0); BLOCK];
+        let mut i = 0;
+        while i < n {
+            let ql = vld1q_f32(qp.add(i));
+            let qh = vld1q_f32(qp.add(i + 4));
+            for (r, (l, h)) in lo.iter_mut().zip(hi.iter_mut()).enumerate() {
+                let base = r * dim + i;
+                *l = vaddq_f32(*l, vmulq_f32(ql, vld1q_f32(rp.add(base))));
+                *h = vaddq_f32(*h, vmulq_f32(qh, vld1q_f32(rp.add(base + 4))));
+            }
+            i += LANES;
+        }
+        for (r, o) in out.iter_mut().enumerate() {
+            let mut lanes = [0.0f32; LANES];
+            vst1q_f32(lanes.as_mut_ptr(), lo[r]);
+            vst1q_f32(lanes.as_mut_ptr().add(4), hi[r]);
+            *o = finish_dot(lanes, &q[n..], &rows[r * dim + n..(r + 1) * dim]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Dispatch parity over ragged dims / row counts lives in
+    // `rust/tests/simd_parity.rs` (one home for the contract; CI runs
+    // that suite under both dispatch modes).  The unit tests here
+    // cover only what the integration suite does not: bitwise
+    // commutativity and the mode/ISA plumbing.
+    use super::*;
+
+    fn vecs(d: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = crate::rng::Xoshiro256::new(seed);
+        let a: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32 * 1.7).collect();
+        let b: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32 * 0.6 - 0.3).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn dot_is_bitwise_commutative() {
+        // The tile engine relies on dot(q, x) == dot(x, q) bitwise (it
+        // feeds dot_block values into expansions written either way).
+        for d in [1usize, 7, 8, 33, 300] {
+            let (a, b) = vecs(d, d as u64 + 7);
+            assert_eq!(dot(&a, &b).to_bits(), dot(&b, &a).to_bits(), "d={d}");
+            assert_eq!(sq_dist(&a, &b).to_bits(), sq_dist(&b, &a).to_bits(), "d={d}");
+        }
+    }
+
+    #[test]
+    fn mode_round_trip_and_parse() {
+        assert_eq!(SimdMode::parse("auto"), Some(SimdMode::Auto));
+        assert_eq!(SimdMode::parse("scalar"), Some(SimdMode::Scalar));
+        assert_eq!(SimdMode::parse("avx2"), None);
+        for m in [SimdMode::Auto, SimdMode::Scalar] {
+            assert_eq!(SimdMode::parse(m.describe()), Some(m));
+        }
+        // Isa labels are stable (they land in perf reports)
+        assert_eq!(Isa::Avx2Fma.describe(), "avx2+fma");
+    }
+}

@@ -14,6 +14,7 @@
 use anyhow::{anyhow, bail, Context, Result};
 use mmbsgd::budget::{MaintenanceKind, MergeScoreMode};
 use mmbsgd::config::{BackendChoice, ServeConfig, TomlDoc, TrainConfig};
+use mmbsgd::kernel::{simd, SimdMode};
 use mmbsgd::coordinator::{build_backend, ProgressObserver};
 use mmbsgd::data::synth::SynthSpec;
 use mmbsgd::data::{libsvm, split, Split};
@@ -144,18 +145,51 @@ fn train_config(args: &Args, split: &Split) -> Result<TrainConfig> {
             .with_context(|| format!("bad --merge-score-mode {m:?} (exact|lut)"))?;
     }
     cfg.threads = args.get_parse("threads", cfg.threads)?;
+    if let Some(mode) = parse_simd_flag(args)? {
+        cfg.simd_mode = mode;
+    }
     cfg.resolve_c(split.train.len());
     cfg.validate()?;
     Ok(cfg)
 }
 
-/// Report the worker-thread count actually in effect (the perf report
-/// attribution line) and warn when the request oversubscribes the
-/// machine — results are bit-identical either way, but wall-clock
-/// numbers taken that way are not comparable.
+/// Parse a `--simd-mode` flag if present (`None` = flag absent) — the
+/// single home of the accepted values and the error wording.
+fn parse_simd_flag(args: &Args) -> Result<Option<SimdMode>> {
+    match args.get("simd-mode") {
+        Some(s) => SimdMode::parse(s)
+            .map(Some)
+            .with_context(|| format!("bad --simd-mode {s:?} (auto|scalar)")),
+        None => Ok(None),
+    }
+}
+
+/// Apply a `--simd-mode` flag (default: the config's value) to the
+/// process-wide kernel dispatch.  `MMBSGD_FORCE_SCALAR` overrides both
+/// (handled inside the kernel); results are bit-identical either way.
+fn apply_simd_mode(args: &Args, default: SimdMode) -> Result<()> {
+    simd::set_mode(parse_simd_flag(args)?.unwrap_or(default));
+    Ok(())
+}
+
+/// Report the worker-thread count actually in effect plus the SIMD ISA
+/// and pool dispatch mode (the perf attribution lines), and warn when
+/// the request oversubscribes the machine — results are bit-identical
+/// either way, but wall-clock numbers taken that way are not
+/// comparable.
 fn report_threads(requested: usize, effective: usize) {
     let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     println!("[perf ] effective threads: {effective} (requested {requested}, available {avail})");
+    let pool = if effective > 1 {
+        format!("persistent x{effective} ({} parked workers)", effective - 1)
+    } else {
+        "inline".to_string()
+    };
+    println!(
+        "[perf ] simd isa: {} (mode {}) | pool: {pool}",
+        simd::active_isa().describe(),
+        simd::mode().describe(),
+    );
     if requested > avail {
         eprintln!(
             "[warn ] --threads {requested} exceeds available parallelism ({avail}); \
@@ -233,10 +267,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         // allow extending the run: `--epochs` on resume overrides
         let epochs = args.get_parse("epochs", ck.config().epochs)?;
         ck.config_mut().epochs = epochs;
-        // threads are an execution detail, not checkpointed state —
-        // resumed results are bit-identical for any worker count
+        // threads and SIMD dispatch are execution details, not
+        // checkpointed state — resumed results are bit-identical for
+        // any worker count and any ISA (the session re-applies the
+        // config values, so the flags go through the config)
         let threads = args.get_parse("threads", ck.config().threads)?;
         ck.config_mut().threads = threads;
+        if let Some(mode) = parse_simd_flag(args)? {
+            ck.config_mut().simd_mode = mode;
+        }
+        simd::set_mode(ck.config().simd_mode);
         backend = build_backend(ck.config().backend)?;
         report_threads(threads, backend.set_threads(threads));
         println!(
@@ -265,6 +305,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             cfg.gamma,
             cfg.backend,
         );
+        simd::set_mode(cfg.simd_mode);
         backend = build_backend(cfg.backend)?;
         report_threads(cfg.threads, backend.set_threads(cfg.threads));
         TrainSession::new(cfg, backend.as_mut())?
@@ -299,6 +340,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 /// reports them, `predict` stays silent (its stdout is the
 /// prediction stream).
 fn load_predictor(args: &Args) -> Result<(Predictor, usize, usize)> {
+    apply_simd_mode(args, SimdMode::Auto)?;
     let model_path = args.get("model").context("--model required")?;
     let model = SvmModel::load(Path::new(model_path))?;
     let choice = match args.get("backend") {
@@ -379,8 +421,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     scfg.monitor_window = args.get_parse("monitor-window", scfg.monitor_window)?;
     scfg.threads = args.get_parse("threads", scfg.threads)?;
+    if let Some(mode) = parse_simd_flag(args)? {
+        scfg.simd_mode = mode;
+    }
     scfg.seed = args.get_parse("seed", scfg.seed)?;
     scfg.validate()?;
+    simd::set_mode(scfg.simd_mode);
 
     let specs = args.get_all("model");
     if specs.is_empty() {
@@ -555,6 +601,7 @@ COMMANDS
                [--mergees M] [--maintenance removal|projection|merge[:M]|mergegd[:M]]
                [--backend native|xla|hybrid] [--merge-score-mode lut|exact]
                [--c F | --lambda F] [--gamma F] [--threads N]
+               [--simd-mode auto|scalar]
                [--epochs N] [--seed N] [--eval-every N] [--config file.toml]
                [--save model.txt] [--test libsvm-path] [--quiet]
                [--checkpoint ckpt.txt] [--checkpoint-every STEPS]
@@ -568,12 +615,14 @@ COMMANDS
                independent cadences: whichever fires first writes; the
                clock is checked at step-chunk boundaries.
   evaluate     --model model.txt --dataset <...> [--scale F] [--backend B]
-               [--threads N]
+               [--threads N] [--simd-mode auto|scalar]
   predict      --model model.txt --input data.libsvm [--backend B] [--threads N]
+               [--simd-mode auto|scalar]
   serve        --model name=model.txt[:weight] [--model b=other.txt:1 ...]
                [--addr host:port] [--batch-max N] [--queue-max N]
                [--shed reject|oldest] [--monitor-window N] [--threads N]
-               [--seed N] [--backend B] [--config file.toml]
+               [--simd-mode auto|scalar] [--seed N] [--backend B]
+               [--config file.toml]
                long-lived TCP line-protocol server: micro-batched
                predict/decision, weighted deterministic A/B routing
                across the named models (same key => same model),

@@ -93,6 +93,10 @@ impl Backend for HybridBackend {
         self.native.set_threads(threads)
     }
 
+    fn worker_spawns(&self) -> u64 {
+        self.native.worker_spawns()
+    }
+
     fn margins(&mut self, svs: &SvStore, gamma: f64, queries: &DenseMatrix) -> Vec<f64> {
         // Batched: the artifact's blocked matmul wins; tiny batches and
         // out-of-lattice budgets fall back to native.

@@ -110,6 +110,15 @@ pub trait Backend {
         1
     }
 
+    /// OS worker threads ever created by this backend's pool — the
+    /// `pool_reuse` accounting behind `rust/tests/serve_engine.rs`.
+    /// With the persistent [`pool::WorkerPool`] this moves exactly once
+    /// per [`Backend::set_threads`] (by `threads − 1`) and stays flat
+    /// across every batch pass; backends without a pool report 0.
+    fn worker_spawns(&self) -> u64 {
+        0
+    }
+
     /// Decision values (no bias) for a batch of query rows.
     fn margins(&mut self, svs: &SvStore, gamma: f64, queries: &DenseMatrix) -> Vec<f64>;
 

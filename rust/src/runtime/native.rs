@@ -9,21 +9,23 @@
 //!
 //! All distance computations go through the store's norm cache:
 //! `d² = ‖x‖² + ‖q‖² − 2⟨x,q⟩` with the query norm hoisted out of the
-//! B-loop, so the inner loop is a pure dot product that LLVM
-//! autovectorizes into one FMA chain (EXPERIMENTS.md §Perf).  The
+//! B-loop, so the inner loop is a pure dot product — executed by the
+//! explicitly vectorized, runtime-dispatched SIMD block micro-kernel
+//! (`crate::kernel::simd`, bit-identical across AVX2/SSE2/NEON/scalar)
+//! rather than left to autovectorization (EXPERIMENTS.md §Perf).  The
 //! batch paths (margins, merge scoring) run through the cache-blocked
 //! [`tile`] engine with backend-owned scratch — no allocation after
-//! warm-up — and shard across a deterministic [`WorkerPool`]; the
-//! per-step [`margin1_native`] loop stays scalar (a single query has no
-//! blocking to exploit, and threading a Θ(B·K) scan would cost more in
-//! spawn latency than it saves).
+//! warm-up — and shard across a persistent deterministic
+//! [`WorkerPool`]; the per-step [`margin1_native`] loop stays
+//! single-threaded (threading a Θ(B·K) scan would cost more in hand-off
+//! latency than it saves) but runs the same blocked inner kernel.
 
 use super::pool::WorkerPool;
 use super::tile::{self, TileScratch};
 use super::{Backend, MergeScores, ScoredPair};
 use crate::budget::lut::MergeScoreMode;
 use crate::data::DenseMatrix;
-use crate::kernel::{sq_dist_cached, sq_norm, Gaussian, Kernel, EXP_NEG_CUTOFF};
+use crate::kernel::{sq_norm, Gaussian, Kernel};
 use crate::model::SvStore;
 
 /// MM-GD fixed iteration count / initial step (mirrors
@@ -84,8 +86,18 @@ impl Backend for NativeBackend {
     }
 
     fn set_threads(&mut self, threads: usize) -> usize {
-        self.pool = WorkerPool::new(threads);
+        // A persistent pool owns parked OS threads: only rebuild when
+        // the width actually changes (a redundant call must not churn
+        // workers), and a resize carries the spawn counter forward so
+        // `worker_spawns` stays the monotone ever-created count.
+        if threads.max(1) != self.pool.threads() {
+            self.pool = self.pool.resized(threads);
+        }
         self.pool.threads()
+    }
+
+    fn worker_spawns(&self) -> u64 {
+        self.pool.spawn_events()
     }
 
     fn margins(&mut self, svs: &SvStore, gamma: f64, queries: &DenseMatrix) -> Vec<f64> {
@@ -151,24 +163,27 @@ impl Backend for NativeBackend {
 ///
 /// Perf notes (EXPERIMENTS.md §Perf):
 /// * norm-cached distances: `‖q‖²` computed once per query, `‖x_j‖²`
-///   read from the store cache, so the inner loop is a pure dot product
-///   (one 8-lane FMA chain — the seed's difference form needed a
-///   subtract per lane on top);
-/// * far SVs (γd² > [`EXP_NEG_CUTOFF`]) contribute < e⁻⁴⁰ ≈ 4e-18 and
-///   skip the `exp` call entirely — the dominant cost on clustered data;
+///   read from the store cache, so the inner loop is a pure dot
+///   product — computed for whole runs of SV rows by the
+///   runtime-dispatched SIMD block micro-kernel
+///   (`kernel::simd::dot_block`: explicit AVX2/SSE2/NEON lanes, query
+///   chunks loaded once per row block, bit-identical to the scalar
+///   reference on every ISA);
+/// * far SVs (γd² > `kernel::EXP_NEG_CUTOFF`) contribute < e⁻⁴⁰ ≈ 4e-18
+///   and are dropped before the exponent stage; the survivors'
+///   exponents are staged contiguously and evaluated in one stripped
+///   `exp` loop (`tile::accumulate_rows` — the same inner kernel the
+///   batch paths run, so single-query and batched margins share their
+///   bits by construction);
 /// * contiguous row iteration over the flat point storage.
 #[inline]
 pub fn margin1_native(svs: &SvStore, gamma: f64, x: &[f32]) -> f64 {
     let n_q = sq_norm(x);
-    let mut f = 0.0;
-    for j in 0..svs.len() {
-        let d2 = sq_dist_cached(svs.point(j), svs.norm2(j), x, n_q);
-        let e = gamma * d2;
-        if e < EXP_NEG_CUTOFF {
-            f += svs.alpha(j) * (-e).exp();
-        }
-    }
-    f
+    // Thread-local scratch: this runs once per SGD step, and a fresh
+    // zeroed 3 KiB RowAccum per call would tax the smallest budgets.
+    tile::with_margin1_scratch(|scratch| {
+        tile::accumulate_rows(svs, gamma, x, n_q, 0..svs.len(), scratch, 0.0)
+    })
 }
 
 /// MM-GD in pure rust (mirrors `kernels/ref.py::merge_gd`): maximize

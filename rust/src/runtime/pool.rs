@@ -1,41 +1,256 @@
-//! Deterministic scoped worker pool for the tiled batch hot paths.
+//! Persistent, deterministic worker pool for the tiled batch hot paths.
+//!
+//! PR 3's pool spawned `std::thread::scope` workers on **every** batch
+//! call — fine when a pass shards hundreds of queries, but serving
+//! micro-batches (and the per-event merge scoring cadence) pay the
+//! ~tens-of-µs spawn+join tax once per pass.  This rebuild keeps the
+//! workers alive: `threads − 1` OS threads are created **once** at pool
+//! construction, park on a condvar between calls, and a batch hand-off
+//! costs one mutex/notify round-trip instead of thread creation.
 //!
 //! Design constraints (EXPERIMENTS.md §Perf):
 //!
-//! * **No new dependencies.**  Workers are `std::thread::scope` threads
-//!   spawned per call, with the caller running the first chunk itself
-//!   (N-way parallelism costs N−1 spawns); for the batch shapes the
-//!   tile engine handles (hundreds of queries × hundreds of SVs) the
-//!   ~10 µs spawn cost is noise next to the sharded compute, and scoped
-//!   threads let jobs borrow the store and output buffers directly — no
-//!   channels, no `Arc`, no shared mutable state.
+//! * **No new dependencies.**  `std::sync::{Mutex, Condvar}` only.
+//!   Jobs still borrow the store and output buffers directly (no
+//!   channels of owned data): a batch is published to the workers as a
+//!   type-erased reference and `run_jobs` does not return until every
+//!   job has finished *and* every worker has exited the batch, so the
+//!   borrow never outlives its stack frame (see the safety notes on
+//!   [`WorkerPool::run_jobs`]).
 //! * **Bit-determinism for every thread count.**  Work is split by
 //!   [`partition`] into contiguous chunks whose boundaries depend only
 //!   on `(len, threads, min_chunk)` — never on timing — and every
-//!   output element is written by exactly one worker using the same
+//!   output element is written by exactly one job using the same
 //!   sequential accumulation order the single-threaded path uses.
-//!   Reductions are therefore fixed-order by construction: results are
-//!   bit-identical for `threads = 1, 2, 4, ...` (enforced by
-//!   `rust/tests/tile_engine.rs`).
+//!   *Which worker* runs a job is timing-dependent (workers claim jobs
+//!   from a shared counter), but jobs own disjoint outputs, so the
+//!   claim order is unobservable in the results — bit-identical for
+//!   `threads = 1, 2, 4, ...` (enforced by `rust/tests/tile_engine.rs`
+//!   and `rust/tests/simd_parity.rs`).
+//! * **Accountable reuse.**  Every OS-thread creation increments the
+//!   pool's [`WorkerPool::spawn_events`] counter; steady-state batch
+//!   passes must leave it flat (`rust/tests/serve_engine.rs` pins the
+//!   serving path with a `pool_reuse` assertion).
 //!
-//! The pool is deliberately dumb: no work stealing (it would make the
-//! chunk→worker mapping timing-dependent — harmless for disjoint
-//! writes, but a persistent-pool future could cache per-worker scratch,
-//! and fixed chunks keep that deterministic too).
+//! Shutdown is clean: dropping the last clone of a pool flags the
+//! workers, wakes them, and joins every handle.  A panicking job is
+//! caught on the worker, the batch is completed, and the first panic
+//! payload resumes on the caller — same observable behaviour as the
+//! scoped pool (which propagated through scope join).
 
 use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
-/// A fixed-width scoped worker pool; see the [module docs](self).
-#[derive(Clone, Debug)]
+std::thread_local! {
+    /// True while a pool job closure runs on this thread.  A nested
+    /// `run_jobs` from inside a job would deadlock the hand-off
+    /// protocol (the publisher holds `call_lock` for the whole batch
+    /// and waits for this very thread to finish), so nested calls
+    /// degrade to inline execution instead — the reentrancy tolerance
+    /// the scoped pool had for free, kept loud-failure-proof.
+    static IN_POOL_JOB: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Outcome of one job-claim attempt on a published batch.
+enum RunStatus {
+    /// Claimed and ran a job (there may be more).
+    Ran,
+    /// No unclaimed jobs remain; the claimer must stop touching the
+    /// batch.
+    Exhausted,
+}
+
+/// Type-erased view of one in-flight `run_jobs` batch.  `Sync` bound:
+/// the caller and every worker claim jobs through a shared reference.
+trait BatchRun: Sync {
+    fn run_one(&self) -> RunStatus;
+    fn jobs_done(&self) -> bool;
+}
+
+/// The concrete batch: jobs to claim + the closure to run them with.
+/// Lives on the `run_jobs` caller's stack; workers reach it through a
+/// lifetime-erased reference that provably never outlives the call.
+struct Batch<'f, J, F: Fn(J) + Sync> {
+    jobs: Vec<Mutex<Option<J>>>,
+    /// Next unclaimed job index (claim = `fetch_add`).
+    next: AtomicUsize,
+    /// Jobs fully executed (the caller's completion predicate).
+    done: AtomicUsize,
+    /// First panic payload from any job, re-raised on the caller.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    f: &'f F,
+}
+
+impl<J: Send, F: Fn(J) + Sync> BatchRun for Batch<'_, J, F> {
+    fn run_one(&self) -> RunStatus {
+        let i = self.next.fetch_add(1, Ordering::SeqCst);
+        if i >= self.jobs.len() {
+            return RunStatus::Exhausted;
+        }
+        let job = self.jobs[i].lock().expect("job slot poisoned").take();
+        if let Some(job) = job {
+            // Catch so a panicking job can neither deadlock the caller
+            // (worker dying before the done-count reaches the total)
+            // nor unwind the caller mid-batch with the erased
+            // reference still published.  The IN_POOL_JOB flag makes a
+            // nested `run_jobs` from inside the closure run inline
+            // instead of deadlocking on the batch hand-off.
+            IN_POOL_JOB.with(|f| f.set(true));
+            let result = catch_unwind(AssertUnwindSafe(|| (self.f)(job)));
+            IN_POOL_JOB.with(|f| f.set(false));
+            if let Err(payload) = result {
+                let mut slot = self.panic.lock().expect("panic slot poisoned");
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+        }
+        self.done.fetch_add(1, Ordering::SeqCst);
+        RunStatus::Ran
+    }
+
+    fn jobs_done(&self) -> bool {
+        self.done.load(Ordering::SeqCst) == self.jobs.len()
+    }
+}
+
+/// Condvar-protected hand-off slot between `run_jobs` and the parked
+/// workers.
+struct PoolState {
+    /// The published batch (`None` between calls).  The reference is
+    /// lifetime-erased; see the safety notes on
+    /// [`WorkerPool::run_jobs`].
+    batch: Option<&'static dyn BatchRun>,
+    /// Bumped once per published batch, so a worker that already
+    /// drained the current batch parks instead of spinning on it.
+    epoch: u64,
+    /// Workers currently holding a reference into the current batch.
+    /// The publisher may not retire the batch until this returns to 0.
+    active: usize,
+    shutdown: bool,
+}
+
+struct PoolInner {
+    state: Mutex<PoolState>,
+    /// Workers park here waiting for a new batch (or shutdown).
+    work_cv: Condvar,
+    /// The publisher parks here waiting for batch completion.
+    done_cv: Condvar,
+}
+
+/// The spawned workers + shared state; dropping the last pool clone
+/// drops this, which shuts the workers down and joins them.
+struct Workers {
+    inner: Arc<PoolInner>,
+    /// Serializes concurrent `run_jobs` calls on clones of one pool
+    /// (the hand-off slot holds one batch at a time).
+    call_lock: Mutex<()>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for Workers {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().expect("pool state poisoned");
+            st.shutdown = true;
+        }
+        self.inner.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(inner: Arc<PoolInner>) {
+    let mut seen_epoch = 0u64;
+    loop {
+        let (batch, epoch) = {
+            let mut st = inner.state.lock().expect("pool state poisoned");
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(b) = st.batch {
+                    if st.epoch != seen_epoch {
+                        st.active += 1;
+                        break (b, st.epoch);
+                    }
+                }
+                st = inner.work_cv.wait(st).expect("pool state poisoned");
+            }
+        };
+        seen_epoch = epoch;
+        // The batch reference is valid for this whole claim loop: the
+        // publisher blocks until `active` returns to 0.
+        while let RunStatus::Ran = batch.run_one() {}
+        // From here on the batch must not be touched — deregister and
+        // wake the publisher (it waits for done jobs AND active == 0).
+        let mut st = inner.state.lock().expect("pool state poisoned");
+        st.active -= 1;
+        inner.done_cv.notify_all();
+    }
+}
+
+/// A fixed-width persistent worker pool; see the [module docs](self).
+/// Cloning shares the same parked workers (and the spawn counter);
+/// the workers shut down when the last clone drops.
 pub struct WorkerPool {
     threads: usize,
+    /// `None` when `threads == 1` — the inline pool never spawns.
+    workers: Option<Arc<Workers>>,
+    /// OS threads ever created by this pool('s lineage) — the
+    /// `pool_reuse` accounting: construction moves it, batch calls must
+    /// not.
+    spawns: Arc<AtomicU64>,
 }
 
 impl WorkerPool {
     /// A pool of `threads` workers (0 is clamped to 1).  `threads = 1`
-    /// never spawns: all work runs inline on the caller's thread.
+    /// never spawns and runs everything inline on the caller's thread;
+    /// otherwise `threads − 1` parked workers are created **here, and
+    /// only here** — batch calls reuse them.
     pub fn new(threads: usize) -> Self {
-        Self { threads: threads.max(1) }
+        Self::with_counter(threads, Arc::new(AtomicU64::new(0)))
+    }
+
+    /// A new pool of `threads` workers that keeps accumulating **this**
+    /// pool's spawn counter — the resize path (`Backend::set_threads`),
+    /// so `spawn_events` stays the monotone "OS threads ever created"
+    /// count its docs promise across width changes.
+    pub fn resized(&self, threads: usize) -> Self {
+        Self::with_counter(threads, Arc::clone(&self.spawns))
+    }
+
+    fn with_counter(threads: usize, spawns: Arc<AtomicU64>) -> Self {
+        let threads = threads.max(1);
+        let workers = if threads > 1 {
+            let inner = Arc::new(PoolInner {
+                state: Mutex::new(PoolState {
+                    batch: None,
+                    epoch: 0,
+                    active: 0,
+                    shutdown: false,
+                }),
+                work_cv: Condvar::new(),
+                done_cv: Condvar::new(),
+            });
+            let handles = (1..threads)
+                .map(|k| {
+                    let inner = Arc::clone(&inner);
+                    spawns.fetch_add(1, Ordering::SeqCst);
+                    std::thread::Builder::new()
+                        .name(format!("mmbsgd-worker-{k}"))
+                        .spawn(move || worker_loop(inner))
+                        .expect("spawning pool worker")
+                })
+                .collect();
+            Some(Arc::new(Workers { inner, call_lock: Mutex::new(()), handles }))
+        } else {
+            None
+        };
+        Self { threads, workers, spawns }
     }
 
     /// The single-threaded (inline) pool.
@@ -48,44 +263,101 @@ impl WorkerPool {
         self.threads
     }
 
-    /// Run one closure call per job — the first on the calling thread
-    /// (which would otherwise idle inside the scope), the rest each on
-    /// their own scoped worker; all inline when the pool is
-    /// single-threaded or there is at most one job.  Jobs own their
-    /// output slices, so workers never share mutable state; job
-    /// construction order is the deterministic chunk order of
-    /// [`partition`].
+    /// OS threads ever created by this pool and its clones.  Constant
+    /// after construction (`threads − 1`); a regression back to
+    /// per-call spawning would move it per batch, which
+    /// `rust/tests/serve_engine.rs` pins against.
+    pub fn spawn_events(&self) -> u64 {
+        self.spawns.load(Ordering::SeqCst)
+    }
+
+    /// Run one closure call per job across the parked workers, with the
+    /// caller claiming jobs too (it would otherwise idle while
+    /// waiting); all inline when the pool is single-threaded or there
+    /// is at most one job.  Jobs own their output slices, so claimants
+    /// never share mutable state; job *construction* order is the
+    /// deterministic chunk order of [`partition`], and which claimant
+    /// runs a job cannot affect the results (disjoint writes).
+    ///
+    /// A panic inside a job is caught, the batch runs to completion,
+    /// and the first payload is re-raised here.
+    ///
+    /// Reentrancy: calling `run_jobs` from *inside a job closure* runs
+    /// the nested batch inline on the current thread (the hand-off
+    /// slot is busy with the outer batch; blocking on it would
+    /// deadlock).  Results are unaffected — inline is the
+    /// deterministic reference order.
     pub fn run_jobs<J, F>(&self, jobs: Vec<J>, f: F)
     where
         J: Send,
         F: Fn(J) + Sync,
     {
-        if self.threads == 1 || jobs.len() <= 1 {
-            for job in jobs {
-                f(job);
+        let nested = IN_POOL_JOB.with(std::cell::Cell::get);
+        let workers = match &self.workers {
+            Some(w) if jobs.len() > 1 && !nested => w,
+            _ => {
+                for job in jobs {
+                    f(job);
+                }
+                return;
             }
-            return;
+        };
+        let batch = Batch {
+            jobs: jobs.into_iter().map(|j| Mutex::new(Some(j))).collect(),
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            panic: Mutex::new(None),
+            f: &f,
+        };
+        {
+            // One batch at a time per worker set: clones of this pool
+            // may be driven from different threads.
+            let _call = workers
+                .call_lock
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            let inner = &workers.inner;
+            let erased: &dyn BatchRun = &batch;
+            // SAFETY (lifetime erasure): the reference is published to
+            // the workers below and retired — under the same mutex —
+            // before this block exits.  We only leave once (a) every
+            // job has run (`jobs_done`, counted after each closure
+            // returns; job panics are caught so a worker can't die
+            // mid-count) and (b) no worker still holds the reference
+            // (`active == 0`, decremented only after the worker's last
+            // touch of the batch).  Workers acquire the reference only
+            // under the state mutex while `batch` is `Some`, so after
+            // retirement no new reader can appear: the erased
+            // reference never outlives `batch`'s stack frame.
+            let erased: &'static dyn BatchRun =
+                unsafe { std::mem::transmute::<&dyn BatchRun, &'static dyn BatchRun>(erased) };
+            {
+                let mut st = inner.state.lock().expect("pool state poisoned");
+                debug_assert!(st.batch.is_none(), "batch slot not retired");
+                st.batch = Some(erased);
+                st.epoch = st.epoch.wrapping_add(1);
+            }
+            inner.work_cv.notify_all();
+            // The caller claims jobs alongside the workers.
+            while let RunStatus::Ran = batch.run_one() {}
+            // Wait for completion + worker exit, then retire the batch
+            // in the same critical section (no window in which a late
+            // worker could re-enter a finished batch).
+            let mut st = inner.state.lock().expect("pool state poisoned");
+            while !(batch.jobs_done() && st.active == 0) {
+                st = inner.done_cv.wait(st).expect("pool state poisoned");
+            }
+            st.batch = None;
         }
-        let f = &f;
-        std::thread::scope(|s| {
-            let mut jobs = jobs.into_iter();
-            let mine = jobs.next();
-            for job in jobs {
-                s.spawn(move || f(job));
-            }
-            // The caller works its own chunk concurrently with the
-            // workers: one fewer spawn per batch call, same total
-            // parallelism (outputs are disjoint, so order is moot).
-            if let Some(job) = mine {
-                f(job);
-            }
-        });
+        if let Some(payload) = batch.panic.into_inner().expect("panic slot poisoned") {
+            resume_unwind(payload);
+        }
     }
 
     /// Shard `data` into at most `threads` contiguous chunks of at
     /// least `min_chunk` items and run `f(start_index, chunk)` on each.
     /// The partition depends only on `(data.len(), threads, min_chunk)`,
-    /// so the element→worker mapping is identical on every run.
+    /// so the element→chunk mapping is identical on every run.
     pub fn run_chunks<T, F>(&self, data: &mut [T], min_chunk: usize, f: F)
     where
         T: Send,
@@ -110,9 +382,28 @@ impl WorkerPool {
     }
 }
 
+impl Clone for WorkerPool {
+    fn clone(&self) -> Self {
+        Self {
+            threads: self.threads,
+            workers: self.workers.clone(),
+            spawns: Arc::clone(&self.spawns),
+        }
+    }
+}
+
 impl Default for WorkerPool {
     fn default() -> Self {
         Self::single()
+    }
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("threads", &self.threads)
+            .field("spawn_events", &self.spawn_events())
+            .finish()
     }
 }
 
@@ -219,10 +510,117 @@ mod tests {
         let order = std::sync::Mutex::new(Vec::new());
         pool.run_jobs(vec![1, 2, 3], |j| order.lock().unwrap().push(j));
         assert_eq!(*order.lock().unwrap(), vec![1, 2, 3]);
+        assert_eq!(pool.spawn_events(), 0);
     }
 
     #[test]
     fn zero_threads_clamps_to_one() {
         assert_eq!(WorkerPool::new(0).threads(), 1);
+    }
+
+    #[test]
+    fn workers_are_spawned_once_and_reused() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.spawn_events(), 2, "N-way pool spawns N-1 workers at construction");
+        for round in 0..200 {
+            let mut out = vec![0u64; 97];
+            pool.run_chunks(&mut out, 4, |start, chunk| {
+                for (k, v) in chunk.iter_mut().enumerate() {
+                    *v = (start + k + round) as u64;
+                }
+            });
+            for (k, &v) in out.iter().enumerate() {
+                assert_eq!(v, (k + round) as u64);
+            }
+        }
+        // 200 batch passes later: not a single additional OS thread
+        assert_eq!(pool.spawn_events(), 2);
+    }
+
+    #[test]
+    fn clones_share_workers_and_results_match_inline() {
+        let pool = WorkerPool::new(4);
+        let clone = pool.clone();
+        assert_eq!(clone.spawn_events(), 3);
+        let mut a = vec![0.0f64; 321];
+        let mut b = vec![0.0f64; 321];
+        let fill = |start: usize, chunk: &mut [f64]| {
+            for (k, v) in chunk.iter_mut().enumerate() {
+                *v = ((start + k) as f64).sin();
+            }
+        };
+        clone.run_chunks(&mut a, 8, fill);
+        WorkerPool::single().run_chunks(&mut b, 8, fill);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        drop(clone); // workers survive: the original still owns them
+        let mut c = vec![0.0f64; 321];
+        pool.run_chunks(&mut c, 8, fill);
+        assert_eq!(c, b);
+        assert_eq!(pool.spawn_events(), 3);
+    }
+
+    #[test]
+    fn nested_run_jobs_from_inside_a_job_runs_inline() {
+        // A job closure calling run_jobs on the same pool must degrade
+        // to inline execution (it would deadlock the hand-off slot).
+        let pool = WorkerPool::new(2);
+        let total = std::sync::atomic::AtomicUsize::new(0);
+        let (pool_ref, total_ref) = (&pool, &total);
+        pool.run_jobs(vec![(); 4], |()| {
+            pool_ref.run_jobs(vec![10usize, 20], |v| {
+                total_ref.fetch_add(v, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 4 * 30);
+        // and the pool still works normally afterwards
+        let mut out = vec![0u8; 64];
+        pool.run_chunks(&mut out, 4, |_, chunk| chunk.fill(3));
+        assert!(out.iter().all(|&v| v == 3));
+    }
+
+    #[test]
+    fn resized_pool_keeps_accumulating_spawns() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.spawn_events(), 3);
+        let pool = pool.resized(2); // +1 worker, counter carries over
+        assert_eq!(pool.threads(), 2);
+        assert_eq!(pool.spawn_events(), 4);
+        let pool = pool.resized(1); // inline pool: no new spawns
+        assert_eq!(pool.spawn_events(), 4);
+    }
+
+    #[test]
+    fn pool_drop_joins_workers_cleanly() {
+        // Just exercising construct → use → drop; a hung join would
+        // wedge the test binary, which is the failure signal.
+        for _ in 0..20 {
+            let pool = WorkerPool::new(3);
+            let mut out = vec![0u8; 64];
+            pool.run_chunks(&mut out, 4, |_, chunk| chunk.fill(1));
+            assert!(out.iter().all(|&v| v == 1));
+        }
+    }
+
+    #[test]
+    fn job_panic_propagates_after_batch_completes() {
+        let pool = WorkerPool::new(2);
+        let hits = std::sync::atomic::AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run_jobs(vec![0usize, 1, 2, 3], |j| {
+                if j == 1 {
+                    panic!("job 1 exploded");
+                }
+                hits.fetch_add(1, Ordering::SeqCst);
+            });
+        }));
+        assert!(result.is_err(), "panic must reach the caller");
+        // every non-panicking job still ran (the batch completes)
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+        // and the pool is still usable afterwards
+        let mut out = vec![0u8; 32];
+        pool.run_chunks(&mut out, 2, |_, chunk| chunk.fill(7));
+        assert!(out.iter().all(|&v| v == 7));
     }
 }

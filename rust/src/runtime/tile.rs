@@ -12,10 +12,21 @@
 //!   is re-used across a whole block of [`TILE_Q`] queries before the
 //!   next tile is touched, so SV data crosses the cache hierarchy once
 //!   per query *block* instead of once per query.
-//! * **Norm-cached distances**: `d² = ‖x‖² + ‖q‖² − 2⟨x,q⟩` with the
-//!   SV norms read from the store cache and the query norms hoisted
-//!   once per block — the inner loop is the same pure-dot-product FMA
-//!   chain as the scalar path (`kernel::sq_dist_cached`).
+//! * **Norm-cached distances through the SIMD block micro-kernel**:
+//!   `d² = ‖x‖² + ‖q‖² − 2⟨x,q⟩` with the SV norms read from the store
+//!   cache, the query norms hoisted once per block, and the dots for a
+//!   whole run of SV rows computed by one
+//!   [`crate::kernel::simd::dot_block`] call — the runtime-dispatched
+//!   (AVX2/SSE2/NEON/scalar, bit-identical) multi-row kernel that loads
+//!   each query chunk once and streams the rows against it.  Every dot
+//!   feeds [`crate::kernel::sq_dist_cached_with_dot`], so the expansion
+//!   and its cancellation guard make exactly the per-pair decision the
+//!   scalar path makes.
+//! * **Batched exponents**: each chunk's surviving `γd²` values are
+//!   staged into a contiguous buffer (`RowAccum`) and evaluated in one
+//!   stripped accumulation loop — no skip branch inside the `exp`
+//!   loop, survivors added in the same ascending-`j` order the scalar
+//!   path uses, so the restructuring is invisible to the bits.
 //! * **Fused γd² cutoff, per pair and per tile**: each pair keeps the
 //!   scalar path's exact far-pair `exp` skip, and a whole (query, tile)
 //!   pair is skipped up front when the norm bound
@@ -39,7 +50,7 @@ use super::MergeScores;
 use crate::budget::golden::{self, PairMerge, GS_ITERS};
 use crate::budget::lut::{MergeLut, MergeScoreMode};
 use crate::data::DenseMatrix;
-use crate::kernel::{sq_dist_cached, sq_norm, EXP_NEG_CUTOFF};
+use crate::kernel::{simd, sq_dist_cached, sq_dist_cached_with_dot, sq_norm, EXP_NEG_CUTOFF};
 use crate::model::SvStore;
 
 /// Queries per row block.  32 query rows of accumulator + norm state
@@ -79,6 +90,101 @@ const DOT_ABS_EPS: f64 = 1e-6;
 /// Minimum score lanes per worker job (below this, sharding overhead
 /// beats the win).
 const MIN_LANES: usize = 128;
+
+/// SV rows staged per [`accumulate_rows`] / scoring chunk: enough to
+/// amortize the block micro-kernel's dispatch and keep the `exp` loop
+/// long, small enough that the three f64 staging buffers (3 KiB) are
+/// L1-resident next to the tile data.
+const ACC_CHUNK: usize = 128;
+
+/// Staging buffers for the chunked margin accumulation: block-kernel
+/// dots, then the surviving coefficients + exponents of one chunk,
+/// evaluated by a single stripped `exp` loop.  Stack-allocated once per
+/// worker job (or per `margin1` call) and reused across every chunk, so
+/// the hot loops never touch the allocator.
+pub(crate) struct RowAccum {
+    dots: [f64; ACC_CHUNK],
+    coef: [f64; ACC_CHUNK],
+    args: [f64; ACC_CHUNK],
+}
+
+impl RowAccum {
+    pub(crate) fn new() -> Self {
+        Self { dots: [0.0; ACC_CHUNK], coef: [0.0; ACC_CHUNK], args: [0.0; ACC_CHUNK] }
+    }
+}
+
+impl Default for RowAccum {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+std::thread_local! {
+    /// Per-thread [`RowAccum`] for the *single-query* entry points
+    /// (`margin1_native`, [`margin1_bounded`]), which are called once
+    /// per SGD step / serve request and have no backend scratch to
+    /// borrow: constructing a fresh 3 KiB zeroed RowAccum per call
+    /// would be a measurable tax on the smallest budgets.  Reuse is
+    /// invisible to results — every slot read is written first within
+    /// the same call.  (The batch paths keep a local RowAccum per
+    /// worker job instead: one init amortized over the whole job, and
+    /// no thread_local traffic from pool workers.)
+    static MARGIN1_SCRATCH: std::cell::RefCell<RowAccum> =
+        std::cell::RefCell::new(RowAccum::new());
+}
+
+/// Run `f` with this thread's reusable [`RowAccum`] — the scratch of
+/// the single-query margin paths.
+pub(crate) fn with_margin1_scratch<R>(f: impl FnOnce(&mut RowAccum) -> R) -> R {
+    MARGIN1_SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+/// Accumulate `Σ_j α_j k(x_j, q)` over SV rows `range` into `acc` — the
+/// one inner kernel behind [`margins_rows`], [`margin1_bounded`], and
+/// [`super::margin1_native`].  Per [`ACC_CHUNK`]-row chunk: one
+/// [`simd::dot_block`] pass (query chunks loaded once, rows streamed),
+/// the norm expansion + cancellation guard per pair
+/// ([`sq_dist_cached_with_dot`] — same decision as the per-pair scalar
+/// path), far pairs dropped by the exact `γd² <` [`EXP_NEG_CUTOFF`]
+/// test, and one branch-free `exp` accumulation over the survivors in
+/// ascending-`j` order.  Bit-identical to the pre-SIMD per-pair loop on
+/// every dispatch target.
+pub(crate) fn accumulate_rows(
+    svs: &SvStore,
+    gamma: f64,
+    q: &[f32],
+    n_q: f64,
+    range: std::ops::Range<usize>,
+    scratch: &mut RowAccum,
+    mut acc: f64,
+) -> f64 {
+    let dim = svs.dim();
+    let pts = svs.points_flat();
+    let mut j = range.start;
+    while j < range.end {
+        let m = (range.end - j).min(ACC_CHUNK);
+        simd::dot_block(q, &pts[j * dim..(j + m) * dim], dim, &mut scratch.dots[..m]);
+        let mut live = 0;
+        for (k, &d) in scratch.dots[..m].iter().enumerate() {
+            let jj = j + k;
+            let d2 = sq_dist_cached_with_dot(q, n_q, svs.point(jj), svs.norm2(jj), d);
+            let e = gamma * d2;
+            if e < EXP_NEG_CUTOFF {
+                scratch.coef[live] = svs.alpha(jj);
+                scratch.args[live] = e;
+                live += 1;
+            }
+        }
+        // the vectorizable exp pass: no skip branch, survivors only,
+        // ascending-j accumulation order preserved
+        for (c, e) in scratch.coef[..live].iter().zip(&scratch.args[..live]) {
+            acc += c * (-e).exp();
+        }
+        j += m;
+    }
+    acc
+}
 
 /// SVs per tile for feature dimension `dim`: as many rows as fit the
 /// `TILE_BYTES` L1 budget, clamped to `[16, 512]` so tiny dimensions
@@ -224,29 +330,27 @@ pub fn margin1_bounded(svs: &SvStore, gamma: f64, x: &[f32], bounds: &TileBounds
     let s_q = n_q.sqrt();
     let dim_eps = DOT_ABS_EPS * (1.0 + svs.dim() as f64 / 8.0);
     let ts = bounds.ts;
-    let mut f = 0.0;
-    for (t, &(lo, hi)) in bounds.lo_hi.iter().enumerate() {
-        let j0 = t * ts;
-        let j1 = (j0 + ts).min(b);
-        let gap = if s_q < lo {
-            lo - s_q
-        } else if s_q > hi {
-            s_q - hi
-        } else {
-            0.0
-        };
-        if gamma * gap * gap > EXP_NEG_CUTOFF * FAR_TILE_SLACK + gamma * dim_eps * (n_q + hi * hi) {
-            continue;
-        }
-        for j in j0..j1 {
-            let d2 = sq_dist_cached(svs.point(j), svs.norm2(j), x, n_q);
-            let e = gamma * d2;
-            if e < EXP_NEG_CUTOFF {
-                f += svs.alpha(j) * (-e).exp();
+    with_margin1_scratch(|scratch| {
+        let mut f = 0.0;
+        for (t, &(lo, hi)) in bounds.lo_hi.iter().enumerate() {
+            let j0 = t * ts;
+            let j1 = (j0 + ts).min(b);
+            let gap = if s_q < lo {
+                lo - s_q
+            } else if s_q > hi {
+                s_q - hi
+            } else {
+                0.0
+            };
+            if gamma * gap * gap
+                > EXP_NEG_CUTOFF * FAR_TILE_SLACK + gamma * dim_eps * (n_q + hi * hi)
+            {
+                continue;
             }
+            f = accumulate_rows(svs, gamma, x, n_q, j0..j1, scratch, f);
         }
-    }
-    f
+        f
+    })
 }
 
 /// Convenience wrapper: single-threaded tiled margins with local
@@ -272,6 +376,7 @@ fn margins_rows(
     // Rounding allowance of the computed γd² (see DOT_ABS_EPS): the
     // f32 dot's absolute error grows with both dimension and norms.
     let dim_eps = DOT_ABS_EPS * (1.0 + svs.dim() as f64 / 8.0);
+    let mut scratch = RowAccum::new();
     for (blk, out_blk) in out.chunks_mut(TILE_Q).enumerate() {
         let r0 = row0 + blk * TILE_Q;
         // Hoist query norms (and their roots, for the tile bound) once
@@ -314,16 +419,7 @@ fn margins_rows(
                     continue;
                 }
                 let q = queries.row(r0 + k);
-                let n_q = nq[k];
-                let mut f = *acc;
-                for j in j0..j1 {
-                    let d2 = sq_dist_cached(svs.point(j), svs.norm2(j), q, n_q);
-                    let e = gamma * d2;
-                    if e < EXP_NEG_CUTOFF {
-                        f += svs.alpha(j) * (-e).exp();
-                    }
-                }
-                *acc = f;
+                *acc = accumulate_rows(svs, gamma, q, nq[k], j0..j1, &mut scratch, *acc);
             }
             j0 = j1;
             t += 1;
@@ -431,22 +527,54 @@ pub fn merge_scores_into(
     pool.run_jobs(jobs, |mut job| score_lanes(svs, gamma, scorer, i, &mut job));
 }
 
-fn score_lanes(svs: &SvStore, gamma: f64, scorer: PairScorer, i: usize, job: &mut LaneJob) {
+/// Score lanes `j0..j1` of candidate `i` into `job` — the shared inner
+/// loop of [`merge_scores_into`] and [`merge_scores_batch`].  Each
+/// [`ACC_CHUNK`]-lane run takes one [`simd::dot_block`] pass (the
+/// candidate row's chunks loaded once, partner rows streamed), and each
+/// dot feeds [`sq_dist_cached_with_dot`] — the identical per-pair d²
+/// (expansion + cancellation guard) that [`score_pair`] computes, so
+/// cached rows can stand in for per-event rescans bit-for-bit.  The
+/// self-lane's dot is computed but discarded (cheaper than fissioning
+/// the block around it).
+fn score_lane_range(
+    svs: &SvStore,
+    gamma: f64,
+    scorer: PairScorer,
+    i: usize,
+    range: std::ops::Range<usize>,
+    job: &mut LaneJob,
+    dots: &mut [f64; ACC_CHUNK],
+) {
     let x_i = svs.point(i);
     let a_i = svs.alpha(i);
     let n_i = svs.norm2(i); // candidate norm hoisted out of the lane loop
-    for k in 0..job.wd.len() {
-        let j = job.start + k;
-        if j == i {
-            continue;
+    let dim = svs.dim();
+    let pts = svs.points_flat();
+    let mut j = range.start;
+    while j < range.end {
+        let m = (range.end - j).min(ACC_CHUNK);
+        simd::dot_block(x_i, &pts[j * dim..(j + m) * dim], dim, &mut dots[..m]);
+        for (k, &d) in dots[..m].iter().enumerate() {
+            let jj = j + k;
+            if jj == i {
+                continue;
+            }
+            let lane = jj - job.start;
+            let d2 = sq_dist_cached_with_dot(x_i, n_i, svs.point(jj), svs.norm2(jj), d);
+            let pm = scorer.params(a_i, svs.alpha(jj), gamma * d2);
+            job.wd[lane] = pm.wd;
+            job.h[lane] = pm.h;
+            job.a_z[lane] = pm.a_z;
+            job.d2[lane] = d2;
         }
-        let d2 = sq_dist_cached(x_i, n_i, svs.point(j), svs.norm2(j));
-        let pm = scorer.params(a_i, svs.alpha(j), gamma * d2);
-        job.wd[k] = pm.wd;
-        job.h[k] = pm.h;
-        job.a_z[k] = pm.a_z;
-        job.d2[k] = d2;
+        j += m;
     }
+}
+
+fn score_lanes(svs: &SvStore, gamma: f64, scorer: PairScorer, i: usize, job: &mut LaneJob) {
+    let mut dots = [0.0f64; ACC_CHUNK];
+    let range = job.start..job.start + job.wd.len();
+    score_lane_range(svs, gamma, scorer, i, range, job, &mut dots);
 }
 
 /// One worker's lane range across *all* candidates of a batch.
@@ -500,27 +628,15 @@ pub fn merge_scores_batch(
     let ts = sv_tile_len(svs.dim());
     let scorer = PairScorer::new(mode);
     pool.run_jobs(jobs, |mut job| {
+        let mut dots = [0.0f64; ACC_CHUNK];
         let end = job.start + job.len;
         let mut j0 = job.start;
         while j0 < end {
+            // SV tiles stream in the outer loop; every candidate scores
+            // a tile (through the block micro-kernel) while it is hot.
             let j1 = (j0 + ts).min(end);
             for (i, lanes) in job.rows.iter_mut() {
-                let i = *i;
-                let x_i = svs.point(i);
-                let a_i = svs.alpha(i);
-                let n_i = svs.norm2(i);
-                for j in j0..j1 {
-                    if j == i {
-                        continue;
-                    }
-                    let k = j - job.start;
-                    let d2 = sq_dist_cached(x_i, n_i, svs.point(j), svs.norm2(j));
-                    let pm = scorer.params(a_i, svs.alpha(j), gamma * d2);
-                    lanes.wd[k] = pm.wd;
-                    lanes.h[k] = pm.h;
-                    lanes.a_z[k] = pm.a_z;
-                    lanes.d2[k] = d2;
-                }
+                score_lane_range(svs, gamma, scorer, *i, j0..j1, lanes, &mut dots);
             }
             j0 = j1;
         }

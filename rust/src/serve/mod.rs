@@ -113,6 +113,13 @@ impl Predictor {
         self.backend.set_threads(threads)
     }
 
+    /// OS worker threads ever created by this predictor's backend pool
+    /// — constant after [`Predictor::set_threads`]; request traffic
+    /// reuses the parked workers (see `runtime::pool`).
+    pub fn worker_spawns(&self) -> u64 {
+        self.backend.worker_spawns()
+    }
+
     /// The wrapped model (read-only; provenance, SV count, ...).
     pub fn model(&self) -> &SvmModel {
         &self.model

@@ -150,6 +150,14 @@ impl ModelRegistry {
         self.backend.set_threads(threads)
     }
 
+    /// OS worker threads ever created by the shared backend's pool
+    /// (the `pool_reuse` accounting: one persistent pool serves every
+    /// model and every micro-batch — request traffic must leave this
+    /// flat, which `rust/tests/serve_engine.rs` pins).
+    pub fn worker_spawns(&self) -> u64 {
+        self.backend.worker_spawns()
+    }
+
     /// Load `model` under `name`: validates, folds the coefficient
     /// scale, prebuilds tile bounds.  A fresh name starts at version 1;
     /// re-inserting an existing name replaces the model and bumps its

@@ -102,12 +102,14 @@ impl<'b> TrainSession<'b> {
     pub fn new(cfg: TrainConfig, backend: &'b mut dyn Backend) -> Result<Self, TrainError> {
         cfg.validate()?;
         let score_mode = backend.set_merge_score_mode(cfg.merge_score_mode);
-        // Threads are applied but deliberately NOT recorded in model
-        // provenance: they are an execution detail with bit-identical
-        // results for every count, and embedding them would make saved
-        // models / checkpoints byte-differ across `--threads` (the CLI
-        // prints the effective count per run instead).
+        // Threads and SIMD dispatch are applied but deliberately NOT
+        // recorded in model provenance: both are execution details
+        // with bit-identical results for every setting, and embedding
+        // them would make saved models / checkpoints byte-differ
+        // across `--threads` / `--simd-mode` (the CLI prints the
+        // effective values per run instead).
         backend.set_threads(cfg.threads);
+        crate::kernel::simd::set_mode(cfg.simd_mode);
         let mut model = SvmModel::new(0, cfg.gamma);
         model.meta = format!(
             "bsgd maintenance={} B={} seed={} backend={} score={}",
@@ -643,11 +645,12 @@ impl Checkpoint {
         self.cfg.validate()?;
         // Provenance (`meta`) already records the original effective
         // scorer; just put the backend in the configured mode.  The
-        // thread count is an execution detail (results are
-        // thread-invariant), so it is not checkpointed: resume runs
-        // with whatever the caller configured.
+        // thread count and SIMD dispatch are execution details
+        // (results are invariant to both), so neither is checkpointed:
+        // resume runs with whatever the caller configured.
         backend.set_merge_score_mode(self.cfg.merge_score_mode);
         backend.set_threads(self.cfg.threads);
+        crate::kernel::simd::set_mode(self.cfg.simd_mode);
         let mut budget = Budget::new(self.cfg.budget, self.cfg.maintenance_kind());
         budget.events = self.events;
         budget.total_wd = self.total_wd;

@@ -136,6 +136,61 @@ fn shed_policies_at_full_queue() {
 }
 
 #[test]
+fn pool_reuse_no_spawns_per_margins_pass() {
+    // The persistent worker pool is created once by `set_threads`;
+    // after that, every micro-batch flush — including B=1 batches and
+    // the single-query `Predictor` path — must hand work to the parked
+    // workers instead of spawning.  The spawn counter is per-pool, so
+    // concurrent tests cannot disturb it.
+    let (model, split) = trained(5, 24);
+
+    let mut reg = registry_of(vec![("m", model.clone())], 1);
+    assert_eq!(reg.set_threads(2), 2);
+    let spawns_after_setup = reg.worker_spawns();
+    assert_eq!(spawns_after_setup, 1, "a 2-wide pool spawns exactly one worker");
+    let mut eng = BatchEngine::new(8, 64, ShedPolicy::Reject);
+    for round in 0..50usize {
+        // mixed batch sizes, including the B=1 micro-batch
+        let n = 1 + (round % 3);
+        for i in 0..n {
+            eng.submit(&reg, None, split.test.x.row(i).to_vec()).unwrap();
+        }
+        let res = eng.flush(&mut reg);
+        assert_eq!(res.len(), n);
+        assert!(res.iter().all(|(_, r)| r.is_ok()));
+    }
+    // A batch wide enough to shard (> TILE_Q rows with 2 workers)
+    // actually hands work to the parked threads — still no spawns.
+    let wide_rows: Vec<Vec<f32>> = (0..70)
+        .map(|i| split.test.x.row(i % split.test.len()).to_vec())
+        .collect();
+    let wide = mmbsgd::data::DenseMatrix::from_rows(wide_rows);
+    let mut out = vec![0.0f64; wide.rows()];
+    for _ in 0..20 {
+        reg.decision_batch_into("m", &wide, &mut out).unwrap();
+    }
+    assert_eq!(
+        reg.worker_spawns(),
+        spawns_after_setup,
+        "50 flushes + 20 sharded batch passes must not create a single OS thread (pool_reuse)"
+    );
+
+    // the single-model Predictor path shares the same guarantee
+    let mut p = Predictor::native(model).unwrap();
+    assert_eq!(p.set_threads(2), 2);
+    let before = p.worker_spawns();
+    assert_eq!(before, 1);
+    for i in 0..40.min(split.test.len()) {
+        p.decision1(split.test.x.row(i)).unwrap();
+    }
+    let batch = mmbsgd::data::DenseMatrix::from_rows(vec![split.test.x.row(0).to_vec()]);
+    for _ in 0..40 {
+        p.decision_batch(&batch).unwrap();
+    }
+    assert_eq!(p.worker_spawns(), before, "predictor requests must reuse the pool");
+}
+
+#[test]
 fn ab_routing_is_deterministic_across_registries_and_threads() {
     let (a, _) = trained(11, 16);
     let (b, _) = trained(12, 16);

@@ -1,0 +1,258 @@
+//! SIMD-substrate acceptance tests (ISSUE 5 tentpole):
+//!
+//! 1. **Dispatch parity** — the runtime-dispatched `dot` / `sq_dist` /
+//!    `dot_block` are bit-identical to the scalar reference path over
+//!    ragged shapes (d ∈ {1, 3, 7, 8, 9, 31, 128, 300}), including the
+//!    cancellation-dominated large-norm regression from
+//!    `kernel/mod.rs` — the fixed 8-lane accumulator layout is the
+//!    contract, not an approximation.
+//! 2. **Mode invariance end to end** — `train_full` and
+//!    `merge_scores_batch` produce identical bits for
+//!    `simd_mode ∈ {auto, scalar}` × `threads ∈ {1, 2, 4}`: the ISA,
+//!    like the thread count, is a pure wall-clock knob.
+//!
+//! CI runs this whole binary (plus `tile_engine`) twice — once normally
+//! and once under `MMBSGD_FORCE_SCALAR=1` — so both halves of every
+//! parity pair are exercised as the *ambient* dispatch too.
+//!
+//! Tests that flip the process-wide mode serialize on `MODE_LOCK`
+//! (flipping is harmless to results — that is the invariant under test
+//! — but a parity test sampling "dispatched" mid-flip would silently
+//! compare scalar against scalar and prove nothing).
+
+use mmbsgd::config::TrainConfig;
+use mmbsgd::data::synth::{dataset, SynthSpec};
+use mmbsgd::kernel::{self, simd, SimdMode};
+use mmbsgd::model::SvStore;
+use mmbsgd::rng::Xoshiro256;
+use mmbsgd::runtime::{Backend, NativeBackend};
+use mmbsgd::solver::bsgd;
+use mmbsgd::solver::NoopObserver;
+use std::sync::Mutex;
+
+static MODE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock_mode() -> std::sync::MutexGuard<'static, ()> {
+    MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Test vectors with mixed magnitudes and signs (both exp branches,
+/// non-trivial remainders).
+fn vecs(d: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Xoshiro256::new(seed);
+    let a: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32 * 2.5).collect();
+    let b: Vec<f32> = (0..d)
+        .map(|_| rng.next_gaussian() as f32 * 0.4 - 0.7)
+        .collect();
+    (a, b)
+}
+
+const DIMS: [usize; 9] = [0, 1, 3, 7, 8, 9, 31, 128, 300];
+
+#[test]
+fn dispatched_dot_and_sq_dist_bit_match_scalar() {
+    let _g = lock_mode();
+    for d in DIMS {
+        let (a, b) = vecs(d, d as u64 + 1);
+        assert_eq!(
+            simd::dot(&a, &b).to_bits(),
+            simd::dot_scalar(&a, &b).to_bits(),
+            "dot d={d} isa={:?}",
+            simd::active_isa()
+        );
+        assert_eq!(
+            simd::sq_dist(&a, &b).to_bits(),
+            simd::sq_dist_scalar(&a, &b).to_bits(),
+            "sq_dist d={d}"
+        );
+        // and through the public kernel entry points
+        assert_eq!(kernel::dot(&a, &b).to_bits(), simd::dot_scalar(&a, &b).to_bits());
+        assert_eq!(
+            kernel::sq_dist(&a, &b).to_bits(),
+            simd::sq_dist_scalar(&a, &b).to_bits()
+        );
+    }
+}
+
+#[test]
+fn dispatched_dot_block_bit_matches_scalar_over_ragged_row_counts() {
+    let _g = lock_mode();
+    for d in DIMS {
+        for rows_n in [1usize, 2, 3, 4, 5, 6, 7, 8, 9, 13, 32] {
+            let mut rng = Xoshiro256::new((d * 1000 + rows_n) as u64 + 5);
+            let q: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32 * 1.3).collect();
+            let rows: Vec<f32> = (0..rows_n * d)
+                .map(|_| rng.next_gaussian() as f32 * 0.8)
+                .collect();
+            let mut got = vec![0.0f64; rows_n];
+            simd::dot_block(&q, &rows, d, &mut got);
+            let mut want = vec![0.0f64; rows_n];
+            simd::dot_block_scalar(&q, &rows, d, &mut want);
+            for r in 0..rows_n {
+                assert_eq!(
+                    got[r].to_bits(),
+                    want[r].to_bits(),
+                    "dot_block d={d} rows={rows_n} row {r} isa={:?}",
+                    simd::active_isa()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sq_dist_cached_parity_survives_cancellation_regression() {
+    // The large-norm near-duplicate regression from kernel/mod.rs: the
+    // norm expansion is cancellation-dominated, so the guard must route
+    // through the exact difference form — and it must make the *same*
+    // decision whether the dot came from the dispatched path, the
+    // scalar path, or the block micro-kernel.
+    let _g = lock_mode();
+    for d in [8usize, 128, 300] {
+        let mut rng = Xoshiro256::new(d as u64);
+        let a: Vec<f32> = (0..d)
+            .map(|_| 200.0 + (rng.next_gaussian() as f32) * 0.5)
+            .collect();
+        let mut b = a.clone();
+        for (i, v) in b.iter_mut().enumerate() {
+            *v += 5e-3 * ((i as f32) * 1.3).cos();
+        }
+        let (na, nb) = (kernel::sq_norm(&a), kernel::sq_norm(&b));
+        let dispatched = kernel::sq_dist_cached(&a, na, &b, nb);
+        let via_scalar_dot =
+            kernel::sq_dist_cached_with_dot(&a, na, &b, nb, simd::dot_scalar(&a, &b));
+        let mut block_dot = [0.0f64];
+        simd::dot_block(&a, &b, d, &mut block_dot);
+        let via_block_dot = kernel::sq_dist_cached_with_dot(&a, na, &b, nb, block_dot[0]);
+        assert_eq!(dispatched.to_bits(), via_scalar_dot.to_bits(), "d={d}");
+        assert_eq!(dispatched.to_bits(), via_block_dot.to_bits(), "d={d}");
+        // the guard actually fired into the accurate branch
+        let exact = simd::sq_dist_scalar(&a, &b);
+        assert!(
+            (dispatched - exact).abs() <= 1e-3 * exact,
+            "cancellation not handled at d={d}: {dispatched} vs {exact}"
+        );
+    }
+}
+
+#[test]
+fn forced_scalar_mode_bit_matches_auto_on_kernels() {
+    // Flip the process-wide mode and pin that the *public* entry
+    // points do not change a single bit (this is what makes the knob —
+    // and MMBSGD_FORCE_SCALAR — safe to flip on a live system).
+    let _g = lock_mode();
+    let mut auto_vals = Vec::new();
+    simd::set_mode(SimdMode::Auto);
+    for d in DIMS {
+        let (a, b) = vecs(d, d as u64 + 40);
+        auto_vals.push((kernel::dot(&a, &b), kernel::sq_dist(&a, &b)));
+    }
+    simd::set_mode(SimdMode::Scalar);
+    assert_eq!(simd::active_isa(), simd::Isa::Scalar);
+    for (i, &d) in DIMS.iter().enumerate() {
+        let (a, b) = vecs(d, d as u64 + 40);
+        assert_eq!(kernel::dot(&a, &b).to_bits(), auto_vals[i].0.to_bits(), "d={d}");
+        assert_eq!(kernel::sq_dist(&a, &b).to_bits(), auto_vals[i].1.to_bits(), "d={d}");
+    }
+    simd::set_mode(SimdMode::Auto);
+}
+
+fn random_store(b: usize, d: usize, seed: u64) -> SvStore {
+    let mut rng = Xoshiro256::new(seed);
+    let mut s = SvStore::new(d);
+    let scale = if d > 0 { (5.0 / d as f64).sqrt() as f32 } else { 1.0 };
+    for j in 0..b {
+        let shift = if j % 3 == 0 { 4.0f32 } else { 0.0 };
+        let x: Vec<f32> = (0..d)
+            .map(|_| shift + scale * rng.next_gaussian() as f32)
+            .collect();
+        let mut a = 0.05 + rng.next_f64();
+        if rng.next_f64() < 0.5 {
+            a = -a;
+        }
+        s.push(&x, a);
+    }
+    s
+}
+
+#[test]
+fn train_full_bit_invariant_across_simd_mode_and_threads() {
+    let _g = lock_mode();
+    let split = dataset(&SynthSpec::ijcnn_like(0.02), 13);
+    let run = |mode: SimdMode, threads: usize| {
+        simd::set_mode(mode);
+        let cfg = TrainConfig {
+            lambda: 1e-3,
+            gamma: 2.0,
+            budget: 24,
+            mergees: 3,
+            eval_every: 150,
+            threads,
+            simd_mode: mode,
+            seed: 7,
+            ..TrainConfig::default()
+        };
+        let mut be = NativeBackend::new();
+        let out =
+            bsgd::train_full(&split.train, &cfg, &mut be, Some(&split.test), &mut NoopObserver)
+                .unwrap();
+        simd::set_mode(SimdMode::Auto);
+        out
+    };
+    let base = run(SimdMode::Auto, 1);
+    assert!(base.maintenance_events > 0, "budget never hit — test is vacuous");
+    for mode in [SimdMode::Auto, SimdMode::Scalar] {
+        for threads in [1usize, 2, 4] {
+            if mode == SimdMode::Auto && threads == 1 {
+                continue; // that's `base`
+            }
+            let out = run(mode, threads);
+            assert_eq!(out.steps, base.steps, "{mode:?} t={threads}");
+            assert_eq!(out.maintenance_events, base.maintenance_events);
+            assert_eq!(out.model.svs.points_flat(), base.model.svs.points_flat());
+            let (a, b) = (out.model.svs.alphas_vec(), base.model.svs.alphas_vec());
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "alpha drift {mode:?} t={threads}");
+            }
+            assert_eq!(out.model.bias.to_bits(), base.model.bias.to_bits());
+            assert_eq!(out.history.len(), base.history.len());
+            for (p, q) in out.history.iter().zip(&base.history) {
+                assert_eq!(p.accuracy.to_bits(), q.accuracy.to_bits());
+            }
+        }
+    }
+}
+
+#[test]
+fn merge_scores_batch_bit_invariant_across_simd_mode_and_threads() {
+    let _g = lock_mode();
+    let svs = random_store(400, 24, 21);
+    let cands = [0usize, 17, 203, 399];
+    let score = |mode: SimdMode, threads: usize| {
+        simd::set_mode(mode);
+        let mut be = NativeBackend::new();
+        be.set_threads(threads);
+        let rows = be.merge_scores_batch(&svs, 1.3, &cands);
+        simd::set_mode(SimdMode::Auto);
+        rows
+    };
+    let base = score(SimdMode::Auto, 1);
+    for mode in [SimdMode::Auto, SimdMode::Scalar] {
+        for threads in [1usize, 2, 4] {
+            let got = score(mode, threads);
+            for (c, (x, y)) in got.iter().zip(&base).enumerate() {
+                for lane in 0..svs.len() {
+                    assert_eq!(
+                        x.wd[lane].to_bits(),
+                        y.wd[lane].to_bits(),
+                        "{mode:?} t={threads} c{c} lane{lane}"
+                    );
+                    assert_eq!(x.h[lane].to_bits(), y.h[lane].to_bits());
+                    assert_eq!(x.a_z[lane].to_bits(), y.a_z[lane].to_bits());
+                    assert_eq!(x.d2[lane].to_bits(), y.d2[lane].to_bits());
+                }
+            }
+        }
+    }
+}
