@@ -278,6 +278,18 @@ pub struct ServeConfig {
     /// Routing-hash seed: replicas that must agree on A/B assignment
     /// share a seed.
     pub seed: u64,
+    /// Close a connection after this many seconds without a request
+    /// (0 = never).
+    pub idle_timeout_secs: u64,
+    /// Longest accepted protocol line in bytes; longer lines answer
+    /// `err` and are discarded to the next newline.
+    pub max_line_bytes: usize,
+    /// Max simultaneously served connections; extras are answered
+    /// `err busy` and closed (0 = unlimited).
+    pub max_conns: usize,
+    /// Per-request deadline in milliseconds: requests queued longer
+    /// answer a typed `deadline exceeded` error (0 = none).
+    pub deadline_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -291,6 +303,10 @@ impl Default for ServeConfig {
             threads: 1,
             simd_mode: SimdMode::Auto,
             seed: 1,
+            idle_timeout_secs: 300,
+            max_line_bytes: 64 * 1024,
+            max_conns: 1024,
+            deadline_ms: 0,
         }
     }
 }
@@ -315,6 +331,11 @@ impl ServeConfig {
         }
         if self.threads == 0 {
             return bad("threads", "must be >= 1".into());
+        }
+        if self.max_line_bytes < 16 {
+            // even "stats\n" needs a few bytes; a tiny cap would turn
+            // every request into an oversize error
+            return bad("max_line_bytes", "must be >= 16".into());
         }
         Ok(())
     }
@@ -346,6 +367,12 @@ impl ServeConfig {
                         .with_context(|| format!("bad simd_mode {s:?} (auto|scalar)"))?;
                 }
                 "seed" => self.seed = toml_count(val, "seed")?,
+                "idle_timeout_secs" => {
+                    self.idle_timeout_secs = toml_count(val, "idle_timeout_secs")?
+                }
+                "max_line_bytes" => self.max_line_bytes = toml_count_usize(val, "max_line_bytes")?,
+                "max_conns" => self.max_conns = toml_count_usize(val, "max_conns")?,
+                "deadline_ms" => self.deadline_ms = toml_count(val, "deadline_ms")?,
                 other => bail!("unknown [serve] key {other:?}"),
             }
         }

@@ -35,6 +35,9 @@ pub fn parse(text: &str, dim_hint: Option<usize>) -> Result<(Vec<Vec<(usize, f32
             .with_context(|| format!("line {}: missing label", ln + 1))?
             .parse()
             .with_context(|| format!("line {}: bad label", ln + 1))?;
+        if !lab.is_finite() {
+            bail!("line {}: non-finite label {lab}", ln + 1);
+        }
         let mut feats = Vec::new();
         let mut prev = 0usize;
         for tok in parts {
@@ -54,6 +57,11 @@ pub fn parse(text: &str, dim_hint: Option<usize>) -> Result<(Vec<Vec<(usize, f32
             let val: f32 = v
                 .parse()
                 .with_context(|| format!("line {}: bad value '{v}'", ln + 1))?;
+            // NaN/±inf would silently poison every kernel evaluation
+            // downstream; reject with the position instead.
+            if !val.is_finite() {
+                bail!("line {}: non-finite value '{v}' at feature index {idx}", ln + 1);
+            }
             max_idx = max_idx.max(idx);
             feats.push((idx - 1, val));
         }
@@ -73,9 +81,27 @@ pub fn parse(text: &str, dim_hint: Option<usize>) -> Result<(Vec<Vec<(usize, f32
 }
 
 /// Load a LIBSVM file into a dense [`Dataset`].
+///
+/// Injection site [`crate::util::fault::site::LIBSVM_READ`]: an `io`
+/// rule fails the read outright; a `truncate:K` rule hands the parser
+/// only the first `K` bytes, as a torn download would.
 pub fn load(path: &Path, dim_hint: Option<usize>) -> Result<Dataset> {
-    let text = fs::read_to_string(path)
+    use crate::util::fault;
+    let mut text = fs::read_to_string(path)
         .with_context(|| format!("reading {}", path.display()))?;
+    match fault::armed(fault::site::LIBSVM_READ) {
+        Some(fault::FaultKind::Io) => {
+            bail!("reading {}: injected read fault", path.display())
+        }
+        Some(fault::FaultKind::Truncate(k)) => {
+            let mut cut = k.min(text.len());
+            while cut > 0 && !text.is_char_boundary(cut) {
+                cut -= 1;
+            }
+            text.truncate(cut);
+        }
+        _ => {}
+    }
     let (rows, labels, dim) = parse(&text, dim_hint)?;
     let mut x = DenseMatrix::zeros(rows.len(), dim);
     for (r, feats) in rows.iter().enumerate() {
@@ -156,5 +182,24 @@ mod tests {
     fn nonpositive_labels_map_to_minus_one() {
         let (_, labels, _) = parse("0 1:1\n-3 1:1\n2 1:1\n", None).unwrap();
         assert_eq!(labels, vec![-1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn rejects_non_finite_values_naming_position() {
+        for (text, needle) in [
+            ("+1 1:nan\n", "feature index 1"),
+            ("+1 1:0.5 2:inf\n", "feature index 2"),
+            ("+1 3:-inf\n", "feature index 3"),
+            ("+1 1:1e40\n", "feature index 1"), // overflows f32 to +inf
+            ("nan 1:1\n", "non-finite label"),
+            ("inf 1:1\n", "non-finite label"),
+        ] {
+            let err = parse(text, None).unwrap_err().to_string();
+            assert!(err.contains("line 1"), "{text:?}: {err}");
+            assert!(err.contains(needle), "{text:?}: {err}");
+        }
+        // second line positions correctly
+        let err = parse("+1 1:1\n-1 2:nan\n", None).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
     }
 }

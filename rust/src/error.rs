@@ -32,6 +32,26 @@ pub enum TrainError {
     DimMismatch { expected: usize, got: usize },
     /// A checkpoint (or model) blob failed to parse.
     Checkpoint(String),
+    /// A checkpoint file on disk failed its durable-layer checksum or
+    /// its structural parse, and no usable `.prev` generation could
+    /// stand in.  Produced by [`crate::solver::load_checkpoint`];
+    /// unlike [`TrainError::Checkpoint`] it names the file, the failing
+    /// section, the byte offset, and whether a `.prev` fallback existed.
+    CorruptCheckpoint {
+        /// The checkpoint path as given.
+        path: String,
+        /// Failing section: `"io"`, `"footer"`, `"payload"`, `"body"`.
+        section: String,
+        /// Byte offset within the file where the check failed
+        /// (0 when the failure has no position, e.g. a missing file).
+        offset: u64,
+        /// Whether a `<path>.prev` generation was present (it too
+        /// failed, or the error would not have been raised).
+        prev_exists: bool,
+        /// Human-readable cause, including the `.prev` failure when
+        /// the fallback was tried.
+        detail: String,
+    },
 }
 
 impl fmt::Display for TrainError {
@@ -50,6 +70,17 @@ impl fmt::Display for TrainError {
                 write!(f, "feature-dimension mismatch: expected {expected}, got {got}")
             }
             TrainError::Checkpoint(msg) => write!(f, "bad checkpoint: {msg}"),
+            TrainError::CorruptCheckpoint { path, section, offset, prev_exists, detail } => {
+                let fallback = if *prev_exists {
+                    "a .prev generation exists but also failed"
+                } else {
+                    "no .prev fallback generation is present"
+                };
+                write!(
+                    f,
+                    "corrupt checkpoint {path}: {section} at byte {offset}: {detail} ({fallback})"
+                )
+            }
         }
     }
 }
@@ -89,6 +120,10 @@ pub enum ServeError {
     /// `std::io::Error` is neither `Clone` nor `PartialEq`, and serving
     /// only ever reports these, never matches on the kind.
     Io(String),
+    /// The request sat in the engine queue past the configured
+    /// per-request deadline and was expired at flush time instead of
+    /// occupying a batch row.
+    Deadline { waited_ms: u64, deadline_ms: u64 },
 }
 
 impl fmt::Display for ServeError {
@@ -103,6 +138,10 @@ impl fmt::Display for ServeError {
             ServeError::BadRoute(msg) => write!(f, "bad route: {msg}"),
             ServeError::Model(e) => write!(f, "model: {e}"),
             ServeError::Io(msg) => write!(f, "io: {msg}"),
+            ServeError::Deadline { waited_ms, deadline_ms } => write!(
+                f,
+                "deadline exceeded: waited {waited_ms}ms against a {deadline_ms}ms deadline"
+            ),
         }
     }
 }
@@ -164,5 +203,32 @@ mod tests {
         let e: ServeError = TrainError::DimMismatch { expected: 3, got: 5 }.into();
         assert_eq!(e, ServeError::Model(TrainError::DimMismatch { expected: 3, got: 5 }));
         assert!(e.to_string().contains("mismatch"), "{e}");
+        let e = ServeError::Deadline { waited_ms: 120, deadline_ms: 50 };
+        let s = e.to_string();
+        assert!(s.contains("120") && s.contains("50"), "{s}");
+    }
+
+    #[test]
+    fn corrupt_checkpoint_names_section_offset_and_fallback() {
+        let e = TrainError::CorruptCheckpoint {
+            path: "ck.txt".into(),
+            section: "payload".into(),
+            offset: 412,
+            prev_exists: false,
+            detail: "checksum mismatch".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("ck.txt"), "{s}");
+        assert!(s.contains("payload"), "{s}");
+        assert!(s.contains("412"), "{s}");
+        assert!(s.contains("no .prev fallback"), "{s}");
+        let e = TrainError::CorruptCheckpoint {
+            path: "ck.txt".into(),
+            section: "body".into(),
+            offset: 9,
+            prev_exists: true,
+            detail: "line 2: bad rng".into(),
+        };
+        assert!(e.to_string().contains("also failed"), "{e}");
     }
 }

@@ -23,9 +23,10 @@ use mmbsgd::model::SvmModel;
 use mmbsgd::runtime::Backend;
 use mmbsgd::serve::{self, ModelRegistry, Predictor, RouteSpec, ServeOptions, ShedPolicy};
 use mmbsgd::solver::bsgd::{self, TrainOutput};
-use mmbsgd::solver::{Checkpoint, TrainSession};
+use mmbsgd::solver::{load_checkpoint, TrainSession};
+use mmbsgd::util::{durable, fault};
 use std::path::{Path, PathBuf};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Minimal `--key value` / `--flag` argument map.  Values keep their
 /// command-line order and repeats: `get` returns the last occurrence
@@ -115,6 +116,7 @@ fn train_config(args: &Args, split: &Split) -> Result<TrainConfig> {
             .with_context(|| format!("reading {path}"))?;
         let doc = TomlDoc::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
         cfg.apply_toml(&doc)?;
+        install_fault_plan(&doc)?;
     }
     // CLI cost flags override a TOML `c = ...` key: clear the pending C
     // so resolve_c() cannot overwrite the explicit value below.
@@ -162,6 +164,28 @@ fn parse_simd_flag(args: &Args) -> Result<Option<SimdMode>> {
             .with_context(|| format!("bad --simd-mode {s:?} (auto|scalar)")),
         None => Ok(None),
     }
+}
+
+/// Install a `[fault] plan = "site@N=kind[:arg];..."` injection plan
+/// from a config file (fault-injection test builds only).  The plan is
+/// parsed in every build so typos fail loudly; without the
+/// `fault-inject` feature it is then dropped with a warning rather
+/// than silently ignored.  `MMBSGD_FAULT_PLAN` in the environment is
+/// picked up lazily by the sites themselves and needs no wiring here.
+fn install_fault_plan(doc: &TomlDoc) -> Result<()> {
+    let Some(v) = doc.get("fault", "plan") else { return Ok(()) };
+    let text = v.as_str().context("[fault] plan must be a string")?;
+    let plan = fault::FaultPlan::parse(text).map_err(|e| anyhow!("[fault] plan: {e}"))?;
+    if fault::ENABLED {
+        eprintln!("[fault] plan armed: {text}");
+        fault::install(plan);
+    } else {
+        eprintln!(
+            "[warn ] [fault] plan ignored: this binary was built without the \
+             `fault-inject` feature (rebuild with --features fault-inject to arm it)"
+        );
+    }
+    Ok(())
 }
 
 /// Apply a `--simd-mode` flag (default: the config's value) to the
@@ -247,10 +271,22 @@ fn run_session(
             let due_steps = ckpt_every > 0 && sess.steps() - last_write_step >= ckpt_every;
             let due_secs = ckpt_secs > 0 && last_write.elapsed().as_secs() >= ckpt_secs;
             if epoch_done || due_steps || due_secs {
-                std::fs::write(p, sess.checkpoint())
-                    .with_context(|| format!("writing checkpoint {}", p.display()))?;
-                last_write = Instant::now();
-                last_write_step = sess.steps();
+                // Atomic replace with checksum footer and a `.prev`
+                // generation — a crash mid-write can never lose the
+                // last good checkpoint.  A failed write is a warning,
+                // not a fatal error: training state is intact and the
+                // previous generation is still on disk.
+                match durable::write_atomic(p, &sess.checkpoint()) {
+                    Ok(()) => {
+                        last_write = Instant::now();
+                        last_write_step = sess.steps();
+                    }
+                    Err(e) => eprintln!(
+                        "[warn ] checkpoint write to {} failed ({e}); training \
+                         continues, previous generation kept",
+                        p.display()
+                    ),
+                }
             }
         }
     }
@@ -261,9 +297,20 @@ fn cmd_train(args: &Args) -> Result<()> {
     let split = load_split(args)?;
     let mut backend: Box<dyn Backend>;
     let sess = if let Some(rp) = args.get("resume") {
-        let text = std::fs::read_to_string(rp)
-            .with_context(|| format!("reading checkpoint {rp}"))?;
-        let mut ck = Checkpoint::parse(&text)?;
+        // Verified load: checksum footer checked, automatic fallback
+        // to the `.prev` generation when the primary is corrupt, and a
+        // typed CorruptCheckpoint (section + byte offset + whether a
+        // fallback existed) when both generations fail.
+        let loaded = load_checkpoint(Path::new(rp))?;
+        if loaded.generation == durable::Generation::Prev {
+            eprintln!(
+                "[warn ] {rp}: primary checkpoint failed verification ({}); \
+                 resuming from the .prev generation — up to one checkpoint \
+                 interval of progress is repeated, results stay bit-identical",
+                loaded.primary_error.as_deref().unwrap_or("unreadable"),
+            );
+        }
+        let mut ck = loaded.checkpoint;
         // allow extending the run: `--epochs` on resume overrides
         let epochs = args.get_parse("epochs", ck.config().epochs)?;
         ck.config_mut().epochs = epochs;
@@ -409,6 +456,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .with_context(|| format!("reading {path}"))?;
         let doc = TomlDoc::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
         scfg.apply_toml(&doc)?;
+        install_fault_plan(&doc)?;
     }
     if let Some(a) = args.get("addr") {
         scfg.addr = a.to_string();
@@ -420,6 +468,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             ShedPolicy::parse(s).with_context(|| format!("bad --shed {s:?} (reject|oldest)"))?;
     }
     scfg.monitor_window = args.get_parse("monitor-window", scfg.monitor_window)?;
+    scfg.idle_timeout_secs = args.get_parse("idle-timeout-secs", scfg.idle_timeout_secs)?;
+    scfg.max_line_bytes = args.get_parse("max-line-bytes", scfg.max_line_bytes)?;
+    scfg.max_conns = args.get_parse("max-conns", scfg.max_conns)?;
+    scfg.deadline_ms = args.get_parse("deadline-ms", scfg.deadline_ms)?;
     scfg.threads = args.get_parse("threads", scfg.threads)?;
     if let Some(mode) = parse_simd_flag(args)? {
         scfg.simd_mode = mode;
@@ -476,6 +528,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_max: scfg.queue_max,
         shed: scfg.shed,
         monitor_window: scfg.monitor_window,
+        idle_timeout: Duration::from_secs(scfg.idle_timeout_secs),
+        max_line_bytes: scfg.max_line_bytes,
+        max_conns: scfg.max_conns,
+        deadline: Duration::from_millis(scfg.deadline_ms),
     };
     let report = serve::serve(listener, registry, &opts)?;
     let mean_batch = if report.engine.batches > 0 {
@@ -492,6 +548,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         report.engine.batches,
         mean_batch,
         100.0 * report.drift.low_margin_fraction,
+    );
+    println!(
+        "[serve] degrade: expired {} | idle timeouts {} | oversize {} | busy {}",
+        report.engine.expired,
+        report.proto.idle_timeouts,
+        report.proto.oversize_lines,
+        report.proto.busy_rejected,
     );
     if let Some(acc) = report.drift.window_accuracy {
         println!(
@@ -613,7 +676,11 @@ COMMANDS
                may be raised to extend the run).  --checkpoint-every
                (steps) and --checkpoint-secs (wall clock) are
                independent cadences: whichever fires first writes; the
-               clock is checked at step-chunk boundaries.
+               clock is checked at step-chunk boundaries.  Writes are
+               atomic (temp file + fsync + rename) with a checksum
+               footer and a .prev last-good generation; --resume
+               verifies the checksum and falls back to .prev when the
+               primary is torn or corrupt.
   evaluate     --model model.txt --dataset <...> [--scale F] [--backend B]
                [--threads N] [--simd-mode auto|scalar]
   predict      --model model.txt --input data.libsvm [--backend B] [--threads N]
@@ -621,14 +688,25 @@ COMMANDS
   serve        --model name=model.txt[:weight] [--model b=other.txt:1 ...]
                [--addr host:port] [--batch-max N] [--queue-max N]
                [--shed reject|oldest] [--monitor-window N] [--threads N]
+               [--idle-timeout-secs N] [--max-line-bytes N]
+               [--max-conns N] [--deadline-ms N]
                [--simd-mode auto|scalar] [--seed N] [--backend B]
                [--config file.toml]
                long-lived TCP line-protocol server: micro-batched
                predict/decision, weighted deterministic A/B routing
                across the named models (same key => same model),
                swap-model hot reload, stats drift report; newline
-               commands, 'shutdown' stops the server.  TOML keys live
-               in a [serve] section; flags override the file.
+               commands, 'shutdown' stops the server (in-flight
+               requests are answered before the socket closes).  TOML
+               keys live in a [serve] section; flags override the file.
+               Degradation guards: idle connections are closed after
+               --idle-timeout-secs (0 = never), lines over
+               --max-line-bytes answer a typed error, connections past
+               --max-conns answer 'err busy', and requests queued
+               longer than --deadline-ms (0 = no deadline) answer
+               'err deadline'.  A [fault] plan = \"site@N=kind\" TOML
+               section (or MMBSGD_FAULT_PLAN) arms deterministic fault
+               injection in --features fault-inject builds.
   experiment   --id table1|table2|fig1|fig2|fig3|fig4|fig5|ablation|all
                [--scale F] [--threads N] [--out-dir DIR] [--backend B] [--seed N]
   tune         --dataset <...> [--c-grid 1,4,16] [--gamma-grid 0.1,1,10]

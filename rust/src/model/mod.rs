@@ -172,15 +172,22 @@ impl SvmModel {
         Ok(model)
     }
 
+    /// Save through the durable layer: atomic replace with a checksum
+    /// footer, previous generation kept at `<path>.prev`.
     pub fn save(&self, path: &Path) -> Result<()> {
-        std::fs::write(path, self.to_text())
+        crate::util::durable::write_atomic(path, &self.to_text())
             .with_context(|| format!("writing {}", path.display()))
     }
 
+    /// Load a model file, verifying the durable checksum footer when
+    /// one is present (files written before the footer existed load
+    /// unchecked — `from_text`'s structural validation is the
+    /// backstop for those).
     pub fn load(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
-        Self::from_text(&text)
+        let v = crate::util::durable::verify(&text, path)?;
+        Self::from_text(v.payload)
     }
 }
 

@@ -24,11 +24,16 @@ pub struct ArtifactRegistry {
 }
 
 impl ArtifactRegistry {
+    /// Read and index the manifest.  Files written by [`Self::save`]
+    /// carry a durable checksum footer which is verified here;
+    /// tool-written manifests without one load unchecked (the JSON
+    /// parse is the structural backstop).
     pub fn load(dir: &Path) -> Result<Self> {
         let manifest_path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&manifest_path)
             .with_context(|| format!("reading {}", manifest_path.display()))?;
-        let json = crate::util::json::Json::parse(&text)
+        let verified = crate::util::durable::verify(&text, &manifest_path)?;
+        let json = crate::util::json::Json::parse(verified.payload)
             .map_err(|e| anyhow!("parsing manifest: {e}"))?;
         let arr = json
             .get("artifacts")
@@ -97,5 +102,78 @@ impl ArtifactRegistry {
         std::env::var_os("MMBSGD_ARTIFACTS")
             .map(PathBuf::from)
             .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Write `manifest.json` through the durable layer (atomic replace,
+    /// checksum footer, `.prev` generation).  `file` entries are
+    /// emitted relative to the registry directory, matching what
+    /// [`Self::load`] joins back on.
+    pub fn save(&self) -> Result<()> {
+        use crate::util::json::{obj, to_string, Json};
+        let arr = self
+            .artifacts
+            .iter()
+            .map(|a| {
+                let file = a
+                    .file
+                    .strip_prefix(&self.dir)
+                    .unwrap_or(&a.file)
+                    .to_string_lossy()
+                    .into_owned();
+                obj(vec![
+                    ("name", Json::Str(a.name.clone())),
+                    ("file", Json::Str(file)),
+                    ("entry", Json::Str(a.entry.clone())),
+                    ("b_pad", Json::Num(a.b_pad as f64)),
+                    ("d_pad", Json::Num(a.d_pad as f64)),
+                    ("nb", Json::Num(a.nb as f64)),
+                    ("m_pad", Json::Num(a.m_pad as f64)),
+                ])
+            })
+            .collect();
+        let doc = obj(vec![("artifacts", Json::Arr(arr))]);
+        let mut text = to_string(&doc);
+        text.push('\n');
+        let path = self.dir.join("manifest.json");
+        crate::util::durable::write_atomic(&path, &text)
+            .with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_roundtrips_through_durable_save() {
+        let dir = std::env::temp_dir()
+            .join(format!("mmbsgd_artifacts_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let reg = ArtifactRegistry {
+            dir: dir.clone(),
+            artifacts: vec![ArtifactInfo {
+                name: "margins_b64".into(),
+                file: dir.join("margins_b64.pb"),
+                entry: "margins".into(),
+                b_pad: 64,
+                d_pad: 32,
+                nb: 8,
+                m_pad: 0,
+            }],
+        };
+        reg.save().unwrap();
+        let back = ArtifactRegistry::load(&dir).unwrap();
+        assert_eq!(back.artifacts.len(), 1);
+        assert_eq!(back.artifacts[0].name, "margins_b64");
+        assert_eq!(back.artifacts[0].b_pad, 64);
+        assert_eq!(back.artifacts[0].file, dir.join("margins_b64.pb"));
+        // a flipped byte is caught by the footer, not the JSON parser
+        let p = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&p).unwrap();
+        std::fs::write(&p, text.replacen("64", "65", 1)).unwrap();
+        let err = ArtifactRegistry::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("checksum") || err.contains("length"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -98,7 +98,12 @@ impl<J: Send, F: Fn(J) + Sync> BatchRun for Batch<'_, J, F> {
             // nested `run_jobs` from inside the closure run inline
             // instead of deadlocking on the batch hand-off.
             IN_POOL_JOB.with(|f| f.set(true));
-            let result = catch_unwind(AssertUnwindSafe(|| (self.f)(job)));
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                // Injection site `pool.job`: proves this catch_unwind
+                // actually contains a panicking job (fault-inject only).
+                crate::util::fault::fire_panic(crate::util::fault::site::POOL_JOB);
+                (self.f)(job)
+            }));
             IN_POOL_JOB.with(|f| f.set(false));
             if let Err(payload) = result {
                 let mut slot = self.panic.lock().expect("panic slot poisoned");

@@ -31,6 +31,7 @@ use super::registry::ModelRegistry;
 use crate::data::DenseMatrix;
 use crate::error::ServeError;
 use std::collections::VecDeque;
+use std::time::{Duration, Instant};
 
 /// What to do with a request that finds the queue full.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -76,6 +77,9 @@ struct Pending {
     id: u64,
     model: String,
     x: Vec<f32>,
+    /// When the request entered the queue; checked against the
+    /// engine's per-request deadline at flush time.
+    admitted: Instant,
 }
 
 /// Engine counters (reported by the `stats` protocol verb).
@@ -96,6 +100,9 @@ pub struct EngineStats {
     pub rows: u64,
     /// High-water mark of the pending queue.
     pub queue_peak: usize,
+    /// Requests expired at flush time by the per-request deadline
+    /// (answered [`ServeError::Deadline`], never packed into a batch).
+    pub expired: u64,
 }
 
 /// The micro-batcher; see the [module docs](self).
@@ -113,6 +120,8 @@ pub struct BatchEngine {
     ans: Vec<f64>,
     next_id: u64,
     stats: EngineStats,
+    /// Per-request deadline; `None` = requests wait indefinitely.
+    deadline: Option<Duration>,
 }
 
 impl BatchEngine {
@@ -128,7 +137,16 @@ impl BatchEngine {
             ans: Vec::new(),
             next_id: 0,
             stats: EngineStats::default(),
+            deadline: None,
         }
+    }
+
+    /// Set the per-request deadline: a request still queued after this
+    /// long is answered [`ServeError::Deadline`] by the next flush
+    /// instead of occupying a batch row.  `Duration::ZERO` disables
+    /// the deadline (the default).
+    pub fn set_deadline(&mut self, deadline: Duration) {
+        self.deadline = if deadline.is_zero() { None } else { Some(deadline) };
     }
 
     /// Route and admit one query.  `key` drives the registry's
@@ -170,7 +188,7 @@ impl BatchEngine {
             }
         }
         self.next_id += 1;
-        self.queue.push_back(Pending { id, model, x });
+        self.queue.push_back(Pending { id, model, x, admitted: Instant::now() });
         self.stats.submitted += 1;
         self.stats.queue_peak = self.stats.queue_peak.max(self.queue.len());
         Ok(id)
@@ -214,6 +232,22 @@ impl BatchEngine {
         // nothing here is O(queue²) even when A/B traffic interleaves.
         let mut groups: Vec<(String, Vec<Pending>)> = Vec::new();
         for p in self.queue.drain(..) {
+            // Expired waiters answer a typed error instead of taking a
+            // batch row from requests that can still meet their SLO.
+            if let Some(dl) = self.deadline {
+                let waited = p.admitted.elapsed();
+                if waited >= dl {
+                    self.stats.expired += 1;
+                    out.push((
+                        p.id,
+                        Err(ServeError::Deadline {
+                            waited_ms: waited.as_millis() as u64,
+                            deadline_ms: dl.as_millis() as u64,
+                        }),
+                    ));
+                    continue;
+                }
+            }
             match groups.iter_mut().find(|(m, _)| *m == p.model) {
                 Some((_, g)) => g.push(p),
                 None => {
@@ -415,6 +449,37 @@ mod tests {
         assert!(res[0].1.is_ok());
         assert!(matches!(res[1].1, Err(ServeError::BadRequest(_))));
         assert!(res[2].1.is_ok());
+    }
+
+    #[test]
+    fn deadline_expires_stale_requests_typed() {
+        let mut reg = registry(&["solo"]);
+        let mut eng = BatchEngine::new(8, 8, ShedPolicy::Reject);
+        // 1ns deadline: anything queued is already expired by flush
+        eng.set_deadline(Duration::from_nanos(1));
+        for k in 0..3 {
+            eng.submit(&reg, None, q(k as f32)).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(2));
+        let res = eng.flush(&mut reg);
+        assert_eq!(res.len(), 3);
+        for (_, r) in &res {
+            assert!(matches!(r, Err(ServeError::Deadline { .. })), "{r:?}");
+        }
+        assert_eq!(eng.stats().expired, 3);
+        assert_eq!(eng.stats().served, 0);
+        // generous deadline: requests serve normally again
+        eng.set_deadline(Duration::from_secs(60));
+        eng.submit(&reg, None, q(1.0)).unwrap();
+        let res = eng.flush(&mut reg);
+        assert_eq!(res.len(), 1);
+        assert!(res[0].1.is_ok());
+        // zero disables entirely
+        eng.set_deadline(Duration::ZERO);
+        eng.submit(&reg, None, q(1.0)).unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+        assert!(eng.flush(&mut reg)[0].1.is_ok());
+        assert_eq!(eng.stats().expired, 3);
     }
 
     #[test]

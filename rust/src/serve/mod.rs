@@ -53,8 +53,8 @@ pub mod proto;
 mod registry;
 
 pub use batch::{BatchEngine, Decision, EngineStats, ShedPolicy};
-pub use monitor::{DriftReport, Monitor, MARGIN_BINS};
-pub use proto::{serve, Command, ServeOptions, ServeReport};
+pub use monitor::{DegradeTotals, DriftReport, Monitor, MARGIN_BINS};
+pub use proto::{serve, Command, ProtoStats, ServeOptions, ServeReport};
 pub use registry::{ModelRegistry, ModelStatus, RouteArm, RouteSpec};
 
 pub use crate::error::ServeError;

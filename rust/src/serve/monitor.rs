@@ -30,6 +30,24 @@ use std::time::Instant;
 pub const MARGIN_BINS: usize = 16;
 const BIN_WIDTH: f64 = 0.25;
 
+/// Degradation totals pushed in by the serving layer so one `stats`
+/// payload covers both drift (margins, accuracy) and overload/fault
+/// behavior (shedding, deadlines, connection policing).  The monitor
+/// itself never computes these — it is a passive carrier.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DegradeTotals {
+    /// Requests shed by queue policy ([`crate::serve::ShedPolicy`]).
+    pub shed: u64,
+    /// Requests expired by the per-request deadline.
+    pub expired: u64,
+    /// Connections closed for idling past the idle timeout.
+    pub idle_timeouts: u64,
+    /// Protocol lines rejected for exceeding the line-length cap.
+    pub oversize_lines: u64,
+    /// Connections turned away at the connection cap (`err busy`).
+    pub busy_rejected: u64,
+}
+
 /// A point-in-time drift summary (the `stats` protocol verb's payload).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DriftReport {
@@ -45,6 +63,8 @@ pub struct DriftReport {
     pub window_accuracy: Option<f64>,
     /// Labelled feedbacks seen.
     pub feedback_seen: u64,
+    /// Overload / fault-handling totals (see [`DegradeTotals`]).
+    pub degrade: DegradeTotals,
 }
 
 /// Rolling margin histogram + label-feedback accuracy window; see the
@@ -58,6 +78,7 @@ pub struct Monitor {
     feedback_seen: u64,
     history: Vec<EvalPoint>,
     started: Instant,
+    degrade: DegradeTotals,
 }
 
 impl Monitor {
@@ -72,7 +93,14 @@ impl Monitor {
             feedback_seen: 0,
             history: Vec::new(),
             started: Instant::now(),
+            degrade: DegradeTotals::default(),
         }
+    }
+
+    /// Replace the degradation totals (monotone counters owned by the
+    /// serving layer; the monitor only reports them).
+    pub fn set_degradation(&mut self, totals: DegradeTotals) {
+        self.degrade = totals;
     }
 
     /// Record one served decision value (histogram + counters).
@@ -152,6 +180,7 @@ impl Monitor {
             mean_abs_margin: if self.served == 0 { 0.0 } else { self.abs_sum / self.served as f64 },
             window_accuracy: self.window_accuracy(),
             feedback_seen: self.feedback_seen,
+            degrade: self.degrade,
         }
     }
 }
@@ -207,6 +236,21 @@ mod tests {
         assert_eq!(m.history()[2].step, 6);
         assert!(m.history().iter().all(|p| p.n_svs == 33));
         assert!(m.history().iter().all(|p| (0.0..=1.0).contains(&p.accuracy)));
+    }
+
+    #[test]
+    fn degradation_totals_pass_through_report() {
+        let mut m = Monitor::new(2);
+        assert_eq!(m.report().degrade, DegradeTotals::default());
+        let d = DegradeTotals {
+            shed: 3,
+            expired: 2,
+            idle_timeouts: 1,
+            oversize_lines: 4,
+            busy_rejected: 5,
+        };
+        m.set_degradation(d);
+        assert_eq!(m.report().degrade, d);
     }
 
     #[test]

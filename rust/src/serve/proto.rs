@@ -14,7 +14,8 @@
 //! feedback [key=K] <±1> v1..vd ->  ok <hit|miss> <decision> <model>@v<N>
 //! stats                        ->  ok served=.. shed=.. queued=.. batches=..
 //!                                  mean_batch=.. low_margin=.. mean_margin=..
-//!                                  window_acc=.. feedback=.. models=..
+//!                                  window_acc=.. feedback=.. expired=..
+//!                                  idle_timeout=.. oversize=.. busy=.. models=..
 //! swap-model <name> <path>     ->  ok <name>@v<N>
 //! shutdown                     ->  ok bye          (then the server exits)
 //! <anything malformed>         ->  err <reason>    (connection stays up)
@@ -47,7 +48,7 @@
 //! model.
 
 use super::batch::{BatchEngine, EngineStats};
-use super::monitor::{DriftReport, Monitor};
+use super::monitor::{DegradeTotals, DriftReport, Monitor};
 use super::registry::ModelRegistry;
 use super::ShedPolicy;
 use crate::error::ServeError;
@@ -56,9 +57,9 @@ use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// How long a blocked connection read waits before re-checking the
 /// stop flag (also the accept-poll interval).
@@ -171,12 +172,71 @@ pub struct ServeOptions {
     pub shed: ShedPolicy,
     /// Label-feedback accuracy window length.
     pub monitor_window: usize,
+    /// Close a connection after this much request silence
+    /// (`Duration::ZERO` = never).
+    pub idle_timeout: Duration,
+    /// Longest accepted protocol line in bytes; longer lines answer
+    /// `err` and are discarded to the next newline.
+    pub max_line_bytes: usize,
+    /// Max simultaneously served connections; extras are answered
+    /// `err busy` and closed (0 = unlimited).
+    pub max_conns: usize,
+    /// Per-request deadline: requests queued longer answer
+    /// [`ServeError::Deadline`] (`Duration::ZERO` = none).
+    pub deadline: Duration,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        Self { batch_max: 64, queue_max: 256, shed: ShedPolicy::Reject, monitor_window: 256 }
+        Self {
+            batch_max: 64,
+            queue_max: 256,
+            shed: ShedPolicy::Reject,
+            monitor_window: 256,
+            idle_timeout: Duration::from_secs(300),
+            max_line_bytes: 64 * 1024,
+            max_conns: 1024,
+            deadline: Duration::ZERO,
+        }
     }
+}
+
+/// Connection-policing totals (the degradation half of `stats`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ProtoStats {
+    /// Connections closed for idling past `idle_timeout`.
+    pub idle_timeouts: u64,
+    /// Lines rejected for exceeding `max_line_bytes`.
+    pub oversize_lines: u64,
+    /// Connections turned away at the `max_conns` cap.
+    pub busy_rejected: u64,
+}
+
+/// Shared atomic counters behind [`ProtoStats`]: written by connection
+/// threads and the accept loop, snapshotted by the engine thread.
+#[derive(Default)]
+struct ProtoCounters {
+    idle_timeouts: AtomicU64,
+    oversize_lines: AtomicU64,
+    busy_rejected: AtomicU64,
+}
+
+impl ProtoCounters {
+    fn snapshot(&self) -> ProtoStats {
+        ProtoStats {
+            idle_timeouts: self.idle_timeouts.load(Ordering::Relaxed),
+            oversize_lines: self.oversize_lines.load(Ordering::Relaxed),
+            busy_rejected: self.busy_rejected.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Per-connection read-loop limits (a `Copy` slice of [`ServeOptions`]
+/// so connection threads don't need the whole options struct).
+#[derive(Clone, Copy)]
+struct ConnLimits {
+    idle_timeout: Duration,
+    max_line_bytes: usize,
 }
 
 /// What a completed [`serve`] run did.
@@ -185,6 +245,7 @@ pub struct ServeReport {
     pub connections: u64,
     pub engine: EngineStats,
     pub drift: DriftReport,
+    pub proto: ProtoStats,
 }
 
 /// One line in flight from a connection reader to the engine.  Parse
@@ -230,17 +291,28 @@ pub fn serve(
 ) -> Result<ServeReport, ServeError> {
     listener.set_nonblocking(true)?;
     let stop = AtomicBool::new(false);
+    let counters = ProtoCounters::default();
+    let active = AtomicUsize::new(0);
     let (tx, rx) = mpsc::channel::<Incoming>();
     let opts = opts.clone();
     std::thread::scope(|s| {
         let stop = &stop;
-        let acceptor = s.spawn(move || accept_loop(listener, tx, stop, s));
+        let counters = &counters;
+        let active = &active;
+        let limits =
+            ConnLimits { idle_timeout: opts.idle_timeout, max_line_bytes: opts.max_line_bytes };
+        let max_conns = opts.max_conns;
+        let acceptor = s.spawn(move || {
+            accept_loop(listener, tx, stop, s, limits, max_conns, counters, active)
+        });
         // The engine owns the (non-Send) registry and runs here; it
         // returns once every channel sender is gone — i.e. after the
         // accept loop and every connection reader have exited.
-        let (engine, drift) = engine_loop(registry, opts, rx);
+        let (engine, drift) = engine_loop(registry, opts, rx, counters);
         match acceptor.join() {
-            Ok((connections, None)) => Ok(ServeReport { connections, engine, drift }),
+            Ok((connections, None)) => {
+                Ok(ServeReport { connections, engine, drift, proto: counters.snapshot() })
+            }
             Ok((_, Some(e))) => Err(e),
             Err(_) => Err(ServeError::Io("accept thread panicked".into())),
         }
@@ -251,11 +323,16 @@ pub fn serve(
 /// nonblocking so a `shutdown` arriving on one connection stops the
 /// whole server within one [`POLL`]).  Returns the connection count
 /// and the fatal accept error, if any.
+#[allow(clippy::too_many_arguments)] // internal fan-out of serve()'s state
 fn accept_loop<'scope, 'env>(
     listener: TcpListener,
     tx: mpsc::Sender<Incoming>,
     stop: &'scope AtomicBool,
     s: &'scope std::thread::Scope<'scope, 'env>,
+    limits: ConnLimits,
+    max_conns: usize,
+    counters: &'scope ProtoCounters,
+    active: &'scope AtomicUsize,
 ) -> (u64, Option<ServeError>) {
     let mut connections = 0u64;
     loop {
@@ -263,10 +340,26 @@ fn accept_loop<'scope, 'env>(
             return (connections, None);
         }
         match listener.accept() {
-            Ok((stream, _peer)) => {
+            Ok((mut stream, _peer)) => {
+                // Connection cap: refuse with an explicit `err busy`
+                // instead of accepting unboundedly (each connection
+                // costs two scoped threads + a reply backlog).
+                if max_conns > 0 && active.load(Ordering::Relaxed) >= max_conns {
+                    counters.busy_rejected.fetch_add(1, Ordering::Relaxed);
+                    // best effort: the socket may inherit the
+                    // listener's nonblocking flag
+                    let _ = stream.set_nonblocking(false);
+                    let _ = stream.set_write_timeout(Some(POLL));
+                    let _ = stream.write_all(b"err busy: connection limit reached\n");
+                    continue; // dropped => closed
+                }
                 connections += 1;
+                active.fetch_add(1, Ordering::Relaxed);
                 let tx = tx.clone();
-                s.spawn(move || connection_loop(stream, tx, stop));
+                s.spawn(move || {
+                    connection_loop(stream, tx, stop, limits, counters);
+                    active.fetch_sub(1, Ordering::Relaxed);
+                });
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(POLL);
@@ -284,7 +377,13 @@ fn accept_loop<'scope, 'env>(
 /// a pipelining client's requests coalesce into engine micro-batches;
 /// the writer drains the reply channel in engine-emitted (= request)
 /// order.
-fn connection_loop(stream: TcpStream, tx: mpsc::Sender<Incoming>, stop: &AtomicBool) {
+fn connection_loop(
+    stream: TcpStream,
+    tx: mpsc::Sender<Incoming>,
+    stop: &AtomicBool,
+    limits: ConnLimits,
+    counters: &ProtoCounters,
+) {
     // Accepted sockets inherit the listener's nonblocking flag on some
     // platforms (Windows); the reader wants blocking reads with a
     // timeout, not a busy-spin.
@@ -317,13 +416,47 @@ fn connection_loop(stream: TcpStream, tx: mpsc::Sender<Incoming>, stop: &AtomicB
         // `err` in order and the connection survives.
         let mut rd = BufReader::new(&stream);
         let mut buf: Vec<u8> = Vec::new();
+        let mut last_rx = Instant::now();
+        // After an oversized line is answered, swallow the rest of it
+        // (up to its newline) without replying again.
+        let mut discarding = false;
         loop {
             if stop.load(Ordering::Relaxed) {
                 break;
             }
+            // Injection site `proto.read`: a slow or wedged peer path.
+            match crate::util::fault::armed(crate::util::fault::site::PROTO_READ) {
+                Some(crate::util::fault::FaultKind::Stall(ms)) => {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                Some(crate::util::fault::FaultKind::Io) => break,
+                _ => {}
+            }
+            let before = buf.len();
             match rd.read_until(b'\n', &mut buf) {
                 Ok(0) => break, // client closed
                 Ok(_) => {
+                    last_rx = Instant::now();
+                    if discarding {
+                        // tail of the already-answered oversized line
+                        discarding = false;
+                        buf.clear();
+                        continue;
+                    }
+                    if buf.len() > limits.max_line_bytes {
+                        counters.oversize_lines.fetch_add(1, Ordering::Relaxed);
+                        let e = ServeError::BadRequest(format!(
+                            "line exceeds {} bytes",
+                            limits.max_line_bytes
+                        ));
+                        // through the engine, so the err reply stays in
+                        // FIFO position relative to queued requests
+                        if tx.send(Incoming { cmd: Err(e), reply: reply_tx.clone() }).is_err() {
+                            break;
+                        }
+                        buf.clear();
+                        continue;
+                    }
                     let cmd = match std::str::from_utf8(&buf) {
                         Ok(text) => {
                             let line = text.trim();
@@ -354,6 +487,36 @@ fn connection_loop(stream: TcpStream, tx: mpsc::Sender<Incoming>, stop: &AtomicB
                         || e.kind() == std::io::ErrorKind::TimedOut
                         || e.kind() == std::io::ErrorKind::Interrupted =>
                 {
+                    // a trickling writer made progress without reaching
+                    // a newline: alive, just slow — not idle
+                    if buf.len() > before {
+                        last_rx = Instant::now();
+                    }
+                    // a mid-line buffer past the cap is answered (and
+                    // then discarded) *now*; waiting for its newline
+                    // would let one line grow server memory unboundedly
+                    if !discarding && buf.len() > limits.max_line_bytes {
+                        counters.oversize_lines.fetch_add(1, Ordering::Relaxed);
+                        let e = ServeError::BadRequest(format!(
+                            "line exceeds {} bytes",
+                            limits.max_line_bytes
+                        ));
+                        if tx.send(Incoming { cmd: Err(e), reply: reply_tx.clone() }).is_err() {
+                            break;
+                        }
+                        discarding = true;
+                        buf.clear();
+                    }
+                    if !limits.idle_timeout.is_zero()
+                        && last_rx.elapsed() >= limits.idle_timeout
+                    {
+                        counters.idle_timeouts.fetch_add(1, Ordering::Relaxed);
+                        // direct reply is safe: an idle connection has
+                        // no replies in flight (the engine drains after
+                        // every burst)
+                        let _ = reply_tx.try_send("err idle timeout, closing connection".into());
+                        break;
+                    }
                     continue;
                 }
                 Err(_) => break,
@@ -373,8 +536,10 @@ fn engine_loop(
     mut registry: ModelRegistry,
     opts: ServeOptions,
     rx: mpsc::Receiver<Incoming>,
+    counters: &ProtoCounters,
 ) -> (EngineStats, DriftReport) {
     let mut engine = BatchEngine::new(opts.batch_max, opts.queue_max, opts.shed);
+    engine.set_deadline(opts.deadline);
     let mut monitor = Monitor::new(opts.monitor_window);
     let mut waiting: BTreeMap<u64, WaitingReply> = BTreeMap::new();
     while let Ok(first) = rx.recv() {
@@ -411,6 +576,7 @@ fn engine_loop(
                 }
                 Command::Stats => {
                     drain(&mut engine, &mut registry, &mut waiting, &mut monitor);
+                    sync_degradation(&mut monitor, &engine, counters);
                     let _ = inc.reply.try_send(stats_line(&engine, &registry, &monitor));
                 }
                 Command::SwapModel { name, path } => {
@@ -434,7 +600,22 @@ fn engine_loop(
         }
         drain(&mut engine, &mut registry, &mut waiting, &mut monitor);
     }
+    sync_degradation(&mut monitor, &engine, counters);
     (engine.stats(), monitor.report())
+}
+
+/// Copy the latest shed/expired/policing totals into the monitor so
+/// one [`DriftReport`] carries both drift and degradation.
+fn sync_degradation(monitor: &mut Monitor, engine: &BatchEngine, counters: &ProtoCounters) {
+    let p = counters.snapshot();
+    let s = engine.stats();
+    monitor.set_degradation(DegradeTotals {
+        shed: s.shed,
+        expired: s.expired,
+        idle_timeouts: p.idle_timeouts,
+        oversize_lines: p.oversize_lines,
+        busy_rejected: p.busy_rejected,
+    });
 }
 
 fn enqueue(
@@ -508,7 +689,8 @@ fn stats_line(engine: &BatchEngine, registry: &ModelRegistry, monitor: &Monitor)
         .collect();
     format!(
         "ok served={} shed={} queued={} batches={} mean_batch={mean_batch:.2} \
-         low_margin={:.4} mean_margin={:.4} window_acc={acc} feedback={} models={}",
+         low_margin={:.4} mean_margin={:.4} window_acc={acc} feedback={} \
+         expired={} idle_timeout={} oversize={} busy={} models={}",
         s.served,
         s.shed,
         engine.queued(),
@@ -516,6 +698,10 @@ fn stats_line(engine: &BatchEngine, registry: &ModelRegistry, monitor: &Monitor)
         r.low_margin_fraction,
         r.mean_abs_margin,
         r.feedback_seen,
+        r.degrade.expired,
+        r.degrade.idle_timeouts,
+        r.degrade.oversize_lines,
+        r.degrade.busy_rejected,
         models.join(",")
     )
 }

@@ -16,7 +16,7 @@ pub mod session;
 pub mod smo;
 pub mod tune;
 
-pub use session::{Checkpoint, StepOutcome, TrainSession};
+pub use session::{load_checkpoint, Checkpoint, LoadedCheckpoint, StepOutcome, TrainSession};
 
 /// Progress hooks; implemented by the coordinator for live reporting.
 /// All methods default to no-ops.

@@ -55,6 +55,7 @@ use crate::error::TrainError;
 use crate::model::{SvStore, SvmModel};
 use crate::rng::Xoshiro256;
 use crate::runtime::Backend;
+use crate::util::durable;
 use crate::util::timer::TimeBook;
 use std::fmt::Write as _;
 use std::time::{Duration, Instant};
@@ -714,6 +715,113 @@ impl<'a> Reader<'a> {
     }
 }
 
+// ------------------------------------------------- durable file loads
+
+/// A checkpoint read back from disk, recording which generation
+/// satisfied the load.
+#[derive(Debug)]
+pub struct LoadedCheckpoint {
+    pub checkpoint: Checkpoint,
+    /// `Primary` when `<path>` itself verified and parsed; `Prev` when
+    /// the load fell back to the `<path>.prev` last-good generation.
+    pub generation: durable::Generation,
+    /// Why the primary was rejected, when `generation == Prev`.
+    pub primary_error: Option<String>,
+}
+
+/// One load failure, positioned: which section gave out and at which
+/// byte of the file.
+struct LoadFailure {
+    section: &'static str,
+    offset: u64,
+    detail: String,
+}
+
+/// Byte offset of the 1-based line named by a `"line N: ..."` parse
+/// message; 0 when the message carries no position.
+fn line_byte_offset(text: &str, msg: &str) -> u64 {
+    let n: usize = msg
+        .strip_prefix("line ")
+        .and_then(|rest| rest.split(':').next())
+        .and_then(|digits| digits.trim().parse().ok())
+        .unwrap_or(0);
+    if n <= 1 {
+        return 0;
+    }
+    let mut offset = 0u64;
+    for (i, line) in text.lines().enumerate() {
+        if i + 1 == n {
+            break;
+        }
+        offset += line.len() as u64 + 1;
+    }
+    offset
+}
+
+fn load_one(path: &std::path::Path) -> Result<Checkpoint, LoadFailure> {
+    let payload = durable::read_verified(path).map_err(|e| match e {
+        durable::DurableError::Io { detail, .. } => {
+            LoadFailure { section: "io", offset: 0, detail }
+        }
+        durable::DurableError::Corrupt { section, offset, detail, .. } => {
+            LoadFailure { section, offset, detail }
+        }
+    })?;
+    Checkpoint::parse(&payload).map_err(|e| match e {
+        TrainError::Checkpoint(msg) => LoadFailure {
+            section: "body",
+            offset: line_byte_offset(&payload, &msg),
+            detail: msg,
+        },
+        other => LoadFailure { section: "body", offset: 0, detail: other.to_string() },
+    })
+}
+
+/// Load a checkpoint file through the durable layer: verify the
+/// checksum footer, parse, and — when either fails — fall back to the
+/// `<path>.prev` last-good generation.  When both generations are
+/// unusable the error is [`TrainError::CorruptCheckpoint`], naming the
+/// failing section, the byte offset, and whether a `.prev` existed.
+pub fn load_checkpoint(path: &std::path::Path) -> Result<LoadedCheckpoint, TrainError> {
+    let primary = match load_one(path) {
+        Ok(checkpoint) => {
+            return Ok(LoadedCheckpoint {
+                checkpoint,
+                generation: durable::Generation::Primary,
+                primary_error: None,
+            })
+        }
+        Err(f) => f,
+    };
+    let prev = durable::prev_path(path);
+    let prev_exists = prev.exists();
+    let mut detail = primary.detail.clone();
+    if prev_exists {
+        match load_one(&prev) {
+            Ok(checkpoint) => {
+                return Ok(LoadedCheckpoint {
+                    checkpoint,
+                    generation: durable::Generation::Prev,
+                    primary_error: Some(format!(
+                        "{} at byte {}: {}",
+                        primary.section, primary.offset, primary.detail
+                    )),
+                })
+            }
+            Err(pf) => {
+                detail.push_str(&format!("; .prev also failed: {}: {}", pf.section, pf.detail));
+            }
+        }
+    }
+    Err(TrainError::CorruptCheckpoint {
+        path: path.display().to_string(),
+        section: primary.section.to_string(),
+        offset: primary.offset,
+        prev_exists,
+        detail,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -828,5 +936,80 @@ mod tests {
         let small = split.train.gather(&[0, 1, 2]);
         let err = resumed.run_epoch(&small, None, &mut NoopObserver, 0).unwrap_err();
         assert!(matches!(err, TrainError::Checkpoint(_)), "{err}");
+    }
+
+    fn scratch_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("mmbsgd_session_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn load_checkpoint_verifies_and_falls_back_to_prev() {
+        let split = dataset(&SynthSpec::ijcnn_like(0.01), 4);
+        let mut be = NativeBackend::new();
+        let mut sess = TrainSession::new(tiny_cfg(), &mut be).unwrap();
+        sess.run_epoch(&split.train, None, &mut NoopObserver, 40).unwrap();
+        let gen1 = sess.checkpoint();
+        sess.run_epoch(&split.train, None, &mut NoopObserver, 40).unwrap();
+        let gen2 = sess.checkpoint();
+
+        let dir = scratch_dir("loadck");
+        let p = dir.join("ck.txt");
+        durable::write_atomic(&p, &gen1).unwrap();
+        durable::write_atomic(&p, &gen2).unwrap();
+
+        // clean primary
+        let loaded = load_checkpoint(&p).unwrap();
+        assert_eq!(loaded.generation, durable::Generation::Primary);
+        assert!(loaded.primary_error.is_none());
+        assert_eq!(loaded.checkpoint.t, 80);
+
+        // flip a payload byte → checksum rejects primary, .prev serves
+        let text = std::fs::read_to_string(&p).unwrap();
+        std::fs::write(&p, text.replacen("step 80", "step 81", 1)).unwrap();
+        let loaded = load_checkpoint(&p).unwrap();
+        assert_eq!(loaded.generation, durable::Generation::Prev);
+        assert_eq!(loaded.checkpoint.t, 40);
+        let why = loaded.primary_error.unwrap();
+        assert!(why.contains("payload"), "{why}");
+
+        // both generations corrupt → typed error naming everything
+        std::fs::write(durable::prev_path(&p), "garbage").unwrap();
+        match load_checkpoint(&p) {
+            Err(TrainError::CorruptCheckpoint { section, prev_exists, detail, .. }) => {
+                assert_eq!(section, "payload");
+                assert!(prev_exists);
+                assert!(detail.contains(".prev also failed"), "{detail}");
+            }
+            other => panic!("expected CorruptCheckpoint, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_checkpoint_without_prev_says_so() {
+        let dir = scratch_dir("noprev");
+        let p = dir.join("ck.txt");
+        durable::write_atomic(&p, "not a checkpoint\n").unwrap();
+        match load_checkpoint(&p) {
+            Err(TrainError::CorruptCheckpoint { section, prev_exists, .. }) => {
+                assert_eq!(section, "body");
+                assert!(!prev_exists);
+            }
+            other => panic!("expected CorruptCheckpoint, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn line_byte_offset_points_at_the_line() {
+        let text = "aa\nbbb\ncccc\n";
+        assert_eq!(line_byte_offset(text, "line 1: x"), 0);
+        assert_eq!(line_byte_offset(text, "line 2: x"), 3);
+        assert_eq!(line_byte_offset(text, "line 3: x"), 7);
+        assert_eq!(line_byte_offset(text, "no position"), 0);
     }
 }

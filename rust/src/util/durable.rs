@@ -1,0 +1,337 @@
+//! Crash-safe file IO: atomic replace, checksum footer, `.prev`
+//! last-good generation.
+//!
+//! Every durable artifact in the repo (model text, training
+//! checkpoints, the AOT artifact manifest) is written through
+//! [`write_atomic`]:
+//!
+//! 1. payload + footer go to `<path>.tmp`, which is `fsync`ed;
+//! 2. if `<path>` already exists it is renamed to `<path>.prev`,
+//!    keeping the last good generation;
+//! 3. `<path>.tmp` is renamed onto `<path>`;
+//! 4. the parent directory is fsynced (best effort) so the renames
+//!    survive power loss.
+//!
+//! The footer is a single trailing comment line,
+//!
+//! ```text
+//! #mmbsgd-durable v1 len=<payload bytes> fnv=<16 hex digits>
+//! ```
+//!
+//! where the digest is seeded FNV-1a with a SplitMix64 finalizer — the
+//! same no-dependency idiom as `route_hash` in `serve/registry.rs`.
+//! All existing text formats ignore trailing lines after their own
+//! terminator, so footered files remain readable by the original
+//! parsers, and files written before this footer existed ("legacy")
+//! verify as clean pass-throughs.
+//!
+//! [`verify`] classifies a file: intact footer → checked payload;
+//! no footer → legacy payload (structure-validating parsers are the
+//! backstop for torn legacy files); malformed or mismatching footer →
+//! [`DurableError::Corrupt`] naming the failing section and byte
+//! offset, which readers use to fall back to `.prev`.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use super::fault;
+
+/// Marker beginning the footer line. A `#` comment so every line
+/// oriented parser in the repo skips past it.
+pub const FOOTER_PREFIX: &str = "#mmbsgd-durable v1 ";
+
+/// Domain-separation seed for the footer digest ("mmbsgdv1" in ASCII).
+const CHECKSUM_SEED: u64 = 0x6d6d_6273_6764_7631;
+
+/// Which on-disk generation a read was satisfied from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Generation {
+    /// `<path>` itself.
+    Primary,
+    /// The `<path>.prev` last-good fallback.
+    Prev,
+}
+
+/// Typed failure from the durable layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DurableError {
+    /// The underlying filesystem operation failed (or an `io` fault
+    /// was injected).
+    Io { path: String, detail: String },
+    /// The file exists but its footer or payload does not check out.
+    /// `section` is `"footer"` or `"payload"`; `offset` is the byte
+    /// position the check failed at.
+    Corrupt { path: String, section: &'static str, offset: u64, detail: String },
+}
+
+impl fmt::Display for DurableError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DurableError::Io { path, detail } => write!(f, "durable io on {path}: {detail}"),
+            DurableError::Corrupt { path, section, offset, detail } => {
+                write!(f, "corrupt durable file {path}: {section} at byte {offset}: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DurableError {}
+
+/// Seeded FNV-1a over `bytes`, finished with the SplitMix64 mixer
+/// (same constants as `route_hash`; reimplemented here because `util`
+/// must not depend on `serve`).
+pub fn checksum(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ CHECKSUM_SEED.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    let mut z = h.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The footer line (newline-terminated) for `payload`.
+pub fn footer(payload: &str) -> String {
+    format!("{FOOTER_PREFIX}len={} fnv={:016x}\n", payload.len(), checksum(payload.as_bytes()))
+}
+
+/// `<path>.prev` — the last-good generation kept beside every durable
+/// file.
+pub fn prev_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".prev");
+    path.with_file_name(name)
+}
+
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Best-effort directory fsync so the renames themselves are durable.
+/// Ignored on platforms where opening a directory for sync fails.
+fn sync_parent(path: &Path) {
+    let parent = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    if let Ok(dir) = std::fs::File::open(&parent) {
+        let _ = dir.sync_all();
+    }
+}
+
+/// Atomically replace `path` with `payload` + checksum footer, keeping
+/// the previous generation at `<path>.prev`.
+///
+/// Injection site [`fault::site::DURABLE_WRITE`]: an `io` rule fails
+/// the write before anything touches disk; a `truncate:K` rule tears
+/// the byte stream at `K` but lets the rename pipeline complete, so
+/// the final file is detectably corrupt — exactly what a power cut
+/// between write and fsync produces.
+pub fn write_atomic(path: &Path, payload: &str) -> Result<(), DurableError> {
+    let io = |detail: String| DurableError::Io { path: path.display().to_string(), detail };
+
+    let mut data = Vec::with_capacity(payload.len() + 64);
+    data.extend_from_slice(payload.as_bytes());
+    data.extend_from_slice(footer(payload).as_bytes());
+    match fault::armed(fault::site::DURABLE_WRITE) {
+        Some(fault::FaultKind::Io) => return Err(io("injected write fault".to_string())),
+        Some(fault::FaultKind::Truncate(k)) => data.truncate(k.min(data.len())),
+        _ => {}
+    }
+
+    let tmp = tmp_path(path);
+    {
+        use std::io::Write as _;
+        let mut f = std::fs::File::create(&tmp)
+            .map_err(|e| io(format!("create {}: {e}", tmp.display())))?;
+        f.write_all(&data).map_err(|e| io(format!("write {}: {e}", tmp.display())))?;
+        f.sync_all().map_err(|e| io(format!("fsync {}: {e}", tmp.display())))?;
+    }
+    if path.exists() {
+        std::fs::rename(path, prev_path(path))
+            .map_err(|e| io(format!("rotate to .prev: {e}")))?;
+    }
+    std::fs::rename(&tmp, path).map_err(|e| io(format!("rename into place: {e}")))?;
+    sync_parent(path);
+    Ok(())
+}
+
+/// A verified read: the payload with the footer stripped, plus whether
+/// a footer was present at all (legacy files have none).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Verified<'a> {
+    pub payload: &'a str,
+    pub had_footer: bool,
+}
+
+/// Locate the footer line: the last occurrence of [`FOOTER_PREFIX`]
+/// that starts a line. Payload lines never start with `#`, so a
+/// mid-line hit means the prefix is data, not a footer.
+fn find_footer(text: &str) -> Option<usize> {
+    let idx = text.rfind(FOOTER_PREFIX)?;
+    if idx == 0 || text.as_bytes()[idx - 1] == b'\n' {
+        Some(idx)
+    } else {
+        None
+    }
+}
+
+/// Check `text` against its footer. `path` is only used for error
+/// messages. No footer → legacy accept (whole text is the payload).
+pub fn verify<'a>(text: &'a str, path: &Path) -> Result<Verified<'a>, DurableError> {
+    let corrupt = |section: &'static str, offset: u64, detail: String| DurableError::Corrupt {
+        path: path.display().to_string(),
+        section,
+        offset,
+        detail,
+    };
+    let Some(idx) = find_footer(text) else {
+        return Ok(Verified { payload: text, had_footer: false });
+    };
+    let footer_line = &text[idx..];
+    let body = footer_line.strip_prefix(FOOTER_PREFIX).expect("found by prefix search");
+    let body = match body.split_once('\n') {
+        None => body, // torn before the terminating newline
+        Some((first, rest)) if rest.is_empty() => first,
+        Some(_) => {
+            return Err(corrupt(
+                "footer",
+                idx as u64,
+                "data after the footer line".to_string(),
+            ))
+        }
+    };
+    let mut len: Option<usize> = None;
+    let mut fnv: Option<u64> = None;
+    for tok in body.split_ascii_whitespace() {
+        if let Some(v) = tok.strip_prefix("len=") {
+            len = v.parse().ok();
+        } else if let Some(v) = tok.strip_prefix("fnv=") {
+            fnv = u64::from_str_radix(v, 16).ok();
+        }
+    }
+    let (Some(len), Some(fnv)) = (len, fnv) else {
+        return Err(corrupt("footer", idx as u64, format!("malformed footer {body:?}")));
+    };
+    let payload = &text[..idx];
+    if payload.len() != len {
+        return Err(corrupt(
+            "payload",
+            payload.len().min(len) as u64,
+            format!("length mismatch: footer says {len} bytes, payload has {}", payload.len()),
+        ));
+    }
+    let got = checksum(payload.as_bytes());
+    if got != fnv {
+        return Err(corrupt(
+            "payload",
+            idx as u64,
+            format!("checksum mismatch: footer fnv={fnv:016x}, computed {got:016x}"),
+        ));
+    }
+    Ok(Verified { payload, had_footer: true })
+}
+
+/// Read `path` and return its verified payload (footer stripped).
+pub fn read_verified(path: &Path) -> Result<String, DurableError> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| DurableError::Io { path: path.display().to_string(), detail: e.to_string() })?;
+    let v = verify(&text, path)?;
+    Ok(v.payload.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("mmbsgd_durable_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn footer_roundtrip_and_legacy_accept() {
+        let payload = "mmbsgd-model v1\nnsv 0\n";
+        let text = format!("{payload}{}", footer(payload));
+        let v = verify(&text, Path::new("x")).unwrap();
+        assert!(v.had_footer);
+        assert_eq!(v.payload, payload);
+        // legacy file, no footer
+        let v = verify(payload, Path::new("x")).unwrap();
+        assert!(!v.had_footer);
+        assert_eq!(v.payload, payload);
+    }
+
+    #[test]
+    fn verify_catches_flips_truncation_and_garbage_footers() {
+        let payload = "header\n0.5 1 0\nend\n";
+        let text = format!("{payload}{}", footer(payload));
+        // single-byte flip in the payload
+        let flipped = text.replacen("0.5", "0.7", 1);
+        assert!(matches!(
+            verify(&flipped, Path::new("x")),
+            Err(DurableError::Corrupt { section: "payload", .. })
+        ));
+        // payload shortened under an intact-looking footer
+        let shorter = format!("header\nend\n{}", &text[payload.len()..]);
+        assert!(matches!(
+            verify(&shorter, Path::new("x")),
+            Err(DurableError::Corrupt { section: "payload", .. })
+        ));
+        // garbage after the footer line
+        let trailing = format!("{text}junk\n");
+        assert!(matches!(
+            verify(&trailing, Path::new("x")),
+            Err(DurableError::Corrupt { section: "footer", .. })
+        ));
+        // footer line torn mid-digest: still detected (checksum differs)
+        let torn = &text[..text.len() - 5];
+        assert!(verify(torn, Path::new("x")).is_err());
+        // torn before the footer *prefix* completes: payload intact,
+        // treated as legacy — the structural parser is the backstop
+        let torn_early = &text[..payload.len() + 4];
+        let v = verify(torn_early, Path::new("x")).unwrap();
+        assert!(!v.had_footer);
+    }
+
+    #[test]
+    fn write_atomic_rotates_prev_and_reads_back() {
+        let dir = scratch_dir("rotate");
+        let p = dir.join("model.txt");
+        write_atomic(&p, "gen one\n").unwrap();
+        assert_eq!(read_verified(&p).unwrap(), "gen one\n");
+        assert!(!prev_path(&p).exists());
+        write_atomic(&p, "gen two\n").unwrap();
+        assert_eq!(read_verified(&p).unwrap(), "gen two\n");
+        assert_eq!(read_verified(&prev_path(&p)).unwrap(), "gen one\n");
+        write_atomic(&p, "gen three\n").unwrap();
+        assert_eq!(read_verified(&prev_path(&p)).unwrap(), "gen two\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_verified_reports_missing_file_as_io() {
+        let dir = scratch_dir("missing");
+        assert!(matches!(
+            read_verified(&dir.join("absent.txt")),
+            Err(DurableError::Io { .. })
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checksum_is_stable_and_input_sensitive() {
+        let a = checksum(b"abc");
+        assert_eq!(a, checksum(b"abc"), "must be deterministic");
+        assert_ne!(a, checksum(b"abd"));
+        assert_ne!(a, checksum(b"ab"));
+        assert_ne!(checksum(b""), 0);
+    }
+}

@@ -1,0 +1,267 @@
+//! Deterministic fault injection for crash/recovery tests.
+//!
+//! A [`FaultPlan`] is a list of rules `site@N=kind[:arg]`, separated by
+//! `;`: the `N`th time (1-based) execution passes the named injection
+//! site, the given fault fires.  Sites are compile-time string
+//! constants (see [`site`]); the kinds are:
+//!
+//! | kind          | effect at the site                               |
+//! |---------------|--------------------------------------------------|
+//! | `io`          | the operation fails with an injected IO error    |
+//! | `truncate:K`  | a durable write is torn after `K` bytes          |
+//! | `panic`       | the site panics (worker-pool containment tests)  |
+//! | `stall:MS`    | the site sleeps `MS` milliseconds (slow peer)    |
+//!
+//! Example: `durable.write@2=truncate:64;libsvm.read@1=io` tears the
+//! second durable write at byte 64 and fails the first LIBSVM read.
+//!
+//! Plans arrive via [`install`] (tests), the `MMBSGD_FAULT_PLAN`
+//! environment variable, or a `[fault] plan = "..."` TOML section
+//! handled by the CLI.  The whole machinery is gated behind the
+//! `fault-inject` cargo feature: without it [`armed`] is an
+//! `#[inline(always)]` `None`, so production binaries carry the call
+//! sites but none of the bookkeeping.
+//!
+//! State is process-global (a mutex-guarded plan plus per-site hit
+//! counters), so tests that install plans must serialize themselves —
+//! `tests/fault_matrix.rs` shares one lock for this.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+/// Injection-site names. Each constant appears at exactly one hook in
+/// the codebase; the doc comment says where.
+pub mod site {
+    /// [`crate::util::durable::write_atomic`]: fail or tear the write.
+    pub const DURABLE_WRITE: &str = "durable.write";
+    /// [`crate::data::libsvm::load`]: fail the file read or truncate
+    /// the text before parsing.
+    pub const LIBSVM_READ: &str = "libsvm.read";
+    /// A `WorkerPool` job body: panic inside the pool's `catch_unwind`.
+    pub const POOL_JOB: &str = "pool.job";
+    /// The per-connection read loop in `serve/proto.rs`: stall the
+    /// reader or drop the connection.
+    pub const PROTO_READ: &str = "proto.read";
+}
+
+/// What happens when a rule fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The operation reports an injected IO error.
+    Io,
+    /// A durable write is torn after this many bytes.
+    Truncate(usize),
+    /// The site panics.
+    Panic,
+    /// The site sleeps this many milliseconds.
+    Stall(u64),
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct Rule {
+    site: String,
+    nth: u64,
+    kind: FaultKind,
+}
+
+/// A parsed set of injection rules. Empty plans are valid and inert.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    rules: Vec<Rule>,
+}
+
+impl FaultPlan {
+    /// Parse the `site@N=kind[:arg];...` grammar. Whitespace around
+    /// rules and tokens is ignored; empty rules (trailing `;`) are
+    /// skipped. Errors are human-readable strings naming the rule.
+    pub fn parse(text: &str) -> Result<FaultPlan, String> {
+        let mut rules = Vec::new();
+        for part in text.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (lhs, rhs) =
+                part.split_once('=').ok_or_else(|| format!("rule {part:?} lacks '='"))?;
+            let (site, nth) = lhs
+                .split_once('@')
+                .ok_or_else(|| format!("rule {part:?} lacks a 'site@N' left side"))?;
+            let nth: u64 = nth
+                .trim()
+                .parse()
+                .map_err(|_| format!("rule {part:?}: bad occurrence number {:?}", nth.trim()))?;
+            if nth == 0 {
+                return Err(format!("rule {part:?}: occurrence numbers are 1-based"));
+            }
+            let (kind_name, arg) = match rhs.split_once(':') {
+                Some((k, a)) => (k.trim(), Some(a.trim())),
+                None => (rhs.trim(), None),
+            };
+            let kind = match (kind_name, arg) {
+                ("io", None) => FaultKind::Io,
+                ("panic", None) => FaultKind::Panic,
+                ("truncate", Some(a)) => FaultKind::Truncate(
+                    a.parse()
+                        .map_err(|_| format!("rule {part:?}: bad truncate byte count {a:?}"))?,
+                ),
+                ("stall", Some(a)) => FaultKind::Stall(
+                    a.parse()
+                        .map_err(|_| format!("rule {part:?}: bad stall milliseconds {a:?}"))?,
+                ),
+                _ => {
+                    return Err(format!(
+                        "rule {part:?}: unknown kind {rhs:?} \
+                         (want io | truncate:K | panic | stall:MS)"
+                    ))
+                }
+            };
+            rules.push(Rule { site: site.trim().to_string(), nth, kind });
+        }
+        Ok(FaultPlan { rules })
+    }
+
+    /// True when the plan has no rules.
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+}
+
+/// True when the binary was compiled with fault injection enabled.
+/// Lets the CLI warn when a plan is supplied to a build that will
+/// silently ignore it.
+pub const ENABLED: bool = cfg!(feature = "fault-inject");
+
+struct Active {
+    plan: FaultPlan,
+    counts: HashMap<String, u64>,
+    fired: u64,
+}
+
+fn slot() -> &'static Mutex<Option<Active>> {
+    static SLOT: OnceLock<Mutex<Option<Active>>> = OnceLock::new();
+    SLOT.get_or_init(|| Mutex::new(None))
+}
+
+/// Install a plan, resetting all per-site counters. Overrides any
+/// previously installed or env-derived plan.
+pub fn install(plan: FaultPlan) {
+    let mut g = slot().lock().unwrap_or_else(|p| p.into_inner());
+    *g = Some(Active { plan, counts: HashMap::new(), fired: 0 });
+}
+
+/// Remove the active plan. The next [`armed`] call under the
+/// `fault-inject` feature re-reads `MMBSGD_FAULT_PLAN` (usually unset
+/// in tests, leaving injection off).
+pub fn clear() {
+    let mut g = slot().lock().unwrap_or_else(|p| p.into_inner());
+    *g = None;
+}
+
+/// Number of rules that have fired since the plan was installed.
+pub fn fired() -> u64 {
+    let g = slot().lock().unwrap_or_else(|p| p.into_inner());
+    g.as_ref().map(|a| a.fired).unwrap_or(0)
+}
+
+/// The hook every injection site calls: counts the visit and returns
+/// the fault to apply, if a rule matches this site at this visit.
+///
+/// With the `fault-inject` feature off this is an inlined `None`; the
+/// visit is not even counted.
+#[cfg(feature = "fault-inject")]
+pub fn armed(site_name: &str) -> Option<FaultKind> {
+    let mut g = slot().lock().unwrap_or_else(|p| p.into_inner());
+    if g.is_none() {
+        let plan = match std::env::var("MMBSGD_FAULT_PLAN") {
+            Ok(s) => FaultPlan::parse(&s).unwrap_or_else(|e| {
+                eprintln!("[warn ] MMBSGD_FAULT_PLAN ignored: {e}");
+                FaultPlan::default()
+            }),
+            Err(_) => FaultPlan::default(),
+        };
+        *g = Some(Active { plan, counts: HashMap::new(), fired: 0 });
+    }
+    let a = g.as_mut().expect("slot populated above");
+    if a.plan.rules.is_empty() {
+        return None;
+    }
+    let c = a.counts.entry(site_name.to_string()).or_insert(0);
+    *c += 1;
+    let visit = *c;
+    let hit = a
+        .plan
+        .rules
+        .iter()
+        .find(|r| r.site == site_name && r.nth == visit)
+        .map(|r| r.kind);
+    if hit.is_some() {
+        a.fired += 1;
+    }
+    hit
+}
+
+/// Feature-off stub: no counting, no locking, no fault.
+#[cfg(not(feature = "fault-inject"))]
+#[inline(always)]
+pub fn armed(_site_name: &str) -> Option<FaultKind> {
+    None
+}
+
+/// Convenience for sites whose only meaningful fault is a panic
+/// (worker-pool jobs): panics iff a `panic` rule fires here.
+pub fn fire_panic(site_name: &str) {
+    if let Some(FaultKind::Panic) = armed(site_name) {
+        panic!("injected fault: panic at {site_name}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_grammar_parses() {
+        let p = FaultPlan::parse("durable.write@2=truncate:64; libsvm.read@1=io").unwrap();
+        assert_eq!(p.rules.len(), 2);
+        assert_eq!(p.rules[0].site, "durable.write");
+        assert_eq!(p.rules[0].nth, 2);
+        assert_eq!(p.rules[0].kind, FaultKind::Truncate(64));
+        assert_eq!(p.rules[1].kind, FaultKind::Io);
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" ; ; ").unwrap().is_empty());
+        let p = FaultPlan::parse("pool.job@1=panic;proto.read@3=stall:250").unwrap();
+        assert_eq!(p.rules[0].kind, FaultKind::Panic);
+        assert_eq!(p.rules[1].kind, FaultKind::Stall(250));
+    }
+
+    #[test]
+    fn plan_grammar_rejects_malformed() {
+        for bad in [
+            "durable.write",           // no '='
+            "durable.write=io",        // no '@N'
+            "durable.write@0=io",      // 0-based
+            "durable.write@x=io",      // non-numeric N
+            "durable.write@1=explode", // unknown kind
+            "durable.write@1=truncate",   // missing arg
+            "durable.write@1=truncate:x", // bad arg
+            "proto.read@1=stall",         // missing arg
+            "durable.write@1=io:5",       // io takes no arg
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[cfg(feature = "fault-inject")]
+    #[test]
+    fn armed_fires_on_nth_visit_only() {
+        // Serialized against other fault tests by virtue of living in
+        // this module alone; integration tests use their own lock.
+        install(FaultPlan::parse("t.site@2=io").unwrap());
+        assert_eq!(armed("t.site"), None);
+        assert_eq!(armed("t.other"), None);
+        assert_eq!(armed("t.site"), Some(FaultKind::Io));
+        assert_eq!(armed("t.site"), None);
+        assert_eq!(fired(), 1);
+        clear();
+    }
+}

@@ -11,7 +11,13 @@
 //! * [`timer`] — scoped wall-clock accounting used for the paper's
 //!   merge-time-fraction measurements (Fig. 1).
 //! * [`stats`] — mean/std/percentile helpers for benches and reports.
+//! * [`durable`] — crash-safe atomic writes with checksum footers and
+//!   a `.prev` last-good generation (models, checkpoints, manifests).
+//! * [`fault`] — deterministic fault injection (`fault-inject`
+//!   feature) so recovery paths are proved by tests, not assumed.
 
+pub mod durable;
+pub mod fault;
 pub mod json;
 pub mod stats;
 pub mod table;

@@ -1,0 +1,373 @@
+//! The injected-fault matrix (ISSUE 6): with the `fault-inject`
+//! feature on, every [`mmbsgd::util::fault::site`] is driven through a
+//! real fault and the recovery contract is asserted, not assumed:
+//!
+//! * `durable.write` io  → typed error, last good generation intact;
+//! * `durable.write` tear → detected by the checksum footer, resume
+//!   falls back to `.prev` and finishes **bit-identical** to an
+//!   uninterrupted run;
+//! * `libsvm.read` io/truncate → typed error naming the position;
+//! * `pool.job` panic → contained by the pool, re-raised to the
+//!   caller, pool fully usable afterwards;
+//! * `proto.read` stall/io → the server answers late or drops that one
+//!   connection, and keeps serving others.
+//!
+//! Fault state is process-global, so every test holds [`PLAN_LOCK`]
+//! for its whole body (not just the armed section — an unguarded
+//! `write_atomic` in test A must not race test B's armed plan), and
+//! installs its plan via a drop-guard so a panicking test cannot leave
+//! its plan armed for the next one.
+
+#![cfg(feature = "fault-inject")]
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use mmbsgd::config::TrainConfig;
+use mmbsgd::data::synth::{dataset, SynthSpec};
+use mmbsgd::data::{libsvm, Split};
+use mmbsgd::model::SvmModel;
+use mmbsgd::runtime::{NativeBackend, WorkerPool};
+use mmbsgd::serve::{serve, ModelRegistry, ServeOptions};
+use mmbsgd::solver::bsgd::TrainOutput;
+use mmbsgd::solver::{load_checkpoint, Checkpoint, NoopObserver, TrainSession};
+use mmbsgd::util::durable::{self, DurableError};
+use mmbsgd::util::fault;
+
+static PLAN_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize the whole test on [`PLAN_LOCK`] (survives a poisoned
+/// mutex: a failed fault test must not wedge the rest of the matrix).
+fn serialize() -> MutexGuard<'static, ()> {
+    PLAN_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Clears the installed plan when dropped, even on panic.
+struct PlanGuard;
+
+impl Drop for PlanGuard {
+    fn drop(&mut self) {
+        fault::clear();
+    }
+}
+
+/// Arm `plan` until the returned guard drops. Caller must already
+/// hold the [`serialize`] lock.
+fn arm(plan: &str) -> PlanGuard {
+    fault::install(fault::FaultPlan::parse(plan).expect("test plan parses"));
+    PlanGuard
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mmbsgd_faultmx_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+// ------------------------------------------------------ durable.write
+
+#[test]
+fn injected_write_failure_is_typed_and_keeps_last_good() {
+    let _serial = serialize();
+    let dir = scratch("write_io");
+    let p = dir.join("ck.txt");
+    durable::write_atomic(&p, "generation one\n").unwrap();
+    {
+        let _g = arm("durable.write@1=io");
+        match durable::write_atomic(&p, "generation two\n") {
+            Err(DurableError::Io { detail, .. }) => {
+                assert!(detail.contains("injected"), "{detail}")
+            }
+            other => panic!("expected injected Io error, got {other:?}"),
+        }
+        assert_eq!(fault::fired(), 1);
+    }
+    // nothing on disk moved: the failed write never touched the file
+    assert_eq!(durable::read_verified(&p).unwrap(), "generation one\n");
+    assert!(!durable::prev_path(&p).exists());
+    // with the plan gone the same write succeeds and rotates .prev
+    durable::write_atomic(&p, "generation two\n").unwrap();
+    assert_eq!(durable::read_verified(&p).unwrap(), "generation two\n");
+    assert_eq!(durable::read_verified(&durable::prev_path(&p)).unwrap(), "generation one\n");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn tiny_cfg(epochs: usize) -> TrainConfig {
+    TrainConfig {
+        lambda: 1e-3,
+        gamma: 2.0,
+        budget: 24,
+        mergees: 3,
+        seed: 41,
+        epochs,
+        ..TrainConfig::default()
+    }
+}
+
+fn reference_run(split: &Split, cfg: &TrainConfig) -> TrainOutput {
+    let mut be = NativeBackend::new();
+    let mut sess = TrainSession::new(cfg.clone(), &mut be).unwrap();
+    for _ in 0..cfg.epochs {
+        sess.run_epoch(&split.train, None, &mut NoopObserver, 0).unwrap();
+    }
+    sess.finish()
+}
+
+fn run_to(split: &Split, cfg: &TrainConfig, t: u64) -> (String, TrainSession<'static>) {
+    // leak one backend per call: test-only, keeps lifetimes trivial
+    let be = Box::leak(Box::new(NativeBackend::new()));
+    let mut sess = TrainSession::new(cfg.clone(), be).unwrap();
+    while sess.steps() < t {
+        let left = t - sess.steps();
+        sess.run_epoch(&split.train, None, &mut NoopObserver, left).unwrap();
+    }
+    (sess.checkpoint(), sess)
+}
+
+/// A checkpoint write torn mid-stream by the fault plan is detected by
+/// the footer, `load_checkpoint` falls back to the `.prev` generation,
+/// and the resumed run finishes bit-identical to an uninterrupted one.
+#[test]
+fn torn_checkpoint_write_recovers_from_prev_bit_identically() {
+    let _serial = serialize();
+    let split = dataset(&SynthSpec::ijcnn_like(0.01), 6);
+    let cfg = tiny_cfg(1);
+    let n = split.train.len() as u64;
+    let dir = scratch("torn");
+    let p = dir.join("ck.txt");
+
+    let (blob_good, _) = run_to(&split, &cfg, n / 3);
+    durable::write_atomic(&p, &blob_good).unwrap();
+    let (blob_torn, mut sess) = run_to(&split, &cfg, 2 * n / 3);
+    {
+        let _g = arm(&format!("durable.write@1=truncate:{}", blob_torn.len() / 2));
+        // the tear happens *inside* the write pipeline: the rename
+        // completes, exactly like power loss between write and fsync
+        durable::write_atomic(&p, &blob_torn).unwrap();
+        assert_eq!(fault::fired(), 1);
+    }
+
+    let loaded = load_checkpoint(&p).expect("must fall back to .prev");
+    assert_eq!(loaded.generation, durable::Generation::Prev);
+    assert_eq!(loaded.checkpoint.step(), n / 3);
+    let why = loaded.primary_error.expect("fallback records why the primary failed");
+    assert!(why.contains("at byte"), "{why}");
+
+    // resume from the fallback and run to completion: bit-identical
+    // to the uninterrupted reference
+    let mut be = NativeBackend::new();
+    let mut resumed = loaded.checkpoint.into_session(&mut be).unwrap();
+    resumed.run_epoch(&split.train, None, &mut NoopObserver, 0).unwrap();
+    let out = resumed.finish();
+    let want = reference_run(&split, &cfg);
+    assert_eq!(out.model.to_text(), want.model.to_text());
+    assert_eq!(out.model.bias.to_bits(), want.model.bias.to_bits());
+
+    // the interrupted session object itself is also still consistent
+    // (its own in-memory state never depended on the torn file)
+    while sess.steps() < n {
+        let left = n - sess.steps();
+        sess.run_epoch(&split.train, None, &mut NoopObserver, left).unwrap();
+    }
+    assert_eq!(sess.finish().model.to_text(), want.model.to_text());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The `MMBSGD_FAULT_PLAN` environment path (what CI's end-to-end job
+/// uses) arms exactly like an installed plan.
+#[test]
+fn env_var_plan_arms_injection() {
+    let _serial = serialize();
+    fault::clear(); // force the next armed() call to re-read the env
+    std::env::set_var("MMBSGD_FAULT_PLAN", "durable.write@1=io");
+    let dir = scratch("envplan");
+    let p = dir.join("x.txt");
+    let got = durable::write_atomic(&p, "payload\n");
+    std::env::remove_var("MMBSGD_FAULT_PLAN");
+    fault::clear();
+    assert!(matches!(got, Err(DurableError::Io { .. })), "env plan did not fire: {got:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------------- libsvm.read
+
+#[test]
+fn libsvm_read_faults_are_typed_never_partial() {
+    let _serial = serialize();
+    let dir = scratch("libsvm");
+    let p = dir.join("data.libsvm");
+    std::fs::write(&p, "+1 1:0.5\n-1 2:1.5\n").unwrap();
+    {
+        let _g = arm("libsvm.read@1=io");
+        let err = libsvm::load(&p, None).unwrap_err().to_string();
+        assert!(err.contains("injected read fault"), "{err}");
+    }
+    {
+        // tear mid-token of line 2: "+1 1:0.5\n-1 2:" — the parser
+        // must reject the torn tail with a positioned error, not
+        // silently train on half a file
+        let _g = arm("libsvm.read@1=truncate:14");
+        let err = format!("{:#}", libsvm::load(&p, None).unwrap_err());
+        assert!(err.contains("line 2"), "{err}");
+    }
+    // plan cleared: the same file loads whole
+    let ds = libsvm::load(&p, None).unwrap();
+    assert_eq!(ds.len(), 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------- pool.job
+
+#[test]
+fn worker_pool_contains_injected_panic_and_survives() {
+    let _serial = serialize();
+    let pool = WorkerPool::new(2);
+    let hits = AtomicUsize::new(0);
+    {
+        let _g = arm("pool.job@1=panic");
+        let blown = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_jobs(vec![0usize, 1, 2, 3], |_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        }));
+        // the injected panic is caught by the pool's catch_unwind and
+        // re-raised scope-style in the caller — never in a detached
+        // worker (which would abort the process)
+        assert!(blown.is_err(), "injected job panic must propagate to the caller");
+    }
+    // the pool is not poisoned: the same handle runs the next batch
+    hits.store(0, Ordering::Relaxed);
+    pool.run_jobs(vec![0usize, 1, 2, 3], |_| {
+        hits.fetch_add(1, Ordering::Relaxed);
+    });
+    assert_eq!(hits.load(Ordering::Relaxed), 4);
+}
+
+// --------------------------------------------------------- proto.read
+
+fn trained_model() -> (SvmModel, Vec<f32>) {
+    let split = dataset(&SynthSpec::ijcnn_like(0.01), 2);
+    let out = mmbsgd::solver::bsgd::train(&split.train, &tiny_cfg(1)).unwrap();
+    let q = split.test.x.row(0).to_vec();
+    (out.model, q)
+}
+
+fn serve_with<R: Send>(model: SvmModel, client: impl FnOnce(SocketAddr) -> R + Send) -> R {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let mut reg = ModelRegistry::new(Box::new(NativeBackend::new()), 1);
+    reg.insert("m", model).unwrap();
+    let opts = ServeOptions::default();
+    let mut seen = None;
+    std::thread::scope(|s| {
+        let h = s.spawn(move || client(addr));
+        serve(listener, reg, &opts).unwrap();
+        seen = Some(h.join().unwrap());
+    });
+    seen.unwrap()
+}
+
+fn fmt_row(x: &[f32]) -> String {
+    x.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(" ")
+}
+
+/// A stalled read delays the connection's loop, but the request still
+/// answers and the shutdown handshake completes — a wedged peer path
+/// degrades latency, never correctness.
+#[test]
+fn proto_read_stall_still_answers() {
+    let _serial = serialize();
+    let (model, q) = trained_model();
+    let _g = arm("proto.read@1=stall:120");
+    let (first, bye) = serve_with(model, move |addr| {
+        let c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut w = c.try_clone().unwrap();
+        w.write_all(format!("predict {}\nshutdown\n", fmt_row(&q)).as_bytes()).unwrap();
+        w.flush().unwrap();
+        let mut r = BufReader::new(c);
+        let mut first = String::new();
+        r.read_line(&mut first).unwrap();
+        let mut bye = String::new();
+        r.read_line(&mut bye).unwrap();
+        (first.trim().to_string(), bye.trim().to_string())
+    });
+    assert!(first.starts_with("ok "), "stalled predict still answers: {first}");
+    assert_eq!(bye, "ok bye");
+}
+
+/// An injected read error drops exactly that connection; the listener
+/// keeps accepting, and a fresh connection serves stats and performs
+/// the clean shutdown.
+#[test]
+fn proto_read_error_drops_one_connection_not_the_server() {
+    let _serial = serialize();
+    let (model, q) = trained_model();
+    let _g = arm("proto.read@1=io");
+    let (dropped, stats, bye) = serve_with(model, move |addr| {
+        // connection A: its very first read visit errors — the server
+        // closes it without ever reading the request
+        let a = TcpStream::connect(addr).unwrap();
+        a.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut wa = a.try_clone().unwrap();
+        wa.write_all(format!("predict {}\n", fmt_row(&q)).as_bytes()).unwrap();
+        wa.flush().unwrap();
+        let mut ra = BufReader::new(a);
+        let mut got = String::new();
+        // the server never read our request, so its close may surface
+        // as clean EOF or as ECONNRESET — both mean "dropped"
+        let dropped = matches!(ra.read_line(&mut got), Ok(0) | Err(_));
+        // connection B: still served, performs the clean shutdown
+        let b = TcpStream::connect(addr).unwrap();
+        b.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut wb = b.try_clone().unwrap();
+        wb.write_all(b"stats\nshutdown\n").unwrap();
+        wb.flush().unwrap();
+        let mut rb = BufReader::new(b);
+        let mut stats = String::new();
+        rb.read_line(&mut stats).unwrap();
+        let mut bye = String::new();
+        rb.read_line(&mut bye).unwrap();
+        (dropped, stats.trim().to_string(), bye.trim().to_string())
+    });
+    assert!(dropped, "injected read error must close connection A (EOF to the client)");
+    assert!(stats.starts_with("ok served="), "{stats}");
+    assert_eq!(bye, "ok bye");
+}
+
+// ----------------------------------------------- checkpoint corpus tie-in
+
+/// The fault layer and the corpus agree: a file torn by the injector
+/// is rejected by the same verify path the fuzz corpus pins.
+#[test]
+fn injected_tear_and_manual_tear_fail_identically() {
+    let _serial = serialize();
+    let dir = scratch("tear_eq");
+    let split = dataset(&SynthSpec::ijcnn_like(0.01), 6);
+    let (blob, _) = run_to(&split, &tiny_cfg(1), 10);
+    let cut = blob.len() / 2;
+
+    let injected = dir.join("injected.txt");
+    {
+        let _g = arm(&format!("durable.write@1=truncate:{cut}"));
+        durable::write_atomic(&injected, &blob).unwrap();
+    }
+    let manual = dir.join("manual.txt");
+    durable::write_atomic(&manual, &blob).unwrap();
+    let full = std::fs::read_to_string(&manual).unwrap();
+    std::fs::write(&manual, &full[..cut]).unwrap();
+
+    let a = durable::read_verified(&injected).map(|s| Checkpoint::parse(&s).is_ok());
+    let b = durable::read_verified(&manual).map(|s| Checkpoint::parse(&s).is_ok());
+    match (a, b) {
+        (Err(_), Err(_)) | (Ok(false), Ok(false)) => {} // both detected, same layer
+        (ga, gb) => panic!("tear detection diverged: injected={ga:?} manual={gb:?}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

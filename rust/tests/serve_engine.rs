@@ -15,11 +15,12 @@ use mmbsgd::error::ServeError;
 use mmbsgd::model::SvmModel;
 use mmbsgd::runtime::NativeBackend;
 use mmbsgd::serve::{
-    serve, BatchEngine, ModelRegistry, Predictor, RouteSpec, ServeOptions, ShedPolicy,
+    serve, BatchEngine, ModelRegistry, Predictor, RouteSpec, ServeOptions, ServeReport,
+    ShedPolicy,
 };
 use mmbsgd::solver::bsgd;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::time::Duration;
 
 fn trained(seed: u64, budget: usize) -> (SvmModel, Split) {
@@ -230,6 +231,184 @@ fn ab_routing_is_deterministic_across_registries_and_threads() {
     // the 2:1 weighting actually splits traffic (loose bounds)
     let to_a = reference.iter().filter(|m| m.as_str() == "a").count();
     assert!((250..=420).contains(&to_a), "arm a got {to_a} of 500");
+}
+
+/// Run a one-model server on a loopback port while `client` drives it;
+/// returns the server's final report plus whatever the client observed.
+/// The client must eventually send `shutdown` (or trip a guard that
+/// stops the server) or the scope never joins.
+fn serve_with<R: Send>(
+    opts: ServeOptions,
+    model: SvmModel,
+    client: impl FnOnce(SocketAddr) -> R + Send,
+) -> (ServeReport, R) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let reg = registry_of(vec![("m", model)], 1);
+    let mut seen = None;
+    let report = std::thread::scope(|s| {
+        let h = s.spawn(move || client(addr));
+        let report = serve(listener, reg, &opts).unwrap();
+        seen = Some(h.join().unwrap());
+        report
+    });
+    (report, seen.unwrap())
+}
+
+fn fmt_row(x: &[f32]) -> String {
+    x.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(" ")
+}
+
+/// Pipeline `payload` in one write, then collect `expect` reply lines.
+fn pipeline(addr: SocketAddr, payload: String, expect: usize) -> Vec<String> {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    w.write_all(payload.as_bytes()).unwrap();
+    w.flush().unwrap();
+    let mut rd = BufReader::new(stream);
+    let mut replies = Vec::new();
+    for _ in 0..expect {
+        let mut line = String::new();
+        rd.read_line(&mut line).unwrap();
+        replies.push(line.trim().to_string());
+    }
+    replies
+}
+
+/// An oversized line and a non-UTF-8 line each answer a typed `err` in
+/// FIFO position, the counter shows in `stats`, and the connection and
+/// server both survive to answer the next command.
+#[test]
+fn oversized_and_garbage_lines_answer_err_and_server_survives() {
+    let (model, _) = trained(5, 16);
+    let opts = ServeOptions { max_line_bytes: 64, ..ServeOptions::default() };
+    let (report, replies) = serve_with(opts, model, move |addr| {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let big = format!("predict {}\n", "1 ".repeat(100)); // ~208 bytes > 64
+        w.write_all(big.as_bytes()).unwrap();
+        w.write_all(&[0xff, 0xfe, b'\n']).unwrap(); // not UTF-8
+        w.write_all(b"stats\nshutdown\n").unwrap();
+        w.flush().unwrap();
+        let mut rd = BufReader::new(stream);
+        let mut replies = Vec::new();
+        for _ in 0..4 {
+            let mut line = String::new();
+            rd.read_line(&mut line).unwrap();
+            replies.push(line.trim().to_string());
+        }
+        replies
+    });
+    assert!(replies[0].starts_with("err line exceeds 64 bytes"), "{}", replies[0]);
+    assert!(replies[1].starts_with("err "), "{}", replies[1]);
+    assert!(replies[2].starts_with("ok served=0"), "{}", replies[2]);
+    assert!(replies[2].contains("oversize=1"), "{}", replies[2]);
+    assert_eq!(replies[3], "ok bye");
+    assert_eq!(report.proto.oversize_lines, 1);
+}
+
+/// A connection that goes silent past the idle timeout is told why and
+/// closed; the server keeps serving new connections.
+#[test]
+fn idle_connections_time_out_with_a_typed_line() {
+    let (model, _) = trained(5, 16);
+    let opts =
+        ServeOptions { idle_timeout: Duration::from_millis(150), ..ServeOptions::default() };
+    let (report, (idle_line, eof)) = serve_with(opts, model, move |addr| {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut rd = BufReader::new(stream);
+        // send nothing: the server must evict us, with an explanation
+        let mut line = String::new();
+        rd.read_line(&mut line).unwrap();
+        let mut rest = String::new();
+        let eof = rd.read_line(&mut rest).unwrap();
+        // a fresh connection still works and shuts the server down
+        let bye = pipeline(addr, "shutdown\n".into(), 1);
+        assert_eq!(bye[0], "ok bye");
+        (line.trim().to_string(), eof)
+    });
+    assert_eq!(idle_line, "err idle timeout, closing connection");
+    assert_eq!(eof, 0, "the server must close the socket after the notice");
+    assert_eq!(report.proto.idle_timeouts, 1);
+    assert_eq!(report.connections, 2);
+}
+
+/// Past `max_conns`, new connections get `err busy` and are closed —
+/// established connections are unaffected.
+#[test]
+fn connection_cap_turns_extras_away_with_err_busy() {
+    let (model, _) = trained(5, 16);
+    let opts = ServeOptions { max_conns: 1, ..ServeOptions::default() };
+    let (report, (busy, bye)) = serve_with(opts, model, move |addr| {
+        let a = TcpStream::connect(addr).unwrap();
+        a.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut wa = a.try_clone().unwrap();
+        let mut ra = BufReader::new(a);
+        // prove A is established server-side before B tries
+        wa.write_all(b"stats\n").unwrap();
+        let mut line = String::new();
+        ra.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ok "), "{line}");
+        let b = TcpStream::connect(addr).unwrap();
+        b.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut rb = BufReader::new(b);
+        let mut busy = String::new();
+        rb.read_line(&mut busy).unwrap();
+        wa.write_all(b"shutdown\n").unwrap();
+        let mut bye = String::new();
+        ra.read_line(&mut bye).unwrap();
+        (busy.trim().to_string(), bye.trim().to_string())
+    });
+    assert_eq!(busy, "err busy: connection limit reached");
+    assert_eq!(bye, "ok bye");
+    assert_eq!(report.proto.busy_rejected, 1);
+    assert_eq!(report.connections, 1, "the refused connection is not counted as served");
+}
+
+/// With a (deliberately unmeetable) per-request deadline, every
+/// request answers the typed deadline error instead of hanging, the
+/// expiry counter shows in `stats`, and shutdown still drains cleanly.
+#[test]
+fn expired_requests_answer_typed_deadline_errors() {
+    let (model, split) = trained(5, 16);
+    let opts =
+        ServeOptions { deadline: Duration::from_nanos(1), ..ServeOptions::default() };
+    let payload: String = (0..3)
+        .map(|i| format!("predict {}\n", fmt_row(split.test.x.row(i))))
+        .chain(["stats\n".to_string(), "shutdown\n".to_string()])
+        .collect();
+    let (report, replies) =
+        serve_with(opts, model, move |addr| pipeline(addr, payload, 5));
+    for r in &replies[..3] {
+        assert!(r.starts_with("err deadline exceeded"), "{r}");
+    }
+    assert!(replies[3].contains("expired=3"), "{}", replies[3]);
+    assert_eq!(replies[4], "ok bye");
+    assert_eq!(report.engine.expired, 3);
+    assert_eq!(report.engine.served, 0);
+}
+
+/// `shutdown` behind pipelined work is a drain, not an abort: every
+/// in-flight request is answered before the goodbye.
+#[test]
+fn shutdown_drains_pipelined_requests_before_closing() {
+    let (model, split) = trained(5, 24);
+    let n = 5usize;
+    let payload: String = (0..n)
+        .map(|i| format!("predict {}\n", fmt_row(split.test.x.row(i))))
+        .chain(["shutdown\n".to_string()])
+        .collect();
+    let (report, replies) = serve_with(ServeOptions::default(), model, move |addr| {
+        pipeline(addr, payload, n + 1)
+    });
+    for r in &replies[..n] {
+        assert!(r.starts_with("ok "), "{r}");
+    }
+    assert_eq!(replies[n], "ok bye");
+    assert_eq!(report.engine.served, n as u64);
 }
 
 /// Drive the full TCP server over a loopback socket: pipelined

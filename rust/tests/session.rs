@@ -16,7 +16,9 @@ use mmbsgd::error::TrainError;
 use mmbsgd::runtime::NativeBackend;
 use mmbsgd::serve::Predictor;
 use mmbsgd::solver::bsgd::{self, TrainOutput};
-use mmbsgd::solver::{Checkpoint, NoopObserver, TrainSession};
+use mmbsgd::solver::{load_checkpoint, Checkpoint, NoopObserver, TrainSession};
+use mmbsgd::util::durable;
+use std::path::PathBuf;
 
 fn tiny_split() -> Split {
     dataset(&SynthSpec::ijcnn_like(0.02), 11) // ~1000 points, d=22
@@ -212,6 +214,134 @@ fn checkpoint_parse_rejects_tampering() {
     // corrupted numeric field
     let broken = blob.replacen("rng ", "rng x", 1);
     assert!(matches!(Checkpoint::parse(&broken), Err(TrainError::Checkpoint(_))));
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("mmbsgd_session_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Run a fresh session up to step `t` and return its checkpoint blob.
+fn blob_at(split: &Split, cfg: &TrainConfig, t: u64) -> String {
+    let mut be = NativeBackend::new();
+    let mut sess = TrainSession::new(cfg.clone(), &mut be).unwrap();
+    let mut remaining = t;
+    while remaining > 0 && sess.epochs_done() < cfg.epochs as u64 {
+        let before = sess.steps();
+        sess.run_epoch(&split.train, None, &mut NoopObserver, remaining).unwrap();
+        remaining -= sess.steps() - before;
+    }
+    sess.checkpoint()
+}
+
+/// Attach a loaded checkpoint to a fresh backend and train to the end.
+fn finish_from(ck: Checkpoint, split: &Split, epochs: usize) -> TrainOutput {
+    let mut be = NativeBackend::new();
+    let mut sess = ck.into_session(&mut be).unwrap();
+    while sess.epochs_done() < epochs as u64 {
+        sess.partial_fit(&split.train).unwrap();
+    }
+    sess.finish()
+}
+
+/// The kill-point fault matrix (ISSUE 6 acceptance): at several
+/// checkpoint boundaries, write two durable generations, destroy the
+/// primary in every way a torn or corrupted write can (truncation
+/// before and after the footer, a flipped payload byte, deleted middle
+/// bytes, an emptied file, a deleted file), and assert that resume
+/// falls back to the intact `.prev` generation and finishes
+/// bit-identical to an uninterrupted run.
+#[test]
+fn corrupted_primary_checkpoint_falls_back_to_prev_bit_identically() {
+    let split = tiny_split();
+    let cfg = tiny_cfg(1);
+    let reference = reference_run(&split, &cfg);
+    let n = split.train.len() as u64;
+    let dir = scratch("fault_matrix");
+    let path = dir.join("ck.txt");
+
+    type Corruptor = fn(&str) -> Option<String>;
+    // `None` means "delete the primary file".
+    let corruptions: [(&str, Corruptor); 6] = [
+        ("truncate-40pc", |s| Some(s[..s.len() * 2 / 5].to_string())),
+        ("truncate-last-3", |s| Some(s[..s.len() - 3].to_string())),
+        ("flip-digit", |s| {
+            let i = s.find(|c: char| c.is_ascii_digit()).expect("blob has digits");
+            let mut b = s.as_bytes().to_vec();
+            b[i] = if b[i] == b'9' { b'0' } else { b[i] + 1 };
+            Some(String::from_utf8(b).unwrap())
+        }),
+        ("delete-middle", |s| {
+            let (a, b) = (s.len() / 3, s.len() / 2);
+            Some(format!("{}{}", &s[..a], &s[b..]))
+        }),
+        ("empty", |_| Some(String::new())),
+        ("delete-file", |_| None),
+    ];
+
+    for t in [n / 4, n / 2, 3 * n / 4] {
+        let early = blob_at(&split, &cfg, t / 2); // becomes .prev
+        let late = blob_at(&split, &cfg, t); // becomes the primary
+        for (name, corrupt) in &corruptions {
+            durable::write_atomic(&path, &early).unwrap();
+            durable::write_atomic(&path, &late).unwrap(); // rotates early → .prev
+            let text = std::fs::read_to_string(&path).unwrap();
+            match corrupt(&text) {
+                Some(bad) => std::fs::write(&path, bad).unwrap(),
+                None => std::fs::remove_file(&path).unwrap(),
+            }
+            let loaded = load_checkpoint(&path)
+                .unwrap_or_else(|e| panic!("{name} at t={t}: no fallback: {e}"));
+            assert_eq!(
+                loaded.generation,
+                durable::Generation::Prev,
+                "{name} at t={t} must reject the primary"
+            );
+            assert!(loaded.primary_error.is_some(), "{name} at t={t}");
+            let out = finish_from(loaded.checkpoint, &split, cfg.epochs);
+            assert_bit_identical(&reference, &out);
+            let _ = std::fs::remove_file(&path);
+            let _ = std::fs::remove_file(durable::prev_path(&path));
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// An intact primary resumes as `Primary` (no spurious fallback), and
+/// a corrupt primary with no `.prev` fails with the typed
+/// `CorruptCheckpoint` that says no fallback exists.
+#[test]
+fn checkpoint_load_reports_generation_and_missing_fallback() {
+    let split = tiny_split();
+    let cfg = tiny_cfg(1);
+    let reference = reference_run(&split, &cfg);
+    let dir = scratch("no_prev");
+    let path = dir.join("ck.txt");
+
+    let blob = blob_at(&split, &cfg, split.train.len() as u64 / 3);
+    durable::write_atomic(&path, &blob).unwrap();
+    let loaded = load_checkpoint(&path).unwrap();
+    assert_eq!(loaded.generation, durable::Generation::Primary);
+    assert!(loaded.primary_error.is_none());
+    let out = finish_from(loaded.checkpoint, &split, cfg.epochs);
+    assert_bit_identical(&reference, &out);
+
+    // first-ever write (no .prev yet) corrupted: a typed error naming
+    // the failing section and the absence of a fallback — never a panic
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, text.replacen("step", "stop", 1)).unwrap();
+    match load_checkpoint(&path) {
+        Err(TrainError::CorruptCheckpoint { prev_exists, section, .. }) => {
+            assert!(!prev_exists, "no .prev was ever written");
+            assert!(!section.is_empty());
+        }
+        Err(e) => panic!("wrong error kind: {e}"),
+        Ok(_) => panic!("corrupt primary with no fallback must not load"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
