@@ -1,0 +1,214 @@
+//! Fleet rollout example: a staged model rollout across two replicas
+//! behind the consistent-hash router, with the feedback-driven
+//! auto-rollback safety net catching a botched release.
+//!
+//! The arc:
+//!
+//! 1. train a champion, package it as a versioned, checksummed
+//!    artifact, and verify the bundle round-trips through disk;
+//! 2. bring up two replicas (`serve_fleet`) and the router
+//!    (`run_router`), push + activate v1 fleet-wide;
+//! 3. send keyed traffic with label feedback through the router —
+//!    sticky per-user assignment, healthy accuracy window;
+//! 4. push a "botched re-export" as v2 (same weights, corrupted bias —
+//!    every checksum passes, the *function* is wrong);
+//! 5. the feedback window degrades, `maybe_auto_rollback` fires, and
+//!    every replica is back on v1 — no human in the loop.
+//!
+//! Run: `cargo run --release --example fleet_rollout`
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::time::Duration;
+
+use mmbsgd::config::TrainConfig;
+use mmbsgd::data::synth::{dataset, SynthSpec};
+use mmbsgd::data::Split;
+use mmbsgd::fleet::{run_router, Artifact, Controller, Provenance, ReplicaState, RouterOptions};
+use mmbsgd::model::SvmModel;
+use mmbsgd::runtime::NativeBackend;
+use mmbsgd::serve::{serve_fleet, ModelRegistry, ServeOptions};
+
+fn replica(listener: TcpListener, dir: &Path) {
+    let mut rep = ReplicaState::new(dir).expect("replica dir");
+    let reg = ModelRegistry::new(Box::new(NativeBackend::new()), 7);
+    serve_fleet(listener, reg, &ServeOptions::default(), &mut rep).expect("replica serve");
+}
+
+fn bind() -> (TcpListener, SocketAddr) {
+    let l = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let a = l.local_addr().expect("addr");
+    (l, a)
+}
+
+/// One line in, one line out, over a fresh connection.
+fn ask(addr: SocketAddr, line: &str) -> String {
+    let s = TcpStream::connect(addr).expect("connect");
+    s.set_nodelay(true).ok();
+    let mut w = s.try_clone().expect("clone");
+    let mut r = BufReader::new(s);
+    writeln!(w, "{line}").expect("send");
+    w.flush().expect("flush");
+    let mut reply = String::new();
+    r.read_line(&mut reply).expect("reply");
+    reply.trim_end().to_string()
+}
+
+/// Keyed predict + label feedback for `n` test rows through the
+/// router; returns the online accuracy the fleet actually observed.
+fn traffic(router: SocketAddr, split: &Split, n: usize) -> f64 {
+    let s = TcpStream::connect(router).expect("router connect");
+    s.set_nodelay(true).ok();
+    let mut w = s.try_clone().expect("clone");
+    let mut r = BufReader::new(s);
+    let mut ask = |line: &str| -> String {
+        writeln!(w, "{line}").expect("send");
+        w.flush().expect("flush");
+        let mut reply = String::new();
+        r.read_line(&mut reply).expect("reply");
+        reply.trim_end().to_string()
+    };
+    let mut hits = 0usize;
+    for i in 0..n.min(split.test.len()) {
+        let row: Vec<String> =
+            split.test.x.row(i).iter().map(|v| v.to_string()).collect();
+        let row = row.join(" ");
+        let key = format!("user-{}", i % 23); // sticky per-user shard
+        let pred = ask(&format!("predict key={key} {row}"));
+        assert!(pred.starts_with("ok "), "{pred}");
+        let label: f64 =
+            pred.split_ascii_whitespace().nth(1).expect("label").parse().expect("±1");
+        if label == split.test.y[i] {
+            hits += 1;
+        }
+        // the ground truth arrives as feedback — this is what fills
+        // each replica's accuracy window (the auto-rollback signal)
+        let truth = if split.test.y[i] > 0.0 { "+1" } else { "-1" };
+        let fb = ask(&format!("feedback key={key} {truth} {row}"));
+        assert!(fb.starts_with("ok "), "{fb}");
+    }
+    hits as f64 / n.min(split.test.len()) as f64
+}
+
+fn main() {
+    // -- train + package ------------------------------------------------
+    let spec = SynthSpec::phishing_like(0.5);
+    let split = dataset(&spec, 5);
+    let cfg = TrainConfig {
+        lambda: TrainConfig::lambda_from_c(spec.c, split.train.len()),
+        gamma: spec.gamma,
+        budget: 128,
+        mergees: 4,
+        seed: 2,
+        ..TrainConfig::default()
+    };
+    let champ = mmbsgd::solver::bsgd::train(&split.train, &cfg).expect("valid config").model;
+    println!(
+        "trained champ: {} SVs, offline acc {:.2}%",
+        champ.svs.len(),
+        100.0 * champ.accuracy(&split.test)
+    );
+
+    let scratch =
+        std::env::temp_dir().join(format!("mmbsgd_fleet_rollout_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&scratch);
+    std::fs::create_dir_all(&scratch).expect("scratch dir");
+
+    let v1 = Artifact::wrap("champ", 1, &champ, Provenance::from_config(&cfg), "lut", "auto")
+        .expect("package v1");
+    let bundle = scratch.join("champ-v1.artifact");
+    v1.save(&bundle).expect("save");
+    let verified = Artifact::load(&bundle).expect("checksums + footer hold");
+    println!(
+        "packaged {}@v{} -> {} ({} bytes, dim={}, nsv={}, lambda={})",
+        verified.name,
+        verified.version,
+        bundle.display(),
+        std::fs::metadata(&bundle).expect("meta").len(),
+        verified.dim,
+        verified.nsv,
+        verified.provenance.get("lambda").unwrap_or("?"),
+    );
+
+    // the botched re-export: a sign-flipped dual (every alpha and the
+    // bias negated — the classic label-convention slip).  The bundle is
+    // byte-perfect and every checksum passes; only live feedback can
+    // catch that the *function* is wrong.
+    let mut botched = SvmModel::new(champ.svs.dim(), champ.gamma);
+    for j in 0..champ.svs.len() {
+        botched.svs.push(champ.svs.point(j), -champ.svs.alpha(j));
+    }
+    botched.bias = -champ.bias;
+    let v2 = Artifact::wrap("champ", 2, &botched, Provenance::from_config(&cfg), "lut", "auto")
+        .expect("package v2");
+
+    // -- bring up the fleet --------------------------------------------
+    let (l0, a0) = bind();
+    let (l1, a1) = bind();
+    let (lr, ar) = bind();
+    let (d0, d1) = (scratch.join("rep0"), scratch.join("rep1"));
+    let eps = vec![a0.to_string(), a1.to_string()];
+    std::thread::scope(|s| {
+        s.spawn(|| replica(l0, &d0));
+        s.spawn(|| replica(l1, &d1));
+        let ropts = RouterOptions {
+            seed: 42,
+            vnodes: 64,
+            timeout: Duration::from_secs(5),
+            probe_every: Duration::from_secs(60),
+        };
+        let reps = eps.clone();
+        let rh = s.spawn(move || run_router(lr, reps, &ropts).expect("router"));
+
+        let mut ctl = Controller::new(eps.clone(), Duration::from_secs(5));
+        println!("\npush + activate v1:");
+        for o in ctl.push(&v1, true) {
+            println!("  {} -> {:?}", o.endpoint, o.result);
+            assert_eq!(o.result, Ok(1));
+        }
+
+        let acc = traffic(ar, &split, 120);
+        println!("v1 online accuracy through the router: {:.1}%", 100.0 * acc);
+        match ctl.maybe_auto_rollback("champ", 0.75) {
+            None => println!("auto-rollback guard: quiet (window healthy)"),
+            Some(_) => println!("auto-rollback guard: fired on v1 (unlucky shard window)"),
+        }
+
+        println!("\npush + activate v2 (the botched re-export):");
+        for o in ctl.push(&v2, true) {
+            println!("  {} -> {:?}", o.endpoint, o.result);
+            assert_eq!(o.result, Ok(2));
+        }
+        let acc = traffic(ar, &split, 120);
+        println!("v2 online accuracy through the router: {:.1}%", 100.0 * acc);
+
+        match ctl.maybe_auto_rollback("champ", 0.75) {
+            Some(outs) => {
+                println!("auto-rollback guard: FIRED (window below 75%)");
+                for o in outs {
+                    println!("  {} rolled back -> {:?}", o.endpoint, o.result);
+                }
+            }
+            None => println!("auto-rollback guard: window still above threshold"),
+        }
+
+        println!("\nfleet status after the rollout:");
+        for (ep, line) in ctl.status() {
+            println!("  {ep}: {}", line.expect("status"));
+        }
+
+        // orderly shutdown: replicas first (direct — the router refuses
+        // control verbs), then the router itself
+        for &a in &[a0, a1] {
+            assert_eq!(ask(a, "shutdown"), "ok bye");
+        }
+        assert_eq!(ask(ar, "shutdown"), "ok bye");
+        let report = rh.join().expect("router thread");
+        println!(
+            "\nrouter report: {} connections, {} forwarded, {} retried, {} rejected",
+            report.connections, report.forwarded, report.retried, report.rejected
+        );
+    });
+    let _ = std::fs::remove_dir_all(&scratch);
+}

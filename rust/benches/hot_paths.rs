@@ -2,8 +2,9 @@
 //! difference-form loop), the blocked kernel-tile engine (scalar rows
 //! vs tiled vs threaded batch margins, per-candidate vs batch merge
 //! scoring), the merge-scoring pass (LUT vs exact golden section vs XLA
-//! artifact), merge executors, and the maintenance-strategy ablation
-//! (merge vs projection crossover).
+//! artifact), merge executors, the maintenance-strategy ablation
+//! (merge vs projection crossover), and the fleet data plane (artifact
+//! load+verify latency, ring-sharded 2-replica fan-out vs 1).
 //!
 //! Run: `cargo bench --bench hot_paths [-- <filter>]`
 //!
@@ -382,6 +383,147 @@ fn main() {
         }
     }
 
+    if enabled("fleet") {
+        use std::io::{BufRead, BufReader, Write};
+        use std::net::{SocketAddr, TcpListener, TcpStream};
+        use std::time::Duration;
+
+        use mmbsgd::fleet::{Artifact, Controller, Provenance, ReplicaState, Ring};
+        use mmbsgd::serve::{serve_fleet, ServeOptions};
+
+        group("fleet: artifact load+verify, ring-sharded replica fan-out");
+        let scratch =
+            std::env::temp_dir().join(format!("mmbsgd_bench_fleet_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&scratch);
+        std::fs::create_dir_all(&scratch).unwrap();
+
+        // Disk → trusted model, the whole gauntlet: durable-footer
+        // check, manifest parse, section checksum, model parse +
+        // manifest cross-validation.
+        let mut packaged = SvmModel::new(128, gamma);
+        packaged.svs = random_store(256, 128, 27);
+        packaged.bias = 0.1;
+        let path = scratch.join("bench.artifact");
+        Artifact::wrap("bench", 1, &packaged, Provenance::default(), "lut", "auto")
+            .unwrap()
+            .save(&path)
+            .unwrap();
+        bench("fleet/artifact-load-verify/B256/d128", 200, || {
+            let a = Artifact::load(&path).unwrap();
+            a.validate_model().unwrap().svs.len()
+        });
+
+        // Data-plane fan-out: the same n keyed decisions pipelined down
+        // one connection to a single replica vs ring-sharded across two
+        // replicas on overlapped connections.  Each replica's engine
+        // thread is sequential, so two replicas are two engines — the
+        // ratio is the capacity argument for replication itself.
+        let (b, d, n) = (512usize, 128usize, 64usize);
+        let mut model = SvmModel::new(d, gamma);
+        model.svs = random_store(b, d, 28);
+        model.bias = 0.05;
+        let art = Artifact::wrap("bench", 1, &model, Provenance::default(), "lut", "auto").unwrap();
+        let mut rng = Xoshiro256::new(29);
+        let scale = (5.0 / (gamma * 2.0 * d as f64)).sqrt();
+        let lines: Vec<String> = (0..n)
+            .map(|k| {
+                let row: Vec<String> = (0..d)
+                    .map(|_| ((scale * rng.next_gaussian()) as f32).to_string())
+                    .collect();
+                format!("decision key=req-{k} {}\n", row.join(" "))
+            })
+            .collect();
+
+        let bindp = || {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            let a = l.local_addr().unwrap();
+            (l, a)
+        };
+        let (l0, a0) = bindp();
+        let (l1, a1) = bindp();
+        let (dir0, dir1) = (scratch.join("rep0"), scratch.join("rep1"));
+        let eps = vec![a0.to_string(), a1.to_string()];
+        std::thread::scope(|s| {
+            let serve_one = |l: TcpListener, dir: std::path::PathBuf| {
+                move || {
+                    let mut rep = ReplicaState::new(&dir).unwrap();
+                    let reg = ModelRegistry::new(Box::new(NativeBackend::new()), 7);
+                    serve_fleet(l, reg, &ServeOptions::default(), &mut rep).unwrap();
+                }
+            };
+            s.spawn(serve_one(l0, dir0));
+            s.spawn(serve_one(l1, dir1));
+            let mut ctl = Controller::new(eps.clone(), Duration::from_secs(10));
+            for o in ctl.push(&art, true) {
+                assert_eq!(o.result, Ok(1), "replica {} refused the bench artifact", o.endpoint);
+            }
+
+            let connect = |addr: SocketAddr| {
+                let sx = TcpStream::connect(addr).unwrap();
+                sx.set_nodelay(true).ok();
+                (sx.try_clone().unwrap(), BufReader::new(sx))
+            };
+
+            // all n keys down one pipelined connection to replica 0
+            let (mut w, mut r) = connect(a0);
+            let all: String = lines.concat();
+            bench(&format!("fleet/routed-1replica/B{b}/d{d}/n{n}"), 300, || {
+                w.write_all(all.as_bytes()).unwrap();
+                w.flush().unwrap();
+                let mut reply = String::new();
+                for _ in 0..n {
+                    reply.clear();
+                    r.read_line(&mut reply).unwrap();
+                }
+                reply.len()
+            });
+
+            // the same keys sharded by the router's ring (same seed and
+            // vnode count the live router defaults would use)
+            let ring = Ring::new(eps.clone(), 42, 64);
+            let mut batches = vec![String::new(); 2];
+            let mut counts = vec![0usize; 2];
+            for (k, line) in lines.iter().enumerate() {
+                let shard = ring.shard_of(format!("req-{k}").as_bytes()).unwrap();
+                batches[shard].push_str(line);
+                counts[shard] += 1;
+            }
+            let addrs = [a0, a1];
+            let mut conns: Vec<(TcpStream, BufReader<TcpStream>, String, usize)> = (0..2)
+                .filter(|&i| counts[i] > 0)
+                .map(|i| {
+                    let (w, r) = connect(addrs[i]);
+                    (w, r, std::mem::take(&mut batches[i]), counts[i])
+                })
+                .collect();
+            bench(&format!("fleet/routed-2replicas/B{b}/d{d}/n{n}"), 300, || {
+                std::thread::scope(|s2| {
+                    for c in conns.iter_mut() {
+                        let (w, r, batch, cnt) = (&mut c.0, &mut c.1, &c.2, c.3);
+                        s2.spawn(move || {
+                            w.write_all(batch.as_bytes()).unwrap();
+                            w.flush().unwrap();
+                            let mut reply = String::new();
+                            for _ in 0..cnt {
+                                reply.clear();
+                                r.read_line(&mut reply).unwrap();
+                            }
+                        });
+                    }
+                });
+            });
+
+            for addr in addrs {
+                let (mut w, mut r) = connect(addr);
+                w.write_all(b"shutdown\n").unwrap();
+                w.flush().unwrap();
+                let mut reply = String::new();
+                r.read_line(&mut reply).unwrap();
+            }
+        });
+        let _ = std::fs::remove_dir_all(&scratch);
+    }
+
     if enabled("eval") {
         group("batched evaluation (native vs xla artifact)");
         let svs = random_store(512, 128, 5);
@@ -496,6 +638,19 @@ fn main() {
             println!("batched-exp speedup at {shape}: {s:.2}x");
             derived.push((format!("speedup/exp_batched_vs_inline/{shape}"), s));
         }
+    }
+    // Fleet acceptance metrics (ISSUE 7 gate): artifact trust-path
+    // latency in ms, and the 2-replica ring-sharded capacity ratio.
+    if let Some(m) = recorded_median("fleet/artifact-load-verify/B256/d128") {
+        let ms = m.as_secs_f64() * 1e3;
+        println!("artifact load+verify at B=256,d=128: {ms:.3} ms");
+        derived.push(("artifact_load_verify_ms".into(), ms));
+    }
+    if let Some(s) =
+        ratio("fleet/routed-1replica/B512/d128/n64", "fleet/routed-2replicas/B512/d128/n64")
+    {
+        println!("ring-sharded 2-replica speedup at B512/d128/n64: {s:.2}x");
+        derived.push(("speedup/router_2replicas_vs_1/B512/d128/n64".into(), s));
     }
     emit_json("BENCH_hotpaths.json", &derived);
 

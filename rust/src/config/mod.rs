@@ -380,6 +380,112 @@ impl ServeConfig {
     }
 }
 
+/// Configuration of the fleet tooling: the `[fleet]` TOML section,
+/// shared by `mmbsgd fleet push|rollback|status` (controller side) and
+/// `mmbsgd fleet route` (router side).  Replica endpoints are a
+/// comma-separated string — the TOML subset has no arrays, and a flat
+/// string round-trips through CLI flags unchanged.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetConfig {
+    /// Replica endpoints, comma-separated (`"host:port,host:port"`).
+    pub replicas: String,
+    /// Router listen address.
+    pub addr: String,
+    /// Consistent-hash seed: controller and every router must share it
+    /// for key→replica agreement (same contract as the serve seed).
+    pub seed: u64,
+    /// Virtual nodes per replica on the hash ring (more = smoother
+    /// balance, slower ring builds).
+    pub vnodes: usize,
+    /// Dead-replica re-probe interval, seconds.
+    pub probe_secs: u64,
+    /// Controller push/reply deadline, milliseconds.
+    pub push_timeout_ms: u64,
+    /// Auto-rollback threshold: a replica whose feedback-accuracy
+    /// window drops below this triggers a fleet-wide rollback
+    /// (0 = auto-rollback off).
+    pub min_window_acc: f64,
+    /// Replica artifact directory (`mmbsgd serve --fleet-dir`).
+    pub dir: String,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            replicas: String::new(),
+            addr: "127.0.0.1:7979".into(),
+            seed: 1,
+            vnodes: 128,
+            probe_secs: 2,
+            push_timeout_ms: 5_000,
+            min_window_acc: 0.0,
+            dir: "fleet-artifacts".into(),
+        }
+    }
+}
+
+impl FleetConfig {
+    /// The replica list, split and trimmed (empty string = none).
+    pub fn replica_list(&self) -> Vec<String> {
+        self.replicas
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect()
+    }
+
+    /// Validate invariants; call before contacting the fleet.
+    pub fn validate(&self) -> Result<(), TrainError> {
+        let bad = |field: &'static str, message: String| {
+            Err(TrainError::InvalidConfig { field, message })
+        };
+        if self.addr.is_empty() {
+            return bad("addr", "must be host:port".into());
+        }
+        if self.vnodes == 0 {
+            return bad("vnodes", "must be >= 1".into());
+        }
+        if self.push_timeout_ms == 0 {
+            return bad("push_timeout_ms", "must be >= 1".into());
+        }
+        if !(0.0..=1.0).contains(&self.min_window_acc) {
+            return bad(
+                "min_window_acc",
+                format!("must be in 0..=1, got {}", self.min_window_acc),
+            );
+        }
+        Ok(())
+    }
+
+    /// Overlay values from a parsed TOML `[fleet]` section (same strict
+    /// count parsing as the `[train]` / `[serve]` overlays).
+    pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<()> {
+        let sect = match doc.section("fleet") {
+            Some(s) => s,
+            None => return Ok(()),
+        };
+        for (key, val) in sect {
+            match key.as_str() {
+                "replicas" => self.replicas = val.as_str().context("replicas")?.to_string(),
+                "addr" => self.addr = val.as_str().context("addr")?.to_string(),
+                "seed" => self.seed = toml_count(val, "seed")?,
+                "vnodes" => self.vnodes = toml_count_usize(val, "vnodes")?,
+                "probe_secs" => self.probe_secs = toml_count(val, "probe_secs")?,
+                "push_timeout_ms" => {
+                    self.push_timeout_ms = toml_count(val, "push_timeout_ms")?
+                }
+                "min_window_acc" => {
+                    self.min_window_acc = val.as_f64().context("min_window_acc")?
+                }
+                "dir" => self.dir = val.as_str().context("dir")?.to_string(),
+                other => bail!("unknown [fleet] key {other:?}"),
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Parse a TOML number as a non-negative integer count.  The
 /// TOML-subset parser stores every number as `f64`, so without this
 /// guard `threads = 2.9` would silently truncate to 2 and `threads =
@@ -625,6 +731,56 @@ mod tests {
             Err(TrainError::InvalidConfig { field, .. }) => assert_eq!(field, "batch_max"),
             other => panic!("expected InvalidConfig, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn fleet_toml_overlay_and_replica_list() {
+        let doc = TomlDoc::parse(
+            "[fleet]\nreplicas = \"10.0.0.1:9000, 10.0.0.2:9000\"\naddr = \"0.0.0.0:7979\"\n\
+             seed = 42\nvnodes = 64\nprobe_secs = 5\npush_timeout_ms = 2000\n\
+             min_window_acc = 0.8\ndir = \"/var/lib/mmbsgd\"\n",
+        )
+        .unwrap();
+        let mut cfg = FleetConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(
+            cfg.replica_list(),
+            vec!["10.0.0.1:9000".to_string(), "10.0.0.2:9000".to_string()]
+        );
+        assert_eq!(cfg.seed, 42);
+        assert_eq!(cfg.vnodes, 64);
+        assert_eq!(cfg.probe_secs, 5);
+        assert_eq!(cfg.push_timeout_ms, 2000);
+        assert_eq!(cfg.min_window_acc, 0.8);
+        assert_eq!(cfg.dir, "/var/lib/mmbsgd");
+        cfg.validate().unwrap();
+        // defaults validate, empty replica string means no replicas
+        let d = FleetConfig::default();
+        d.validate().unwrap();
+        assert!(d.replica_list().is_empty());
+    }
+
+    #[test]
+    fn fleet_toml_rejects_bad_keys_and_values() {
+        for bad in [
+            "[fleet]\nbogus = 1\n",
+            "[fleet]\nvnodes = 2.5\n",
+            "[fleet]\nseed = -1\n",
+            "[fleet]\npush_timeout_ms = -5\n",
+        ] {
+            let doc = TomlDoc::parse(bad).unwrap();
+            assert!(FleetConfig::default().apply_toml(&doc).is_err(), "{bad}");
+        }
+        use crate::error::TrainError;
+        let mut cfg = FleetConfig::default();
+        cfg.min_window_acc = 1.5;
+        match cfg.validate() {
+            Err(TrainError::InvalidConfig { field, .. }) => assert_eq!(field, "min_window_acc"),
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
+        let mut cfg = FleetConfig::default();
+        cfg.vnodes = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

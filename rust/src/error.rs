@@ -124,6 +124,14 @@ pub enum ServeError {
     /// per-request deadline and was expired at flush time instead of
     /// occupying a batch row.
     Deadline { waited_ms: u64, deadline_ms: u64 },
+    /// `swap-model` / `activate` offered a model whose feature
+    /// dimension differs from the version currently serving under the
+    /// same name.  Rejected at swap time so queued requests validated
+    /// against the old dimension are never flushed through the new
+    /// model; distinct from [`ServeError::Model`] wrapping
+    /// [`TrainError::DimMismatch`], which is the per-request shape
+    /// check.
+    DimMismatch { name: String, serving: usize, incoming: usize },
 }
 
 impl fmt::Display for ServeError {
@@ -142,6 +150,11 @@ impl fmt::Display for ServeError {
                 f,
                 "deadline exceeded: waited {waited_ms}ms against a {deadline_ms}ms deadline"
             ),
+            ServeError::DimMismatch { name, serving, incoming } => write!(
+                f,
+                "swap rejected for {name:?}: serving dimension {serving}, \
+                 incoming model has {incoming}"
+            ),
         }
     }
 }
@@ -157,6 +170,82 @@ impl From<TrainError> for ServeError {
 impl From<std::io::Error> for ServeError {
     fn from(e: std::io::Error) -> Self {
         ServeError::Io(e.to_string())
+    }
+}
+
+/// Everything that can go wrong packaging, distributing, or activating
+/// a versioned model artifact through the [`crate::fleet`] subsystem.
+/// Like the other error families this is fully typed — loads refuse
+/// mismatched checksums and dimensions with a variant the caller can
+/// match on, never a panic or a silent acceptance.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FleetError {
+    /// The underlying filesystem or socket operation failed (or an
+    /// `io` fault was injected at `artifact.read`).
+    Io { path: String, detail: String },
+    /// The artifact file failed the durable layer's whole-file
+    /// checksum or structure check (torn write, bit rot).
+    Corrupt { path: String, section: String, offset: u64, detail: String },
+    /// The manifest text failed to parse (bad header, missing field,
+    /// malformed section line).
+    Manifest { detail: String },
+    /// A per-section checksum in the manifest does not match the bytes
+    /// actually carried: the bundle was tampered with or spliced.
+    SectionChecksum { section: String, expected: u64, got: u64 },
+    /// The manifest's declared shape disagrees with the embedded model
+    /// (defense against a manifest from one model pasted onto another).
+    DimMismatch { manifest: usize, model: usize },
+    /// The embedded model text parsed but failed model validation;
+    /// carries the rendered cause.
+    Model(String),
+    /// A replica endpoint refused or dropped a control-plane exchange.
+    Replica { endpoint: String, detail: String },
+    /// No replica could answer (all dead, or the set is empty).
+    NoReplica { detail: String },
+    /// A version-level refusal: unknown version at activate, no
+    /// last-good generation at rollback, or a stale acknowledgement.
+    Version { detail: String },
+}
+
+impl fmt::Display for FleetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FleetError::Io { path, detail } => write!(f, "fleet io on {path}: {detail}"),
+            FleetError::Corrupt { path, section, offset, detail } => {
+                write!(f, "corrupt artifact {path}: {section} at byte {offset}: {detail}")
+            }
+            FleetError::Manifest { detail } => write!(f, "bad artifact manifest: {detail}"),
+            FleetError::SectionChecksum { section, expected, got } => write!(
+                f,
+                "artifact section {section:?} checksum mismatch: \
+                 manifest fnv={expected:016x}, computed {got:016x}"
+            ),
+            FleetError::DimMismatch { manifest, model } => write!(
+                f,
+                "artifact dimension mismatch: manifest declares {manifest}, \
+                 embedded model has {model}"
+            ),
+            FleetError::Model(detail) => write!(f, "artifact model rejected: {detail}"),
+            FleetError::Replica { endpoint, detail } => {
+                write!(f, "replica {endpoint}: {detail}")
+            }
+            FleetError::NoReplica { detail } => write!(f, "no replica available: {detail}"),
+            FleetError::Version { detail } => write!(f, "version error: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for FleetError {}
+
+impl From<crate::util::durable::DurableError> for FleetError {
+    fn from(e: crate::util::durable::DurableError) -> Self {
+        use crate::util::durable::DurableError as D;
+        match e {
+            D::Io { path, detail } => FleetError::Io { path, detail },
+            D::Corrupt { path, section, offset, detail } => {
+                FleetError::Corrupt { path, section: section.to_string(), offset, detail }
+            }
+        }
     }
 }
 
@@ -230,5 +319,43 @@ mod tests {
             detail: "line 2: bad rng".into(),
         };
         assert!(e.to_string().contains("also failed"), "{e}");
+    }
+
+    #[test]
+    fn swap_dim_mismatch_is_distinct_from_request_dim_mismatch() {
+        let swap = ServeError::DimMismatch { name: "champ".into(), serving: 3, incoming: 5 };
+        let req: ServeError = TrainError::DimMismatch { expected: 3, got: 5 }.into();
+        assert_ne!(swap, req);
+        let s = swap.to_string();
+        assert!(s.contains("champ") && s.contains('3') && s.contains('5'), "{s}");
+    }
+
+    #[test]
+    fn fleet_errors_render_actionably() {
+        let e = FleetError::SectionChecksum { section: "model".into(), expected: 0xab, got: 0xcd };
+        let s = e.to_string();
+        assert!(s.contains("model") && s.contains("00000000000000ab"), "{s}");
+        let e = FleetError::DimMismatch { manifest: 22, model: 7 };
+        assert!(e.to_string().contains("22"), "{e}");
+        let e = FleetError::Replica { endpoint: "127.0.0.1:9301".into(), detail: "refused".into() };
+        assert!(e.to_string().contains("9301"), "{e}");
+        let e = FleetError::Version { detail: "no .prev generation".into() };
+        assert!(e.to_string().contains(".prev"), "{e}");
+    }
+
+    #[test]
+    fn fleet_error_wraps_durable_error() {
+        use crate::util::durable::DurableError;
+        let e: FleetError = DurableError::Corrupt {
+            path: "m.artifact".into(),
+            section: "payload",
+            offset: 12,
+            detail: "checksum mismatch".into(),
+        }
+        .into();
+        assert!(matches!(e, FleetError::Corrupt { offset: 12, .. }), "{e:?}");
+        let e: FleetError =
+            DurableError::Io { path: "m.artifact".into(), detail: "gone".into() }.into();
+        assert!(matches!(e, FleetError::Io { .. }), "{e:?}");
     }
 }

@@ -1,0 +1,458 @@
+//! Versioned on-disk model bundle: a text manifest wrapping the
+//! existing model format, in the barbacane manifest idiom (versions,
+//! provenance, per-section checksums).
+//!
+//! Layout of the payload (the durable layer appends its own
+//! whole-file footer on top via [`crate::util::durable::write_atomic`]):
+//!
+//! ```text
+//! mmbsgd-fleet-artifact v1
+//! name <model name, one token>
+//! version <u64>
+//! scorer <lut|exact>
+//! simd <auto|scalar|...>
+//! dim <usize>
+//! nsv <usize>
+//! provenance <key=value key=value ...>
+//! section model len=<bytes> fnv=<16 hex digits>
+//! end-manifest
+//! <model text, exactly len bytes>
+//! ```
+//!
+//! Two checksum rings guard the bundle: the durable footer covers the
+//! whole file (torn writes, bit rot anywhere), and the per-section
+//! `fnv=` in the manifest covers the embedded model bytes alone — so a
+//! manifest from one model spliced onto another model's bytes is
+//! rejected even when the outer footer was recomputed by the attacker
+//! or by an honest-but-confused tool.  On top of that,
+//! [`Artifact::validate_model`] cross-checks the manifest's declared
+//! `dim`/`nsv` against the parsed model.  Every refusal is a typed
+//! [`FleetError`]; nothing in this module panics on arbitrary input
+//! (the fuzz corpus under `fuzz/corpus/manifest/` holds that line).
+
+use std::path::Path;
+
+use crate::config::TrainConfig;
+use crate::error::FleetError;
+use crate::model::SvmModel;
+use crate::util::durable;
+
+/// Magic first line of every artifact manifest.
+pub const ARTIFACT_MAGIC: &str = "mmbsgd-fleet-artifact v1";
+
+/// Trained-config provenance recorded in the manifest: a flat ordered
+/// `key=value` list, deliberately schema-free so older controllers can
+/// display newer fields.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Provenance {
+    pub pairs: Vec<(String, String)>,
+}
+
+impl Provenance {
+    /// Record the fields of a [`TrainConfig`] that determine what the
+    /// packaged model *is* (solver hyperparameters and seed), skipping
+    /// pure execution knobs like thread count.
+    pub fn from_config(cfg: &TrainConfig) -> Self {
+        let pairs = vec![
+            ("lambda".to_string(), format!("{}", cfg.lambda)),
+            ("gamma".to_string(), format!("{}", cfg.gamma)),
+            ("budget".to_string(), format!("{}", cfg.budget)),
+            ("mergees".to_string(), format!("{}", cfg.mergees)),
+            ("epochs".to_string(), format!("{}", cfg.epochs)),
+            ("seed".to_string(), format!("{}", cfg.seed)),
+            ("backend".to_string(), format!("{:?}", cfg.backend).to_lowercase()),
+            (
+                "merge_score_mode".to_string(),
+                format!("{:?}", cfg.merge_score_mode).to_lowercase(),
+            ),
+        ];
+        Provenance { pairs }
+    }
+
+    /// Look up a recorded key.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+/// A parsed (or freshly wrapped) model bundle.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Artifact {
+    pub name: String,
+    pub version: u64,
+    /// Merge scorer the model was trained with (`lut` / `exact`).
+    pub scorer: String,
+    /// SIMD mode recorded at package time (informational).
+    pub simd: String,
+    /// Feature dimension the manifest declares for the model.
+    pub dim: usize,
+    /// Support-vector count the manifest declares.
+    pub nsv: usize,
+    pub provenance: Provenance,
+    /// The embedded model in the standard `mmbsgd-model v1` text format.
+    pub model_text: String,
+}
+
+fn bad(detail: impl Into<String>) -> FleetError {
+    FleetError::Manifest { detail: detail.into() }
+}
+
+fn one_token(value: &str, field: &str) -> Result<String, FleetError> {
+    let v = value.trim();
+    if v.is_empty() || v.split_ascii_whitespace().count() != 1 {
+        return Err(bad(format!("{field} must be a single non-empty token, got {value:?}")));
+    }
+    Ok(v.to_string())
+}
+
+impl Artifact {
+    /// Wrap a trained model into a bundle.  `scorer` and `simd` are
+    /// recorded verbatim; `dim`/`nsv` are taken from the model itself
+    /// so the manifest can never disagree with what it wraps.
+    pub fn wrap(
+        name: &str,
+        version: u64,
+        model: &SvmModel,
+        provenance: Provenance,
+        scorer: &str,
+        simd: &str,
+    ) -> Result<Artifact, FleetError> {
+        Ok(Artifact {
+            name: one_token(name, "name")?,
+            version,
+            scorer: one_token(scorer, "scorer")?,
+            simd: one_token(simd, "simd")?,
+            dim: model.svs.dim(),
+            nsv: model.svs.len(),
+            provenance,
+            model_text: model.to_text(),
+        })
+    }
+
+    /// Serialize to the manifest + section text (the durable payload).
+    pub fn to_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::with_capacity(self.model_text.len() + 256);
+        let _ = writeln!(out, "{ARTIFACT_MAGIC}");
+        let _ = writeln!(out, "name {}", self.name);
+        let _ = writeln!(out, "version {}", self.version);
+        let _ = writeln!(out, "scorer {}", self.scorer);
+        let _ = writeln!(out, "simd {}", self.simd);
+        let _ = writeln!(out, "dim {}", self.dim);
+        let _ = writeln!(out, "nsv {}", self.nsv);
+        let _ = write!(out, "provenance");
+        for (k, v) in &self.provenance.pairs {
+            let _ = write!(out, " {k}={v}");
+        }
+        out.push('\n');
+        let _ = writeln!(
+            out,
+            "section model len={} fnv={:016x}",
+            self.model_text.len(),
+            durable::checksum(self.model_text.as_bytes())
+        );
+        let _ = writeln!(out, "end-manifest");
+        out.push_str(&self.model_text);
+        out
+    }
+
+    /// Parse a manifest + section text, verifying the per-section
+    /// checksum.  Total function over arbitrary input: every failure
+    /// is a typed error, never a panic.
+    pub fn parse(text: &str) -> Result<Artifact, FleetError> {
+        let mut rest = text;
+        let mut next_line = || -> Result<&str, FleetError> {
+            if rest.is_empty() {
+                return Err(bad("truncated manifest"));
+            }
+            let (line, tail) = match rest.split_once('\n') {
+                Some((l, t)) => (l, t),
+                None => (rest, ""),
+            };
+            rest = tail;
+            Ok(line)
+        };
+
+        let magic = next_line()?;
+        if magic.trim_end() != ARTIFACT_MAGIC {
+            return Err(bad(format!("bad magic line {magic:?}")));
+        }
+        let mut name = None;
+        let mut version = None;
+        let mut scorer = None;
+        let mut simd = None;
+        let mut dim = None;
+        let mut nsv = None;
+        let mut provenance = None;
+        let mut section: Option<(usize, u64)> = None;
+        loop {
+            let line = next_line()?;
+            if line.trim_end() == "end-manifest" {
+                break;
+            }
+            let (key, val) = line.split_once(' ').unwrap_or((line, ""));
+            match key {
+                "name" => name = Some(one_token(val, "name")?),
+                "version" => {
+                    version = Some(
+                        val.trim()
+                            .parse::<u64>()
+                            .map_err(|_| bad(format!("bad version {val:?}")))?,
+                    )
+                }
+                "scorer" => scorer = Some(one_token(val, "scorer")?),
+                "simd" => simd = Some(one_token(val, "simd")?),
+                "dim" => {
+                    dim = Some(
+                        val.trim()
+                            .parse::<usize>()
+                            .map_err(|_| bad(format!("bad dim {val:?}")))?,
+                    )
+                }
+                "nsv" => {
+                    nsv = Some(
+                        val.trim()
+                            .parse::<usize>()
+                            .map_err(|_| bad(format!("bad nsv {val:?}")))?,
+                    )
+                }
+                "provenance" => {
+                    let mut pairs = Vec::new();
+                    for tok in val.split_ascii_whitespace() {
+                        let (k, v) = tok
+                            .split_once('=')
+                            .ok_or_else(|| bad(format!("provenance token {tok:?} lacks '='")))?;
+                        pairs.push((k.to_string(), v.to_string()));
+                    }
+                    provenance = Some(Provenance { pairs });
+                }
+                "section" => {
+                    let mut words = val.split_ascii_whitespace();
+                    let sect = words.next().unwrap_or("");
+                    if sect != "model" {
+                        return Err(bad(format!("unknown section {sect:?}")));
+                    }
+                    let mut len = None;
+                    let mut fnv = None;
+                    for tok in words {
+                        if let Some(v) = tok.strip_prefix("len=") {
+                            len = v.parse::<usize>().ok();
+                        } else if let Some(v) = tok.strip_prefix("fnv=") {
+                            fnv = u64::from_str_radix(v, 16).ok();
+                        }
+                    }
+                    match (len, fnv) {
+                        (Some(l), Some(f)) => section = Some((l, f)),
+                        _ => return Err(bad(format!("malformed section line {line:?}"))),
+                    }
+                }
+                other => return Err(bad(format!("unknown manifest key {other:?}"))),
+            }
+        }
+        let (len, fnv) = section.ok_or_else(|| bad("manifest lacks a 'section model' line"))?;
+        let model_text = rest;
+        if model_text.len() != len {
+            return Err(bad(format!(
+                "model section length mismatch: manifest says {len} bytes, \
+                 payload carries {}",
+                model_text.len()
+            )));
+        }
+        let got = durable::checksum(model_text.as_bytes());
+        if got != fnv {
+            return Err(FleetError::SectionChecksum {
+                section: "model".to_string(),
+                expected: fnv,
+                got,
+            });
+        }
+        Ok(Artifact {
+            name: name.ok_or_else(|| bad("manifest lacks name"))?,
+            version: version.ok_or_else(|| bad("manifest lacks version"))?,
+            scorer: scorer.ok_or_else(|| bad("manifest lacks scorer"))?,
+            simd: simd.ok_or_else(|| bad("manifest lacks simd"))?,
+            dim: dim.ok_or_else(|| bad("manifest lacks dim"))?,
+            nsv: nsv.ok_or_else(|| bad("manifest lacks nsv"))?,
+            provenance: provenance.unwrap_or_default(),
+            model_text: model_text.to_string(),
+        })
+    }
+
+    /// Parse the embedded model and cross-check it against the
+    /// manifest's declared shape.  This is the activation gate: a
+    /// bundle whose model disagrees with its own manifest — or whose
+    /// model fails basic validity (γ must be positive and finite) —
+    /// never reaches a registry.
+    pub fn validate_model(&self) -> Result<SvmModel, FleetError> {
+        let model =
+            SvmModel::from_text(&self.model_text).map_err(|e| FleetError::Model(format!("{e:#}")))?;
+        if model.svs.dim() != self.dim {
+            return Err(FleetError::DimMismatch { manifest: self.dim, model: model.svs.dim() });
+        }
+        if model.svs.len() != self.nsv {
+            return Err(FleetError::Model(format!(
+                "nsv mismatch: manifest declares {}, model has {}",
+                self.nsv,
+                model.svs.len()
+            )));
+        }
+        if !(model.gamma > 0.0 && model.gamma.is_finite()) {
+            return Err(FleetError::Model(format!(
+                "gamma must be positive and finite, got {}",
+                model.gamma
+            )));
+        }
+        Ok(model)
+    }
+
+    /// Write the bundle through the durable layer (atomic replace,
+    /// whole-file checksum footer, `.prev` last-good generation).
+    pub fn save(&self, path: &Path) -> Result<(), FleetError> {
+        durable::write_atomic(path, &self.to_text()).map_err(FleetError::from)
+    }
+
+    /// Read, checksum-verify (whole file, then the model section), and
+    /// shape-validate a bundle from disk.  Goes through
+    /// [`durable::read_artifact_verified`], the `artifact.read`
+    /// fault-injection site.
+    pub fn load(path: &Path) -> Result<Artifact, FleetError> {
+        let payload = durable::read_artifact_verified(path)?;
+        let artifact = Artifact::parse(&payload)?;
+        artifact.validate_model()?;
+        Ok(artifact)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn toy_model() -> SvmModel {
+        let mut m = SvmModel::new(3, 1.5);
+        m.svs.push(&[0.5, -1.0, 2.0], 0.75);
+        m.svs.push(&[1.0, 0.0, -0.5], -0.25);
+        m.bias = 0.125;
+        m.meta = "test".into();
+        m
+    }
+
+    fn toy_artifact() -> Artifact {
+        Artifact::wrap(
+            "champ",
+            3,
+            &toy_model(),
+            Provenance::from_config(&TrainConfig::default()),
+            "lut",
+            "auto",
+        )
+        .unwrap()
+    }
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("mmbsgd_fleet_artifact_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn text_roundtrip_preserves_everything() {
+        let a = toy_artifact();
+        let b = Artifact::parse(&a.to_text()).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(b.name, "champ");
+        assert_eq!(b.version, 3);
+        assert_eq!(b.dim, 3);
+        assert_eq!(b.nsv, 2);
+        assert_eq!(b.provenance.get("budget"), Some("256"));
+        let m = b.validate_model().unwrap();
+        assert_eq!(m.svs.len(), 2);
+        assert_eq!(m.bias, 0.125);
+    }
+
+    #[test]
+    fn disk_roundtrip_and_prev_rotation() {
+        let dir = scratch("roundtrip");
+        let p = dir.join("champ.artifact");
+        let mut a = toy_artifact();
+        a.save(&p).unwrap();
+        let back = Artifact::load(&p).unwrap();
+        assert_eq!(back.version, 3);
+        a.version = 4;
+        a.save(&p).unwrap();
+        assert_eq!(Artifact::load(&p).unwrap().version, 4);
+        let prev = Artifact::load(&durable::prev_path(&p)).unwrap();
+        assert_eq!(prev.version, 3, "last-good generation kept beside the bundle");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn section_checksum_catches_spliced_model_bytes() {
+        let a = toy_artifact();
+        // flip a byte inside the model section only; the manifest (and
+        // therefore any recomputed outer footer) stays "valid"
+        let tampered = a.to_text().replacen("0.75", "0.85", 1);
+        match Artifact::parse(&tampered) {
+            Err(FleetError::SectionChecksum { section, .. }) => assert_eq!(section, "model"),
+            other => panic!("wanted SectionChecksum, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn load_rejects_whole_file_tamper_with_corrupt() {
+        let dir = scratch("tamper");
+        let p = dir.join("champ.artifact");
+        toy_artifact().save(&p).unwrap();
+        let raw = std::fs::read_to_string(&p).unwrap();
+        std::fs::write(&p, raw.replacen("0.75", "0.85", 1)).unwrap();
+        assert!(matches!(Artifact::load(&p), Err(FleetError::Corrupt { .. })));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn validate_model_cross_checks_manifest_shape() {
+        let mut a = toy_artifact();
+        a.dim = 7;
+        assert_eq!(
+            a.validate_model().unwrap_err(),
+            FleetError::DimMismatch { manifest: 7, model: 3 }
+        );
+        let mut a = toy_artifact();
+        a.nsv = 9;
+        assert!(matches!(a.validate_model(), Err(FleetError::Model(_))));
+    }
+
+    #[test]
+    fn parse_rejects_garbage_without_panicking() {
+        for bad_text in [
+            "",
+            "wrong magic\n",
+            "mmbsgd-fleet-artifact v1\n",                           // no manifest body
+            "mmbsgd-fleet-artifact v1\nname a b\nend-manifest\n",   // multi-token name
+            "mmbsgd-fleet-artifact v1\nversion x\nend-manifest\n",  // bad version
+            "mmbsgd-fleet-artifact v1\nbogus 1\nend-manifest\n",    // unknown key
+            "mmbsgd-fleet-artifact v1\nsection model len=nope fnv=0\nend-manifest\n",
+            "mmbsgd-fleet-artifact v1\nsection other len=0 fnv=0\nend-manifest\n",
+            "mmbsgd-fleet-artifact v1\nname a\nend-manifest\n",     // no section
+            "mmbsgd-fleet-artifact v1\nprovenance seed\nend-manifest\n", // pair lacks '='
+        ] {
+            assert!(Artifact::parse(bad_text).is_err(), "accepted {bad_text:?}");
+        }
+        // length mismatch between section line and carried bytes
+        let a = toy_artifact();
+        let text = a.to_text();
+        let truncated = &text[..text.len() - 3];
+        assert!(Artifact::parse(truncated).is_err());
+    }
+
+    #[test]
+    fn wrap_takes_shape_from_the_model() {
+        let a = toy_artifact();
+        assert_eq!(a.dim, 3);
+        assert_eq!(a.nsv, 2);
+        assert!(Artifact::wrap("two words", 1, &toy_model(), Provenance::default(), "lut", "auto")
+            .is_err());
+    }
+}

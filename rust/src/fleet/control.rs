@@ -1,0 +1,313 @@
+//! The control plane: validate, push, activate, roll back — fleet-wide.
+//!
+//! A [`Controller`] is a short-lived client of every replica's
+//! line-protocol port (the `mmbsgd fleet` subcommands construct one
+//! per invocation; a monitoring daemon can hold one long-term for
+//! [`Controller::maybe_auto_rollback`]).  It owns no model state: the
+//! artifact on disk is the source of truth, replicas are the
+//! distribution targets, and the controller just moves verified bytes
+//! and tracks which version each replica has acknowledged.
+//!
+//! Push is two-phase by protocol design: `push-artifact <len>` +
+//! payload *stages* the bundle (full verification, no serving impact),
+//! and a separate `activate <name>@v<N>` swaps it live — so a push
+//! that dies mid-payload (crash, cable pull, or the injected
+//! `fleet.push` fault) leaves every replica serving exactly what it
+//! served before.
+//!
+//! The registry-level auto-rollback hook (PR-4 follow-up) lives here
+//! rather than in the replica: a replica seeing its own accuracy
+//! window degrade can only fix itself, while the controller can
+//! compare the fleet and roll *everyone* back to last-good in one
+//! sweep ([`Controller::maybe_auto_rollback`]).
+
+use crate::error::FleetError;
+use crate::util::fault;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use super::artifact::Artifact;
+
+/// Read poll interval while waiting on a reply.
+const POLL: Duration = Duration::from_millis(50);
+
+/// Outcome of one control operation against one replica.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Outcome {
+    pub endpoint: String,
+    /// The replica's acknowledged version on success.
+    pub result: Result<u64, FleetError>,
+}
+
+/// Fleet-wide control client; see the [module docs](self).
+pub struct Controller {
+    endpoints: Vec<String>,
+    timeout: Duration,
+    /// endpoint → model name → last version that endpoint acknowledged
+    /// (staged-and-activated, or restored by rollback).
+    acked: BTreeMap<String, BTreeMap<String, u64>>,
+}
+
+/// Extract `<version>` from a `... <name>@v<version> ...` reply token.
+fn parse_ack_version(reply: &str) -> Option<u64> {
+    reply
+        .split_ascii_whitespace()
+        .find_map(|tok| tok.split_once("@v").and_then(|(_, v)| v.parse::<u64>().ok()))
+}
+
+/// One reply line with a deadline (the stream has a short read timeout
+/// so the loop can give up at `timeout` without blocking forever).
+fn read_reply(
+    conn: &mut BufReader<TcpStream>,
+    timeout: Duration,
+    endpoint: &str,
+) -> Result<String, FleetError> {
+    let replica = |detail: String| FleetError::Replica { endpoint: endpoint.to_string(), detail };
+    let start = Instant::now();
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        match conn.read_until(b'\n', &mut buf) {
+            Ok(0) => return Err(replica("closed the connection mid-exchange".into())),
+            Ok(_) if buf.last() == Some(&b'\n') => {
+                return String::from_utf8(buf)
+                    .map(|s| s.trim_end().to_string())
+                    .map_err(|_| replica("reply is not UTF-8".into()))
+            }
+            Ok(_) => return Err(replica("reply torn mid-line".into())),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut
+                    || e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                if start.elapsed() >= timeout {
+                    return Err(replica("reply deadline exceeded".into()));
+                }
+            }
+            Err(e) => return Err(replica(e.to_string())),
+        }
+    }
+}
+
+impl Controller {
+    pub fn new(endpoints: Vec<String>, timeout: Duration) -> Controller {
+        Controller { endpoints, timeout, acked: BTreeMap::new() }
+    }
+
+    pub fn endpoints(&self) -> &[String] {
+        &self.endpoints
+    }
+
+    /// The last version `endpoint` acknowledged for `name`.
+    pub fn acked(&self, endpoint: &str, name: &str) -> Option<u64> {
+        self.acked.get(endpoint).and_then(|m| m.get(name).copied())
+    }
+
+    fn connect(&self, endpoint: &str) -> Result<BufReader<TcpStream>, FleetError> {
+        let stream = TcpStream::connect(endpoint).map_err(|e| FleetError::Replica {
+            endpoint: endpoint.to_string(),
+            detail: format!("connect: {e}"),
+        })?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(POLL)).ok();
+        stream.set_write_timeout(Some(self.timeout)).ok();
+        Ok(BufReader::new(stream))
+    }
+
+    /// Send one line, read one reply; `err ...` replies become typed
+    /// [`FleetError::Replica`] errors carrying the replica's reason.
+    fn exchange(
+        &self,
+        conn: &mut BufReader<TcpStream>,
+        endpoint: &str,
+        line: &str,
+    ) -> Result<String, FleetError> {
+        let stream = conn.get_mut();
+        stream
+            .write_all(line.as_bytes())
+            .and_then(|()| stream.write_all(b"\n"))
+            .and_then(|()| stream.flush())
+            .map_err(|e| FleetError::Replica {
+                endpoint: endpoint.to_string(),
+                detail: format!("write: {e}"),
+            })?;
+        let reply = read_reply(conn, self.timeout, endpoint)?;
+        if let Some(reason) = reply.strip_prefix("err ") {
+            return Err(FleetError::Replica {
+                endpoint: endpoint.to_string(),
+                detail: reason.to_string(),
+            });
+        }
+        Ok(reply)
+    }
+
+    /// Push `artifact` to one replica (stage), optionally activating
+    /// it in the same connection.
+    ///
+    /// Injection site [`fault::site::FLEET_PUSH`]: an `io` rule tears
+    /// the push mid-payload — header and roughly half the bytes go
+    /// out, then the connection drops — modeling a controller crash or
+    /// network partition during distribution.  The replica's
+    /// length-delimited reader sees EOF before the payload completes
+    /// and stages nothing.
+    fn push_one(
+        &self,
+        endpoint: &str,
+        artifact: &Artifact,
+        activate: bool,
+    ) -> Result<u64, FleetError> {
+        let mut conn = self.connect(endpoint)?;
+        let payload = artifact.to_text();
+        let header = format!("push-artifact {}\n", payload.len());
+        if let Some(fault::FaultKind::Io) = fault::armed(fault::site::FLEET_PUSH) {
+            let stream = conn.get_mut();
+            let torn = &payload.as_bytes()[..payload.len() / 2];
+            let _ = stream.write_all(header.as_bytes());
+            let _ = stream.write_all(torn);
+            let _ = stream.flush();
+            // dropping `conn` closes the socket mid-payload
+            return Err(FleetError::Replica {
+                endpoint: endpoint.to_string(),
+                detail: "injected push fault: connection torn mid-payload".to_string(),
+            });
+        }
+        {
+            let stream = conn.get_mut();
+            stream
+                .write_all(header.as_bytes())
+                .and_then(|()| stream.write_all(payload.as_bytes()))
+                .and_then(|()| stream.flush())
+                .map_err(|e| FleetError::Replica {
+                    endpoint: endpoint.to_string(),
+                    detail: format!("push write: {e}"),
+                })?;
+        }
+        let reply = read_reply(&mut conn, self.timeout, endpoint)?;
+        if !reply.starts_with("ok staged") {
+            return Err(FleetError::Replica {
+                endpoint: endpoint.to_string(),
+                detail: format!("unexpected push reply: {reply}"),
+            });
+        }
+        if activate {
+            let line = format!("activate {}@v{}", artifact.name, artifact.version);
+            let reply = self.exchange(&mut conn, endpoint, &line)?;
+            if !reply.starts_with("ok active") {
+                return Err(FleetError::Replica {
+                    endpoint: endpoint.to_string(),
+                    detail: format!("unexpected activate reply: {reply}"),
+                });
+            }
+        }
+        Ok(artifact.version)
+    }
+
+    /// Push (and optionally activate) an artifact on every replica.
+    /// Per-replica outcomes — one dead replica does not stop the
+    /// others from converging; re-running the push is idempotent.
+    pub fn push(&mut self, artifact: &Artifact, activate: bool) -> Vec<Outcome> {
+        let endpoints = self.endpoints.clone();
+        endpoints
+            .iter()
+            .map(|ep| {
+                let result = self.push_one(ep, artifact, activate);
+                if let Ok(v) = result {
+                    self.acked
+                        .entry(ep.clone())
+                        .or_default()
+                        .insert(artifact.name.clone(), v);
+                }
+                Outcome { endpoint: ep.clone(), result }
+            })
+            .collect()
+    }
+
+    /// Roll `name` back to its last-good generation on every replica.
+    pub fn rollback(&mut self, name: &str) -> Vec<Outcome> {
+        let endpoints = self.endpoints.clone();
+        endpoints
+            .iter()
+            .map(|ep| {
+                let result = self.connect(ep).and_then(|mut conn| {
+                    let reply = self.exchange(&mut conn, ep, &format!("rollback {name}"))?;
+                    parse_ack_version(&reply).ok_or_else(|| FleetError::Replica {
+                        endpoint: ep.clone(),
+                        detail: format!("unexpected rollback reply: {reply}"),
+                    })
+                });
+                if let Ok(v) = result {
+                    self.acked.entry(ep.clone()).or_default().insert(name.to_string(), v);
+                }
+                Outcome { endpoint: ep.clone(), result }
+            })
+            .collect()
+    }
+
+    /// `fleet-status` from every replica (raw status lines).
+    pub fn status(&self) -> Vec<(String, Result<String, FleetError>)> {
+        self.endpoints
+            .iter()
+            .map(|ep| {
+                let r = self
+                    .connect(ep)
+                    .and_then(|mut conn| self.exchange(&mut conn, ep, "fleet-status"));
+                (ep.clone(), r)
+            })
+            .collect()
+    }
+
+    /// The registry-level auto-rollback hook: poll every replica's
+    /// accuracy window (`acc=` in `fleet-status`); if any replica has
+    /// degraded below `min_accuracy`, issue a fleet-wide rollback of
+    /// `name` to last-good.  Returns the rollback outcomes when it
+    /// fired, `None` when the fleet is healthy (or no replica reports
+    /// a window yet).
+    pub fn maybe_auto_rollback(
+        &mut self,
+        name: &str,
+        min_accuracy: f64,
+    ) -> Option<Vec<Outcome>> {
+        let mut degraded = false;
+        for (_ep, status) in self.status() {
+            let Ok(line) = status else { continue };
+            let acc = line
+                .split_ascii_whitespace()
+                .find_map(|tok| tok.strip_prefix("acc="))
+                .and_then(|v| v.parse::<f64>().ok());
+            if let Some(a) = acc {
+                if a < min_accuracy {
+                    degraded = true;
+                }
+            }
+        }
+        if degraded {
+            Some(self.rollback(name))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ack_version_parses_fleet_replies() {
+        assert_eq!(parse_ack_version("ok staged champ@v3 dim=4 nsv=20"), Some(3));
+        assert_eq!(parse_ack_version("ok rollback champ@v1 registry=v5"), Some(1));
+        assert_eq!(parse_ack_version("ok bye"), None);
+        assert_eq!(parse_ack_version("ok staged champ@vX"), None);
+    }
+
+    #[test]
+    fn unreachable_replica_is_a_typed_outcome() {
+        // a port nothing listens on: connect fails fast
+        let mut c = Controller::new(vec!["127.0.0.1:1".to_string()], Duration::from_millis(200));
+        let out = c.rollback("champ");
+        assert_eq!(out.len(), 1);
+        assert!(matches!(&out[0].result, Err(FleetError::Replica { .. })), "{out:?}");
+        assert_eq!(c.acked("127.0.0.1:1", "champ"), None);
+    }
+}

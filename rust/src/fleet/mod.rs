@@ -1,0 +1,46 @@
+//! Fleet subsystem: versioned model artifacts, a control-plane
+//! packager/pusher, and a replicated data plane behind consistent-hash
+//! routing.
+//!
+//! The pieces, bottom-up:
+//!
+//! * [`artifact`] — a self-verifying on-disk bundle: std-only text
+//!   manifest (name, version, trained-config provenance, per-section
+//!   FNV-1a checksums) wrapping the existing model text format, all
+//!   protected by the durable footer from [`crate::util::durable`].
+//!   `mmbsgd package` builds one, `mmbsgd verify` re-checks it, and
+//!   loads refuse mismatched checksums or dimensions with typed
+//!   [`crate::error::FleetError`] variants.
+//! * [`control`] — the fleet controller: pushes artifacts to replica
+//!   endpoints over the line protocol (`push-artifact <len>` +
+//!   payload, `activate <name>@v<N>`, `rollback <name>`), tracks
+//!   per-replica acknowledged versions, and hosts the auto-rollback
+//!   hook (accuracy window degrades past threshold → fleet-wide
+//!   rollback to last-good).
+//! * [`replica`] — server-side state: staged artifacts are verified
+//!   on receipt, activation hot-swaps the model atomically into the
+//!   [`crate::serve::ModelRegistry`] while keeping the previous
+//!   generation on disk (`.prev`-style) for rollback, and `recover`
+//!   rebuilds everything from the artifact directory at startup.
+//! * [`router`] — the data-plane front door: consistent-hashes
+//!   request keys across replica endpoints (generalizing the seeded
+//!   [`crate::serve::route_hash`]), retries one alternate replica on
+//!   connection failure, and marks dead replicas out with periodic
+//!   re-probe.
+//!
+//! Consistency model: an artifact is immutable once packaged (any
+//! byte flip is caught by the section checksums), replicas only serve
+//! versions they fully verified, and activation/rollback are atomic
+//! per replica.  The fleet converges because every operation is
+//! idempotent — re-pushing a staged version or re-activating the
+//! active one is a no-op with the same reply.
+
+pub mod artifact;
+pub mod control;
+pub mod replica;
+pub mod router;
+
+pub use artifact::{Artifact, Provenance, ARTIFACT_MAGIC};
+pub use control::{Controller, Outcome};
+pub use replica::{ActiveInfo, ReplicaState};
+pub use router::{run_router, Ring, Router, RouterOptions, RouterReport, DEFAULT_VNODES};

@@ -1,0 +1,384 @@
+//! The data-plane replica: receives artifacts, verifies, hot-swaps.
+//!
+//! A [`ReplicaState`] is the fleet-side state of one serve process: a
+//! staging area for pushed-but-not-yet-activated bundles, the set of
+//! activated names with their last-good versions, and the on-disk
+//! artifact directory.  It plugs into the line-protocol server as the
+//! [`FleetHandler`](crate::serve::proto::FleetHandler) behind the
+//! `push-artifact` / `activate` / `rollback` / `fleet-status` verbs,
+//! so the ordering guarantees of the engine loop (drain before any
+//! control verb) apply to fleet operations exactly as they do to
+//! `swap-model`.
+//!
+//! Activation is the only path that touches the registry or the disk,
+//! and it is atomic at both layers: the registry swap either installs
+//! the fully-validated model or (e.g. on a dimension change) leaves
+//! the serving entry untouched, and the durable write either lands the
+//! new bundle with the previous generation rotated to `.prev` — the
+//! fleet's last-good — or leaves the old file in place.  A torn push
+//! stages nothing; a tampered bundle is refused at parse/validate with
+//! a typed [`FleetError`]; in every failure case the replica keeps
+//! serving exactly what it served before.
+
+use crate::error::FleetError;
+use crate::serve::proto::FleetHandler;
+use crate::serve::ModelRegistry;
+use crate::util::durable;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use super::artifact::Artifact;
+
+/// Activation bookkeeping for one model name.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ActiveInfo {
+    /// The artifact version currently activated.
+    pub version: u64,
+    /// The version recoverable from the `.prev` generation, when one
+    /// exists.
+    pub last_good: Option<u64>,
+}
+
+/// Fleet state of one replica process.
+pub struct ReplicaState {
+    dir: PathBuf,
+    staged: BTreeMap<(String, u64), Artifact>,
+    active: BTreeMap<String, ActiveInfo>,
+}
+
+impl ReplicaState {
+    /// A replica over `dir` (created if absent) — the durable home of
+    /// activated bundles and their `.prev` last-good generations.
+    pub fn new(dir: &Path) -> Result<ReplicaState, FleetError> {
+        std::fs::create_dir_all(dir).map_err(|e| FleetError::Io {
+            path: dir.display().to_string(),
+            detail: e.to_string(),
+        })?;
+        Ok(ReplicaState {
+            dir: dir.to_path_buf(),
+            staged: BTreeMap::new(),
+            active: BTreeMap::new(),
+        })
+    }
+
+    /// On-disk path of a name's activated bundle.
+    pub fn artifact_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.artifact"))
+    }
+
+    /// Activation info for a name.
+    pub fn active(&self, name: &str) -> Option<&ActiveInfo> {
+        self.active.get(name)
+    }
+
+    /// Number of staged (pushed, not yet activated) bundles.
+    pub fn staged_count(&self) -> usize {
+        self.staged.len()
+    }
+
+    /// Pull semantics at startup: scan the artifact directory and
+    /// re-activate every bundle found, falling back to the `.prev`
+    /// last-good generation when a primary is corrupt (the durable
+    /// layer's whole point).  Returns `(name, version)` per recovered
+    /// model; bundles with no usable generation are skipped with their
+    /// error.
+    pub fn recover(
+        &mut self,
+        registry: &mut ModelRegistry,
+    ) -> (Vec<(String, u64)>, Vec<(PathBuf, FleetError)>) {
+        let mut recovered = Vec::new();
+        let mut failed = Vec::new();
+        let mut paths: Vec<PathBuf> = match std::fs::read_dir(&self.dir) {
+            Ok(rd) => rd
+                .filter_map(|e| e.ok())
+                .map(|e| e.path())
+                .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("artifact"))
+                .collect(),
+            Err(_) => Vec::new(),
+        };
+        paths.sort();
+        for path in paths {
+            let (artifact, from_prev) = match Artifact::load(&path) {
+                Ok(a) => (a, false),
+                Err(primary_err) => match Artifact::load(&durable::prev_path(&path)) {
+                    Ok(a) => (a, true),
+                    Err(_) => {
+                        failed.push((path, primary_err));
+                        continue;
+                    }
+                },
+            };
+            let model = match artifact.validate_model() {
+                Ok(m) => m,
+                Err(e) => {
+                    failed.push((path, e));
+                    continue;
+                }
+            };
+            if registry.insert(&artifact.name, model).is_err() {
+                failed.push((path, FleetError::Model("registry refused the model".into())));
+                continue;
+            }
+            let last_good = if from_prev {
+                None // we *are* serving the last-good generation
+            } else {
+                Artifact::load(&durable::prev_path(&path)).ok().map(|a| a.version)
+            };
+            self.active
+                .insert(artifact.name.clone(), ActiveInfo { version: artifact.version, last_good });
+            recovered.push((artifact.name.clone(), artifact.version));
+        }
+        (recovered, failed)
+    }
+}
+
+impl FleetHandler for ReplicaState {
+    /// Stage a pushed bundle after full verification (manifest parse,
+    /// section checksum, model parse, shape cross-check).  Staging
+    /// touches neither the registry nor the disk — a bad push costs
+    /// nothing.
+    fn push_artifact(&mut self, _registry: &mut ModelRegistry, payload: &str) -> String {
+        let artifact = match Artifact::parse(payload) {
+            Ok(a) => a,
+            Err(e) => return format!("err push-artifact: {e}"),
+        };
+        if let Err(e) = artifact.validate_model() {
+            return format!("err push-artifact: {e}");
+        }
+        let line = format!(
+            "ok staged {}@v{} dim={} nsv={}",
+            artifact.name, artifact.version, artifact.dim, artifact.nsv
+        );
+        self.staged.insert((artifact.name.clone(), artifact.version), artifact);
+        line
+    }
+
+    /// Activate a staged bundle: swap into the registry (dimension
+    /// gate included — see [`ModelRegistry::swap`]), then persist the
+    /// bundle durably, rotating the previous generation to `.prev` as
+    /// the new last-good.
+    fn activate(&mut self, registry: &mut ModelRegistry, name: &str, version: u64) -> String {
+        let Some(artifact) = self.staged.get(&(name.to_string(), version)) else {
+            return format!(
+                "err {}",
+                FleetError::Version { detail: format!("no staged artifact {name}@v{version}") }
+            );
+        };
+        let model = match artifact.validate_model() {
+            Ok(m) => m,
+            Err(e) => return format!("err activate: {e}"),
+        };
+        let registry_version = if registry.version_of(name).is_ok() {
+            match registry.swap(name, model) {
+                Ok(v) => v,
+                Err(e) => return format!("err activate: {e}"),
+            }
+        } else {
+            match registry.insert(name, model) {
+                Ok(v) => v,
+                Err(e) => return format!("err activate: {e}"),
+            }
+        };
+        let artifact = self.staged.remove(&(name.to_string(), version)).expect("checked above");
+        if let Err(e) = artifact.save(&self.artifact_path(name)) {
+            // the registry already serves the new model; say so rather
+            // than pretending the activation failed outright
+            return format!("err activate: serving v{version} but persist failed: {e}");
+        }
+        let last_good = self.active.get(name).map(|a| a.version);
+        self.active.insert(name.to_string(), ActiveInfo { version, last_good });
+        format!("ok active {name}@v{version} registry=v{registry_version}")
+    }
+
+    /// Fleet-wide last-good restore: load the `.prev` generation,
+    /// swap it in, and write it back as the primary (which rotates the
+    /// rolled-back-from version to `.prev`, so a rollback can itself
+    /// be rolled back).
+    fn rollback(&mut self, registry: &mut ModelRegistry, name: &str) -> String {
+        let prev = durable::prev_path(&self.artifact_path(name));
+        let artifact = match Artifact::load(&prev) {
+            Ok(a) => a,
+            Err(FleetError::Io { .. }) => {
+                return format!(
+                    "err {}",
+                    FleetError::Version {
+                        detail: format!("no last-good generation for {name}")
+                    }
+                )
+            }
+            Err(e) => return format!("err rollback: {e}"),
+        };
+        let model = match artifact.validate_model() {
+            Ok(m) => m,
+            Err(e) => return format!("err rollback: {e}"),
+        };
+        let registry_version = if registry.version_of(name).is_ok() {
+            match registry.swap(name, model) {
+                Ok(v) => v,
+                Err(e) => return format!("err rollback: {e}"),
+            }
+        } else {
+            match registry.insert(name, model) {
+                Ok(v) => v,
+                Err(e) => return format!("err rollback: {e}"),
+            }
+        };
+        let version = artifact.version;
+        let rolled_from = self.active.get(name).map(|a| a.version);
+        if let Err(e) = artifact.save(&self.artifact_path(name)) {
+            return format!("err rollback: serving v{version} but persist failed: {e}");
+        }
+        self.active.insert(name.to_string(), ActiveInfo { version, last_good: rolled_from });
+        format!("ok rollback {name}@v{version} registry=v{registry_version}")
+    }
+
+    /// One-line replica status: activated versions with their
+    /// last-good, staged count, and the monitor's feedback-accuracy
+    /// window (the auto-rollback signal).
+    fn fleet_status(&self, registry: &ModelRegistry, window_accuracy: Option<f64>) -> String {
+        let models: Vec<String> = self
+            .active
+            .iter()
+            .map(|(name, info)| {
+                let lg = match info.last_good {
+                    Some(v) => format!("{v}"),
+                    None => "na".into(),
+                };
+                let rv = match registry.version_of(name) {
+                    Ok(v) => format!("{v}"),
+                    Err(_) => "na".into(),
+                };
+                format!("{name}@v{}:lg={lg}:rv={rv}", info.version)
+            })
+            .collect();
+        let models = if models.is_empty() { "-".to_string() } else { models.join(",") };
+        let acc = match window_accuracy {
+            Some(a) => format!("{a:.4}"),
+            None => "na".into(),
+        };
+        format!("ok fleet models={models} staged={} acc={acc}", self.staged.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::artifact::Provenance;
+    use crate::model::SvmModel;
+    use crate::runtime::NativeBackend;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("mmbsgd_replica_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn model(bias: f64) -> SvmModel {
+        let mut m = SvmModel::new(2, 1.0);
+        m.svs.push(&[1.0, 0.0], 0.5);
+        m.bias = bias;
+        m
+    }
+
+    fn artifact(version: u64, bias: f64) -> Artifact {
+        Artifact::wrap("champ", version, &model(bias), Provenance::default(), "lut", "auto")
+            .unwrap()
+    }
+
+    fn registry() -> ModelRegistry {
+        ModelRegistry::new(Box::new(NativeBackend::new()), 7)
+    }
+
+    #[test]
+    fn push_activate_rollback_lifecycle() {
+        let dir = scratch("lifecycle");
+        let mut rep = ReplicaState::new(&dir).unwrap();
+        let mut reg = registry();
+        // push + activate v1
+        let r = rep.push_artifact(&mut reg, &artifact(1, 0.1).to_text());
+        assert!(r.starts_with("ok staged champ@v1"), "{r}");
+        let r = rep.activate(&mut reg, "champ", 1);
+        assert!(r.starts_with("ok active champ@v1"), "{r}");
+        assert_eq!(reg.version_of("champ").unwrap(), 1);
+        assert_eq!(rep.active("champ").unwrap().version, 1);
+        assert_eq!(rep.active("champ").unwrap().last_good, None);
+        // push + activate v2: v1 rotates to .prev
+        rep.push_artifact(&mut reg, &artifact(2, 0.2).to_text());
+        let r = rep.activate(&mut reg, "champ", 2);
+        assert!(r.starts_with("ok active champ@v2"), "{r}");
+        assert_eq!(rep.active("champ").unwrap().last_good, Some(1));
+        assert_eq!(reg.version_of("champ").unwrap(), 2);
+        // rollback restores v1 and keeps v2 as the new .prev
+        let r = rep.rollback(&mut reg, "champ");
+        assert!(r.starts_with("ok rollback champ@v1"), "{r}");
+        assert_eq!(rep.active("champ").unwrap().version, 1);
+        assert_eq!(rep.active("champ").unwrap().last_good, Some(2));
+        let s = rep.fleet_status(&reg, None);
+        assert!(s.contains("champ@v1"), "{s}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tampered_push_refused_and_state_untouched() {
+        let dir = scratch("tamper");
+        let mut rep = ReplicaState::new(&dir).unwrap();
+        let mut reg = registry();
+        rep.push_artifact(&mut reg, &artifact(1, 0.1).to_text());
+        assert!(rep.activate(&mut reg, "champ", 1).starts_with("ok"));
+        let tampered = artifact(2, 0.2).to_text().replacen("0.5", "0.9", 1);
+        let r = rep.push_artifact(&mut reg, &tampered);
+        assert!(r.starts_with("err push-artifact:") && r.contains("checksum"), "{r}");
+        assert_eq!(rep.staged_count(), 0);
+        assert_eq!(reg.version_of("champ").unwrap(), 1, "replica stays on last-good");
+        // activate of a never-staged version is a typed refusal too
+        let r = rep.activate(&mut reg, "champ", 9);
+        assert!(r.starts_with("err") && r.contains("no staged artifact"), "{r}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rollback_without_prev_is_refused() {
+        let dir = scratch("noprev");
+        let mut rep = ReplicaState::new(&dir).unwrap();
+        let mut reg = registry();
+        rep.push_artifact(&mut reg, &artifact(1, 0.1).to_text());
+        rep.activate(&mut reg, "champ", 1);
+        let r = rep.rollback(&mut reg, "champ");
+        assert!(r.starts_with("err") && r.contains("no last-good"), "{r}");
+        assert_eq!(reg.version_of("champ").unwrap(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recover_reloads_disk_state_and_falls_back_to_prev() {
+        let dir = scratch("recover");
+        {
+            let mut rep = ReplicaState::new(&dir).unwrap();
+            let mut reg = registry();
+            rep.push_artifact(&mut reg, &artifact(1, 0.1).to_text());
+            rep.activate(&mut reg, "champ", 1);
+            rep.push_artifact(&mut reg, &artifact(2, 0.2).to_text());
+            rep.activate(&mut reg, "champ", 2);
+        }
+        // fresh process: recover re-activates v2 and sees v1 last-good
+        let mut rep = ReplicaState::new(&dir).unwrap();
+        let mut reg = registry();
+        let (recovered, failed) = rep.recover(&mut reg);
+        assert_eq!(recovered, vec![("champ".to_string(), 2)]);
+        assert!(failed.is_empty(), "{failed:?}");
+        assert_eq!(rep.active("champ").unwrap().last_good, Some(1));
+        assert_eq!(reg.version_of("champ").unwrap(), 1); // fresh registry numbering
+        // corrupt the primary: recovery serves the .prev last-good
+        let p = rep.artifact_path("champ");
+        let raw = std::fs::read_to_string(&p).unwrap();
+        std::fs::write(&p, raw.replacen("0.5", "0.9", 1)).unwrap();
+        let mut rep2 = ReplicaState::new(&dir).unwrap();
+        let mut reg2 = registry();
+        let (recovered, failed) = rep2.recover(&mut reg2);
+        assert_eq!(recovered, vec![("champ".to_string(), 1)]);
+        assert!(failed.is_empty(), "{failed:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -50,6 +50,15 @@
 //! requests into tiled margins passes with explicit load shedding, and
 //! `mmbsgd serve` speaks a newline-delimited TCP protocol over both
 //! (every request-path failure is a typed [`error::ServeError`]).
+//!
+//! Beyond one process, the [`fleet`] subsystem replicates serving:
+//! `mmbsgd package` wraps a trained model into a self-verifying
+//! versioned artifact ([`fleet::Artifact`]), `mmbsgd fleet push`
+//! distributes and activates it across replica servers (each keeping
+//! its previous generation as an on-disk last-good for `rollback`),
+//! and `mmbsgd fleet route` fronts the replicas with a
+//! consistent-hash router ([`fleet::Ring`]) that reroutes around dead
+//! replicas without disturbing the surviving key assignments.
 
 pub mod budget;
 pub mod config;
@@ -57,6 +66,7 @@ pub mod coordinator;
 pub mod data;
 pub mod error;
 pub mod exp;
+pub mod fleet;
 pub mod kernel;
 pub mod linalg;
 pub mod model;

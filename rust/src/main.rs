@@ -7,18 +7,22 @@
 //!   experiment  regenerate a paper table/figure (table1, table2,
 //!               fig1, fig2, fig3, fig4, fig5, all)
 //!   artifacts   list the AOT artifact registry
+//!   package     wrap a trained model into a versioned fleet artifact
+//!   verify      re-check a fleet artifact's checksums and shape
+//!   fleet       push | rollback | status | route across replicas
 //!
 //! The argument parser is first-party (offline image: no clap); flags
 //! are `--key value` or `--flag`.
 
 use anyhow::{anyhow, bail, Context, Result};
 use mmbsgd::budget::{MaintenanceKind, MergeScoreMode};
-use mmbsgd::config::{BackendChoice, ServeConfig, TomlDoc, TrainConfig};
+use mmbsgd::config::{BackendChoice, FleetConfig, ServeConfig, TomlDoc, TrainConfig};
 use mmbsgd::kernel::{simd, SimdMode};
 use mmbsgd::coordinator::{build_backend, ProgressObserver};
 use mmbsgd::data::synth::SynthSpec;
 use mmbsgd::data::{libsvm, split, Split};
 use mmbsgd::exp::{self, ExpOptions};
+use mmbsgd::fleet::{run_router, Artifact, Controller, Provenance, ReplicaState, RouterOptions};
 use mmbsgd::model::SvmModel;
 use mmbsgd::runtime::Backend;
 use mmbsgd::serve::{self, ModelRegistry, Predictor, RouteSpec, ServeOptions, ShedPolicy};
@@ -480,9 +484,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     scfg.validate()?;
     simd::set_mode(scfg.simd_mode);
 
+    let fleet_dir = args.get("fleet-dir").map(PathBuf::from);
     let specs = args.get_all("model");
-    if specs.is_empty() {
-        bail!("serve needs at least one --model name=path[:weight]");
+    if specs.is_empty() && fleet_dir.is_none() {
+        bail!("serve needs at least one --model name=path[:weight] (or --fleet-dir DIR)");
     }
     let choice = match args.get("backend") {
         Some(b) => BackendChoice::parse(b).with_context(|| format!("bad --backend {b:?}"))?,
@@ -507,7 +512,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
         arms.push((name, weight));
     }
-    registry.set_route(RouteSpec::new(arms)?)?;
+    // A fleet replica may boot with no --model at all (artifacts arrive
+    // over push-artifact); with no explicit route the registry routes
+    // uniformly over whatever is loaded.
+    if !arms.is_empty() {
+        registry.set_route(RouteSpec::new(arms)?)?;
+    }
+    let mut replica = match &fleet_dir {
+        Some(dir) => {
+            let mut rep = ReplicaState::new(dir)?;
+            let (recovered, failed) = rep.recover(&mut registry);
+            for (name, version) in &recovered {
+                println!("[fleet] recovered {name}@v{version} from {}", dir.display());
+            }
+            for (path, e) in &failed {
+                eprintln!("[warn ] {}: unusable artifact skipped: {e}", path.display());
+            }
+            Some(rep)
+        }
+        None => None,
+    };
     let effective = registry.set_threads(scfg.threads);
     report_threads(scfg.threads, effective);
 
@@ -532,8 +556,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_line_bytes: scfg.max_line_bytes,
         max_conns: scfg.max_conns,
         deadline: Duration::from_millis(scfg.deadline_ms),
+        max_artifact_bytes: args
+            .get_parse("max-artifact-bytes", ServeOptions::default().max_artifact_bytes)?,
     };
-    let report = serve::serve(listener, registry, &opts)?;
+    let report = match replica.as_mut() {
+        Some(rep) => serve::serve_fleet(listener, registry, &opts, rep)?,
+        None => serve::serve(listener, registry, &opts)?,
+    };
     let mean_batch = if report.engine.batches > 0 {
         report.engine.rows as f64 / report.engine.batches as f64
     } else {
@@ -654,6 +683,216 @@ fn cmd_artifacts(_args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_package(args: &Args) -> Result<()> {
+    let model_path = args.get("model").context("--model required")?;
+    let out = args.get("out").context("--out required")?;
+    let name = args.get("name").unwrap_or("champ");
+    let version: u64 = args.get_parse("artifact-version", 1u64)?;
+    let model = SvmModel::load(Path::new(model_path))?;
+    // Provenance records the trained config; --config points at the
+    // TOML the model was trained with (defaults otherwise).
+    let mut cfg = TrainConfig::default();
+    if let Some(path) = args.get("config") {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let doc = TomlDoc::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        cfg.apply_toml(&doc)?;
+    }
+    let provenance = Provenance::from_config(&cfg);
+    let artifact = Artifact::wrap(
+        name,
+        version,
+        &model,
+        provenance,
+        cfg.merge_score_mode.describe(),
+        cfg.simd_mode.describe(),
+    )?;
+    artifact.save(Path::new(out))?;
+    println!(
+        "[package] {name}@v{version} -> {out} (dim={} nsv={} {} bytes)",
+        artifact.dim,
+        artifact.nsv,
+        artifact.to_text().len()
+    );
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let path = args.get("artifact").context("--artifact required")?;
+    let artifact = Artifact::load(Path::new(path))?;
+    // full re-verification: durable footer and section checksums were
+    // checked by load; cross-check the model against the manifest too
+    let _model = artifact.validate_model()?;
+    println!(
+        "[verify] ok {}@v{} dim={} nsv={} scorer={} simd={}",
+        artifact.name, artifact.version, artifact.dim, artifact.nsv, artifact.scorer, artifact.simd
+    );
+    for (k, v) in &artifact.provenance.pairs {
+        println!("[verify]   provenance {k}={v}");
+    }
+    Ok(())
+}
+
+/// The `[fleet]` config: TOML `--config` file first, CLI flags on top.
+fn fleet_config(args: &Args) -> Result<FleetConfig> {
+    let mut fcfg = FleetConfig::default();
+    if let Some(path) = args.get("config") {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let doc = TomlDoc::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        fcfg.apply_toml(&doc)?;
+        install_fault_plan(&doc)?;
+    }
+    if let Some(r) = args.get("replicas") {
+        fcfg.replicas = r.to_string();
+    }
+    if let Some(a) = args.get("addr") {
+        fcfg.addr = a.to_string();
+    }
+    fcfg.seed = args.get_parse("seed", fcfg.seed)?;
+    fcfg.vnodes = args.get_parse("vnodes", fcfg.vnodes)?;
+    fcfg.probe_secs = args.get_parse("probe-secs", fcfg.probe_secs)?;
+    fcfg.push_timeout_ms = args.get_parse("push-timeout-ms", fcfg.push_timeout_ms)?;
+    fcfg.min_window_acc = args.get_parse("min-window-acc", fcfg.min_window_acc)?;
+    if let Some(d) = args.get("dir") {
+        fcfg.dir = d.to_string();
+    }
+    fcfg.validate()?;
+    Ok(fcfg)
+}
+
+/// `mmbsgd fleet <op> [--flags]` — the op is the one bare positional
+/// token the CLI accepts, so `fleet` re-parses its own argv.
+fn cmd_fleet(argv: &[String]) -> Result<()> {
+    let op = argv
+        .get(1)
+        .map(String::as_str)
+        .context("fleet needs an operation: push | rollback | status | route")?;
+    let args = Args::parse(&argv[1..])?;
+    let fcfg = fleet_config(&args)?;
+    let replicas = fcfg.replica_list();
+    let timeout = Duration::from_millis(fcfg.push_timeout_ms);
+    let need_replicas = || -> Result<()> {
+        if replicas.is_empty() {
+            bail!("no replicas: set --replicas host:port,host:port (or [fleet] replicas)");
+        }
+        Ok(())
+    };
+    // Per-replica outcomes print one line each; any failure exits 1
+    // after the whole fleet has been attempted (partial convergence is
+    // visible, not hidden behind the first error).
+    let mut failures = 0usize;
+    match op {
+        "push" => {
+            need_replicas()?;
+            let path = args.get("artifact").context("--artifact required")?;
+            let artifact = Artifact::load(Path::new(path))?;
+            artifact.validate_model()?;
+            let mut ctl = Controller::new(replicas, timeout);
+            let activate = args.has("activate");
+            for out in ctl.push(&artifact, activate) {
+                match out.result {
+                    Ok(v) => println!(
+                        "[fleet] {}: {} {}@v{v}",
+                        out.endpoint,
+                        if activate { "active" } else { "staged" },
+                        artifact.name
+                    ),
+                    Err(e) => {
+                        failures += 1;
+                        eprintln!("[fleet] {}: FAILED: {e}", out.endpoint);
+                    }
+                }
+            }
+        }
+        "rollback" => {
+            need_replicas()?;
+            let name = args.get("name").context("--name required")?;
+            let mut ctl = Controller::new(replicas, timeout);
+            for out in ctl.rollback(name) {
+                match out.result {
+                    Ok(v) => println!("[fleet] {}: rolled back {name} to v{v}", out.endpoint),
+                    Err(e) => {
+                        failures += 1;
+                        eprintln!("[fleet] {}: FAILED: {e}", out.endpoint);
+                    }
+                }
+            }
+        }
+        "status" => {
+            need_replicas()?;
+            let mut ctl = Controller::new(replicas, timeout);
+            for (ep, r) in ctl.status() {
+                match r {
+                    Ok(line) => println!("[fleet] {ep}: {line}"),
+                    Err(e) => {
+                        failures += 1;
+                        eprintln!("[fleet] {ep}: FAILED: {e}");
+                    }
+                }
+            }
+            // the auto-rollback hook: --name + min_window_acc > 0
+            if fcfg.min_window_acc > 0.0 {
+                if let Some(name) = args.get("name") {
+                    match ctl.maybe_auto_rollback(name, fcfg.min_window_acc) {
+                        Some(outs) => {
+                            eprintln!(
+                                "[fleet] accuracy window below {}: auto-rollback of {name}",
+                                fcfg.min_window_acc
+                            );
+                            for out in outs {
+                                match out.result {
+                                    Ok(v) => println!(
+                                        "[fleet] {}: rolled back {name} to v{v}",
+                                        out.endpoint
+                                    ),
+                                    Err(e) => {
+                                        failures += 1;
+                                        eprintln!("[fleet] {}: FAILED: {e}", out.endpoint);
+                                    }
+                                }
+                            }
+                        }
+                        None => println!(
+                            "[fleet] fleet healthy (window accuracy >= {})",
+                            fcfg.min_window_acc
+                        ),
+                    }
+                }
+            }
+        }
+        "route" => {
+            need_replicas()?;
+            let listener = std::net::TcpListener::bind(&fcfg.addr)
+                .with_context(|| format!("binding {}", fcfg.addr))?;
+            println!(
+                "[fleet] router on {} -> {} replicas (seed={} vnodes={}; \
+                 send 'shutdown' to stop the router)",
+                listener.local_addr()?,
+                replicas.len(),
+                fcfg.seed,
+                fcfg.vnodes,
+            );
+            let opts = RouterOptions {
+                seed: fcfg.seed,
+                vnodes: fcfg.vnodes,
+                timeout,
+                probe_every: Duration::from_secs(fcfg.probe_secs),
+            };
+            let report = run_router(listener, replicas, &opts)?;
+            println!(
+                "[fleet] router done: {} connections | forwarded {} | retried {} | rejected {}",
+                report.connections, report.forwarded, report.retried, report.rejected
+            );
+        }
+        other => bail!("unknown fleet operation {other:?} (push | rollback | status | route)"),
+    }
+    if failures > 0 {
+        bail!("{failures} replica operation(s) failed");
+    }
+    Ok(())
+}
+
 const HELP: &str = "\
 mmbsgd — multi-merge budgeted SGD SVM training (Qaadan & Glasmachers 2018)
 
@@ -691,7 +930,8 @@ COMMANDS
                [--idle-timeout-secs N] [--max-line-bytes N]
                [--max-conns N] [--deadline-ms N]
                [--simd-mode auto|scalar] [--seed N] [--backend B]
-               [--config file.toml]
+               [--config file.toml] [--fleet-dir DIR]
+               [--max-artifact-bytes N]
                long-lived TCP line-protocol server: micro-batched
                predict/decision, weighted deterministic A/B routing
                across the named models (same key => same model),
@@ -712,6 +952,31 @@ COMMANDS
   tune         --dataset <...> [--c-grid 1,4,16] [--gamma-grid 0.1,1,10]
                [--folds N] [--budget N] [--mergees M] [--exact]
   artifacts    (list the AOT artifact registry)
+  package      --model model.txt --out champ.artifact [--name NAME]
+               [--artifact-version N] [--config file.toml]
+               wrap a trained model into a versioned fleet artifact: a
+               self-verifying bundle (manifest + per-section checksums
+               + durable footer) carrying trained-config provenance.
+  verify       --artifact champ.artifact
+               re-check an artifact's checksums and manifest-vs-model
+               shape; tampered or truncated bundles exit 1 with a typed
+               error naming the failing section.
+  fleet        push     --artifact A [--activate]
+               rollback --name NAME
+               status   [--name NAME]  (with min-window-acc > 0: the
+                        auto-rollback hook — a replica whose feedback
+                        accuracy window degrades below the threshold
+                        triggers a fleet-wide rollback to last-good)
+               route    (consistent-hash router in front of the fleet)
+               shared flags: --replicas host:port,host:port --seed N
+               --vnodes N --probe-secs N --push-timeout-ms N
+               --min-window-acc F --addr host:port --config file.toml
+               ([fleet] TOML section; flags override the file).
+               Replica side: mmbsgd serve --fleet-dir DIR enables the
+               push-artifact/activate/rollback/fleet-status verbs and
+               recovers activated artifacts from DIR at startup
+               (falling back to the .prev last-good generation when a
+               primary is corrupt).
 
 Synth dataset names: phishing, web, adult, ijcnn, skin (statistical twins
 of the paper's LIBSVM datasets; see DESIGN.md §3).
@@ -719,6 +984,15 @@ of the paper's LIBSVM datasets; see DESIGN.md §3).
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
+    // `fleet <op>` takes one bare positional the strict --flag parser
+    // would reject; dispatch it before the general parse.
+    if argv.first().map(String::as_str) == Some("fleet") {
+        if let Err(e) = cmd_fleet(&argv) {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+        return;
+    }
     let args = match Args::parse(&argv) {
         Ok(a) => a,
         Err(e) => {
@@ -734,6 +1008,8 @@ fn main() {
         "experiment" => cmd_experiment(&args),
         "tune" => cmd_tune(&args),
         "artifacts" => cmd_artifacts(&args),
+        "package" => cmd_package(&args),
+        "verify" => cmd_verify(&args),
         "help" | "--help" | "-h" => {
             println!("{HELP}");
             Ok(())

@@ -27,13 +27,14 @@ impl ArtifactRegistry {
     /// Read and index the manifest.  Files written by [`Self::save`]
     /// carry a durable checksum footer which is verified here;
     /// tool-written manifests without one load unchecked (the JSON
-    /// parse is the structural backstop).
+    /// parse is the structural backstop).  The read goes through
+    /// [`crate::util::durable::read_artifact_verified`], sharing the
+    /// `artifact.read` fault-injection site with fleet bundle loads.
     pub fn load(dir: &Path) -> Result<Self> {
         let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path)
+        let payload = crate::util::durable::read_artifact_verified(&manifest_path)
             .with_context(|| format!("reading {}", manifest_path.display()))?;
-        let verified = crate::util::durable::verify(&text, &manifest_path)?;
-        let json = crate::util::json::Json::parse(verified.payload)
+        let json = crate::util::json::Json::parse(&payload)
             .map_err(|e| anyhow!("parsing manifest: {e}"))?;
         let arr = json
             .get("artifacts")

@@ -421,10 +421,22 @@ mod tests {
         let mut reg = registry(&["solo"]);
         let mut eng = BatchEngine::new(8, 8, ShedPolicy::Reject);
         eng.submit(&reg, None, q(1.0)).unwrap(); // validated against dim 3
-        // hot-swap to a 5-dimensional model while the request is queued
+        // hot-swap to a 5-dimensional model while the request is queued:
+        // rejected at swap time, so the queued request stays answerable
         let mut m5 = SvmModel::new(5, 1.1);
         m5.svs.push(&[0.1, 0.2, 0.3, 0.4, 0.5], 0.4);
-        reg.swap("solo", m5).unwrap();
+        assert_eq!(
+            reg.swap("solo", m5.clone()).unwrap_err(),
+            ServeError::DimMismatch { name: "solo".into(), serving: 3, incoming: 5 }
+        );
+        let res = eng.flush(&mut reg);
+        assert_eq!(res.len(), 1);
+        assert!(res[0].1.is_ok(), "{:?}", res[0].1);
+        // force the dimension change through insert (the intentional
+        // path, which swap's gate does not cover): the per-flush check
+        // is the backstop, failing only the stale request — typed
+        eng.submit(&reg, None, q(2.0)).unwrap();
+        reg.insert("solo", m5).unwrap();
         let res = eng.flush(&mut reg);
         assert_eq!(res.len(), 1);
         assert!(matches!(

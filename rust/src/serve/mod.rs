@@ -23,6 +23,11 @@
 //!   (`predict` / `decision` / `feedback` / `stats` / `swap-model` /
 //!   `shutdown`) over `std::net::TcpListener` and scoped threads,
 //!   driving the engine; `mmbsgd serve` is a thin CLI wrapper.
+//!   [`serve_fleet`] is the same server with the fleet verbs enabled
+//!   (`push-artifact` / `activate` / `rollback` / `fleet-status`),
+//!   answered by a [`FleetHandler`] — see [`crate::fleet`] for the
+//!   replica state, the artifact format, and the consistent-hash
+//!   router that fronts a set of these servers.
 //!
 //! [`Monitor`] watches served traffic for drift: a rolling
 //! decision-margin histogram plus a label-feedback accuracy window that
@@ -54,8 +59,8 @@ mod registry;
 
 pub use batch::{BatchEngine, Decision, EngineStats, ShedPolicy};
 pub use monitor::{DegradeTotals, DriftReport, Monitor, MARGIN_BINS};
-pub use proto::{serve, Command, ProtoStats, ServeOptions, ServeReport};
-pub use registry::{ModelRegistry, ModelStatus, RouteArm, RouteSpec};
+pub use proto::{serve, serve_fleet, Command, FleetHandler, ProtoStats, ServeOptions, ServeReport};
+pub use registry::{route_hash, ModelRegistry, ModelStatus, RouteArm, RouteSpec};
 
 pub use crate::error::ServeError;
 

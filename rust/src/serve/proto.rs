@@ -17,6 +17,11 @@
 //!                                  window_acc=.. feedback=.. expired=..
 //!                                  idle_timeout=.. oversize=.. busy=.. models=..
 //! swap-model <name> <path>     ->  ok <name>@v<N>
+//! push-artifact <len>          ->  ok staged <name>@v<N> dim=<d> nsv=<n>
+//!   (then exactly <len> payload bytes — a fleet artifact bundle)
+//! activate <name>@v<N>         ->  ok active <name>@v<N> registry=v<R>
+//! rollback <name>              ->  ok rollback <name>@v<N> registry=v<R>
+//! fleet-status                 ->  ok fleet models=.. staged=.. acc=..
 //! shutdown                     ->  ok bye          (then the server exits)
 //! <anything malformed>         ->  err <reason>    (connection stays up)
 //! ```
@@ -27,6 +32,16 @@
 //! name and bumps its version — in-flight requests drain against the
 //! old model first, so no request is answered by a half-installed
 //! model.
+//!
+//! The four fleet verbs are live only on [`serve_fleet`] servers,
+//! which carry a [`FleetHandler`] (see
+//! [`crate::fleet::ReplicaState`]); a plain [`serve`] answers them
+//! `err fleet verbs not enabled`.  `push-artifact` is the protocol's
+//! one length-delimited command: the connection reader consumes
+//! exactly `<len>` payload bytes after the header line (so bundles
+//! may contain newlines), and a connection that dies mid-payload
+//! stages nothing.  Like `swap-model`, every fleet verb drains
+//! in-flight requests first.
 //!
 //! ## Threading
 //!
@@ -54,7 +69,7 @@ use super::ShedPolicy;
 use crate::error::ServeError;
 use crate::model::SvmModel;
 use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -82,7 +97,41 @@ pub enum Command {
     Feedback { key: Option<String>, y: f32, x: Vec<f32> },
     Stats,
     SwapModel { name: String, path: String },
+    /// Fleet verb: a fully-received artifact bundle to stage (the
+    /// connection reader already consumed the length-delimited
+    /// payload; see the module docs).
+    PushArtifact { payload: String },
+    /// Fleet verb: activate a staged `<name>@v<version>` bundle.
+    Activate { name: String, version: u64 },
+    /// Fleet verb: restore `<name>`'s last-good generation.
+    Rollback { name: String },
+    /// Fleet verb: one-line replica fleet status.
+    FleetStatus,
     Shutdown,
+}
+
+/// Parse a `push-artifact <len>` header line's payload length.
+/// Returns `None` when the line is not a push-artifact header at all.
+fn parse_push_header(line: &str) -> Option<Result<usize, ServeError>> {
+    let mut it = line.split_ascii_whitespace();
+    if it.next() != Some("push-artifact") {
+        return None;
+    }
+    let Some(len_tok) = it.next() else {
+        return Some(Err(ServeError::BadRequest("push-artifact needs <len>".into())));
+    };
+    if it.next().is_some() {
+        return Some(Err(ServeError::BadRequest(
+            "push-artifact takes exactly one <len> argument".into(),
+        )));
+    }
+    match len_tok.parse::<usize>() {
+        Ok(n) if n > 0 => Some(Ok(n)),
+        Ok(_) => Some(Err(ServeError::BadRequest("push-artifact payload is empty".into()))),
+        Err(_) => {
+            Some(Err(ServeError::BadRequest(format!("bad push-artifact length {len_tok:?}"))))
+        }
+    }
 }
 
 /// Parse one protocol line.  Pure function — every malformation is a
@@ -156,6 +205,50 @@ pub fn parse_line(line: &str) -> Result<Command, ServeError> {
             }
             Ok(Command::SwapModel { name: name.into(), path: path.into() })
         }
+        // The reader consumes push-artifact headers (and their payload
+        // bytes) before lines reach the parser; one arriving here is a
+        // header the reader rejected already or an out-of-context use.
+        "push-artifact" => Err(ServeError::BadRequest(
+            "push-artifact is length-delimited and must precede its payload bytes".into(),
+        )),
+        "activate" => {
+            let spec = it
+                .next()
+                .ok_or_else(|| ServeError::BadRequest("activate needs <name>@v<version>".into()))?;
+            if it.next().is_some() {
+                return Err(ServeError::BadRequest(
+                    "activate takes exactly one <name>@v<version> argument".into(),
+                ));
+            }
+            let (name, ver) = spec.split_once('@').ok_or_else(|| {
+                ServeError::BadRequest(format!("activate spec {spec:?} missing '@'"))
+            })?;
+            let ver = ver.strip_prefix('v').unwrap_or(ver);
+            let version: u64 = ver.parse().map_err(|_| {
+                ServeError::BadRequest(format!("bad activate version {ver:?} in {spec:?}"))
+            })?;
+            if name.is_empty() {
+                return Err(ServeError::BadRequest(format!("activate spec {spec:?} has no name")));
+            }
+            Ok(Command::Activate { name: name.into(), version })
+        }
+        "rollback" => {
+            let name = it
+                .next()
+                .ok_or_else(|| ServeError::BadRequest("rollback needs <name>".into()))?;
+            if it.next().is_some() {
+                return Err(ServeError::BadRequest(
+                    "rollback takes exactly one <name> argument".into(),
+                ));
+            }
+            Ok(Command::Rollback { name: name.into() })
+        }
+        "fleet-status" => match it.next() {
+            None => Ok(Command::FleetStatus),
+            Some(extra) => Err(ServeError::BadRequest(format!(
+                "fleet-status takes no arguments, got {extra:?}"
+            ))),
+        },
         "shutdown" => Ok(Command::Shutdown),
         other => Err(ServeError::BadRequest(format!("unknown command {other:?}"))),
     }
@@ -184,6 +277,10 @@ pub struct ServeOptions {
     /// Per-request deadline: requests queued longer answer
     /// [`ServeError::Deadline`] (`Duration::ZERO` = none).
     pub deadline: Duration,
+    /// Largest accepted `push-artifact` payload in bytes; a bigger
+    /// header answers `err` and the connection is closed (the client
+    /// was about to stream that many bytes).
+    pub max_artifact_bytes: usize,
 }
 
 impl Default for ServeOptions {
@@ -197,6 +294,7 @@ impl Default for ServeOptions {
             max_line_bytes: 64 * 1024,
             max_conns: 1024,
             deadline: Duration::ZERO,
+            max_artifact_bytes: 16 * 1024 * 1024,
         }
     }
 }
@@ -237,6 +335,27 @@ impl ProtoCounters {
 struct ConnLimits {
     idle_timeout: Duration,
     max_line_bytes: usize,
+    max_artifact_bytes: usize,
+}
+
+/// Server-side handler for the fleet verbs (`push-artifact` /
+/// `activate` / `rollback` / `fleet-status`), implemented by
+/// [`crate::fleet::ReplicaState`].  Methods return the full reply
+/// line (`ok ...` / `err ...`): fleet state transitions are never
+/// half-reported — whatever the handler did is exactly what the
+/// controller reads back.  The engine calls these after draining
+/// in-flight requests, so a handler swapping the registry observes
+/// the same quiesced-registry guarantee as `swap-model`.
+pub trait FleetHandler {
+    /// Verify and stage a pushed artifact bundle.
+    fn push_artifact(&mut self, registry: &mut ModelRegistry, payload: &str) -> String;
+    /// Activate a staged `name@v<version>` bundle into the registry.
+    fn activate(&mut self, registry: &mut ModelRegistry, name: &str, version: u64) -> String;
+    /// Restore `name`'s last-good generation.
+    fn rollback(&mut self, registry: &mut ModelRegistry, name: &str) -> String;
+    /// One-line fleet status; `window_accuracy` is the monitor's
+    /// feedback-accuracy window (the auto-rollback signal).
+    fn fleet_status(&self, registry: &ModelRegistry, window_accuracy: Option<f64>) -> String;
 }
 
 /// What a completed [`serve`] run did.
@@ -289,6 +408,28 @@ pub fn serve(
     registry: ModelRegistry,
     opts: &ServeOptions,
 ) -> Result<ServeReport, ServeError> {
+    serve_impl(listener, registry, opts, None)
+}
+
+/// [`serve`] with the fleet verbs enabled: `handler` (normally a
+/// [`crate::fleet::ReplicaState`]) answers `push-artifact` /
+/// `activate` / `rollback` / `fleet-status`, running on the engine
+/// thread with exclusive access to the registry.
+pub fn serve_fleet(
+    listener: TcpListener,
+    registry: ModelRegistry,
+    opts: &ServeOptions,
+    handler: &mut dyn FleetHandler,
+) -> Result<ServeReport, ServeError> {
+    serve_impl(listener, registry, opts, Some(handler))
+}
+
+fn serve_impl(
+    listener: TcpListener,
+    registry: ModelRegistry,
+    opts: &ServeOptions,
+    fleet: Option<&mut dyn FleetHandler>,
+) -> Result<ServeReport, ServeError> {
     listener.set_nonblocking(true)?;
     let stop = AtomicBool::new(false);
     let counters = ProtoCounters::default();
@@ -299,8 +440,11 @@ pub fn serve(
         let stop = &stop;
         let counters = &counters;
         let active = &active;
-        let limits =
-            ConnLimits { idle_timeout: opts.idle_timeout, max_line_bytes: opts.max_line_bytes };
+        let limits = ConnLimits {
+            idle_timeout: opts.idle_timeout,
+            max_line_bytes: opts.max_line_bytes,
+            max_artifact_bytes: opts.max_artifact_bytes,
+        };
         let max_conns = opts.max_conns;
         let acceptor = s.spawn(move || {
             accept_loop(listener, tx, stop, s, limits, max_conns, counters, active)
@@ -308,7 +452,7 @@ pub fn serve(
         // The engine owns the (non-Send) registry and runs here; it
         // returns once every channel sender is gone — i.e. after the
         // accept loop and every connection reader have exited.
-        let (engine, drift) = engine_loop(registry, opts, rx, counters);
+        let (engine, drift) = engine_loop(registry, opts, rx, counters, fleet);
         match acceptor.join() {
             Ok((connections, None)) => {
                 Ok(ServeReport { connections, engine, drift, proto: counters.snapshot() })
@@ -457,6 +601,90 @@ fn connection_loop(
                         buf.clear();
                         continue;
                     }
+                    // `push-artifact <len>` switches the reader into
+                    // its one length-delimited mode: exactly <len>
+                    // payload bytes follow the header (bundles contain
+                    // newlines, so line framing can't carry them).
+                    let push =
+                        std::str::from_utf8(&buf).ok().and_then(|t| parse_push_header(t.trim()));
+                    if let Some(header) = push {
+                        buf.clear();
+                        let want = match header {
+                            Ok(n) => n,
+                            Err(e) => {
+                                if tx
+                                    .send(Incoming { cmd: Err(e), reply: reply_tx.clone() })
+                                    .is_err()
+                                {
+                                    break;
+                                }
+                                continue;
+                            }
+                        };
+                        if want > limits.max_artifact_bytes {
+                            let e = ServeError::BadRequest(format!(
+                                "artifact exceeds {} bytes",
+                                limits.max_artifact_bytes
+                            ));
+                            let _ = tx.send(Incoming { cmd: Err(e), reply: reply_tx.clone() });
+                            // the peer is about to stream `want` bytes
+                            // we refuse to buffer: close instead of
+                            // misparsing them as protocol lines
+                            break;
+                        }
+                        let mut payload = vec![0u8; want];
+                        let mut got = 0usize;
+                        let mut alive = true;
+                        while got < want {
+                            if stop.load(Ordering::Relaxed) {
+                                alive = false;
+                                break;
+                            }
+                            match rd.read(&mut payload[got..]) {
+                                // EOF mid-payload (torn push): stage
+                                // nothing, drop the connection
+                                Ok(0) => {
+                                    alive = false;
+                                    break;
+                                }
+                                Ok(n) => {
+                                    got += n;
+                                    last_rx = Instant::now();
+                                }
+                                Err(e)
+                                    if e.kind() == std::io::ErrorKind::WouldBlock
+                                        || e.kind() == std::io::ErrorKind::TimedOut
+                                        || e.kind() == std::io::ErrorKind::Interrupted =>
+                                {
+                                    if !limits.idle_timeout.is_zero()
+                                        && last_rx.elapsed() >= limits.idle_timeout
+                                    {
+                                        counters.idle_timeouts.fetch_add(1, Ordering::Relaxed);
+                                        alive = false;
+                                        break;
+                                    }
+                                }
+                                Err(_) => {
+                                    alive = false;
+                                    break;
+                                }
+                            }
+                        }
+                        if !alive {
+                            break;
+                        }
+                        let cmd = String::from_utf8(payload)
+                            .map(|payload| Command::PushArtifact { payload })
+                            .map_err(|_| {
+                                ServeError::BadRequest(
+                                    "artifact payload is not valid UTF-8".into(),
+                                )
+                            });
+                        if tx.send(Incoming { cmd, reply: reply_tx.clone() }).is_err() {
+                            break;
+                        }
+                        continue;
+                    }
                     let cmd = match std::str::from_utf8(&buf) {
                         Ok(text) => {
                             let line = text.trim();
@@ -537,6 +765,7 @@ fn engine_loop(
     opts: ServeOptions,
     rx: mpsc::Receiver<Incoming>,
     counters: &ProtoCounters,
+    mut fleet: Option<&mut dyn FleetHandler>,
 ) -> (EngineStats, DriftReport) {
     let mut engine = BatchEngine::new(opts.batch_max, opts.queue_max, opts.shed);
     engine.set_deadline(opts.deadline);
@@ -589,6 +818,43 @@ fn engine_loop(
                             Err(e) => format!("err {e}"),
                         },
                         Err(e) => format!("err swap-model: {e:#}"),
+                    };
+                    let _ = inc.reply.try_send(msg);
+                }
+                Command::PushArtifact { payload } => {
+                    // Staging never touches the registry, but drain
+                    // anyway: fleet verbs share swap-model's FIFO
+                    // position guarantee.
+                    drain(&mut engine, &mut registry, &mut waiting, &mut monitor);
+                    let msg = match fleet.as_deref_mut() {
+                        Some(h) => h.push_artifact(&mut registry, &payload),
+                        None => "err fleet verbs not enabled on this server".into(),
+                    };
+                    let _ = inc.reply.try_send(msg);
+                }
+                Command::Activate { name, version } => {
+                    drain(&mut engine, &mut registry, &mut waiting, &mut monitor);
+                    let msg = match fleet.as_deref_mut() {
+                        Some(h) => h.activate(&mut registry, &name, version),
+                        None => "err fleet verbs not enabled on this server".into(),
+                    };
+                    let _ = inc.reply.try_send(msg);
+                }
+                Command::Rollback { name } => {
+                    drain(&mut engine, &mut registry, &mut waiting, &mut monitor);
+                    let msg = match fleet.as_deref_mut() {
+                        Some(h) => h.rollback(&mut registry, &name),
+                        None => "err fleet verbs not enabled on this server".into(),
+                    };
+                    let _ = inc.reply.try_send(msg);
+                }
+                Command::FleetStatus => {
+                    drain(&mut engine, &mut registry, &mut waiting, &mut monitor);
+                    let msg = match fleet.as_deref_mut() {
+                        Some(h) => {
+                            h.fleet_status(&registry, monitor.report().window_accuracy)
+                        }
+                        None => "err fleet verbs not enabled on this server".into(),
                     };
                     let _ = inc.reply.try_send(msg);
                 }
@@ -772,5 +1038,50 @@ mod tests {
     fn non_finite_features_rejected() {
         assert!(matches!(parse_line("predict inf 1"), Err(ServeError::BadRequest(_))));
         assert!(matches!(parse_line("predict NaN"), Err(ServeError::BadRequest(_))));
+    }
+
+    #[test]
+    fn parse_covers_the_fleet_verbs() {
+        assert_eq!(
+            parse_line("activate champ@v3").unwrap(),
+            Command::Activate { name: "champ".into(), version: 3 }
+        );
+        // the 'v' is optional sugar
+        assert_eq!(
+            parse_line("activate champ@3").unwrap(),
+            Command::Activate { name: "champ".into(), version: 3 }
+        );
+        assert_eq!(
+            parse_line("rollback champ").unwrap(),
+            Command::Rollback { name: "champ".into() }
+        );
+        assert_eq!(parse_line("fleet-status").unwrap(), Command::FleetStatus);
+        for bad in [
+            "activate",
+            "activate champ",
+            "activate champ@vX",
+            "activate @v3",
+            "activate a@v1 extra",
+            "rollback",
+            "rollback a b",
+            "fleet-status now",
+            // reader-handled: reaching the parser means it was misused
+            "push-artifact 128",
+        ] {
+            match parse_line(bad) {
+                Err(ServeError::BadRequest(_)) => {}
+                other => panic!("{bad:?}: expected BadRequest, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn push_header_parses_lengths() {
+        assert_eq!(parse_push_header("push-artifact 128"), Some(Ok(128)));
+        assert_eq!(parse_push_header("predict 1 2"), None);
+        assert!(matches!(parse_push_header("push-artifact"), Some(Err(_))));
+        assert!(matches!(parse_push_header("push-artifact 0"), Some(Err(_))));
+        assert!(matches!(parse_push_header("push-artifact twelve"), Some(Err(_))));
+        assert!(matches!(parse_push_header("push-artifact 12 34"), Some(Err(_))));
     }
 }

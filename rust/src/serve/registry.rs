@@ -172,12 +172,29 @@ impl ModelRegistry {
         Ok(version)
     }
 
-    /// Replace an **existing** model (the `swap-model` protocol verb):
-    /// like [`ModelRegistry::insert`] but a typo'd name is an error
-    /// instead of a silently created, never-routed entry.
+    /// Replace an **existing** model (the `swap-model` / fleet
+    /// `activate` verb): like [`ModelRegistry::insert`] but a typo'd
+    /// name is an error instead of a silently created, never-routed
+    /// entry, and the incoming model's feature dimension must match
+    /// the version currently serving — requests queued by the
+    /// micro-batcher were shape-validated at submit time against the
+    /// old dimension, so a dimension-changing swap would turn every
+    /// in-flight request into a flush-time error.  Rejected here with
+    /// a typed [`ServeError::DimMismatch`]; the registry keeps serving
+    /// the current version.  (To intentionally change a name's
+    /// dimension, [`ModelRegistry::evict`] then
+    /// [`ModelRegistry::insert`].)
     pub fn swap(&mut self, name: &str, model: SvmModel) -> Result<u64, ServeError> {
-        if !self.models.contains_key(name) {
+        let Some(entry) = self.models.get(name) else {
             return Err(ServeError::UnknownModel(name.into()));
+        };
+        let serving = entry.model.svs.dim();
+        if model.svs.dim() != serving {
+            return Err(ServeError::DimMismatch {
+                name: name.into(),
+                serving,
+                incoming: model.svs.dim(),
+            });
         }
         self.insert(name, model)
     }
@@ -357,6 +374,21 @@ mod tests {
             ServeError::UnknownModel("typo".into())
         );
         assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn swap_rejects_dimension_change_typed() {
+        let mut reg = registry_with(&["a"]);
+        assert_eq!(
+            reg.swap("a", toy_model(9, 10, 6)).unwrap_err(),
+            ServeError::DimMismatch { name: "a".into(), serving: 4, incoming: 6 }
+        );
+        // the rejected swap left the serving entry untouched
+        assert_eq!(reg.version_of("a").unwrap(), 1);
+        assert_eq!(reg.dim_of("a").unwrap(), 4);
+        // insert (not swap) is the intentional dimension-change path
+        assert_eq!(reg.insert("a", toy_model(9, 10, 6)).unwrap(), 2);
+        assert_eq!(reg.dim_of("a").unwrap(), 6);
     }
 
     #[test]

@@ -244,6 +244,37 @@ pub fn read_verified(path: &Path) -> Result<String, DurableError> {
     Ok(v.payload.to_string())
 }
 
+/// [`read_verified`] for artifact manifests — fleet model bundles and
+/// the AOT registry manifest — with its own injection site so those
+/// reads can be faulted independently of checkpoint loads.
+///
+/// Injection site [`fault::site::ARTIFACT_READ`]: an `io` rule fails
+/// the read outright; a `truncate:K` rule tears the text at byte `K`
+/// (snapped back to a char boundary) *before* verification, so the
+/// footer check sees exactly what a torn read would produce.
+pub fn read_artifact_verified(path: &Path) -> Result<String, DurableError> {
+    let mut text = std::fs::read_to_string(path)
+        .map_err(|e| DurableError::Io { path: path.display().to_string(), detail: e.to_string() })?;
+    match fault::armed(fault::site::ARTIFACT_READ) {
+        Some(fault::FaultKind::Io) => {
+            return Err(DurableError::Io {
+                path: path.display().to_string(),
+                detail: "injected artifact read fault".to_string(),
+            })
+        }
+        Some(fault::FaultKind::Truncate(k)) => {
+            let mut k = k.min(text.len());
+            while k > 0 && !text.is_char_boundary(k) {
+                k -= 1;
+            }
+            text.truncate(k);
+        }
+        _ => {}
+    }
+    let v = verify(&text, path)?;
+    Ok(v.payload.to_string())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -42,6 +42,16 @@ pub mod site {
     /// The per-connection read loop in `serve/proto.rs`: stall the
     /// reader or drop the connection.
     pub const PROTO_READ: &str = "proto.read";
+    /// [`crate::util::durable::read_artifact_verified`]: fail the
+    /// artifact read with `io` or tear the text at `truncate:K` before
+    /// verification.  Covers both fleet bundle loads
+    /// (`fleet::Artifact::load`) and the AOT registry manifest scan
+    /// (`runtime::ArtifactRegistry::load`).
+    pub const ARTIFACT_READ: &str = "artifact.read";
+    /// The controller's artifact push in `fleet::control`: an `io`
+    /// rule tears the push mid-payload (header + partial bytes, then
+    /// the connection drops), so the replica must stay on last-good.
+    pub const FLEET_PUSH: &str = "fleet.push";
 }
 
 /// What happens when a rule fires.

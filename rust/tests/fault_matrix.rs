@@ -31,9 +31,11 @@ use std::time::Duration;
 use mmbsgd::config::TrainConfig;
 use mmbsgd::data::synth::{dataset, SynthSpec};
 use mmbsgd::data::{libsvm, Split};
+use mmbsgd::error::FleetError;
+use mmbsgd::fleet::{Artifact, Controller, Provenance, ReplicaState};
 use mmbsgd::model::SvmModel;
-use mmbsgd::runtime::{NativeBackend, WorkerPool};
-use mmbsgd::serve::{serve, ModelRegistry, ServeOptions};
+use mmbsgd::runtime::{ArtifactRegistry, NativeBackend, WorkerPool};
+use mmbsgd::serve::{serve, serve_fleet, ModelRegistry, ServeOptions};
 use mmbsgd::solver::bsgd::TrainOutput;
 use mmbsgd::solver::{load_checkpoint, Checkpoint, NoopObserver, TrainSession};
 use mmbsgd::util::durable::{self, DurableError};
@@ -369,5 +371,133 @@ fn injected_tear_and_manual_tear_fail_identically() {
         (Err(_), Err(_)) | (Ok(false), Ok(false)) => {} // both detected, same layer
         (ga, gb) => panic!("tear detection diverged: injected={ga:?} manual={gb:?}"),
     }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------------ artifact.read
+
+/// `artifact.read` faults are typed for both consumers of the shared
+/// read path: a fleet bundle load ([`Artifact::load`]) and the AOT
+/// registry manifest scan ([`ArtifactRegistry::load`]).  `io` fails
+/// the read outright; `truncate:K` tears the text before verification
+/// so the durable footer rejects it as corrupt.
+#[test]
+fn artifact_read_faults_are_typed_for_both_consumers() {
+    let _serial = serialize();
+    let dir = scratch("artifact_read");
+    let (model, _) = trained_model();
+    let bundle = Artifact::wrap("champ", 1, &model, Provenance::default(), "lut", "auto").unwrap();
+    let p = dir.join("champ.artifact");
+    bundle.save(&p).unwrap();
+    {
+        let _g = arm("artifact.read@1=io");
+        match Artifact::load(&p) {
+            Err(FleetError::Io { detail, .. }) => assert!(detail.contains("injected"), "{detail}"),
+            other => panic!("expected injected Io error, got {other:?}"),
+        }
+        assert_eq!(fault::fired(), 1);
+    }
+    {
+        // tear inside the manifest body: the durable footer is gone
+        // entirely (legacy-accept), so the manifest parser is the
+        // layer that refuses the torn text
+        let _g = arm("artifact.read@1=truncate:40");
+        match Artifact::load(&p) {
+            Err(FleetError::Manifest { .. }) => {}
+            other => panic!("torn manifest must be refused, got {other:?}"),
+        }
+    }
+    {
+        // tear inside the footer line itself: the durable layer
+        // rejects it as corrupt before any parsing
+        let n = std::fs::metadata(&p).unwrap().len();
+        let _g = arm(&format!("artifact.read@1=truncate:{}", n - 5));
+        match Artifact::load(&p) {
+            Err(FleetError::Corrupt { .. }) => {}
+            other => panic!("torn footer must fail the checksum gate, got {other:?}"),
+        }
+    }
+    // plan cleared: the same bundle loads whole
+    assert_eq!(Artifact::load(&p).unwrap().version, 1);
+
+    // the AOT manifest scan shares the site (manifests without a
+    // footer load unchecked, so only the io rule applies there)
+    std::fs::write(dir.join("manifest.json"), "{\"artifacts\": []}\n").unwrap();
+    {
+        let _g = arm("artifact.read@1=io");
+        let err = format!("{:#}", ArtifactRegistry::load(&dir).unwrap_err());
+        assert!(err.contains("injected artifact read fault"), "{err}");
+    }
+    assert!(ArtifactRegistry::load(&dir).unwrap().artifacts.is_empty());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// -------------------------------------------------------- fleet.push
+
+/// A push torn mid-payload by the `fleet.push` fault leaves the
+/// replica exactly where it was: the length-delimited reader sees EOF
+/// before the payload completes, stages nothing, and the activated
+/// version keeps serving.  The same push succeeds once the plan is
+/// cleared — convergence by re-running, the control plane's contract.
+#[test]
+fn torn_artifact_push_leaves_replica_on_last_good() {
+    let _serial = serialize();
+    let dir = scratch("torn_push");
+    let (model, q) = trained_model();
+    let v1 = Artifact::wrap("champ", 1, &model, Provenance::default(), "lut", "auto").unwrap();
+    let mut m2 = SvmModel::from_text(&model.to_text()).unwrap();
+    m2.bias += 1.0;
+    let v2 = Artifact::wrap("champ", 2, &m2, Provenance::default(), "lut", "auto").unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            let mut rep = ReplicaState::new(&dir).unwrap();
+            let reg = ModelRegistry::new(Box::new(NativeBackend::new()), 7);
+            serve_fleet(listener, reg, &ServeOptions::default(), &mut rep).unwrap();
+        });
+        let mut ctl = Controller::new(vec![addr.to_string()], Duration::from_secs(10));
+        assert_eq!(ctl.push(&v1, true)[0].result, Ok(1));
+
+        let ask = |line: &str| {
+            let c = TcpStream::connect(addr).unwrap();
+            c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+            let mut w = c.try_clone().unwrap();
+            w.write_all(format!("{line}\n").as_bytes()).unwrap();
+            w.flush().unwrap();
+            let mut r = BufReader::new(c);
+            let mut reply = String::new();
+            r.read_line(&mut reply).unwrap();
+            reply.trim_end().to_string()
+        };
+        let v1_reply = ask(&format!("decision {}", fmt_row(&q)));
+        assert!(v1_reply.starts_with("ok "), "{v1_reply}");
+
+        {
+            let _g = arm("fleet.push@1=io");
+            let out = ctl.push(&v2, true);
+            match &out[0].result {
+                Err(FleetError::Replica { detail, .. }) => {
+                    assert!(detail.contains("torn mid-payload"), "{detail}")
+                }
+                other => panic!("torn push must be a typed Replica error, got {other:?}"),
+            }
+            assert_eq!(fault::fired(), 1);
+            assert_eq!(ctl.acked(&addr.to_string(), "champ"), Some(1), "ack stays at v1");
+        }
+
+        // nothing staged, v1 still serving, answers unchanged
+        let status = ask("fleet-status");
+        assert!(status.contains("champ@v1"), "{status}");
+        assert!(status.contains("staged=0"), "{status}");
+        assert_eq!(ask(&format!("decision {}", fmt_row(&q))), v1_reply);
+
+        // plan cleared: re-running the identical push converges to v2
+        assert_eq!(ctl.push(&v2, true)[0].result, Ok(2));
+        let status = ask("fleet-status");
+        assert!(status.contains("champ@v2"), "{status}");
+        assert_eq!(ask("shutdown"), "ok bye");
+    });
     let _ = std::fs::remove_dir_all(&dir);
 }

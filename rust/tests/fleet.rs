@@ -1,0 +1,346 @@
+//! Fleet acceptance tests (ISSUE 7): live replicas behind the
+//! consistent-hash router, driven end-to-end over real sockets.
+//!
+//! * two replicas + router, one replica killed mid-traffic → every
+//!   keyed request is still answered, and the answers are bit-identical
+//!   to the pre-kill ones (the surviving replica serves the same model,
+//!   and the ring moves only the dead replica's arcs);
+//! * a tampered artifact is refused with a typed reason and the
+//!   replica keeps serving its last-good version untouched;
+//! * `rollback` restores the previous version fleet-wide, answers
+//!   return bit-identically to the v1 decisions;
+//! * the controller's auto-rollback hook fires when a replica's
+//!   feedback-accuracy window degrades, and stays quiet while healthy.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use mmbsgd::config::TrainConfig;
+use mmbsgd::data::synth::{dataset, SynthSpec};
+use mmbsgd::data::Split;
+use mmbsgd::fleet::{run_router, Artifact, Controller, Provenance, ReplicaState, RouterOptions};
+use mmbsgd::model::SvmModel;
+use mmbsgd::runtime::NativeBackend;
+use mmbsgd::serve::{serve_fleet, ModelRegistry, ServeOptions};
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mmbsgd_fleet_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn trained() -> (SvmModel, Split) {
+    let split = dataset(&SynthSpec::ijcnn_like(0.01), 2);
+    let cfg = TrainConfig {
+        lambda: 1e-3,
+        gamma: 2.0,
+        budget: 24,
+        mergees: 3,
+        seed: 41,
+        ..TrainConfig::default()
+    };
+    (mmbsgd::solver::bsgd::train(&split.train, &cfg).unwrap().model, split)
+}
+
+fn wrap(version: u64, model: &SvmModel) -> Artifact {
+    Artifact::wrap("champ", version, model, Provenance::default(), "lut", "auto").unwrap()
+}
+
+/// Reparse-copy a model (SvmModel carries no Clone; the text format is
+/// the canonical representation anyway).
+fn copy_of(model: &SvmModel) -> SvmModel {
+    SvmModel::from_text(&model.to_text()).unwrap()
+}
+
+fn fmt_row(x: &[f32]) -> String {
+    x.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(" ")
+}
+
+/// Serve one fleet replica on `listener` until a `shutdown` line.
+fn replica_serve(listener: TcpListener, dir: &Path) {
+    let mut rep = ReplicaState::new(dir).unwrap();
+    let reg = ModelRegistry::new(Box::new(NativeBackend::new()), 7);
+    let opts = ServeOptions::default();
+    serve_fleet(listener, reg, &opts, &mut rep).unwrap();
+}
+
+fn bind() -> (TcpListener, SocketAddr) {
+    let l = TcpListener::bind("127.0.0.1:0").unwrap();
+    let a = l.local_addr().unwrap();
+    (l, a)
+}
+
+/// A line-protocol test client: one request line in, one reply out.
+struct Client {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        s.set_nodelay(true).ok();
+        let w = s.try_clone().unwrap();
+        Client { w, r: BufReader::new(s) }
+    }
+
+    fn ask(&mut self, line: &str) -> String {
+        self.w.write_all(line.as_bytes()).unwrap();
+        self.w.write_all(b"\n").unwrap();
+        self.w.flush().unwrap();
+        self.read_reply()
+    }
+
+    /// Raw length-delimited push (the controller normally does this;
+    /// going raw lets a test push bytes the controller would refuse to
+    /// produce, e.g. a tampered bundle).
+    fn push_raw(&mut self, payload: &str) -> String {
+        let msg = format!("push-artifact {}\n{payload}", payload.len());
+        self.w.write_all(msg.as_bytes()).unwrap();
+        self.w.flush().unwrap();
+        self.read_reply()
+    }
+
+    fn read_reply(&mut self) -> String {
+        let mut reply = String::new();
+        self.r.read_line(&mut reply).unwrap();
+        reply.trim_end().to_string()
+    }
+}
+
+/// The decision value token of an `ok <decision> <model>@v<N>` reply
+/// (registry versions differ across swaps; the float must not).
+fn decision_of(reply: &str) -> String {
+    assert!(reply.starts_with("ok "), "{reply}");
+    reply.split_ascii_whitespace().nth(1).unwrap().to_string()
+}
+
+// ------------------------------------------------ acceptance: failover
+
+/// Two replicas behind the router; one dies mid-traffic.  Every keyed
+/// request is still answered, bit-identical to its pre-kill reply: the
+/// ring moves only the dead replica's arcs, and both replicas serve
+/// the same deterministic model, so even the rerouted keys answer with
+/// the exact same bytes.
+#[test]
+fn router_reroutes_when_a_replica_dies_mid_traffic() {
+    let (model, split) = trained();
+    let d0 = scratch("route0");
+    let d1 = scratch("route1");
+    let (l0, a0) = bind();
+    let (l1, a1) = bind();
+    let (lr, ar) = bind();
+    let eps = vec![a0.to_string(), a1.to_string()];
+    std::thread::scope(|s| {
+        s.spawn(|| replica_serve(l0, &d0));
+        s.spawn(|| replica_serve(l1, &d1));
+        let ropts = RouterOptions {
+            seed: 42,
+            vnodes: 64,
+            timeout: Duration::from_secs(10),
+            // long enough that the dead replica is never re-probed
+            // back into rotation inside this test
+            probe_every: Duration::from_secs(600),
+        };
+        let reps = eps.clone();
+        let rh = s.spawn(move || run_router(lr, reps, &ropts).unwrap());
+
+        // control plane: stage + activate v1 on the whole fleet
+        let mut ctl = Controller::new(eps.clone(), Duration::from_secs(10));
+        for o in ctl.push(&wrap(1, &model), true) {
+            assert_eq!(o.result, Ok(1), "replica {} did not converge", o.endpoint);
+        }
+
+        // data plane through the router: keyed decisions over one row
+        let q = fmt_row(split.test.x.row(0));
+        let keys: Vec<String> = (0..48).map(|k| format!("user-{k}")).collect();
+        let mut client = Client::connect(ar);
+        let before: Vec<String> =
+            keys.iter().map(|k| client.ask(&format!("decision key={k} {q}"))).collect();
+        for r in &before {
+            assert!(r.starts_with("ok "), "{r}");
+        }
+
+        // kill replica 0 directly, mid-traffic (`shutdown` goes to the
+        // replica, not the router — the router refuses control verbs)
+        assert_eq!(Client::connect(a0).ask("shutdown"), "ok bye");
+
+        // every key still answers, and every reply is unchanged
+        let after: Vec<String> =
+            keys.iter().map(|k| client.ask(&format!("decision key={k} {q}"))).collect();
+        assert_eq!(before, after, "failover changed an answer");
+
+        // stop the router, then the surviving replica
+        assert_eq!(client.ask("shutdown"), "ok bye");
+        let report = rh.join().unwrap();
+        assert!(report.forwarded >= 96, "forwarded {}", report.forwarded);
+        assert!(report.retried >= 1, "no key was rerouted through the alternate");
+        assert_eq!(Client::connect(a1).ask("shutdown"), "ok bye");
+    });
+    let _ = std::fs::remove_dir_all(&d0);
+    let _ = std::fs::remove_dir_all(&d1);
+}
+
+// --------------------------------------------- acceptance: tamper gate
+
+/// A bundle with one flipped byte inside the model section is refused
+/// with a typed checksum reason; the replica keeps serving v1 and
+/// stages nothing.
+#[test]
+fn tampered_artifact_is_refused_and_replica_stays_last_good() {
+    let (model, split) = trained();
+    let dir = scratch("tamper");
+    let (l, addr) = bind();
+    std::thread::scope(|s| {
+        s.spawn(|| replica_serve(l, &dir));
+        let mut ctl = Controller::new(vec![addr.to_string()], Duration::from_secs(10));
+        assert_eq!(ctl.push(&wrap(1, &model), true)[0].result, Ok(1));
+
+        let q = fmt_row(split.test.x.row(0));
+        let mut c = Client::connect(addr);
+        let v1_reply = c.ask(&format!("decision {q}"));
+        assert!(v1_reply.starts_with("ok "), "{v1_reply}");
+
+        // wrap a would-be v2, then flip one digit inside the model
+        // section (after end-manifest) keeping the byte length — the
+        // manifest still parses, the section checksum must not
+        let mut m2 = copy_of(&model);
+        m2.bias += 1.0;
+        let text = wrap(2, &m2).to_text();
+        let cut = text.find("end-manifest\n").unwrap() + "end-manifest\n".len();
+        let (head, body) = text.split_at(cut);
+        let pos = cut + body.find(|ch: char| ch.is_ascii_digit()).unwrap();
+        let mut tampered = text.clone().into_bytes();
+        tampered[pos] = if tampered[pos] == b'9' { b'8' } else { tampered[pos] + 1 };
+        let tampered = String::from_utf8(tampered).unwrap();
+        assert_eq!(tampered.len(), text.len());
+        assert_eq!(&tampered[..cut], head);
+
+        let reply = c.push_raw(&tampered);
+        assert!(reply.starts_with("err push-artifact:"), "{reply}");
+        assert!(reply.contains("checksum"), "tamper reason must name the checksum: {reply}");
+
+        // the never-staged v2 cannot be activated either
+        let reply = c.ask("activate champ@v2");
+        assert!(reply.starts_with("err") && reply.contains("no staged artifact"), "{reply}");
+
+        // the replica still serves v1, bit-identically, with an empty
+        // staging area
+        assert_eq!(c.ask(&format!("decision {q}")), v1_reply);
+        let status = c.ask("fleet-status");
+        assert!(status.contains("champ@v1"), "{status}");
+        assert!(status.contains("staged=0"), "{status}");
+        assert_eq!(c.ask("shutdown"), "ok bye");
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ----------------------------------------------- acceptance: rollback
+
+/// Push v1 then v2 across two replicas; `rollback` restores v1
+/// fleet-wide and the decision values return bit-identically to the
+/// v1 answers (registry version tags move forward — the swap counter
+/// is monotonic — but the served function is v1's).
+#[test]
+fn rollback_restores_previous_version_fleet_wide() {
+    let (model, split) = trained();
+    let mut m2 = copy_of(&model);
+    m2.bias += 1.0; // guaranteed-different decisions
+    let d0 = scratch("rb0");
+    let d1 = scratch("rb1");
+    let (l0, a0) = bind();
+    let (l1, a1) = bind();
+    let eps = vec![a0.to_string(), a1.to_string()];
+    std::thread::scope(|s| {
+        s.spawn(|| replica_serve(l0, &d0));
+        s.spawn(|| replica_serve(l1, &d1));
+        let mut ctl = Controller::new(eps.clone(), Duration::from_secs(10));
+        for o in ctl.push(&wrap(1, &model), true) {
+            assert_eq!(o.result, Ok(1), "{}", o.endpoint);
+        }
+
+        let q = fmt_row(split.test.x.row(0));
+        let mut c0 = Client::connect(a0);
+        let mut c1 = Client::connect(a1);
+        let v1_f = decision_of(&c0.ask(&format!("decision {q}")));
+        assert_eq!(decision_of(&c1.ask(&format!("decision {q}"))), v1_f);
+
+        for o in ctl.push(&wrap(2, &m2), true) {
+            assert_eq!(o.result, Ok(2), "{}", o.endpoint);
+        }
+        let v2_f = decision_of(&c0.ask(&format!("decision {q}")));
+        assert_ne!(v2_f, v1_f, "v2 must serve a different function");
+
+        for o in ctl.rollback("champ") {
+            assert_eq!(o.result, Ok(1), "{}", o.endpoint);
+        }
+        for ep in &eps {
+            assert_eq!(ctl.acked(ep, "champ"), Some(1));
+        }
+        assert_eq!(decision_of(&c0.ask(&format!("decision {q}"))), v1_f);
+        assert_eq!(decision_of(&c1.ask(&format!("decision {q}"))), v1_f);
+
+        // both replicas report v1 active with v2 as the rollback's
+        // own last-good (a rollback can itself be rolled back)
+        for (ep, line) in ctl.status() {
+            let line = line.unwrap();
+            assert!(line.contains("champ@v1:lg=2"), "{ep}: {line}");
+        }
+        assert_eq!(c0.ask("shutdown"), "ok bye");
+        assert_eq!(c1.ask("shutdown"), "ok bye");
+    });
+    let _ = std::fs::remove_dir_all(&d0);
+    let _ = std::fs::remove_dir_all(&d1);
+}
+
+// ------------------------------------------ acceptance: auto-rollback
+
+/// The controller's registry-level auto-rollback hook: quiet while no
+/// feedback window exists, fires fleet-wide once served feedback
+/// degrades a replica's accuracy window below the threshold.
+#[test]
+fn auto_rollback_fires_on_degraded_accuracy_window() {
+    let (model, split) = trained();
+    let mut m2 = copy_of(&model);
+    m2.bias += 1.0;
+    let dir = scratch("auto");
+    let (l, addr) = bind();
+    std::thread::scope(|s| {
+        s.spawn(|| replica_serve(l, &dir));
+        let mut ctl = Controller::new(vec![addr.to_string()], Duration::from_secs(10));
+        assert_eq!(ctl.push(&wrap(1, &model), true)[0].result, Ok(1));
+        assert_eq!(ctl.push(&wrap(2, &m2), true)[0].result, Ok(2));
+
+        // healthy (no feedback yet → no accuracy window): stays quiet
+        assert!(ctl.maybe_auto_rollback("champ", 0.9).is_none());
+
+        // label-contradicting traffic: every feedback is a miss, the
+        // window accuracy pins to zero
+        let mut c = Client::connect(addr);
+        for i in 0..8 {
+            let row = fmt_row(split.test.x.row(i));
+            let pred = c.ask(&format!("predict {row}"));
+            assert!(pred.starts_with("ok "), "{pred}");
+            let label: f64 =
+                pred.split_ascii_whitespace().nth(1).unwrap().parse().unwrap();
+            let wrong = if label > 0.0 { "-1" } else { "+1" };
+            let fb = c.ask(&format!("feedback {wrong} {row}"));
+            assert!(fb.starts_with("ok miss"), "{fb}");
+        }
+        let status = c.ask("fleet-status");
+        assert!(status.contains("acc=0.0000"), "{status}");
+
+        let outs = ctl
+            .maybe_auto_rollback("champ", 0.9)
+            .expect("degraded window must trigger the rollback");
+        assert_eq!(outs[0].result, Ok(1));
+        let status = c.ask("fleet-status");
+        assert!(status.contains("champ@v1"), "{status}");
+        assert_eq!(c.ask("shutdown"), "ok bye");
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}

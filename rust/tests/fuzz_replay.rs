@@ -22,6 +22,7 @@ use std::path::Path;
 use mmbsgd::config::{ServeConfig, TomlDoc, TrainConfig};
 use mmbsgd::data::synth::{dataset, SynthSpec};
 use mmbsgd::data::libsvm;
+use mmbsgd::fleet::{Artifact, Provenance};
 use mmbsgd::model::SvmModel;
 use mmbsgd::rng::Xoshiro256;
 use mmbsgd::runtime::NativeBackend;
@@ -99,6 +100,14 @@ fn parse_libsvm(text: &str) -> Result<(), String> {
     libsvm::parse(text, None).map(|_| ()).map_err(|e| e.to_string())
 }
 
+/// The full fleet-artifact gate: manifest parse (incl. the per-section
+/// checksum) plus the model/manifest cross-check — a corpus file is
+/// "ok" only when a replica would actually stage-and-activate it.
+fn parse_manifest(text: &str) -> Result<(), String> {
+    let artifact = Artifact::parse(text).map_err(|e| e.to_string())?;
+    artifact.validate_model().map(|_| ()).map_err(|e| e.to_string())
+}
+
 #[test]
 fn checkpoint_corpus_replays_typed() {
     replay("checkpoint", parse_checkpoint);
@@ -117,6 +126,21 @@ fn toml_corpus_replays_typed() {
 #[test]
 fn libsvm_corpus_replays_typed() {
     replay("libsvm", parse_libsvm);
+}
+
+/// The `ok_*` manifest seeds carry `fnv=` checksums computed by an
+/// independent implementation of the seeded-FNV + SplitMix64 digest
+/// (outside this codebase), so this replay also pins
+/// `durable::checksum` cross-process: any drift in the hash breaks
+/// the seeds.
+#[test]
+fn manifest_corpus_replays_typed() {
+    // the digest itself first, against independently computed goldens
+    use mmbsgd::util::durable::checksum;
+    assert_eq!(checksum(b""), 0x1c987589c237443a);
+    assert_eq!(checksum(b"mmbsgd"), 0x0f91a5a70155131a);
+    assert_eq!(checksum(b"mmbsgd-model v1\n"), 0x41915b133a2b5d5b);
+    replay("manifest", parse_manifest);
 }
 
 /// Protocol corpus files hold one line per case (comments start with
@@ -249,6 +273,11 @@ fn libsvm_mutations_never_panic() {
     mutation_sweep("libsvm", 300, parse_libsvm);
 }
 
+#[test]
+fn manifest_mutations_never_panic() {
+    mutation_sweep("manifest", 300, parse_manifest);
+}
+
 // ------------------------------------------------- round-trip fixed points
 
 fn tiny_cfg() -> TrainConfig {
@@ -291,6 +320,21 @@ fn model_text_roundtrip_is_a_fixed_point() {
     let text = model.to_text();
     let reparsed = SvmModel::from_text(&text).expect("own emitter output parses");
     assert_eq!(reparsed.to_text(), text, "emit→parse→emit drifted");
+}
+
+/// Artifact bundles are a fixed point too: wrap→emit→parse→emit is
+/// byte-identical, so a re-packaged pushed bundle can never drift.
+#[test]
+fn artifact_text_roundtrip_is_a_fixed_point() {
+    let split = dataset(&SynthSpec::ijcnn_like(0.01), 3);
+    let model = bsgd::train(&split.train, &tiny_cfg()).expect("train").model;
+    let cfg = tiny_cfg();
+    let a = Artifact::wrap("champ", 9, &model, Provenance::from_config(&cfg), "lut", "auto")
+        .expect("wrap");
+    let text = a.to_text();
+    let b = Artifact::parse(&text).expect("own emitter output parses");
+    assert_eq!(b.to_text(), text, "wrap→emit→parse→emit drifted");
+    b.validate_model().expect("reparsed bundle validates");
 }
 
 // ------------------------------------------------- live-engine fuzz
