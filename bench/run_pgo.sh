@@ -1,0 +1,88 @@
+#!/usr/bin/env bash
+# Profile-guided-optimization build recipe for the mmbsgd binary.
+#
+# Usage:
+#   bench/run_pgo.sh [--dry-run] [TARGET_DIR]
+#
+# Phases:
+#   1. build with -Cprofile-generate (instrumented binary)
+#   2. run representative training workloads (the tile-engine and
+#      merge-scoring hot paths the benches measure) to collect profiles
+#   3. merge raw profiles with llvm-profdata
+#   4. rebuild with -Cprofile-use
+#
+# --dry-run prints every command without executing anything — the CI
+# smoke for this recipe (the full PGO cycle needs two release builds
+# and is a local/perf-lab workflow, not a per-PR one).
+#
+# llvm-profdata discovery: LLVM_PROFDATA env var, a rustup-distributed
+# llvm-tools copy, or PATH.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+DRY=0
+if [ "${1:-}" = "--dry-run" ]; then
+    DRY=1
+    shift
+fi
+PGO_DIR="${1:-/tmp/mmbsgd-pgo}"
+
+run() {
+    echo "+ $*"
+    if [ "$DRY" -eq 0 ]; then
+        "$@"
+    fi
+}
+
+find_profdata() {
+    if [ -n "${LLVM_PROFDATA:-}" ]; then
+        echo "$LLVM_PROFDATA"
+        return
+    fi
+    local sysroot tool
+    if sysroot="$(rustc --print sysroot 2>/dev/null)"; then
+        tool="$(find "$sysroot" -name llvm-profdata -type f 2>/dev/null | head -n1)"
+        if [ -n "$tool" ]; then
+            echo "$tool"
+            return
+        fi
+    fi
+    echo llvm-profdata
+}
+
+PROFDATA="$(find_profdata)"
+echo "[pgo] profile dir: $PGO_DIR"
+echo "[pgo] llvm-profdata: $PROFDATA"
+
+run rm -rf "$PGO_DIR"
+run mkdir -p "$PGO_DIR"
+
+# Phase 1: instrumented build.
+run env RUSTFLAGS="-Cprofile-generate=$PGO_DIR" \
+    cargo build --release --manifest-path rust/Cargo.toml
+
+BIN=rust/target/release/mmbsgd
+
+# Phase 2: representative workloads.  Two synthetic-twin trainings
+# cover the SGD margin loop, the tile engine, merge scoring (LUT and
+# exact), and maintenance; the evaluate pass covers batched serving
+# margins.  Small budgets keep the whole phase under a minute.
+run "$BIN" train --dataset ijcnn --scale 0.05 --budget 128 --mergees 4 \
+    --epochs 1 --seed 7 --threads 2 --quiet --save /tmp/mmbsgd-pgo-model.txt
+run "$BIN" train --dataset adult --scale 0.05 --budget 64 --mergees 2 \
+    --merge-score-mode exact --epochs 1 --seed 8 --threads 1 --quiet
+run "$BIN" train --dataset ijcnn --scale 0.05 --budget 128 --mergees 4 \
+    --epochs 1 --seed 7 --threads 2 --exp-mode vector --quiet
+run "$BIN" evaluate --model /tmp/mmbsgd-pgo-model.txt --dataset ijcnn \
+    --scale 0.05 --threads 2
+
+# Phase 3: merge raw profiles.
+run "$PROFDATA" merge -o "$PGO_DIR/merged.profdata" "$PGO_DIR"
+
+# Phase 4: optimized build.
+run env RUSTFLAGS="-Cprofile-use=$PGO_DIR/merged.profdata" \
+    cargo build --release --manifest-path rust/Cargo.toml
+
+echo "[pgo] done: $BIN built with profile-use"
+echo "[pgo] compare: cargo bench --bench hot_paths, then scripts/perf_compare.sh"

@@ -265,6 +265,29 @@ fn main() {
         }
     }
 
+    if enabled("exp_vector") {
+        group("exponent substrate: vectorized polynomial vs libm exp");
+        let mut rng = Xoshiro256::new(31);
+        for &n in &[32usize, 128, 512] {
+            // arguments span the whole live range [0, EXP_NEG_CUTOFF):
+            // everything past the cutoff is branch-skipped before the
+            // exp on both sides, so it never reaches either evaluator
+            let args: Vec<f64> = (0..n).map(|_| rng.next_f64() * EXP_NEG_CUTOFF).collect();
+            bench(&format!("exp_vector/libm/n{n}"), 200, || {
+                let mut s = 0.0;
+                for &e in &args {
+                    s += (-e).exp();
+                }
+                s
+            });
+            let mut out = vec![0.0f64; n];
+            bench(&format!("exp_vector/vector/n{n}"), 200, || {
+                simd::exp_neg_block(&args, &mut out);
+                out.iter().sum::<f64>()
+            });
+        }
+    }
+
     if enabled("merge_scores") {
         group("merge_scores (the paper's Θ(B·K·G) bottleneck): lut vs exact");
         // Build the table outside every timed region.
@@ -637,6 +660,16 @@ fn main() {
         {
             println!("batched-exp speedup at {shape}: {s:.2}x");
             derived.push((format!("speedup/exp_batched_vs_inline/{shape}"), s));
+        }
+    }
+    // Exponent-substrate acceptance ratios (ISSUE 8 gate: 3 block
+    // sizes): vectorized polynomial exp vs the libm loop.
+    for &n in &[32usize, 128, 512] {
+        if let Some(s) =
+            ratio(&format!("exp_vector/libm/n{n}"), &format!("exp_vector/vector/n{n}"))
+        {
+            println!("vector-exp speedup at n={n}: {s:.2}x");
+            derived.push((format!("speedup/exp_vector_vs_libm/n{n}"), s));
         }
     }
     // Fleet acceptance metrics (ISSUE 7 gate): artifact trust-path

@@ -13,6 +13,8 @@
 //! choice, G=30 iterations, 1/φ) are kept in lock-step — the
 //! backend-equivalence test depends on it.
 
+use crate::kernel::simd;
+
 /// 1/φ.
 pub const INVPHI: f64 = 0.618_033_988_749_894_9;
 
@@ -20,9 +22,14 @@ pub const INVPHI: f64 = 0.618_033_988_749_894_9;
 pub const GS_ITERS: usize = 30;
 
 /// g(h): the merged coefficient as a function of the line parameter.
+/// Exponents route through the mode-aware [`simd::exp_neg`]
+/// (`exp_mode = vector` evaluates the polynomial substrate here too,
+/// so merge scoring and margins agree on one exp approximation; the
+/// arguments are `c·(1-h)²` and `c·h²` ≥ 0, within the substrate's
+/// clamped domain for every probe interval `h ∈ [-1, 2]`).
 #[inline]
 pub fn merge_objective(h: f64, a_i: f64, a_j: f64, c: f64) -> f64 {
-    a_i * (-c * (1.0 - h) * (1.0 - h)).exp() + a_j * (-c * h * h).exp()
+    a_i * simd::exp_neg(c * (1.0 - h) * (1.0 - h)) + a_j * simd::exp_neg(c * h * h)
 }
 
 /// Golden-section max of |g| on [lo, hi]; returns (h*, |g(h*)|).
@@ -101,7 +108,7 @@ pub fn merge_pair_params(a_i: f64, a_j: f64, c: f64, iters: usize) -> PairMerge 
         }
     };
     let a_z = merge_objective(h, a_i, a_j, c);
-    let k_ij = (-c).exp();
+    let k_ij = simd::exp_neg(c);
     let wd = a_i * a_i + a_j * a_j + 2.0 * a_i * a_j * k_ij - gabs * gabs;
     PairMerge { h, a_z, wd }
 }

@@ -113,6 +113,17 @@ impl MergeLut {
     }
 
     /// The process-wide table at default resolution, built on first use.
+    ///
+    /// Node construction runs [`golden::merge_objective`], which is
+    /// `exp_mode`-aware — so the table reflects whatever exponent path
+    /// is active at *first use*.  That is by design: `exp_mode` is a
+    /// process-startup knob (the CLI applies it before any scoring),
+    /// the two tables differ by ≤ the substrate's 1e-6 exp bound (far
+    /// below the interpolation tolerance), and within a process every
+    /// comparison sees one consistent table.  Vector-mode tables are
+    /// additionally identical across ISAs — the polynomial is
+    /// ISA-independent — so vector-mode runs reproduce bit-identically
+    /// on heterogeneous fleets.
     pub fn global() -> &'static MergeLut {
         GLOBAL_LUT.get_or_init(|| MergeLut::new(DEFAULT_C_STEPS, DEFAULT_R_STEPS))
     }
@@ -173,7 +184,7 @@ impl MergeLut {
         let hc = self.lookup_h(c, sub / dom);
         let h = if swap { 1.0 - hc } else { hc };
         let a_z = golden::merge_objective(h, a_i, a_j, c);
-        let k_ij = (-c).exp();
+        let k_ij = crate::kernel::simd::exp_neg(c);
         let wd = (a_i * a_i + a_j * a_j + 2.0 * a_i * a_j * k_ij - a_z * a_z).max(0.0);
         PairMerge { h, a_z, wd }
     }

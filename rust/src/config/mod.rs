@@ -10,7 +10,7 @@ pub use toml::{TomlDoc, TomlError, TomlValue};
 
 use crate::budget::{MaintenanceKind, MergeScoreMode};
 use crate::error::TrainError;
-use crate::kernel::SimdMode;
+use crate::kernel::{ExpMode, SimdMode};
 use crate::serve::ShedPolicy;
 use anyhow::{bail, Context, Result};
 
@@ -97,6 +97,16 @@ pub struct TrainConfig {
     /// `simd_mode`, CLI `--simd-mode`; the `MMBSGD_FORCE_SCALAR`
     /// environment variable overrides both.
     pub simd_mode: SimdMode,
+    /// Exponent evaluation for the Gaussian hot paths: `libm` (the
+    /// platform `exp`, the default — preserves every libm-pinned
+    /// bit-exact invariant) or `vector` (the fixed-degree polynomial
+    /// substrate in [`crate::kernel::simd`], bit-identical across ISAs
+    /// and thread counts, within 1e-6 relative error of libm).  Like
+    /// `threads` and `simd_mode`, an execution knob of the machine —
+    /// NOT serialized into checkpoints.  TOML `exp_mode`, CLI
+    /// `--exp-mode`; the `MMBSGD_FORCE_LIBM` environment variable
+    /// overrides both.
+    pub exp_mode: ExpMode,
     /// Pending cost parameter C (paper Table 2 convention λ = 1/(n·C)),
     /// set by the TOML `c = ...` key or experiment specs.  Explicitly
     /// represented — no sentinel encoding in `lambda` — so a config
@@ -125,6 +135,7 @@ impl Default for TrainConfig {
             prune_eps: 0.0,
             threads: 1,
             simd_mode: SimdMode::Auto,
+            exp_mode: ExpMode::Libm,
             cost_c: None,
         }
     }
@@ -236,6 +247,11 @@ impl TrainConfig {
                     self.simd_mode = SimdMode::parse(s)
                         .with_context(|| format!("bad simd_mode {s:?} (auto|scalar)"))?;
                 }
+                "exp_mode" => {
+                    let s = val.as_str().context("exp_mode")?;
+                    self.exp_mode = ExpMode::parse(s)
+                        .with_context(|| format!("bad exp_mode {s:?} (libm|vector)"))?;
+                }
                 other => bail!("unknown [train] key {other:?}"),
             }
         }
@@ -275,6 +291,10 @@ pub struct ServeConfig {
     /// same semantics and strict parsing as the `[train]` key — a pure
     /// wall-clock knob, replies are bit-identical either way).
     pub simd_mode: SimdMode,
+    /// Exponent evaluation for the margins inner loops (`libm` |
+    /// `vector`; same semantics and strict parsing as the `[train]`
+    /// key).
+    pub exp_mode: ExpMode,
     /// Routing-hash seed: replicas that must agree on A/B assignment
     /// share a seed.
     pub seed: u64,
@@ -302,6 +322,7 @@ impl Default for ServeConfig {
             monitor_window: 256,
             threads: 1,
             simd_mode: SimdMode::Auto,
+            exp_mode: ExpMode::Libm,
             seed: 1,
             idle_timeout_secs: 300,
             max_line_bytes: 64 * 1024,
@@ -366,6 +387,11 @@ impl ServeConfig {
                     self.simd_mode = SimdMode::parse(s)
                         .with_context(|| format!("bad simd_mode {s:?} (auto|scalar)"))?;
                 }
+                "exp_mode" => {
+                    let s = val.as_str().context("exp_mode")?;
+                    self.exp_mode = ExpMode::parse(s)
+                        .with_context(|| format!("bad exp_mode {s:?} (libm|vector)"))?;
+                }
                 "seed" => self.seed = toml_count(val, "seed")?,
                 "idle_timeout_secs" => {
                     self.idle_timeout_secs = toml_count(val, "idle_timeout_secs")?
@@ -407,6 +433,12 @@ pub struct FleetConfig {
     pub min_window_acc: f64,
     /// Replica artifact directory (`mmbsgd serve --fleet-dir`).
     pub dir: String,
+    /// Artifact generations retained per model name in `dir`: the
+    /// newest `keep` versioned archives (`<name>.artifact.v<k>`)
+    /// survive garbage collection after each activation; older ones
+    /// are deleted.  Must be ≥ 1 — the active generation is always
+    /// kept.  TOML `keep`, CLI `--fleet-keep`.
+    pub keep: usize,
 }
 
 impl Default for FleetConfig {
@@ -420,6 +452,7 @@ impl Default for FleetConfig {
             push_timeout_ms: 5_000,
             min_window_acc: 0.0,
             dir: "fleet-artifacts".into(),
+            keep: 3,
         }
     }
 }
@@ -455,6 +488,9 @@ impl FleetConfig {
                 format!("must be in 0..=1, got {}", self.min_window_acc),
             );
         }
+        if self.keep == 0 {
+            return bad("keep", "must be >= 1 (the active generation is always kept)".into());
+        }
         Ok(())
     }
 
@@ -479,6 +515,7 @@ impl FleetConfig {
                     self.min_window_acc = val.as_f64().context("min_window_acc")?
                 }
                 "dir" => self.dir = val.as_str().context("dir")?.to_string(),
+                "keep" => self.keep = toml_count_usize(val, "keep")?,
                 other => bail!("unknown [fleet] key {other:?}"),
             }
         }
@@ -615,6 +652,45 @@ mod tests {
         let mut scfg = ServeConfig::default();
         scfg.apply_toml(&doc).unwrap();
         assert_eq!(scfg.simd_mode, SimdMode::Scalar);
+    }
+
+    #[test]
+    fn exp_mode_defaults_to_libm_and_parses_strictly() {
+        assert_eq!(TrainConfig::default().exp_mode, ExpMode::Libm);
+        assert_eq!(ServeConfig::default().exp_mode, ExpMode::Libm);
+        let doc = TomlDoc::parse("[train]\nexp_mode = \"vector\"\n").unwrap();
+        let mut cfg = TrainConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.exp_mode, ExpMode::Vector);
+        let doc = TomlDoc::parse("[serve]\nexp_mode = \"vector\"\n").unwrap();
+        let mut scfg = ServeConfig::default();
+        scfg.apply_toml(&doc).unwrap();
+        assert_eq!(scfg.exp_mode, ExpMode::Vector);
+        // unknown values fail at parse time in both sections
+        let doc = TomlDoc::parse("[train]\nexp_mode = \"fast\"\n").unwrap();
+        assert!(TrainConfig::default().apply_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[serve]\nexp_mode = \"poly\"\n").unwrap();
+        assert!(ServeConfig::default().apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn fleet_keep_defaults_overlays_and_validates() {
+        assert_eq!(FleetConfig::default().keep, 3);
+        let doc = TomlDoc::parse("[fleet]\nkeep = 5\n").unwrap();
+        let mut cfg = FleetConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.keep, 5);
+        cfg.validate().unwrap();
+        // keep = 0 would delete the active generation; rejected
+        use crate::error::TrainError;
+        cfg.keep = 0;
+        match cfg.validate() {
+            Err(TrainError::InvalidConfig { field, .. }) => assert_eq!(field, "keep"),
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
+        // fractional counts fail at parse time like every other count key
+        let doc = TomlDoc::parse("[fleet]\nkeep = 2.5\n").unwrap();
+        assert!(FleetConfig::default().apply_toml(&doc).is_err());
     }
 
     #[test]

@@ -44,6 +44,10 @@ pub struct ReplicaState {
     dir: PathBuf,
     staged: BTreeMap<(String, u64), Artifact>,
     active: BTreeMap<String, ActiveInfo>,
+    /// Archived generations retained per model name (`--fleet-keep`,
+    /// `[fleet] keep`); the newest `keep` versioned archives survive
+    /// [`Self::gc`], older ones are deleted.
+    keep: usize,
 }
 
 impl ReplicaState {
@@ -58,12 +62,79 @@ impl ReplicaState {
             dir: dir.to_path_buf(),
             staged: BTreeMap::new(),
             active: BTreeMap::new(),
+            keep: 3,
         })
+    }
+
+    /// Override the archived-generation retention depth.  Clamped to a
+    /// minimum of 1: the active generation's archive is always kept.
+    pub fn with_keep(mut self, keep: usize) -> Self {
+        self.keep = keep.max(1);
+        self
     }
 
     /// On-disk path of a name's activated bundle.
     pub fn artifact_path(&self, name: &str) -> PathBuf {
         self.dir.join(format!("{name}.artifact"))
+    }
+
+    /// On-disk path of one archived generation (`<name>.artifact.v<k>`).
+    /// The `v<k>` extension keeps archives invisible to the
+    /// `.artifact`-suffix scan [`Self::recover`] performs.
+    pub fn version_path(&self, name: &str, version: u64) -> PathBuf {
+        self.dir.join(format!("{name}.artifact.v{version}"))
+    }
+
+    /// Archive one generation (idempotent: archives are immutable, an
+    /// existing file is left alone) and prune generations beyond the
+    /// retention depth.  Best-effort on purpose — the registry already
+    /// serves the model and the primary bundle is durably on disk, so
+    /// an archival or GC failure must never fail the activation that
+    /// triggered it.  Returns the versions GC deleted (for logging and
+    /// tests).
+    fn archive_and_gc(&self, artifact: &Artifact) -> Vec<u64> {
+        let path = self.version_path(&artifact.name, artifact.version);
+        if !path.exists() {
+            let _ = artifact.save(&path);
+        }
+        self.gc(&artifact.name)
+    }
+
+    /// Delete all but the newest `keep` archived generations of `name`
+    /// (each with its `.prev` rotation).  The activated
+    /// `<name>.artifact` primary and its `.prev` last-good are never
+    /// candidates — GC only ever touches `<name>.artifact.v<k>` files —
+    /// and the currently *active* version's archive is exempt even when
+    /// it is old (a rollback far back must not eat its own archive).
+    fn gc(&self, name: &str) -> Vec<u64> {
+        let prefix = format!("{name}.artifact.v");
+        let mut versions: Vec<u64> = match std::fs::read_dir(&self.dir) {
+            Ok(rd) => rd
+                .filter_map(|e| e.ok())
+                .filter_map(|e| e.file_name().into_string().ok())
+                .filter_map(|f| {
+                    let f = f.strip_suffix(".prev").unwrap_or(&f);
+                    f.strip_prefix(&prefix).and_then(|v| v.parse::<u64>().ok())
+                })
+                .collect(),
+            Err(_) => return Vec::new(),
+        };
+        versions.sort_unstable();
+        versions.dedup();
+        if versions.len() <= self.keep {
+            return Vec::new();
+        }
+        let active_v = self.active.get(name).map(|a| a.version);
+        let cut = versions.len() - self.keep;
+        let mut deleted: Vec<u64> =
+            versions[..cut].iter().copied().filter(|v| Some(*v) != active_v).collect();
+        for &v in &deleted {
+            let p = self.version_path(name, v);
+            let _ = std::fs::remove_file(durable::prev_path(&p));
+            let _ = std::fs::remove_file(p);
+        }
+        deleted.reverse(); // newest first, like the retention order
+        deleted
     }
 
     /// Activation info for a name.
@@ -127,6 +198,10 @@ impl ReplicaState {
             self.active
                 .insert(artifact.name.clone(), ActiveInfo { version: artifact.version, last_good });
             recovered.push((artifact.name.clone(), artifact.version));
+            // converge the archive set on startup too: a dir written by
+            // an older build (or a lowered --fleet-keep) gets its
+            // backlog archived and pruned without waiting for a push
+            self.archive_and_gc(&artifact);
         }
         (recovered, failed)
     }
@@ -187,6 +262,7 @@ impl FleetHandler for ReplicaState {
         }
         let last_good = self.active.get(name).map(|a| a.version);
         self.active.insert(name.to_string(), ActiveInfo { version, last_good });
+        self.archive_and_gc(&artifact);
         format!("ok active {name}@v{version} registry=v{registry_version}")
     }
 
@@ -229,6 +305,7 @@ impl FleetHandler for ReplicaState {
             return format!("err rollback: serving v{version} but persist failed: {e}");
         }
         self.active.insert(name.to_string(), ActiveInfo { version, last_good: rolled_from });
+        self.archive_and_gc(&artifact);
         format!("ok rollback {name}@v{version} registry=v{registry_version}")
     }
 
@@ -348,6 +425,73 @@ mod tests {
         let r = rep.rollback(&mut reg, "champ");
         assert!(r.starts_with("err") && r.contains("no last-good"), "{r}");
         assert_eq!(reg.version_of("champ").unwrap(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Sorted archived versions of `name` present on disk (ignoring
+    /// `.prev` rotations).
+    fn archived(rep: &ReplicaState, name: &str, upto: u64) -> Vec<u64> {
+        (1..=upto).filter(|&v| rep.version_path(name, v).exists()).collect()
+    }
+
+    #[test]
+    fn activation_archives_generations_and_gc_keeps_newest() {
+        let dir = scratch("gc");
+        let mut rep = ReplicaState::new(&dir).unwrap().with_keep(3);
+        let mut reg = registry();
+        for v in 1..=6 {
+            rep.push_artifact(&mut reg, &artifact(v, 0.1 * v as f64).to_text());
+            let r = rep.activate(&mut reg, "champ", v);
+            assert!(r.starts_with("ok active"), "{r}");
+        }
+        // newest 3 generations survive, the primary is untouched
+        assert_eq!(archived(&rep, "champ", 6), vec![4, 5, 6]);
+        assert!(rep.artifact_path("champ").exists());
+        // archives are loadable bundles, not copies of the primary name
+        let a = Artifact::load(&rep.version_path("champ", 5)).unwrap();
+        assert_eq!(a.version, 5);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_never_deletes_the_active_generation_archive() {
+        let dir = scratch("gc_active");
+        let mut rep = ReplicaState::new(&dir).unwrap().with_keep(1);
+        let mut reg = registry();
+        rep.push_artifact(&mut reg, &artifact(1, 0.1).to_text());
+        rep.activate(&mut reg, "champ", 1);
+        rep.push_artifact(&mut reg, &artifact(2, 0.2).to_text());
+        rep.activate(&mut reg, "champ", 2);
+        assert_eq!(archived(&rep, "champ", 2), vec![2]);
+        // rollback to v1: its archive is restored and exempt from GC
+        // even though v2's archive is newer
+        let r = rep.rollback(&mut reg, "champ");
+        assert!(r.starts_with("ok rollback champ@v1"), "{r}");
+        assert!(rep.version_path("champ", 1).exists(), "active archive deleted");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recover_ignores_archives_and_prunes_backlog() {
+        let dir = scratch("gc_recover");
+        {
+            let mut rep = ReplicaState::new(&dir).unwrap().with_keep(10);
+            let mut reg = registry();
+            for v in 1..=5 {
+                rep.push_artifact(&mut reg, &artifact(v, 0.1 * v as f64).to_text());
+                rep.activate(&mut reg, "champ", v);
+            }
+            assert_eq!(archived(&rep, "champ", 5), vec![1, 2, 3, 4, 5]);
+        }
+        // fresh process with a tighter retention: exactly one model is
+        // recovered (archives are not re-activated) and the backlog is
+        // pruned down to the new depth
+        let mut rep = ReplicaState::new(&dir).unwrap().with_keep(2);
+        let mut reg = registry();
+        let (recovered, failed) = rep.recover(&mut reg);
+        assert_eq!(recovered, vec![("champ".to_string(), 5)]);
+        assert!(failed.is_empty(), "{failed:?}");
+        assert_eq!(archived(&rep, "champ", 5), vec![4, 5]);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

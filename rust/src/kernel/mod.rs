@@ -9,7 +9,7 @@
 mod cache;
 pub mod simd;
 pub use cache::RowCache;
-pub use simd::{dot_block, Isa, SimdMode};
+pub use simd::{dot_block, ExpMode, Isa, SimdMode};
 
 /// A Mercer kernel over dense `f32` vectors.
 pub trait Kernel: Send + Sync {

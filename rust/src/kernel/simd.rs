@@ -46,6 +46,31 @@
 //!   everything — the CI dispatch-matrix smoke uses it);
 //! * [`set_mode`]`(SimdMode::Scalar)` — the `TrainConfig::simd_mode` /
 //!   `--simd-mode` plumbing.
+//!
+//! # The vectorized exponent substrate
+//!
+//! After the tile engine stripped the surviving-exponent pass into one
+//! contiguous loop, libm `exp` calls were the last scalar serial tail
+//! under every hot path.  [`exp_neg_block`] replaces them with a
+//! fixed-degree polynomial `e^{-x} = 2^{-k} · p(r)` (range reduction
+//! `t = x·log₂e`, `k = round(t)`, `r = t - k ∈ [-½, ½]`, degree-6
+//! near-minimax `p(r) ≈ 2^{-r}`), implemented per ISA over f64 lanes
+//! with the same no-FMA mul+add discipline as the dot kernels.  Unlike
+//! the dot substrate it is **not** bit-identical to the libm path it
+//! replaces — libm's `exp` is a different (platform-varying!)
+//! approximation — so it sits behind its own opt-in knob:
+//!
+//! * every dispatch target (scalar [`exp_neg_poly`] included) runs the
+//!   identical IEEE-754 f64 op sequence, so vector-mode results are
+//!   **bit-identical across ISAs and thread counts** — a vector-mode
+//!   run reproduces exactly on a heterogeneous fleet;
+//! * accuracy vs libm is *bounded*, not bitwise: max relative error
+//!   ≈ 6.2·10⁻⁹ over the whole live range `[0, EXP_NEG_CUTOFF)`
+//!   (budget 10⁻⁶, pinned in `rust/tests/simd_parity.rs`);
+//! * [`set_exp_mode`] / [`exp_mode`] select `libm` (default — preserves
+//!   every libm-pinned bit-exact invariant) or `vector`;
+//!   `MMBSGD_FORCE_LIBM=1` is the outermost escape hatch, and like
+//!   `threads`/`simd_mode` the knob is never checkpointed.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::OnceLock;
@@ -87,6 +112,39 @@ impl SimdMode {
     }
 }
 
+/// Exponent-path policy (`TrainConfig::exp_mode` / `ServeConfig::
+/// exp_mode`, TOML `exp_mode`, `--exp-mode`).  Selects how the hot
+/// paths evaluate `e^{-γd²}`; see the module docs for why `vector` is
+/// accuracy-bounded rather than bit-identical to `libm`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExpMode {
+    /// Per-element libm `exp` (the default): keeps results bit-identical
+    /// to every pre-existing pinned invariant (tile parity vs the
+    /// scalar margin loop, checkpoint resume `cmp`, serve parity).
+    #[default]
+    Libm,
+    /// The polynomial substrate ([`exp_neg_block`]): faster, ISA- and
+    /// thread-invariant bits, rel err ≤ 1e-6 vs libm on the live range.
+    Vector,
+}
+
+impl ExpMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "libm" => Some(Self::Libm),
+            "vector" => Some(Self::Vector),
+            _ => None,
+        }
+    }
+
+    pub fn describe(&self) -> &'static str {
+        match self {
+            Self::Libm => "libm",
+            Self::Vector => "vector",
+        }
+    }
+}
+
 /// The instruction set actually executing the kernel primitives.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Isa {
@@ -117,6 +175,16 @@ impl Isa {
 /// so a racing reader picking the stale path is still correct.
 static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
 
+/// Process-wide exponent-path flag ([`set_exp_mode`]).  `true` selects
+/// the polynomial substrate.  Relaxed ordering: the flag is a startup
+/// knob and both paths are valid; a racing reader picking the stale
+/// path still returns a correct (mode-consistent) exponent.
+static VECTOR_EXP: AtomicBool = AtomicBool::new(false);
+
+/// `MMBSGD_FORCE_LIBM` result, read once (same "env wins, sampled at
+/// first use" semantics as `MMBSGD_FORCE_SCALAR`).
+static FORCED_LIBM: OnceLock<bool> = OnceLock::new();
+
 /// Hardware detection result, cached after the first query (feature
 /// detection is a CPUID dance; the hot loops must not repeat it).
 static DETECTED: OnceLock<Isa> = OnceLock::new();
@@ -126,6 +194,13 @@ fn env_forced_scalar() -> bool {
         Ok(v) => !(v.is_empty() || v == "0"),
         Err(_) => false,
     }
+}
+
+fn env_forced_libm() -> bool {
+    *FORCED_LIBM.get_or_init(|| match std::env::var("MMBSGD_FORCE_LIBM") {
+        Ok(v) => !(v.is_empty() || v == "0"),
+        Err(_) => false,
+    })
 }
 
 #[cfg(target_arch = "x86_64")]
@@ -184,6 +259,25 @@ pub fn active_isa() -> Isa {
         Isa::Scalar
     } else {
         detected()
+    }
+}
+
+/// Apply a requested [`ExpMode`].  `MMBSGD_FORCE_LIBM` wins over
+/// `Vector` (the env var is the outermost escape hatch, mirroring
+/// `MMBSGD_FORCE_SCALAR`).  A startup knob like `set_mode`: flipping it
+/// mid-run changes which approximation later exponents use, so the CLI
+/// applies it once, before any training or serving work.
+pub fn set_exp_mode(mode: ExpMode) {
+    VECTOR_EXP.store(mode == ExpMode::Vector && !env_forced_libm(), Ordering::Relaxed);
+}
+
+/// The exponent path currently selected through [`set_exp_mode`] (env
+/// override applied) — printed in the `[perf ]` attribution line.
+pub fn exp_mode() -> ExpMode {
+    if VECTOR_EXP.load(Ordering::Relaxed) {
+        ExpMode::Vector
+    } else {
+        ExpMode::Libm
     }
 }
 
@@ -368,12 +462,109 @@ pub fn dot_block(q: &[f32], rows: &[f32], dim: usize, out: &mut [f64]) {
 }
 
 // ------------------------------------------------------------------
+// the vectorized exponent substrate
+// ------------------------------------------------------------------
+
+/// Inputs are clamped to `[0, EXP_ARG_MAX]` before range reduction.
+/// The upper clamp keeps the 2^{-k} exponent bit-trick inside normal
+/// f64 range (k ≤ 1022); every real caller passes `γd² <
+/// EXP_NEG_CUTOFF = 40` (plus golden-section probes up to `4c`), so
+/// the clamp never fires on live arguments.  Callers must not pass
+/// NaN (the per-ISA min/max NaN conventions differ); no caller can —
+/// arguments are products of finite norms, and the LUT scorer filters
+/// non-finite `c` before any exponent.
+const EXP_ARG_MAX: f64 = 708.0;
+
+/// 1.5·2⁵², the round-to-nearest-integer magic constant: for
+/// `t ∈ [0, 1022]`, `(t + EXP_MAGIC) - EXP_MAGIC` is `round(t)` and
+/// the low mantissa bits of `t + EXP_MAGIC` hold `round(t)` verbatim.
+const EXP_MAGIC: f64 = 6755399441055744.0;
+
+/// Degree-6 near-minimax polynomial for `2^{-r}` on `r ∈ [-½, ½]`
+/// (ascending powers; Chebyshev fit frozen to f64).  Max relative
+/// error of the full pipeline vs libm: ≈ 6.2·10⁻⁹ over `[0, 160]` —
+/// two orders under the 10⁻⁶ acceptance budget (EXPERIMENTS.md §Perf).
+const EXP_POLY: [f64; 7] = [
+    0.9999999999718422,
+    -0.6931472000626832,
+    0.2402265110131333,
+    -0.055503406807421427,
+    0.00961803994575737,
+    -0.001339527980070497,
+    0.00015465312332545763,
+];
+
+/// Scalar reference for the polynomial `e^{-x}` — the exact IEEE-754
+/// f64 op sequence every vector lane reproduces, so
+/// [`exp_neg_block`] is bit-identical to this on every ISA.  Public
+/// for the parity suite and benches; production code calls the
+/// mode-aware [`exp_neg`] / [`exp_neg_block`].
+#[inline]
+pub fn exp_neg_poly(x: f64) -> f64 {
+    let x = x.clamp(0.0, EXP_ARG_MAX);
+    let t = x * std::f64::consts::LOG2_E;
+    let m = t + EXP_MAGIC; // round-to-nearest(t), in the mantissa
+    let k = m.to_bits().wrapping_sub(EXP_MAGIC.to_bits()); // k ∈ [0, 1022]
+    let kf = m - EXP_MAGIC; // k as f64 (exact)
+    let r = t - kf; // r ∈ [-½, ½] (exact subtraction of nearby values)
+    // Horner with separately rounded mul + add — no FMA, same
+    // determinism contract as the dot kernels
+    let mut p = EXP_POLY[6];
+    for j in (0..6).rev() {
+        p = p * r + EXP_POLY[j];
+    }
+    // 2^{-k} assembled directly in the exponent field
+    let scale = f64::from_bits(1023u64.wrapping_sub(k) << 52);
+    p * scale
+}
+
+/// Mode-aware scalar `e^{-x}`: libm in the default mode, the
+/// polynomial under `exp_mode = vector`.  The one-shot twin of
+/// [`exp_neg_block`] for callers outside the tile engine (golden
+/// section, LUT nodes).
+#[inline]
+pub fn exp_neg(x: f64) -> f64 {
+    if VECTOR_EXP.load(Ordering::Relaxed) {
+        exp_neg_poly(x)
+    } else {
+        (-x).exp()
+    }
+}
+
+/// Vectorized `out[i] = e^{-args[i]}` over a contiguous block — the
+/// staged survivor pass of the tile engine.  Always evaluates the
+/// polynomial (callers branch on [`exp_mode`]); dispatched per ISA
+/// (AVX2: 4 f64 lanes, SSE2/NEON: 2) with the remainder on
+/// [`exp_neg_poly`].  Element-wise, no reduction — which is why,
+/// unlike the dot kernels, lane width cannot reorder anything and
+/// every ISA is bit-identical by construction.
+pub fn exp_neg_block(args: &[f64], out: &mut [f64]) {
+    assert_eq!(args.len(), out.len(), "exp_neg_block: args/out shape mismatch");
+    match active_isa() {
+        // SAFETY: see `dot_isa` — same detection guarantees.
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma => unsafe { x86::exp_neg_block_avx2(args, out) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => unsafe { x86::exp_neg_block_sse2(args, out) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { arm::exp_neg_block_neon(args, out) },
+        _ => {
+            for (o, &a) in out.iter_mut().zip(args) {
+                *o = exp_neg_poly(a);
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------
 // x86-64 paths
 // ------------------------------------------------------------------
 
 #[cfg(target_arch = "x86_64")]
 mod x86 {
-    use super::{finish_dot, finish_sq, BLOCK, LANES};
+    use super::{
+        exp_neg_poly, finish_dot, finish_sq, BLOCK, EXP_ARG_MAX, EXP_MAGIC, EXP_POLY, LANES,
+    };
     use std::arch::x86_64::*;
 
     /// # Safety
@@ -523,6 +714,85 @@ mod x86 {
             *o = finish_dot(lanes, &q[n..], &rows[r * dim + n..(r + 1) * dim]);
         }
     }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.  Bounds: trip
+    /// count from the shorter slice, remainder handled in scalar.
+    ///
+    /// Every lane runs the op sequence of [`super::exp_neg_poly`]
+    /// verbatim (min/max clamp, mul, add, sub, integer sub/shift — all
+    /// exactly specified per lane, no FMA), so the results are
+    /// bit-identical to the scalar reference.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn exp_neg_block_avx2(args: &[f64], out: &mut [f64]) {
+        const W: usize = 4;
+        let len = args.len().min(out.len());
+        let n = len - len % W;
+        let (pa, po) = (args.as_ptr(), out.as_mut_ptr());
+        let zero = _mm256_setzero_pd();
+        let arg_max = _mm256_set1_pd(EXP_ARG_MAX);
+        let log2e = _mm256_set1_pd(std::f64::consts::LOG2_E);
+        let magic = _mm256_set1_pd(EXP_MAGIC);
+        let magic_bits = _mm256_set1_epi64x(EXP_MAGIC.to_bits() as i64);
+        let bias = _mm256_set1_epi64x(1023);
+        let mut i = 0;
+        while i < n {
+            // clamp: max(x, 0) then min(·, ARG_MAX) — NaN-free domain
+            let x = _mm256_min_pd(_mm256_max_pd(_mm256_loadu_pd(pa.add(i)), zero), arg_max);
+            let t = _mm256_mul_pd(x, log2e);
+            let m = _mm256_add_pd(t, magic);
+            let k = _mm256_sub_epi64(_mm256_castpd_si256(m), magic_bits);
+            let kf = _mm256_sub_pd(m, magic);
+            let r = _mm256_sub_pd(t, kf);
+            // Horner, mul + add, NOT fmadd: the determinism contract
+            let mut p = _mm256_set1_pd(EXP_POLY[6]);
+            for j in (0..6).rev() {
+                p = _mm256_add_pd(_mm256_mul_pd(p, r), _mm256_set1_pd(EXP_POLY[j]));
+            }
+            let scale = _mm256_castsi256_pd(_mm256_slli_epi64::<52>(_mm256_sub_epi64(bias, k)));
+            _mm256_storeu_pd(po.add(i), _mm256_mul_pd(p, scale));
+            i += W;
+        }
+        for j in n..len {
+            out[j] = exp_neg_poly(args[j]);
+        }
+    }
+
+    /// # Safety
+    /// SSE2 is part of the x86-64 baseline; always safe there.  Bounds
+    /// and bit-identity: see [`exp_neg_block_avx2`] (2 f64 lanes here).
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn exp_neg_block_sse2(args: &[f64], out: &mut [f64]) {
+        const W: usize = 2;
+        let len = args.len().min(out.len());
+        let n = len - len % W;
+        let (pa, po) = (args.as_ptr(), out.as_mut_ptr());
+        let zero = _mm_setzero_pd();
+        let arg_max = _mm_set1_pd(EXP_ARG_MAX);
+        let log2e = _mm_set1_pd(std::f64::consts::LOG2_E);
+        let magic = _mm_set1_pd(EXP_MAGIC);
+        let magic_bits = _mm_set1_epi64x(EXP_MAGIC.to_bits() as i64);
+        let bias = _mm_set1_epi64x(1023);
+        let mut i = 0;
+        while i < n {
+            let x = _mm_min_pd(_mm_max_pd(_mm_loadu_pd(pa.add(i)), zero), arg_max);
+            let t = _mm_mul_pd(x, log2e);
+            let m = _mm_add_pd(t, magic);
+            let k = _mm_sub_epi64(_mm_castpd_si128(m), magic_bits);
+            let kf = _mm_sub_pd(m, magic);
+            let r = _mm_sub_pd(t, kf);
+            let mut p = _mm_set1_pd(EXP_POLY[6]);
+            for j in (0..6).rev() {
+                p = _mm_add_pd(_mm_mul_pd(p, r), _mm_set1_pd(EXP_POLY[j]));
+            }
+            let scale = _mm_castsi128_pd(_mm_slli_epi64::<52>(_mm_sub_epi64(bias, k)));
+            _mm_storeu_pd(po.add(i), _mm_mul_pd(p, scale));
+            i += W;
+        }
+        for j in n..len {
+            out[j] = exp_neg_poly(args[j]);
+        }
+    }
 }
 
 // ------------------------------------------------------------------
@@ -531,7 +801,9 @@ mod x86 {
 
 #[cfg(target_arch = "aarch64")]
 mod arm {
-    use super::{finish_dot, finish_sq, BLOCK, LANES};
+    use super::{
+        exp_neg_poly, finish_dot, finish_sq, BLOCK, EXP_ARG_MAX, EXP_MAGIC, EXP_POLY, LANES,
+    };
     use std::arch::aarch64::*;
 
     /// # Safety
@@ -609,6 +881,45 @@ mod arm {
             *o = finish_dot(lanes, &q[n..], &rows[r * dim + n..(r + 1) * dim]);
         }
     }
+
+    /// # Safety
+    /// NEON is mandatory on aarch64; always safe there.  Bounds: trip
+    /// count from the shorter slice, remainder in scalar.  Each of the
+    /// 2 f64 lanes runs [`super::exp_neg_poly`]'s op sequence verbatim
+    /// (no FMA), so results are bit-identical to the scalar reference.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn exp_neg_block_neon(args: &[f64], out: &mut [f64]) {
+        const W: usize = 2;
+        let len = args.len().min(out.len());
+        let n = len - len % W;
+        let (pa, po) = (args.as_ptr(), out.as_mut_ptr());
+        let zero = vdupq_n_f64(0.0);
+        let arg_max = vdupq_n_f64(EXP_ARG_MAX);
+        let log2e = vdupq_n_f64(std::f64::consts::LOG2_E);
+        let magic = vdupq_n_f64(EXP_MAGIC);
+        let magic_bits = vdupq_n_s64(EXP_MAGIC.to_bits() as i64);
+        let bias = vdupq_n_s64(1023);
+        let mut i = 0;
+        while i < n {
+            let x = vminq_f64(vmaxq_f64(vld1q_f64(pa.add(i)), zero), arg_max);
+            let t = vmulq_f64(x, log2e);
+            let m = vaddq_f64(t, magic);
+            let k = vsubq_s64(vreinterpretq_s64_f64(m), magic_bits);
+            let kf = vsubq_f64(m, magic);
+            let r = vsubq_f64(t, kf);
+            // vmul + vadd, not vfma: the determinism contract again
+            let mut p = vdupq_n_f64(EXP_POLY[6]);
+            for j in (0..6).rev() {
+                p = vaddq_f64(vmulq_f64(p, r), vdupq_n_f64(EXP_POLY[j]));
+            }
+            let scale = vreinterpretq_f64_s64(vshlq_n_s64::<52>(vsubq_s64(bias, k)));
+            vst1q_f64(po.add(i), vmulq_f64(p, scale));
+            i += W;
+        }
+        for j in n..len {
+            out[j] = exp_neg_poly(args[j]);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -648,5 +959,53 @@ mod tests {
         }
         // Isa labels are stable (they land in perf reports)
         assert_eq!(Isa::Avx2Fma.describe(), "avx2+fma");
+    }
+
+    #[test]
+    fn exp_mode_round_trip_and_default() {
+        assert_eq!(ExpMode::parse("libm"), Some(ExpMode::Libm));
+        assert_eq!(ExpMode::parse("vector"), Some(ExpMode::Vector));
+        assert_eq!(ExpMode::parse("poly"), None);
+        for m in [ExpMode::Libm, ExpMode::Vector] {
+            assert_eq!(ExpMode::parse(m.describe()), Some(m));
+        }
+        // libm is the default: it preserves every libm-pinned invariant
+        assert_eq!(ExpMode::default(), ExpMode::Libm);
+    }
+
+    #[test]
+    fn exp_block_bit_matches_scalar_poly_on_active_isa() {
+        // Ragged lengths exercise every vector width + remainder path.
+        for len in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 31, 128] {
+            let mut rng = crate::rng::Xoshiro256::new(len as u64 + 3);
+            let args: Vec<f64> = (0..len).map(|_| rng.next_f64() * 40.0).collect();
+            let mut out = vec![0.0f64; len];
+            exp_neg_block(&args, &mut out);
+            for (j, (&a, &o)) in args.iter().zip(&out).enumerate() {
+                assert_eq!(
+                    o.to_bits(),
+                    exp_neg_poly(a).to_bits(),
+                    "len={len} j={j} isa={:?}",
+                    active_isa()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exp_poly_tracks_libm_at_spot_values() {
+        // The full-range sweep lives in rust/tests/simd_parity.rs; spot
+        // values here keep the kernel honest under plain `cargo test`.
+        for x in [0.0f64, 1e-9, 0.25, 0.5, 1.0, 5.0, 17.3, 39.999_999_9] {
+            let got = exp_neg_poly(x);
+            let want = (-x).exp();
+            assert!(
+                (got - want).abs() <= 1e-6 * want,
+                "x={x}: poly {got:e} vs libm {want:e}"
+            );
+        }
+        // clamp semantics past the live range: monotone-ish, never inf/NaN
+        assert!(exp_neg_poly(1000.0) > 0.0 && exp_neg_poly(1000.0) < 1e-300);
+        assert_eq!(exp_neg_poly(-3.0).to_bits(), exp_neg_poly(0.0).to_bits());
     }
 }

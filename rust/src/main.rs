@@ -17,7 +17,7 @@
 use anyhow::{anyhow, bail, Context, Result};
 use mmbsgd::budget::{MaintenanceKind, MergeScoreMode};
 use mmbsgd::config::{BackendChoice, FleetConfig, ServeConfig, TomlDoc, TrainConfig};
-use mmbsgd::kernel::{simd, SimdMode};
+use mmbsgd::kernel::{simd, ExpMode, SimdMode};
 use mmbsgd::coordinator::{build_backend, ProgressObserver};
 use mmbsgd::data::synth::SynthSpec;
 use mmbsgd::data::{libsvm, split, Split};
@@ -154,6 +154,9 @@ fn train_config(args: &Args, split: &Split) -> Result<TrainConfig> {
     if let Some(mode) = parse_simd_flag(args)? {
         cfg.simd_mode = mode;
     }
+    if let Some(mode) = parse_exp_flag(args)? {
+        cfg.exp_mode = mode;
+    }
     cfg.resolve_c(split.train.len());
     cfg.validate()?;
     Ok(cfg)
@@ -166,6 +169,17 @@ fn parse_simd_flag(args: &Args) -> Result<Option<SimdMode>> {
         Some(s) => SimdMode::parse(s)
             .map(Some)
             .with_context(|| format!("bad --simd-mode {s:?} (auto|scalar)")),
+        None => Ok(None),
+    }
+}
+
+/// Parse an `--exp-mode` flag if present (`None` = flag absent) —
+/// same single-home convention as [`parse_simd_flag`].
+fn parse_exp_flag(args: &Args) -> Result<Option<ExpMode>> {
+    match args.get("exp-mode") {
+        Some(s) => ExpMode::parse(s)
+            .map(Some)
+            .with_context(|| format!("bad --exp-mode {s:?} (libm|vector)")),
         None => Ok(None),
     }
 }
@@ -200,6 +214,14 @@ fn apply_simd_mode(args: &Args, default: SimdMode) -> Result<()> {
     Ok(())
 }
 
+/// Apply an `--exp-mode` flag (default: the config's value) to the
+/// process-wide exponent dispatch.  `MMBSGD_FORCE_LIBM` overrides both
+/// (handled inside the kernel).
+fn apply_exp_mode(args: &Args, default: ExpMode) -> Result<()> {
+    simd::set_exp_mode(parse_exp_flag(args)?.unwrap_or(default));
+    Ok(())
+}
+
 /// Report the worker-thread count actually in effect plus the SIMD ISA
 /// and pool dispatch mode (the perf attribution lines), and warn when
 /// the request oversubscribes the machine — results are bit-identical
@@ -214,9 +236,10 @@ fn report_threads(requested: usize, effective: usize) {
         "inline".to_string()
     };
     println!(
-        "[perf ] simd isa: {} (mode {}) | pool: {pool}",
+        "[perf ] simd isa: {} (mode {}) | exp: {} | pool: {pool}",
         simd::active_isa().describe(),
         simd::mode().describe(),
+        simd::exp_mode().describe(),
     );
     if requested > avail {
         eprintln!(
@@ -327,7 +350,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         if let Some(mode) = parse_simd_flag(args)? {
             ck.config_mut().simd_mode = mode;
         }
+        if let Some(mode) = parse_exp_flag(args)? {
+            ck.config_mut().exp_mode = mode;
+        }
         simd::set_mode(ck.config().simd_mode);
+        simd::set_exp_mode(ck.config().exp_mode);
         backend = build_backend(ck.config().backend)?;
         report_threads(threads, backend.set_threads(threads));
         println!(
@@ -357,6 +384,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             cfg.backend,
         );
         simd::set_mode(cfg.simd_mode);
+        simd::set_exp_mode(cfg.exp_mode);
         backend = build_backend(cfg.backend)?;
         report_threads(cfg.threads, backend.set_threads(cfg.threads));
         TrainSession::new(cfg, backend.as_mut())?
@@ -392,6 +420,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 /// prediction stream).
 fn load_predictor(args: &Args) -> Result<(Predictor, usize, usize)> {
     apply_simd_mode(args, SimdMode::Auto)?;
+    apply_exp_mode(args, ExpMode::Libm)?;
     let model_path = args.get("model").context("--model required")?;
     let model = SvmModel::load(Path::new(model_path))?;
     let choice = match args.get("backend") {
@@ -455,11 +484,18 @@ fn parse_model_spec(spec: &str) -> Result<(String, String, u32)> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let mut scfg = ServeConfig::default();
+    // The replica-side artifact-GC depth comes from the same [fleet]
+    // TOML section the controller tools read (`keep`), overridable by
+    // --fleet-keep below; only consulted when --fleet-dir is given.
+    let mut fleet_keep = FleetConfig::default().keep;
     if let Some(path) = args.get("config") {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {path}"))?;
         let doc = TomlDoc::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
         scfg.apply_toml(&doc)?;
+        let mut fcfg = FleetConfig::default();
+        fcfg.apply_toml(&doc)?;
+        fleet_keep = fcfg.keep;
         install_fault_plan(&doc)?;
     }
     if let Some(a) = args.get("addr") {
@@ -480,11 +516,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(mode) = parse_simd_flag(args)? {
         scfg.simd_mode = mode;
     }
+    if let Some(mode) = parse_exp_flag(args)? {
+        scfg.exp_mode = mode;
+    }
     scfg.seed = args.get_parse("seed", scfg.seed)?;
     scfg.validate()?;
     simd::set_mode(scfg.simd_mode);
+    simd::set_exp_mode(scfg.exp_mode);
 
     let fleet_dir = args.get("fleet-dir").map(PathBuf::from);
+    fleet_keep = args.get_parse("fleet-keep", fleet_keep)?;
+    if fleet_keep == 0 {
+        bail!("--fleet-keep must be >= 1 (the active generation is always kept)");
+    }
     let specs = args.get_all("model");
     if specs.is_empty() && fleet_dir.is_none() {
         bail!("serve needs at least one --model name=path[:weight] (or --fleet-dir DIR)");
@@ -520,7 +564,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let mut replica = match &fleet_dir {
         Some(dir) => {
-            let mut rep = ReplicaState::new(dir)?;
+            let mut rep = ReplicaState::new(dir)?.with_keep(fleet_keep);
             let (recovered, failed) = rep.recover(&mut registry);
             for (name, version) in &recovered {
                 println!("[fleet] recovered {name}@v{version} from {}", dir.display());
@@ -754,6 +798,7 @@ fn fleet_config(args: &Args) -> Result<FleetConfig> {
     fcfg.probe_secs = args.get_parse("probe-secs", fcfg.probe_secs)?;
     fcfg.push_timeout_ms = args.get_parse("push-timeout-ms", fcfg.push_timeout_ms)?;
     fcfg.min_window_acc = args.get_parse("min-window-acc", fcfg.min_window_acc)?;
+    fcfg.keep = args.get_parse("fleet-keep", fcfg.keep)?;
     if let Some(d) = args.get("dir") {
         fcfg.dir = d.to_string();
     }
@@ -903,7 +948,7 @@ COMMANDS
                [--mergees M] [--maintenance removal|projection|merge[:M]|mergegd[:M]]
                [--backend native|xla|hybrid] [--merge-score-mode lut|exact]
                [--c F | --lambda F] [--gamma F] [--threads N]
-               [--simd-mode auto|scalar]
+               [--simd-mode auto|scalar] [--exp-mode libm|vector]
                [--epochs N] [--seed N] [--eval-every N] [--config file.toml]
                [--save model.txt] [--test libsvm-path] [--quiet]
                [--checkpoint ckpt.txt] [--checkpoint-every STEPS]
@@ -921,16 +966,17 @@ COMMANDS
                verifies the checksum and falls back to .prev when the
                primary is torn or corrupt.
   evaluate     --model model.txt --dataset <...> [--scale F] [--backend B]
-               [--threads N] [--simd-mode auto|scalar]
+               [--threads N] [--simd-mode auto|scalar] [--exp-mode libm|vector]
   predict      --model model.txt --input data.libsvm [--backend B] [--threads N]
-               [--simd-mode auto|scalar]
+               [--simd-mode auto|scalar] [--exp-mode libm|vector]
   serve        --model name=model.txt[:weight] [--model b=other.txt:1 ...]
                [--addr host:port] [--batch-max N] [--queue-max N]
                [--shed reject|oldest] [--monitor-window N] [--threads N]
                [--idle-timeout-secs N] [--max-line-bytes N]
                [--max-conns N] [--deadline-ms N]
-               [--simd-mode auto|scalar] [--seed N] [--backend B]
-               [--config file.toml] [--fleet-dir DIR]
+               [--simd-mode auto|scalar] [--exp-mode libm|vector]
+               [--seed N] [--backend B]
+               [--config file.toml] [--fleet-dir DIR] [--fleet-keep N]
                [--max-artifact-bytes N]
                long-lived TCP line-protocol server: micro-batched
                predict/decision, weighted deterministic A/B routing
@@ -976,7 +1022,15 @@ COMMANDS
                push-artifact/activate/rollback/fleet-status verbs and
                recovers activated artifacts from DIR at startup
                (falling back to the .prev last-good generation when a
-               primary is corrupt).
+               primary is corrupt).  Every activation archives the
+               generation as <name>.artifact.v<N>; --fleet-keep N (or
+               [fleet] keep, default 3) bounds how many generations
+               per model survive garbage collection.
+
+`--exp-mode vector` evaluates e^-x with the fixed-degree polynomial
+substrate (bit-identical across ISAs and thread counts, <= 1e-6
+relative error vs libm); `libm` (default) keeps the platform exp.
+MMBSGD_FORCE_LIBM overrides the flag and the TOML key.
 
 Synth dataset names: phishing, web, adult, ijcnn, skin (statistical twins
 of the paper's LIBSVM datasets; see DESIGN.md §3).

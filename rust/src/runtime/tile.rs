@@ -93,7 +93,7 @@ const MIN_LANES: usize = 128;
 
 /// SV rows staged per [`accumulate_rows`] / scoring chunk: enough to
 /// amortize the block micro-kernel's dispatch and keep the `exp` loop
-/// long, small enough that the three f64 staging buffers (3 KiB) are
+/// long, small enough that the four f64 staging buffers (4 KiB) are
 /// L1-resident next to the tile data.
 const ACC_CHUNK: usize = 128;
 
@@ -106,11 +106,17 @@ pub(crate) struct RowAccum {
     dots: [f64; ACC_CHUNK],
     coef: [f64; ACC_CHUNK],
     args: [f64; ACC_CHUNK],
+    exps: [f64; ACC_CHUNK],
 }
 
 impl RowAccum {
     pub(crate) fn new() -> Self {
-        Self { dots: [0.0; ACC_CHUNK], coef: [0.0; ACC_CHUNK], args: [0.0; ACC_CHUNK] }
+        Self {
+            dots: [0.0; ACC_CHUNK],
+            coef: [0.0; ACC_CHUNK],
+            args: [0.0; ACC_CHUNK],
+            exps: [0.0; ACC_CHUNK],
+        }
     }
 }
 
@@ -148,8 +154,12 @@ pub(crate) fn with_margin1_scratch<R>(f: impl FnOnce(&mut RowAccum) -> R) -> R {
 /// ([`sq_dist_cached_with_dot`] — same decision as the per-pair scalar
 /// path), far pairs dropped by the exact `γd² <` [`EXP_NEG_CUTOFF`]
 /// test, and one branch-free `exp` accumulation over the survivors in
-/// ascending-`j` order.  Bit-identical to the pre-SIMD per-pair loop on
-/// every dispatch target.
+/// ascending-`j` order.  Under the default `exp_mode = libm` this is
+/// bit-identical to the pre-SIMD per-pair loop on every dispatch
+/// target; under `exp_mode = vector` the survivors' exponents come from
+/// [`simd::exp_neg_block`] instead — bit-identical across ISAs and
+/// thread counts (element-wise exp + scalar ascending-`j` sum), within
+/// rel err 1e-6 of the libm path.
 pub(crate) fn accumulate_rows(
     svs: &SvStore,
     gamma: f64,
@@ -176,10 +186,22 @@ pub(crate) fn accumulate_rows(
                 live += 1;
             }
         }
-        // the vectorizable exp pass: no skip branch, survivors only,
-        // ascending-j accumulation order preserved
-        for (c, e) in scratch.coef[..live].iter().zip(&scratch.args[..live]) {
-            acc += c * (-e).exp();
+        // The staged exp pass: no skip branch, survivors only,
+        // ascending-j accumulation order preserved.  Under
+        // `exp_mode = vector` the exponents come from the ISA-dispatched
+        // polynomial block kernel; the multiply-accumulate stays scalar
+        // sequential either way — vectorizing the *sum* would make the
+        // reduction order depend on lane width and break cross-ISA
+        // bit-identity, which element-wise exponents cannot.
+        if simd::exp_mode() == simd::ExpMode::Vector {
+            simd::exp_neg_block(&scratch.args[..live], &mut scratch.exps[..live]);
+            for (c, x) in scratch.coef[..live].iter().zip(&scratch.exps[..live]) {
+                acc += c * x;
+            }
+        } else {
+            for (c, e) in scratch.coef[..live].iter().zip(&scratch.args[..live]) {
+                acc += c * (-e).exp();
+            }
         }
         j += m;
     }

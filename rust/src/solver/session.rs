@@ -108,9 +108,12 @@ impl<'b> TrainSession<'b> {
         // with bit-identical results for every setting, and embedding
         // them would make saved models / checkpoints byte-differ
         // across `--threads` / `--simd-mode` (the CLI prints the
-        // effective values per run instead).
+        // effective values per run instead).  The exp mode is the same
+        // kind of knob (vector mode changes results only within its
+        // documented 1e-6 accuracy envelope) and follows the same rule.
         backend.set_threads(cfg.threads);
         crate::kernel::simd::set_mode(cfg.simd_mode);
+        crate::kernel::simd::set_exp_mode(cfg.exp_mode);
         let mut model = SvmModel::new(0, cfg.gamma);
         model.meta = format!(
             "bsgd maintenance={} B={} seed={} backend={} score={}",
@@ -647,11 +650,13 @@ impl Checkpoint {
         // Provenance (`meta`) already records the original effective
         // scorer; just put the backend in the configured mode.  The
         // thread count and SIMD dispatch are execution details
-        // (results are invariant to both), so neither is checkpointed:
-        // resume runs with whatever the caller configured.
+        // (results are invariant to both), so neither is checkpointed —
+        // and neither is the exp mode: resume runs with whatever the
+        // caller configured.
         backend.set_merge_score_mode(self.cfg.merge_score_mode);
         backend.set_threads(self.cfg.threads);
         crate::kernel::simd::set_mode(self.cfg.simd_mode);
+        crate::kernel::simd::set_exp_mode(self.cfg.exp_mode);
         let mut budget = Budget::new(self.cfg.budget, self.cfg.maintenance_kind());
         budget.events = self.events;
         budget.total_wd = self.total_wd;

@@ -22,7 +22,7 @@
 
 use mmbsgd::config::TrainConfig;
 use mmbsgd::data::synth::{dataset, SynthSpec};
-use mmbsgd::kernel::{self, simd, SimdMode};
+use mmbsgd::kernel::{self, simd, ExpMode, SimdMode};
 use mmbsgd::model::SvStore;
 use mmbsgd::rng::Xoshiro256;
 use mmbsgd::runtime::{Backend, NativeBackend};
@@ -157,6 +157,93 @@ fn forced_scalar_mode_bit_matches_auto_on_kernels() {
     simd::set_mode(SimdMode::Auto);
 }
 
+/// True when the environment pins libm (`MMBSGD_FORCE_LIBM`): the
+/// vector-mode halves of the exp tests degenerate to libm-vs-libm and
+/// stay green, but assertions that *require* the polynomial to be
+/// active must be skipped.
+fn env_pins_libm() -> bool {
+    matches!(std::env::var("MMBSGD_FORCE_LIBM"), Ok(v) if !(v.is_empty() || v == "0"))
+}
+
+#[test]
+fn exp_poly_rel_err_bounded_over_gamma_d2_range() {
+    // The full γd² domain the hot paths can hand the substrate: a dense
+    // sweep of [0, EXP_NEG_CUTOFF) — everything past the cutoff is
+    // branch-skipped before any exp — plus a fine band straddling the
+    // cutoff boundary itself and the clamp region far beyond.
+    let check = |x: f64| {
+        let got = simd::exp_neg_poly(x);
+        let want = (-x).exp();
+        let rel = ((got - want) / want).abs();
+        assert!(rel <= 1e-6, "x={x}: poly {got:e} vs libm {want:e} (rel {rel:.3e})");
+    };
+    let n = 100_000;
+    for i in 0..n {
+        check(kernel::EXP_NEG_CUTOFF * (i as f64) / (n as f64));
+    }
+    for i in 0..=4000 {
+        check(kernel::EXP_NEG_CUTOFF - 1e-3 + 2e-3 * (i as f64) / 4000.0);
+    }
+    // the clamp region: monotone-safe tiny positives, never 0, inf, NaN
+    for x in [100.0, 708.0, 709.0, 1e6, f64::INFINITY] {
+        let got = simd::exp_neg_poly(x);
+        assert!(got > 0.0 && got < 1e-300, "x={x}: clamp gave {got:e}");
+    }
+    // negative arguments clamp to x=0 exactly
+    assert_eq!(simd::exp_neg_poly(-5.0).to_bits(), simd::exp_neg_poly(0.0).to_bits());
+}
+
+#[test]
+fn exp_block_dispatch_bit_matches_forced_scalar() {
+    // The cross-ISA determinism contract: the dispatched SIMD block
+    // evaluator and the forced-scalar reference produce identical bits
+    // for every element, over ragged lengths covering every tail case.
+    let _g = lock_mode();
+    let mut rng = Xoshiro256::new(77);
+    for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 31, 128, 301] {
+        let args: Vec<f64> = (0..n)
+            .map(|_| rng.next_f64() * 1.2 * kernel::EXP_NEG_CUTOFF)
+            .collect();
+        simd::set_mode(SimdMode::Auto);
+        let mut auto_out = vec![0.0f64; n];
+        simd::exp_neg_block(&args, &mut auto_out);
+        simd::set_mode(SimdMode::Scalar);
+        let mut scalar_out = vec![0.0f64; n];
+        simd::exp_neg_block(&args, &mut scalar_out);
+        simd::set_mode(SimdMode::Auto);
+        for j in 0..n {
+            assert_eq!(
+                auto_out[j].to_bits(),
+                scalar_out[j].to_bits(),
+                "n={n} j={j} x={} isa={:?}",
+                args[j],
+                simd::active_isa()
+            );
+            // and each lane equals the scalar polynomial reference
+            assert_eq!(auto_out[j].to_bits(), simd::exp_neg_poly(args[j]).to_bits());
+        }
+    }
+}
+
+#[test]
+fn exp_neg_routes_by_mode() {
+    let _g = lock_mode();
+    let x = 3.25f64;
+    simd::set_exp_mode(ExpMode::Vector);
+    let vector = simd::exp_neg(x);
+    assert_eq!(
+        simd::exp_mode(),
+        if env_pins_libm() { ExpMode::Libm } else { ExpMode::Vector }
+    );
+    simd::set_exp_mode(ExpMode::Libm);
+    let libm = simd::exp_neg(x);
+    assert_eq!(simd::exp_mode(), ExpMode::Libm);
+    assert_eq!(libm.to_bits(), (-x).exp().to_bits());
+    if !env_pins_libm() {
+        assert_eq!(vector.to_bits(), simd::exp_neg_poly(x).to_bits());
+    }
+}
+
 fn random_store(b: usize, d: usize, seed: u64) -> SvStore {
     let mut rng = Xoshiro256::new(seed);
     let mut s = SvStore::new(d);
@@ -255,4 +342,123 @@ fn merge_scores_batch_bit_invariant_across_simd_mode_and_threads() {
             }
         }
     }
+}
+
+#[test]
+fn merge_scores_batch_invariant_across_exp_mode() {
+    // Vector mode keeps the determinism contract (bit-identical across
+    // ISA × threads) and stays within the substrate's accuracy envelope
+    // of the libm results.  d² never touches an exponent, so it must
+    // not move a single bit between modes.
+    let _g = lock_mode();
+    let svs = random_store(400, 24, 21);
+    let cands = [0usize, 17, 203, 399];
+    let score = |exp: ExpMode, mode: SimdMode, threads: usize| {
+        simd::set_mode(mode);
+        simd::set_exp_mode(exp);
+        let mut be = NativeBackend::new();
+        be.set_threads(threads);
+        let rows = be.merge_scores_batch(&svs, 1.3, &cands);
+        simd::set_mode(SimdMode::Auto);
+        simd::set_exp_mode(ExpMode::Libm);
+        rows
+    };
+    let libm = score(ExpMode::Libm, SimdMode::Auto, 1);
+    let base = score(ExpMode::Vector, SimdMode::Auto, 1);
+    for mode in [SimdMode::Auto, SimdMode::Scalar] {
+        for threads in [1usize, 2, 4] {
+            let got = score(ExpMode::Vector, mode, threads);
+            for (c, (x, y)) in got.iter().zip(&base).enumerate() {
+                for lane in 0..svs.len() {
+                    assert_eq!(
+                        x.wd[lane].to_bits(),
+                        y.wd[lane].to_bits(),
+                        "vector {mode:?} t={threads} c{c} lane{lane}"
+                    );
+                    assert_eq!(x.h[lane].to_bits(), y.h[lane].to_bits());
+                    assert_eq!(x.a_z[lane].to_bits(), y.a_z[lane].to_bits());
+                    assert_eq!(x.d2[lane].to_bits(), y.d2[lane].to_bits());
+                }
+            }
+        }
+    }
+    for (c, (x, y)) in base.iter().zip(&libm).enumerate() {
+        for lane in 0..svs.len() {
+            assert_eq!(x.d2[lane].to_bits(), y.d2[lane].to_bits(), "d2 moved c{c} lane{lane}");
+            let tol = |v: f64| 1e-5 * (1.0 + v.abs());
+            assert!((x.wd[lane] - y.wd[lane]).abs() <= tol(y.wd[lane]), "wd c{c} lane{lane}");
+            assert!((x.h[lane] - y.h[lane]).abs() <= 1e-4, "h c{c} lane{lane}");
+            assert!((x.a_z[lane] - y.a_z[lane]).abs() <= tol(y.a_z[lane]), "a_z c{c} lane{lane}");
+        }
+    }
+}
+
+#[test]
+fn train_full_invariant_across_exp_mode_simd_mode_and_threads() {
+    // exp_mode = vector must be exactly as deterministic as libm mode:
+    // every (simd_mode, threads) combination reproduces the same bits.
+    // Across the two exp modes, training follows the same schedule and
+    // lands at equivalent accuracy (the 1e-6 exp envelope may reorder
+    // near-tie merge choices, so cross-mode equality is behavioral, not
+    // bitwise — that asymmetry is the documented contract).
+    let _g = lock_mode();
+    let split = dataset(&SynthSpec::ijcnn_like(0.02), 13);
+    let run = |exp: ExpMode, mode: SimdMode, threads: usize| {
+        simd::set_mode(mode);
+        simd::set_exp_mode(exp);
+        let cfg = TrainConfig {
+            lambda: 1e-3,
+            gamma: 2.0,
+            budget: 24,
+            mergees: 3,
+            eval_every: 150,
+            threads,
+            simd_mode: mode,
+            exp_mode: exp,
+            seed: 7,
+            ..TrainConfig::default()
+        };
+        let mut be = NativeBackend::new();
+        let out =
+            bsgd::train_full(&split.train, &cfg, &mut be, Some(&split.test), &mut NoopObserver)
+                .unwrap();
+        simd::set_mode(SimdMode::Auto);
+        simd::set_exp_mode(ExpMode::Libm);
+        out
+    };
+    let base = run(ExpMode::Vector, SimdMode::Auto, 1);
+    assert!(base.maintenance_events > 0, "budget never hit — test is vacuous");
+    for mode in [SimdMode::Auto, SimdMode::Scalar] {
+        for threads in [1usize, 2, 4] {
+            if mode == SimdMode::Auto && threads == 1 {
+                continue; // that's `base`
+            }
+            let out = run(ExpMode::Vector, mode, threads);
+            assert_eq!(out.steps, base.steps, "vector {mode:?} t={threads}");
+            assert_eq!(out.maintenance_events, base.maintenance_events);
+            assert_eq!(out.model.svs.points_flat(), base.model.svs.points_flat());
+            let (a, b) = (out.model.svs.alphas_vec(), base.model.svs.alphas_vec());
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "alpha drift vector {mode:?} t={threads}");
+            }
+            assert_eq!(out.model.bias.to_bits(), base.model.bias.to_bits());
+            for (p, q) in out.history.iter().zip(&base.history) {
+                assert_eq!(p.accuracy.to_bits(), q.accuracy.to_bits());
+            }
+        }
+    }
+    // cross-mode behavioral equivalence: same schedule, same budget
+    // pressure, accuracy within noise of each other
+    let libm = run(ExpMode::Libm, SimdMode::Auto, 1);
+    assert_eq!(base.steps, libm.steps);
+    assert!(base.maintenance_events > 0 && libm.maintenance_events > 0);
+    let (va, la) = (
+        base.history.last().expect("eval ran").accuracy,
+        libm.history.last().expect("eval ran").accuracy,
+    );
+    assert!(
+        (va - la).abs() <= 0.05,
+        "exp modes diverged: vector acc {va:.4} vs libm acc {la:.4}"
+    );
 }

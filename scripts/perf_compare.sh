@@ -1,0 +1,113 @@
+#!/usr/bin/env bash
+# Threshold-gated perf comparison against the committed baseline.
+#
+# Usage:
+#   scripts/perf_compare.sh [CURRENT] [BASELINE]
+#   scripts/perf_compare.sh --render OUT.md [CURRENT]
+#
+# CURRENT  defaults to rust/BENCH_hotpaths.json (what `cargo bench
+#          --bench hot_paths` just wrote, CI runs from rust/).
+# BASELINE defaults to BENCH_hotpaths.json (the committed floor at the
+#          repo root — the perf trajectory as a tracked artifact).
+#
+# Compare mode gates every `speedup/*` row the baseline commits to:
+#   - a row missing from CURRENT is a failure (the bench stopped
+#     running is itself a regression of the evidence);
+#   - current < baseline * (1 - MMBSGD_PERF_TOLERANCE) is a failure
+#     (default tolerance 0.20, i.e. a >20% regression of a committed
+#     speedup ratio fails the build).
+# MMBSGD_PERF_WARN_ONLY=1 downgrades failures to warnings (escape
+# hatch for known-noisy runners); the diff is always printed.
+#
+# Render mode writes the perf.md speedup table from CURRENT.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+MODE=compare
+OUT=""
+if [ "${1:-}" = "--render" ]; then
+    MODE=render
+    OUT="${2:?--render needs an output path}"
+    CURRENT="${3:-rust/BENCH_hotpaths.json}"
+    BASELINE=""
+else
+    CURRENT="${1:-rust/BENCH_hotpaths.json}"
+    BASELINE="${2:-BENCH_hotpaths.json}"
+fi
+
+MODE="$MODE" OUT="$OUT" CURRENT="$CURRENT" BASELINE="$BASELINE" python3 - <<'PY'
+import json, os, sys
+
+mode = os.environ["MODE"]
+current_path = os.environ["CURRENT"]
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != "mmbsgd-bench-v1":
+        sys.exit(f"{path}: unexpected schema {doc.get('schema')!r}")
+    return {d["name"]: d["value"] for d in doc.get("derived", [])}
+
+current = load(current_path)
+
+if mode == "render":
+    out = os.environ["OUT"]
+    lines = [
+        "# Perf trajectory",
+        "",
+        "Committed speedup floors for the hot paths, regenerated from",
+        f"`{current_path}` by `scripts/perf_compare.sh --render`.  CI fails",
+        "when any `speedup/*` ratio regresses more than 20% below the",
+        "committed `BENCH_hotpaths.json` baseline (see that file's `note`",
+        "for provenance).  Absolute numbers are machine-dependent; the",
+        "ratios are the contract.",
+        "",
+        "| derived metric | value |",
+        "|---|---|",
+    ]
+    for name in sorted(current):
+        v = current[name]
+        unit = "x" if name.startswith("speedup/") else ""
+        lines.append(f"| `{name}` | {v:.2f}{unit} |")
+    lines.append("")
+    with open(out, "w") as f:
+        f.write("\n".join(lines))
+    print(f"[perf_compare] rendered {len(current)} rows -> {out}")
+    sys.exit(0)
+
+baseline = load(os.environ["BASELINE"])
+tolerance = float(os.environ.get("MMBSGD_PERF_TOLERANCE", "0.20"))
+warn_only = os.environ.get("MMBSGD_PERF_WARN_ONLY", "") not in ("", "0")
+
+failures = []
+print(f"[perf_compare] {current_path} vs {os.environ['BASELINE']} "
+      f"(tolerance {tolerance:.0%})")
+for name in sorted(baseline):
+    if not name.startswith("speedup/"):
+        continue
+    floor = baseline[name]
+    got = current.get(name)
+    if got is None:
+        failures.append(f"{name}: committed ({floor:.2f}x) but missing from current run")
+        print(f"  MISSING  {name}  (baseline {floor:.2f}x)")
+        continue
+    ok = got >= floor * (1.0 - tolerance)
+    tag = "ok      " if ok else "REGRESS "
+    print(f"  {tag} {name}  {got:.2f}x vs baseline {floor:.2f}x")
+    if not ok:
+        failures.append(f"{name}: {got:.2f}x < {floor:.2f}x * {1.0 - tolerance:.2f}")
+extra = sorted(n for n in current if n.startswith("speedup/") and n not in baseline)
+for name in extra:
+    print(f"  new      {name}  {current[name]:.2f}x (not in baseline)")
+
+if failures:
+    print(f"[perf_compare] {len(failures)} regression(s):", file=sys.stderr)
+    for f_ in failures:
+        print(f"  {f_}", file=sys.stderr)
+    if warn_only:
+        print("[perf_compare] MMBSGD_PERF_WARN_ONLY set: not failing", file=sys.stderr)
+        sys.exit(0)
+    sys.exit(1)
+print("[perf_compare] all committed speedups hold")
+PY
