@@ -310,6 +310,17 @@ pub struct ServeConfig {
     /// Per-request deadline in milliseconds: requests queued longer
     /// answer a typed `deadline exceeded` error (0 = none).
     pub deadline_ms: u64,
+    /// HTTP/1.1 front-end listen address (`host:port`); empty disables
+    /// the HTTP listener and the server speaks line protocol only.
+    pub http_addr: String,
+    /// Largest accepted HTTP request body in bytes; bigger declared
+    /// `Content-Length`s answer `413`.
+    pub max_body_bytes: usize,
+    /// Shared-secret auth token (empty = auth off).  Required whenever
+    /// `addr` or `http_addr` binds a non-loopback interface: the line
+    /// protocol then demands an `auth <token>` first line and the HTTP
+    /// front end an `Authorization: Bearer <token>` header.
+    pub auth_token: String,
 }
 
 impl Default for ServeConfig {
@@ -328,6 +339,9 @@ impl Default for ServeConfig {
             max_line_bytes: 64 * 1024,
             max_conns: 1024,
             deadline_ms: 0,
+            http_addr: String::new(),
+            max_body_bytes: 1024 * 1024,
+            auth_token: String::new(),
         }
     }
 }
@@ -357,6 +371,9 @@ impl ServeConfig {
             // even "stats\n" needs a few bytes; a tiny cap would turn
             // every request into an oversize error
             return bad("max_line_bytes", "must be >= 16".into());
+        }
+        if self.max_body_bytes < 16 {
+            return bad("max_body_bytes", "must be >= 16".into());
         }
         Ok(())
     }
@@ -399,6 +416,11 @@ impl ServeConfig {
                 "max_line_bytes" => self.max_line_bytes = toml_count_usize(val, "max_line_bytes")?,
                 "max_conns" => self.max_conns = toml_count_usize(val, "max_conns")?,
                 "deadline_ms" => self.deadline_ms = toml_count(val, "deadline_ms")?,
+                "http_addr" => self.http_addr = val.as_str().context("http_addr")?.to_string(),
+                "max_body_bytes" => {
+                    self.max_body_bytes = toml_count_usize(val, "max_body_bytes")?
+                }
+                "auth_token" => self.auth_token = val.as_str().context("auth_token")?.to_string(),
                 other => bail!("unknown [serve] key {other:?}"),
             }
         }
@@ -769,7 +791,8 @@ mod tests {
     fn serve_toml_overlay_and_validation() {
         let doc = TomlDoc::parse(
             "[serve]\naddr = \"0.0.0.0:9090\"\nbatch_max = 128\nqueue_max = 512\n\
-             shed = \"oldest\"\nmonitor_window = 64\nthreads = 4\nseed = 9\n",
+             shed = \"oldest\"\nmonitor_window = 64\nthreads = 4\nseed = 9\n\
+             http_addr = \"0.0.0.0:9091\"\nmax_body_bytes = 4096\nauth_token = \"s3cr3t\"\n",
         )
         .unwrap();
         let mut cfg = ServeConfig::default();
@@ -781,6 +804,9 @@ mod tests {
         assert_eq!(cfg.monitor_window, 64);
         assert_eq!(cfg.threads, 4);
         assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.http_addr, "0.0.0.0:9091");
+        assert_eq!(cfg.max_body_bytes, 4096);
+        assert_eq!(cfg.auth_token, "s3cr3t");
         cfg.validate().unwrap();
         // a [train]-only doc leaves serve defaults alone
         let doc = TomlDoc::parse("[train]\nbudget = 64\n").unwrap();
@@ -796,6 +822,9 @@ mod tests {
             "[serve]\nbatch_max = 2.5\n",
             "[serve]\nqueue_max = -4\n",
             "[serve]\nshed = \"newest\"\n",
+            "[serve]\nmax_body_bytes = -1\n",
+            "[serve]\nhttp_addr = 9091\n",
+            "[serve]\nauth_token = 42\n",
         ] {
             let doc = TomlDoc::parse(bad).unwrap();
             assert!(ServeConfig::default().apply_toml(&doc).is_err(), "{bad}");
@@ -805,6 +834,12 @@ mod tests {
         cfg.batch_max = 0;
         match cfg.validate() {
             Err(TrainError::InvalidConfig { field, .. }) => assert_eq!(field, "batch_max"),
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
+        let mut cfg = ServeConfig::default();
+        cfg.max_body_bytes = 4;
+        match cfg.validate() {
+            Err(TrainError::InvalidConfig { field, .. }) => assert_eq!(field, "max_body_bytes"),
             other => panic!("expected InvalidConfig, got {other:?}"),
         }
     }

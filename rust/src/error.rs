@@ -124,6 +124,12 @@ pub enum ServeError {
     /// per-request deadline and was expired at flush time instead of
     /// occupying a batch row.
     Deadline { waited_ms: u64, deadline_ms: u64 },
+    /// The connection (line protocol) or request (HTTP) failed the
+    /// shared-secret auth check configured by
+    /// [`crate::serve::ServeOptions`]`::auth_token`: missing, stale,
+    /// or wrong credential.  The connection closes after the reply —
+    /// an unauthenticated peer never reaches the engine.
+    Unauthorized,
     /// `swap-model` / `activate` offered a model whose feature
     /// dimension differs from the version currently serving under the
     /// same name.  Rejected at swap time so queued requests validated
@@ -146,6 +152,9 @@ impl fmt::Display for ServeError {
             ServeError::BadRoute(msg) => write!(f, "bad route: {msg}"),
             ServeError::Model(e) => write!(f, "model: {e}"),
             ServeError::Io(msg) => write!(f, "io: {msg}"),
+            ServeError::Unauthorized => {
+                write!(f, "unauthorized: a valid auth token is required")
+            }
             ServeError::Deadline { waited_ms, deadline_ms } => write!(
                 f,
                 "deadline exceeded: waited {waited_ms}ms against a {deadline_ms}ms deadline"
@@ -295,6 +304,9 @@ mod tests {
         let e = ServeError::Deadline { waited_ms: 120, deadline_ms: 50 };
         let s = e.to_string();
         assert!(s.contains("120") && s.contains("50"), "{s}");
+        let s = ServeError::Unauthorized.to_string();
+        assert!(s.starts_with("unauthorized"), "{s}");
+        assert!(s.contains("auth token"), "{s}");
     }
 
     #[test]

@@ -74,6 +74,7 @@ pub mod rng;
 pub mod runtime;
 pub mod serve;
 pub mod solver;
+pub mod telemetry;
 pub mod util;
 
 /// Convenience re-exports for downstream users and the examples.

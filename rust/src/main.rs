@@ -6,6 +6,7 @@
 //!   predict     label a LIBSVM file with a saved model
 //!   experiment  regenerate a paper table/figure (table1, table2,
 //!               fig1, fig2, fig3, fig4, fig5, all)
+//!   loadgen     sustained-traffic harness against a serve endpoint
 //!   artifacts   list the AOT artifact registry
 //!   package     wrap a trained model into a versioned fleet artifact
 //!   verify      re-check a fleet artifact's checksums and shape
@@ -482,6 +483,18 @@ fn parse_model_spec(spec: &str) -> Result<(String, String, u32)> {
     Ok((name.to_string(), path.to_string(), weight))
 }
 
+/// True when `host:port` names a loopback interface.  `0.0.0.0` / `::`
+/// bind every interface and are deliberately NOT loopback: they are
+/// exactly the case the auth requirement exists for.
+fn is_loopback_addr(addr: &str) -> bool {
+    let host = match addr.rsplit_once(':') {
+        Some((h, _)) => h,
+        None => addr,
+    };
+    let host = host.trim_start_matches('[').trim_end_matches(']');
+    host == "localhost" || host == "::1" || host.starts_with("127.")
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let mut scfg = ServeConfig::default();
     // The replica-side artifact-GC depth comes from the same [fleet]
@@ -512,6 +525,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     scfg.max_line_bytes = args.get_parse("max-line-bytes", scfg.max_line_bytes)?;
     scfg.max_conns = args.get_parse("max-conns", scfg.max_conns)?;
     scfg.deadline_ms = args.get_parse("deadline-ms", scfg.deadline_ms)?;
+    if let Some(a) = args.get("http-addr") {
+        scfg.http_addr = a.to_string();
+    }
+    scfg.max_body_bytes = args.get_parse("max-body-bytes", scfg.max_body_bytes)?;
+    if let Some(t) = args.get("auth-token") {
+        scfg.auth_token = t.to_string();
+    }
     scfg.threads = args.get_parse("threads", scfg.threads)?;
     if let Some(mode) = parse_simd_flag(args)? {
         scfg.simd_mode = mode;
@@ -521,6 +541,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     scfg.seed = args.get_parse("seed", scfg.seed)?;
     scfg.validate()?;
+    // Auth gate before any socket binds: a listener on a non-loopback
+    // interface is reachable from the network and must not serve
+    // unauthenticated traffic.
+    if scfg.auth_token.is_empty() {
+        for (flag, addr) in [("--addr", &scfg.addr), ("--http-addr", &scfg.http_addr)] {
+            if !addr.is_empty() && !is_loopback_addr(addr) {
+                bail!(
+                    "{flag} {addr} binds a non-loopback interface; set --auth-token (or \
+                     [serve] auth_token) so the socket is not open to unauthenticated peers"
+                );
+            }
+        }
+    }
     simd::set_mode(scfg.simd_mode);
     simd::set_exp_mode(scfg.exp_mode);
 
@@ -581,8 +614,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let listener = std::net::TcpListener::bind(&scfg.addr)
         .with_context(|| format!("binding {}", scfg.addr))?;
+    let http_listener = match scfg.http_addr.as_str() {
+        "" => None,
+        a => {
+            let l =
+                std::net::TcpListener::bind(a).with_context(|| format!("binding http {a}"))?;
+            println!(
+                "[serve] http on {} (POST /predict|/decision, GET /metrics, GET /healthz)",
+                l.local_addr()?
+            );
+            Some(l)
+        }
+    };
     println!(
-        "[serve] listening on {} | batch_max={} queue_max={} shed={} window={} seed={} \
+        "[serve] listening on {} | batch_max={} queue_max={} shed={} window={} seed={} auth={} \
          (send 'shutdown' to stop)",
         listener.local_addr()?,
         scfg.batch_max,
@@ -590,6 +635,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         scfg.shed.describe(),
         scfg.monitor_window,
         scfg.seed,
+        if scfg.auth_token.is_empty() { "off" } else { "token" },
     );
     let opts = ServeOptions {
         batch_max: scfg.batch_max,
@@ -602,10 +648,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         deadline: Duration::from_millis(scfg.deadline_ms),
         max_artifact_bytes: args
             .get_parse("max-artifact-bytes", ServeOptions::default().max_artifact_bytes)?,
+        max_body_bytes: scfg.max_body_bytes,
+        auth_token: scfg.auth_token.clone(),
     };
     let report = match replica.as_mut() {
-        Some(rep) => serve::serve_fleet(listener, registry, &opts, rep)?,
-        None => serve::serve(listener, registry, &opts)?,
+        Some(rep) => serve::serve_fleet_bound(listener, http_listener, registry, &opts, rep)?,
+        None => serve::serve_bound(listener, http_listener, registry, &opts)?,
     };
     let mean_batch = if report.engine.batches > 0 {
         report.engine.rows as f64 / report.engine.batches as f64
@@ -636,6 +684,245 @@ fn cmd_serve(args: &Args) -> Result<()> {
             report.drift.feedback_seen
         );
     }
+    Ok(())
+}
+
+/// Count one loadgen reply line into the ok / shed / error tallies.
+/// Shed is the server's explicit load-management answer (queue full /
+/// shed); everything else non-`ok` is an error.
+fn classify_reply(
+    reply: &str,
+    ok: &std::sync::atomic::AtomicU64,
+    shed: &std::sync::atomic::AtomicU64,
+    errs: &std::sync::atomic::AtomicU64,
+) {
+    use std::sync::atomic::Ordering::Relaxed;
+    if reply.starts_with("ok") {
+        ok.fetch_add(1, Relaxed);
+    } else if reply.contains("queue full") || reply.contains("request shed") {
+        shed.fetch_add(1, Relaxed);
+    } else {
+        errs.fetch_add(1, Relaxed);
+    }
+}
+
+/// `mmbsgd loadgen`: sustained-traffic harness against a running
+/// serve endpoint.  M closed-loop workers each own one connection
+/// (line protocol or HTTP keep-alive), replay N keyed `decision`
+/// requests (optionally paced to a target aggregate rate), measure
+/// per-request round-trip latency into the same
+/// [`mmbsgd::telemetry::Histogram`] the server uses, and emit
+/// `BENCH_serve.json` in the `mmbsgd-bench-v1` shape
+/// `scripts/perf_compare.sh` gates.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use mmbsgd::rng::Xoshiro256;
+    use mmbsgd::telemetry::Histogram;
+    use mmbsgd::util::json::{obj, to_string, Json};
+    use std::fmt::Write as _;
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::net::TcpStream;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    let target = args.get("target").context("loadgen needs --target host:port")?.to_string();
+    let mode = args.get("mode").unwrap_or("line").to_string();
+    if mode != "line" && mode != "http" {
+        bail!("bad --mode {mode:?} (line|http)");
+    }
+    let requests: usize = args.get_parse("requests", 10_000)?;
+    let workers: usize = args.get_parse("workers", 2)?;
+    if requests == 0 || workers == 0 {
+        bail!("--requests and --workers must be >= 1");
+    }
+    let rate: f64 = args.get_parse("rate", 0.0)?;
+    if !(rate >= 0.0 && rate.is_finite()) {
+        bail!("--rate must be a finite non-negative requests/second");
+    }
+    let dim: usize = args.get_parse("dim", 0)?;
+    if dim == 0 {
+        bail!("loadgen needs --dim <feature count> matching the served model");
+    }
+    let keys: usize = args.get_parse("keys", 64)?.max(1);
+    let out = args.get("out").unwrap_or("BENCH_serve.json").to_string();
+    let auth = args.get("auth-token").unwrap_or("").to_string();
+    let seed: u64 = args.get_parse("seed", 1)?;
+
+    let hist = Histogram::new();
+    let ok = AtomicU64::new(0);
+    let shed = AtomicU64::new(0);
+    let errs = AtomicU64::new(0);
+    println!(
+        "[loadgen] {requests} {mode} decision requests -> {target} | {workers} workers | {} | \
+         dim {dim} | {keys} keys",
+        if rate > 0.0 { format!("{rate:.0} req/s target") } else { "unpaced".into() },
+    );
+
+    let started = Instant::now();
+    // Aggregate pacing split evenly: each worker sends every
+    // `workers/rate` seconds, so the fleet of workers sums to `rate`.
+    let interval =
+        if rate > 0.0 { Duration::from_secs_f64(workers as f64 / rate) } else { Duration::ZERO };
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::new();
+        for w in 0..workers {
+            let (hist, ok, shed, errs) = (&hist, &ok, &shed, &errs);
+            let (target, auth, mode) = (target.clone(), auth.clone(), mode.clone());
+            handles.push(s.spawn(move || -> Result<()> {
+                // Worker w owns requests w, w+M, w+2M, ...
+                let n_mine = if w < requests { (requests - w - 1) / workers + 1 } else { 0 };
+                let mut rng = Xoshiro256::new(seed ^ ((w as u64 + 1) * 0x9E37_79B9));
+                let stream = TcpStream::connect(&target)
+                    .with_context(|| format!("worker {w}: connecting {target}"))?;
+                let _ = stream.set_nodelay(true);
+                let mut rd = BufReader::new(stream.try_clone()?);
+                let mut wtr = stream;
+                let mut reply = String::new();
+                if mode == "line" && !auth.is_empty() {
+                    wtr.write_all(format!("auth {auth}\n").as_bytes())?;
+                    reply.clear();
+                    rd.read_line(&mut reply)?;
+                    if !reply.starts_with("ok") {
+                        bail!("worker {w}: auth rejected: {}", reply.trim());
+                    }
+                }
+                let mut body = String::new();
+                for i in 0..n_mine {
+                    if !interval.is_zero() {
+                        let due = started + interval.mul_f64(i as f64)
+                            + interval.mul_f64(w as f64 / workers as f64);
+                        let now = Instant::now();
+                        if due > now {
+                            std::thread::sleep(due - now);
+                        }
+                    }
+                    body.clear();
+                    write!(body, "key=k{}", (w + i * workers) % keys).expect("string write");
+                    for _ in 0..dim {
+                        write!(body, " {:.4}", rng.next_f64() * 2.0 - 1.0)
+                            .expect("string write");
+                    }
+                    body.push('\n');
+                    if mode == "line" {
+                        let t0 = Instant::now();
+                        wtr.write_all(format!("decision {body}").as_bytes())?;
+                        reply.clear();
+                        if rd.read_line(&mut reply)? == 0 {
+                            bail!("worker {w}: server closed the connection");
+                        }
+                        hist.observe_duration(t0.elapsed());
+                        classify_reply(reply.trim(), ok, shed, errs);
+                    } else {
+                        let auth_hdr = if auth.is_empty() {
+                            String::new()
+                        } else {
+                            format!("Authorization: Bearer {auth}\r\n")
+                        };
+                        let req = format!(
+                            "POST /decision HTTP/1.1\r\nContent-Length: {}\r\n{auth_hdr}\r\n{body}",
+                            body.len()
+                        );
+                        let t0 = Instant::now();
+                        wtr.write_all(req.as_bytes())?;
+                        reply.clear();
+                        if rd.read_line(&mut reply)? == 0 {
+                            bail!("worker {w}: server closed the connection");
+                        }
+                        let status: u16 = reply
+                            .split_ascii_whitespace()
+                            .nth(1)
+                            .and_then(|s| s.parse().ok())
+                            .with_context(|| {
+                                format!("worker {w}: bad status line {:?}", reply.trim())
+                            })?;
+                        let mut content_length = 0usize;
+                        loop {
+                            reply.clear();
+                            if rd.read_line(&mut reply)? == 0 {
+                                bail!("worker {w}: connection died mid-headers");
+                            }
+                            let h = reply.trim();
+                            if h.is_empty() {
+                                break;
+                            }
+                            let lower = h.to_ascii_lowercase();
+                            if let Some(v) = lower.strip_prefix("content-length:") {
+                                content_length = v.trim().parse().with_context(|| {
+                                    format!("worker {w}: bad content-length {h:?}")
+                                })?;
+                            }
+                        }
+                        let mut resp_body = vec![0u8; content_length];
+                        rd.read_exact(&mut resp_body)?;
+                        hist.observe_duration(t0.elapsed());
+                        match status {
+                            200 => classify_reply(
+                                String::from_utf8_lossy(&resp_body).trim(),
+                                ok,
+                                shed,
+                                errs,
+                            ),
+                            503 => {
+                                shed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            _ => {
+                                errs.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            h.join().map_err(|_| anyhow!("loadgen worker panicked"))??;
+        }
+        Ok(())
+    })?;
+    let elapsed = started.elapsed();
+
+    let (ok, shed, errs) =
+        (ok.load(Ordering::Relaxed), shed.load(Ordering::Relaxed), errs.load(Ordering::Relaxed));
+    let completed = ok + shed + errs;
+    let achieved_rps = completed as f64 / elapsed.as_secs_f64().max(1e-9);
+    let snap = hist.snapshot();
+    let (p50, p90, p99) = (snap.quantile(0.50), snap.quantile(0.90), snap.quantile(0.99));
+    let shed_rate = shed as f64 / completed.max(1) as f64;
+    let error_rate = errs as f64 / completed.max(1) as f64;
+    println!(
+        "[loadgen] done: {completed} requests in {:.2}s ({achieved_rps:.0} req/s) | \
+         ok {ok} | shed {shed} ({:.2}%) | errors {errs} ({:.2}%)",
+        elapsed.as_secs_f64(),
+        100.0 * shed_rate,
+        100.0 * error_rate,
+    );
+    println!(
+        "[loadgen] latency: p50 {:.3}ms | p90 {:.3}ms | p99 {:.3}ms (mean {:.3}ms)",
+        p50 as f64 / 1e6,
+        p90 as f64 / 1e6,
+        p99 as f64 / 1e6,
+        snap.mean() / 1e6,
+    );
+
+    let derived: Vec<Json> = [
+        ("serve/p50_ns", p50 as f64),
+        ("serve/p90_ns", p90 as f64),
+        ("serve/p99_ns", p99 as f64),
+        ("serve/achieved_rps", achieved_rps),
+        ("serve/shed_rate", shed_rate),
+        ("serve/error_rate", error_rate),
+        ("serve/requests", completed as f64),
+        ("serve/workers", workers as f64),
+    ]
+    .into_iter()
+    .map(|(k, v)| obj(vec![("name", Json::Str(k.into())), ("value", Json::Num(v))]))
+    .collect();
+    let doc = obj(vec![
+        ("schema", Json::Str("mmbsgd-bench-v1".into())),
+        ("note", Json::Str(format!("mmbsgd loadgen --mode {mode} against {target}"))),
+        ("runs", Json::Arr(Vec::new())),
+        ("derived", Json::Arr(derived)),
+    ]);
+    std::fs::write(&out, to_string(&doc)).with_context(|| format!("writing {out}"))?;
+    println!("[loadgen] wrote {out}");
     Ok(())
 }
 
@@ -970,10 +1257,11 @@ COMMANDS
   predict      --model model.txt --input data.libsvm [--backend B] [--threads N]
                [--simd-mode auto|scalar] [--exp-mode libm|vector]
   serve        --model name=model.txt[:weight] [--model b=other.txt:1 ...]
-               [--addr host:port] [--batch-max N] [--queue-max N]
-               [--shed reject|oldest] [--monitor-window N] [--threads N]
-               [--idle-timeout-secs N] [--max-line-bytes N]
-               [--max-conns N] [--deadline-ms N]
+               [--addr host:port] [--http-addr host:port] [--batch-max N]
+               [--queue-max N] [--shed reject|oldest] [--monitor-window N]
+               [--threads N] [--idle-timeout-secs N] [--max-line-bytes N]
+               [--max-conns N] [--deadline-ms N] [--max-body-bytes N]
+               [--auth-token TOKEN]
                [--simd-mode auto|scalar] [--exp-mode libm|vector]
                [--seed N] [--backend B]
                [--config file.toml] [--fleet-dir DIR] [--fleet-keep N]
@@ -993,6 +1281,27 @@ COMMANDS
                'err deadline'.  A [fault] plan = \"site@N=kind\" TOML
                section (or MMBSGD_FAULT_PLAN) arms deterministic fault
                injection in --features fault-inject builds.
+               --http-addr adds an HTTP/1.1 front end on a second port:
+               POST /predict|/decision carry line-protocol argument
+               bodies (one request per line) through the same batch
+               engine, GET /metrics renders the telemetry registry,
+               GET /healthz answers 200 ok; bodies over
+               --max-body-bytes answer 413.  --auth-token (or [serve]
+               auth_token) arms shared-secret auth — line connections
+               must open with 'auth <token>', HTTP requests must carry
+               'Authorization: Bearer <token>' — and is REQUIRED when
+               --addr or --http-addr binds a non-loopback interface.
+  loadgen      --target host:port --dim N [--mode line|http]
+               [--requests N] [--workers M] [--rate RPS] [--keys K]
+               [--auth-token TOKEN] [--seed N] [--out BENCH_serve.json]
+               sustained-traffic harness: M closed-loop workers replay
+               N keyed decision requests against a running serve
+               endpoint (line protocol or HTTP keep-alive), paced to
+               an aggregate --rate (0 = as fast as replies return),
+               measure per-request round-trip latency, and write
+               p50/p90/p99, achieved rps, and shed/error rates to
+               --out in the BENCH_hotpaths.json shape so
+               scripts/perf_compare.sh can sanity-gate them.
   experiment   --id table1|table2|fig1|fig2|fig3|fig4|fig5|ablation|all
                [--scale F] [--threads N] [--out-dir DIR] [--backend B] [--seed N]
   tune         --dataset <...> [--c-grid 1,4,16] [--gamma-grid 0.1,1,10]
@@ -1059,6 +1368,7 @@ fn main() {
         "evaluate" => cmd_evaluate(&args),
         "predict" => cmd_predict(&args),
         "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "experiment" => cmd_experiment(&args),
         "tune" => cmd_tune(&args),
         "artifacts" => cmd_artifacts(&args),

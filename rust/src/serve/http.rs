@@ -1,0 +1,729 @@
+//! HTTP/1.1 front end over the serving engine.
+//!
+//! A second listener, same engine: every connection accepted here
+//! parses `HTTP/1.1` requests with `Content-Length` framing and feeds
+//! the **same** [`Incoming`] channel as the line protocol, so an
+//! HTTP-batched answer is bit-identical to a line-protocol answer by
+//! construction — there is exactly one parse path, one batch engine,
+//! and one reply formatter.  Routes:
+//!
+//! * `POST /predict`, `POST /decision` — the body carries one request
+//!   per line in line-protocol *argument* form (`[key=<k>] <f1> <f2>
+//!   ...`, no verb; the path is the verb).  The response body carries
+//!   one reply line per request line, in order.  A single-line request
+//!   maps its `err` reply onto a typed status (see
+//!   [`status_for_reply`]); multi-line bodies always answer `200` and
+//!   report per-line outcomes in the body, exactly as a pipelining
+//!   line-protocol client would see them.
+//! * `GET /metrics` — the [`crate::telemetry::Registry`] exposition
+//!   text (see telemetry module docs for the format).
+//! * `GET /healthz` — `200 ok` while the engine is accepting.
+//!
+//! Degradation mirrors the line protocol: request heads are capped at
+//! `max_line_bytes` (431), bodies at `max_body_bytes` (413, enforced
+//! at header-parse time before any body byte is buffered), connections
+//! share the line protocol's `max_conns` budget (503 at accept), and
+//! `idle_timeout` closes silent connections (408 when a request is
+//! half-read).  With `auth_token` set, every request must carry
+//! `Authorization: Bearer <token>` (401 + close otherwise).  Keep-alive
+//! is honored per HTTP/1.1 defaults (`Connection: close` / HTTP/1.0
+//! opt-outs respected); every degradation answers a well-formed
+//! response before the connection drops.
+//!
+//! The request *parser* ([`parse_request_head`] /
+//! [`validate_request_text`]) is a pure function over text, fuzzed by
+//! `tests/fuzz_replay.rs` over `fuzz/corpus/http/`: malformed input
+//! must map to a typed [`HttpError`], never a panic.
+
+use super::metrics::ServeMetrics;
+use super::proto::{parse_line, Incoming, ServeOptions, POLL, REPLY_BACKLOG};
+use crate::error::ServeError;
+use std::fmt;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Longest a request waits for the engine to answer all its lines
+/// before the connection gives up with `503` (the engine is wedged or
+/// the reply backlog overflowed — either way the connection is
+/// desynced and closes).
+const ENGINE_WAIT: Duration = Duration::from_secs(30);
+
+/// Hard cap on header lines per request head (431 beyond it).
+const MAX_HEADERS: usize = 64;
+
+// ---------------------------------------------------------------------------
+// pure request parsing (fuzzed surface)
+// ---------------------------------------------------------------------------
+
+/// The two methods the front end routes; anything else is `405`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Get,
+    Post,
+}
+
+/// A parsed request head (everything before the blank line).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestHead {
+    pub method: Method,
+    pub path: String,
+    /// `Content-Length` if present (already bounded by
+    /// `max_body_bytes` — an oversized declaration is a parse error).
+    pub content_length: Option<usize>,
+    /// The `Authorization: Bearer <token>` credential, if any.
+    pub bearer: Option<String>,
+    /// Whether the connection persists after this exchange
+    /// (HTTP/1.1 default yes, HTTP/1.0 default no, `Connection:`
+    /// header overrides either way).
+    pub keep_alive: bool,
+}
+
+/// A typed request rejection: the status line to answer and the
+/// human-readable reason carried in the response body.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HttpError {
+    pub status: u16,
+    pub reason: String,
+}
+
+impl HttpError {
+    fn new(status: u16, reason: impl Into<String>) -> Self {
+        Self { status, reason: reason.into() }
+    }
+}
+
+impl fmt::Display for HttpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} {}: {}", self.status, reason_phrase(self.status), self.reason)
+    }
+}
+
+/// The standard reason phrase for every status the front end emits.
+pub fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        401 => "Unauthorized",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        505 => "HTTP Version Not Supported",
+        _ => "Error",
+    }
+}
+
+/// Find the end of the request head in a raw byte buffer: the index
+/// one past the `\r\n\r\n` (or bare `\n\n`) terminator, or `None`
+/// while the head is still arriving.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    let mut i = 0;
+    while i + 1 < buf.len() {
+        if buf[i] == b'\n' {
+            if buf[i + 1] == b'\n' {
+                return Some(i + 2);
+            }
+            if i + 2 < buf.len() && buf[i + 1] == b'\r' && buf[i + 2] == b'\n' {
+                return Some(i + 3);
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Parse a request head (request line + headers, already terminated).
+/// Pure: every malformation maps to a typed [`HttpError`] and nothing
+/// panics on arbitrary input.  `max_body_bytes` bounds the accepted
+/// `Content-Length` declaration so the connection can refuse a body
+/// before buffering a single byte of it.
+pub fn parse_request_head(text: &str, max_body_bytes: usize) -> Result<RequestHead, HttpError> {
+    let mut it = text.lines();
+    // Tolerate empty line(s) before the request line (RFC 9112 §2.2).
+    let request_line = loop {
+        match it.next() {
+            Some(l) if l.trim().is_empty() => continue,
+            Some(l) => break l,
+            None => return Err(HttpError::new(400, "empty request")),
+        }
+    };
+    let toks: Vec<&str> = request_line.split_ascii_whitespace().collect();
+    if toks.len() != 3 {
+        return Err(HttpError::new(400, "request line must be METHOD PATH VERSION"));
+    }
+    let method = match toks[0] {
+        "GET" => Method::Get,
+        "POST" => Method::Post,
+        m => return Err(HttpError::new(405, format!("method {m:?} not allowed"))),
+    };
+    if !toks[1].starts_with('/') {
+        return Err(HttpError::new(400, format!("path {:?} must start with '/'", toks[1])));
+    }
+    let mut keep_alive = match toks[2] {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        v => return Err(HttpError::new(505, format!("unsupported version {v:?}"))),
+    };
+    let mut content_length = None;
+    let mut bearer = None;
+    let mut count = 0usize;
+    for line in it {
+        if line.trim().is_empty() {
+            break;
+        }
+        count += 1;
+        if count > MAX_HEADERS {
+            return Err(HttpError::new(431, format!("more than {MAX_HEADERS} header lines")));
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(HttpError::new(400, format!("malformed header line {line:?}")));
+        };
+        let value = value.trim();
+        match name.trim().to_ascii_lowercase().as_str() {
+            "content-length" => {
+                let n: usize = value
+                    .parse()
+                    .map_err(|_| HttpError::new(400, format!("bad content-length {value:?}")))?;
+                if n > max_body_bytes {
+                    return Err(HttpError::new(
+                        413,
+                        format!("declared body of {n} bytes exceeds the {max_body_bytes} limit"),
+                    ));
+                }
+                content_length = Some(n);
+            }
+            "authorization" => {
+                bearer = value.strip_prefix("Bearer ").map(|t| t.trim().to_string());
+            }
+            "connection" => {
+                if value.eq_ignore_ascii_case("close") {
+                    keep_alive = false;
+                } else if value.eq_ignore_ascii_case("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+            _ => {}
+        }
+    }
+    match method {
+        Method::Post if content_length.is_none() => {
+            Err(HttpError::new(411, "POST requires a content-length header"))
+        }
+        Method::Get if content_length.unwrap_or(0) > 0 => {
+            Err(HttpError::new(400, "GET must not carry a body"))
+        }
+        _ => Ok(RequestHead {
+            method,
+            path: toks[1].to_string(),
+            content_length,
+            bearer,
+            keep_alive,
+        }),
+    }
+}
+
+/// Validate one whole request (head + body) as the fuzz harness sees
+/// it: head terminator present, head parses, the body actually carries
+/// `Content-Length` bytes, and a POST body is valid UTF-8 (the live
+/// reader slices the body out of a raw byte stream at the declared
+/// length, which can land mid multibyte character — that must be a
+/// `400`, never a panic).
+pub fn validate_request_text(text: &str, max_body_bytes: usize) -> Result<RequestHead, HttpError> {
+    let bytes = text.as_bytes();
+    let head_len =
+        find_head_end(bytes).ok_or_else(|| HttpError::new(400, "truncated request head"))?;
+    // `bytes[..head_len]` is a slice of a `&str` ending right after a
+    // `\n`, so it is always valid UTF-8.
+    let head_text = std::str::from_utf8(&bytes[..head_len])
+        .map_err(|_| HttpError::new(400, "request head is not valid utf-8"))?;
+    let head = parse_request_head(head_text, max_body_bytes)?;
+    let want = head.content_length.unwrap_or(0);
+    let body = bytes
+        .get(head_len..head_len.saturating_add(want))
+        .ok_or_else(|| HttpError::new(400, "body shorter than content-length"))?;
+    if head.method == Method::Post && std::str::from_utf8(body).is_err() {
+        return Err(HttpError::new(400, "body is not valid utf-8"));
+    }
+    Ok(head)
+}
+
+/// Map a single engine reply line onto a response status: `ok` is
+/// `200`; `err` sniffs the typed [`ServeError`] rendering the engine
+/// used (`queue full` / `request shed` → 503, `deadline exceeded` →
+/// 504, `unknown model` → 404, `io:` → 500, anything else → 400).
+pub fn status_for_reply(reply: &str) -> u16 {
+    let Some(msg) = reply.strip_prefix("err ") else {
+        return 200;
+    };
+    if msg.starts_with("queue full") || msg.starts_with("request shed") {
+        503
+    } else if msg.starts_with("deadline exceeded") {
+        504
+    } else if msg.starts_with("unknown model") {
+        404
+    } else if msg.starts_with("io:") {
+        500
+    } else {
+        400
+    }
+}
+
+// ---------------------------------------------------------------------------
+// connection handling
+// ---------------------------------------------------------------------------
+
+/// What one read attempt against the socket produced.
+enum ReadOutcome {
+    /// Bytes were appended to the buffer.
+    Data,
+    /// Orderly close from the peer.
+    Eof,
+    /// The [`POLL`] read timeout elapsed with nothing to read.
+    TimedOut,
+    /// A hard socket error.
+    Failed,
+}
+
+fn read_some(rd: &mut BufReader<&TcpStream>, buf: &mut Vec<u8>) -> ReadOutcome {
+    let mut chunk = [0u8; 4096];
+    match rd.read(&mut chunk) {
+        Ok(0) => ReadOutcome::Eof,
+        Ok(n) => {
+            buf.extend_from_slice(&chunk[..n]);
+            ReadOutcome::Data
+        }
+        Err(e)
+            if e.kind() == std::io::ErrorKind::WouldBlock
+                || e.kind() == std::io::ErrorKind::TimedOut =>
+        {
+            ReadOutcome::TimedOut
+        }
+        Err(_) => ReadOutcome::Failed,
+    }
+}
+
+/// Write one framed response.  Returns `false` on a dead socket.
+fn respond(w: &mut BufWriter<TcpStream>, status: u16, body: &str, close: bool) -> bool {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: text/plain; charset=utf-8\r\nContent-Length: {}\r\n{}\r\n",
+        status,
+        reason_phrase(status),
+        body.len(),
+        if close { "Connection: close\r\n" } else { "" }
+    );
+    w.write_all(head.as_bytes())
+        .and_then(|()| w.write_all(body.as_bytes()))
+        .and_then(|()| w.flush())
+        .is_ok()
+}
+
+/// Accept HTTP connections until the stop flag rises.  Same polling
+/// accept idiom as the line protocol's loop, same shared `active`
+/// connection budget (`max_conns` caps line + HTTP together), same
+/// fatal-error contract: a non-`WouldBlock` accept failure raises the
+/// stop flag and is returned for [`super::proto::serve_bound`] to
+/// propagate.
+pub(crate) fn accept_loop<'scope, 'env>(
+    listener: TcpListener,
+    tx: mpsc::Sender<Incoming>,
+    stop: &'scope AtomicBool,
+    s: &'scope std::thread::Scope<'scope, 'env>,
+    opts: &'scope ServeOptions,
+    metrics: &'scope ServeMetrics,
+    active: &'scope AtomicUsize,
+) -> Option<ServeError> {
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return None;
+        }
+        match listener.accept() {
+            Ok((mut stream, _peer)) => {
+                if opts.max_conns > 0 && active.load(Ordering::Relaxed) >= opts.max_conns {
+                    metrics.http_busy.inc();
+                    let _ = stream.set_nonblocking(false);
+                    let _ = stream.set_write_timeout(Some(POLL));
+                    let body = "busy: connection limit reached\n";
+                    let _ = stream.write_all(
+                        format!(
+                            "HTTP/1.1 503 Service Unavailable\r\n\
+                             Content-Type: text/plain; charset=utf-8\r\n\
+                             Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+                            body.len(),
+                            body
+                        )
+                        .as_bytes(),
+                    );
+                    continue; // dropped => closed
+                }
+                metrics.http_connections.inc();
+                active.fetch_add(1, Ordering::Relaxed);
+                let tx = tx.clone();
+                s.spawn(move || {
+                    connection_loop(stream, tx, stop, opts, metrics);
+                    active.fetch_sub(1, Ordering::Relaxed);
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(POLL);
+            }
+            Err(e) => {
+                stop.store(true, Ordering::Relaxed);
+                return Some(ServeError::from(e));
+            }
+        }
+    }
+}
+
+/// One HTTP connection: read a head, police it, read the body,
+/// dispatch, respond, repeat while keep-alive holds.  Requests on a
+/// connection are strictly sequential, so the per-connection reply
+/// channel stays FIFO-aligned with the lines this request submitted.
+fn connection_loop(
+    stream: TcpStream,
+    tx: mpsc::Sender<Incoming>,
+    stop: &AtomicBool,
+    opts: &ServeOptions,
+    metrics: &ServeMetrics,
+) {
+    if stream.set_nonblocking(false).is_err() || stream.set_read_timeout(Some(POLL)).is_err() {
+        return;
+    }
+    let mut w = match stream.try_clone() {
+        Ok(half) => BufWriter::new(half),
+        Err(_) => return,
+    };
+    let (reply_tx, reply_rx) = mpsc::sync_channel::<String>(REPLY_BACKLOG);
+    let mut rd = BufReader::new(&stream);
+    let mut buf: Vec<u8> = Vec::new();
+    let mut last_rx = Instant::now();
+    'conn: loop {
+        // -- phase 1: accumulate a complete request head ----------------
+        let head_len = loop {
+            if let Some(n) = find_head_end(&buf) {
+                break n;
+            }
+            if stop.load(Ordering::Relaxed) {
+                break 'conn;
+            }
+            if buf.len() > opts.max_line_bytes {
+                metrics.http_oversize.inc();
+                let _ = respond(
+                    &mut w,
+                    431,
+                    &format!("request head exceeds {} bytes\n", opts.max_line_bytes),
+                    true,
+                );
+                metrics.http_response(431);
+                break 'conn;
+            }
+            // Injection site `http.read`: a slow or wedged peer path.
+            match crate::util::fault::armed(crate::util::fault::site::HTTP_READ) {
+                Some(crate::util::fault::FaultKind::Stall(ms)) => {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                Some(crate::util::fault::FaultKind::Io) => {
+                    metrics.http_read_errors.inc();
+                    break 'conn;
+                }
+                _ => {}
+            }
+            match read_some(&mut rd, &mut buf) {
+                ReadOutcome::Data => last_rx = Instant::now(),
+                ReadOutcome::Eof => break 'conn,
+                ReadOutcome::Failed => {
+                    metrics.http_read_errors.inc();
+                    break 'conn;
+                }
+                ReadOutcome::TimedOut => {
+                    if opts.idle_timeout != Duration::ZERO
+                        && last_rx.elapsed() >= opts.idle_timeout
+                    {
+                        metrics.http_idle_timeouts.inc();
+                        if !buf.is_empty() {
+                            // a half-sent request earns an answer; a
+                            // silent keep-alive just closes
+                            let _ = respond(&mut w, 408, "idle timeout\n", true);
+                            metrics.http_response(408);
+                        }
+                        break 'conn;
+                    }
+                }
+            }
+        };
+        metrics.http_requests.inc();
+        let started = Instant::now();
+        // -- phase 2: parse + police the head ---------------------------
+        let head_text = String::from_utf8_lossy(&buf[..head_len]).into_owned();
+        let head = match parse_request_head(&head_text, opts.max_body_bytes) {
+            Ok(h) => h,
+            Err(e) => {
+                if e.status == 413 {
+                    metrics.http_oversize.inc();
+                }
+                // framing is unknown past a bad head: answer and close
+                let _ = respond(&mut w, e.status, &format!("{}\n", e.reason), true);
+                metrics.http_response(e.status);
+                metrics.http_request_ns.observe_duration(started.elapsed());
+                break 'conn;
+            }
+        };
+        if !opts.auth_token.is_empty() && head.bearer.as_deref() != Some(opts.auth_token.as_str())
+        {
+            metrics.auth_failures.inc();
+            let _ = respond(&mut w, 401, &format!("{}\n", ServeError::Unauthorized), true);
+            metrics.http_response(401);
+            metrics.http_request_ns.observe_duration(started.elapsed());
+            break 'conn;
+        }
+        // -- phase 3: accumulate the declared body ----------------------
+        let want = head.content_length.unwrap_or(0);
+        while buf.len() < head_len + want {
+            if stop.load(Ordering::Relaxed) {
+                break 'conn;
+            }
+            match crate::util::fault::armed(crate::util::fault::site::HTTP_READ) {
+                Some(crate::util::fault::FaultKind::Stall(ms)) => {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                Some(crate::util::fault::FaultKind::Io) => {
+                    metrics.http_read_errors.inc();
+                    break 'conn;
+                }
+                _ => {}
+            }
+            match read_some(&mut rd, &mut buf) {
+                ReadOutcome::Data => last_rx = Instant::now(),
+                ReadOutcome::Eof => break 'conn,
+                ReadOutcome::Failed => {
+                    metrics.http_read_errors.inc();
+                    break 'conn;
+                }
+                ReadOutcome::TimedOut => {
+                    if opts.idle_timeout != Duration::ZERO
+                        && last_rx.elapsed() >= opts.idle_timeout
+                    {
+                        metrics.http_idle_timeouts.inc();
+                        let _ = respond(&mut w, 408, "idle timeout\n", true);
+                        metrics.http_response(408);
+                        break 'conn;
+                    }
+                }
+            }
+        }
+        // -- phase 4: dispatch ------------------------------------------
+        let mut close_after = !head.keep_alive;
+        let (status, body) = match std::str::from_utf8(&buf[head_len..head_len + want]) {
+            // the declared length can slice mid multibyte character
+            Err(_) => (400, "body is not valid utf-8\n".to_string()),
+            Ok(body_str) => dispatch(
+                &head,
+                body_str,
+                &tx,
+                &reply_tx,
+                &reply_rx,
+                stop,
+                metrics,
+                &mut close_after,
+            ),
+        };
+        let wrote = respond(&mut w, status, &body, close_after);
+        metrics.http_response(status);
+        metrics.http_request_ns.observe_duration(started.elapsed());
+        if !wrote || close_after {
+            break 'conn;
+        }
+        buf.drain(..head_len + want);
+        last_rx = Instant::now();
+    }
+}
+
+/// Route one parsed, authenticated request and produce `(status,
+/// body)`.  Sets `close_after` when the connection is desynced (engine
+/// gone, or replies timed out and stale ones could arrive later).
+#[allow(clippy::too_many_arguments)] // internal fan-out of connection state
+fn dispatch(
+    head: &RequestHead,
+    body: &str,
+    tx: &mpsc::Sender<Incoming>,
+    reply_tx: &mpsc::SyncSender<String>,
+    reply_rx: &mpsc::Receiver<String>,
+    stop: &AtomicBool,
+    metrics: &ServeMetrics,
+    close_after: &mut bool,
+) -> (u16, String) {
+    match (head.method, head.path.as_str()) {
+        (Method::Get, "/healthz") => (200, "ok\n".into()),
+        (Method::Get, "/metrics") => (200, metrics.registry.render()),
+        (Method::Post, "/predict") | (Method::Post, "/decision") => {
+            let verb = &head.path[1..];
+            let lines: Vec<&str> =
+                body.lines().map(str::trim).filter(|l| !l.is_empty()).collect();
+            if lines.is_empty() {
+                return (400, format!("empty body: expected one {verb} request per line\n"));
+            }
+            if lines.len() > REPLY_BACKLOG {
+                return (
+                    400,
+                    format!(
+                        "too many lines: {} exceeds the {} per-request cap\n",
+                        lines.len(),
+                        REPLY_BACKLOG
+                    ),
+                );
+            }
+            let mut sent = 0usize;
+            let mut engine_gone = false;
+            for line in &lines {
+                let cmd = parse_line(&format!("{verb} {line}"));
+                if tx.send(Incoming { cmd, reply: reply_tx.clone() }).is_err() {
+                    engine_gone = true;
+                    break;
+                }
+                sent += 1;
+            }
+            let mut replies = Vec::with_capacity(sent);
+            let deadline = Instant::now() + ENGINE_WAIT;
+            while replies.len() < sent {
+                match reply_rx.recv_timeout(POLL) {
+                    Ok(r) => replies.push(r),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        if Instant::now() >= deadline || stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            if engine_gone || replies.len() < sent {
+                *close_after = true;
+                return (503, "engine unavailable\n".into());
+            }
+            let status = if replies.len() == 1 { status_for_reply(&replies[0]) } else { 200 };
+            let mut out = replies.join("\n");
+            out.push('\n');
+            (status, out)
+        }
+        _ => (404, format!("no route for {}\n", head.path)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: usize = 1024 * 1024;
+
+    #[test]
+    fn head_end_handles_both_terminators() {
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\r\n\r\nrest"), Some(18));
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\n\nrest"), Some(16));
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\r\n"), None);
+        assert_eq!(find_head_end(b""), None);
+    }
+
+    #[test]
+    fn parses_a_minimal_get() {
+        let h = parse_request_head("GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n", MB).unwrap();
+        assert_eq!(h.method, Method::Get);
+        assert_eq!(h.path, "/metrics");
+        assert_eq!(h.content_length, None);
+        assert!(h.keep_alive, "HTTP/1.1 defaults to keep-alive");
+    }
+
+    #[test]
+    fn keep_alive_defaults_and_overrides() {
+        let h = parse_request_head("GET / HTTP/1.0\r\n\r\n", MB).unwrap();
+        assert!(!h.keep_alive, "HTTP/1.0 defaults to close");
+        let h =
+            parse_request_head("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n", MB).unwrap();
+        assert!(h.keep_alive);
+        let h = parse_request_head("GET / HTTP/1.1\r\nConnection: close\r\n\r\n", MB).unwrap();
+        assert!(!h.keep_alive);
+    }
+
+    #[test]
+    fn extracts_content_length_and_bearer() {
+        let h = parse_request_head(
+            "POST /decision HTTP/1.1\r\nContent-Length: 12\r\nAuthorization: Bearer s3cr3t\r\n\r\n",
+            MB,
+        )
+        .unwrap();
+        assert_eq!(h.content_length, Some(12));
+        assert_eq!(h.bearer.as_deref(), Some("s3cr3t"));
+    }
+
+    #[test]
+    fn typed_rejections() {
+        let e = parse_request_head("DELETE / HTTP/1.1\r\n\r\n", MB).unwrap_err();
+        assert_eq!(e.status, 405);
+        let e = parse_request_head("GET / HTTP/2.0\r\n\r\n", MB).unwrap_err();
+        assert_eq!(e.status, 505);
+        let e = parse_request_head("POST /predict HTTP/1.1\r\n\r\n", MB).unwrap_err();
+        assert_eq!(e.status, 411, "POST without content-length");
+        let e = parse_request_head(
+            "POST /predict HTTP/1.1\r\nContent-Length: 9999\r\n\r\n",
+            100,
+        )
+        .unwrap_err();
+        assert_eq!(e.status, 413, "declared body over the limit");
+        let e = parse_request_head("GET / HTTP/1.1\r\nContent-Length: 4\r\n\r\n", MB).unwrap_err();
+        assert_eq!(e.status, 400, "GET with a body");
+        let e = parse_request_head("GET / HTTP/1.1\r\nno-colon-here\r\n\r\n", MB).unwrap_err();
+        assert_eq!(e.status, 400);
+        let e = parse_request_head("GET nopath HTTP/1.1\r\n\r\n", MB).unwrap_err();
+        assert_eq!(e.status, 400);
+        let e = parse_request_head("GET /\r\n\r\n", MB).unwrap_err();
+        assert_eq!(e.status, 400, "two-token request line");
+        let e = parse_request_head("\r\n\r\n", MB).unwrap_err();
+        assert_eq!(e.status, 400, "no request line at all");
+        let many = "X: y\r\n".repeat(MAX_HEADERS + 1);
+        let e = parse_request_head(&format!("GET / HTTP/1.1\r\n{many}\r\n"), MB).unwrap_err();
+        assert_eq!(e.status, 431);
+        assert!(e.to_string().contains("431"), "{e}");
+    }
+
+    #[test]
+    fn whole_request_validation() {
+        assert!(validate_request_text("GET /healthz HTTP/1.1\r\n\r\n", MB).is_ok());
+        let ok = "POST /decision HTTP/1.1\r\nContent-Length: 6\r\n\r\n1 2 3\n";
+        assert!(validate_request_text(ok, MB).is_ok());
+        let e = validate_request_text("GET /healthz HTTP/1.1\r\n", MB).unwrap_err();
+        assert_eq!(e.status, 400, "no head terminator");
+        let short = "POST /decision HTTP/1.1\r\nContent-Length: 60\r\n\r\n1 2 3\n";
+        let e = validate_request_text(short, MB).unwrap_err();
+        assert_eq!(e.status, 400, "body shorter than declared");
+    }
+
+    #[test]
+    fn split_multibyte_body_is_a_400_not_a_panic() {
+        // Content-Length lands mid-way through the 3-byte '€' so the
+        // live reader would slice an invalid UTF-8 body out of the
+        // stream; the whole request text is itself valid UTF-8.
+        let req = "POST /decision HTTP/1.1\r\nContent-Length: 5\r\n\r\n1 2 €\n";
+        let e = validate_request_text(req, MB).unwrap_err();
+        assert_eq!(e.status, 400);
+        assert!(e.reason.contains("utf-8"), "{e}");
+    }
+
+    #[test]
+    fn reply_status_mapping() {
+        assert_eq!(status_for_reply("ok -1 margin=-1.2500"), 200);
+        assert_eq!(status_for_reply("err queue full (256 pending); request rejected"), 503);
+        assert_eq!(status_for_reply("err request shed: queue overflowed while waiting"), 503);
+        assert_eq!(
+            status_for_reply("err deadline exceeded: waited 120ms against a 50ms deadline"),
+            504
+        );
+        assert_eq!(status_for_reply("err unknown model \"champ\""), 404);
+        assert_eq!(status_for_reply("err io: connection reset"), 500);
+        assert_eq!(status_for_reply("err bad request: bad feature value \"x\""), 400);
+    }
+}

@@ -1,0 +1,210 @@
+//! The serving layer's one telemetry surface.
+//!
+//! Every signal the server used to scatter across `ProtoStats`
+//! atomics, `BatchEngine` totals, and the drift [`Monitor`] is
+//! registered here, on a single [`crate::telemetry::Registry`] that
+//! `GET /metrics` renders.  Three publication styles:
+//!
+//! * **source counters** — connection policing and HTTP events
+//!   increment their [`Counter`] at the site where they happen
+//!   (connection threads, accept loops), lock-free;
+//! * **mirrored totals** — the engine and monitor own their stats as
+//!   plain fields on the engine thread; [`ServeMetrics::publish_engine`]
+//!   / [`publish_drift`](ServeMetrics::publish_drift) republish them
+//!   after every burst (`Counter::set_total` — a store, not a
+//!   double-count);
+//! * **latency histograms** — the HTTP front end observes every
+//!   request's wall time into `serve_http_request_ns`.
+//!
+//! The legacy `stats` protocol line is now a *view* over the same
+//! counters ([`ServeMetrics::proto_stats`]), so the line protocol and
+//! the HTTP scrape can never disagree.
+
+use super::batch::EngineStats;
+use super::monitor::DriftReport;
+use super::proto::ProtoStats;
+use crate::telemetry::{Counter, Gauge, Histogram, Registry};
+use std::sync::Arc;
+
+/// Registered handles for every serving metric (see the module docs
+/// for the three publication styles, and EXPERIMENTS.md §Serve for
+/// the full name inventory).
+pub(crate) struct ServeMetrics {
+    /// The registry behind `GET /metrics`.
+    pub registry: Arc<Registry>,
+
+    // -- line-protocol connection policing (source counters) --
+    pub connections: Arc<Counter>,
+    pub idle_timeouts: Arc<Counter>,
+    pub oversize_lines: Arc<Counter>,
+    pub busy_rejected: Arc<Counter>,
+    pub auth_failures: Arc<Counter>,
+
+    // -- engine totals (mirrored after every burst) --
+    pub engine_submitted: Arc<Counter>,
+    pub engine_served: Arc<Counter>,
+    pub engine_shed: Arc<Counter>,
+    pub engine_expired: Arc<Counter>,
+    pub engine_batches: Arc<Counter>,
+    pub engine_rows: Arc<Counter>,
+    pub queue_depth: Arc<Gauge>,
+    pub queue_peak: Arc<Gauge>,
+
+    // -- drift monitor (mirrored after every burst) --
+    pub decisions: Arc<Counter>,
+    pub feedback: Arc<Counter>,
+    pub window_accuracy: Arc<Gauge>,
+    pub low_margin_fraction: Arc<Gauge>,
+    pub mean_abs_margin: Arc<Gauge>,
+
+    // -- HTTP front end (source counters + latency histogram) --
+    pub http_connections: Arc<Counter>,
+    pub http_requests: Arc<Counter>,
+    pub http_2xx: Arc<Counter>,
+    pub http_4xx: Arc<Counter>,
+    pub http_5xx: Arc<Counter>,
+    pub http_read_errors: Arc<Counter>,
+    pub http_idle_timeouts: Arc<Counter>,
+    pub http_oversize: Arc<Counter>,
+    pub http_busy: Arc<Counter>,
+    pub http_request_ns: Arc<Histogram>,
+}
+
+impl ServeMetrics {
+    pub fn new() -> Self {
+        let registry = Registry::new();
+        Self {
+            connections: registry.counter("serve_connections_total"),
+            idle_timeouts: registry.counter("serve_idle_timeouts_total"),
+            oversize_lines: registry.counter("serve_oversize_lines_total"),
+            busy_rejected: registry.counter("serve_busy_rejected_total"),
+            auth_failures: registry.counter("serve_auth_failures_total"),
+            engine_submitted: registry.counter("serve_engine_submitted_total"),
+            engine_served: registry.counter("serve_engine_served_total"),
+            engine_shed: registry.counter("serve_engine_shed_total"),
+            engine_expired: registry.counter("serve_engine_expired_total"),
+            engine_batches: registry.counter("serve_engine_batches_total"),
+            engine_rows: registry.counter("serve_engine_rows_total"),
+            queue_depth: registry.gauge("serve_queue_depth"),
+            queue_peak: registry.gauge("serve_queue_peak"),
+            decisions: registry.counter("serve_decisions_total"),
+            feedback: registry.counter("serve_feedback_total"),
+            window_accuracy: registry.gauge("serve_window_accuracy"),
+            low_margin_fraction: registry.gauge("serve_low_margin_fraction"),
+            mean_abs_margin: registry.gauge("serve_mean_abs_margin"),
+            http_connections: registry.counter("serve_http_connections_total"),
+            http_requests: registry.counter("serve_http_requests_total"),
+            http_2xx: registry.counter("serve_http_responses_2xx_total"),
+            http_4xx: registry.counter("serve_http_responses_4xx_total"),
+            http_5xx: registry.counter("serve_http_responses_5xx_total"),
+            http_read_errors: registry.counter("serve_http_read_errors_total"),
+            http_idle_timeouts: registry.counter("serve_http_idle_timeouts_total"),
+            http_oversize: registry.counter("serve_http_oversize_total"),
+            http_busy: registry.counter("serve_http_busy_total"),
+            http_request_ns: registry.histogram("serve_http_request_ns"),
+            registry,
+        }
+    }
+
+    /// The `stats`-line view over the connection-policing counters
+    /// (what [`super::proto::ServeReport`] reports as `proto`).
+    pub fn proto_stats(&self) -> ProtoStats {
+        ProtoStats {
+            idle_timeouts: self.idle_timeouts.get(),
+            oversize_lines: self.oversize_lines.get(),
+            busy_rejected: self.busy_rejected.get(),
+        }
+    }
+
+    /// Mirror the engine's totals (engine thread, after each burst).
+    pub fn publish_engine(&self, s: &EngineStats, queued: usize) {
+        self.engine_submitted.set_total(s.submitted);
+        self.engine_served.set_total(s.served);
+        self.engine_shed.set_total(s.shed);
+        self.engine_expired.set_total(s.expired);
+        self.engine_batches.set_total(s.batches);
+        self.engine_rows.set_total(s.rows);
+        self.queue_depth.set(queued as f64);
+        self.queue_peak.set(s.queue_peak as f64);
+    }
+
+    /// Mirror the drift monitor's report (engine thread, after each
+    /// burst).  `serve_window_accuracy` is `-1` until feedback exists.
+    pub fn publish_drift(&self, r: &DriftReport) {
+        self.decisions.set_total(r.served);
+        self.feedback.set_total(r.feedback_seen);
+        self.window_accuracy.set(r.window_accuracy.unwrap_or(-1.0));
+        self.low_margin_fraction.set(r.low_margin_fraction);
+        self.mean_abs_margin.set(r.mean_abs_margin);
+    }
+
+    /// Count one HTTP response by status class.
+    pub fn http_response(&self, status: u16) {
+        match status / 100 {
+            2 => self.http_2xx.inc(),
+            4 => self.http_4xx.inc(),
+            _ => self.http_5xx.inc(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mirrors_land_in_the_registry() {
+        let m = ServeMetrics::new();
+        m.idle_timeouts.inc();
+        let stats = EngineStats {
+            submitted: 9,
+            served: 7,
+            shed: 2,
+            batches: 3,
+            rows: 7,
+            queue_peak: 4,
+            expired: 0,
+        };
+        m.publish_engine(&stats, 1);
+        m.publish_drift(&DriftReport {
+            served: 7,
+            low_margin_fraction: 0.25,
+            mean_abs_margin: 1.5,
+            window_accuracy: None,
+            feedback_seen: 0,
+            degrade: Default::default(),
+        });
+        let snap = m.registry.snapshot();
+        assert_eq!(snap.counters["serve_idle_timeouts_total"], 1);
+        assert_eq!(snap.counters["serve_engine_served_total"], 7);
+        assert_eq!(snap.gauges["serve_queue_peak"], 4.0);
+        assert_eq!(snap.gauges["serve_window_accuracy"], -1.0, "na renders as -1");
+        let proto = ProtoStats { idle_timeouts: 1, oversize_lines: 0, busy_rejected: 0 };
+        assert_eq!(m.proto_stats(), proto);
+        // republishing overwrites, never double-counts
+        let stats = EngineStats {
+            submitted: 10,
+            served: 8,
+            shed: 2,
+            batches: 4,
+            rows: 8,
+            queue_peak: 4,
+            expired: 0,
+        };
+        m.publish_engine(&stats, 0);
+        assert_eq!(m.registry.snapshot().counters["serve_engine_served_total"], 8);
+    }
+
+    #[test]
+    fn http_responses_count_by_class() {
+        let m = ServeMetrics::new();
+        m.http_response(200);
+        m.http_response(404);
+        m.http_response(503);
+        m.http_response(504);
+        let snap = m.registry.snapshot();
+        assert_eq!(snap.counters["serve_http_responses_2xx_total"], 1);
+        assert_eq!(snap.counters["serve_http_responses_4xx_total"], 1);
+        assert_eq!(snap.counters["serve_http_responses_5xx_total"], 2);
+    }
+}

@@ -27,7 +27,10 @@
 //!   (`push-artifact` / `activate` / `rollback` / `fleet-status`),
 //!   answered by a [`FleetHandler`] — see [`crate::fleet`] for the
 //!   replica state, the artifact format, and the consistent-hash
-//!   router that fronts a set of these servers.
+//!   router that fronts a set of these servers.  [`serve_bound`] adds
+//!   an optional [`http`] front end (`POST /predict|/decision`,
+//!   `GET /metrics|/healthz`) feeding the same engine channel, so
+//!   HTTP answers are bit-identical to line-protocol answers.
 //!
 //! [`Monitor`] watches served traffic for drift: a rolling
 //! decision-margin histogram plus a label-feedback accuracy window that
@@ -53,13 +56,18 @@
 //! ```
 
 mod batch;
+pub mod http;
+mod metrics;
 mod monitor;
 pub mod proto;
 mod registry;
 
 pub use batch::{BatchEngine, Decision, EngineStats, ShedPolicy};
 pub use monitor::{DegradeTotals, DriftReport, Monitor, MARGIN_BINS};
-pub use proto::{serve, serve_fleet, Command, FleetHandler, ProtoStats, ServeOptions, ServeReport};
+pub use proto::{
+    serve, serve_bound, serve_fleet, serve_fleet_bound, Command, FleetHandler, ProtoStats,
+    ServeOptions, ServeReport,
+};
 pub use registry::{route_hash, ModelRegistry, ModelStatus, RouteArm, RouteSpec};
 
 pub use crate::error::ServeError;

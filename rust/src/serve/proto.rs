@@ -23,8 +23,17 @@
 //! rollback <name>              ->  ok rollback <name>@v<N> registry=v<R>
 //! fleet-status                 ->  ok fleet models=.. staged=.. acc=..
 //! shutdown                     ->  ok bye          (then the server exits)
+//! auth <token>                 ->  ok authed       (see below)
 //! <anything malformed>         ->  err <reason>    (connection stays up)
 //! ```
+//!
+//! When [`ServeOptions::auth_token`] is set, `auth <token>` must be a
+//! connection's **first** command: anything else answers
+//! `err unauthorized` and the connection closes (the handshake is
+//! handled connection-side, so an unauthenticated peer never reaches
+//! the engine).  After a successful handshake a repeated `auth` is a
+//! `BadRequest` like any other malformed line.  The HTTP front end
+//! enforces the same token per request via `Authorization: Bearer`.
 //!
 //! `key=K` drives [`super::ModelRegistry`]'s deterministic A/B routing
 //! (same key ⇒ same model); unkeyed requests route on their request id.
@@ -63,6 +72,8 @@
 //! model.
 
 use super::batch::{BatchEngine, EngineStats};
+use super::http;
+use super::metrics::ServeMetrics;
 use super::monitor::{DegradeTotals, DriftReport, Monitor};
 use super::registry::ModelRegistry;
 use super::ShedPolicy;
@@ -72,13 +83,13 @@ use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 /// How long a blocked connection read waits before re-checking the
 /// stop flag (also the accept-poll interval).
-const POLL: Duration = Duration::from_millis(50);
+pub(crate) const POLL: Duration = Duration::from_millis(50);
 
 /// Per-connection bound on answered-but-unwritten reply lines.  The
 /// request side is bounded by the engine queue (`queue_max` + shed
@@ -87,7 +98,7 @@ const POLL: Duration = Duration::from_millis(50);
 /// backlog are dropped (the connection is already desynced — such a
 /// client has violated the one-reply-per-line contract by orders of
 /// magnitude), keeping server memory bounded per connection.
-const REPLY_BACKLOG: usize = 1024;
+pub(crate) const REPLY_BACKLOG: usize = 1024;
 
 /// A parsed protocol command.
 #[derive(Clone, Debug, PartialEq)]
@@ -281,6 +292,14 @@ pub struct ServeOptions {
     /// header answers `err` and the connection is closed (the client
     /// was about to stream that many bytes).
     pub max_artifact_bytes: usize,
+    /// Largest accepted HTTP request body in bytes; bigger
+    /// `Content-Length` headers answer `413` (HTTP front end only).
+    pub max_body_bytes: usize,
+    /// Shared-secret auth token; empty disables auth.  When set, the
+    /// line protocol requires an `auth <token>` handshake as each
+    /// connection's first command and the HTTP front end requires
+    /// `Authorization: Bearer <token>` on every request.
+    pub auth_token: String,
 }
 
 impl Default for ServeOptions {
@@ -295,11 +314,16 @@ impl Default for ServeOptions {
             max_conns: 1024,
             deadline: Duration::ZERO,
             max_artifact_bytes: 16 * 1024 * 1024,
+            max_body_bytes: 1024 * 1024,
+            auth_token: String::new(),
         }
     }
 }
 
 /// Connection-policing totals (the degradation half of `stats`).
+/// Since the telemetry migration this is a *view* over the
+/// [`ServeMetrics`] counters ([`ServeMetrics::proto_stats`]) — the
+/// `stats` line and `GET /metrics` read the same atomics.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ProtoStats {
     /// Connections closed for idling past `idle_timeout`.
@@ -310,32 +334,14 @@ pub struct ProtoStats {
     pub busy_rejected: u64,
 }
 
-/// Shared atomic counters behind [`ProtoStats`]: written by connection
-/// threads and the accept loop, snapshotted by the engine thread.
-#[derive(Default)]
-struct ProtoCounters {
-    idle_timeouts: AtomicU64,
-    oversize_lines: AtomicU64,
-    busy_rejected: AtomicU64,
-}
-
-impl ProtoCounters {
-    fn snapshot(&self) -> ProtoStats {
-        ProtoStats {
-            idle_timeouts: self.idle_timeouts.load(Ordering::Relaxed),
-            oversize_lines: self.oversize_lines.load(Ordering::Relaxed),
-            busy_rejected: self.busy_rejected.load(Ordering::Relaxed),
-        }
-    }
-}
-
-/// Per-connection read-loop limits (a `Copy` slice of [`ServeOptions`]
-/// so connection threads don't need the whole options struct).
-#[derive(Clone, Copy)]
+/// Per-connection read-loop limits (a slice of [`ServeOptions`] so
+/// connection threads don't need the whole options struct).
+#[derive(Clone)]
 struct ConnLimits {
     idle_timeout: Duration,
     max_line_bytes: usize,
     max_artifact_bytes: usize,
+    auth_token: String,
 }
 
 /// Server-side handler for the fleet verbs (`push-artifact` /
@@ -374,9 +380,9 @@ pub struct ServeReport {
 /// bounded ([`REPLY_BACKLOG`]) and the engine only ever `try_send`s —
 /// a stalled client can cost at most a fixed backlog, never engine
 /// stalls or unbounded memory.
-struct Incoming {
-    cmd: Result<Command, ServeError>,
-    reply: mpsc::SyncSender<String>,
+pub(crate) struct Incoming {
+    pub(crate) cmd: Result<Command, ServeError>,
+    pub(crate) reply: mpsc::SyncSender<String>,
 }
 
 /// What kind of reply a queued batch request expects.
@@ -408,7 +414,7 @@ pub fn serve(
     registry: ModelRegistry,
     opts: &ServeOptions,
 ) -> Result<ServeReport, ServeError> {
-    serve_impl(listener, registry, opts, None)
+    serve_impl(listener, None, registry, opts, None)
 }
 
 /// [`serve`] with the fleet verbs enabled: `handler` (normally a
@@ -421,42 +427,86 @@ pub fn serve_fleet(
     opts: &ServeOptions,
     handler: &mut dyn FleetHandler,
 ) -> Result<ServeReport, ServeError> {
-    serve_impl(listener, registry, opts, Some(handler))
+    serve_impl(listener, None, registry, opts, Some(handler))
+}
+
+/// [`serve`] with an optional HTTP/1.1 front end: connections on
+/// `http` speak `POST /predict|/decision` + `GET /metrics|/healthz`
+/// (see [`super::http`]) and feed the **same** engine channel as the
+/// line protocol, so HTTP-batched answers are bit-identical to
+/// line-protocol answers by construction.
+pub fn serve_bound(
+    listener: TcpListener,
+    http: Option<TcpListener>,
+    registry: ModelRegistry,
+    opts: &ServeOptions,
+) -> Result<ServeReport, ServeError> {
+    serve_impl(listener, http, registry, opts, None)
+}
+
+/// [`serve_bound`] with the fleet verbs enabled (fleet verbs stay
+/// line-protocol-only; HTTP carries queries and observability).
+pub fn serve_fleet_bound(
+    listener: TcpListener,
+    http: Option<TcpListener>,
+    registry: ModelRegistry,
+    opts: &ServeOptions,
+    handler: &mut dyn FleetHandler,
+) -> Result<ServeReport, ServeError> {
+    serve_impl(listener, http, registry, opts, Some(handler))
 }
 
 fn serve_impl(
     listener: TcpListener,
+    http: Option<TcpListener>,
     registry: ModelRegistry,
     opts: &ServeOptions,
     fleet: Option<&mut dyn FleetHandler>,
 ) -> Result<ServeReport, ServeError> {
     listener.set_nonblocking(true)?;
+    if let Some(hl) = &http {
+        hl.set_nonblocking(true)?;
+    }
     let stop = AtomicBool::new(false);
-    let counters = ProtoCounters::default();
+    let metrics = ServeMetrics::new();
     let active = AtomicUsize::new(0);
     let (tx, rx) = mpsc::channel::<Incoming>();
     let opts = opts.clone();
     std::thread::scope(|s| {
         let stop = &stop;
-        let counters = &counters;
+        let metrics = &metrics;
         let active = &active;
+        let opts_ref = &opts;
         let limits = ConnLimits {
             idle_timeout: opts.idle_timeout,
             max_line_bytes: opts.max_line_bytes,
             max_artifact_bytes: opts.max_artifact_bytes,
+            auth_token: opts.auth_token.clone(),
         };
         let max_conns = opts.max_conns;
+        let http_acceptor = http.map(|hl| {
+            let tx = tx.clone();
+            s.spawn(move || http::accept_loop(hl, tx, stop, s, opts_ref, metrics, active))
+        });
         let acceptor = s.spawn(move || {
-            accept_loop(listener, tx, stop, s, limits, max_conns, counters, active)
+            accept_loop(listener, tx, stop, s, limits, max_conns, metrics, active)
         });
         // The engine owns the (non-Send) registry and runs here; it
         // returns once every channel sender is gone — i.e. after the
-        // accept loop and every connection reader have exited.
-        let (engine, drift) = engine_loop(registry, opts, rx, counters, fleet);
+        // accept loops and every connection reader have exited.
+        let (engine, drift) = engine_loop(registry, opts_ref, rx, metrics, fleet);
+        let http_err = match http_acceptor.map(|h| h.join()) {
+            None => None,
+            Some(Ok(e)) => e,
+            Some(Err(_)) => Some(ServeError::Io("http accept thread panicked".into())),
+        };
         match acceptor.join() {
-            Ok((connections, None)) => {
-                Ok(ServeReport { connections, engine, drift, proto: counters.snapshot() })
-            }
+            Ok((connections, None)) => match http_err {
+                None => {
+                    Ok(ServeReport { connections, engine, drift, proto: metrics.proto_stats() })
+                }
+                Some(e) => Err(e),
+            },
             Ok((_, Some(e))) => Err(e),
             Err(_) => Err(ServeError::Io("accept thread panicked".into())),
         }
@@ -475,7 +525,7 @@ fn accept_loop<'scope, 'env>(
     s: &'scope std::thread::Scope<'scope, 'env>,
     limits: ConnLimits,
     max_conns: usize,
-    counters: &'scope ProtoCounters,
+    metrics: &'scope ServeMetrics,
     active: &'scope AtomicUsize,
 ) -> (u64, Option<ServeError>) {
     let mut connections = 0u64;
@@ -489,7 +539,7 @@ fn accept_loop<'scope, 'env>(
                 // instead of accepting unboundedly (each connection
                 // costs two scoped threads + a reply backlog).
                 if max_conns > 0 && active.load(Ordering::Relaxed) >= max_conns {
-                    counters.busy_rejected.fetch_add(1, Ordering::Relaxed);
+                    metrics.busy_rejected.inc();
                     // best effort: the socket may inherit the
                     // listener's nonblocking flag
                     let _ = stream.set_nonblocking(false);
@@ -498,10 +548,12 @@ fn accept_loop<'scope, 'env>(
                     continue; // dropped => closed
                 }
                 connections += 1;
+                metrics.connections.inc();
                 active.fetch_add(1, Ordering::Relaxed);
                 let tx = tx.clone();
+                let limits = limits.clone();
                 s.spawn(move || {
-                    connection_loop(stream, tx, stop, limits, counters);
+                    connection_loop(stream, tx, stop, limits, metrics);
                     active.fetch_sub(1, Ordering::Relaxed);
                 });
             }
@@ -526,7 +578,7 @@ fn connection_loop(
     tx: mpsc::Sender<Incoming>,
     stop: &AtomicBool,
     limits: ConnLimits,
-    counters: &ProtoCounters,
+    metrics: &ServeMetrics,
 ) {
     // Accepted sockets inherit the listener's nonblocking flag on some
     // platforms (Windows); the reader wants blocking reads with a
@@ -564,6 +616,9 @@ fn connection_loop(
         // After an oversized line is answered, swallow the rest of it
         // (up to its newline) without replying again.
         let mut discarding = false;
+        // With auth enabled, the connection is untrusted until its
+        // first line is a valid `auth <token>` handshake.
+        let mut authed = limits.auth_token.is_empty();
         loop {
             if stop.load(Ordering::Relaxed) {
                 break;
@@ -588,11 +643,17 @@ fn connection_loop(
                         continue;
                     }
                     if buf.len() > limits.max_line_bytes {
-                        counters.oversize_lines.fetch_add(1, Ordering::Relaxed);
+                        metrics.oversize_lines.inc();
                         let e = ServeError::BadRequest(format!(
                             "line exceeds {} bytes",
                             limits.max_line_bytes
                         ));
+                        if !authed {
+                            // an untrusted peer doesn't get to keep the
+                            // connection open after an oversized line
+                            let _ = reply_tx.try_send(format!("err {e}"));
+                            break;
+                        }
                         // through the engine, so the err reply stays in
                         // FIFO position relative to queued requests
                         if tx.send(Incoming { cmd: Err(e), reply: reply_tx.clone() }).is_err() {
@@ -600,6 +661,33 @@ fn connection_loop(
                         }
                         buf.clear();
                         continue;
+                    }
+                    // Auth handshake gate: until the first line is a
+                    // valid `auth <token>`, nothing reaches the engine.
+                    if !authed {
+                        let line = match std::str::from_utf8(&buf) {
+                            Ok(t) => t.trim().to_string(),
+                            // non-UTF-8 is certainly not the handshake
+                            Err(_) => "\u{FFFD}".into(),
+                        };
+                        buf.clear();
+                        if line.is_empty() {
+                            continue;
+                        }
+                        let ok = line
+                            .strip_prefix("auth ")
+                            .map(|tok| tok.trim() == limits.auth_token)
+                            .unwrap_or(false);
+                        if ok {
+                            authed = true;
+                            // direct replies are safe pre-auth: nothing
+                            // from this connection is in flight yet
+                            let _ = reply_tx.try_send("ok authed".into());
+                            continue;
+                        }
+                        metrics.auth_failures.inc();
+                        let _ = reply_tx.try_send(format!("err {}", ServeError::Unauthorized));
+                        break;
                     }
                     // `push-artifact <len>` switches the reader into
                     // its one length-delimited mode: exactly <len>
@@ -659,7 +747,7 @@ fn connection_loop(
                                     if !limits.idle_timeout.is_zero()
                                         && last_rx.elapsed() >= limits.idle_timeout
                                     {
-                                        counters.idle_timeouts.fetch_add(1, Ordering::Relaxed);
+                                        metrics.idle_timeouts.inc();
                                         alive = false;
                                         break;
                                     }
@@ -724,11 +812,15 @@ fn connection_loop(
                     // then discarded) *now*; waiting for its newline
                     // would let one line grow server memory unboundedly
                     if !discarding && buf.len() > limits.max_line_bytes {
-                        counters.oversize_lines.fetch_add(1, Ordering::Relaxed);
+                        metrics.oversize_lines.inc();
                         let e = ServeError::BadRequest(format!(
                             "line exceeds {} bytes",
                             limits.max_line_bytes
                         ));
+                        if !authed {
+                            let _ = reply_tx.try_send(format!("err {e}"));
+                            break;
+                        }
                         if tx.send(Incoming { cmd: Err(e), reply: reply_tx.clone() }).is_err() {
                             break;
                         }
@@ -738,7 +830,7 @@ fn connection_loop(
                     if !limits.idle_timeout.is_zero()
                         && last_rx.elapsed() >= limits.idle_timeout
                     {
-                        counters.idle_timeouts.fetch_add(1, Ordering::Relaxed);
+                        metrics.idle_timeouts.inc();
                         // direct reply is safe: an idle connection has
                         // no replies in flight (the engine drains after
                         // every burst)
@@ -762,9 +854,9 @@ fn connection_loop(
 /// command replies (per-connection FIFO by construction).
 fn engine_loop(
     mut registry: ModelRegistry,
-    opts: ServeOptions,
+    opts: &ServeOptions,
     rx: mpsc::Receiver<Incoming>,
-    counters: &ProtoCounters,
+    metrics: &ServeMetrics,
     mut fleet: Option<&mut dyn FleetHandler>,
 ) -> (EngineStats, DriftReport) {
     let mut engine = BatchEngine::new(opts.batch_max, opts.queue_max, opts.shed);
@@ -805,7 +897,7 @@ fn engine_loop(
                 }
                 Command::Stats => {
                     drain(&mut engine, &mut registry, &mut waiting, &mut monitor);
-                    sync_degradation(&mut monitor, &engine, counters);
+                    sync_degradation(&mut monitor, &engine, metrics);
                     let _ = inc.reply.try_send(stats_line(&engine, &registry, &monitor));
                 }
                 Command::SwapModel { name, path } => {
@@ -865,15 +957,21 @@ fn engine_loop(
             }
         }
         drain(&mut engine, &mut registry, &mut waiting, &mut monitor);
+        // Republish the engine/drift mirrors after every burst, so a
+        // `/metrics` scrape is at most one burst stale.
+        metrics.publish_engine(&engine.stats(), engine.queued());
+        metrics.publish_drift(&monitor.report());
     }
-    sync_degradation(&mut monitor, &engine, counters);
+    sync_degradation(&mut monitor, &engine, metrics);
+    metrics.publish_engine(&engine.stats(), engine.queued());
+    metrics.publish_drift(&monitor.report());
     (engine.stats(), monitor.report())
 }
 
 /// Copy the latest shed/expired/policing totals into the monitor so
 /// one [`DriftReport`] carries both drift and degradation.
-fn sync_degradation(monitor: &mut Monitor, engine: &BatchEngine, counters: &ProtoCounters) {
-    let p = counters.snapshot();
+fn sync_degradation(monitor: &mut Monitor, engine: &BatchEngine, metrics: &ServeMetrics) {
+    let p = metrics.proto_stats();
     let s = engine.stats();
     monitor.set_degradation(DegradeTotals {
         shed: s.shed,

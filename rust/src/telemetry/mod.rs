@@ -1,0 +1,585 @@
+//! First-class serving telemetry: named counters, gauges, and
+//! log-spaced latency histograms behind one [`Registry`].
+//!
+//! The serving layer used to keep its observability in three ad-hoc
+//! places — `ProtoStats` atomics, `BatchEngine` totals, and the drift
+//! `Monitor` — all funneled into a hand-rolled `stats` line.  This
+//! module is the one surface they now publish to, and what the HTTP
+//! front end's `GET /metrics` renders:
+//!
+//! * [`Counter`] — monotone `u64` event counts (`fetch_add` relaxed;
+//!   incrementing is one uncontended atomic RMW, no lock).
+//! * [`Gauge`] — a point-in-time `f64` stored as bits in an atomic.
+//! * [`Histogram`] — fixed log-spaced buckets shared by **every**
+//!   histogram in the process (see [`bucket_bounds`]): `observe` is a
+//!   binary search plus three relaxed `fetch_add`s, and p50/p90/p99
+//!   come from a rank walk over the bucket counts with linear
+//!   interpolation inside the landing bucket, so quantile error is
+//!   bounded by the ~25% bucket width (measured ≤ 4% on
+//!   latency-shaped samples).
+//!
+//! [`Registry::render`] emits a line-oriented text exposition format
+//! (versioned header, `counter|gauge|histogram|bucket` records) that
+//! [`Snapshot::parse`] reads back losslessly — the golden test
+//! round-trips a scrape — and [`Snapshot::merge`] combines scrapes
+//! from many processes (fleet replicas) by element-wise addition.
+//!
+//! Everything is std-only; handles are `Arc`s so the hot path never
+//! touches the registry's name map after startup.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// First line of the text exposition format; bumped on layout changes
+/// so scrapers fail loudly instead of misparsing.
+pub const EXPOSITION_HEADER: &str = "# mmbsgd-metrics-v1";
+
+/// Snapshot bucket key for the open-ended overflow bucket (rendered
+/// as `inf`); real bounds never reach it (see [`bucket_bounds`]).
+pub const OVERFLOW: u64 = u64::MAX;
+
+/// Monotone event counter.  All orderings are `Relaxed`: counters
+/// synchronize nothing, they only have to end up right.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Add 1.
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Overwrite with an externally owned monotone total.  Mirror
+    /// mode: `BatchEngine` owns its stats as plain fields on the
+    /// engine thread; the serve loop republishes them here after each
+    /// burst rather than double-counting at every site.
+    pub fn set_total(&self, total: u64) {
+        self.0.store(total, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time `f64` value (queue depth, window accuracy, …) stored
+/// as raw bits in an atomic so readers never see a torn write.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// Replace the value.
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// The global histogram bucket upper bounds, computed once by the
+/// integer recurrence `b[i+1] = max(b[i] + 1, b[i] * 5 / 4)` from 1:
+/// unit steps through the single digits, then geometric with ratio
+/// ≤ 1.25 (so ~25% relative bucket width) — 192 bounds up to ~4.5e18,
+/// plus the open overflow bucket.  Pure integer math, so every
+/// process on every platform builds the identical table; the
+/// merge-of-snapshots and exposition golden tests rely on that.
+pub fn bucket_bounds() -> &'static [u64] {
+    static BOUNDS: OnceLock<Vec<u64>> = OnceLock::new();
+    BOUNDS.get_or_init(|| {
+        let mut v = vec![1u64];
+        loop {
+            let b = *v.last().expect("non-empty");
+            if b > u64::MAX / 5 {
+                break;
+            }
+            v.push((b + 1).max(b * 5 / 4));
+        }
+        v
+    })
+}
+
+/// Fixed-bucket log-spaced histogram (shared bounds, see
+/// [`bucket_bounds`]).  `observe` is lock-free; snapshots and
+/// quantiles read the atomics without stopping writers, so a scrape
+/// taken mid-burst is a consistent-enough point-in-time view (counts
+/// can trail `count` by in-flight increments, never corrupt).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    /// A fresh all-zero histogram over the global bounds.
+    pub fn new() -> Self {
+        let slots = bucket_bounds().len() + 1;
+        Self {
+            buckets: (0..slots).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value (bucket `i` holds `v ≤ bounds[i]`, the last
+    /// slot everything beyond the final bound).
+    pub fn observe(&self, v: u64) {
+        let idx = bucket_bounds().partition_point(|&b| b < v);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Record a [`std::time::Duration`] in nanoseconds (saturating —
+    /// a 585-year request is off the chart anyway).
+    pub fn observe_duration(&self, d: std::time::Duration) {
+        self.observe(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    /// Observations recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of observed values (wrapping at `u64::MAX`).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time copy (only non-empty buckets are materialized).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let bounds = bucket_bounds();
+        let mut buckets = BTreeMap::new();
+        for (i, slot) in self.buckets.iter().enumerate() {
+            let c = slot.load(Ordering::Relaxed);
+            if c > 0 {
+                buckets.insert(bounds.get(i).copied().unwrap_or(OVERFLOW), c);
+            }
+        }
+        HistogramSnapshot { count: self.count(), sum: self.sum(), buckets }
+    }
+
+    /// Estimate the `q`-quantile (see [`HistogramSnapshot::quantile`]).
+    pub fn quantile(&self, q: f64) -> u64 {
+        self.snapshot().quantile(q)
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Plain-data copy of one histogram: bucket upper bound → count
+/// ([`OVERFLOW`] keys the open bucket), plus totals.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistogramSnapshot {
+    /// Observations recorded.
+    pub count: u64,
+    /// Sum of observed values.
+    pub sum: u64,
+    /// Non-empty buckets only, keyed by upper bound.
+    pub buckets: BTreeMap<u64, u64>,
+}
+
+impl HistogramSnapshot {
+    /// Estimate the `q`-quantile (`q` clamped to `[0, 1]`) by rank
+    /// walk: find the bucket holding the `⌈q·count⌉`-th observation
+    /// and interpolate linearly inside it.  Error is bounded by the
+    /// bucket's relative width (~25%); the overflow bucket clamps to
+    /// the last finite bound.  Returns 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let bounds = bucket_bounds();
+        let mut cum = 0u64;
+        for (&hi, &c) in &self.buckets {
+            if cum + c >= target {
+                if hi == OVERFLOW {
+                    return *bounds.last().expect("non-empty bounds");
+                }
+                let i = bounds.partition_point(|&b| b < hi);
+                let lo = if i == 0 { 0 } else { bounds[i - 1] + 1 };
+                let into = (target - cum) as f64 / c as f64;
+                return lo + ((hi - lo) as f64 * into).round() as u64;
+            }
+            cum += c;
+        }
+        *bounds.last().expect("non-empty bounds")
+    }
+
+    /// Mean observed value (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+/// The one metrics surface: named metric handles, registered once and
+/// then updated lock-free through their `Arc`s.  Registration
+/// get-or-creates, so two subsystems naming the same counter share it.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.' | '/' | ':'))
+}
+
+impl Registry {
+    /// A fresh shared registry.
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Get-or-register the named counter.  Names are compile-time
+    /// constants in this codebase, so an invalid one is a programmer
+    /// error (panics; whitespace would corrupt the exposition format).
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        assert!(valid_name(name), "invalid metric name {name:?}");
+        let mut m = self.counters.lock().expect("telemetry registry lock");
+        Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
+    /// Get-or-register the named gauge.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        assert!(valid_name(name), "invalid metric name {name:?}");
+        let mut m = self.gauges.lock().expect("telemetry registry lock");
+        Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
+    /// Get-or-register the named histogram.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        assert!(valid_name(name), "invalid metric name {name:?}");
+        let mut m = self.histograms.lock().expect("telemetry registry lock");
+        Arc::clone(m.entry(name.to_string()).or_insert_with(|| Arc::new(Histogram::new())))
+    }
+
+    /// Point-in-time copy of every metric.
+    pub fn snapshot(&self) -> Snapshot {
+        let counters = self
+            .counters
+            .lock()
+            .expect("telemetry registry lock")
+            .iter()
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect();
+        let gauges = self
+            .gauges
+            .lock()
+            .expect("telemetry registry lock")
+            .iter()
+            .map(|(k, v)| (k.clone(), v.get()))
+            .collect();
+        let histograms = self
+            .histograms
+            .lock()
+            .expect("telemetry registry lock")
+            .iter()
+            .map(|(k, v)| (k.clone(), v.snapshot()))
+            .collect();
+        Snapshot { counters, gauges, histograms }
+    }
+
+    /// Render the text exposition format (what `GET /metrics` serves).
+    pub fn render(&self) -> String {
+        self.snapshot().render()
+    }
+}
+
+/// Plain-data copy of a whole registry; the parse target of the
+/// exposition format and the unit of cross-process merging.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    /// Counter name → value.
+    pub counters: BTreeMap<String, u64>,
+    /// Gauge name → value.
+    pub gauges: BTreeMap<String, f64>,
+    /// Histogram name → buckets and totals.
+    pub histograms: BTreeMap<String, HistogramSnapshot>,
+}
+
+impl Snapshot {
+    /// Render the versioned text exposition format:
+    ///
+    /// ```text
+    /// # mmbsgd-metrics-v1
+    /// counter <name> <u64>
+    /// gauge <name> <f64>
+    /// histogram <name> count <u64> sum <u64>
+    /// bucket <name> <upper-bound|inf> <u64>
+    /// ```
+    ///
+    /// Gauges print with Rust's shortest round-trip `f64` formatting
+    /// and only non-empty buckets are listed, so
+    /// [`Snapshot::parse`]`(render())` reproduces the snapshot
+    /// exactly (pinned by the golden test).
+    pub fn render(&self) -> String {
+        let mut out = String::from(EXPOSITION_HEADER);
+        out.push('\n');
+        for (name, v) in &self.counters {
+            out.push_str(&format!("counter {name} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            out.push_str(&format!("gauge {name} {v}\n"));
+        }
+        for (name, h) in &self.histograms {
+            out.push_str(&format!("histogram {name} count {} sum {}\n", h.count, h.sum));
+            for (&b, &c) in &h.buckets {
+                if b == OVERFLOW {
+                    out.push_str(&format!("bucket {name} inf {c}\n"));
+                } else {
+                    out.push_str(&format!("bucket {name} {b} {c}\n"));
+                }
+            }
+        }
+        out
+    }
+
+    /// Parse a scrape back into a snapshot (inverse of
+    /// [`Snapshot::render`]; extra `#` comment lines and blank lines
+    /// are tolerated, anything else malformed is a typed error).
+    pub fn parse(text: &str) -> Result<Snapshot, String> {
+        let mut lines = text.lines();
+        match lines.next() {
+            Some(h) if h.trim() == EXPOSITION_HEADER => {}
+            other => return Err(format!("bad exposition header {other:?}")),
+        }
+        let mut snap = Snapshot::default();
+        for line in lines {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            let fail = || format!("malformed metrics line {line:?}");
+            match toks.as_slice() {
+                ["counter", name, v] => {
+                    let v: u64 = v.parse().map_err(|_| fail())?;
+                    snap.counters.insert(name.to_string(), v);
+                }
+                ["gauge", name, v] => {
+                    let v: f64 = v.parse().map_err(|_| fail())?;
+                    snap.gauges.insert(name.to_string(), v);
+                }
+                ["histogram", name, "count", c, "sum", s] => {
+                    let h = snap.histograms.entry(name.to_string()).or_default();
+                    h.count = c.parse().map_err(|_| fail())?;
+                    h.sum = s.parse().map_err(|_| fail())?;
+                }
+                ["bucket", name, bound, c] => {
+                    let b = if *bound == "inf" {
+                        OVERFLOW
+                    } else {
+                        bound.parse().map_err(|_| fail())?
+                    };
+                    let c: u64 = c.parse().map_err(|_| fail())?;
+                    snap.histograms.entry(name.to_string()).or_default().buckets.insert(b, c);
+                }
+                _ => return Err(fail()),
+            }
+        }
+        Ok(snap)
+    }
+
+    /// Merge another snapshot in: counters and histogram buckets add
+    /// element-wise (cross-replica totals), gauges take `other`'s
+    /// value (a merged point-in-time reading has no meaningful sum).
+    pub fn merge(&mut self, other: &Snapshot) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, h) in &other.histograms {
+            let e = self.histograms.entry(k.clone()).or_default();
+            e.count += h.count;
+            e.sum = e.sum.wrapping_add(h.sum);
+            for (&b, &c) in &h.buckets {
+                *e.buckets.entry(b).or_insert(0) += c;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn bucket_bounds_are_log_spaced_and_deterministic() {
+        let b = bucket_bounds();
+        assert_eq!(&b[..12], &[1, 2, 3, 4, 5, 6, 7, 8, 10, 12, 15, 18]);
+        for w in b.windows(2) {
+            assert!(w[1] > w[0], "bounds must be strictly increasing");
+            // relative width never exceeds the 25% design ratio (+1
+            // for the integer unit steps at the bottom)
+            assert!(w[1] - w[0] <= w[0] / 4 + 1, "bucket too wide at {w:?}");
+        }
+        assert!(b.len() > 150 && b.len() < 256, "unexpected table size {}", b.len());
+        assert!(*b.last().unwrap() > u64::MAX / 5, "table must cover the u64 range");
+    }
+
+    #[test]
+    fn observe_places_boundaries_exactly() {
+        let h = Histogram::new();
+        // bucket i holds v <= bounds[i]: 1 and 2 land in different
+        // buckets, 9 and 10 share the (8, 10] bucket
+        h.observe(1);
+        h.observe(2);
+        h.observe(9);
+        h.observe(10);
+        h.observe(u64::MAX); // overflow bucket
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.buckets.get(&1), Some(&1));
+        assert_eq!(s.buckets.get(&2), Some(&1));
+        assert_eq!(s.buckets.get(&10), Some(&2));
+        assert_eq!(s.buckets.get(&OVERFLOW), Some(&1));
+        let want_sum =
+            1u64.wrapping_add(2).wrapping_add(9).wrapping_add(10).wrapping_add(u64::MAX);
+        assert_eq!(s.sum, want_sum);
+    }
+
+    #[test]
+    fn quantiles_track_exact_sorted_reference() {
+        // latency-shaped samples at several scales; the estimator must
+        // stay inside one bucket width (25% + 1) of the exact order
+        // statistic at every probed quantile
+        for (seed, scale) in [(1u64, 100u64), (2, 10_000), (3, 5_000_000)] {
+            let mut rng = Xoshiro256::new(seed);
+            let h = Histogram::new();
+            let mut vals: Vec<u64> = (0..8192)
+                .map(|_| {
+                    let base = rng.next_u64() % scale;
+                    let spike = if rng.next_u64() % 20 == 0 { scale * 8 } else { 0 };
+                    base + spike
+                })
+                .collect();
+            for &v in &vals {
+                h.observe(v);
+            }
+            vals.sort_unstable();
+            for q in [0.5, 0.9, 0.99] {
+                let rank = ((q * vals.len() as f64).ceil() as usize).max(1) - 1;
+                let exact = vals[rank] as f64;
+                let est = h.quantile(q) as f64;
+                assert!(
+                    (est - exact).abs() <= exact * 0.25 + 1.0,
+                    "seed {seed} q {q}: est {est} vs exact {exact}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantile_edge_cases() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0, "empty histogram answers 0");
+        h.observe(7);
+        assert_eq!(h.quantile(0.0), 7);
+        assert_eq!(h.quantile(1.0), 7);
+        let over = Histogram::new();
+        over.observe(u64::MAX);
+        assert_eq!(over.quantile(0.5), *bucket_bounds().last().unwrap());
+    }
+
+    #[test]
+    fn registry_get_or_registers_shared_handles() {
+        let r = Registry::new();
+        r.counter("a_total").inc();
+        r.counter("a_total").add(2);
+        assert_eq!(r.counter("a_total").get(), 3);
+        r.gauge("g").set(-1.5);
+        assert_eq!(r.gauge("g").get(), -1.5);
+        r.histogram("h_ns").observe(42);
+        assert_eq!(r.histogram("h_ns").count(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid metric name")]
+    fn whitespace_names_are_rejected() {
+        Registry::new().counter("bad name");
+    }
+
+    #[test]
+    fn exposition_golden_roundtrip() {
+        let r = Registry::new();
+        r.counter("serve_requests_total").add(17);
+        r.gauge("serve_window_accuracy").set(0.9875);
+        r.gauge("serve_queue_depth").set(-1.0);
+        let h = r.histogram("serve_http_request_ns");
+        for v in [3, 9, 250, 251, 1_000_000, u64::MAX] {
+            h.observe(v);
+        }
+        let text = r.render();
+        assert!(text.starts_with(EXPOSITION_HEADER));
+        assert!(text.contains("counter serve_requests_total 17"));
+        assert!(text.contains("histogram serve_http_request_ns count 6"));
+        assert!(text.contains("bucket serve_http_request_ns inf 1"));
+        let parsed = Snapshot::parse(&text).expect("scrape parses");
+        assert_eq!(parsed, r.snapshot(), "render -> parse must be lossless");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_scrapes() {
+        assert!(Snapshot::parse("").is_err(), "missing header");
+        assert!(Snapshot::parse("# wrong-header\n").is_err());
+        let hdr = format!("{EXPOSITION_HEADER}\n");
+        assert!(Snapshot::parse(&format!("{hdr}counter x notanumber\n")).is_err());
+        assert!(Snapshot::parse(&format!("{hdr}frobnicate x 1\n")).is_err());
+        assert!(Snapshot::parse(&format!("{hdr}bucket h nan 1\n")).is_err());
+        // comments and blank lines are fine
+        let ok = Snapshot::parse(&format!("{hdr}\n# note\ncounter x 1\n")).unwrap();
+        assert_eq!(ok.counters.get("x"), Some(&1));
+    }
+
+    #[test]
+    fn merge_adds_counters_and_buckets() {
+        let a = Registry::new();
+        let b = Registry::new();
+        a.counter("reqs").add(5);
+        b.counter("reqs").add(7);
+        b.counter("only_b").inc();
+        a.gauge("acc").set(0.5);
+        b.gauge("acc").set(0.75);
+        a.histogram("lat").observe(10);
+        b.histogram("lat").observe(10);
+        b.histogram("lat").observe(1_000);
+        let mut merged = a.snapshot();
+        merged.merge(&b.snapshot());
+        assert_eq!(merged.counters["reqs"], 12);
+        assert_eq!(merged.counters["only_b"], 1);
+        assert_eq!(merged.gauges["acc"], 0.75, "gauges take the newest reading");
+        let h = &merged.histograms["lat"];
+        assert_eq!(h.count, 3);
+        assert_eq!(h.sum, 1_020);
+        assert_eq!(h.buckets.get(&10), Some(&2));
+        // a merged snapshot still answers quantiles
+        assert!(h.quantile(0.99) >= 800);
+    }
+}

@@ -42,6 +42,10 @@ pub mod site {
     /// The per-connection read loop in `serve/proto.rs`: stall the
     /// reader or drop the connection.
     pub const PROTO_READ: &str = "proto.read";
+    /// The per-connection read loop in `serve/http.rs` (head and body
+    /// accumulation): stall the reader or drop the connection, counted
+    /// by `serve_http_read_errors_total`.
+    pub const HTTP_READ: &str = "http.read";
     /// [`crate::util::durable::read_artifact_verified`]: fail the
     /// artifact read with `io` or tear the text at `truncate:K` before
     /// verification.  Covers both fleet bundle loads

@@ -10,7 +10,9 @@
 //! * `pool.job` panic → contained by the pool, re-raised to the
 //!   caller, pool fully usable afterwards;
 //! * `proto.read` stall/io → the server answers late or drops that one
-//!   connection, and keeps serving others.
+//!   connection, and keeps serving others;
+//! * `http.read` stall/io → same contract on the HTTP front end, with
+//!   the drop counted by `serve_http_read_errors_total`.
 //!
 //! Fault state is process-global, so every test holds [`PLAN_LOCK`]
 //! for its whole body (not just the armed section — an unguarded
@@ -35,7 +37,7 @@ use mmbsgd::error::FleetError;
 use mmbsgd::fleet::{Artifact, Controller, Provenance, ReplicaState};
 use mmbsgd::model::SvmModel;
 use mmbsgd::runtime::{ArtifactRegistry, NativeBackend, WorkerPool};
-use mmbsgd::serve::{serve, serve_fleet, ModelRegistry, ServeOptions};
+use mmbsgd::serve::{serve, serve_bound, serve_fleet, ModelRegistry, ServeOptions};
 use mmbsgd::solver::bsgd::TrainOutput;
 use mmbsgd::solver::{load_checkpoint, Checkpoint, NoopObserver, TrainSession};
 use mmbsgd::util::durable::{self, DurableError};
@@ -341,6 +343,124 @@ fn proto_read_error_drops_one_connection_not_the_server() {
     assert!(dropped, "injected read error must close connection A (EOF to the client)");
     assert!(stats.starts_with("ok served="), "{stats}");
     assert_eq!(bye, "ok bye");
+}
+
+// --------------------------------------------------------- http.read
+
+/// Like [`serve_with`], but with the HTTP front end bound too; the
+/// client closure receives `(line_addr, http_addr)` and must trigger
+/// shutdown (via the line port).
+fn serve_http_with<R: Send>(
+    model: SvmModel,
+    client: impl FnOnce(SocketAddr, SocketAddr) -> R + Send,
+) -> R {
+    let line_l = TcpListener::bind("127.0.0.1:0").unwrap();
+    let http_l = TcpListener::bind("127.0.0.1:0").unwrap();
+    let (la, ha) = (line_l.local_addr().unwrap(), http_l.local_addr().unwrap());
+    let mut reg = ModelRegistry::new(Box::new(NativeBackend::new()), 1);
+    reg.insert("m", model).unwrap();
+    let opts = ServeOptions::default();
+    let mut seen = None;
+    std::thread::scope(|s| {
+        let h = s.spawn(move || client(la, ha));
+        serve_bound(line_l, Some(http_l), reg, &opts).unwrap();
+        seen = Some(h.join().unwrap());
+    });
+    seen.unwrap()
+}
+
+/// Read one HTTP response (status line, headers, Content-Length body)
+/// and return `(status, body)`.
+fn read_http_response(r: &mut BufReader<TcpStream>) -> (u16, String) {
+    let mut line = String::new();
+    assert!(r.read_line(&mut line).unwrap() > 0, "server closed mid-response");
+    let status: u16 = line.split_ascii_whitespace().nth(1).unwrap().parse().unwrap();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        assert!(r.read_line(&mut h).unwrap() > 0, "server closed mid-headers");
+        let t = h.trim();
+        if t.is_empty() {
+            break;
+        }
+        let lower = t.to_ascii_lowercase();
+        if let Some(v) = lower.strip_prefix("content-length:") {
+            content_length = v.trim().parse().unwrap();
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    std::io::Read::read_exact(r, &mut body).unwrap();
+    (status, String::from_utf8(body).unwrap())
+}
+
+fn line_shutdown(addr: SocketAddr) {
+    let c = TcpStream::connect(addr).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut w = c.try_clone().unwrap();
+    w.write_all(b"shutdown\n").unwrap();
+    w.flush().unwrap();
+    let mut bye = String::new();
+    BufReader::new(c).read_line(&mut bye).unwrap();
+    assert_eq!(bye.trim(), "ok bye");
+}
+
+/// A stalled HTTP read delays that connection's loop; the request
+/// still answers 200 and the server shuts down cleanly afterwards.
+#[test]
+fn http_read_stall_still_answers() {
+    let _serial = serialize();
+    let (model, _q) = trained_model();
+    let _g = arm("http.read@1=stall:120");
+    let (status, body) = serve_http_with(model, move |la, ha| {
+        let c = TcpStream::connect(ha).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut w = c.try_clone().unwrap();
+        w.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        w.flush().unwrap();
+        let got = read_http_response(&mut BufReader::new(c));
+        line_shutdown(la);
+        got
+    });
+    assert_eq!(status, 200, "stalled HTTP read still answers");
+    assert_eq!(body, "ok\n");
+}
+
+/// An injected HTTP read error drops exactly that connection — no
+/// response bytes, just a close — increments
+/// `serve_http_read_errors_total`, and the front end keeps serving: a
+/// fresh connection scrapes `/metrics` and sees the counter at 1.
+#[test]
+fn http_read_error_drops_one_connection_not_the_front_end() {
+    let _serial = serialize();
+    let (model, _q) = trained_model();
+    let _g = arm("http.read@1=io");
+    let (dropped, status, scrape) = serve_http_with(model, move |la, ha| {
+        // connection A: its first read visit errors — the server never
+        // parses the request and closes without answering
+        let a = TcpStream::connect(ha).unwrap();
+        a.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut wa = a.try_clone().unwrap();
+        wa.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        wa.flush().unwrap();
+        let mut ra = BufReader::new(a);
+        let mut got = String::new();
+        let dropped = matches!(ra.read_line(&mut got), Ok(0) | Err(_)) && got.is_empty();
+        // connection B: still served; the scrape carries A's drop
+        let b = TcpStream::connect(ha).unwrap();
+        b.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut wb = b.try_clone().unwrap();
+        wb.write_all(b"GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+        wb.flush().unwrap();
+        let (status, scrape) = read_http_response(&mut BufReader::new(b));
+        line_shutdown(la);
+        (dropped, status, scrape)
+    });
+    assert!(dropped, "injected read error must close connection A without a response");
+    assert_eq!(status, 200);
+    assert!(
+        scrape.contains("serve_http_read_errors_total 1"),
+        "the drop is visible on the metrics surface: {scrape}"
+    );
 }
 
 // ----------------------------------------------- checkpoint corpus tie-in

@@ -100,6 +100,16 @@ fn parse_libsvm(text: &str) -> Result<(), String> {
     libsvm::parse(text, None).map(|_| ()).map_err(|e| e.to_string())
 }
 
+/// The HTTP front end's request gate: head framing + policing + body
+/// slicing against the declared Content-Length, at the production
+/// default body cap — a corpus file is "ok" only when the serve loop
+/// would dispatch it.
+fn parse_http_request(text: &str) -> Result<(), String> {
+    mmbsgd::serve::http::validate_request_text(text, 1024 * 1024)
+        .map(|_| ())
+        .map_err(|e| e.to_string())
+}
+
 /// The full fleet-artifact gate: manifest parse (incl. the per-section
 /// checksum) plus the model/manifest cross-check — a corpus file is
 /// "ok" only when a replica would actually stage-and-activate it.
@@ -126,6 +136,24 @@ fn toml_corpus_replays_typed() {
 #[test]
 fn libsvm_corpus_replays_typed() {
     replay("libsvm", parse_libsvm);
+}
+
+/// HTTP corpus files hold one whole request per file (CRLF framing and
+/// all); `ok_*` must pass the request gate, `bad_*` must answer a
+/// typed `HttpError` carrying a 4xx/5xx status.
+#[test]
+fn http_corpus_replays_typed() {
+    replay("http", parse_http_request);
+    // the typed rejections carry real statuses, not just strings
+    for (name, text) in corpus("http") {
+        if let Err(e) = mmbsgd::serve::http::validate_request_text(&text, 1024 * 1024) {
+            assert!(
+                name.starts_with("bad_"),
+                "http/{name}: ok_* seed rejected with {e}"
+            );
+            assert!((400..600).contains(&e.status), "http/{name}: status {}", e.status);
+        }
+    }
 }
 
 /// The `ok_*` manifest seeds carry `fnv=` checksums computed by an
@@ -276,6 +304,11 @@ fn libsvm_mutations_never_panic() {
 #[test]
 fn manifest_mutations_never_panic() {
     mutation_sweep("manifest", 300, parse_manifest);
+}
+
+#[test]
+fn http_mutations_never_panic() {
+    mutation_sweep("http", 300, parse_http_request);
 }
 
 // ------------------------------------------------- round-trip fixed points

@@ -1,0 +1,316 @@
+//! HTTP front-end acceptance (ISSUE 9): the HTTP/1.1 listener and the
+//! TCP line protocol answer from the **same** engine, so the loopback
+//! contract is bit-identity — a `POST /decision` body line answers the
+//! exact reply string the line protocol's `decision` produces for the
+//! same key and features on the native backend.  Also covered here:
+//! `/metrics` exposition and `/healthz`, keep-alive framing, typed
+//! 4xx/5xx mapping, and the shared-secret auth satellite (line
+//! `auth <token>` handshake + HTTP `Authorization: Bearer`).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+use mmbsgd::config::TrainConfig;
+use mmbsgd::data::synth::{dataset, SynthSpec};
+use mmbsgd::model::SvmModel;
+use mmbsgd::rng::Xoshiro256;
+use mmbsgd::runtime::NativeBackend;
+use mmbsgd::serve::{serve_bound, ModelRegistry, ServeOptions, ServeReport};
+use mmbsgd::telemetry::Snapshot;
+
+fn trained_model() -> SvmModel {
+    let split = dataset(&SynthSpec::ijcnn_like(0.01), 2);
+    let cfg = TrainConfig {
+        lambda: 1e-3,
+        gamma: 2.0,
+        budget: 24,
+        mergees: 3,
+        seed: 41,
+        epochs: 1,
+        ..TrainConfig::default()
+    };
+    mmbsgd::solver::bsgd::train(&split.train, &cfg).unwrap().model
+}
+
+/// Run `serve_bound` with both listeners on loopback, drive it with
+/// `client(line_addr, http_addr)` (which must trigger shutdown), and
+/// return the client's result plus the server report.
+fn serve_both<R: Send>(
+    opts: ServeOptions,
+    client: impl FnOnce(SocketAddr, SocketAddr) -> R + Send,
+) -> (R, ServeReport) {
+    let line_l = TcpListener::bind("127.0.0.1:0").unwrap();
+    let http_l = TcpListener::bind("127.0.0.1:0").unwrap();
+    let (la, ha) = (line_l.local_addr().unwrap(), http_l.local_addr().unwrap());
+    let mut reg = ModelRegistry::new(Box::new(NativeBackend::new()), 1);
+    reg.insert("m", trained_model()).unwrap();
+    let mut out = None;
+    let mut report = None;
+    std::thread::scope(|s| {
+        let h = s.spawn(move || client(la, ha));
+        report = Some(serve_bound(line_l, Some(http_l), reg, &opts).unwrap());
+        out = Some(h.join().unwrap());
+    });
+    (out.unwrap(), report.unwrap())
+}
+
+/// A line-protocol connection: one request line out, one reply in.
+struct LineClient {
+    rd: BufReader<TcpStream>,
+    w: TcpStream,
+}
+
+impl LineClient {
+    fn connect(addr: SocketAddr) -> Self {
+        let c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        Self { rd: BufReader::new(c.try_clone().unwrap()), w: c }
+    }
+
+    fn ask(&mut self, line: &str) -> String {
+        self.w.write_all(format!("{line}\n").as_bytes()).unwrap();
+        self.w.flush().unwrap();
+        let mut reply = String::new();
+        self.rd.read_line(&mut reply).unwrap();
+        reply.trim_end().to_string()
+    }
+}
+
+/// A raw HTTP/1.1 connection speaking exactly what the front end
+/// frames: Content-Length bodies, optional Bearer auth, keep-alive.
+struct HttpClient {
+    rd: BufReader<TcpStream>,
+    w: TcpStream,
+}
+
+impl HttpClient {
+    fn connect(addr: SocketAddr) -> Self {
+        let c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        Self { rd: BufReader::new(c.try_clone().unwrap()), w: c }
+    }
+
+    fn send_raw(&mut self, raw: &str) {
+        self.w.write_all(raw.as_bytes()).unwrap();
+        self.w.flush().unwrap();
+    }
+
+    /// Read one framed response; returns `(status, body)`.
+    fn read_response(&mut self) -> (u16, String) {
+        let mut line = String::new();
+        assert!(self.rd.read_line(&mut line).unwrap() > 0, "server closed mid-response");
+        let status: u16 =
+            line.split_ascii_whitespace().nth(1).expect("status line").parse().unwrap();
+        let mut content_length = 0usize;
+        loop {
+            let mut h = String::new();
+            assert!(self.rd.read_line(&mut h).unwrap() > 0, "server closed mid-headers");
+            let t = h.trim();
+            if t.is_empty() {
+                break;
+            }
+            let lower = t.to_ascii_lowercase();
+            if let Some(v) = lower.strip_prefix("content-length:") {
+                content_length = v.trim().parse().unwrap();
+            }
+        }
+        let mut body = vec![0u8; content_length];
+        self.rd.read_exact(&mut body).unwrap();
+        (status, String::from_utf8(body).unwrap())
+    }
+
+    fn get(&mut self, path: &str, bearer: Option<&str>) -> (u16, String) {
+        let auth =
+            bearer.map(|t| format!("Authorization: Bearer {t}\r\n")).unwrap_or_default();
+        self.send_raw(&format!("GET {path} HTTP/1.1\r\n{auth}\r\n"));
+        self.read_response()
+    }
+
+    fn post(&mut self, path: &str, body: &str, bearer: Option<&str>) -> (u16, String) {
+        let auth =
+            bearer.map(|t| format!("Authorization: Bearer {t}\r\n")).unwrap_or_default();
+        self.send_raw(&format!(
+            "POST {path} HTTP/1.1\r\nContent-Length: {}\r\n{auth}\r\n{body}",
+            body.len()
+        ));
+        self.read_response()
+    }
+}
+
+/// Deterministic keyed request argument lines (`key=kI f1 f2 ...`).
+fn request_lines(dim: usize, n: usize) -> Vec<String> {
+    let mut rng = Xoshiro256::new(907);
+    (0..n)
+        .map(|i| {
+            let feats: Vec<String> =
+                (0..dim).map(|_| format!("{:.4}", rng.next_f64() * 2.0 - 1.0)).collect();
+            format!("key=k{i} {}", feats.join(" "))
+        })
+        .collect()
+}
+
+/// The loopback acceptance criterion: HTTP-batched answers are
+/// bit-identical strings to line-protocol `decision` answers for the
+/// same keys on the native backend — same parse, same engine, same
+/// reply formatting, so equality is exact, not approximate.
+#[test]
+fn http_decision_replies_bit_identical_to_line_protocol() {
+    let dim = trained_model().svs.dim();
+    let lines = request_lines(dim, 8);
+    let ((via_line, status, via_http), _report) =
+        serve_both(ServeOptions::default(), move |la, ha| {
+            let mut lc = LineClient::connect(la);
+            let via_line: Vec<String> =
+                lines.iter().map(|l| lc.ask(&format!("decision {l}"))).collect();
+            let mut hc = HttpClient::connect(ha);
+            let body = format!("{}\n", lines.join("\n"));
+            let (status, http_body) = hc.post("/decision", &body, None);
+            let via_http: Vec<String> =
+                http_body.lines().map(|l| l.to_string()).collect();
+            assert_eq!(lc.ask("shutdown"), "ok bye");
+            (via_line, status, via_http)
+        });
+    assert_eq!(status, 200);
+    assert_eq!(via_line.len(), 8);
+    assert_eq!(via_http, via_line, "HTTP and line protocol replies must be bit-identical");
+    for reply in &via_line {
+        assert!(reply.starts_with("ok "), "{reply}");
+        assert!(reply.contains("m@v1"), "decision names model@version: {reply}");
+    }
+}
+
+/// `/healthz`, `/metrics` exposition (parseable, carrying both source
+/// counters and engine mirrors), keep-alive across requests on one
+/// connection, and `Connection: close` honored.
+#[test]
+fn metrics_healthz_and_keepalive() {
+    let dim = trained_model().svs.dim();
+    let lines = request_lines(dim, 3);
+    let ((health, predict_status, scrape), report) =
+        serve_both(ServeOptions::default(), move |la, ha| {
+            // one keep-alive connection carries all three requests
+            let mut hc = HttpClient::connect(ha);
+            let (hs, health) = hc.get("/healthz", None);
+            assert_eq!(hs, 200);
+            let body = format!("{}\n", lines.join("\n"));
+            let (predict_status, preds) = hc.post("/predict", &body, None);
+            assert_eq!(preds.lines().count(), 3);
+            // The engine republishes its mirror counters after each
+            // burst, *after* the replies are already out — poll the
+            // scrape until the mirror catches up (at most one burst).
+            let mut scrape = String::new();
+            for _ in 0..200 {
+                let (ms, text) = hc.get("/metrics", None);
+                assert_eq!(ms, 200);
+                scrape = text;
+                if scrape.contains("serve_engine_served_total 3") {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            // Connection: close is honored: the server answers, then EOF
+            hc.send_raw("GET /healthz HTTP/1.0\r\n\r\n");
+            let (cs, _) = hc.read_response();
+            assert_eq!(cs, 200);
+            let mut rest = String::new();
+            assert_eq!(hc.rd.read_line(&mut rest).unwrap(), 0, "HTTP/1.0 closes");
+            let mut lc = LineClient::connect(la);
+            assert_eq!(lc.ask("shutdown"), "ok bye");
+            (health, predict_status, scrape)
+        });
+    assert_eq!(health, "ok\n");
+    assert_eq!(predict_status, 200);
+    let snap = Snapshot::parse(&scrape).expect("exposition text parses back");
+    assert_eq!(snap.counters["serve_http_connections_total"], 1);
+    // healthz + predict answered before the scrape rendered
+    assert!(snap.counters["serve_http_requests_total"] >= 2, "{scrape}");
+    assert_eq!(snap.counters["serve_engine_served_total"], 3, "predict rows mirrored");
+    assert!(snap.gauges.contains_key("serve_window_accuracy"), "{scrape}");
+    let lat = &snap.histograms["serve_http_request_ns"];
+    assert!(lat.count >= 2, "request latency observed");
+    // the line `stats` view and the scrape share the same counters
+    assert_eq!(report.engine.served, 3);
+}
+
+/// Typed rejections: bad method, missing Content-Length, oversized
+/// declared body, unknown route, malformed request body line, and the
+/// engine's unknown-model mapping.
+#[test]
+fn http_rejections_map_to_typed_statuses() {
+    let opts = ServeOptions { max_body_bytes: 256, ..ServeOptions::default() };
+    let ((), _report) = serve_both(opts, move |la, ha| {
+        // head-level rejections close the connection: one client each
+        let (s, body) = {
+            let mut hc = HttpClient::connect(ha);
+            hc.send_raw("DELETE /metrics HTTP/1.1\r\n\r\n");
+            hc.read_response()
+        };
+        assert_eq!((s, body.contains("not allowed")), (405, true), "{body}");
+        let (s, _) = {
+            let mut hc = HttpClient::connect(ha);
+            hc.send_raw("POST /decision HTTP/1.1\r\n\r\n");
+            hc.read_response()
+        };
+        assert_eq!(s, 411, "POST without Content-Length");
+        let (s, _) = {
+            let mut hc = HttpClient::connect(ha);
+            hc.send_raw("POST /decision HTTP/1.1\r\nContent-Length: 99999\r\n\r\n");
+            hc.read_response()
+        };
+        assert_eq!(s, 413, "declared body over max_body_bytes");
+        // request-level rejections keep the connection alive
+        let mut hc = HttpClient::connect(ha);
+        let (s, _) = hc.get("/nope", None);
+        assert_eq!(s, 404);
+        let (s, body) = hc.post("/decision", "not-a-number\n", None);
+        assert_eq!(s, 400, "malformed body line: {body}");
+        assert!(body.starts_with("err "), "{body}");
+        let (s, _) = hc.get("/healthz", None);
+        assert_eq!(s, 200, "connection survived the 400");
+        let mut lc = LineClient::connect(la);
+        assert_eq!(lc.ask("shutdown"), "ok bye");
+    });
+}
+
+/// Shared-secret auth on both surfaces: the line protocol demands an
+/// `auth <token>` first line (wrong/missing token answers
+/// `err unauthorized` and closes), HTTP demands a Bearer header (401).
+/// Authenticated traffic flows normally on both.
+#[test]
+fn auth_token_gates_both_surfaces() {
+    let dim = trained_model().svs.dim();
+    let line = request_lines(dim, 1).remove(0);
+    let opts = ServeOptions { auth_token: "sesame".into(), ..ServeOptions::default() };
+    let ((), report) = serve_both(opts, move |la, ha| {
+        // line protocol, no handshake: typed refusal then EOF
+        let mut bad = LineClient::connect(la);
+        let refusal = bad.ask(&format!("decision {line}"));
+        assert!(refusal.starts_with("err unauthorized"), "{refusal}");
+        let mut rest = String::new();
+        assert_eq!(bad.rd.read_line(&mut rest).unwrap(), 0, "connection closes after refusal");
+        // wrong token: same refusal
+        let mut wrong = LineClient::connect(la);
+        assert!(wrong.ask("auth opensaysme").starts_with("err unauthorized"));
+        // HTTP, no/wrong bearer: 401, body names the error
+        let (s, body) = HttpClient::connect(ha).get("/metrics", None);
+        assert_eq!(s, 401);
+        assert!(body.starts_with("unauthorized"), "{body}");
+        let (s, _) = HttpClient::connect(ha).get("/metrics", Some("opensaysme"));
+        assert_eq!(s, 401);
+        // authenticated traffic flows on both surfaces
+        let mut lc = LineClient::connect(la);
+        assert_eq!(lc.ask("auth sesame"), "ok authed");
+        assert!(lc.ask(&format!("decision {line}")).starts_with("ok "));
+        let mut hc = HttpClient::connect(ha);
+        let (s, got) = hc.post("/decision", &format!("{line}\n"), Some("sesame"));
+        assert_eq!(s, 200);
+        assert!(got.starts_with("ok "), "{got}");
+        let (s, scrape) = hc.get("/metrics", Some("sesame"));
+        assert_eq!(s, 200);
+        let snap = Snapshot::parse(&scrape).unwrap();
+        assert!(snap.counters["serve_auth_failures_total"] >= 4, "{scrape}");
+        assert_eq!(lc.ask("shutdown"), "ok bye");
+    });
+    assert_eq!(report.engine.served, 2, "one line decision + one http decision");
+}
