@@ -547,6 +547,135 @@ fn main() {
         let _ = std::fs::remove_dir_all(&scratch);
     }
 
+    if enabled("router") {
+        use std::io::{BufRead, BufReader, Write};
+        use std::net::{TcpListener, TcpStream};
+        use std::time::Duration;
+
+        use mmbsgd::fleet::{
+            run_router, Artifact, Controller, Provenance, ReplicaState, RouterOptions,
+        };
+        use mmbsgd::serve::{serve_fleet, ServeOptions};
+
+        group("router: serial single-link forwarding vs pooled concurrent workers");
+        let scratch =
+            std::env::temp_dir().join(format!("mmbsgd_bench_router_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&scratch);
+        std::fs::create_dir_all(&scratch).unwrap();
+
+        // The ISSUE 10 acceptance shape: a 2-replica fleet behind the
+        // router, 4 concurrent clients each pipelining keyed decisions.
+        // Serial = one link per replica and one forward in flight
+        // (threads=1, pool=1); pooled = per-connection workers over a
+        // 2-link pool.  Same ring seed, so both runs shard identically
+        // — the ratio isolates the concurrency model.
+        let (b, d, n, c) = (512usize, 128usize, 64usize, 4usize);
+        let mut model = SvmModel::new(d, gamma);
+        model.svs = random_store(b, d, 31);
+        model.bias = 0.05;
+        let art = Artifact::wrap("bench", 1, &model, Provenance::default(), "lut", "auto").unwrap();
+        let mut rng = Xoshiro256::new(32);
+        let scale = (5.0 / (gamma * 2.0 * d as f64)).sqrt();
+        let lines: Vec<String> = (0..n)
+            .map(|k| {
+                let row: Vec<String> = (0..d)
+                    .map(|_| ((scale * rng.next_gaussian()) as f32).to_string())
+                    .collect();
+                format!("decision key=req-{k} {}\n", row.join(" "))
+            })
+            .collect();
+        // One pre-concatenated batch per client; every iteration writes
+        // the whole batch and reads its replies back in order.
+        let chunks: Vec<(String, usize)> =
+            lines.chunks(n / c).map(|ch| (ch.concat(), ch.len())).collect();
+
+        let bindp = || {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            let a = l.local_addr().unwrap();
+            (l, a)
+        };
+        let (l0, a0) = bindp();
+        let (l1, a1) = bindp();
+        let eps = vec![a0.to_string(), a1.to_string()];
+        std::thread::scope(|s| {
+            let serve_one = |l: TcpListener, dir: std::path::PathBuf| {
+                move || {
+                    let mut rep = ReplicaState::new(&dir).unwrap();
+                    let reg = ModelRegistry::new(Box::new(NativeBackend::new()), 7);
+                    serve_fleet(l, reg, &ServeOptions::default(), &mut rep).unwrap();
+                }
+            };
+            s.spawn(serve_one(l0, scratch.join("rep0")));
+            s.spawn(serve_one(l1, scratch.join("rep1")));
+            let mut ctl = Controller::new(eps.clone(), Duration::from_secs(10));
+            for o in ctl.push(&art, true) {
+                assert_eq!(o.result, Ok(1), "replica {} refused the bench artifact", o.endpoint);
+            }
+
+            for (name, pool, threads) in [("serial", 1usize, 1usize), ("pooled", 2, 0)] {
+                let (rl, ra) = bindp();
+                let opts = RouterOptions {
+                    seed: 42,
+                    vnodes: 64,
+                    timeout: Duration::from_secs(10),
+                    probe_every: Duration::from_secs(600),
+                    pool,
+                    threads,
+                };
+                let eps2 = eps.clone();
+                let router = s.spawn(move || run_router(rl, eps2, &opts).unwrap());
+
+                let mut conns: Vec<(TcpStream, BufReader<TcpStream>, &str, usize)> = chunks
+                    .iter()
+                    .map(|(batch, cnt)| {
+                        let sx = TcpStream::connect(ra).unwrap();
+                        sx.set_nodelay(true).ok();
+                        (sx.try_clone().unwrap(), BufReader::new(sx), batch.as_str(), *cnt)
+                    })
+                    .collect();
+                bench(&format!("router/{name}/c{c}/n{n}"), 200, || {
+                    std::thread::scope(|s2| {
+                        for conn in conns.iter_mut() {
+                            let (w, r, batch, cnt) = (&mut conn.0, &mut conn.1, conn.2, conn.3);
+                            s2.spawn(move || {
+                                w.write_all(batch.as_bytes()).unwrap();
+                                w.flush().unwrap();
+                                let mut reply = String::new();
+                                for _ in 0..cnt {
+                                    reply.clear();
+                                    r.read_line(&mut reply).unwrap();
+                                    assert!(reply.starts_with("ok "), "router error: {reply}");
+                                }
+                            });
+                        }
+                    });
+                });
+                drop(conns);
+
+                let sx = TcpStream::connect(ra).unwrap();
+                let mut w = sx.try_clone().unwrap();
+                let mut r = BufReader::new(sx);
+                w.write_all(b"shutdown\n").unwrap();
+                w.flush().unwrap();
+                let mut reply = String::new();
+                r.read_line(&mut reply).unwrap();
+                let report = router.join().unwrap();
+                assert_eq!(report.replica_dead, 0, "{name} router marked a replica dead");
+            }
+
+            for addr in [a0, a1] {
+                let sx = TcpStream::connect(addr).unwrap();
+                let mut w = sx.try_clone().unwrap();
+                let mut r = BufReader::new(sx);
+                w.write_all(b"shutdown\n").unwrap();
+                w.flush().unwrap();
+                let mut reply = String::new();
+                r.read_line(&mut reply).unwrap();
+            }
+        });
+        let _ = std::fs::remove_dir_all(&scratch);
+    }
+
     if enabled("eval") {
         group("batched evaluation (native vs xla artifact)");
         let svs = random_store(512, 128, 5);
@@ -684,6 +813,13 @@ fn main() {
     {
         println!("ring-sharded 2-replica speedup at B512/d128/n64: {s:.2}x");
         derived.push(("speedup/router_2replicas_vs_1/B512/d128/n64".into(), s));
+    }
+    // Concurrent-router acceptance ratio (ISSUE 10 gate): per-client
+    // workers over a pooled 2-link-per-replica data plane vs the
+    // single-link one-forward-at-a-time baseline, 4 concurrent clients.
+    if let Some(s) = ratio("router/serial/c4/n64", "router/pooled/c4/n64") {
+        println!("pooled concurrent router speedup at c4/n64: {s:.2}x");
+        derived.push(("speedup/router_pooled_vs_serial/c4/n64".into(), s));
     }
     emit_json("BENCH_hotpaths.json", &derived);
 

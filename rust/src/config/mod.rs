@@ -461,6 +461,15 @@ pub struct FleetConfig {
     /// are deleted.  Must be ≥ 1 — the active generation is always
     /// kept.  TOML `keep`, CLI `--fleet-keep`.
     pub keep: usize,
+    /// Pooled links per replica in the router's data plane: concurrent
+    /// forwards to one replica check out distinct links; past this
+    /// many in flight they wait.  Must be ≥ 1.  TOML `router_pool`,
+    /// CLI `--router-pool`.
+    pub router_pool: usize,
+    /// Max forwards in flight across the whole router (0 = unbounded,
+    /// one worker per client connection).  TOML `router_threads`, CLI
+    /// `--router-threads`.
+    pub router_threads: usize,
 }
 
 impl Default for FleetConfig {
@@ -475,6 +484,8 @@ impl Default for FleetConfig {
             min_window_acc: 0.0,
             dir: "fleet-artifacts".into(),
             keep: 3,
+            router_pool: 2,
+            router_threads: 0,
         }
     }
 }
@@ -513,6 +524,9 @@ impl FleetConfig {
         if self.keep == 0 {
             return bad("keep", "must be >= 1 (the active generation is always kept)".into());
         }
+        if self.router_pool == 0 {
+            return bad("router_pool", "must be >= 1 link per replica".into());
+        }
         Ok(())
     }
 
@@ -538,6 +552,10 @@ impl FleetConfig {
                 }
                 "dir" => self.dir = val.as_str().context("dir")?.to_string(),
                 "keep" => self.keep = toml_count_usize(val, "keep")?,
+                "router_pool" => self.router_pool = toml_count_usize(val, "router_pool")?,
+                "router_threads" => {
+                    self.router_threads = toml_count_usize(val, "router_threads")?
+                }
                 other => bail!("unknown [fleet] key {other:?}"),
             }
         }
@@ -716,6 +734,31 @@ mod tests {
     }
 
     #[test]
+    fn fleet_router_pool_defaults_overlays_and_validates() {
+        let d = FleetConfig::default();
+        assert_eq!(d.router_pool, 2, "pooled links default to 2 per replica");
+        assert_eq!(d.router_threads, 0, "0 = one worker per client, unbounded");
+        let doc = TomlDoc::parse("[fleet]\nrouter_pool = 4\nrouter_threads = 8\n").unwrap();
+        let mut cfg = FleetConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.router_pool, 4);
+        assert_eq!(cfg.router_threads, 8);
+        cfg.validate().unwrap();
+        // a zero-link pool can forward nothing; rejected
+        use crate::error::TrainError;
+        cfg.router_pool = 0;
+        match cfg.validate() {
+            Err(TrainError::InvalidConfig { field, .. }) => assert_eq!(field, "router_pool"),
+            other => panic!("expected InvalidConfig, got {other:?}"),
+        }
+        // strict count parsing applies to both keys
+        let doc = TomlDoc::parse("[fleet]\nrouter_pool = 1.5\n").unwrap();
+        assert!(FleetConfig::default().apply_toml(&doc).is_err());
+        let doc = TomlDoc::parse("[fleet]\nrouter_threads = -1\n").unwrap();
+        assert!(FleetConfig::default().apply_toml(&doc).is_err());
+    }
+
+    #[test]
     fn merge_score_mode_defaults_to_lut() {
         assert_eq!(TrainConfig::default().merge_score_mode, MergeScoreMode::Lut);
         let doc = TomlDoc::parse("[train]\nmerge_score_mode = \"bogus\"\n").unwrap();
@@ -849,7 +892,8 @@ mod tests {
         let doc = TomlDoc::parse(
             "[fleet]\nreplicas = \"10.0.0.1:9000, 10.0.0.2:9000\"\naddr = \"0.0.0.0:7979\"\n\
              seed = 42\nvnodes = 64\nprobe_secs = 5\npush_timeout_ms = 2000\n\
-             min_window_acc = 0.8\ndir = \"/var/lib/mmbsgd\"\n",
+             min_window_acc = 0.8\ndir = \"/var/lib/mmbsgd\"\n\
+             router_pool = 3\nrouter_threads = 6\n",
         )
         .unwrap();
         let mut cfg = FleetConfig::default();
@@ -864,6 +908,8 @@ mod tests {
         assert_eq!(cfg.push_timeout_ms, 2000);
         assert_eq!(cfg.min_window_acc, 0.8);
         assert_eq!(cfg.dir, "/var/lib/mmbsgd");
+        assert_eq!(cfg.router_pool, 3);
+        assert_eq!(cfg.router_threads, 6);
         cfg.validate().unwrap();
         // defaults validate, empty replica string means no replicas
         let d = FleetConfig::default();

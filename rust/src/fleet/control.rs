@@ -41,6 +41,23 @@ pub struct Outcome {
     pub result: Result<u64, FleetError>,
 }
 
+/// Per-endpoint outcome of a `fleet-status` sweep.  An unreachable
+/// replica is a *row* in the status table (`Err` — what the router
+/// sees as dead), never a failure of the whole sweep.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StatusOutcome {
+    pub endpoint: String,
+    /// The replica's raw `fleet-status` line on success.
+    pub result: Result<String, FleetError>,
+}
+
+impl StatusOutcome {
+    /// Whether the replica answered — the status-table liveness bit.
+    pub fn is_alive(&self) -> bool {
+        self.result.is_ok()
+    }
+}
+
 /// Fleet-wide control client; see the [module docs](self).
 pub struct Controller {
     endpoints: Vec<String>,
@@ -244,15 +261,17 @@ impl Controller {
             .collect()
     }
 
-    /// `fleet-status` from every replica (raw status lines).
-    pub fn status(&self) -> Vec<(String, Result<String, FleetError>)> {
+    /// `fleet-status` from every replica.  Unreachable replicas come
+    /// back as `Err` rows (rendered `dead` by the CLI), so one dead
+    /// endpoint never hides the rest of the fleet's state.
+    pub fn status(&self) -> Vec<StatusOutcome> {
         self.endpoints
             .iter()
             .map(|ep| {
-                let r = self
+                let result = self
                     .connect(ep)
                     .and_then(|mut conn| self.exchange(&mut conn, ep, "fleet-status"));
-                (ep.clone(), r)
+                StatusOutcome { endpoint: ep.clone(), result }
             })
             .collect()
     }
@@ -269,8 +288,8 @@ impl Controller {
         min_accuracy: f64,
     ) -> Option<Vec<Outcome>> {
         let mut degraded = false;
-        for (_ep, status) in self.status() {
-            let Ok(line) = status else { continue };
+        for outcome in self.status() {
+            let Ok(line) = outcome.result else { continue };
             let acc = line
                 .split_ascii_whitespace()
                 .find_map(|tok| tok.strip_prefix("acc="))
@@ -309,5 +328,22 @@ mod tests {
         assert_eq!(out.len(), 1);
         assert!(matches!(&out[0].result, Err(FleetError::Replica { .. })), "{out:?}");
         assert_eq!(c.acked("127.0.0.1:1", "champ"), None);
+    }
+
+    #[test]
+    fn status_reports_unreachable_replicas_as_dead_rows() {
+        // both endpoints unreachable: the sweep still yields one typed
+        // row per endpoint instead of failing wholesale
+        let c = Controller::new(
+            vec!["127.0.0.1:1".to_string(), "127.0.0.1:2".to_string()],
+            Duration::from_millis(200),
+        );
+        let rows = c.status();
+        assert_eq!(rows.len(), 2);
+        for (row, ep) in rows.iter().zip(["127.0.0.1:1", "127.0.0.1:2"]) {
+            assert_eq!(row.endpoint, ep);
+            assert!(!row.is_alive(), "{row:?}");
+            assert!(matches!(&row.result, Err(FleetError::Replica { .. })), "{row:?}");
+        }
     }
 }

@@ -24,9 +24,13 @@
 //!   rebuilds everything from the artifact directory at startup.
 //! * [`router`] — the data-plane front door: consistent-hashes
 //!   request keys across replica endpoints (generalizing the seeded
-//!   [`crate::serve::route_hash`]), retries one alternate replica on
-//!   connection failure, and marks dead replicas out with periodic
-//!   re-probe.
+//!   [`crate::serve::route_hash`]), hands each client connection to
+//!   its own worker thread, multiplexes forwards over a per-replica
+//!   pooled-link set (pipelining same-replica runs), retries a stale
+//!   link once and then one alternate replica on failure, and marks
+//!   dead replicas out with periodic re-probe.  Telemetry
+//!   (`router_*` counters + forward-latency histogram) answers on the
+//!   `router-stats` verb.
 //!
 //! Consistency model: an artifact is immutable once packaged (any
 //! byte flip is caught by the section checksums), replicas only serve
@@ -41,6 +45,8 @@ pub mod replica;
 pub mod router;
 
 pub use artifact::{Artifact, Provenance, ARTIFACT_MAGIC};
-pub use control::{Controller, Outcome};
+pub use control::{Controller, Outcome, StatusOutcome};
 pub use replica::{ActiveInfo, ReplicaState};
-pub use router::{run_router, Ring, Router, RouterOptions, RouterReport, DEFAULT_VNODES};
+pub use router::{
+    run_router, Ring, Router, RouterOptions, RouterReport, DEFAULT_POOL, DEFAULT_VNODES,
+};

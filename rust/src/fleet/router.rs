@@ -1,6 +1,6 @@
 //! Consistent-hash request routing across serve replicas.
 //!
-//! Two layers:
+//! Three layers:
 //!
 //! * [`Ring`] — the pure consistent-hash ring: each replica endpoint
 //!   owns `vnodes` points placed by the same seeded
@@ -14,12 +14,27 @@
 //!   instance forwarded it.  When a replica dies only the keys on its
 //!   arcs move (to the next alive point); every other key keeps its
 //!   assignment — the property the rebalance tests pin.
-//! * [`Router`] + [`run_router`] — the I/O front: a TCP listener that
-//!   forwards each keyed request line to its ring replica over a
-//!   persistent connection, retries **one** alternate replica on
-//!   connection failure (marking the first dead), and re-probes dead
-//!   replicas periodically.  Control-plane verbs are refused — they go
-//!   directly to replicas via [`super::Controller`].
+//! * [`LinkPool`] — a per-replica pool of persistent line-protocol
+//!   connections.  Concurrent forwards to the same replica check out
+//!   *distinct* links (blocking, with `router_pool_waits_total`, once
+//!   all `pool` links are in flight); a broken link is discarded and
+//!   its slot becomes a lazy reconnect — the next checkout dials a
+//!   fresh connection — so one stale socket never marks the replica
+//!   dead.
+//! * [`Router`] + [`run_router`] — the concurrent I/O front: the
+//!   accept loop hands each client connection to its own scoped
+//!   reader/writer thread (the `serve/proto.rs` idiom), so N clients
+//!   proceed independently; forwards overlap up to
+//!   [`RouterOptions::threads`] in flight (0 = unbounded).  Consecutive
+//!   already-buffered client lines owned by the same replica are
+//!   pipelined over one checked-out link (the line protocol answers in
+//!   order, one reply per line, so a write-k/read-k run is safe).
+//!   Keyed routing semantics are unchanged from the serial router:
+//!   same seeded ring assignment, exactly one *alternate replica*
+//!   retry, dead-replica re-probe, and keyless round-robin (now an
+//!   atomic ticket) — so keyed answers are bit-identical regardless of
+//!   thread count or pool size.  Control-plane verbs are refused —
+//!   they go directly to replicas via [`super::Controller`].
 //!
 //! The router holds no model state: it can restart at any time and
 //! (given the same seed and endpoint list) reproduce the exact same
@@ -27,10 +42,12 @@
 
 use crate::error::FleetError;
 use crate::serve::route_hash;
+use crate::telemetry::{Counter, Histogram, Registry};
+use crate::util::fault;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// Accept/read poll interval (mirrors `serve/proto.rs`).
@@ -41,6 +58,9 @@ const POLL: Duration = Duration::from_millis(50);
 /// around 42 against a uniform target — see the balance test) without
 /// making ring rebuilds noticeable.
 pub const DEFAULT_VNODES: usize = 128;
+
+/// Default per-replica link-pool size (`--router-pool`).
+pub const DEFAULT_POOL: usize = 2;
 
 /// The pure consistent-hash ring.
 #[derive(Clone, Debug)]
@@ -146,6 +166,13 @@ pub struct RouterOptions {
     pub timeout: Duration,
     /// How often dead replicas are re-probed.
     pub probe_every: Duration,
+    /// Links per replica in the connection pool (`--router-pool`,
+    /// clamped to ≥ 1).  Concurrent forwards to one replica use
+    /// distinct links; past `pool` in flight they wait.
+    pub pool: usize,
+    /// Max forwards in flight across all client connections
+    /// (`--router-threads`); 0 = unbounded (one worker per client).
+    pub threads: usize,
 }
 
 impl Default for RouterOptions {
@@ -155,6 +182,8 @@ impl Default for RouterOptions {
             vnodes: DEFAULT_VNODES,
             timeout: Duration::from_secs(5),
             probe_every: Duration::from_secs(2),
+            pool: DEFAULT_POOL,
+            threads: 0,
         }
     }
 }
@@ -165,171 +194,505 @@ pub struct RouterReport {
     pub connections: u64,
     /// Lines successfully forwarded and answered.
     pub forwarded: u64,
-    /// Forwards that succeeded only on the alternate replica.
+    /// Forwards that needed more than their first attempt (a fresh
+    /// link to the same replica, or the alternate replica).
     pub retried: u64,
     /// Lines answered locally with `err` (control verbs, no replica).
     pub rejected: u64,
+    /// Replica links dialed over the run (pool fills + reconnects) —
+    /// the pool-reuse evidence, counted like `worker_spawns`.
+    pub links_opened: u64,
+    /// Checkouts that had to wait for a pooled link.
+    pub pool_waits: u64,
+    /// Lines forwarded as part of a pipelined same-replica run.
+    pub pipelined: u64,
+    /// `mark_dead` events (a replica leaving rotation).
+    pub replica_dead: u64,
 }
 
-/// The stateful forwarding core: ring + one persistent connection per
-/// replica.  Not thread-safe by itself; [`run_router`] wraps it in a
-/// mutex (one in-flight forward at a time — the scale-out story is
-/// more router processes, which the ring's determinism makes safe).
+/// Registered handles for the router telemetry (the PR-9 surface; the
+/// `router-stats` verb renders these as one line).
+struct RouterMetrics {
+    registry: Arc<Registry>,
+    forwards: Arc<Counter>,
+    retries: Arc<Counter>,
+    replica_dead: Arc<Counter>,
+    pool_waits: Arc<Counter>,
+    links_opened: Arc<Counter>,
+    pipelined: Arc<Counter>,
+    rejected: Arc<Counter>,
+    forward_ns: Arc<Histogram>,
+}
+
+impl RouterMetrics {
+    fn new() -> Self {
+        let registry = Registry::new();
+        Self {
+            forwards: registry.counter("router_forwards_total"),
+            retries: registry.counter("router_retries_total"),
+            replica_dead: registry.counter("router_replica_dead_total"),
+            pool_waits: registry.counter("router_pool_waits_total"),
+            links_opened: registry.counter("router_links_opened_total"),
+            pipelined: registry.counter("router_pipelined_total"),
+            rejected: registry.counter("router_rejected_total"),
+            forward_ns: registry.histogram("router_forward_ns"),
+            registry,
+        }
+    }
+
+    /// The `stats`-line view: one greppable reply line, mirroring the
+    /// serve `stats` verb's shape.
+    fn stats_line(&self) -> String {
+        let h = self.forward_ns.snapshot();
+        format!(
+            "ok router forwards={} retries={} dead={} pool_waits={} connects={} \
+             pipelined={} rejected={} p50_ns={} p99_ns={}",
+            self.forwards.get(),
+            self.retries.get(),
+            self.replica_dead.get(),
+            self.pool_waits.get(),
+            self.links_opened.get(),
+            self.pipelined.get(),
+            self.rejected.get(),
+            h.quantile(0.50),
+            h.quantile(0.99),
+        )
+    }
+}
+
+/// One pooled replica link.
+type Link = BufReader<TcpStream>;
+
+struct PoolState {
+    idle: Vec<Link>,
+    /// Links currently checked out *plus* idle.len(): the number of
+    /// live slots.  A discarded (broken) link frees its slot, so the
+    /// next checkout re-dials — the lazy reconnect queue.
+    occupied: usize,
+}
+
+/// A per-replica connection pool: at most `cap` links exist at once;
+/// checkout hands out idle links first, dials a fresh one while slots
+/// remain, and blocks (counting a pool wait) when every link is in
+/// flight.
+struct LinkPool {
+    cap: usize,
+    state: Mutex<PoolState>,
+    available: Condvar,
+}
+
+/// What a checkout handed back.
+enum Checkout {
+    /// An existing pooled link.
+    Reused(Link),
+    /// A slot was free but empty: the caller dials the connection.
+    Dial,
+}
+
+impl LinkPool {
+    fn new(cap: usize) -> LinkPool {
+        LinkPool {
+            cap: cap.max(1),
+            state: Mutex::new(PoolState { idle: Vec::new(), occupied: 0 }),
+            available: Condvar::new(),
+        }
+    }
+
+    /// Non-blocking checkout: `None` when every link is in flight.
+    /// Used by the dead-replica probe, which must never stall a
+    /// forward behind a busy pool.
+    fn try_checkout(&self) -> Option<Checkout> {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(link) = st.idle.pop() {
+            return Some(Checkout::Reused(link));
+        }
+        if st.occupied < self.cap {
+            st.occupied += 1;
+            return Some(Checkout::Dial);
+        }
+        None
+    }
+
+    /// Check out a link slot, blocking while all `cap` links are in
+    /// flight.  `waits` counts each block.
+    fn checkout(&self, waits: &Counter) -> Checkout {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            if let Some(link) = st.idle.pop() {
+                return Checkout::Reused(link);
+            }
+            if st.occupied < self.cap {
+                st.occupied += 1;
+                return Checkout::Dial;
+            }
+            waits.inc();
+            st = self.available.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Return a healthy link to the pool.
+    fn checkin(&self, link: Link) {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        st.idle.push(link);
+        self.available.notify_one();
+    }
+
+    /// Drop a broken link (or an aborted dial): the slot re-opens for
+    /// a future reconnect.
+    fn discard(&self) {
+        let mut st = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        st.occupied = st.occupied.saturating_sub(1);
+        self.available.notify_one();
+    }
+}
+
+/// Bounds forwards in flight when [`RouterOptions::threads`] > 0.
+struct ForwardGate {
+    cap: usize,
+    free: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl ForwardGate {
+    fn new(cap: usize) -> ForwardGate {
+        ForwardGate { cap, free: Mutex::new(cap), cv: Condvar::new() }
+    }
+
+    fn acquire(&self) {
+        if self.cap == 0 {
+            return;
+        }
+        let mut free = self.free.lock().unwrap_or_else(|p| p.into_inner());
+        while *free == 0 {
+            free = self.cv.wait(free).unwrap_or_else(|p| p.into_inner());
+        }
+        *free -= 1;
+    }
+
+    fn release(&self) {
+        if self.cap == 0 {
+            return;
+        }
+        let mut free = self.free.lock().unwrap_or_else(|p| p.into_inner());
+        *free += 1;
+        self.cv.notify_one();
+    }
+}
+
+/// The concurrent forwarding core: shared by every client worker
+/// through `&self` — the ring sits behind one short-critical-section
+/// mutex, replica links live in per-replica [`LinkPool`]s, and the
+/// round-robin ticket is an atomic.
 pub struct Router {
-    ring: Ring,
-    conns: Vec<Option<BufReader<TcpStream>>>,
+    ring: Mutex<Ring>,
+    pools: Vec<LinkPool>,
     timeout: Duration,
     probe_every: Duration,
-    last_probe: Instant,
+    last_probe: Mutex<Instant>,
     /// Rotating ticket for unkeyed requests.
-    rr: u64,
-    pub retried: u64,
+    rr: AtomicU64,
+    gate: ForwardGate,
+    metrics: RouterMetrics,
 }
 
 impl Router {
     pub fn new(endpoints: Vec<String>, opts: &RouterOptions) -> Router {
         let n = endpoints.len();
         Router {
-            ring: Ring::new(endpoints, opts.seed, opts.vnodes),
-            conns: (0..n).map(|_| None).collect(),
+            ring: Mutex::new(Ring::new(endpoints, opts.seed, opts.vnodes)),
+            pools: (0..n).map(|_| LinkPool::new(opts.pool)).collect(),
             timeout: opts.timeout,
             probe_every: opts.probe_every,
-            last_probe: Instant::now(),
-            rr: 0,
-            retried: 0,
+            last_probe: Mutex::new(Instant::now()),
+            rr: AtomicU64::new(0),
+            gate: ForwardGate::new(opts.threads),
+            metrics: RouterMetrics::new(),
         }
     }
 
-    pub fn ring(&self) -> &Ring {
-        &self.ring
+    /// Run `f` under the ring lock (candidate selection, liveness).
+    fn with_ring<R>(&self, f: impl FnOnce(&mut Ring) -> R) -> R {
+        let mut ring = self.ring.lock().unwrap_or_else(|p| p.into_inner());
+        f(&mut ring)
     }
 
-    fn connect(&self, idx: usize) -> std::io::Result<BufReader<TcpStream>> {
-        let ep = &self.ring.endpoints()[idx];
-        let stream = TcpStream::connect(ep)?;
+    fn endpoint(&self, idx: usize) -> String {
+        self.with_ring(|r| r.endpoints()[idx].clone())
+    }
+
+    fn mark_dead(&self, idx: usize) {
+        let newly = self.with_ring(|r| {
+            let was = r.is_alive(idx);
+            r.mark_dead(idx);
+            was
+        });
+        if newly {
+            self.metrics.replica_dead.inc();
+        }
+    }
+
+    fn dial(&self, idx: usize) -> std::io::Result<Link> {
+        let ep = self.endpoint(idx);
+        let stream = TcpStream::connect(&ep)?;
         stream.set_nodelay(true).ok();
         stream.set_read_timeout(Some(POLL))?;
         stream.set_write_timeout(Some(self.timeout))?;
+        self.metrics.links_opened.inc();
         Ok(BufReader::new(stream))
     }
 
     /// Periodically try to bring dead replicas back into rotation.
-    fn maybe_probe(&mut self) {
-        if self.last_probe.elapsed() < self.probe_every {
-            return;
+    fn maybe_probe(&self) {
+        {
+            let mut last = self.last_probe.lock().unwrap_or_else(|p| p.into_inner());
+            if last.elapsed() < self.probe_every {
+                return;
+            }
+            *last = Instant::now();
         }
-        self.last_probe = Instant::now();
-        for idx in 0..self.ring.endpoints().len() {
-            if !self.ring.is_alive(idx) {
-                if let Ok(conn) = self.connect(idx) {
-                    self.conns[idx] = Some(conn);
-                    self.ring.mark_alive(idx);
+        let dead: Vec<usize> = self.with_ring(|r| {
+            (0..r.endpoints().len()).filter(|&i| !r.is_alive(i)).collect()
+        });
+        for idx in dead {
+            if let Ok(link) = self.dial(idx) {
+                // seed the revived replica's pool with the probe link
+                // if a slot is free; otherwise just drop it
+                match self.pools[idx].try_checkout() {
+                    Some(Checkout::Reused(old)) => {
+                        self.pools[idx].checkin(old);
+                        drop(link);
+                    }
+                    Some(Checkout::Dial) => self.pools[idx].checkin(link),
+                    None => drop(link),
                 }
+                self.with_ring(|r| r.mark_alive(idx));
             }
         }
     }
 
-    /// One request-reply exchange with replica `idx` over its
-    /// persistent connection (opened on demand).
-    fn send_recv(&mut self, idx: usize, line: &str) -> std::io::Result<String> {
-        if self.conns[idx].is_none() {
-            self.conns[idx] = Some(self.connect(idx)?);
+    /// Write `lines` to `link` and read one reply per line, in order.
+    /// The [`fault::site::ROUTER_LINK`] hook fires once per exchange:
+    /// `io` breaks the link before any bytes move, `stall:MS` delays
+    /// it (a slow replica link).
+    fn exchange(&self, link: &mut Link, lines: &[&str]) -> std::io::Result<Vec<String>> {
+        match fault::armed(fault::site::ROUTER_LINK) {
+            Some(fault::FaultKind::Io) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::Other,
+                    "injected router link fault",
+                ))
+            }
+            Some(fault::FaultKind::Stall(ms)) => std::thread::sleep(Duration::from_millis(ms)),
+            _ => {}
         }
-        let conn = self.conns[idx].as_mut().expect("filled above");
-        let stream = conn.get_mut();
-        stream.write_all(line.as_bytes())?;
-        stream.write_all(b"\n")?;
-        stream.flush()?;
+        {
+            let stream = link.get_mut();
+            for line in lines {
+                stream.write_all(line.as_bytes())?;
+                stream.write_all(b"\n")?;
+            }
+            stream.flush()?;
+        }
         let start = Instant::now();
+        let mut replies = Vec::with_capacity(lines.len());
         let mut buf: Vec<u8> = Vec::new();
-        loop {
-            match conn.read_until(b'\n', &mut buf) {
-                Ok(0) => {
-                    return Err(std::io::Error::new(
-                        std::io::ErrorKind::UnexpectedEof,
-                        "replica closed the connection",
-                    ))
-                }
-                Ok(_) if buf.last() == Some(&b'\n') => {
-                    let text = String::from_utf8(buf).map_err(|_| {
-                        std::io::Error::new(
-                            std::io::ErrorKind::InvalidData,
-                            "replica reply is not UTF-8",
-                        )
-                    })?;
-                    return Ok(text.trim_end().to_string());
-                }
-                Ok(_) => {
-                    return Err(std::io::Error::new(
-                        std::io::ErrorKind::UnexpectedEof,
-                        "replica reply torn mid-line",
-                    ))
-                }
-                Err(e)
-                    if e.kind() == std::io::ErrorKind::WouldBlock
-                        || e.kind() == std::io::ErrorKind::TimedOut
-                        || e.kind() == std::io::ErrorKind::Interrupted =>
-                {
-                    if start.elapsed() >= self.timeout {
+        while replies.len() < lines.len() {
+            buf.clear();
+            loop {
+                match link.read_until(b'\n', &mut buf) {
+                    Ok(0) => {
                         return Err(std::io::Error::new(
-                            std::io::ErrorKind::TimedOut,
-                            "replica reply deadline exceeded",
-                        ));
+                            std::io::ErrorKind::UnexpectedEof,
+                            "replica closed the connection",
+                        ))
                     }
+                    Ok(_) if buf.last() == Some(&b'\n') => {
+                        let text = std::str::from_utf8(&buf).map_err(|_| {
+                            std::io::Error::new(
+                                std::io::ErrorKind::InvalidData,
+                                "replica reply is not UTF-8",
+                            )
+                        })?;
+                        replies.push(text.trim_end().to_string());
+                        break;
+                    }
+                    Ok(_) => {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::UnexpectedEof,
+                            "replica reply torn mid-line",
+                        ))
+                    }
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock
+                            || e.kind() == std::io::ErrorKind::TimedOut
+                            || e.kind() == std::io::ErrorKind::Interrupted =>
+                    {
+                        if start.elapsed() >= self.timeout {
+                            return Err(std::io::Error::new(
+                                std::io::ErrorKind::TimedOut,
+                                "replica reply deadline exceeded",
+                            ));
+                        }
+                    }
+                    Err(e) => return Err(e),
                 }
-                Err(e) => return Err(e),
+            }
+        }
+        Ok(replies)
+    }
+
+    /// One attempt pass against replica `idx`: check out a link (or
+    /// dial into a free slot), run the exchange, and check the link
+    /// back in on success.  A *reused* link that fails is discarded
+    /// and retried once over a freshly dialed link before giving up on
+    /// the replica — a stale pooled socket is a link failure, not a
+    /// replica death.  `Err` here means the replica itself failed.
+    fn try_replica(
+        &self,
+        idx: usize,
+        lines: &[&str],
+        retried: &mut bool,
+    ) -> std::io::Result<Vec<String>> {
+        let pool = &self.pools[idx];
+        let (mut link, reused) = match pool.checkout(&self.metrics.pool_waits) {
+            Checkout::Reused(l) => (l, true),
+            Checkout::Dial => match self.dial(idx) {
+                Ok(l) => (l, false),
+                Err(e) => {
+                    pool.discard();
+                    return Err(e);
+                }
+            },
+        };
+        match self.exchange(&mut link, lines) {
+            Ok(replies) => {
+                pool.checkin(link);
+                return Ok(replies);
+            }
+            Err(first) => {
+                // broken link: free the slot (lazy reconnect queue)
+                drop(link);
+                pool.discard();
+                if !reused {
+                    return Err(first);
+                }
+            }
+        }
+        // the pooled link was stale; one fresh-link retry on the same
+        // replica before declaring it dead
+        *retried = true;
+        let mut link = match pool.checkout(&self.metrics.pool_waits) {
+            Checkout::Reused(l) => l,
+            Checkout::Dial => match self.dial(idx) {
+                Ok(l) => l,
+                Err(e) => {
+                    pool.discard();
+                    return Err(e);
+                }
+            },
+        };
+        match self.exchange(&mut link, lines) {
+            Ok(replies) => {
+                pool.checkin(link);
+                Ok(replies)
+            }
+            Err(e) => {
+                drop(link);
+                pool.discard();
+                Err(e)
             }
         }
     }
 
-    /// Forward `line` to the replica owning `key` (or the next alive
-    /// replica round-robin when unkeyed), retrying exactly one
-    /// alternate on failure and marking failed replicas dead.
-    pub fn forward_line(&mut self, key: Option<&[u8]>, line: &str) -> Result<String, FleetError> {
-        self.maybe_probe();
-        let candidates = match key {
-            Some(k) => self.ring.candidates(k, 2),
-            None => {
-                // unkeyed: rotate over alive replicas, one alternate
-                let alive: Vec<usize> = (0..self.ring.endpoints().len())
-                    .filter(|&i| self.ring.is_alive(i))
-                    .collect();
+    /// Candidate replicas for one request: the ring walk for keyed
+    /// lines, an atomic round-robin ticket (plus one alternate) for
+    /// keyless ones.
+    fn candidates_for(&self, key: Option<&[u8]>) -> Vec<usize> {
+        match key {
+            Some(k) => self.with_ring(|r| r.candidates(k, 2)),
+            None => self.with_ring(|r| {
+                let alive: Vec<usize> =
+                    (0..r.endpoints().len()).filter(|&i| r.is_alive(i)).collect();
                 if alive.is_empty() {
-                    Vec::new()
-                } else {
-                    let first = alive[(self.rr as usize) % alive.len()];
-                    self.rr = self.rr.wrapping_add(1);
-                    let mut c = vec![first];
-                    if alive.len() > 1 {
-                        c.push(alive[(self.rr as usize) % alive.len()]);
-                    }
-                    c
+                    return Vec::new();
                 }
-            }
-        };
+                let ticket = self.rr.fetch_add(1, Ordering::Relaxed) as usize;
+                let first = alive[ticket % alive.len()];
+                let mut c = vec![first];
+                if alive.len() > 1 {
+                    c.push(alive[(ticket + 1) % alive.len()]);
+                }
+                c
+            }),
+        }
+    }
+
+    /// Forward `lines` (all owned by the same candidate set) to their
+    /// replica, retrying a stale link once and then exactly one
+    /// alternate replica, marking failed replicas dead.
+    fn forward_to(
+        &self,
+        candidates: &[usize],
+        lines: &[&str],
+    ) -> Result<Vec<String>, FleetError> {
         if candidates.is_empty() {
             return Err(FleetError::NoReplica { detail: "every replica is out of rotation".into() });
         }
+        let start = Instant::now();
         let mut last_err = String::new();
         for (attempt, &idx) in candidates.iter().enumerate() {
-            match self.send_recv(idx, line) {
-                Ok(reply) => {
-                    if attempt > 0 {
-                        self.retried += 1;
+            let mut link_retried = false;
+            match self.try_replica(idx, lines, &mut link_retried) {
+                Ok(replies) => {
+                    if attempt > 0 || link_retried {
+                        self.metrics.retries.inc();
                     }
-                    return Ok(reply);
+                    self.metrics.forwards.add(lines.len() as u64);
+                    if lines.len() > 1 {
+                        self.metrics.pipelined.add(lines.len() as u64);
+                    }
+                    self.metrics.forward_ns.observe_duration(start.elapsed());
+                    return Ok(replies);
                 }
                 Err(e) => {
-                    last_err =
-                        format!("{}: {e}", self.ring.endpoints()[idx]);
-                    self.conns[idx] = None;
-                    self.ring.mark_dead(idx);
+                    last_err = format!("{}: {e}", self.endpoint(idx));
+                    self.mark_dead(idx);
                 }
             }
         }
         Err(FleetError::NoReplica {
             detail: format!("primary and alternate both failed (last: {last_err})"),
         })
+    }
+
+    /// Forward one request line (see [`Router::forward_to`] for the
+    /// retry contract).
+    pub fn forward_line(&self, key: Option<&[u8]>, line: &str) -> Result<String, FleetError> {
+        self.maybe_probe();
+        let candidates = self.candidates_for(key);
+        self.forward_to(&candidates, &[line])
+            .map(|mut replies| replies.pop().unwrap_or_default())
+    }
+
+    /// Lifetime counters (for [`RouterReport`]).
+    fn report(&self, connections: u64) -> RouterReport {
+        RouterReport {
+            connections,
+            forwarded: self.metrics.forwards.get(),
+            retried: self.metrics.retries.get(),
+            rejected: self.metrics.rejected.get(),
+            links_opened: self.metrics.links_opened.get(),
+            pool_waits: self.metrics.pool_waits.get(),
+            pipelined: self.metrics.pipelined.get(),
+            replica_dead: self.metrics.replica_dead.get(),
+        }
+    }
+
+    /// The full telemetry registry behind the `router-stats` line (a
+    /// scrape surface for embedders; `run_router` only exposes the
+    /// one-line view).
+    pub fn render_metrics(&self) -> String {
+        self.metrics.registry.render()
     }
 }
 
@@ -341,9 +704,11 @@ fn is_control_verb(cmd: &str) -> bool {
 }
 
 /// Run the data-plane router until a `shutdown` line: accept client
-/// connections, forward each request line to its consistent-hash
-/// replica, relay the reply.  `shutdown` stops the *router* only —
-/// replicas are shut down directly (or by the controller).
+/// connections, hand each to its own worker thread, forward request
+/// lines to their consistent-hash replicas over pooled links, relay
+/// the replies.  `shutdown` stops the *router* only — replicas are
+/// shut down directly (or by the controller).  `router-stats` answers
+/// locally with the telemetry line.
 pub fn run_router(
     listener: TcpListener,
     endpoints: Vec<String>,
@@ -354,14 +719,10 @@ pub fn run_router(
         .map_err(|e| FleetError::Io { path: "router listener".into(), detail: e.to_string() })?;
     let stop = AtomicBool::new(false);
     let connections = AtomicU64::new(0);
-    let forwarded = AtomicU64::new(0);
-    let rejected = AtomicU64::new(0);
-    let core = Mutex::new(Router::new(endpoints, opts));
+    let core = Router::new(endpoints, opts);
     std::thread::scope(|s| {
         let stop = &stop;
         let core = &core;
-        let forwarded = &forwarded;
-        let rejected = &rejected;
         loop {
             if stop.load(Ordering::Relaxed) {
                 break;
@@ -370,7 +731,7 @@ pub fn run_router(
                 Ok((stream, _peer)) => {
                     connections.fetch_add(1, Ordering::Relaxed);
                     s.spawn(move || {
-                        client_loop(stream, core, stop, forwarded, rejected);
+                        client_loop(stream, core, stop);
                     });
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -387,24 +748,29 @@ pub fn run_router(
         }
         Ok(())
     })?;
-    let retried = core.into_inner().unwrap_or_else(|p| p.into_inner()).retried;
-    Ok(RouterReport {
-        connections: connections.into_inner(),
-        forwarded: forwarded.into_inner(),
-        retried,
-        rejected: rejected.into_inner(),
-    })
+    Ok(core.report(connections.into_inner()))
 }
 
-/// One client connection: synchronous line-in/reply-out (the replica
-/// round trip happens under the router mutex).
-fn client_loop(
-    stream: TcpStream,
-    core: &Mutex<Router>,
-    stop: &AtomicBool,
-    forwarded: &AtomicU64,
-    rejected: &AtomicU64,
-) {
+/// One parsed client request line.
+struct Request {
+    line: String,
+    key: Option<Vec<u8>>,
+}
+
+/// Parse the `key=` token (second whitespace field) of a request line.
+fn key_of(line: &str) -> Option<Vec<u8>> {
+    line.split_ascii_whitespace()
+        .nth(1)
+        .and_then(|t| t.strip_prefix("key="))
+        .map(|k| k.as_bytes().to_vec())
+}
+
+/// One client connection worker: reads request lines, answers local
+/// verbs (`shutdown`, `router-stats`), refuses control verbs, and
+/// forwards the rest — pipelining consecutive already-buffered lines
+/// that the ring assigns to the same replica.  Replies always go back
+/// in request order.
+fn client_loop(stream: TcpStream, core: &Router, stop: &AtomicBool) {
     if stream.set_nonblocking(false).is_err() || stream.set_read_timeout(Some(POLL)).is_err() {
         return;
     }
@@ -414,61 +780,71 @@ fn client_loop(
     };
     let mut rd = BufReader::new(&stream);
     let mut buf: Vec<u8> = Vec::new();
-    loop {
+    'conn: loop {
         if stop.load(Ordering::Relaxed) {
             break;
         }
+        // NB: no clear here — a WouldBlock mid-line leaves the partial
+        // bytes in `buf` and the next pass appends the rest; the Ok
+        // path empties it via mem::take.
         match rd.read_until(b'\n', &mut buf) {
             Ok(0) => break,
             Ok(_) => {
-                let reply = match std::str::from_utf8(&buf) {
-                    Ok(text) => {
-                        let line = text.trim();
-                        if line.is_empty() {
-                            buf.clear();
-                            continue;
-                        }
-                        let cmd = line.split_ascii_whitespace().next().unwrap_or("");
-                        if cmd == "shutdown" {
-                            let _ = write_half.write_all(b"ok bye\n");
-                            stop.store(true, Ordering::Relaxed);
-                            break;
-                        }
-                        if is_control_verb(cmd) {
-                            rejected.fetch_add(1, Ordering::Relaxed);
-                            format!("err router: {cmd} goes directly to replicas, not the router")
-                        } else {
-                            let key = line
-                                .split_ascii_whitespace()
-                                .nth(1)
-                                .and_then(|t| t.strip_prefix("key="))
-                                .map(|k| k.as_bytes().to_vec());
-                            let mut router = core.lock().unwrap_or_else(|p| p.into_inner());
-                            match router.forward_line(key.as_deref(), line) {
-                                Ok(r) => {
-                                    forwarded.fetch_add(1, Ordering::Relaxed);
-                                    r
-                                }
-                                Err(e) => {
-                                    rejected.fetch_add(1, Ordering::Relaxed);
-                                    format!("err {e}")
-                                }
+                let mut replies: Vec<String> = Vec::new();
+                let mut pending: Vec<Request> = Vec::new();
+                // the line just read, plus every *complete* line the
+                // client has already buffered behind it — those are
+                // the pipelining candidates
+                let mut lines: Vec<Vec<u8>> = vec![std::mem::take(&mut buf)];
+                while let Some(nl) = rd.buffer().iter().position(|&b| b == b'\n') {
+                    let mut extra = vec![0u8; nl + 1];
+                    if std::io::Read::read_exact(&mut rd, &mut extra).is_err() {
+                        break;
+                    }
+                    lines.push(extra);
+                }
+                for raw in lines {
+                    match std::str::from_utf8(&raw) {
+                        Ok(text) => {
+                            let line = text.trim();
+                            if line.is_empty() {
+                                continue;
+                            }
+                            let cmd = line.split_ascii_whitespace().next().unwrap_or("");
+                            if cmd == "shutdown" {
+                                flush_pending(core, stop, &mut pending, &mut replies);
+                                replies.push("ok bye".to_string());
+                                send_replies(&mut write_half, &replies);
+                                stop.store(true, Ordering::Relaxed);
+                                break 'conn;
+                            }
+                            if cmd == "router-stats" {
+                                flush_pending(core, stop, &mut pending, &mut replies);
+                                replies.push(core.metrics.stats_line());
+                            } else if is_control_verb(cmd) {
+                                flush_pending(core, stop, &mut pending, &mut replies);
+                                core.metrics.rejected.inc();
+                                replies.push(format!(
+                                    "err router: {cmd} goes directly to replicas, not the router"
+                                ));
+                            } else {
+                                pending.push(Request {
+                                    line: line.to_string(),
+                                    key: key_of(line),
+                                });
                             }
                         }
+                        Err(_) => {
+                            flush_pending(core, stop, &mut pending, &mut replies);
+                            core.metrics.rejected.inc();
+                            replies.push("err line is not valid UTF-8".to_string());
+                        }
                     }
-                    Err(_) => {
-                        rejected.fetch_add(1, Ordering::Relaxed);
-                        "err line is not valid UTF-8".to_string()
-                    }
-                };
-                if write_half
-                    .write_all(reply.as_bytes())
-                    .and_then(|()| write_half.write_all(b"\n"))
-                    .is_err()
-                {
+                }
+                flush_pending(core, stop, &mut pending, &mut replies);
+                if !send_replies(&mut write_half, &replies) {
                     break;
                 }
-                buf.clear();
             }
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
@@ -480,6 +856,79 @@ fn client_loop(
             Err(_) => break,
         }
     }
+}
+
+/// Forward every pending request, grouping maximal *consecutive* runs
+/// whose primary candidate is the same replica into one pipelined
+/// exchange (reply order is preserved: the line protocol answers in
+/// order on one connection, and runs flush in arrival order).  A
+/// failed pipelined run falls back to per-line forwarding, so the
+/// retry contract stays per-request.
+fn flush_pending(
+    core: &Router,
+    stop: &AtomicBool,
+    pending: &mut Vec<Request>,
+    replies: &mut Vec<String>,
+) {
+    let requests = std::mem::take(pending);
+    if requests.is_empty() {
+        return;
+    }
+    core.gate.acquire();
+    core.maybe_probe();
+    let mut i = 0;
+    while i < requests.len() {
+        let candidates = core.candidates_for(requests[i].key.as_deref());
+        // extend the run while the next line's primary owner matches
+        let mut j = i + 1;
+        while j < requests.len() {
+            let next = core.candidates_for(requests[j].key.as_deref());
+            if next.first() != candidates.first() || next != candidates {
+                break;
+            }
+            j += 1;
+        }
+        let run: Vec<&str> = requests[i..j].iter().map(|r| r.line.as_str()).collect();
+        if run.len() == 1 {
+            match core.forward_to(&candidates, &run) {
+                Ok(mut r) => replies.push(r.pop().unwrap_or_default()),
+                Err(e) => {
+                    core.metrics.rejected.inc();
+                    replies.push(format!("err {e}"));
+                }
+            }
+        } else {
+            match core.forward_to(&candidates, &run) {
+                Ok(r) => replies.extend(r),
+                Err(_) => {
+                    // pipelined run failed wholesale: re-forward each
+                    // line individually through the full retry path
+                    for req in &requests[i..j] {
+                        let cands = core.candidates_for(req.key.as_deref());
+                        match core.forward_to(&cands, &[req.line.as_str()]) {
+                            Ok(mut r) => replies.push(r.pop().unwrap_or_default()),
+                            Err(e) => {
+                                core.metrics.rejected.inc();
+                                replies.push(format!("err {e}"));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        i = j;
+    }
+    core.gate.release();
+}
+
+/// Write reply lines back to the client; false on a broken client.
+fn send_replies(write_half: &mut TcpStream, replies: &[String]) -> bool {
+    let mut out = String::new();
+    for r in replies {
+        out.push_str(r);
+        out.push('\n');
+    }
+    write_half.write_all(out.as_bytes()).is_ok()
 }
 
 #[cfg(test)]
@@ -619,8 +1068,55 @@ mod tests {
         for v in ["push-artifact", "activate", "rollback", "fleet-status", "swap-model"] {
             assert!(is_control_verb(v), "{v}");
         }
-        for v in ["predict", "decision", "feedback", "stats"] {
+        for v in ["predict", "decision", "feedback", "stats", "router-stats"] {
             assert!(!is_control_verb(v), "{v}");
         }
+    }
+
+    /// The link pool hands out at most `cap` slots, blocks past that,
+    /// and re-opens a slot on discard (the lazy reconnect queue).
+    #[test]
+    fn link_pool_caps_slots_and_recycles_on_discard() {
+        let pool = LinkPool::new(2);
+        let waits = Counter::default();
+        assert!(matches!(pool.checkout(&waits), Checkout::Dial));
+        assert!(matches!(pool.checkout(&waits), Checkout::Dial));
+        // both slots occupied: a third checkout must wait until one
+        // frees — prove it by discarding from another thread
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                std::thread::sleep(Duration::from_millis(50));
+                pool.discard();
+            });
+            assert!(matches!(pool.checkout(&waits), Checkout::Dial));
+        });
+        assert!(waits.get() >= 1, "the blocked checkout must count a pool wait");
+    }
+
+    /// The forward gate bounds in-flight forwards at `cap`, and cap 0
+    /// means unbounded (acquire never blocks).
+    #[test]
+    fn forward_gate_bounds_in_flight() {
+        let gate = ForwardGate::new(1);
+        gate.acquire();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                std::thread::sleep(Duration::from_millis(50));
+                gate.release();
+            });
+            // blocks until the release above
+            gate.acquire();
+        });
+        gate.release();
+        let open = ForwardGate::new(0);
+        open.acquire();
+        open.acquire(); // unbounded: never blocks
+    }
+
+    #[test]
+    fn key_parse_matches_line_protocol_shape() {
+        assert_eq!(key_of("decision key=alice 1 2 3"), Some(b"alice".to_vec()));
+        assert_eq!(key_of("decision 1 2 3"), None);
+        assert_eq!(key_of("stats"), None);
     }
 }

@@ -706,14 +706,40 @@ fn classify_reply(
     }
 }
 
+/// What one loadgen phase (one rate step, or the whole run when no
+/// ramp is set) measured.
+struct LoadgenPhase {
+    ok: u64,
+    shed: u64,
+    errs: u64,
+    elapsed_secs: f64,
+    snap: mmbsgd::telemetry::HistogramSnapshot,
+}
+
+impl LoadgenPhase {
+    fn completed(&self) -> u64 {
+        self.ok + self.shed + self.errs
+    }
+
+    fn achieved_rps(&self) -> f64 {
+        self.completed() as f64 / self.elapsed_secs.max(1e-9)
+    }
+
+    fn shed_rate(&self) -> f64 {
+        self.shed as f64 / self.completed().max(1) as f64
+    }
+}
+
 /// `mmbsgd loadgen`: sustained-traffic harness against a running
-/// serve endpoint.  M closed-loop workers each own one connection
-/// (line protocol or HTTP keep-alive), replay N keyed `decision`
-/// requests (optionally paced to a target aggregate rate), measure
-/// per-request round-trip latency into the same
-/// [`mmbsgd::telemetry::Histogram`] the server uses, and emit
-/// `BENCH_serve.json` in the `mmbsgd-bench-v1` shape
-/// `scripts/perf_compare.sh` gates.
+/// serve endpoint (or the fleet router — `--mode router` speaks the
+/// same line protocol but labels its bench rows `router/*`).  M
+/// closed-loop workers each own one connection (line protocol or HTTP
+/// keep-alive), replay N keyed `decision` requests (optionally paced
+/// to a target aggregate rate, or stepped through a
+/// `--rate-ramp START:STEP:N` profile), measure per-request
+/// round-trip latency into the same [`mmbsgd::telemetry::Histogram`]
+/// the server uses, and emit `BENCH_serve.json` in the
+/// `mmbsgd-bench-v1` shape `scripts/perf_compare.sh` gates.
 fn cmd_loadgen(args: &Args) -> Result<()> {
     use mmbsgd::rng::Xoshiro256;
     use mmbsgd::telemetry::Histogram;
@@ -725,9 +751,12 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
 
     let target = args.get("target").context("loadgen needs --target host:port")?.to_string();
     let mode = args.get("mode").unwrap_or("line").to_string();
-    if mode != "line" && mode != "http" {
-        bail!("bad --mode {mode:?} (line|http)");
+    if mode != "line" && mode != "http" && mode != "router" {
+        bail!("bad --mode {mode:?} (line|http|router)");
     }
+    // bench-row family: `router/*` when driving the fleet router so
+    // the router artifact never collides with the serve one
+    let prefix = if mode == "router" { "router" } else { "serve" };
     let requests: usize = args.get_parse("requests", 10_000)?;
     let workers: usize = args.get_parse("workers", 2)?;
     if requests == 0 || workers == 0 {
@@ -737,6 +766,28 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     if !(rate >= 0.0 && rate.is_finite()) {
         bail!("--rate must be a finite non-negative requests/second");
     }
+    // --rate-ramp START:STEP:N — N phases of `--requests` each, phase
+    // i paced at START + i*STEP req/s
+    let ramp: Option<(f64, f64, usize)> = match args.get("rate-ramp") {
+        Some(spec) => {
+            let parts: Vec<&str> = spec.split(':').collect();
+            let bad = || anyhow!("bad --rate-ramp {spec:?} (want START:STEP:N, e.g. 200:200:4)");
+            if parts.len() != 3 {
+                return Err(bad());
+            }
+            let start: f64 = parts[0].parse().map_err(|_| bad())?;
+            let step: f64 = parts[1].parse().map_err(|_| bad())?;
+            let n: usize = parts[2].parse().map_err(|_| bad())?;
+            if !(start > 0.0 && start.is_finite() && step.is_finite() && step >= 0.0 && n >= 1) {
+                return Err(bad());
+            }
+            if rate > 0.0 {
+                bail!("--rate and --rate-ramp are mutually exclusive");
+            }
+            Some((start, step, n))
+        }
+        None => None,
+    };
     let dim: usize = args.get_parse("dim", 0)?;
     if dim == 0 {
         bail!("loadgen needs --dim <feature count> matching the served model");
@@ -744,153 +795,216 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let keys: usize = args.get_parse("keys", 64)?.max(1);
     let out = args.get("out").unwrap_or("BENCH_serve.json").to_string();
     let auth = args.get("auth-token").unwrap_or("").to_string();
+    if mode == "router" && !auth.is_empty() {
+        bail!("--auth-token is a replica-level verb; the router does not authenticate");
+    }
     let seed: u64 = args.get_parse("seed", 1)?;
 
-    let hist = Histogram::new();
-    let ok = AtomicU64::new(0);
-    let shed = AtomicU64::new(0);
-    let errs = AtomicU64::new(0);
-    println!(
-        "[loadgen] {requests} {mode} decision requests -> {target} | {workers} workers | {} | \
-         dim {dim} | {keys} keys",
-        if rate > 0.0 { format!("{rate:.0} req/s target") } else { "unpaced".into() },
-    );
+    // the all-phases histogram behind the aggregate rows (each
+    // request observes into its phase histogram *and* this one)
+    let total_hist = Histogram::new();
 
-    let started = Instant::now();
-    // Aggregate pacing split evenly: each worker sends every
-    // `workers/rate` seconds, so the fleet of workers sums to `rate`.
-    let interval =
-        if rate > 0.0 { Duration::from_secs_f64(workers as f64 / rate) } else { Duration::ZERO };
-    std::thread::scope(|s| -> Result<()> {
-        let mut handles = Vec::new();
-        for w in 0..workers {
-            let (hist, ok, shed, errs) = (&hist, &ok, &shed, &errs);
-            let (target, auth, mode) = (target.clone(), auth.clone(), mode.clone());
-            handles.push(s.spawn(move || -> Result<()> {
-                // Worker w owns requests w, w+M, w+2M, ...
-                let n_mine = if w < requests { (requests - w - 1) / workers + 1 } else { 0 };
-                let mut rng = Xoshiro256::new(seed ^ ((w as u64 + 1) * 0x9E37_79B9));
-                let stream = TcpStream::connect(&target)
-                    .with_context(|| format!("worker {w}: connecting {target}"))?;
-                let _ = stream.set_nodelay(true);
-                let mut rd = BufReader::new(stream.try_clone()?);
-                let mut wtr = stream;
-                let mut reply = String::new();
-                if mode == "line" && !auth.is_empty() {
-                    wtr.write_all(format!("auth {auth}\n").as_bytes())?;
-                    reply.clear();
-                    rd.read_line(&mut reply)?;
-                    if !reply.starts_with("ok") {
-                        bail!("worker {w}: auth rejected: {}", reply.trim());
-                    }
-                }
-                let mut body = String::new();
-                for i in 0..n_mine {
-                    if !interval.is_zero() {
-                        let due = started + interval.mul_f64(i as f64)
-                            + interval.mul_f64(w as f64 / workers as f64);
-                        let now = Instant::now();
-                        if due > now {
-                            std::thread::sleep(due - now);
+    // One complete closed-loop pass: fresh workers, fresh
+    // connections, its own histogram — so each ramp step measures a
+    // steady state, not a blend with the previous rate.
+    let run_phase = |phase_rate: f64, phase_seed: u64| -> Result<LoadgenPhase> {
+        let hist = Histogram::new();
+        let ok = AtomicU64::new(0);
+        let shed = AtomicU64::new(0);
+        let errs = AtomicU64::new(0);
+        let started = Instant::now();
+        // Aggregate pacing split evenly: each worker sends every
+        // `workers/rate` seconds, so the fleet of workers sums to
+        // `phase_rate`.
+        let interval = if phase_rate > 0.0 {
+            Duration::from_secs_f64(workers as f64 / phase_rate)
+        } else {
+            Duration::ZERO
+        };
+        std::thread::scope(|s| -> Result<()> {
+            let mut handles = Vec::new();
+            for w in 0..workers {
+                let (hist, total_hist, ok, shed, errs) = (&hist, &total_hist, &ok, &shed, &errs);
+                let (target, auth, mode) = (target.clone(), auth.clone(), mode.clone());
+                handles.push(s.spawn(move || -> Result<()> {
+                    // Worker w owns requests w, w+M, w+2M, ...
+                    let n_mine =
+                        if w < requests { (requests - w - 1) / workers + 1 } else { 0 };
+                    let mut rng = Xoshiro256::new(phase_seed ^ ((w as u64 + 1) * 0x9E37_79B9));
+                    let stream = TcpStream::connect(&target)
+                        .with_context(|| format!("worker {w}: connecting {target}"))?;
+                    let _ = stream.set_nodelay(true);
+                    let mut rd = BufReader::new(stream.try_clone()?);
+                    let mut wtr = stream;
+                    let mut reply = String::new();
+                    if mode == "line" && !auth.is_empty() {
+                        wtr.write_all(format!("auth {auth}\n").as_bytes())?;
+                        reply.clear();
+                        rd.read_line(&mut reply)?;
+                        if !reply.starts_with("ok") {
+                            bail!("worker {w}: auth rejected: {}", reply.trim());
                         }
                     }
-                    body.clear();
-                    write!(body, "key=k{}", (w + i * workers) % keys).expect("string write");
-                    for _ in 0..dim {
-                        write!(body, " {:.4}", rng.next_f64() * 2.0 - 1.0)
+                    let mut body = String::new();
+                    for i in 0..n_mine {
+                        if !interval.is_zero() {
+                            let due = started + interval.mul_f64(i as f64)
+                                + interval.mul_f64(w as f64 / workers as f64);
+                            let now = Instant::now();
+                            if due > now {
+                                std::thread::sleep(due - now);
+                            }
+                        }
+                        body.clear();
+                        write!(body, "key=k{}", (w + i * workers) % keys)
                             .expect("string write");
-                    }
-                    body.push('\n');
-                    if mode == "line" {
-                        let t0 = Instant::now();
-                        wtr.write_all(format!("decision {body}").as_bytes())?;
-                        reply.clear();
-                        if rd.read_line(&mut reply)? == 0 {
-                            bail!("worker {w}: server closed the connection");
+                        for _ in 0..dim {
+                            write!(body, " {:.4}", rng.next_f64() * 2.0 - 1.0)
+                                .expect("string write");
                         }
-                        hist.observe_duration(t0.elapsed());
-                        classify_reply(reply.trim(), ok, shed, errs);
-                    } else {
-                        let auth_hdr = if auth.is_empty() {
-                            String::new()
-                        } else {
-                            format!("Authorization: Bearer {auth}\r\n")
-                        };
-                        let req = format!(
-                            "POST /decision HTTP/1.1\r\nContent-Length: {}\r\n{auth_hdr}\r\n{body}",
-                            body.len()
-                        );
-                        let t0 = Instant::now();
-                        wtr.write_all(req.as_bytes())?;
-                        reply.clear();
-                        if rd.read_line(&mut reply)? == 0 {
-                            bail!("worker {w}: server closed the connection");
-                        }
-                        let status: u16 = reply
-                            .split_ascii_whitespace()
-                            .nth(1)
-                            .and_then(|s| s.parse().ok())
-                            .with_context(|| {
-                                format!("worker {w}: bad status line {:?}", reply.trim())
-                            })?;
-                        let mut content_length = 0usize;
-                        loop {
+                        body.push('\n');
+                        if mode != "http" {
+                            let t0 = Instant::now();
+                            wtr.write_all(format!("decision {body}").as_bytes())?;
                             reply.clear();
                             if rd.read_line(&mut reply)? == 0 {
-                                bail!("worker {w}: connection died mid-headers");
+                                bail!("worker {w}: server closed the connection");
                             }
-                            let h = reply.trim();
-                            if h.is_empty() {
-                                break;
+                            let dt = t0.elapsed();
+                            hist.observe_duration(dt);
+                            total_hist.observe_duration(dt);
+                            classify_reply(reply.trim(), ok, shed, errs);
+                        } else {
+                            let auth_hdr = if auth.is_empty() {
+                                String::new()
+                            } else {
+                                format!("Authorization: Bearer {auth}\r\n")
+                            };
+                            let req = format!(
+                                "POST /decision HTTP/1.1\r\nContent-Length: {}\r\n\
+                                 {auth_hdr}\r\n{body}",
+                                body.len()
+                            );
+                            let t0 = Instant::now();
+                            wtr.write_all(req.as_bytes())?;
+                            reply.clear();
+                            if rd.read_line(&mut reply)? == 0 {
+                                bail!("worker {w}: server closed the connection");
                             }
-                            let lower = h.to_ascii_lowercase();
-                            if let Some(v) = lower.strip_prefix("content-length:") {
-                                content_length = v.trim().parse().with_context(|| {
-                                    format!("worker {w}: bad content-length {h:?}")
+                            let status: u16 = reply
+                                .split_ascii_whitespace()
+                                .nth(1)
+                                .and_then(|s| s.parse().ok())
+                                .with_context(|| {
+                                    format!("worker {w}: bad status line {:?}", reply.trim())
                                 })?;
+                            let mut content_length = 0usize;
+                            loop {
+                                reply.clear();
+                                if rd.read_line(&mut reply)? == 0 {
+                                    bail!("worker {w}: connection died mid-headers");
+                                }
+                                let h = reply.trim();
+                                if h.is_empty() {
+                                    break;
+                                }
+                                let lower = h.to_ascii_lowercase();
+                                if let Some(v) = lower.strip_prefix("content-length:") {
+                                    content_length = v.trim().parse().with_context(|| {
+                                        format!("worker {w}: bad content-length {h:?}")
+                                    })?;
+                                }
                             }
-                        }
-                        let mut resp_body = vec![0u8; content_length];
-                        rd.read_exact(&mut resp_body)?;
-                        hist.observe_duration(t0.elapsed());
-                        match status {
-                            200 => classify_reply(
-                                String::from_utf8_lossy(&resp_body).trim(),
-                                ok,
-                                shed,
-                                errs,
-                            ),
-                            503 => {
-                                shed.fetch_add(1, Ordering::Relaxed);
-                            }
-                            _ => {
-                                errs.fetch_add(1, Ordering::Relaxed);
+                            let mut resp_body = vec![0u8; content_length];
+                            rd.read_exact(&mut resp_body)?;
+                            let dt = t0.elapsed();
+                            hist.observe_duration(dt);
+                            total_hist.observe_duration(dt);
+                            match status {
+                                200 => classify_reply(
+                                    String::from_utf8_lossy(&resp_body).trim(),
+                                    ok,
+                                    shed,
+                                    errs,
+                                ),
+                                503 => {
+                                    shed.fetch_add(1, Ordering::Relaxed);
+                                }
+                                _ => {
+                                    errs.fetch_add(1, Ordering::Relaxed);
+                                }
                             }
                         }
                     }
-                }
-                Ok(())
-            }));
-        }
-        for h in handles {
-            h.join().map_err(|_| anyhow!("loadgen worker panicked"))??;
-        }
-        Ok(())
-    })?;
-    let elapsed = started.elapsed();
+                    Ok(())
+                }));
+            }
+            for h in handles {
+                h.join().map_err(|_| anyhow!("loadgen worker panicked"))??;
+            }
+            Ok(())
+        })?;
+        Ok(LoadgenPhase {
+            ok: ok.load(Ordering::Relaxed),
+            shed: shed.load(Ordering::Relaxed),
+            errs: errs.load(Ordering::Relaxed),
+            elapsed_secs: started.elapsed().as_secs_f64(),
+            snap: hist.snapshot(),
+        })
+    };
 
-    let (ok, shed, errs) =
-        (ok.load(Ordering::Relaxed), shed.load(Ordering::Relaxed), errs.load(Ordering::Relaxed));
+    let rates: Vec<f64> = match ramp {
+        Some((start, step, n)) => (0..n).map(|i| start + step * i as f64).collect(),
+        None => vec![rate],
+    };
+    println!(
+        "[loadgen] {requests} {mode} decision requests{} -> {target} | {workers} workers | {} | \
+         dim {dim} | {keys} keys",
+        if rates.len() > 1 { format!(" x {} ramp steps", rates.len()) } else { String::new() },
+        if rates[0] > 0.0 {
+            format!("{:.0} req/s target", rates[0])
+        } else {
+            "unpaced".into()
+        },
+    );
+
+    let mut phases: Vec<LoadgenPhase> = Vec::with_capacity(rates.len());
+    for (i, &r) in rates.iter().enumerate() {
+        if rates.len() > 1 {
+            println!("[loadgen] ramp step {}/{}: {r:.0} req/s", i + 1, rates.len());
+        }
+        // distinct seed per step so a ramp never replays identical
+        // bodies while staying reproducible from --seed
+        let phase = run_phase(r, seed.wrapping_add(i as u64))?;
+        if rates.len() > 1 {
+            println!(
+                "[loadgen]   step {}: {} requests in {:.2}s ({:.0} req/s) | shed {:.2}% | \
+                 p50 {:.3}ms p99 {:.3}ms",
+                i + 1,
+                phase.completed(),
+                phase.elapsed_secs,
+                phase.achieved_rps(),
+                100.0 * phase.shed_rate(),
+                phase.snap.quantile(0.50) as f64 / 1e6,
+                phase.snap.quantile(0.99) as f64 / 1e6,
+            );
+        }
+        phases.push(phase);
+    }
+
+    let (ok, shed, errs) = phases
+        .iter()
+        .fold((0u64, 0u64, 0u64), |(a, b, c), p| (a + p.ok, b + p.shed, c + p.errs));
     let completed = ok + shed + errs;
-    let achieved_rps = completed as f64 / elapsed.as_secs_f64().max(1e-9);
-    let snap = hist.snapshot();
+    let elapsed_secs: f64 = phases.iter().map(|p| p.elapsed_secs).sum();
+    let achieved_rps = completed as f64 / elapsed_secs.max(1e-9);
+    let snap = total_hist.snapshot();
     let (p50, p90, p99) = (snap.quantile(0.50), snap.quantile(0.90), snap.quantile(0.99));
     let shed_rate = shed as f64 / completed.max(1) as f64;
     let error_rate = errs as f64 / completed.max(1) as f64;
     println!(
-        "[loadgen] done: {completed} requests in {:.2}s ({achieved_rps:.0} req/s) | \
+        "[loadgen] done: {completed} requests in {elapsed_secs:.2}s ({achieved_rps:.0} req/s) | \
          ok {ok} | shed {shed} ({:.2}%) | errors {errs} ({:.2}%)",
-        elapsed.as_secs_f64(),
         100.0 * shed_rate,
         100.0 * error_rate,
     );
@@ -902,22 +1016,38 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         snap.mean() / 1e6,
     );
 
-    let derived: Vec<Json> = [
-        ("serve/p50_ns", p50 as f64),
-        ("serve/p90_ns", p90 as f64),
-        ("serve/p99_ns", p99 as f64),
-        ("serve/achieved_rps", achieved_rps),
-        ("serve/shed_rate", shed_rate),
-        ("serve/error_rate", error_rate),
-        ("serve/requests", completed as f64),
-        ("serve/workers", workers as f64),
-    ]
-    .into_iter()
-    .map(|(k, v)| obj(vec![("name", Json::Str(k.into())), ("value", Json::Num(v))]))
-    .collect();
+    let mut rows: Vec<(String, f64)> = vec![
+        (format!("{prefix}/p50_ns"), p50 as f64),
+        (format!("{prefix}/p90_ns"), p90 as f64),
+        (format!("{prefix}/p99_ns"), p99 as f64),
+        (format!("{prefix}/achieved_rps"), achieved_rps),
+        (format!("{prefix}/shed_rate"), shed_rate),
+        (format!("{prefix}/error_rate"), error_rate),
+        (format!("{prefix}/requests"), completed as f64),
+        (format!("{prefix}/workers"), workers as f64),
+    ];
+    if rates.len() > 1 {
+        for (i, phase) in phases.iter().enumerate() {
+            let step = format!("{prefix}/ramp{}", i + 1);
+            rows.push((format!("{step}/p50_ns"), phase.snap.quantile(0.50) as f64));
+            rows.push((format!("{step}/p99_ns"), phase.snap.quantile(0.99) as f64));
+            rows.push((format!("{step}/shed_rate"), phase.shed_rate()));
+            rows.push((format!("{step}/achieved_rps"), phase.achieved_rps()));
+        }
+    }
+    let derived: Vec<Json> = rows
+        .into_iter()
+        .map(|(k, v)| obj(vec![("name", Json::Str(k)), ("value", Json::Num(v))]))
+        .collect();
+    let note = match ramp {
+        Some((start, step, n)) => format!(
+            "mmbsgd loadgen --mode {mode} --rate-ramp {start}:{step}:{n} against {target}"
+        ),
+        None => format!("mmbsgd loadgen --mode {mode} against {target}"),
+    };
     let doc = obj(vec![
         ("schema", Json::Str("mmbsgd-bench-v1".into())),
-        ("note", Json::Str(format!("mmbsgd loadgen --mode {mode} against {target}"))),
+        ("note", Json::Str(note)),
         ("runs", Json::Arr(Vec::new())),
         ("derived", Json::Arr(derived)),
     ]);
@@ -1086,6 +1216,8 @@ fn fleet_config(args: &Args) -> Result<FleetConfig> {
     fcfg.push_timeout_ms = args.get_parse("push-timeout-ms", fcfg.push_timeout_ms)?;
     fcfg.min_window_acc = args.get_parse("min-window-acc", fcfg.min_window_acc)?;
     fcfg.keep = args.get_parse("fleet-keep", fcfg.keep)?;
+    fcfg.router_pool = args.get_parse("router-pool", fcfg.router_pool)?;
+    fcfg.router_threads = args.get_parse("router-threads", fcfg.router_threads)?;
     if let Some(d) = args.get("dir") {
         fcfg.dir = d.to_string();
     }
@@ -1154,13 +1286,12 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
         "status" => {
             need_replicas()?;
             let mut ctl = Controller::new(replicas, timeout);
-            for (ep, r) in ctl.status() {
-                match r {
-                    Ok(line) => println!("[fleet] {ep}: {line}"),
-                    Err(e) => {
-                        failures += 1;
-                        eprintln!("[fleet] {ep}: FAILED: {e}");
-                    }
+            // unreachable replicas are `dead` rows in the status
+            // table (what the router sees), not command failures
+            for out in ctl.status() {
+                match out.result {
+                    Ok(line) => println!("[fleet] {}: {line}", out.endpoint),
+                    Err(e) => println!("[fleet] {}: dead ({e})", out.endpoint),
                 }
             }
             // the auto-rollback hook: --name + min_window_acc > 0
@@ -1198,23 +1329,34 @@ fn cmd_fleet(argv: &[String]) -> Result<()> {
             let listener = std::net::TcpListener::bind(&fcfg.addr)
                 .with_context(|| format!("binding {}", fcfg.addr))?;
             println!(
-                "[fleet] router on {} -> {} replicas (seed={} vnodes={}; \
+                "[fleet] router on {} -> {} replicas (seed={} vnodes={} pool={} threads={}; \
                  send 'shutdown' to stop the router)",
                 listener.local_addr()?,
                 replicas.len(),
                 fcfg.seed,
                 fcfg.vnodes,
+                fcfg.router_pool,
+                fcfg.router_threads,
             );
             let opts = RouterOptions {
                 seed: fcfg.seed,
                 vnodes: fcfg.vnodes,
                 timeout,
                 probe_every: Duration::from_secs(fcfg.probe_secs),
+                pool: fcfg.router_pool,
+                threads: fcfg.router_threads,
             };
             let report = run_router(listener, replicas, &opts)?;
             println!(
-                "[fleet] router done: {} connections | forwarded {} | retried {} | rejected {}",
-                report.connections, report.forwarded, report.retried, report.rejected
+                "[fleet] router done: {} connections | forwarded {} | retried {} | rejected {} \
+                 | links {} | pool_waits {} | pipelined {}",
+                report.connections,
+                report.forwarded,
+                report.retried,
+                report.rejected,
+                report.links_opened,
+                report.pool_waits,
+                report.pipelined,
             );
         }
         other => bail!("unknown fleet operation {other:?} (push | rollback | status | route)"),
@@ -1291,17 +1433,23 @@ COMMANDS
                must open with 'auth <token>', HTTP requests must carry
                'Authorization: Bearer <token>' — and is REQUIRED when
                --addr or --http-addr binds a non-loopback interface.
-  loadgen      --target host:port --dim N [--mode line|http]
+  loadgen      --target host:port --dim N [--mode line|http|router]
                [--requests N] [--workers M] [--rate RPS] [--keys K]
-               [--auth-token TOKEN] [--seed N] [--out BENCH_serve.json]
+               [--rate-ramp START:STEP:N] [--auth-token TOKEN]
+               [--seed N] [--out BENCH_serve.json]
                sustained-traffic harness: M closed-loop workers replay
                N keyed decision requests against a running serve
-               endpoint (line protocol or HTTP keep-alive), paced to
-               an aggregate --rate (0 = as fast as replies return),
-               measure per-request round-trip latency, and write
-               p50/p90/p99, achieved rps, and shed/error rates to
-               --out in the BENCH_hotpaths.json shape so
-               scripts/perf_compare.sh can sanity-gate them.
+               endpoint (line protocol or HTTP keep-alive) or the
+               fleet router (--mode router: same line protocol, bench
+               rows labelled router/*), paced to an aggregate --rate
+               (0 = as fast as replies return) or stepped through
+               --rate-ramp (N phases of --requests each at START,
+               START+STEP, ... req/s, one ramp<i>/p50_ns,p99_ns,
+               shed_rate,achieved_rps row group per step), measure
+               per-request round-trip latency, and write p50/p90/p99,
+               achieved rps, and shed/error rates to --out in the
+               BENCH_hotpaths.json shape so scripts/perf_compare.sh
+               can sanity-gate them.
   experiment   --id table1|table2|fig1|fig2|fig3|fig4|fig5|ablation|all
                [--scale F] [--threads N] [--out-dir DIR] [--backend B] [--seed N]
   tune         --dataset <...> [--c-grid 1,4,16] [--gamma-grid 0.1,1,10]
@@ -1321,11 +1469,19 @@ COMMANDS
                status   [--name NAME]  (with min-window-acc > 0: the
                         auto-rollback hook — a replica whose feedback
                         accuracy window degrades below the threshold
-                        triggers a fleet-wide rollback to last-good)
-               route    (consistent-hash router in front of the fleet)
+                        triggers a fleet-wide rollback to last-good;
+                        unreachable replicas print as dead rows, not
+                        command failures)
+               route    (consistent-hash router in front of the fleet:
+                        one worker per client connection, --router-pool
+                        links per replica (default 2) with pipelined
+                        same-replica runs, --router-threads bounding
+                        forwards in flight (0 = unbounded); the
+                        router-stats verb answers router_* telemetry)
                shared flags: --replicas host:port,host:port --seed N
                --vnodes N --probe-secs N --push-timeout-ms N
-               --min-window-acc F --addr host:port --config file.toml
+               --min-window-acc F --addr host:port --router-pool N
+               --router-threads N --config file.toml
                ([fleet] TOML section; flags override the file).
                Replica side: mmbsgd serve --fleet-dir DIR enables the
                push-artifact/activate/rollback/fleet-status verbs and

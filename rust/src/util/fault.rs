@@ -56,6 +56,11 @@ pub mod site {
     /// rule tears the push mid-payload (header + partial bytes, then
     /// the connection drops), so the replica must stay on last-good.
     pub const FLEET_PUSH: &str = "fleet.push";
+    /// A pooled replica link in `fleet::router`: `io` breaks the link
+    /// before any bytes move (the router must discard that one link,
+    /// retry over a fresh one, and NOT mark the replica dead);
+    /// `stall:MS` delays the exchange like a slow replica link.
+    pub const ROUTER_LINK: &str = "router.link";
 }
 
 /// What happens when a rule fires.

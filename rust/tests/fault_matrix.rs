@@ -34,7 +34,7 @@ use mmbsgd::config::TrainConfig;
 use mmbsgd::data::synth::{dataset, SynthSpec};
 use mmbsgd::data::{libsvm, Split};
 use mmbsgd::error::FleetError;
-use mmbsgd::fleet::{Artifact, Controller, Provenance, ReplicaState};
+use mmbsgd::fleet::{run_router, Artifact, Controller, Provenance, ReplicaState, RouterOptions};
 use mmbsgd::model::SvmModel;
 use mmbsgd::runtime::{ArtifactRegistry, NativeBackend, WorkerPool};
 use mmbsgd::serve::{serve, serve_bound, serve_fleet, ModelRegistry, ServeOptions};
@@ -618,6 +618,159 @@ fn torn_artifact_push_leaves_replica_on_last_good() {
         let status = ask("fleet-status");
         assert!(status.contains("champ@v2"), "{status}");
         assert_eq!(ask("shutdown"), "ok bye");
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------------- router.link
+
+/// An injected `io` fault on the pooled replica link consumes exactly
+/// one pooled link and one retry: the keyed forward still answers
+/// (bit-identical to the unfaulted reply), the replica is NOT marked
+/// dead, and the router keeps serving afterwards — a broken link is a
+/// link problem, never a replica death.
+#[test]
+fn injected_router_link_fault_consumes_one_link_and_one_retry() {
+    let _serial = serialize();
+    let dir = scratch("router_link_io");
+    let (model, q) = trained_model();
+    let v1 = Artifact::wrap("champ", 1, &model, Provenance::default(), "lut", "auto").unwrap();
+
+    let rl = TcpListener::bind("127.0.0.1:0").unwrap();
+    let replica_addr = rl.local_addr().unwrap();
+    let lr = TcpListener::bind("127.0.0.1:0").unwrap();
+    let router_addr = lr.local_addr().unwrap();
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            let mut rep = ReplicaState::new(&dir).unwrap();
+            let reg = ModelRegistry::new(Box::new(NativeBackend::new()), 7);
+            serve_fleet(rl, reg, &ServeOptions::default(), &mut rep).unwrap();
+        });
+        let ropts = RouterOptions {
+            seed: 42,
+            vnodes: 64,
+            timeout: Duration::from_secs(10),
+            probe_every: Duration::from_secs(600),
+            pool: 2,
+            threads: 0,
+        };
+        let eps = vec![replica_addr.to_string()];
+        let rh = s.spawn(move || run_router(lr, eps, &ropts).unwrap());
+        let mut ctl = Controller::new(vec![replica_addr.to_string()], Duration::from_secs(10));
+        assert_eq!(ctl.push(&v1, true)[0].result, Ok(1));
+
+        let ask = |line: &str| {
+            let c = TcpStream::connect(router_addr).unwrap();
+            c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+            let mut w = c.try_clone().unwrap();
+            w.write_all(format!("{line}\n").as_bytes()).unwrap();
+            w.flush().unwrap();
+            let mut r = BufReader::new(c);
+            let mut reply = String::new();
+            r.read_line(&mut reply).unwrap();
+            reply.trim_end().to_string()
+        };
+
+        // warm: one clean forward opens the pooled link
+        let query = format!("decision key=alice {}", fmt_row(&q));
+        let baseline = ask(&query);
+        assert!(baseline.starts_with("ok "), "{baseline}");
+
+        {
+            let _g = arm("router.link@1=io");
+            // the faulted exchange breaks the warmed pooled link; the
+            // router discards it and retries over a fresh dial
+            assert_eq!(ask(&query), baseline, "the retried forward must answer identically");
+            assert_eq!(fault::fired(), 1);
+        }
+
+        // telemetry pins the contract: one retry, zero replica deaths
+        let stats = ask("router-stats");
+        assert!(stats.starts_with("ok router "), "{stats}");
+        assert!(stats.contains(" retries=1 "), "{stats}");
+        assert!(stats.contains(" dead=0 "), "{stats}");
+
+        // the router is not wedged: traffic keeps flowing after the fault
+        assert_eq!(ask(&query), baseline);
+
+        assert_eq!(ask("shutdown"), "ok bye");
+        let report = rh.join().unwrap();
+        assert_eq!(report.retried, 1, "exactly one retry");
+        assert_eq!(report.replica_dead, 0, "link fault must not kill the replica");
+        // warm dial + post-discard redial: the fault consumed one link
+        assert_eq!(report.links_opened, 2, "one pooled link consumed, one redialed");
+        assert_eq!(report.forwarded, 3);
+
+        let c = TcpStream::connect(replica_addr).unwrap();
+        let mut w = c.try_clone().unwrap();
+        w.write_all(b"shutdown\n").unwrap();
+        let mut reply = String::new();
+        BufReader::new(c).read_line(&mut reply).unwrap();
+        assert_eq!(reply.trim_end(), "ok bye");
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A stalled pooled link (`stall:MS`) delays that one forward but the
+/// request still answers correctly — slow links degrade latency, never
+/// correctness, and the router never wedges.
+#[test]
+fn stalled_router_link_still_answers() {
+    let _serial = serialize();
+    let dir = scratch("router_link_stall");
+    let (model, q) = trained_model();
+    let v1 = Artifact::wrap("champ", 1, &model, Provenance::default(), "lut", "auto").unwrap();
+
+    let rl = TcpListener::bind("127.0.0.1:0").unwrap();
+    let replica_addr = rl.local_addr().unwrap();
+    let lr = TcpListener::bind("127.0.0.1:0").unwrap();
+    let router_addr = lr.local_addr().unwrap();
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            let mut rep = ReplicaState::new(&dir).unwrap();
+            let reg = ModelRegistry::new(Box::new(NativeBackend::new()), 7);
+            serve_fleet(rl, reg, &ServeOptions::default(), &mut rep).unwrap();
+        });
+        let eps = vec![replica_addr.to_string()];
+        let rh = s.spawn(move || run_router(lr, eps, &RouterOptions::default()).unwrap());
+        let mut ctl = Controller::new(vec![replica_addr.to_string()], Duration::from_secs(10));
+        assert_eq!(ctl.push(&v1, true)[0].result, Ok(1));
+
+        let ask = |line: &str| {
+            let c = TcpStream::connect(router_addr).unwrap();
+            c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+            let mut w = c.try_clone().unwrap();
+            w.write_all(format!("{line}\n").as_bytes()).unwrap();
+            w.flush().unwrap();
+            let mut r = BufReader::new(c);
+            let mut reply = String::new();
+            r.read_line(&mut reply).unwrap();
+            reply.trim_end().to_string()
+        };
+
+        let query = format!("decision key=alice {}", fmt_row(&q));
+        let baseline = ask(&query);
+        assert!(baseline.starts_with("ok "), "{baseline}");
+
+        {
+            let _g = arm("router.link@1=stall:120");
+            let t0 = std::time::Instant::now();
+            assert_eq!(ask(&query), baseline, "a stalled link must still answer");
+            assert!(t0.elapsed() >= Duration::from_millis(120), "the stall must be real");
+            assert_eq!(fault::fired(), 1);
+        }
+
+        assert_eq!(ask("shutdown"), "ok bye");
+        let report = rh.join().unwrap();
+        assert_eq!(report.retried, 0, "a stall is latency, not a failure");
+        assert_eq!(report.replica_dead, 0);
+
+        let c = TcpStream::connect(replica_addr).unwrap();
+        let mut w = c.try_clone().unwrap();
+        w.write_all(b"shutdown\n").unwrap();
+        let mut reply = String::new();
+        BufReader::new(c).read_line(&mut reply).unwrap();
+        assert_eq!(reply.trim_end(), "ok bye");
     });
     let _ = std::fs::remove_dir_all(&dir);
 }

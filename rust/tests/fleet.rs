@@ -11,6 +11,16 @@
 //!   return bit-identically to the v1 decisions;
 //! * the controller's auto-rollback hook fires when a replica's
 //!   feedback-accuracy window degrades, and stays quiet while healthy.
+//!
+//! Concurrent-router acceptance (ISSUE 10):
+//!
+//! * keyed answers are bit-identical across every router
+//!   `threads` × `pool` combination under concurrent clients;
+//! * pooled links are reused across forwards — the total dialed-link
+//!   count stays bounded by `replicas × pool` no matter how many
+//!   requests flow;
+//! * a replica-side idle reap (stale pooled link) recycles the link
+//!   and retries on a fresh one without marking the replica dead.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -61,9 +71,14 @@ fn fmt_row(x: &[f32]) -> String {
 
 /// Serve one fleet replica on `listener` until a `shutdown` line.
 fn replica_serve(listener: TcpListener, dir: &Path) {
+    replica_serve_opts(listener, dir, ServeOptions::default());
+}
+
+/// Like [`replica_serve`] with explicit serve options (the broken-link
+/// test needs a short replica idle timeout to reap pooled links).
+fn replica_serve_opts(listener: TcpListener, dir: &Path, opts: ServeOptions) {
     let mut rep = ReplicaState::new(dir).unwrap();
     let reg = ModelRegistry::new(Box::new(NativeBackend::new()), 7);
-    let opts = ServeOptions::default();
     serve_fleet(listener, reg, &opts, &mut rep).unwrap();
 }
 
@@ -145,6 +160,7 @@ fn router_reroutes_when_a_replica_dies_mid_traffic() {
             // long enough that the dead replica is never re-probed
             // back into rotation inside this test
             probe_every: Duration::from_secs(600),
+            ..RouterOptions::default()
         };
         let reps = eps.clone();
         let rh = s.spawn(move || run_router(lr, reps, &ropts).unwrap());
@@ -286,9 +302,10 @@ fn rollback_restores_previous_version_fleet_wide() {
 
         // both replicas report v1 active with v2 as the rollback's
         // own last-good (a rollback can itself be rolled back)
-        for (ep, line) in ctl.status() {
-            let line = line.unwrap();
-            assert!(line.contains("champ@v1:lg=2"), "{ep}: {line}");
+        for out in ctl.status() {
+            assert!(out.is_alive(), "{}", out.endpoint);
+            let line = out.result.unwrap();
+            assert!(line.contains("champ@v1:lg=2"), "{}: {line}", out.endpoint);
         }
         assert_eq!(c0.ask("shutdown"), "ok bye");
         assert_eq!(c1.ask("shutdown"), "ok bye");
@@ -343,4 +360,230 @@ fn auto_rollback_fires_on_degraded_accuracy_window() {
         assert_eq!(c.ask("shutdown"), "ok bye");
     });
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --------------------------------- acceptance: concurrent router parity
+
+/// Ask every key once, `clients` concurrent connections in parallel,
+/// and require all clients to observe identical per-key replies.
+/// Returns the (key-ordered) reply vector.
+fn concurrent_keyed_replies(
+    router: SocketAddr,
+    keys: &[String],
+    q: &str,
+    clients: usize,
+) -> Vec<String> {
+    let all: Vec<Vec<String>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|_| {
+                s.spawn(move || {
+                    let mut c = Client::connect(router);
+                    keys.iter()
+                        .map(|k| c.ask(&format!("decision key={k} {q}")))
+                        .collect::<Vec<String>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for replies in &all {
+        for r in replies {
+            assert!(r.starts_with("ok "), "{r}");
+        }
+        assert_eq!(replies, &all[0], "two concurrent clients saw different answers");
+    }
+    all.into_iter().next().unwrap()
+}
+
+/// Keyed answers are bit-identical across every router
+/// `threads ∈ {1,2,4}` × `pool ∈ {1,2}` combination, each driven by 4
+/// concurrent clients against the same 2-replica fleet.  The ring
+/// assignment is a pure function of (seed, endpoints, vnodes), the
+/// replicas serve the same deterministic model, and neither worker
+/// scheduling nor link multiplexing may leak into a reply byte.
+#[test]
+fn keyed_answers_bit_identical_across_threads_and_pool_sizes() {
+    let (model, split) = trained();
+    let d0 = scratch("parity0");
+    let d1 = scratch("parity1");
+    let (l0, a0) = bind();
+    let (l1, a1) = bind();
+    let eps = vec![a0.to_string(), a1.to_string()];
+    std::thread::scope(|s| {
+        s.spawn(|| replica_serve(l0, &d0));
+        s.spawn(|| replica_serve(l1, &d1));
+        let mut ctl = Controller::new(eps.clone(), Duration::from_secs(10));
+        for o in ctl.push(&wrap(1, &model), true) {
+            assert_eq!(o.result, Ok(1), "{}", o.endpoint);
+        }
+
+        let q = fmt_row(split.test.x.row(0));
+        let keys: Vec<String> = (0..24).map(|k| format!("user-{k}")).collect();
+        let mut baseline: Option<Vec<String>> = None;
+        for threads in [1usize, 2, 4] {
+            for pool in [1usize, 2] {
+                let (lr, ar) = bind();
+                let ropts = RouterOptions {
+                    seed: 42,
+                    vnodes: 64,
+                    timeout: Duration::from_secs(10),
+                    probe_every: Duration::from_secs(600),
+                    pool,
+                    threads,
+                };
+                let reps = eps.clone();
+                let rh = s.spawn(move || run_router(lr, reps, &ropts).unwrap());
+                let replies = concurrent_keyed_replies(ar, &keys, &q, 4);
+                match &baseline {
+                    None => baseline = Some(replies),
+                    Some(b) => assert_eq!(
+                        b, &replies,
+                        "threads={threads} pool={pool} changed a keyed answer"
+                    ),
+                }
+                assert_eq!(Client::connect(ar).ask("shutdown"), "ok bye");
+                let report = rh.join().unwrap();
+                assert!(report.forwarded >= 96, "forwarded {}", report.forwarded);
+                assert_eq!(report.replica_dead, 0, "no replica may die in this test");
+            }
+        }
+        assert_eq!(Client::connect(a0).ask("shutdown"), "ok bye");
+        assert_eq!(Client::connect(a1).ask("shutdown"), "ok bye");
+    });
+    let _ = std::fs::remove_dir_all(&d0);
+    let _ = std::fs::remove_dir_all(&d1);
+}
+
+// ------------------------------------- acceptance: pooled link reuse
+
+/// After warmup the pool serves every forward from existing links:
+/// the router's dialed-link count (counted like `worker_spawns`) stays
+/// bounded by `replicas × pool` across hundreds of forwards from
+/// concurrent clients — no per-forward reconnects.
+#[test]
+fn pooled_links_are_reused_across_forwards() {
+    let (model, split) = trained();
+    let d0 = scratch("reuse0");
+    let d1 = scratch("reuse1");
+    let (l0, a0) = bind();
+    let (l1, a1) = bind();
+    let (lr, ar) = bind();
+    let eps = vec![a0.to_string(), a1.to_string()];
+    std::thread::scope(|s| {
+        s.spawn(|| replica_serve(l0, &d0));
+        s.spawn(|| replica_serve(l1, &d1));
+        let ropts = RouterOptions {
+            seed: 42,
+            vnodes: 64,
+            timeout: Duration::from_secs(10),
+            probe_every: Duration::from_secs(600),
+            pool: 2,
+            threads: 0,
+        };
+        let reps = eps.clone();
+        let rh = s.spawn(move || run_router(lr, reps, &ropts).unwrap());
+        let mut ctl = Controller::new(eps.clone(), Duration::from_secs(10));
+        for o in ctl.push(&wrap(1, &model), true) {
+            assert_eq!(o.result, Ok(1), "{}", o.endpoint);
+        }
+
+        let q = fmt_row(split.test.x.row(0));
+        let keys: Vec<String> = (0..32).map(|k| format!("user-{k}")).collect();
+        // two bursts of 4 concurrent clients: the second burst must be
+        // served entirely from links the first one opened
+        let first = concurrent_keyed_replies(ar, &keys, &q, 4);
+        let second = concurrent_keyed_replies(ar, &keys, &q, 4);
+        assert_eq!(first, second);
+
+        // telemetry agrees before shutdown: the router-stats verb is
+        // answered locally and exposes the same counters
+        let stats = Client::connect(ar).ask("router-stats");
+        assert!(stats.starts_with("ok router "), "{stats}");
+        assert!(stats.contains("forwards=256"), "{stats}");
+        assert!(stats.contains(" dead=0 "), "{stats}");
+
+        assert_eq!(Client::connect(ar).ask("shutdown"), "ok bye");
+        let report = rh.join().unwrap();
+        assert_eq!(report.forwarded, 256, "2 bursts x 4 clients x 32 keys");
+        assert!(
+            report.links_opened <= 4,
+            "a 2-replica x pool-2 router dialed {} links for {} forwards",
+            report.links_opened,
+            report.forwarded,
+        );
+        assert_eq!(report.replica_dead, 0);
+        assert_eq!(Client::connect(a0).ask("shutdown"), "ok bye");
+        assert_eq!(Client::connect(a1).ask("shutdown"), "ok bye");
+    });
+    let _ = std::fs::remove_dir_all(&d0);
+    let _ = std::fs::remove_dir_all(&d1);
+}
+
+// --------------------------------- acceptance: broken link != dead replica
+
+/// A replica-side idle reap closes the router's pooled links between
+/// bursts.  The next burst hits stale sockets: the router must discard
+/// each broken link, retry over a fresh one to the *same* replica, and
+/// answer bit-identically — without ever marking the replica dead.
+#[test]
+fn broken_pooled_link_is_recycled_without_marking_replica_dead() {
+    let (model, split) = trained();
+    let d0 = scratch("stale0");
+    let d1 = scratch("stale1");
+    let (l0, a0) = bind();
+    let (l1, a1) = bind();
+    let (lr, ar) = bind();
+    let eps = vec![a0.to_string(), a1.to_string()];
+    std::thread::scope(|s| {
+        // replicas reap connections idle for >500ms — the router's
+        // pooled links go stale during the sleep below
+        let short_idle =
+            ServeOptions { idle_timeout: Duration::from_millis(500), ..ServeOptions::default() };
+        let (so0, so1) = (short_idle.clone(), short_idle);
+        s.spawn(move || replica_serve_opts(l0, &d0, so0));
+        s.spawn(move || replica_serve_opts(l1, &d1, so1));
+        let ropts = RouterOptions {
+            seed: 42,
+            vnodes: 64,
+            timeout: Duration::from_secs(10),
+            probe_every: Duration::from_secs(600),
+            pool: 2,
+            threads: 0,
+        };
+        let reps = eps.clone();
+        let rh = s.spawn(move || run_router(lr, reps, &ropts).unwrap());
+        let mut ctl = Controller::new(eps.clone(), Duration::from_secs(10));
+        for o in ctl.push(&wrap(1, &model), true) {
+            assert_eq!(o.result, Ok(1), "{}", o.endpoint);
+        }
+
+        let q = fmt_row(split.test.x.row(0));
+        let keys: Vec<String> = (0..24).map(|k| format!("user-{k}")).collect();
+        let mut client = Client::connect(ar);
+        let before: Vec<String> =
+            keys.iter().map(|k| client.ask(&format!("decision key={k} {q}"))).collect();
+        for r in &before {
+            assert!(r.starts_with("ok "), "{r}");
+        }
+
+        // let both replicas reap every pooled link mid-"burst"
+        std::thread::sleep(Duration::from_millis(1200));
+
+        let after: Vec<String> =
+            keys.iter().map(|k| client.ask(&format!("decision key={k} {q}"))).collect();
+        assert_eq!(before, after, "a recycled link changed an answer");
+
+        assert_eq!(client.ask("shutdown"), "ok bye");
+        let report = rh.join().unwrap();
+        assert_eq!(report.forwarded, 48, "every request must be answered");
+        assert!(report.retried >= 1, "stale links must surface as link retries");
+        assert_eq!(
+            report.replica_dead, 0,
+            "a broken pooled link must never mark the replica dead"
+        );
+        assert_eq!(Client::connect(a0).ask("shutdown"), "ok bye");
+        assert_eq!(Client::connect(a1).ask("shutdown"), "ok bye");
+    });
+    let _ = std::fs::remove_dir_all(&d0);
+    let _ = std::fs::remove_dir_all(&d1);
 }

@@ -70,12 +70,14 @@ if mode == "render":
         "for provenance).  Absolute numbers are machine-dependent; the",
         "ratios are the contract.",
         "",
-        "Serve-path latency evidence travels separately: CI's loadgen",
-        "smoke (`mmbsgd loadgen --mode http`, 10k requests, 2 workers)",
-        "uploads `BENCH_serve.json` with `serve/p50_ns`..`serve/p99_ns`,",
-        "`serve/achieved_rps`, and shed/error rates, sanity-gated by this",
-        "script (serve rows are absolute, so they are shape-checked, not",
-        "floor-diffed — quote them from the CI artifact).",
+        "Serve- and router-path latency evidence travels separately:",
+        "CI's loadgen smokes (`mmbsgd loadgen --mode http` and",
+        "`--mode router`) upload `BENCH_serve.json` / `BENCH_router.json`",
+        "with `serve/*` resp. `router/*` p50/p99, achieved_rps, and",
+        "shed/error rates (plus one `ramp<i>/` family per --rate-ramp",
+        "step), sanity-gated by this script (loadgen rows are absolute,",
+        "so they are shape-checked per family, not floor-diffed — quote",
+        "them from the CI artifact).",
         "",
         "| derived metric | value |",
         "|---|---|",
@@ -93,10 +95,14 @@ if mode == "render":
 tolerance = float(os.environ.get("MMBSGD_PERF_TOLERANCE", "0.20"))
 warn_only = os.environ.get("MMBSGD_PERF_WARN_ONLY", "") not in ("", "0")
 
-serve_rows = {n: v for n, v in current.items() if n.startswith("serve/")}
-if serve_rows and not any(n.startswith("speedup/") for n in current):
-    # A loadgen artifact: no committed speedup floors apply; gate the
-    # shape of the serve evidence instead.
+loadgen_rows = {n: v for n, v in current.items()
+                if n.startswith("serve/") or n.startswith("router/")}
+if loadgen_rows and not any(n.startswith("speedup/") for n in current):
+    # A loadgen artifact (line/http `serve/*` rows or `--mode router`
+    # `router/*` rows, plus one `<prefix>/ramp<i>/*` family per
+    # --rate-ramp step): no committed speedup floors apply; gate the
+    # shape of every family instead.  A family is everything up to the
+    # metric leaf — "serve", "router", "router/ramp2", ...
     failures = []
 
     def gate(cond, msg):
@@ -105,21 +111,31 @@ if serve_rows and not any(n.startswith("speedup/") for n in current):
         if not cond:
             failures.append(msg)
 
-    print(f"[perf_compare] {current_path}: serve artifact "
-          f"({len(serve_rows)} rows), sanity-gating")
-    p50 = serve_rows.get("serve/p50_ns", 0.0)
-    p99 = serve_rows.get("serve/p99_ns", 0.0)
-    gate(p50 > 0, f"serve/p50_ns positive ({p50:.0f})")
-    gate(p50 <= p99, f"serve/p50_ns <= serve/p99_ns ({p50:.0f} vs {p99:.0f})")
-    for rate in ("serve/shed_rate", "serve/error_rate"):
-        v = serve_rows.get(rate, -1.0)
-        gate(0.0 <= v <= 1.0, f"{rate} in [0,1] ({v:.4f})")
-    rps = serve_rows.get("serve/achieved_rps", 0.0)
-    gate(rps > 0, f"serve/achieved_rps positive ({rps:.1f})")
-    gate(serve_rows.get("serve/requests", 0.0) >= 1,
-         f"serve/requests >= 1 ({serve_rows.get('serve/requests', 0.0):.0f})")
+    families = {}
+    for name, v in loadgen_rows.items():
+        fam, _, leaf = name.rpartition("/")
+        families.setdefault(fam, {})[leaf] = v
+    print(f"[perf_compare] {current_path}: loadgen artifact "
+          f"({len(loadgen_rows)} rows, {len(families)} families), sanity-gating")
+    gate(any(fam in ("serve", "router") for fam in families),
+         "has an aggregate serve/ or router/ family")
+    for fam in sorted(families):
+        rows = families[fam]
+        p50 = rows.get("p50_ns", 0.0)
+        p99 = rows.get("p99_ns", 0.0)
+        gate(p50 > 0, f"{fam}/p50_ns positive ({p50:.0f})")
+        gate(p50 <= p99, f"{fam}/p50_ns <= {fam}/p99_ns ({p50:.0f} vs {p99:.0f})")
+        rates = ["shed_rate"] if "ramp" in fam else ["shed_rate", "error_rate"]
+        for rate in rates:
+            v = rows.get(rate, -1.0)
+            gate(0.0 <= v <= 1.0, f"{fam}/{rate} in [0,1] ({v:.4f})")
+        rps = rows.get("achieved_rps", 0.0)
+        gate(rps > 0, f"{fam}/achieved_rps positive ({rps:.1f})")
+        if "ramp" not in fam:
+            gate(rows.get("requests", 0.0) >= 1,
+                 f"{fam}/requests >= 1 ({rows.get('requests', 0.0):.0f})")
     if failures:
-        print(f"[perf_compare] {len(failures)} bad serve row(s):", file=sys.stderr)
+        print(f"[perf_compare] {len(failures)} bad loadgen row(s):", file=sys.stderr)
         for f_ in failures:
             print(f"  {f_}", file=sys.stderr)
         if warn_only:
@@ -127,7 +143,7 @@ if serve_rows and not any(n.startswith("speedup/") for n in current):
                   file=sys.stderr)
             sys.exit(0)
         sys.exit(1)
-    print("[perf_compare] serve artifact is sane")
+    print("[perf_compare] loadgen artifact is sane")
     sys.exit(0)
 
 baseline = load(os.environ["BASELINE"])
